@@ -1,0 +1,11 @@
+//! Figure 8 (supplementary): Ours vs SENet on the WideResNet-22-8 backbone,
+//! relative-to-baseline metric — same harness as Fig. 3, wide backbone.
+
+#[path = "common/mod.rs"]
+mod common;
+#[path = "bench_fig3.rs"]
+mod fig3;
+
+fn main() -> anyhow::Result<()> {
+    fig3::run("wrn", "fig8")
+}

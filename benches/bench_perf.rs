@@ -1,0 +1,126 @@
+//! §Perf: runtime microbenchmarks of the L3 hot path.
+//!
+//! Measures (and records in EXPERIMENTS.md §Perf):
+//!   - eval_batch literal path vs buffer-cached path (§Perf opt 1)
+//!   - trial scan with vs without the early-exit accuracy bound (opt 2)
+//!   - per-trial mask hypothesis cost (zero-alloc scratch, opt 3)
+//!   - host->device upload costs by tensor size
+//!   - end-to-end BCD iteration throughput
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cdnl::coordinator::eval::Evaluator;
+use cdnl::coordinator::trials::{scan_trials, BlockSampler};
+use cdnl::data::synth;
+use cdnl::metrics::write_csv;
+use cdnl::runtime::session::Session;
+use cdnl::util::bench::{print_results, summarize, time};
+use cdnl::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("perf", "L3 hot-path microbenchmarks");
+    let engine = common::engine();
+    let sess = Session::new(&engine, "resnet_16x16_c10")?;
+    let (train_ds, _) = synth::generate(synth::by_name("synth10").unwrap());
+    let st = sess.init_state(1)?;
+    let info = sess.info();
+    let (iters, warmup) = if common::full_mode() { (30, 5) } else { (10, 2) };
+
+    let mut results = Vec::new();
+
+    // --- upload costs ------------------------------------------------------
+    let mask = vec![1.0f32; info.mask_size];
+    results.push(time("upload mask [17K f32]", warmup, iters, || {
+        let _ = engine.upload_f32(&mask, &[mask.len()]).unwrap();
+    }));
+    results.push(time("upload params [176K f32]", warmup, iters, || {
+        let _ = engine.upload_f32(&st.params.data, &st.params.shape).unwrap();
+    }));
+    let (x, y) = train_ds.batch_at(0, sess.batch);
+    results.push(time("upload batch x+y [98K f32]", warmup, iters, || {
+        let _ = sess.upload_batch(&x, &y).unwrap();
+    }));
+
+    // --- eval: literal vs buffer path ---------------------------------------
+    results.push(time("eval_batch literal path", warmup, iters, || {
+        let _ = sess.eval_batch(&st.params, &mask, &x, &y).unwrap();
+    }));
+    let pbuf = engine.upload_f32(&st.params.data, &st.params.shape)?;
+    let mbuf = engine.upload_f32(&mask, &[mask.len()])?;
+    let (xbuf, ybuf) = sess.upload_batch(&x, &y)?;
+    results.push(time("eval_batch buffer path", warmup, iters, || {
+        let _ = sess.eval_batch_b(&pbuf, &mbuf, &xbuf, &ybuf).unwrap();
+    }));
+
+    // --- trial scan: bound on vs off ----------------------------------------
+    let ev = Evaluator::new(&sess, &train_ds, 2)?;
+    let params = ev.upload_params(&st.params)?;
+    let base = ev.accuracy(&params, st.mask.dense())?;
+    // Bound ON is the production path (floor = incumbent best); bound OFF is
+    // emulated by an unreachable ADT and floor via accuracy() per trial.
+    let sampler = BlockSampler::new(cdnl::config::Granularity::Pixel, sess.info());
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let scan = scan_trials(&ev, &params, &st.mask, &sampler, 100, 8, -1e9, base, &mut rng)?;
+    let bounded_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let mut scratch = Vec::new();
+    for _ in 0..8 {
+        let removed = st.mask.sample_present(&mut rng, 100);
+        st.mask.hypothesis_into(&removed, &mut scratch);
+        let _ = ev.accuracy(&params, &scratch)?; // no bound: full evaluation
+    }
+    let unbounded_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    results.push(summarize("trial scan x8, bound ON", vec![bounded_ms]));
+    results.push(summarize("trial scan x8, bound OFF", vec![unbounded_ms]));
+    println!(
+        "bound cut {} of {} trials early ({} evals saved)",
+        scan.bounded, scan.evaluated, scan.bounded
+    );
+
+    // --- mask hypothesis cost (pure host) ------------------------------------
+    let mut rng2 = Rng::new(9);
+    results.push(time("mask sample+hypothesis (host)", warmup, 1000, || {
+        let removed = st.mask.sample_present(&mut rng2, 100);
+        st.mask.hypothesis_into(&removed, &mut scratch);
+    }));
+
+    // --- end-to-end BCD iteration throughput ---------------------------------
+    let mut st2 = sess.init_state(2)?;
+    let cfg = cdnl::config::BcdConfig {
+        drc: 100,
+        rt: 4,
+        adt: 0.3,
+        finetune_steps: 4,
+        finetune_lr: 1e-3,
+        proxy_batches: 2,
+        seed: 3,
+        ..Default::default()
+    };
+    let target = st2.budget() - 400;
+    let t0 = std::time::Instant::now();
+    let out = cdnl::coordinator::bcd::run_bcd(&sess, &mut st2, &train_ds, target, &cfg, 0)?;
+    let secs = t0.elapsed().as_secs_f64();
+    results.push(summarize(
+        "BCD iteration (RT=4, ft=4)",
+        vec![1000.0 * secs / out.iterations.len() as f64],
+    ));
+    println!(
+        "BCD end-to-end: {} iters in {secs:.1}s => {:.2} iters/s, {} trials ({} bounded)",
+        out.iterations.len(),
+        out.iterations.len() as f64 / secs,
+        out.total_trials(),
+        out.iterations.iter().map(|r| r.trials_bounded).sum::<usize>(),
+    );
+
+    print_results("§Perf — L3 hot-path microbenchmarks", &results);
+    write_csv(
+        &common::results_csv("perf"),
+        &["operation", "mean_ms", "p50_ms", "p95_ms", "n"],
+        &results.iter().map(|r| r.row()).collect::<Vec<_>>(),
+    )?;
+    println!("\n{}", engine.stats_table());
+    Ok(())
+}

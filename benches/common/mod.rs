@@ -1,0 +1,183 @@
+//! Shared bench harness: experiment setup, paper-budget scaling, and the
+//! quick/full switch.
+//!
+//! Every bench regenerates one paper table/figure (DESIGN.md §5). Budgets
+//! are the paper's, scaled by each backbone's ReLU-count ratio (paper
+//! total / our total — Table 1 both sides). `CDNL_BENCH_FULL=1` switches
+//! from the quick grid (a subset of budget points, larger DRC so BCD runs
+//! ~8 iterations) to the full paper grid with paper hyperparameters.
+//!
+//! All benches share the zoo cache under `results/zoo`, so trained
+//! baselines and SNL reference models are built once across the suite.
+
+#![allow(dead_code)]
+
+use cdnl::config::Experiment;
+use cdnl::runtime::engine::Engine;
+use std::path::{Path, PathBuf};
+
+/// Paper Table 1 totals [#ReLUs] for scaling budgets to our backbones.
+pub fn paper_total(backbone: &str, image_size: usize) -> f64 {
+    match (backbone, image_size) {
+        ("resnet", 16) => 570_000.0,
+        ("resnet", 32) => 1_966_000.0,
+        ("wrn", 16) => 1_359_000.0,
+        ("wrn", 32) => 5_439_000.0,
+        _ => panic!("no paper total for {backbone}@{image_size}"),
+    }
+}
+
+/// Scale a paper budget [#ReLUs] to our model, rounded to tens.
+pub fn scale_budget(paper_budget: f64, our_total: usize, backbone: &str, image_size: usize) -> usize {
+    let ratio = paper_total(backbone, image_size) / our_total as f64;
+    ((paper_budget / ratio / 10.0).round() as usize) * 10
+}
+
+pub fn full_mode() -> bool {
+    std::env::var("CDNL_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Keep the first `quick_n` points of a budget grid unless in full mode.
+pub fn grid<T: Clone>(points: &[T], quick_n: usize) -> Vec<T> {
+    if full_mode() {
+        points.to_vec()
+    } else {
+        points.iter().take(quick_n).cloned().collect()
+    }
+}
+
+/// Experiment preset for benches: quick by default, paper-scale under
+/// CDNL_BENCH_FULL=1. Out dir is `results/` so the zoo is shared.
+pub fn experiment(dataset: &str, backbone: &str, poly: bool) -> Experiment {
+    let mut exp = Experiment::default();
+    let preset = if full_mode() { "full" } else { "quick" };
+    for (k, v) in cdnl::config::preset(preset).unwrap() {
+        exp.apply(&k, &v).unwrap();
+    }
+    exp.dataset = dataset.into();
+    exp.backbone = backbone.into();
+    exp.poly = poly;
+    // 32x32 models are ~4x per step; in quick mode halve every schedule
+    // (the paper itself drops TinyImageNet to 5 finetune epochs vs 20).
+    if !full_mode() && dataset == "synthtiny" {
+        exp.train.steps = 60;
+        exp.snl.max_steps = 100;
+        exp.snl.finetune_steps = 12;
+        exp.bcd.finetune_steps = 8;
+        exp.bcd.rt = 8;
+    }
+    exp
+}
+
+/// The BCD reference budget for a target: paper rule in full mode
+/// (config::reference_budget); in quick mode `target + 8*DRC` so every BCD
+/// run costs ~8 iterations and the zoo cache is shared across benches.
+pub fn bref_for(exp: &Experiment, total: usize, target: usize) -> usize {
+    if full_mode() {
+        cdnl::config::reference_budget(total, target)
+    } else {
+        (target + 8 * exp.bcd.drc).min(total)
+    }
+}
+
+/// One (budget, SNL accuracy, BCD-ours accuracy) comparison point — the
+/// row shape of Tables 2/3 and the curves of Fig. 1.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    pub dataset: String,
+    pub budget: usize,
+    pub bref: usize,
+    pub snl_acc: f64,
+    pub ours_acc: f64,
+}
+
+/// Run the paper's core comparison on one dataset: SNL trained directly to
+/// each target vs BCD ("ours") run from the SNL reference at B_ref.
+/// All stages go through the shared zoo cache.
+pub fn snl_vs_ours(
+    engine: &Engine,
+    dataset: &str,
+    backbone: &str,
+    budgets: &[usize],
+) -> anyhow::Result<Vec<PointResult>> {
+    let exp = experiment(dataset, backbone, false);
+    let pl = cdnl::pipeline::Pipeline::new(engine, exp)?;
+    let total = pl.sess.info().total_relus();
+    let mut out = Vec::new();
+    for &budget in budgets {
+        let bref = bref_for(&pl.exp, total, budget);
+        println!("[{dataset}/{backbone}] budget {budget} (B_ref {bref}) ...");
+        let snl_direct = pl.snl_ref(budget)?; // SNL straight to the target
+        let snl_acc = pl.test_acc(&snl_direct)?;
+        let reference = pl.snl_ref(bref)?;
+        let ours = pl.bcd_cached(&reference, budget)?;
+        let ours_acc = pl.test_acc(&ours)?;
+        println!("[{dataset}/{backbone}] budget {budget}: SNL {snl_acc:.2}%  Ours {ours_acc:.2}%");
+        out.push(PointResult {
+            dataset: dataset.to_string(),
+            budget,
+            bref,
+            snl_acc,
+            ours_acc,
+        });
+    }
+    Ok(out)
+}
+
+/// Print + persist a Table 2/3-style block and report the shape criterion
+/// (Ours >= SNL on most budgets, gap widening at low budgets).
+pub fn report_snl_vs_ours(id: &str, title: &str, points: &[PointResult]) -> anyhow::Result<()> {
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.dataset.clone(),
+                cdnl::util::fmt_relu_count(p.budget),
+                format!("{:.2}", p.snl_acc),
+                format!("{:.2}", p.ours_acc),
+                format!("{:+.2}", p.ours_acc - p.snl_acc),
+            ]
+        })
+        .collect();
+    cdnl::metrics::print_table(title, &["dataset", "budget", "SNL", "Ours", "gap"], &rows);
+    cdnl::metrics::write_csv(
+        &results_csv(id),
+        &["dataset", "budget", "bref", "snl_acc", "ours_acc"],
+        &points
+            .iter()
+            .map(|p| {
+                vec![
+                    p.dataset.clone(),
+                    p.budget.to_string(),
+                    p.bref.to_string(),
+                    format!("{:.3}", p.snl_acc),
+                    format!("{:.3}", p.ours_acc),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    )?;
+    let wins = points.iter().filter(|p| p.ours_acc >= p.snl_acc).count();
+    println!(
+        "\nshape criterion: Ours >= SNL on {wins}/{} budgets (paper: every budget)",
+        points.len()
+    );
+    Ok(())
+}
+
+pub fn engine() -> Engine {
+    cdnl::util::logging::init();
+    Engine::new(Path::new("artifacts")).expect("run `make artifacts` first")
+}
+
+pub fn results_csv(id: &str) -> PathBuf {
+    PathBuf::from("results").join(format!("{id}.csv"))
+}
+
+/// Standard bench banner.
+pub fn banner(id: &str, what: &str) {
+    println!("=== {id}: {what} ===");
+    println!(
+        "mode: {} (set CDNL_BENCH_FULL=1 for the full paper grid)",
+        if full_mode() { "FULL" } else { "quick" }
+    );
+}

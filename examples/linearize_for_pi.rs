@@ -1,0 +1,118 @@
+//! End-to-end driver (EXPERIMENTS.md §End-to-end): the paper's full
+//! protocol on a real small workload, proving all three layers compose.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example linearize_for_pi
+//! ```
+//!
+//! Pipeline (all compute through AOT-compiled XLA artifacts; Python never
+//! runs):
+//!   1. train the full-ReLU ResNet baseline on the CIFAR-10 analog,
+//!      logging the loss curve,
+//!   2. SNL-linearize to the reference budget B_ref (the paper's Table 4
+//!      protocol),
+//!   3. run Block Coordinate Descent down to B_target,
+//!   4. compare against SNL-direct at the same target (the paper's headline
+//!      comparison), and
+//!   5. report the private-inference latency estimate at every stage.
+
+use cdnl::config::Experiment;
+use cdnl::coordinator::train::train;
+use cdnl::methods::snl::run_snl;
+use cdnl::pipeline::Pipeline;
+use cdnl::runtime::engine::Engine;
+use cdnl::util::fmt_relu_count;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cdnl::util::logging::init();
+    let engine = Engine::new(Path::new("artifacts"))?;
+
+    let mut exp = Experiment::default();
+    exp.dataset = "synth10".into();
+    exp.train.steps = 200;
+    exp.snl.max_steps = 250;
+    exp.bcd.rt = 10;
+    exp.bcd.finetune_steps = 12;
+    let pl = Pipeline::new(&engine, exp.clone())?;
+    let total = pl.sess.info().total_relus();
+    let b_target = total / 8; // aggressive linearization: keep 12.5%
+    let b_ref = total / 4;
+
+    // --- 1. baseline training with a logged loss curve ----------------------
+    let mut st = pl.sess.init_state(exp.train.seed as i32)?;
+    let t0 = std::time::Instant::now();
+    let stats = train(&pl.sess, &mut st, &pl.train_ds, &exp.train)?;
+    println!("\n== stage 1: baseline ({} steps in {:.0}s) ==", exp.train.steps, t0.elapsed().as_secs_f64());
+    print_loss_curve(&stats.losses);
+    let base_acc = pl.test_acc(&st)?;
+    println!("baseline test accuracy: {base_acc:.2}%");
+
+    // --- 2. SNL to the reference budget --------------------------------------
+    let t0 = std::time::Instant::now();
+    let snl_out = run_snl(&pl.sess, &mut st, &pl.train_ds, b_ref, &exp.snl, 0)?;
+    let ref_acc = pl.test_acc(&st)?;
+    println!(
+        "\n== stage 2: SNL reference ({} steps, {} lambda updates, {:.0}s) ==",
+        snl_out.steps_run,
+        snl_out.kappa_updates.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "reference model: {} ReLUs, {ref_acc:.2}% test accuracy",
+        fmt_relu_count(st.budget())
+    );
+
+    // --- 3. BCD to the target -------------------------------------------------
+    let (ours, bcd_out) = pl.bcd_from(&st, b_target)?;
+    let ours_acc = pl.test_acc(&ours)?;
+    println!(
+        "\n== stage 3: BCD {} -> {} ({} iterations, {} trials, {:.0}s) ==",
+        fmt_relu_count(b_ref),
+        fmt_relu_count(b_target),
+        bcd_out.iterations.len(),
+        bcd_out.total_trials(),
+        bcd_out.wall_secs
+    );
+    println!("ours: {ours_acc:.2}% test accuracy at {}", fmt_relu_count(b_target));
+
+    // --- 4. the headline comparison: SNL straight to the target ----------------
+    let mut snl_direct = pl.baseline()?;
+    run_snl(&pl.sess, &mut snl_direct, &pl.train_ds, b_target, &exp.snl, 0)?;
+    let snl_acc = pl.test_acc(&snl_direct)?;
+    println!(
+        "\n== stage 4: comparison at {} ReLUs ==\n  SNL  {snl_acc:.2}%\n  Ours {ours_acc:.2}%  ({:+.2})",
+        fmt_relu_count(b_target),
+        ours_acc - snl_acc
+    );
+
+    // --- 5. PI cost at every stage ---------------------------------------------
+    println!("\n== stage 5: estimated PI online latency (WAN) ==");
+    let info = pl.sess.info();
+    let proto = cdnl::picost::wan();
+    for (name, mask) in [
+        ("full ReLUs", cdnl::model::Mask::full(total)),
+        ("SNL reference", st.mask.clone()),
+        ("ours (BCD)", ours.mask.clone()),
+    ] {
+        let r = cdnl::picost::estimate_state(info, &mask, &proto);
+        println!(
+            "  {name:<14} {:>7} ReLUs  {:>8.1} ms  {:>6.2} MB",
+            r.relus,
+            1e3 * r.total_secs,
+            r.online_bytes / 1e6
+        );
+    }
+    Ok(())
+}
+
+/// Terminal loss curve (the end-to-end "log the loss curve" requirement).
+fn print_loss_curve(losses: &[f32]) {
+    let pts: Vec<(f64, f64)> = losses
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (i as f64, l as f64))
+        .collect();
+    let s = cdnl::metrics::Series::new("train loss", pts);
+    println!("{}", cdnl::metrics::ascii_plot("training loss curve", &[s], 64, 12));
+}

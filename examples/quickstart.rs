@@ -1,0 +1,70 @@
+//! Quickstart: linearize a network down to a ReLU budget with BCD.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Trains a small full-ReLU baseline on the CIFAR-10-analog dataset, runs
+//! Block Coordinate Descent (Algorithm 2) to remove 800 ReLUs, and reports
+//! accuracy before/after plus the estimated Private-Inference saving.
+
+use cdnl::config::Experiment;
+use cdnl::pipeline::Pipeline;
+use cdnl::runtime::engine::Engine;
+use cdnl::util::fmt_relu_count;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cdnl::util::logging::init();
+    let engine = Engine::new(Path::new("artifacts"))?;
+
+    // An Experiment bundles dataset + backbone + all hyperparameters.
+    let mut exp = Experiment::default();
+    exp.dataset = "synth10".into();
+    exp.train.steps = 120; // quick demo; the benches use the cached 300-step model
+    exp.bcd.rt = 8;
+    exp.bcd.finetune_steps = 8;
+
+    let pl = Pipeline::new(&engine, exp)?;
+    let info = pl.sess.info();
+    println!(
+        "model {}: {} params, {} ReLU locations in {} masked layers",
+        info.key,
+        info.param_size,
+        fmt_relu_count(info.total_relus()),
+        info.mask_layers.len()
+    );
+
+    // 1. Train (or load the cached) full-ReLU baseline.
+    let baseline = pl.baseline()?;
+    let base_acc = pl.test_acc(&baseline)?;
+    println!("baseline: {base_acc:.2}% test accuracy with all ReLUs");
+
+    // 2. BCD: remove 800 ReLUs, 100 per iteration (Algorithm 2).
+    let target = baseline.budget() - 800;
+    let (reduced, out) = pl.bcd_from(&baseline, target)?;
+    let red_acc = pl.test_acc(&reduced)?;
+    println!(
+        "bcd: {} -> {} ReLUs in {} iterations ({} trials, {:.1}s); accuracy {base_acc:.2}% -> {red_acc:.2}%",
+        fmt_relu_count(baseline.budget()),
+        fmt_relu_count(reduced.budget()),
+        out.iterations.len(),
+        out.total_trials(),
+        out.wall_secs,
+    );
+
+    // 3. What this buys in a private-inference deployment.
+    for proto in [cdnl::picost::lan(), cdnl::picost::wan()] {
+        let before = cdnl::picost::estimate_state(info, &baseline.mask, &proto);
+        let after = cdnl::picost::estimate_state(info, &reduced.mask, &proto);
+        println!(
+            "PI online latency ({}): {:.1} ms -> {:.1} ms  ({:.1} MB -> {:.1} MB comms)",
+            proto.name,
+            1e3 * before.total_secs,
+            1e3 * after.total_secs,
+            before.online_bytes / 1e6,
+            after.online_bytes / 1e6,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+"""AOT driver: lower the full L2 function matrix to HLO text + manifest.
+
+Run once by ``make artifacts``; Python never executes on the request path.
+
+Interchange format is HLO **text** (not serialized HloModuleProto): jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). ``HloModuleProto::from_text_file`` re-parses and
+reassigns ids, so text round-trips cleanly — see /opt/xla-example/README.md.
+
+Outputs:
+  artifacts/<model_key>__<fn>.hlo.txt   one per (model variant, entry point)
+  artifacts/manifest.json               the complete interchange contract
+
+Env:
+  CDNL_KERNEL_IMPL=pallas|ref  masked-activation implementation (default
+                               pallas; ref is the test-verified oracle)
+  CDNL_CONFIGS=key1,key2       lower only a subset of model variants
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import Model, ModelConfig
+from .models.layers import kernel_impl
+
+BATCH = 128
+
+# The experiment grid (DESIGN.md §3/§4):
+#   synth10    -> 16x16, 10 classes   (CIFAR-10 analog)
+#   synth100   -> 16x16, 20 classes   (CIFAR-100 analog)
+#   synthtiny  -> 32x32, 20 classes   (TinyImageNet analog)
+# Poly (AutoReP) variants exist for the CIFAR-100 analog only, matching the
+# paper's AutoReP experiments (Fig. 4).
+MODEL_CONFIGS = [
+    ModelConfig("resnet", 10, 16),
+    ModelConfig("resnet", 20, 16),
+    ModelConfig("resnet", 20, 32),
+    ModelConfig("wrn", 10, 16),
+    ModelConfig("wrn", 20, 16),
+    ModelConfig("wrn", 20, 32),
+    ModelConfig("resnet", 20, 16, poly=True),
+    ModelConfig("wrn", 20, 16, poly=True),
+]
+
+FN_NAMES = ["init", "forward", "eval_batch", "train_step", "snl_step", "kd_step"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_points(model: Model, batch: int):
+    yield "init", model.fn_init()
+    yield "forward", model.fn_forward(batch)
+    yield "eval_batch", model.fn_eval_batch(batch)
+    yield "train_step", model.fn_train_step(batch)
+    yield "snl_step", model.fn_snl_step(batch)
+    yield "kd_step", model.fn_kd_step(batch)
+
+
+ARG_NAMES = {
+    "init": ["seed"],
+    "forward": ["params", "masks", "x"],
+    "eval_batch": ["params", "masks", "x", "y"],
+    "train_step": ["params", "mom", "masks", "x", "y", "lr"],
+    "snl_step": ["params", "mom", "alphas", "x", "y", "lr", "alr", "lam"],
+    "kd_step": ["params", "mom", "masks", "x", "y", "t_logits", "lr", "temp"],
+}
+
+OUT_NAMES = {
+    "init": ["params"],
+    "forward": ["logits"],
+    "eval_batch": ["loss", "correct"],
+    "train_step": ["params", "mom", "loss", "correct"],
+    "snl_step": ["params", "mom", "alphas", "loss"],
+    "kd_step": ["params", "mom", "loss"],
+}
+
+
+def spec_json(name: str, s) -> dict:
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_model(cfg: ModelConfig, out_dir: str, batch: int) -> dict:
+    model = Model(cfg)
+    record = {
+        "key": cfg.key,
+        "backbone": cfg.backbone,
+        "num_classes": cfg.num_classes,
+        "image_size": cfg.image_size,
+        "channels": cfg.channels,
+        "poly": cfg.poly,
+        "param_size": model.pspec.total,
+        "mask_size": model.mspec.total,
+        "mask_layers": model.mspec.to_json(),
+        "param_entries": model.pspec.to_json(),
+        "artifacts": {},
+    }
+    for fn_name, (fn, arg_specs) in entry_points(model, batch):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.key}__{fn_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *arg_specs)
+        record["artifacts"][fn_name] = {
+            "file": fname,
+            "inputs": [
+                spec_json(n, s) for n, s in zip(ARG_NAMES[fn_name], arg_specs)
+            ],
+            "outputs": [
+                spec_json(n, s) for n, s in zip(OUT_NAMES[fn_name], outs)
+            ],
+        }
+        print(
+            f"  {cfg.key}:{fn_name}  {len(text)/1e6:.2f} MB  {time.time()-t0:.1f}s",
+            flush=True,
+        )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    ap.add_argument("--configs", default=os.environ.get("CDNL_CONFIGS", ""))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = [c for c in args.configs.split(",") if c]
+    configs = [c for c in MODEL_CONFIGS if not wanted or c.key in wanted]
+    if not configs:
+        print(f"no configs match {wanted!r}", file=sys.stderr)
+        sys.exit(1)
+
+    manifest = {
+        "format": 1,
+        "batch": args.batch,
+        "kernel_impl": kernel_impl(),
+        "jax_version": jax.__version__,
+        "models": {},
+    }
+    t0 = time.time()
+    for cfg in configs:
+        print(f"lowering {cfg.key} ...", flush=True)
+        manifest["models"][cfg.key] = lower_model(cfg, args.out_dir, args.batch)
+
+    # Partial runs (CDNL_CONFIGS) merge into an existing manifest so
+    # `make artifacts` stays incremental-friendly.
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if wanted and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old["models"].update(manifest["models"])
+        old["kernel_impl"] = manifest["kernel_impl"]
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['models'])} models, {time.time()-t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

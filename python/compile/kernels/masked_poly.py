@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: masked polynomial activation (AutoReP-style replacement).
+
+AutoReP (Peng et al. 2023) replaces eliminated ReLUs with a learnable
+second-order polynomial instead of the identity:
+
+    y = m * relu(x) + (1 - m) * (a * x^2 + b * x + c)
+
+where (a, b, c) are per-layer learnable coefficients. As with
+``masked_relu``, the expression is linear in ``m`` so the same kernel serves
+both hard (binary) masks and soft indicator values during selective training.
+
+Tiling/layout is identical to masked_relu (see that module and DESIGN.md
+§Hardware-Adaptation); the polynomial coefficients ride along as a tiny
+``[1, LANE]`` block (first three lanes used) fetched once per tile — on a
+real TPU this is an SMEM scalar prefetch, here expressed as a VMEM row so the
+interpret path stays faithful to the block structure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .masked_relu import LANE, DEFAULT_BLOCK_B, DEFAULT_BLOCK_N, _pad_to
+
+
+def _masked_poly_kernel(x_ref, m_ref, coef_ref, o_ref):
+    """out = m*relu(x) + (1-m)*(a*x^2 + b*x + c) over one VMEM tile."""
+    x = x_ref[...]
+    m = m_ref[...]
+    a = coef_ref[0, 0]
+    b = coef_ref[0, 1]
+    c = coef_ref[0, 2]
+    poly = (a * x + b) * x + c
+    o_ref[...] = m * jnp.maximum(x, 0.0) + (1.0 - m) * poly
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n"))
+def masked_poly_2d(
+    x: jax.Array,
+    m: jax.Array,
+    coefs: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> jax.Array:
+    """Masked quadratic activation over a flattened activation tensor.
+
+    Args:
+      x: ``[B, N]`` activations.
+      m: ``[N]`` mask row (binary or soft), broadcast over batch.
+      coefs: ``[3]`` polynomial coefficients ``(a, b, c)``.
+
+    Returns:
+      ``[B, N]`` activations.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"masked_poly_2d expects [B, N], got {x.shape}")
+    if m.shape != (x.shape[1],):
+        raise ValueError(f"mask shape {m.shape} != ({x.shape[1]},)")
+    if coefs.shape != (3,):
+        raise ValueError(f"coefs shape {coefs.shape} != (3,)")
+    b, n = x.shape
+    block_n = max(LANE, min(block_n, _pad_to(n, LANE)))
+    block_b = max(1, min(block_b, b))
+
+    pb, pn = _pad_to(b, block_b), _pad_to(n, block_n)
+    xp = jnp.pad(x, ((0, pb - b), (0, pn - n)))
+    mp = jnp.pad(m.astype(x.dtype), (0, pn - n)).reshape(1, pn)
+    cp = jnp.pad(coefs.astype(x.dtype), (0, LANE - 3)).reshape(1, LANE)
+
+    grid = (pb // block_b, pn // block_n)
+    out = pl.pallas_call(
+        _masked_poly_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((1, LANE), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, pn), x.dtype),
+        interpret=True,
+    )(xp, mp, cp)
+    return out[:b, :n]
+
+
+# Analytic custom VJP (pallas_call has no registered VJP in interpret mode):
+#   dy/dx = m * 1[x>0] + (1-m) * (2a x + b)
+#   dy/dm = relu(x) - poly(x)                       (batch-summed)
+#   dy/da = sum (1-m) x^2 ; dy/db = sum (1-m) x ; dy/dc = sum (1-m)
+@jax.custom_vjp
+def _masked_poly_vjp(x, m, coefs):
+    return masked_poly_2d(x, m, coefs)
+
+
+def _masked_poly_fwd(x, m, coefs):
+    return masked_poly_2d(x, m, coefs), (x, m, coefs)
+
+
+def _masked_poly_bwd(res, g):
+    x, m, coefs = res
+    a, b, c = coefs[0], coefs[1], coefs[2]
+    mm = m[None, :]
+    relu_grad = (x > 0).astype(x.dtype)
+    dx = g * (mm * relu_grad + (1.0 - mm) * (2.0 * a * x + b))
+    poly = (a * x + b) * x + c
+    dm = jnp.sum(g * (jnp.maximum(x, 0.0) - poly), axis=0)
+    gnm = g * (1.0 - mm)
+    da = jnp.sum(gnm * x * x)
+    db = jnp.sum(gnm * x)
+    dc = jnp.sum(gnm)
+    return dx, dm, jnp.stack([da, db, dc])
+
+
+_masked_poly_vjp.defvjp(_masked_poly_fwd, _masked_poly_bwd)
+
+
+def masked_poly_nchw(x: jax.Array, m: jax.Array, coefs: jax.Array) -> jax.Array:
+    """[B, C, H, W] wrapper with a [C, H, W] mask; see masked_poly_2d."""
+    b = x.shape[0]
+    n = x.shape[1] * x.shape[2] * x.shape[3]
+    y = _masked_poly_vjp(x.reshape(b, n), m.reshape(n), coefs)
+    return y.reshape(x.shape)

@@ -1,0 +1,143 @@
+"""L1 Pallas kernel: masked (partial) ReLU — the Network-Linearization activation.
+
+The paper replaces a subset of ReLUs with identity functions, keyed by a
+binary mask ``m`` over neuron locations:
+
+    y = m * relu(x) + (1 - m) * x
+
+The same kernel also serves SNL's *soft* masks (continuous alpha in [0, 1]),
+since the expression is linear in ``m``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): activations are flattened
+to ``[B, N]`` (N = C*H*W) and padded to the 128-lane VPU width; the mask row
+``[1, N]`` broadcasts across the batch (sublane) dimension. The kernel is
+bandwidth-bound (no MXU work) so the BlockSpec is chosen to stream
+HBM -> VMEM with lane-aligned tiles. On CPU we must run ``interpret=True``:
+real-TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot
+execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width of the TPU VPU; the last block dimension must be a multiple of
+# this for efficient vector loads. We keep the same alignment in interpret
+# mode so the lowered structure matches what a real TPU would execute.
+LANE = 128
+
+# Default tile: 8 sublanes x 512 lanes = 16 KiB of f32 per x-tile, well under
+# the ~16 MiB VMEM budget even with double buffering (see DESIGN.md §7).
+DEFAULT_BLOCK_B = 8
+DEFAULT_BLOCK_N = 512
+
+
+def _masked_relu_kernel(x_ref, m_ref, o_ref):
+    """out = m * relu(x) + (1 - m) * x, elementwise over one VMEM tile."""
+    x = x_ref[...]
+    m = m_ref[...]
+    o_ref[...] = m * jnp.maximum(x, 0.0) + (1.0 - m) * x
+
+
+def _pad_to(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n"))
+def masked_relu_2d(
+    x: jax.Array,
+    m: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> jax.Array:
+    """Masked ReLU over a flattened activation tensor.
+
+    Args:
+      x: ``[B, N]`` activations (any float dtype).
+      m: ``[N]`` mask row, broadcast over the batch dimension. Binary for
+         linearization, continuous in [0, 1] for SNL-style soft masks.
+      block_b / block_n: VMEM tile shape; ``block_n`` must be lane-aligned.
+
+    Returns:
+      ``[B, N]`` with the masked activation applied.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"masked_relu_2d expects [B, N], got {x.shape}")
+    if m.shape != (x.shape[1],):
+        raise ValueError(f"mask shape {m.shape} != ({x.shape[1]},)")
+    b, n = x.shape
+    block_n = max(LANE, min(block_n, _pad_to(n, LANE)))
+    block_b = max(1, min(block_b, b))
+
+    pb, pn = _pad_to(b, block_b), _pad_to(n, block_n)
+    xp = jnp.pad(x, ((0, pb - b), (0, pn - n)))
+    mp = jnp.pad(m.astype(x.dtype), (0, pn - n)).reshape(1, pn)
+
+    grid = (pb // block_b, pn // block_n)
+    out = pl.pallas_call(
+        _masked_relu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+            # The mask row is re-fetched per batch tile; index_map pins the
+            # sublane block to row 0 so every batch tile sees the same mask.
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, pn), x.dtype),
+        interpret=True,
+    )(xp, mp)
+    return out[:b, :n]
+
+
+# ``pallas_call`` has no registered VJP in interpret mode, so the masked
+# activation carries an analytic custom_vjp:
+#   dy/dx = m * 1[x>0] + (1 - m)         (elementwise)
+#   dy/dm = relu(x) - x                  (summed over the batch axis)
+# The mask cotangent matters: SNL trains soft alphas through this exact op.
+@jax.custom_vjp
+def _masked_relu_vjp(x: jax.Array, m: jax.Array) -> jax.Array:
+    return masked_relu_2d(x, m)
+
+
+def _masked_relu_fwd(x, m):
+    return masked_relu_2d(x, m), (x, m)
+
+
+def _masked_relu_bwd(res, g):
+    x, m = res
+    relu_grad = (x > 0).astype(x.dtype)
+    dx = g * (m[None, :] * relu_grad + (1.0 - m[None, :]))
+    dm = jnp.sum(g * (jnp.maximum(x, 0.0) - x), axis=0)
+    return dx, dm
+
+
+_masked_relu_vjp.defvjp(_masked_relu_fwd, _masked_relu_bwd)
+
+
+def masked_relu_nchw(x: jax.Array, m: jax.Array) -> jax.Array:
+    """Masked ReLU for ``[B, C, H, W]`` activations with a ``[C, H, W]`` mask.
+
+    Flattens the neuron dimensions to the lane axis and defers to
+    :func:`masked_relu_2d` (differentiable via the analytic custom VJP).
+    """
+    b = x.shape[0]
+    n = x.shape[1] * x.shape[2] * x.shape[3]
+    y = _masked_relu_vjp(x.reshape(b, n), m.reshape(n))
+    return y.reshape(x.shape)
+
+
+def vmem_bytes(block_b: int = DEFAULT_BLOCK_B, block_n: int = DEFAULT_BLOCK_N,
+               dtype_bytes: int = 4, double_buffered: bool = True) -> int:
+    """Estimated VMEM footprint of one kernel instance (for DESIGN §Perf).
+
+    x tile + mask row + out tile, times 2 when the Pallas pipeline
+    double-buffers the HBM->VMEM stream.
+    """
+    tiles = (block_b + 1 + block_b) * block_n * dtype_bytes
+    return tiles * (2 if double_buffered else 1)

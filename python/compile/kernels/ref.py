@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must agree with its oracle to float tolerance;
+``python/tests/test_kernel.py`` sweeps shapes/dtypes with hypothesis. The
+oracles are also selectable as the lowering implementation via
+``CDNL_KERNEL_IMPL=ref`` in aot.py (numerically identical by these tests;
+used for fast CPU experiment sweeps — see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_relu_ref(x: jax.Array, m: jax.Array) -> jax.Array:
+    """y = m * relu(x) + (1 - m) * x with ``m`` broadcast over batch.
+
+    Args:
+      x: ``[B, N]`` or ``[B, C, H, W]`` activations.
+      m: ``[N]`` or ``[C, H, W]`` mask (binary or soft).
+    """
+    m = m.astype(x.dtype)
+    return m * jnp.maximum(x, 0.0) + (1.0 - m) * x
+
+
+def masked_poly_ref(x: jax.Array, m: jax.Array, coefs: jax.Array) -> jax.Array:
+    """y = m * relu(x) + (1 - m) * (a x^2 + b x + c), ``m`` broadcast over batch."""
+    m = m.astype(x.dtype)
+    a, b, c = coefs[0], coefs[1], coefs[2]
+    poly = (a * x + b) * x + c
+    return m * jnp.maximum(x, 0.0) + (1.0 - m) * poly

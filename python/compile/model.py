@@ -1,0 +1,217 @@
+"""L2 facade: assemble (backbone x dataset x replacement) into AOT-able fns.
+
+Every function here closes over static shape information and takes/returns
+ONLY flat tensors — the interchange contract with the rust coordinator
+(see models/spec.py). The functions are lowered once by aot.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .models import resnet, wideresnet
+from .models.layers import Builder
+from .models.spec import MaskSpec, ParamSpec
+
+BACKBONES = {"resnet": resnet.define, "wrn": wideresnet.define}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration of one compiled model variant."""
+
+    backbone: str  # "resnet" | "wrn"
+    num_classes: int
+    image_size: int  # H == W
+    channels: int = 3
+    poly: bool = False  # AutoReP-style quadratic replacement
+
+    @property
+    def key(self) -> str:
+        p = "_poly" if self.poly else ""
+        return f"{self.backbone}_{self.image_size}x{self.image_size}_c{self.num_classes}{p}"
+
+    def input_shape(self, batch: int) -> Tuple[int, int, int, int]:
+        return (batch, self.channels, self.image_size, self.image_size)
+
+
+class Model:
+    """Specs + pure functions for one ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        define = BACKBONES[cfg.backbone]
+        # Spec pass: fixed probe batch of 2 (shapes don't depend on batch).
+        bld = Builder("spec", rng=jax.random.PRNGKey(0), poly=cfg.poly)
+        x_probe = jnp.zeros(cfg.input_shape(2), jnp.float32)
+        define(bld, x_probe, cfg.num_classes)
+        self.pspec: ParamSpec = bld.pspec
+        self.mspec: MaskSpec = bld.mspec
+        self._define = define
+
+    # -- core pure functions ------------------------------------------------
+
+    def init(self, seed: jax.Array) -> jax.Array:
+        """(seed i32) -> flat params [P]. Deterministic in the seed."""
+        bld = Builder("spec", rng=jax.random.PRNGKey(seed), poly=self.cfg.poly)
+        x_probe = jnp.zeros(self.cfg.input_shape(2), jnp.float32)
+        self._define(bld, x_probe, self.cfg.num_classes)
+        return bld.pspec.pack(bld.init_values)
+
+    def forward(self, params: jax.Array, masks: jax.Array, x: jax.Array) -> jax.Array:
+        """(params [P], masks [M], x [B,C,H,W]) -> logits [B,K]."""
+        bld = Builder("apply", params=params, masks=masks, poly=self.cfg.poly)
+        return self._define(bld, x, self.cfg.num_classes)
+
+    # -- AOT entry points (each becomes one artifact) -------------------------
+
+    def fn_init(self):
+        def init(seed):
+            return (self.init(seed[0]),)
+
+        return init, (jax.ShapeDtypeStruct((1,), jnp.int32),)
+
+    def fn_forward(self, batch: int):
+        def forward(params, masks, x):
+            return (self.forward(params, masks, x),)
+
+        return forward, (
+            jax.ShapeDtypeStruct((self.pspec.total,), jnp.float32),
+            jax.ShapeDtypeStruct((self.mspec.total,), jnp.float32),
+            jax.ShapeDtypeStruct(self.cfg.input_shape(batch), jnp.float32),
+        )
+
+    def fn_eval_batch(self, batch: int):
+        """(params, masks, x, y) -> (loss, correct). The BCD trial hot path."""
+
+        def eval_batch(params, masks, x, y):
+            logits = self.forward(params, masks, x)
+            loss = _ce_loss(logits, y, self.cfg.num_classes)
+            correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+            return (loss, correct)
+
+        return eval_batch, (
+            jax.ShapeDtypeStruct((self.pspec.total,), jnp.float32),
+            jax.ShapeDtypeStruct((self.mspec.total,), jnp.float32),
+            jax.ShapeDtypeStruct(self.cfg.input_shape(batch), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        )
+
+    def fn_train_step(self, batch: int):
+        """SGD-with-momentum step.
+
+        (params, mom, masks, x, y, lr) -> (params', mom', loss, correct)
+        LR arrives as a scalar input so the rust coordinator owns the
+        cosine-annealing schedule (L3 controls, L2 computes).
+        """
+
+        def train_step(params, mom, masks, x, y, lr):
+            def loss_fn(p):
+                logits = self.forward(p, masks, x)
+                return _ce_loss(logits, y, self.cfg.num_classes), logits
+
+            (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            mom2 = 0.9 * mom + grads
+            params2 = params - lr[0] * mom2
+            correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+            return (params2, mom2, loss, correct)
+
+        p = self.pspec.total
+        return train_step, (
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((self.mspec.total,), jnp.float32),
+            jax.ShapeDtypeStruct(self.cfg.input_shape(batch), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        )
+
+    def fn_snl_step(self, batch: int):
+        """Selective (SNL) step: trains weights AND soft alpha masks.
+
+        (params, mom, alphas, x, y, lr, alr, lam)
+            -> (params', mom', alphas', loss)
+        loss = CE + lam * ||alpha||_1 ; alphas are projected back to [0, 1]
+        (projected SGD). The lasso coefficient lam is an input so the rust
+        side owns the lambda <- kappa * lambda schedule (paper Fig. 9/10).
+        `alr` is a separate alpha learning rate: at our compressed step
+        budget (hundreds of steps vs the paper's 100K+) alphas need a much
+        larger step than weights for the CE gradient to differentiate which
+        ReLUs matter before the lasso pressure sweeps everything across the
+        threshold (DESIGN.md §0).
+        """
+
+        def snl_step(params, mom, alphas, x, y, lr, alr, lam):
+            def loss_fn(p, a):
+                logits = self.forward(p, a, x)
+                ce = _ce_loss(logits, y, self.cfg.num_classes)
+                return ce + lam[0] * jnp.sum(jnp.abs(a)), ce
+
+            (_, ce), grads = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+                params, alphas
+            )
+            gp, ga = grads
+            mom2 = 0.9 * mom + gp
+            params2 = params - lr[0] * mom2
+            alphas2 = jnp.clip(alphas - alr[0] * ga, 0.0, 1.0)
+            return (params2, mom2, alphas2, ce)
+
+        p = self.pspec.total
+        return snl_step, (
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((self.mspec.total,), jnp.float32),
+            jax.ShapeDtypeStruct(self.cfg.input_shape(batch), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        )
+
+    def fn_kd_step(self, batch: int):
+        """Knowledge-distillation step (SENet finetune).
+
+        (params, mom, masks, x, y, t_logits, lr, temp) -> (params', mom', loss)
+        loss = 0.5*CE + 0.5*T^2*KL(teacher || student). Teacher logits are an
+        input: the rust coordinator computes them once per batch with the
+        full-ReLU model (PRAM activation matching is substituted by logit
+        distillation — DESIGN.md §0).
+        """
+
+        def kd_step(params, mom, masks, x, y, t_logits, lr, temp):
+            def loss_fn(p):
+                logits = self.forward(p, masks, x)
+                ce = _ce_loss(logits, y, self.cfg.num_classes)
+                t = temp[0]
+                ps = jax.nn.log_softmax(logits / t, axis=1)
+                pt = jax.nn.softmax(t_logits / t, axis=1)
+                kl = jnp.mean(jnp.sum(pt * (jnp.log(pt + 1e-9) - ps), axis=1))
+                return 0.5 * ce + 0.5 * t * t * kl
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            mom2 = 0.9 * mom + grads
+            params2 = params - lr[0] * mom2
+            return (params2, mom2, loss)
+
+        p = self.pspec.total
+        k = self.cfg.num_classes
+        return kd_step, (
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((self.mspec.total,), jnp.float32),
+            jax.ShapeDtypeStruct(self.cfg.input_shape(batch), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((batch, k), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        )
+
+
+def _ce_loss(logits: jax.Array, y: jax.Array, num_classes: int) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=1)
+    onehot = jax.nn.one_hot(y, num_classes, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=1))

@@ -1,0 +1,169 @@
+"""Building blocks for the L2 JAX models (pure functions of flat params).
+
+Design notes:
+  * NCHW layout everywhere (matches the rust-side dataset tensors).
+  * GroupNorm instead of BatchNorm so the lowered train step is a pure
+    function — no mutable batch statistics threaded through the artifact
+    boundary (documented substitution, DESIGN.md §0).
+  * The masked activation is the L1 Pallas kernel; ``CDNL_KERNEL_IMPL=ref``
+    swaps in the numerically-identical pure-jnp oracle for fast CPU sweeps
+    (equivalence is enforced by python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ref as kref
+from ..kernels.masked_relu import masked_relu_nchw
+from ..kernels.masked_poly import masked_poly_nchw
+from .spec import MaskSpec, ParamSpec
+
+GN_EPS = 1e-5
+
+
+def kernel_impl() -> str:
+    """Which implementation the masked activations lower to: pallas | ref."""
+    return os.environ.get("CDNL_KERNEL_IMPL", "pallas")
+
+
+def masked_activation(x: jax.Array, m: jax.Array) -> jax.Array:
+    """m*relu(x) + (1-m)*x via the L1 kernel (or its oracle, see above)."""
+    if kernel_impl() == "ref":
+        return kref.masked_relu_ref(x, m)
+    return masked_relu_nchw(x, m)
+
+
+def masked_poly_activation(x: jax.Array, m: jax.Array, coefs: jax.Array) -> jax.Array:
+    """m*relu(x) + (1-m)*poly(x) via the L1 kernel (or its oracle)."""
+    if kernel_impl() == "ref":
+        return kref.masked_poly_ref(x, m, coefs)
+    return masked_poly_nchw(x, m, coefs)
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """3x3/1x1 'SAME' convolution, NCHW/OIHW."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def group_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, groups: int) -> jax.Array:
+    """GroupNorm over (channel-group, H, W); pure function of its inputs."""
+    b, c, h, w = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(b, g, c // g, h, w)
+    mean = xg.mean(axis=(2, 3, 4), keepdims=True)
+    var = xg.var(axis=(2, 3, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + GN_EPS)
+    xn = xg.reshape(b, c, h, w)
+    return xn * scale.reshape(1, c, 1, 1) + bias.reshape(1, c, 1, 1)
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    """[B, C, H, W] -> [B, C]."""
+    return x.mean(axis=(2, 3))
+
+
+# --------------------------------------------------------------------------
+# Spec-driven parameter registry: model builders declare parameters once and
+# both `init` and `forward` consume the same declarations.
+# --------------------------------------------------------------------------
+
+
+class Builder:
+    """Accumulates parameter/mask declarations while tracing a model graph.
+
+    A model definition is a function ``define(bld, x)`` that calls the
+    ``bld.*`` helpers. It is executed twice with identical control flow:
+    once in *spec* mode (shapes only, builds ParamSpec/MaskSpec + init
+    values) and once in *apply* mode (unpacks the flat vectors and computes).
+    """
+
+    def __init__(self, mode: str, params: jax.Array | None = None,
+                 masks: jax.Array | None = None, rng: jax.Array | None = None,
+                 poly: bool = False):
+        assert mode in ("spec", "apply")
+        self.mode = mode
+        self.pspec = ParamSpec()
+        self.mspec = MaskSpec()
+        self.params = params
+        self.masks = masks
+        self.rng = rng
+        self.poly = poly
+        self.init_values: Dict[str, jax.Array] = {}
+        self._mask_meta: List[dict] = []
+
+    # -- parameter declaration -------------------------------------------
+
+    def _param(self, name: str, shape, init_fn: Callable[[jax.Array], jax.Array]) -> jax.Array:
+        self.pspec.add(name, shape)
+        if self.mode == "spec":
+            self.rng, sub = jax.random.split(self.rng)
+            v = init_fn(sub)
+            self.init_values[name] = v
+            return v
+        return self.pspec.unpack(self.params, name)
+
+    def conv(self, name: str, x: jax.Array, cout: int, ksize: int = 3,
+             stride: int = 1) -> jax.Array:
+        cin = x.shape[1]
+        fan_in = cin * ksize * ksize
+
+        def init(k):
+            # He-normal, the standard ResNet initialization.
+            return jax.random.normal(k, (cout, cin, ksize, ksize), jnp.float32) * jnp.sqrt(
+                2.0 / fan_in
+            )
+
+        w = self._param(f"{name}.w", (cout, cin, ksize, ksize), init)
+        return conv2d(x, w, stride)
+
+    def gn(self, name: str, x: jax.Array, groups: int = 4) -> jax.Array:
+        c = x.shape[1]
+        s = self._param(f"{name}.scale", (c,), lambda k: jnp.ones((c,), jnp.float32))
+        b = self._param(f"{name}.bias", (c,), lambda k: jnp.zeros((c,), jnp.float32))
+        return group_norm(x, s, b, groups)
+
+    def dense(self, name: str, x: jax.Array, dout: int) -> jax.Array:
+        din = x.shape[1]
+
+        def init_w(k):
+            return jax.random.normal(k, (din, dout), jnp.float32) * jnp.sqrt(1.0 / din)
+
+        w = self._param(f"{name}.w", (din, dout), init_w)
+        b = self._param(f"{name}.b", (dout,), lambda k: jnp.zeros((dout,), jnp.float32))
+        return x @ w + b
+
+    # -- masked activations (the linearization surface) -------------------
+
+    def act(self, name: str, x: jax.Array) -> jax.Array:
+        """Masked ReLU layer — one entry in the mask vector per location."""
+        _, c, h, w = x.shape
+        self.mspec.add_layer(name, c, h, w)
+        self._mask_meta.append({"name": name, "shape": [int(c), int(h), int(w)]})
+        if self.poly:
+            coefs = self._param(
+                f"{name}.poly",
+                (3,),
+                # AutoReP-style init: approximately relu-like on small inputs
+                # (0.25 x^2 + 0.5 x, the degree-2 Chebyshev-ish fit).
+                lambda k: jnp.array([0.25, 0.5, 0.0], jnp.float32),
+            )
+        if self.mode == "spec":
+            # Spec mode only needs shapes; behave like the full-ReLU network.
+            return jnp.maximum(x, 0.0)
+        m = self.mspec.unpack(self.masks, name)
+        if self.poly:
+            return masked_poly_activation(x, m, coefs)
+        return masked_activation(x, m)

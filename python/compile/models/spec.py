@@ -1,0 +1,95 @@
+"""Flat parameter / mask packing specs — the AOT interchange contract.
+
+The rust coordinator treats model parameters as ONE opaque f32 vector ``[P]``
+and ReLU masks as ONE f32 vector ``[M]``. This keeps every artifact at a
+handful of inputs/outputs regardless of network depth, and makes the paper's
+"pool of present ReLUs" literally the set of indices ``i`` with ``m[i] == 1``.
+
+``ParamSpec`` / ``MaskSpec`` record the (name, shape, offset) layout; the
+layout is serialized into ``artifacts/manifest.json`` so rust never
+duplicates shape knowledge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    """One named tensor inside a flat pack."""
+
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+class FlatSpec:
+    """Ordered collection of named tensors living inside one flat f32 vector."""
+
+    def __init__(self) -> None:
+        self.entries: List[Entry] = []
+        self._by_name: Dict[str, Entry] = {}
+        self.total = 0
+
+    def add(self, name: str, shape: Sequence[int]) -> Entry:
+        if name in self._by_name:
+            raise ValueError(f"duplicate entry {name!r}")
+        e = Entry(name=name, shape=tuple(int(s) for s in shape), offset=self.total)
+        self.entries.append(e)
+        self._by_name[name] = e
+        self.total += e.size
+        return e
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+    def entry(self, name: str) -> Entry:
+        return self._by_name[name]
+
+    def unpack(self, flat: jax.Array, name: str) -> jax.Array:
+        """Slice one named tensor out of the flat vector (static offsets)."""
+        e = self._by_name[name]
+        return jax.lax.slice(flat, (e.offset,), (e.offset + e.size,)).reshape(e.shape)
+
+    def pack(self, tensors: Dict[str, jax.Array]) -> jax.Array:
+        """Concatenate named tensors into the flat vector, in spec order."""
+        missing = [e.name for e in self.entries if e.name not in tensors]
+        if missing:
+            raise ValueError(f"missing tensors: {missing}")
+        parts = [tensors[e.name].reshape(-1).astype(jnp.float32) for e in self.entries]
+        return jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.float32)
+
+    def to_json(self) -> list:
+        return [
+            {"name": e.name, "shape": list(e.shape), "offset": e.offset, "size": e.size}
+            for e in self.entries
+        ]
+
+
+class ParamSpec(FlatSpec):
+    """Learnable parameters (conv/gn/dense weights, poly coefficients)."""
+
+
+class MaskSpec(FlatSpec):
+    """ReLU mask layers; one entry per masked activation, shape [C, H, W].
+
+    The flat offset of a layer is the global index base of its ReLUs — the
+    rust coordinator samples/removes ReLUs directly in this index space.
+    """
+
+    def add_layer(self, name: str, c: int, h: int, w: int) -> Entry:
+        return self.add(name, (c, h, w))
+
+    @property
+    def relu_count(self) -> int:
+        return self.total

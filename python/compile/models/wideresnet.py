@@ -1,0 +1,56 @@
+"""WideResNetMini — the WRN-22-8 backbone at reproduction scale.
+
+WRN-22-8 (Zagoruyko & Komodakis 2016) is three groups of pre-activation
+blocks with widening factor 8. We keep the pre-activation structure, three
+groups with channel doubling and stride-2 group entries, and a widening
+factor of 4 over a base width of 4 — scaled so WRN/ResNet ReLU-count and
+runtime ratios are close to the paper's (1359K/570K ≈ 2.4x; see
+bench_table1). Depth 2 blocks/group mirrors the 22-layer network's role as
+the "bigger, wider" backbone relative to ResNet18.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .layers import Builder
+
+BASE_WIDTH = 4
+WIDEN = 4
+GROUPS = [(2, 1), (2, 2), (2, 4)]  # (blocks, multiplier) per group
+
+
+def preact_block(bld: Builder, x, name: str, cout: int, stride: int):
+    """Pre-activation wide block: gn-act-conv / gn-act-conv + skip."""
+    y = bld.gn(f"{name}.gn1", x)
+    y = bld.act(f"{name}.act1", y)
+    if stride != 1 or x.shape[1] != cout:
+        # WRN applies the projection to the pre-activated input.
+        identity = bld.conv(f"{name}.proj", y, cout, 1, stride)
+    else:
+        identity = x
+    y = bld.conv(f"{name}.conv1", y, cout, 3, stride)
+    y = bld.gn(f"{name}.gn2", y)
+    y = bld.act(f"{name}.act2", y)
+    y = bld.conv(f"{name}.conv2", y, cout, 3, 1)
+    return y + identity
+
+
+def define(bld: Builder, x, num_classes: int):
+    """WideResNetMini graph."""
+    w = BASE_WIDTH * WIDEN
+    y = bld.conv("stem.conv", x, BASE_WIDTH * 2, 3, 1)
+    for gi, (blocks, mult) in enumerate(GROUPS):
+        cout = w * mult
+        for bi in range(blocks):
+            stride = 2 if (gi > 0 and bi == 0) else 1
+            y = preact_block(bld, y, f"g{gi}.b{bi}", cout, stride)
+    y = bld.gn("final.gn", y)
+    y = bld.act("final.act", y)
+    feats = y.mean(axis=(2, 3))
+    logits = bld.dense("head", feats, num_classes)
+    return logits
+
+
+def config(num_classes: int):
+    return ("wrn", define, num_classes)

@@ -1,0 +1,100 @@
+"""AOT contract tests: the manifest in artifacts/ must agree with what the
+models say about themselves, and the HLO text must be loadable.
+
+These tests run against the checked-out artifacts directory (built by
+`make artifacts`); they are skipped when it does not exist yet.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import ARG_NAMES, MODEL_CONFIGS, OUT_NAMES
+from compile.model import Model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_configs(manifest):
+    keys = {c.key for c in MODEL_CONFIGS}
+    assert keys == set(manifest["models"].keys())
+
+
+def test_manifest_fields(manifest):
+    for key, m in manifest["models"].items():
+        assert m["key"] == key
+        assert m["param_size"] > 0
+        assert m["mask_size"] > 0
+        assert m["artifacts"], f"{key} has no artifacts"
+        # Mask layers tile [0, mask_size) contiguously (rust validates the
+        # same invariant; this catches it at build time).
+        off = 0
+        for e in m["mask_layers"]:
+            assert e["offset"] == off, f"{key}:{e['name']}"
+            c, h, w = e["shape"]
+            assert e["size"] == c * h * w
+            off += e["size"]
+        assert off == m["mask_size"]
+
+
+def test_artifact_files_exist_and_are_hlo_text(manifest):
+    for key, m in manifest["models"].items():
+        for fn, a in m["artifacts"].items():
+            path = os.path.join(ART, a["file"])
+            assert os.path.exists(path), f"{key}:{fn} missing {a['file']}"
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head, f"{key}:{fn} is not HLO text"
+
+
+def test_artifact_specs_match_arg_tables(manifest):
+    for key, m in manifest["models"].items():
+        for fn, a in m["artifacts"].items():
+            in_names = [s["name"] for s in a["inputs"]]
+            out_names = [s["name"] for s in a["outputs"]]
+            assert in_names == ARG_NAMES[fn], f"{key}:{fn} inputs"
+            assert out_names == OUT_NAMES[fn], f"{key}:{fn} outputs"
+
+
+def test_manifest_sizes_match_model_specs(manifest):
+    """Re-derive the specs from the model definitions; the manifest must not
+    have drifted from the code."""
+    for cfg in MODEL_CONFIGS:
+        model = Model(cfg)
+        m = manifest["models"][cfg.key]
+        assert m["param_size"] == model.pspec.total, cfg.key
+        assert m["mask_size"] == model.mspec.total, cfg.key
+        assert len(m["mask_layers"]) == len(model.mspec.entries), cfg.key
+
+
+def test_batch_consistency(manifest):
+    batch = manifest["batch"]
+    for key, m in manifest["models"].items():
+        fwd = m["artifacts"]["forward"]
+        x = next(s for s in fwd["inputs"] if s["name"] == "x")
+        assert x["shape"][0] == batch, f"{key}: forward batch {x['shape']}"
+        assert x["shape"][1:] == [m["channels"], m["image_size"], m["image_size"]]
+
+
+def test_relu_counts_scale_with_image_size(manifest):
+    """Paper Table 1: ReLU count grows ~4x with 2x image size and is larger
+    for the wide backbone."""
+    r16 = manifest["models"]["resnet_16x16_c20"]["mask_size"]
+    r32 = manifest["models"]["resnet_32x32_c20"]["mask_size"]
+    w16 = manifest["models"]["wrn_16x16_c20"]["mask_size"]
+    w32 = manifest["models"]["wrn_32x32_c20"]["mask_size"]
+    assert 3.0 < r32 / r16 <= 4.1
+    assert 3.0 < w32 / w16 <= 4.1
+    assert w16 > r16 and w32 > r32

@@ -1,0 +1,191 @@
+"""L1 correctness: Pallas kernels vs. the pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes/block configurations; the kernels must agree
+with the oracle to float tolerance — including the analytic custom-VJP the
+SNL alpha training differentiates through.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.masked_relu import (
+    LANE,
+    masked_relu_2d,
+    masked_relu_nchw,
+    _masked_relu_vjp,
+    vmem_bytes,
+)
+from compile.kernels.masked_poly import masked_poly_2d, masked_poly_nchw
+
+hypothesis.settings.register_profile(
+    "cdnl", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("cdnl")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=3.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rand_mask(key, n, soft: bool):
+    if soft:
+        return jax.random.uniform(key, (n,), jnp.float32)
+    return (jax.random.uniform(key, (n,)) > 0.5).astype(jnp.float32)
+
+
+@given(
+    b=st.integers(1, 17),
+    n=st.integers(1, 700),
+    soft=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_relu_matches_ref(b, n, soft, seed):
+    kx, km = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(kx, (b, n))
+    m = rand_mask(km, n, soft)
+    got = masked_relu_2d(x, m)
+    want = ref.masked_relu_ref(x, m)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(
+    block_b=st.sampled_from([1, 2, 8, 16]),
+    block_n=st.sampled_from([128, 256, 512, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_relu_block_shape_invariance(block_b, block_n, seed):
+    """The result must not depend on the BlockSpec tiling."""
+    kx, km = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(kx, (13, 300))
+    m = rand_mask(km, 300, soft=False)
+    got = masked_relu_2d(x, m, block_b=block_b, block_n=block_n)
+    want = ref.masked_relu_ref(x, m)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_masked_relu_identity_and_full():
+    """m=1 is plain ReLU; m=0 is the identity (the linearized network)."""
+    x = rand(jax.random.PRNGKey(0), (4, 200))
+    ones = jnp.ones((200,))
+    zeros = jnp.zeros((200,))
+    np.testing.assert_allclose(masked_relu_2d(x, ones), jnp.maximum(x, 0.0), rtol=1e-6)
+    np.testing.assert_allclose(masked_relu_2d(x, zeros), x, rtol=1e-6)
+
+
+def test_masked_relu_bf16():
+    kx, km = jax.random.split(jax.random.PRNGKey(7))
+    x = rand(kx, (8, 256), dtype=jnp.bfloat16)
+    m = rand_mask(km, 256, soft=False)
+    got = masked_relu_2d(x, m).astype(jnp.float32)
+    want = ref.masked_relu_ref(x, m).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+
+@given(seed=st.integers(0, 2**31 - 1), soft=st.booleans())
+def test_masked_relu_grads_match_ref(seed, soft):
+    """The analytic custom-VJP must equal autodiff through the oracle —
+    both dL/dx and dL/dm (SNL trains alphas through this op)."""
+    kx, km = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(kx, (6, 150))
+    m = rand_mask(km, 150, soft)
+
+    def loss_kernel(x, m):
+        return jnp.sum(jnp.sin(_masked_relu_vjp(x, m)))
+
+    def loss_ref(x, m):
+        return jnp.sum(jnp.sin(ref.masked_relu_ref(x, m)))
+
+    gx_k, gm_k = jax.grad(loss_kernel, argnums=(0, 1))(x, m)
+    gx_r, gm_r = jax.grad(loss_ref, argnums=(0, 1))(x, m)
+    np.testing.assert_allclose(gx_k, gx_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gm_k, gm_r, rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_masked_relu_nchw(seed):
+    kx, km = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(kx, (3, 4, 5, 5))
+    m = rand_mask(km, 4 * 5 * 5, soft=False).reshape(4, 5, 5)
+    got = masked_relu_nchw(x, m)
+    want = ref.masked_relu_ref(x, m.reshape(1, 4, 5, 5))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(
+    b=st.integers(1, 9),
+    n=st.integers(1, 400),
+    soft=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_poly_matches_ref(b, n, soft, seed):
+    kx, km, kc = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(kx, (b, n))
+    m = rand_mask(km, n, soft)
+    coefs = jax.random.normal(kc, (3,)) * 0.3
+    got = masked_poly_2d(x, m, coefs)
+    want = ref.masked_poly_ref(x, m, coefs)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_poly_full_mask_is_relu():
+    x = rand(jax.random.PRNGKey(1), (4, 130))
+    coefs = jnp.array([0.2, 0.5, 0.1])
+    got = masked_poly_2d(x, jnp.ones((130,)), coefs)
+    np.testing.assert_allclose(got, jnp.maximum(x, 0.0), rtol=1e-6, atol=1e-6)
+
+
+def test_masked_poly_zero_mask_is_poly():
+    x = rand(jax.random.PRNGKey(2), (4, 130))
+    coefs = jnp.array([0.2, 0.5, 0.1])
+    got = masked_poly_2d(x, jnp.zeros((130,)), coefs)
+    want = (0.2 * x + 0.5) * x + 0.1
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_masked_poly_grads_match_ref(seed):
+    """Gradients w.r.t. x, m AND the learnable coefficients (AutoReP trains
+    the polynomial) must match autodiff through the oracle."""
+    kx, km, kc = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(kx, (5, 100))
+    m = rand_mask(km, 100, soft=True)
+    coefs = jax.random.normal(kc, (3,)) * 0.3
+
+    def loss_kernel(x, m, c):
+        return jnp.sum(jnp.tanh(masked_poly_nchw(
+            x.reshape(5, 4, 5, 5), m.reshape(4, 5, 5), c
+        )))
+
+    def loss_ref(x, m, c):
+        return jnp.sum(jnp.tanh(
+            ref.masked_poly_ref(x, m, c).reshape(5, 4, 5, 5)
+        ))
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, m, coefs)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, m, coefs)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_bad_shapes_rejected():
+    x = jnp.zeros((4, 8, 2))
+    with pytest.raises(ValueError):
+        masked_relu_2d(x, jnp.zeros((8,)))
+    with pytest.raises(ValueError):
+        masked_relu_2d(jnp.zeros((4, 8)), jnp.zeros((9,)))
+
+
+def test_vmem_budget():
+    """Default tile must fit comfortably in TPU VMEM (16 MiB)."""
+    assert vmem_bytes() < 256 * 1024
+    assert vmem_bytes(double_buffered=False) * 2 == vmem_bytes()
+
+
+def test_lane_alignment_constant():
+    assert LANE == 128

@@ -1,0 +1,205 @@
+"""L2 correctness: model assembly, shapes, determinism, and that every
+compiled entry point's math behaves (losses decrease, masks clip, KD pulls
+toward the teacher).
+
+All tests run on a tiny probe batch — they exercise the exact functions
+aot.py lowers, just jitted in-process instead of via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import Model, ModelConfig
+
+BATCH = 8
+
+
+@pytest.fixture(scope="module", params=["resnet", "wrn"])
+def model(request):
+    return Model(ModelConfig(request.param, num_classes=4, image_size=8))
+
+
+@pytest.fixture(scope="module")
+def poly_model():
+    return Model(ModelConfig("resnet", num_classes=4, image_size=8, poly=True))
+
+
+def batch_for(model, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, model.cfg.input_shape(BATCH))
+    y = jax.random.randint(k2, (BATCH,), 0, model.cfg.num_classes)
+    return x, y
+
+
+def test_init_shapes_and_determinism(model):
+    init, specs = model.fn_init()
+    p1 = init(jnp.array([3], jnp.int32))[0]
+    p2 = init(jnp.array([3], jnp.int32))[0]
+    p3 = init(jnp.array([4], jnp.int32))[0]
+    assert p1.shape == (model.pspec.total,)
+    np.testing.assert_array_equal(p1, p2)
+    assert not np.allclose(p1, p3), "different seeds must differ"
+    assert np.isfinite(np.asarray(p1)).all()
+
+
+def test_forward_shape_and_finite(model):
+    fwd, _ = model.fn_forward(BATCH)
+    params = model.init(jnp.array(0))
+    masks = jnp.ones((model.mspec.total,))
+    x, _ = batch_for(model)
+    (logits,) = fwd(params, masks, x)
+    assert logits.shape == (BATCH, model.cfg.num_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_full_vs_zero_mask_differ(model):
+    """Linearizing everything must actually change the network output."""
+    params = model.init(jnp.array(0))
+    x, _ = batch_for(model)
+    full = model.forward(params, jnp.ones((model.mspec.total,)), x)
+    lin = model.forward(params, jnp.zeros((model.mspec.total,)), x)
+    assert not np.allclose(full, lin)
+
+
+def test_train_step_decreases_loss(model):
+    step, _ = model.fn_train_step(BATCH)
+    params = model.init(jnp.array(1))
+    mom = jnp.zeros_like(params)
+    masks = jnp.ones((model.mspec.total,))
+    x, y = batch_for(model, seed=1)
+    lr = jnp.array([5e-3], jnp.float32)
+    jstep = jax.jit(step)
+    losses = []
+    for _ in range(8):
+        params, mom, loss, correct = jstep(params, mom, masks, x, y, lr)
+        losses.append(float(loss))
+        assert 0.0 <= float(correct) <= BATCH
+    assert losses[-1] < losses[0], f"loss did not decrease: {losses}"
+
+
+def test_train_step_respects_mask_gradients(model):
+    """With the full mask vs half mask, updates must differ — the mask is
+    part of the differentiated graph, not a post-hoc filter."""
+    step = jax.jit(model.fn_train_step(BATCH)[0])
+    params = model.init(jnp.array(2))
+    mom = jnp.zeros_like(params)
+    x, y = batch_for(model, seed=2)
+    lr = jnp.array([1e-3], jnp.float32)
+    full = jnp.ones((model.mspec.total,))
+    half = full.at[: model.mspec.total // 2].set(0.0)
+    p_full, *_ = step(params, mom, full, x, y, lr)
+    p_half, *_ = step(params, mom, half, x, y, lr)
+    assert not np.allclose(p_full, p_half)
+
+
+def test_snl_step_trains_and_clips(model):
+    snl = jax.jit(model.fn_snl_step(BATCH)[0])
+    params = model.init(jnp.array(3))
+    mom = jnp.zeros_like(params)
+    alphas = jnp.ones((model.mspec.total,))
+    x, y = batch_for(model, seed=3)
+    lr = jnp.array([1e-2], jnp.float32)
+    alr = jnp.array([1.0], jnp.float32)
+    lam = jnp.array([1e-3], jnp.float32)
+    a_l1 = [float(jnp.sum(alphas))]
+    for _ in range(5):
+        params, mom, alphas, loss = snl(params, mom, alphas, x, y, lr, alr, lam)
+        a = np.asarray(alphas)
+        assert (a >= 0.0).all() and (a <= 1.0).all(), "projection violated"
+        a_l1.append(float(jnp.sum(alphas)))
+    assert a_l1[-1] < a_l1[0], "lasso did not shrink the alphas"
+
+
+def test_snl_lambda_zero_keeps_alphas_higher(model):
+    """Higher lambda ⇒ stronger alpha shrinkage (the paper's Fig. 9 knob)."""
+    snl = jax.jit(model.fn_snl_step(BATCH)[0])
+    params0 = model.init(jnp.array(4))
+    x, y = batch_for(model, seed=4)
+    lr = jnp.array([1e-2], jnp.float32)
+    alr = jnp.array([1.0], jnp.float32)
+
+    def run(lam_val):
+        params, mom = params0, jnp.zeros_like(params0)
+        alphas = jnp.ones((model.mspec.total,))
+        lam = jnp.array([lam_val], jnp.float32)
+        for _ in range(5):
+            params, mom, alphas, _ = snl(params, mom, alphas, x, y, lr, alr, lam)
+        return float(jnp.sum(alphas))
+
+    assert run(1e-2) < run(0.0)
+
+
+def test_snl_alpha_lr_decouples_weight_and_alpha_steps(model):
+    """alr=0 must freeze the alphas while weights still train."""
+    snl = jax.jit(model.fn_snl_step(BATCH)[0])
+    params = model.init(jnp.array(8))
+    mom = jnp.zeros_like(params)
+    alphas = jnp.ones((model.mspec.total,)) * 0.7
+    x, y = batch_for(model, seed=8)
+    p2, _, a2, _ = snl(
+        params, mom, alphas, x, y,
+        jnp.array([1e-2], jnp.float32),
+        jnp.array([0.0], jnp.float32),
+        jnp.array([1e-2], jnp.float32),
+    )
+    np.testing.assert_array_equal(a2, alphas)
+    assert not np.allclose(p2, params)
+
+
+def test_kd_step_pulls_toward_teacher(model):
+    kd = jax.jit(model.fn_kd_step(BATCH)[0])
+    params = model.init(jnp.array(5))
+    mom = jnp.zeros_like(params)
+    masks = jnp.ones((model.mspec.total,))
+    x, y = batch_for(model, seed=5)
+    t_logits = jax.nn.one_hot(y, model.cfg.num_classes) * 5.0
+    lr = jnp.array([5e-3], jnp.float32)
+    temp = jnp.array([2.0], jnp.float32)
+    losses = []
+    for _ in range(6):
+        params, mom, loss = kd(params, mom, masks, x, y, t_logits, lr, temp)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"KD loss did not decrease: {losses}"
+
+
+def test_eval_batch_matches_forward(model):
+    ev = jax.jit(model.fn_eval_batch(BATCH)[0])
+    params = model.init(jnp.array(6))
+    masks = jnp.ones((model.mspec.total,))
+    x, y = batch_for(model, seed=6)
+    loss, correct = ev(params, masks, x, y)
+    logits = model.forward(params, masks, x)
+    want_correct = float(jnp.sum(jnp.argmax(logits, axis=1) == y))
+    assert float(correct) == want_correct
+    assert float(loss) > 0.0
+
+
+def test_poly_model_has_coef_params(poly_model):
+    """AutoReP variants must carry learnable polynomial coefficients."""
+    coef_names = [e.name for e in poly_model.pspec.entries if "poly" in e.name]
+    assert coef_names, "poly model has no poly coefficient entries"
+    # And the poly path must change the linearized output.
+    params = poly_model.init(jnp.array(0))
+    x, _ = batch_for(poly_model)
+    zeros = jnp.zeros((poly_model.mspec.total,))
+    out = poly_model.forward(params, zeros, x)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_mask_spec_matches_relu_layout(model):
+    """The mask spec must tile [0, total) contiguously — the rust manifest
+    validation assumes it."""
+    off = 0
+    for e in model.mspec.entries:
+        assert e.offset == off
+        off += e.size
+    assert off == model.mspec.total
+
+
+def test_param_pack_unpack_roundtrip(model):
+    params = model.init(jnp.array(7))
+    for e in model.pspec.entries[:3]:
+        sub = model.pspec.unpack(params, e.name)
+        assert sub.shape == tuple(e.shape)

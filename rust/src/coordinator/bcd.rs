@@ -1,0 +1,153 @@
+//! Block Coordinate Descent over binary ReLU masks — Algorithm 2, the
+//! paper's contribution.
+//!
+//! Starting from a reference network with `B_ref` active ReLUs, iterate
+//! `T = ceil((B_ref - B_target) / DRC)` times: scan up to RT random
+//! hypotheses that each remove DRC present ReLUs, keep the one with least
+//! proxy-accuracy degradation (early-accepting under ADT), apply it
+//! permanently — removed ReLUs are never revisited, so every intermediate
+//! state is sparse by design — then finetune with cosine-annealed SGD.
+
+use crate::config::BcdConfig;
+use crate::coordinator::eval::Evaluator;
+use crate::coordinator::finetune::{finetune, FinetuneStats};
+use crate::coordinator::trials::{scan_trials, BlockSampler, ScanOutcome};
+use crate::data::Dataset;
+use crate::model::{Mask, ModelState};
+use crate::runtime::session::Session;
+use crate::util::prng::Rng;
+use anyhow::{bail, Result};
+
+/// Per-iteration record (feeds the ablation figures and EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub t: usize,
+    pub budget_after: usize,
+    pub base_acc: f64,
+    pub chosen_dacc: f64,
+    pub trials_evaluated: usize,
+    pub trials_bounded: usize,
+    pub early_accept: bool,
+    pub finetune: FinetuneStats,
+}
+
+/// Outcome of a full BCD run.
+#[derive(Clone, Debug)]
+pub struct BcdOutcome {
+    pub iterations: Vec<IterRecord>,
+    /// Mask snapshots (dense) taken every `snapshot_every` iterations, for
+    /// the IoU dynamics analysis (Fig. 6 analog).
+    pub snapshots: Vec<(usize, Mask)>,
+    pub final_budget: usize,
+    pub wall_secs: f64,
+}
+
+impl BcdOutcome {
+    /// Total trial evaluations across the run (the §Perf denominator).
+    pub fn total_trials(&self) -> usize {
+        self.iterations.iter().map(|r| r.trials_evaluated).sum()
+    }
+}
+
+/// Run Algorithm 2 on `st` until `||m||_0 == b_target`, mutating it.
+///
+/// `train_ds` provides both the trial proxy batches and finetune batches.
+/// Set `snapshot_every > 0` to record mask snapshots for mask-dynamics
+/// analysis.
+pub fn run_bcd(
+    sess: &Session,
+    st: &mut ModelState,
+    train_ds: &Dataset,
+    b_target: usize,
+    cfg: &BcdConfig,
+    snapshot_every: usize,
+) -> Result<BcdOutcome> {
+    let b_ref = st.budget();
+    if b_target >= b_ref {
+        bail!("BCD: target budget {b_target} >= current budget {b_ref}");
+    }
+    if cfg.drc == 0 || cfg.rt == 0 {
+        bail!("BCD: drc and rt must be positive");
+    }
+    let t_est = (b_ref - b_target).div_ceil(cfg.drc);
+    crate::info!(
+        "bcd: {} -> {} ReLUs, T~{} iterations (DRC={} {:?}, RT={}, ADT={}%, {:?})",
+        b_ref,
+        b_target,
+        t_est,
+        cfg.drc,
+        cfg.drc_schedule,
+        cfg.rt,
+        cfg.adt,
+        cfg.granularity
+    );
+
+    let wall0 = std::time::Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let mut ft_rng = rng.fork(0xF17E);
+    let ev = Evaluator::new(sess, train_ds, cfg.proxy_batches)?;
+    let sampler = BlockSampler::new(cfg.granularity, sess.info());
+    let to_remove_total = b_ref - b_target;
+    let mut out = BcdOutcome {
+        iterations: Vec::with_capacity(t_est),
+        snapshots: Vec::new(),
+        final_budget: b_ref,
+        wall_secs: 0.0,
+    };
+
+    let mut t = 0usize;
+    while st.budget() > b_target {
+        t += 1;
+        // Schedule-driven DRC; the last iteration may need fewer removals
+        // to land exactly on the target.
+        let drc = cfg
+            .drc_schedule
+            .drc_at(cfg.drc, cfg.drc_final, b_ref - st.budget(), to_remove_total)
+            .min(st.budget() - b_target);
+        // Params changed in the previous finetune: upload once per iteration.
+        let params = ev.upload_params(&st.params)?;
+        let base_acc = ev.accuracy(&params, st.mask.dense())?;
+
+        let ScanOutcome { chosen, evaluated, bounded, early_accept } = scan_trials(
+            &ev, &params, &st.mask, &sampler, drc, cfg.rt, cfg.adt, base_acc, &mut rng,
+        )?;
+        st.mask.apply_removal(&chosen.removed)?;
+
+        let ft = finetune(
+            sess,
+            st,
+            train_ds,
+            cfg.finetune_steps,
+            cfg.finetune_lr,
+            &mut ft_rng,
+        )?;
+
+        crate::info!(
+            "bcd t={t}: budget={} base={base_acc:.2}% dAcc={:+.2} trials={evaluated} ({bounded} bounded{}) ft_loss {:.3}->{:.3}",
+            st.budget(),
+            chosen.dacc,
+            if early_accept { ", early" } else { "" },
+            ft.first_loss,
+            ft.last_loss
+        );
+
+        out.iterations.push(IterRecord {
+            t,
+            budget_after: st.budget(),
+            base_acc,
+            chosen_dacc: chosen.dacc,
+            trials_evaluated: evaluated,
+            trials_bounded: bounded,
+            early_accept,
+            finetune: ft,
+        });
+        if snapshot_every > 0 && (t % snapshot_every == 0 || st.budget() == b_target) {
+            out.snapshots.push((st.budget(), st.mask.clone()));
+        }
+    }
+
+    debug_assert_eq!(st.budget(), b_target);
+    out.final_budget = st.budget();
+    out.wall_secs = wall0.elapsed().as_secs_f64();
+    Ok(out)
+}

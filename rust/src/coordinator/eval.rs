@@ -1,0 +1,111 @@
+//! Batched accuracy evaluation over a fixed batch set.
+//!
+//! The BCD inner loop evaluates O(T·RT) mask hypotheses; this is the L3 hot
+//! path. Two optimizations live here (§Perf, measured in EXPERIMENTS.md):
+//!
+//! 1. **Device-buffer caching** — the evaluation batches and the current
+//!    parameter vector are uploaded once per BCD iteration; each trial only
+//!    uploads its (small) mask vector.
+//! 2. **Early-exit bound** — while scanning trials for the argmin
+//!    degradation, a trial is aborted as soon as even 100%-correct remaining
+//!    batches could not beat the incumbent.
+
+use crate::data::Dataset;
+use crate::runtime::session::Session;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// A fixed, device-resident set of evaluation batches.
+pub struct Evaluator<'e, 's> {
+    sess: &'s Session<'e>,
+    batches: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    batch: usize,
+}
+
+impl<'e, 's> Evaluator<'e, 's> {
+    /// Build from the first `max_batches` deterministic contiguous batches
+    /// of `ds` (the paper evaluates trial ΔAcc on the *train* set; using a
+    /// fixed subset keeps trial comparisons consistent).
+    pub fn new(
+        sess: &'s Session<'e>,
+        ds: &Dataset,
+        max_batches: usize,
+    ) -> Result<Evaluator<'e, 's>> {
+        let batch = sess.batch;
+        let avail = ds.len().div_ceil(batch);
+        let n = max_batches.min(avail).max(1);
+        let mut batches = Vec::with_capacity(n);
+        for b in 0..n {
+            let (x, y) = ds.batch_at(b * batch, batch);
+            batches.push(sess.upload_batch(&x, &y)?);
+        }
+        Ok(Evaluator { sess, batches, batch })
+    }
+
+    /// Number of examples this evaluator scores.
+    pub fn num_examples(&self) -> usize {
+        self.batches.len() * self.batch
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Upload a parameter vector for reuse across many [`Self::accuracy`]
+    /// calls (one upload per BCD iteration, not per trial).
+    pub fn upload_params(&self, params: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.sess.engine.upload_f32(&params.data, &params.shape)
+    }
+
+    /// Accuracy [%] of (params, mask) on the cached batches.
+    pub fn accuracy(&self, params: &xla::PjRtBuffer, mask: &[f32]) -> Result<f64> {
+        Ok(self.accuracy_bounded(params, mask, 0.0)?.expect("bound 0 never cuts"))
+    }
+
+    /// Accuracy [%] with an early-exit bound: returns `None` as soon as the
+    /// trial provably cannot reach `min_acc` [%] even if every remaining
+    /// example were classified correctly.
+    pub fn accuracy_bounded(
+        &self,
+        params: &xla::PjRtBuffer,
+        mask: &[f32],
+        min_acc: f64,
+    ) -> Result<Option<f64>> {
+        let total = self.num_examples() as f64;
+        let need_correct = min_acc / 100.0 * total;
+        let mask_buf = self.sess.upload_f32(mask, &[mask.len()])?;
+        let mut correct = 0.0f64;
+        for (i, (x, y)) in self.batches.iter().enumerate() {
+            let out = self.sess.eval_batch_b(params, &mask_buf, x, y)?;
+            correct += out.correct as f64;
+            let remaining = (self.batches.len() - 1 - i) as f64 * self.batch as f64;
+            if correct + remaining < need_correct {
+                return Ok(None); // cannot beat the incumbent
+            }
+        }
+        Ok(Some(100.0 * correct / total))
+    }
+
+    /// Mean loss + accuracy [%] (used for reporting, not the trial loop).
+    pub fn loss_accuracy(&self, params: &xla::PjRtBuffer, mask: &[f32]) -> Result<(f64, f64)> {
+        let mask_buf = self.sess.upload_f32(mask, &[mask.len()])?;
+        let (mut correct, mut loss) = (0.0f64, 0.0f64);
+        for (x, y) in &self.batches {
+            let out = self.sess.eval_batch_b(params, &mask_buf, x, y)?;
+            correct += out.correct as f64;
+            loss += out.loss as f64;
+        }
+        Ok((
+            loss / self.batches.len() as f64,
+            100.0 * correct / self.num_examples() as f64,
+        ))
+    }
+}
+
+/// One-shot test-set accuracy [%] for a model state (builds a throwaway
+/// evaluator over the whole dataset).
+pub fn test_accuracy(sess: &Session, st: &crate::model::ModelState, ds: &Dataset) -> Result<f64> {
+    let ev = Evaluator::new(sess, ds, usize::MAX)?;
+    let params = ev.upload_params(&st.params)?;
+    ev.accuracy(&params, st.mask.dense())
+}

@@ -1,0 +1,89 @@
+//! Finetune controller: cosine-annealed SGD (Loshchilov & Hutter 2016).
+//!
+//! The paper finetunes after every BCD reduction with SGD + cosine
+//! annealing. L3 owns the schedule — the learning rate is computed here and
+//! fed to the compiled `train_step` as a scalar input.
+
+use crate::data::{Batcher, Dataset};
+use crate::model::ModelState;
+use crate::runtime::session::Session;
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+/// Cosine-annealed learning rate over `total` steps.
+pub fn cosine_lr(lr0: f32, step: usize, total: usize) -> f32 {
+    if total <= 1 {
+        return lr0;
+    }
+    let t = step as f32 / (total - 1) as f32;
+    lr0 * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+}
+
+/// Summary of one finetune run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FinetuneStats {
+    pub steps: usize,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    pub mean_acc: f64,
+}
+
+/// Run `steps` SGD steps with a fresh cosine schedule, updating `st`.
+pub fn finetune(
+    sess: &Session,
+    st: &mut ModelState,
+    ds: &Dataset,
+    steps: usize,
+    lr0: f32,
+    rng: &mut Rng,
+) -> Result<FinetuneStats> {
+    if steps == 0 {
+        return Ok(FinetuneStats::default());
+    }
+    st.reset_momentum(); // paper restarts the schedule per finetune run
+    let mut batcher = Batcher::new(ds, sess.batch, rng);
+    let mut stats = FinetuneStats { steps, ..Default::default() };
+    let mut correct_sum = 0.0f64;
+    for step in 0..steps {
+        let (x, y) = batcher.next_batch(rng);
+        let lr = cosine_lr(lr0, step, steps);
+        let out = sess.train_step(st, &x, &y, lr)?;
+        if step == 0 {
+            stats.first_loss = out.loss;
+        }
+        stats.last_loss = out.loss;
+        correct_sum += out.correct as f64;
+    }
+    stats.mean_acc = 100.0 * correct_sum / (steps * sess.batch) as f64;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_endpoints() {
+        assert!((cosine_lr(1.0, 0, 100) - 1.0).abs() < 1e-6);
+        assert!(cosine_lr(1.0, 99, 100) < 1e-6);
+        // midpoint = lr0 / 2
+        let mid = cosine_lr(2.0, 50, 101);
+        assert!((mid - 1.0).abs() < 1e-3, "mid {mid}");
+    }
+
+    #[test]
+    fn cosine_monotone_decreasing() {
+        let mut prev = f32::MAX;
+        for s in 0..50 {
+            let lr = cosine_lr(0.1, s, 50);
+            assert!(lr <= prev + 1e-9, "step {s}: {lr} > {prev}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn degenerate_single_step() {
+        assert_eq!(cosine_lr(0.5, 0, 1), 0.5);
+        assert_eq!(cosine_lr(0.5, 0, 0), 0.5);
+    }
+}

@@ -1,0 +1,20 @@
+//! The L3 coordinator — the paper's system contribution.
+//!
+//! - [`bcd`] — Block Coordinate Descent over binary ReLU masks
+//!   (Algorithm 2), the paper's optimizer.
+//! - [`trials`] — the random-trial scheduler inside one BCD iteration
+//!   (sampling, dedup, early-accept, argmin fallback).
+//! - [`eval`] — batched accuracy evaluation with device-buffer caching and
+//!   an early-exit bound (§Perf).
+//! - [`finetune`] — cosine-annealed SGD finetune controller (L3 owns the
+//!   schedule; L2 computes one step per call).
+//! - [`train`] — the baseline full-ReLU training loop.
+
+pub mod bcd;
+pub mod eval;
+pub mod finetune;
+pub mod train;
+pub mod trials;
+
+pub use bcd::{run_bcd, BcdOutcome};
+pub use eval::Evaluator;

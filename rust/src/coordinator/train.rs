@@ -1,0 +1,80 @@
+//! Baseline training loop: full-ReLU network, SGD-momentum with linear
+//! warmup + cosine decay. Produces the reference models every method
+//! (BCD, SNL, AutoReP, SENet, DeepReDuce) starts from.
+
+use crate::config::TrainConfig;
+use crate::coordinator::finetune::cosine_lr;
+use crate::data::{Batcher, Dataset};
+use crate::model::ModelState;
+use crate::runtime::session::Session;
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+/// Per-training-run summary.
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub final_train_acc: f64,
+}
+
+/// Warmup-then-cosine learning rate.
+pub fn warmup_cosine_lr(lr0: f32, step: usize, warmup: usize, total: usize) -> f32 {
+    if step < warmup {
+        lr0 * (step + 1) as f32 / warmup.max(1) as f32
+    } else {
+        cosine_lr(lr0, step - warmup, total.saturating_sub(warmup).max(1))
+    }
+}
+
+/// Train `st` in place for `cfg.steps` steps on `ds`.
+pub fn train(
+    sess: &Session,
+    st: &mut ModelState,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+) -> Result<TrainStats> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut batcher = Batcher::new(ds, sess.batch, &mut rng);
+    let mut stats = TrainStats { steps: cfg.steps, ..Default::default() };
+    let window = 20.min(cfg.steps.max(1));
+    let mut recent_correct = std::collections::VecDeque::with_capacity(window);
+    for step in 0..cfg.steps {
+        let (x, y) = batcher.next_batch(&mut rng);
+        let lr = warmup_cosine_lr(cfg.lr, step, cfg.warmup_steps, cfg.steps);
+        let out = sess.train_step(st, &x, &y, lr)?;
+        stats.losses.push(out.loss);
+        if recent_correct.len() == window {
+            recent_correct.pop_front();
+        }
+        recent_correct.push_back(out.correct as f64);
+        if step % 50 == 0 || step + 1 == cfg.steps {
+            crate::info!(
+                "train step {step}/{}: loss={:.4} lr={lr:.4}",
+                cfg.steps,
+                out.loss
+            );
+        }
+    }
+    stats.final_train_acc = 100.0 * recent_correct.iter().sum::<f64>()
+        / (recent_correct.len() * sess.batch).max(1) as f64;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let lr0 = 1.0;
+        assert!(warmup_cosine_lr(lr0, 0, 10, 100) < 0.2);
+        assert!((warmup_cosine_lr(lr0, 9, 10, 100) - 1.0).abs() < 1e-6);
+        assert!(warmup_cosine_lr(lr0, 99, 10, 100) < 0.01);
+    }
+
+    #[test]
+    fn no_warmup_is_pure_cosine() {
+        assert!((warmup_cosine_lr(0.5, 0, 0, 50) - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,230 @@
+//! The random-trial scheduler inside one BCD iteration (Algorithm 2,
+//! lines 7–20): sample DRC present ReLUs, score the hypothesis, early-accept
+//! under ADT, otherwise keep the argmin-degradation candidate.
+
+use crate::config::Granularity;
+use crate::coordinator::eval::Evaluator;
+use crate::model::Mask;
+use crate::runtime::manifest::ModelInfo;
+use crate::util::prng::Rng;
+use anyhow::Result;
+use std::collections::HashSet;
+
+/// Draws one DRC-sized removal hypothesis at the configured granularity.
+pub struct BlockSampler<'a> {
+    granularity: Granularity,
+    info: &'a ModelInfo,
+}
+
+impl<'a> BlockSampler<'a> {
+    pub fn new(granularity: Granularity, info: &'a ModelInfo) -> BlockSampler<'a> {
+        BlockSampler { granularity, info }
+    }
+
+    /// Sample exactly `drc` present ReLU indices to remove.
+    pub fn sample(&self, mask: &Mask, rng: &mut Rng, drc: usize) -> Vec<usize> {
+        match self.granularity {
+            Granularity::Pixel => mask.sample_present(rng, drc),
+            Granularity::Channel => self.sample_channels(mask, rng, drc),
+        }
+    }
+
+    /// Channel blocks: draw whole channels (H*W consecutive flat indices)
+    /// until `drc` ReLUs accumulate; the final channel is truncated to a
+    /// random subset so the hypothesis removes exactly `drc` (keeping the
+    /// exact-landing invariant of Algorithm 2).
+    fn sample_channels(&self, mask: &Mask, rng: &mut Rng, drc: usize) -> Vec<usize> {
+        // Channels that still hold present ReLUs, as (start, end) ranges.
+        let mut channels: Vec<(usize, usize)> = Vec::new();
+        for e in &self.info.mask_layers {
+            let (c, hw) = (e.shape[0], e.size / e.shape[0]);
+            for ci in 0..c {
+                let start = e.offset + ci * hw;
+                if (start..start + hw).any(|i| mask.is_present(i)) {
+                    channels.push((start, start + hw));
+                }
+            }
+        }
+        rng.shuffle(&mut channels);
+        let mut removed = Vec::with_capacity(drc);
+        for (start, end) in channels {
+            if removed.len() == drc {
+                break;
+            }
+            let mut present: Vec<usize> =
+                (start..end).filter(|&i| mask.is_present(i)).collect();
+            let need = drc - removed.len();
+            if present.len() > need {
+                rng.shuffle(&mut present);
+                present.truncate(need);
+            }
+            removed.extend(present);
+        }
+        assert_eq!(removed.len(), drc, "not enough present ReLUs for DRC={drc}");
+        removed
+    }
+}
+
+/// One scored mask hypothesis.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    /// Flat ReLU indices this hypothesis removes.
+    pub removed: Vec<usize>,
+    /// Proxy accuracy [%] with the hypothesis applied.
+    pub acc: f64,
+    /// Degradation vs. the iteration's base accuracy (percentage points).
+    pub dacc: f64,
+}
+
+/// Result of one iteration's trial scan.
+#[derive(Clone, Debug)]
+pub struct ScanOutcome {
+    pub chosen: Trial,
+    /// Trials actually evaluated (<= RT; early-accept can cut it short).
+    pub evaluated: usize,
+    /// Trials aborted early by the accuracy bound (§Perf).
+    pub bounded: usize,
+    /// Whether the chosen trial passed the ADT early-accept test.
+    pub early_accept: bool,
+}
+
+/// Scan up to `rt` random DRC-sized hypotheses of `mask` (never mutates it).
+///
+/// `base_acc` is the iteration's pre-removal proxy accuracy; `adt` the
+/// Accuracy Degradation Tolerance in percentage points. Duplicate draws are
+/// skipped without consuming a trial evaluation.
+#[allow(clippy::too_many_arguments)]
+pub fn scan_trials(
+    ev: &Evaluator,
+    params: &xla::PjRtBuffer,
+    mask: &Mask,
+    sampler: &BlockSampler,
+    drc: usize,
+    rt: usize,
+    adt: f64,
+    base_acc: f64,
+    rng: &mut Rng,
+) -> Result<ScanOutcome> {
+    assert!(drc <= mask.count(), "DRC {drc} > present ReLUs {}", mask.count());
+    let mut scratch: Vec<f32> = Vec::with_capacity(mask.size());
+    let mut seen: HashSet<Vec<usize>> = HashSet::new();
+    let mut best: Option<Trial> = None;
+    let mut evaluated = 0usize;
+    let mut bounded = 0usize;
+
+    for _ in 0..rt {
+        let mut removed = sampler.sample(mask, rng, drc);
+        removed.sort_unstable();
+        if !seen.insert(removed.clone()) {
+            continue; // duplicate draw: re-sample without burning an eval
+        }
+        mask.hypothesis_into(&removed, &mut scratch);
+
+        // Early-exit bound: the hypothesis only matters if it beats the
+        // incumbent argmin accuracy.
+        let floor = best.as_ref().map(|b| b.acc).unwrap_or(0.0);
+        evaluated += 1;
+        let acc = match ev.accuracy_bounded(params, &scratch, floor)? {
+            Some(a) => a,
+            None => {
+                bounded += 1;
+                continue;
+            }
+        };
+        let dacc = base_acc - acc;
+        let better = best.as_ref().map(|b| acc > b.acc).unwrap_or(true);
+        if better {
+            best = Some(Trial { removed, acc, dacc });
+        }
+        if dacc < adt {
+            // Algorithm 2 line 11: accept immediately under the tolerance.
+            return Ok(ScanOutcome {
+                chosen: best.expect("just set"),
+                evaluated,
+                bounded,
+                early_accept: true,
+            });
+        }
+    }
+    let chosen = best.expect("rt >= 1 and first trial always completes");
+    Ok(ScanOutcome { chosen, evaluated, bounded, early_accept: false })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{ModelInfo, PackEntry};
+
+    fn two_layer_info() -> ModelInfo {
+        // Layer 0: 4 channels of 2x2 (16); layer 1: 2 channels of 3x1 (6).
+        ModelInfo {
+            key: "t".into(),
+            backbone: "resnet".into(),
+            num_classes: 2,
+            image_size: 4,
+            channels: 3,
+            poly: false,
+            param_size: 1,
+            mask_size: 22,
+            mask_layers: vec![
+                PackEntry { name: "a".into(), shape: vec![4, 2, 2], offset: 0, size: 16 },
+                PackEntry { name: "b".into(), shape: vec![2, 3, 1], offset: 16, size: 6 },
+            ],
+            param_entries: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn pixel_sampler_draws_present_only() {
+        let info = two_layer_info();
+        let sampler = BlockSampler::new(Granularity::Pixel, &info);
+        let mut mask = Mask::full(22);
+        mask.remove(0).unwrap();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let s = sampler.sample(&mask, &mut rng, 5);
+            assert_eq!(s.len(), 5);
+            assert!(s.iter().all(|&i| mask.is_present(i)));
+        }
+    }
+
+    #[test]
+    fn channel_sampler_exact_count_and_block_structure() {
+        let info = two_layer_info();
+        let sampler = BlockSampler::new(Granularity::Channel, &info);
+        let mask = Mask::full(22);
+        let mut rng = Rng::new(2);
+        for drc in [1, 4, 7, 22] {
+            let s = sampler.sample(&mask, &mut rng, drc);
+            assert_eq!(s.len(), drc, "drc={drc}");
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), drc, "duplicates at drc={drc}");
+        }
+        // A full-channel draw (drc = multiple of channel size) covers whole
+        // channels: drc=8 on layer-0-only mask = exactly 2 channels.
+        let mut l0_only = Mask::full(22);
+        l0_only.remove_layer(&info, 1);
+        let s = sampler.sample(&l0_only, &mut rng, 8);
+        let mut chans: Vec<usize> = s.iter().map(|&i| i / 4).collect();
+        chans.sort_unstable();
+        chans.dedup();
+        assert_eq!(chans.len(), 2, "expected exactly 2 whole channels: {s:?}");
+    }
+
+    #[test]
+    fn channel_sampler_skips_empty_channels() {
+        let info = two_layer_info();
+        let sampler = BlockSampler::new(Granularity::Channel, &info);
+        let mut mask = Mask::full(22);
+        // Empty channel 0 of layer 0 (indices 0..4).
+        for i in 0..4 {
+            mask.remove(i).unwrap();
+        }
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let s = sampler.sample(&mask, &mut rng, 6);
+            assert!(s.iter().all(|&i| i >= 4), "sampled from empty channel: {s:?}");
+        }
+    }
+}

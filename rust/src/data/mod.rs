@@ -1,0 +1,155 @@
+//! Datasets: procedural SynthVision generators + batching.
+//!
+//! The paper evaluates on CIFAR-10/CIFAR-100/TinyImageNet; those downloads
+//! are unavailable offline, so `synth` builds class-conditional procedural
+//! image datasets with the same role (DESIGN.md §0/§3): classification
+//! tasks whose accuracy degrades smoothly as ReLUs are removed.
+
+pub mod synth;
+
+use crate::tensor::{Tensor, TensorI32};
+use crate::util::prng::Rng;
+
+/// An in-memory labelled image dataset (NCHW f32).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub num_classes: usize,
+    pub channels: usize,
+    pub image_size: usize,
+    /// Flattened images, `n * c * h * w`.
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    fn image_elems(&self) -> usize {
+        self.channels * self.image_size * self.image_size
+    }
+
+    /// Assemble a batch from explicit indices (wrapping copies allowed).
+    pub fn gather(&self, idxs: &[usize]) -> (Tensor, TensorI32) {
+        let ie = self.image_elems();
+        let mut xs = Vec::with_capacity(idxs.len() * ie);
+        let mut ys = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            xs.extend_from_slice(&self.images[i * ie..(i + 1) * ie]);
+            ys.push(self.labels[i]);
+        }
+        (
+            Tensor::new(
+                vec![idxs.len(), self.channels, self.image_size, self.image_size],
+                xs,
+            ),
+            TensorI32::new(vec![idxs.len()], ys),
+        )
+    }
+
+    /// Deterministic contiguous batch starting at `start`, wrapping around.
+    pub fn batch_at(&self, start: usize, batch: usize) -> (Tensor, TensorI32) {
+        let idxs: Vec<usize> = (0..batch).map(|i| (start + i) % self.len()).collect();
+        self.gather(&idxs)
+    }
+
+    /// Count of examples per class (sanity/test helper).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.num_classes];
+        for &y in &self.labels {
+            h[y as usize] += 1;
+        }
+        h
+    }
+}
+
+/// Epoch iterator over shuffled fixed-size batches (wrap-padded tail).
+pub struct Batcher<'a> {
+    ds: &'a Dataset,
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, rng: &mut Rng) -> Self {
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        rng.shuffle(&mut order);
+        Self { ds, order, pos: 0, batch }
+    }
+
+    /// Next batch; reshuffles and restarts when the epoch is exhausted.
+    pub fn next_batch(&mut self, rng: &mut Rng) -> (Tensor, TensorI32) {
+        if self.pos + self.batch > self.order.len() {
+            rng.shuffle(&mut self.order);
+            self.pos = 0;
+        }
+        let idxs = &self.order[self.pos..self.pos + self.batch];
+        self.pos += self.batch;
+        self.ds.gather(idxs)
+    }
+
+    /// Batches consumed so far in the current epoch.
+    pub fn epoch_pos(&self) -> usize {
+        self.pos / self.batch.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "t".into(),
+            num_classes: 2,
+            channels: 1,
+            image_size: 2,
+            images: (0..10 * 4).map(|i| i as f32).collect(),
+            labels: (0..10).map(|i| (i % 2) as i32).collect(),
+        }
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let ds = tiny();
+        let (x, y) = ds.gather(&[0, 3, 7]);
+        assert_eq!(x.shape, vec![3, 1, 2, 2]);
+        assert_eq!(y.data, vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn batch_wraps() {
+        let ds = tiny();
+        let (x, y) = ds.batch_at(8, 4);
+        assert_eq!(x.shape[0], 4);
+        assert_eq!(y.data, vec![0, 1, 0, 1]); // 8, 9, 0, 1
+    }
+
+    #[test]
+    fn batcher_covers_epoch() {
+        let ds = tiny();
+        let mut rng = Rng::new(0);
+        let mut b = Batcher::new(&ds, 5, &mut rng);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..2 {
+            let (x, _) = b.next_batch(&mut rng);
+            // Identify samples by their first pixel (unique per sample).
+            for i in 0..5 {
+                seen.insert(x.data[i * 4] as usize / 4);
+            }
+        }
+        assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    fn histogram() {
+        assert_eq!(tiny().class_histogram(), vec![5, 5]);
+    }
+}

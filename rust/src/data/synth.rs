@@ -1,0 +1,284 @@
+//! SynthVision: procedural class-conditional image datasets.
+//!
+//! Stand-ins for CIFAR-10 / CIFAR-100 / TinyImageNet (offline environment —
+//! DESIGN.md §0). Each class has a *signature* drawn deterministically from
+//! the dataset seed: a Gabor texture (orientation + frequency), one or two
+//! geometric sprites (shape, size, position prior) and an RGB color prior.
+//! Instances add pose/position jitter and pixel noise, so class evidence is
+//! carried by spatially-localized nonlinear features — exactly the regime
+//! where removing ReLUs hurts and where their placement matters (the paper's
+//! Figure 7 layer-distribution phenomenon).
+
+use super::Dataset;
+use crate::util::prng::Rng;
+
+/// Recipe for one SynthVision dataset.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: &'static str,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub seed: u64,
+    /// Instance pixel-noise stddev; higher = harder task.
+    pub noise: f32,
+}
+
+/// The three benchmark datasets (DESIGN.md §3).
+pub const SYNTH10: SynthSpec = SynthSpec {
+    name: "synth10",
+    num_classes: 10,
+    image_size: 16,
+    train_n: 4096,
+    test_n: 1024,
+    seed: 0x5EED_0010,
+    noise: 0.35,
+};
+
+pub const SYNTH100: SynthSpec = SynthSpec {
+    name: "synth100",
+    num_classes: 20,
+    image_size: 16,
+    train_n: 4096,
+    test_n: 1024,
+    seed: 0x5EED_0100,
+    noise: 0.40,
+};
+
+pub const SYNTHTINY: SynthSpec = SynthSpec {
+    name: "synthtiny",
+    num_classes: 20,
+    image_size: 32,
+    train_n: 2048,
+    test_n: 512,
+    seed: 0x5EED_1111,
+    noise: 0.45,
+};
+
+pub fn by_name(name: &str) -> Option<&'static SynthSpec> {
+    match name {
+        "synth10" => Some(&SYNTH10),
+        "synth100" => Some(&SYNTH100),
+        "synthtiny" => Some(&SYNTHTINY),
+        _ => None,
+    }
+}
+
+/// Per-class generative signature.
+#[derive(Clone, Debug)]
+struct ClassSig {
+    gabor_theta: f32,
+    gabor_freq: f32,
+    gabor_amp: f32,
+    color: [f32; 3],
+    sprites: Vec<SpriteSig>,
+}
+
+#[derive(Clone, Debug)]
+struct SpriteSig {
+    kind: u8, // 0 square, 1 disc, 2 cross, 3 ring
+    cx: f32,  // position prior in [0,1]
+    cy: f32,
+    radius: f32, // fraction of image size
+    polarity: f32,
+}
+
+fn class_signature(rng: &mut Rng, class: usize, num_classes: usize) -> ClassSig {
+    // Orientation is evenly spread over classes with per-class jitter so
+    // texture alone separates classes only partially — sprites are needed
+    // for full separation, making the task genuinely compositional.
+    let base_theta = std::f32::consts::PI * class as f32 / num_classes as f32;
+    let n_sprites = 1 + (class % 2);
+    let sprites = (0..n_sprites)
+        .map(|_| SpriteSig {
+            kind: (rng.below(4)) as u8,
+            cx: rng.range_f32(0.2, 0.8),
+            cy: rng.range_f32(0.2, 0.8),
+            radius: rng.range_f32(0.12, 0.28),
+            polarity: if rng.f32() < 0.5 { 1.0 } else { -1.0 },
+        })
+        .collect();
+    ClassSig {
+        gabor_theta: base_theta + rng.range_f32(-0.1, 0.1),
+        gabor_freq: rng.range_f32(1.5, 4.0),
+        gabor_amp: rng.range_f32(0.5, 0.9),
+        color: [rng.range_f32(-1.0, 1.0), rng.range_f32(-1.0, 1.0), rng.range_f32(-1.0, 1.0)],
+        sprites,
+    }
+}
+
+/// Render one instance of `sig` into `out` (3 x s x s, row-major).
+fn render(
+    sig: &ClassSig,
+    s: usize,
+    rng: &mut Rng,
+    noise: f32,
+    out: &mut [f32],
+) {
+    let sf = s as f32;
+    // Instance jitter: texture phase, sprite offsets, global brightness.
+    let phase = rng.range_f32(0.0, std::f32::consts::TAU);
+    let theta = sig.gabor_theta + rng.range_f32(-0.15, 0.15);
+    let (sin_t, cos_t) = theta.sin_cos();
+    let bright = rng.range_f32(0.8, 1.2);
+    let jitter: Vec<(f32, f32)> = sig
+        .sprites
+        .iter()
+        .map(|_| (rng.range_f32(-0.08, 0.08), rng.range_f32(-0.08, 0.08)))
+        .collect();
+
+    for y in 0..s {
+        for x in 0..s {
+            let u = x as f32 / sf;
+            let v = y as f32 / sf;
+            // Oriented Gabor-ish carrier.
+            let t = (u * cos_t + v * sin_t) * sig.gabor_freq * std::f32::consts::TAU + phase;
+            let tex = sig.gabor_amp * t.sin();
+            // Sprites: additive bumps with crisp (nonlinear) edges.
+            let mut sprite_v = 0.0f32;
+            for (sp, &(jx, jy)) in sig.sprites.iter().zip(&jitter) {
+                let dx = u - (sp.cx + jx);
+                let dy = v - (sp.cy + jy);
+                let r = sp.radius;
+                let inside = match sp.kind {
+                    0 => dx.abs() < r && dy.abs() < r,
+                    1 => dx * dx + dy * dy < r * r,
+                    2 => dx.abs() < r * 0.35 || dy.abs() < r * 0.35,
+                    _ => {
+                        let d2 = dx * dx + dy * dy;
+                        d2 < r * r && d2 > (r * 0.55) * (r * 0.55)
+                    }
+                };
+                if inside {
+                    sprite_v += sp.polarity;
+                }
+            }
+            let base = (tex + 1.5 * sprite_v) * bright;
+            for c in 0..3 {
+                let val = base * (1.0 + 0.5 * sig.color[c]) + 0.3 * sig.color[c]
+                    + noise * rng.normal();
+                out[c * s * s + y * s + x] = val.clamp(-3.0, 3.0);
+            }
+        }
+    }
+}
+
+/// Generate the (train, test) pair for a spec. Deterministic in the seed;
+/// train and test draw from the same class signatures but disjoint RNG
+/// streams (true held-out instances).
+pub fn generate(spec: &SynthSpec) -> (Dataset, Dataset) {
+    let mut root = Rng::new(spec.seed);
+    let mut sig_rng = root.fork(1);
+    let sigs: Vec<ClassSig> = (0..spec.num_classes)
+        .map(|c| class_signature(&mut sig_rng, c, spec.num_classes))
+        .collect();
+
+    let make = |n: usize, rng: &mut Rng| -> Dataset {
+        let s = spec.image_size;
+        let ie = 3 * s * s;
+        let mut images = vec![0.0f32; n * ie];
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % spec.num_classes; // balanced by construction
+            render(
+                &sigs[class],
+                s,
+                rng,
+                spec.noise,
+                &mut images[i * ie..(i + 1) * ie],
+            );
+            labels.push(class as i32);
+        }
+        Dataset {
+            name: spec.name.to_string(),
+            num_classes: spec.num_classes,
+            channels: 3,
+            image_size: s,
+            images,
+            labels,
+        }
+    };
+
+    let mut train_rng = root.fork(2);
+    let mut test_rng = root.fork(3);
+    (make(spec.train_n, &mut train_rng), make(spec.test_n, &mut test_rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let (a, _) = generate(&SynthSpec { train_n: 32, test_n: 8, ..SYNTH10 });
+        let (b, _) = generate(&SynthSpec { train_n: 32, test_n: 8, ..SYNTH10 });
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let (tr, te) = generate(&SynthSpec { train_n: 100, test_n: 40, ..SYNTH10 });
+        assert!(tr.class_histogram().iter().all(|&c| c == 10));
+        assert!(te.class_histogram().iter().all(|&c| c == 4));
+    }
+
+    #[test]
+    fn train_test_disjoint_instances() {
+        let (tr, te) = generate(&SynthSpec { train_n: 10, test_n: 10, ..SYNTH10 });
+        // Same class signatures, different instances: image 0 of each split
+        // has the same label but different pixels.
+        assert_eq!(tr.labels[0], te.labels[0]);
+        assert_ne!(tr.images[..768], te.images[..768]);
+    }
+
+    #[test]
+    fn values_bounded() {
+        let (tr, _) = generate(&SynthSpec { train_n: 16, test_n: 4, ..SYNTHTINY });
+        assert!(tr.images.iter().all(|v| v.abs() <= 3.0));
+    }
+
+    #[test]
+    fn classes_statistically_distinct() {
+        // Mean image of class 0 differs from class 1 well beyond noise.
+        let (tr, _) = generate(&SynthSpec { train_n: 512, test_n: 8, ..SYNTH10 });
+        let ie = 3 * 16 * 16;
+        let mut m0 = vec![0.0f64; ie];
+        let mut m1 = vec![0.0f64; ie];
+        let (mut n0, mut n1) = (0, 0);
+        for i in 0..tr.len() {
+            let img = &tr.images[i * ie..(i + 1) * ie];
+            match tr.labels[i] {
+                0 => {
+                    for (a, &b) in m0.iter_mut().zip(img) {
+                        *a += b as f64;
+                    }
+                    n0 += 1;
+                }
+                1 => {
+                    for (a, &b) in m1.iter_mut().zip(img) {
+                        *a += b as f64;
+                    }
+                    n1 += 1;
+                }
+                _ => {}
+            }
+        }
+        let dist: f64 = m0
+            .iter()
+            .zip(&m1)
+            .map(|(a, b)| (a / n0 as f64 - b / n1 as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist > 1.0, "class means too close: {dist}");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("synth10").is_some());
+        assert!(by_name("synth100").is_some());
+        assert!(by_name("synthtiny").is_some());
+        assert!(by_name("cifar10").is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! # CDNL — Coordinate Descent for Network Linearization
+//!
+//! Production reproduction of "Coordinate Descent for Network Linearization"
+//! (Rakhlin, Jevnisek, Avidan; AAAI 2025): Block Coordinate Descent over
+//! binary ReLU masks for efficient Private Inference, plus every baseline
+//! the paper compares against (SNL, AutoReP, SENet, DeepReDuce).
+//!
+//! Three-layer architecture (DESIGN.md):
+//! - **L3 (this crate)** — the rust coordinator: BCD optimizer, baselines,
+//!   PI cost model, experiment launcher, metrics. Owns the event loop.
+//! - **L2** — JAX model (`python/compile/model.py`), lowered once to HLO
+//!   text by `make artifacts`; Python never runs on the request path.
+//! - **L1** — Pallas masked-activation kernels (`python/compile/kernels/`),
+//!   correctness-checked against a pure-jnp oracle.
+//!
+//! The [`runtime`] module bridges L3 to the AOT artifacts via the `xla`
+//! crate's PJRT CPU client.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod methods;
+pub mod model;
+pub mod picost;
+pub mod pipeline;
+pub mod protosim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use config::Experiment;
+pub use runtime::engine::Engine;

@@ -1,0 +1,335 @@
+//! `cdnl` — the CDNL experiment launcher.
+//!
+//! Subcommands:
+//!   info         manifest summary: models, ReLU counts (Table 1), artifacts
+//!   train        train a full-ReLU baseline and checkpoint it
+//!   snl          SNL linearization down to --budget
+//!   bcd          Block Coordinate Descent down to --budget (the paper)
+//!   autorep      AutoReP polynomial replacement down to --budget
+//!   senet        SENet sensitivity allocation + KD down to --budget
+//!   deepreduce   DeepReDuce layer dropping down to --budget
+//!   eval         evaluate a checkpoint on its dataset's test split
+//!   picost       PI online-cost estimate of a checkpoint (LAN + WAN)
+//!
+//! Shared flags: --dataset synth10|synth100|synthtiny  --backbone resnet|wrn
+//! --poly  --preset quick|full  --set k=v[,k=v...]  --artifacts DIR
+//! --out DIR  --ckpt FILE  --ref-budget N  --budget N  --verbose
+//!
+//! Examples:
+//!   cdnl train --dataset synth10
+//!   cdnl bcd --dataset synth10 --budget 1000 --ref-budget 2000
+//!   cdnl picost --ckpt results/resnet_16x16_c10__synth10_bcd_b1000.cdnl
+
+use anyhow::{anyhow, bail, Context, Result};
+use cdnl::config::{preset, reference_budget, Experiment};
+use cdnl::coordinator::bcd::run_bcd;
+use cdnl::coordinator::eval::test_accuracy;
+use cdnl::methods::autorep::{run_autorep, AutorepConfig};
+use cdnl::methods::deepreduce::{run_deepreduce, DeepReduceConfig};
+use cdnl::methods::senet::{run_senet, SenetConfig};
+use cdnl::methods::snl::run_snl;
+use cdnl::model::ModelState;
+use cdnl::pipeline::Pipeline;
+use cdnl::runtime::engine::Engine;
+use cdnl::util::cli::Args;
+use cdnl::util::{fmt_relu_count, logging};
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "usage: cdnl <info|train|snl|bcd|autorep|senet|deepreduce|eval|picost> [flags]
+  see rust/src/main.rs header or README.md for flag documentation";
+
+fn main() {
+    logging::init();
+    if let Err(e) = run() {
+        eprintln!("cdnl: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_experiment(args: &Args) -> Result<Experiment> {
+    let mut exp = Experiment::default();
+    if let Some(p) = args.get("preset") {
+        let kv = preset(p).ok_or_else(|| anyhow!("unknown preset {p:?}"))?;
+        for (k, v) in kv {
+            exp.apply(&k, &v).map_err(|e| anyhow!(e))?;
+        }
+    }
+    if let Some(f) = args.get("config") {
+        let text = std::fs::read_to_string(f).with_context(|| format!("reading {f}"))?;
+        exp.apply_file(&text).map_err(|e| anyhow!(e))?;
+    }
+    exp.apply_args(args).map_err(|e| anyhow!(e))?;
+    if let Some(a) = args.get("artifacts") {
+        exp.artifacts_dir = a.to_string();
+    }
+    if let Some(o) = args.get("out") {
+        exp.out_dir = o.to_string();
+    }
+    Ok(exp)
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_env(&["poly", "verbose", "stats", "quiet", "simulate"])
+        .map_err(|e| anyhow!(e))?;
+    if args.has("verbose") {
+        logging::set_level(logging::Level::Debug);
+    }
+    if args.has("quiet") {
+        logging::set_level(logging::Level::Error);
+    }
+    let sub = args.subcommand.clone().ok_or_else(|| anyhow!(USAGE))?;
+    let exp = build_experiment(&args)?;
+    let engine = Engine::new(Path::new(&exp.artifacts_dir))?;
+
+    match sub.as_str() {
+        "info" => cmd_info(&engine, &args),
+        "train" => cmd_train(&engine, exp),
+        "eval" => cmd_eval(&engine, exp, &args),
+        "picost" => cmd_picost(&engine, exp, &args),
+        "snl" | "bcd" | "autorep" | "senet" | "deepreduce" => {
+            cmd_method(&sub, &engine, exp, &args)
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+/// `cdnl info`: manifest summary — the runtime's view of Table 1.
+fn cmd_info(engine: &Engine, args: &Args) -> Result<()> {
+    let mut rows = Vec::new();
+    for (key, m) in &engine.manifest.models {
+        rows.push(vec![
+            key.clone(),
+            m.backbone.clone(),
+            format!("{}x{}", m.image_size, m.image_size),
+            m.num_classes.to_string(),
+            if m.poly { "poly" } else { "identity" }.to_string(),
+            m.param_size.to_string(),
+            fmt_relu_count(m.mask_size),
+            m.mask_layers.len().to_string(),
+            m.artifacts.len().to_string(),
+        ]);
+    }
+    cdnl::metrics::print_table(
+        "Artifact manifest (paper Table 1 analog: total ReLUs per variant)",
+        &["model", "backbone", "input", "classes", "repl", "params", "ReLUs", "layers", "fns"],
+        &rows,
+    );
+    if args.has("stats") {
+        println!("\n{}", engine.stats_table());
+    }
+    Ok(())
+}
+
+/// `cdnl train`: full-ReLU baseline (cached in the zoo) + test accuracy.
+fn cmd_train(engine: &Engine, exp: Experiment) -> Result<()> {
+    let pl = Pipeline::new(engine, exp)?;
+    let st = pl.baseline()?;
+    let acc = pl.test_acc(&st)?;
+    println!(
+        "baseline {}: budget={} test_acc={acc:.2}%",
+        pl.sess.key,
+        fmt_relu_count(st.budget())
+    );
+    Ok(())
+}
+
+/// Resolve the starting state for a method run: --ckpt wins, else the SNL
+/// (or AutoReP for poly) reference at --ref-budget, else the baseline.
+fn starting_state(pl: &Pipeline, args: &Args) -> Result<ModelState> {
+    if let Some(ck) = args.get("ckpt") {
+        return ModelState::load(Path::new(ck), pl.sess.info());
+    }
+    if let Some(bref) = args.get("ref-budget") {
+        let bref: usize = bref.parse().map_err(|_| anyhow!("--ref-budget: bad value"))?;
+        return if pl.sess.info().poly {
+            pl.autorep_ref(bref)
+        } else {
+            pl.snl_ref(bref)
+        };
+    }
+    pl.baseline()
+}
+
+/// Shared driver for the five reduction methods.
+fn cmd_method(method: &str, engine: &Engine, exp: Experiment, args: &Args) -> Result<()> {
+    let budget = args
+        .get("budget")
+        .ok_or_else(|| anyhow!("--budget is required for {method}"))?
+        .parse::<usize>()
+        .map_err(|_| anyhow!("--budget: bad value"))?;
+    let pl = Pipeline::new(engine, exp)?;
+    let mut st = if method == "bcd" && args.get("ckpt").is_none() && args.get("ref-budget").is_none()
+    {
+        // Paper protocol: BCD starts from an SNL reference (Table 4 rule).
+        let total = pl.sess.info().total_relus();
+        let bref = reference_budget(total, budget);
+        if pl.sess.info().poly {
+            pl.autorep_ref(bref)?
+        } else {
+            pl.snl_ref(bref)?
+        }
+    } else {
+        starting_state(&pl, args)?
+    };
+    let before_acc = pl.test_acc(&st)?;
+    let b0 = st.budget();
+
+    let t0 = std::time::Instant::now();
+    match method {
+        "bcd" => {
+            let out = run_bcd(&pl.sess, &mut st, &pl.train_ds, budget, &pl.exp.bcd, 0)?;
+            println!(
+                "bcd: {} iterations, {} trials total ({} bounded early)",
+                out.iterations.len(),
+                out.total_trials(),
+                out.iterations.iter().map(|r| r.trials_bounded).sum::<usize>()
+            );
+        }
+        "snl" => {
+            let out = run_snl(&pl.sess, &mut st, &pl.train_ds, budget, &pl.exp.snl, 0)?;
+            println!(
+                "snl: {} steps, {} lambda updates",
+                out.steps_run,
+                out.kappa_updates.len()
+            );
+        }
+        "autorep" => {
+            let cfg = AutorepConfig { base: pl.exp.snl.clone(), ..Default::default() };
+            let out = run_autorep(&pl.sess, &mut st, &pl.train_ds, budget, &cfg)?;
+            println!("autorep: {} steps", out.steps_run);
+        }
+        "senet" => {
+            let cfg = SenetConfig::default();
+            let out = run_senet(&pl.sess, &mut st, &pl.train_ds, budget, &cfg)?;
+            println!(
+                "senet: kd loss {:.3} -> {:.3}",
+                out.kd_first_loss, out.kd_last_loss
+            );
+        }
+        "deepreduce" => {
+            let cfg = DeepReduceConfig::default();
+            let out = run_deepreduce(&pl.sess, &mut st, &pl.train_ds, budget, &cfg)?;
+            println!(
+                "deepreduce: dropped layers {:?}, partial {:?}",
+                out.dropped_layers, out.partial_layer
+            );
+        }
+        _ => unreachable!(),
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let after_acc = pl.test_acc(&st)?;
+    println!(
+        "{method} {}: {} -> {} ReLUs  test_acc {before_acc:.2}% -> {after_acc:.2}%  ({secs:.1}s)",
+        pl.sess.key,
+        fmt_relu_count(b0),
+        fmt_relu_count(st.budget()),
+    );
+
+    let out_path = args
+        .get("save")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            PathBuf::from(&pl.exp.out_dir).join(format!(
+                "{}__{}_{}_b{}.cdnl",
+                pl.sess.key, pl.exp.dataset, method, budget
+            ))
+        });
+    st.save(&out_path)?;
+    println!("saved {}", out_path.display());
+    if args.has("stats") {
+        println!("\n{}", engine.stats_table());
+    }
+    Ok(())
+}
+
+/// `cdnl eval`: test accuracy + per-layer ReLU distribution of a checkpoint.
+fn cmd_eval(engine: &Engine, exp: Experiment, args: &Args) -> Result<()> {
+    let pl = Pipeline::new(engine, exp)?;
+    let st = starting_state(&pl, args)?;
+    let acc = test_accuracy(&pl.sess, &st, &pl.test_ds)?;
+    println!(
+        "{}: budget={} ({} of {} ReLUs) test_acc={acc:.2}%",
+        pl.sess.key,
+        fmt_relu_count(st.budget()),
+        st.budget(),
+        pl.sess.info().total_relus()
+    );
+    let hist = st.mask.layer_histogram(pl.sess.info());
+    let rows: Vec<Vec<String>> = pl
+        .sess
+        .info()
+        .mask_layers
+        .iter()
+        .zip(&hist)
+        .enumerate()
+        .map(|(l, (e, &h))| {
+            vec![
+                l.to_string(),
+                e.name.clone(),
+                format!("{:?}", e.shape),
+                h.to_string(),
+                e.size.to_string(),
+                format!("{:.1}%", 100.0 * h as f64 / e.size as f64),
+            ]
+        })
+        .collect();
+    cdnl::metrics::print_table(
+        "ReLU distribution across layers (paper Fig. 7)",
+        &["#", "layer", "shape", "kept", "total", "kept%"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// `cdnl picost`: PI online-cost estimate under LAN and WAN protocols.
+fn cmd_picost(engine: &Engine, exp: Experiment, args: &Args) -> Result<()> {
+    let pl = Pipeline::new(engine, exp)?;
+    let st = starting_state(&pl, args)?;
+    let info = pl.sess.info();
+    let mut rows = Vec::new();
+    for proto in [cdnl::picost::lan(), cdnl::picost::wan()] {
+        let r = cdnl::picost::estimate_state(info, &st.mask, &proto);
+        rows.push(vec![
+            r.protocol.to_string(),
+            fmt_relu_count(r.relus),
+            format!("{:.1}", r.online_bytes / 1e6),
+            format!("{:.1}", 1e3 * r.relu_secs),
+            format!("{:.1}", 1e3 * r.linear_secs),
+            format!("{:.1}", 1e3 * r.round_secs),
+            format!("{:.1}", 1e3 * r.total_secs),
+        ]);
+    }
+    cdnl::metrics::print_table(
+        &format!(
+            "Estimated PI online cost for {} at {} ReLUs (constants per DELPHI; estimates)",
+            pl.sess.key,
+            fmt_relu_count(st.budget())
+        ),
+        &["protocol", "ReLUs", "comm[MB]", "relu[ms]", "linear[ms]", "rounds[ms]", "total[ms]"],
+        &rows,
+    );
+
+    if args.has("simulate") {
+        // Protocol-level walk: per-message trace + analytic cross-check.
+        let mut rows = Vec::new();
+        for proto in [cdnl::picost::lan(), cdnl::picost::wan()] {
+            let tr = cdnl::protosim::simulate(info, &st.mask, &proto);
+            let (analytic, simulated) = cdnl::protosim::compare(info, &st.mask, &proto);
+            rows.push(vec![
+                proto.name.to_string(),
+                tr.messages.len().to_string(),
+                tr.rounds.to_string(),
+                format!("{:.2}", tr.gc_bytes as f64 / 1e6),
+                format!("{:.3}", tr.share_bytes as f64 / 1e6),
+                format!("{:.1}", 1e3 * simulated),
+                format!("{:.1}", 1e3 * analytic),
+            ]);
+        }
+        cdnl::metrics::print_table(
+            "Simulated DELPHI-style online phase (protosim) vs analytic model",
+            &["protocol", "msgs", "rounds", "gc[MB]", "shares[MB]", "sim[ms]", "analytic[ms]"],
+            &rows,
+        );
+    }
+    Ok(())
+}

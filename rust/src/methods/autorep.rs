@@ -1,0 +1,178 @@
+//! AutoReP (Peng et al. 2023): replace selected ReLUs with learnable
+//! quadratic polynomials instead of the identity.
+//!
+//! Two differences from SNL: (1) the replacement function — this method
+//! runs on the `*_poly` model variants whose masked activation computes
+//! `m·ReLU(x) + (1−m)·(c₂x² + c₁x + c₀)` with learnable per-layer
+//! coefficients (the L1 `masked_poly` Pallas kernel); (2) the indicator is
+//! stabilized by a **hysteresis loop**: a ReLU's binary state only flips
+//! when its score crosses `threshold ± hysteresis/2`, which damps the
+//! oscillation the paper's Discussion section attributes to plain SGD
+//! indicators.
+
+use crate::config::SnlConfig;
+use crate::coordinator::finetune::finetune;
+use crate::data::{Batcher, Dataset};
+use crate::methods::top_k_mask;
+use crate::model::ModelState;
+use crate::runtime::session::Session;
+use crate::util::prng::Rng;
+use anyhow::{bail, Result};
+
+/// AutoReP-specific knobs on top of the shared selective config.
+#[derive(Clone, Debug)]
+pub struct AutorepConfig {
+    pub base: SnlConfig,
+    /// Full hysteresis band width around the threshold.
+    pub hysteresis: f32,
+}
+
+impl Default for AutorepConfig {
+    fn default() -> Self {
+        AutorepConfig { base: SnlConfig::default(), hysteresis: 0.2 }
+    }
+}
+
+/// Trace of one AutoReP run.
+#[derive(Clone, Debug, Default)]
+pub struct AutorepOutcome {
+    pub steps_run: usize,
+    pub budget_trace: Vec<(usize, usize)>,
+    /// Indicator flips per check — the stability metric hysteresis improves.
+    pub flips_trace: Vec<(usize, usize)>,
+    pub kappa_updates: Vec<usize>,
+    pub final_budget: usize,
+}
+
+/// Run AutoReP on `st` (which must belong to a `*_poly` model variant)
+/// down to `b_target` ReLUs.
+pub fn run_autorep(
+    sess: &Session,
+    st: &mut ModelState,
+    ds: &Dataset,
+    b_target: usize,
+    cfg: &AutorepConfig,
+) -> Result<AutorepOutcome> {
+    if !sess.info().poly {
+        bail!("AutoReP requires a *_poly model variant, got {}", sess.key);
+    }
+    if b_target >= st.budget() {
+        bail!("AutoReP: target {b_target} >= current budget {}", st.budget());
+    }
+    let base = &cfg.base;
+    let mut rng = Rng::new(base.seed);
+    let mut batcher = Batcher::new(ds, sess.batch, &mut rng);
+
+    let mut alphas = st.mask.to_tensor();
+    // The hysteresis indicator state starts at the current binary mask.
+    let mut indicator: Vec<bool> = st.mask.dense().iter().map(|&v| v > 0.5).collect();
+    let (t_lo, t_hi) = (
+        base.threshold - cfg.hysteresis / 2.0,
+        base.threshold + cfg.hysteresis / 2.0,
+    );
+
+    let mut lam = base.lambda0;
+    let mut out = AutorepOutcome::default();
+    let mut last_budget = usize::MAX;
+    let mut stalled = 0usize;
+
+    for step in 0..base.max_steps {
+        let (x, y) = batcher.next_batch(&mut rng);
+        // The same selective step; the poly replacement lives inside the
+        // compiled graph (alphas gate ReLU vs learnable quadratic).
+        sess.snl_step(
+            &mut st.params,
+            &mut st.mom,
+            &mut alphas,
+            &x,
+            &y,
+            base.lr,
+            base.alpha_lr,
+            lam,
+        )?;
+        out.steps_run = step + 1;
+
+        if (step + 1) % base.steps_per_check != 0 {
+            continue;
+        }
+        // Hysteresis update: flip only on band exit.
+        let mut flips = 0usize;
+        for (i, ind) in indicator.iter_mut().enumerate() {
+            let a = alphas.data[i];
+            let next = if *ind { a >= t_lo } else { a > t_hi };
+            if next != *ind {
+                flips += 1;
+                *ind = next;
+            }
+        }
+        let budget = indicator.iter().filter(|&&b| b).count();
+        out.budget_trace.push((step + 1, budget));
+        out.flips_trace.push((step + 1, flips));
+        crate::debug!(
+            "autorep step {}: budget={budget} flips={flips} lam={lam:.2e}",
+            step + 1
+        );
+
+        if budget <= b_target {
+            break;
+        }
+        if budget >= last_budget {
+            stalled += 1;
+            if stalled >= base.stall_patience {
+                lam *= base.kappa;
+                out.kappa_updates.push(step + 1);
+                stalled = 0;
+            }
+        } else {
+            stalled = 0;
+        }
+        last_budget = budget;
+    }
+
+    // Final selection honors the hysteresis indicator where it is decisive
+    // and breaks ties by alpha magnitude — exactly b_target ReLUs survive.
+    let scores: Vec<f32> = alphas
+        .data
+        .iter()
+        .zip(&indicator)
+        .map(|(&a, &ind)| if ind { 1.0 + a } else { a })
+        .collect();
+    st.mask = top_k_mask(&scores, b_target);
+    out.final_budget = st.mask.count();
+
+    let mut ft_rng = rng.fork(0xA9E9);
+    finetune(sess, st, ds, base.finetune_steps, base.finetune_lr, &mut ft_rng)?;
+    Ok(out)
+}
+
+/// Count indicator flips a plain (hysteresis-free) threshold would produce
+/// on the same alpha trace — the ablation quantifying what hysteresis buys.
+pub fn flips_without_hysteresis(alpha_checks: &[Vec<f32>], threshold: f32) -> usize {
+    let mut flips = 0;
+    for w in alpha_checks.windows(2) {
+        flips += w[0]
+            .iter()
+            .zip(&w[1])
+            .filter(|(&a, &b)| (a >= threshold) != (b >= threshold))
+            .count();
+    }
+    flips
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_threshold_flip_count() {
+        let checks = vec![vec![0.4, 0.6], vec![0.6, 0.4], vec![0.4, 0.6]];
+        // Both entries flip at both transitions.
+        assert_eq!(flips_without_hysteresis(&checks, 0.5), 4);
+    }
+
+    #[test]
+    fn default_config_band_is_sane() {
+        let c = AutorepConfig::default();
+        assert!(c.hysteresis > 0.0 && c.hysteresis < 1.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! DeepReDuce (Jha et al. 2021): manual, layer-granularity ReLU reduction.
+//!
+//! The original characterizes ReLU criticality per stage and drops whole
+//! ReLU layers in increasing order of importance, finetuning after. We
+//! drive the drop order by measured layer sensitivity (shared with SENet)
+//! instead of hand analysis — the same coarse-granularity policy, made
+//! reproducible. The final layer is partially dropped to land exactly on
+//! the budget.
+
+use crate::coordinator::eval::Evaluator;
+use crate::coordinator::finetune::finetune;
+use crate::data::Dataset;
+use crate::methods::layer_sensitivity;
+use crate::model::ModelState;
+use crate::runtime::session::Session;
+use crate::util::prng::Rng;
+use anyhow::{bail, Result};
+
+/// DeepReDuce hyperparameters.
+#[derive(Clone, Debug)]
+pub struct DeepReduceConfig {
+    pub proxy_batches: usize,
+    pub finetune_steps: usize,
+    pub finetune_lr: f32,
+    pub seed: u64,
+}
+
+impl Default for DeepReduceConfig {
+    fn default() -> Self {
+        DeepReduceConfig {
+            proxy_batches: 2,
+            finetune_steps: 60,
+            finetune_lr: 5e-3,
+            seed: 0xDEE9,
+        }
+    }
+}
+
+/// Outcome of one DeepReDuce run.
+#[derive(Clone, Debug, Default)]
+pub struct DeepReduceOutcome {
+    /// Layers fully linearized, in drop order.
+    pub dropped_layers: Vec<usize>,
+    /// Layer partially dropped to hit the budget exactly (if any).
+    pub partial_layer: Option<usize>,
+}
+
+/// Run DeepReDuce on `st` down to `b_target` ReLUs, mutating it.
+pub fn run_deepreduce(
+    sess: &Session,
+    st: &mut ModelState,
+    ds: &Dataset,
+    b_target: usize,
+    cfg: &DeepReduceConfig,
+) -> Result<DeepReduceOutcome> {
+    if b_target >= st.budget() {
+        bail!("DeepReDuce: target {b_target} >= current budget {}", st.budget());
+    }
+    let info = sess.info();
+    let mut rng = Rng::new(cfg.seed);
+    let ev = Evaluator::new(sess, ds, cfg.proxy_batches)?;
+    let sens = layer_sensitivity(sess, &ev, st)?;
+
+    // Drop whole layers, least sensitive first.
+    let mut order: Vec<usize> = (0..info.mask_layers.len()).collect();
+    order.sort_by(|&a, &b| sens[a].partial_cmp(&sens[b]).unwrap());
+
+    let mut out = DeepReduceOutcome::default();
+    for l in order {
+        if st.budget() <= b_target {
+            break;
+        }
+        let layer_present: usize = {
+            let e = &info.mask_layers[l];
+            (e.offset..e.offset + e.size).filter(|&i| st.mask.is_present(i)).count()
+        };
+        if layer_present == 0 {
+            continue;
+        }
+        if st.budget() - layer_present >= b_target {
+            st.mask.remove_layer(info, l);
+            out.dropped_layers.push(l);
+        } else {
+            // Partial drop: remove a random subset of this layer to land
+            // exactly on the budget (the paper's finest manual granularity
+            // is channel/layer; random within-layer is the neutral choice).
+            let excess = st.budget() - b_target;
+            let e = &info.mask_layers[l];
+            let present: Vec<usize> = (e.offset..e.offset + e.size)
+                .filter(|&i| st.mask.is_present(i))
+                .collect();
+            let drop: Vec<usize> = rng
+                .sample_indices(present.len(), excess)
+                .into_iter()
+                .map(|j| present[j])
+                .collect();
+            st.mask.apply_removal(&drop)?;
+            out.partial_layer = Some(l);
+        }
+    }
+    debug_assert_eq!(st.budget(), b_target);
+
+    let mut ft_rng = rng.fork(0xD4);
+    finetune(sess, st, ds, cfg.finetune_steps, cfg.finetune_lr, &mut ft_rng)?;
+    Ok(out)
+}

@@ -1,0 +1,78 @@
+//! Baseline ReLU-reduction methods the paper compares against (and composes
+//! with):
+//!
+//! - [`snl`] — Selective Network Linearization (Cho et al. 2022b): soft
+//!   alpha masks trained under `CE + λ·||α||₁` with the λ←κ·λ schedule,
+//!   hard-thresholded then finetuned.
+//! - [`autorep`] — AutoReP (Peng et al. 2023): quadratic-polynomial ReLU
+//!   replacement with a trainable indicator stabilized by hysteresis.
+//! - [`senet`] — SENet (Kundu et al. 2023): per-layer ReLU-sensitivity
+//!   budget allocation + knowledge-distillation finetune.
+//! - [`deepreduce`] — DeepReDuce (Jha et al. 2021): manual layer-granularity
+//!   ReLU dropping by sensitivity order.
+//!
+//! All methods mutate a [`crate::model::ModelState`] toward a target ReLU
+//! budget; the paper's BCD ([`crate::coordinator::bcd`]) can then run *on
+//! top of* any of their outputs (paper Fig. 4).
+
+pub mod autorep;
+pub mod deepreduce;
+pub mod senet;
+pub mod snl;
+
+use crate::coordinator::eval::Evaluator;
+use crate::model::{Mask, ModelState};
+use crate::runtime::session::Session;
+use anyhow::Result;
+
+/// Per-layer accuracy sensitivity: proxy-accuracy drop when the layer's
+/// ReLUs are all removed (shared by SENet and DeepReDuce).
+pub fn layer_sensitivity(
+    sess: &Session,
+    ev: &Evaluator,
+    st: &ModelState,
+) -> Result<Vec<f64>> {
+    let info = sess.info();
+    let params = ev.upload_params(&st.params)?;
+    let base = ev.accuracy(&params, st.mask.dense())?;
+    let mut sens = Vec::with_capacity(info.mask_layers.len());
+    for l in 0..info.mask_layers.len() {
+        let mut m = st.mask.clone();
+        m.remove_layer(info, l);
+        let acc = ev.accuracy(&params, m.dense())?;
+        sens.push((base - acc).max(0.0));
+    }
+    Ok(sens)
+}
+
+/// Binarize a soft score vector to exactly `budget` ones by keeping the
+/// top-`budget` scores (used by SNL/AutoReP final hard thresholding —
+/// guarantees the target is met exactly, unlike a fixed 0.5 threshold).
+pub fn top_k_mask(scores: &[f32], budget: usize) -> Mask {
+    assert!(budget <= scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut dense = vec![0.0f32; scores.len()];
+    for &i in idx.iter().take(budget) {
+        dense[i] = 1.0;
+    }
+    Mask::from_dense(&dense)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_keeps_largest() {
+        let m = top_k_mask(&[0.1, 0.9, 0.5, 0.7], 2);
+        assert_eq!(m.count(), 2);
+        assert!(m.is_present(1) && m.is_present(3));
+    }
+
+    #[test]
+    fn top_k_zero_and_full() {
+        assert_eq!(top_k_mask(&[0.3, 0.4], 0).count(), 0);
+        assert_eq!(top_k_mask(&[0.3, 0.4], 2).count(), 2);
+    }
+}

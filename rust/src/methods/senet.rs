@@ -1,0 +1,230 @@
+//! SENet (Kundu et al. 2023): sensitivity-driven per-layer ReLU budget
+//! allocation followed by knowledge-distillation finetune.
+//!
+//! Substitutions at our scale (DESIGN.md §0): the within-layer selection —
+//! which the paper drives by post-ReLU activation mismatch against the
+//! full-ReLU teacher — becomes a best-of-N trial search per layer, and the
+//! PRAM activation-matching loss becomes logit distillation (the compiled
+//! `kd_step`). The structure (sensitivity → allocation → distillation) is
+//! the paper's.
+
+use crate::coordinator::eval::Evaluator;
+use crate::coordinator::finetune::cosine_lr;
+use crate::data::{Batcher, Dataset};
+use crate::methods::layer_sensitivity;
+use crate::model::{Mask, ModelState};
+use crate::runtime::session::Session;
+use crate::util::prng::Rng;
+use anyhow::{bail, Result};
+
+/// SENet hyperparameters.
+#[derive(Clone, Debug)]
+pub struct SenetConfig {
+    /// Proxy batches for sensitivity measurement and trial scoring.
+    pub proxy_batches: usize,
+    /// Within-layer keep-set candidates tried per layer.
+    pub layer_trials: usize,
+    /// KD finetune steps / lr / temperature.
+    pub kd_steps: usize,
+    pub kd_lr: f32,
+    pub kd_temp: f32,
+    pub seed: u64,
+}
+
+impl Default for SenetConfig {
+    fn default() -> Self {
+        SenetConfig {
+            proxy_batches: 2,
+            layer_trials: 4,
+            kd_steps: 60,
+            kd_lr: 5e-3,
+            kd_temp: 4.0,
+            seed: 0x5E9E,
+        }
+    }
+}
+
+/// Outcome of a SENet run.
+#[derive(Clone, Debug, Default)]
+pub struct SenetOutcome {
+    pub sensitivity: Vec<f64>,
+    pub allocation: Vec<usize>,
+    pub kd_first_loss: f32,
+    pub kd_last_loss: f32,
+}
+
+/// Allocate `budget` ReLUs across layers proportionally to
+/// `sensitivity[l] * size[l]`, capped at each layer's size, redistributing
+/// overflow; exact to the unit.
+pub fn allocate_budget(sensitivity: &[f64], sizes: &[usize], budget: usize) -> Vec<usize> {
+    assert_eq!(sensitivity.len(), sizes.len());
+    let total: usize = sizes.iter().sum();
+    assert!(budget <= total, "budget {budget} > total ReLUs {total}");
+    let mut alloc = vec![0usize; sizes.len()];
+    let mut remaining = budget;
+    let mut open: Vec<usize> = (0..sizes.len()).collect();
+    // Iteratively hand out proportional shares; layers that saturate leave
+    // the pool and their share is redistributed.
+    while remaining > 0 && !open.is_empty() {
+        let weights: Vec<f64> = open
+            .iter()
+            .map(|&l| (sensitivity[l].max(1e-6)) * (sizes[l] - alloc[l]) as f64)
+            .collect();
+        let wsum: f64 = weights.iter().sum();
+        let mut progressed = false;
+        let mut next_open = Vec::with_capacity(open.len());
+        for (&l, &w) in open.iter().zip(&weights) {
+            let share = ((remaining as f64) * w / wsum).floor() as usize;
+            let grant = share.min(sizes[l] - alloc[l]).min(remaining);
+            if grant > 0 {
+                alloc[l] += grant;
+                remaining -= grant;
+                progressed = true;
+            }
+            if alloc[l] < sizes[l] {
+                next_open.push(l);
+            }
+        }
+        if !progressed {
+            // Flooring starved everyone: hand out single units, heaviest first.
+            let mut by_weight: Vec<(usize, f64)> =
+                open.iter().copied().zip(weights.iter().copied()).collect();
+            by_weight.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            for (l, _) in by_weight {
+                if remaining == 0 {
+                    break;
+                }
+                if alloc[l] < sizes[l] {
+                    alloc[l] += 1;
+                    remaining -= 1;
+                }
+            }
+        }
+        open = next_open;
+    }
+    debug_assert_eq!(alloc.iter().sum::<usize>(), budget);
+    alloc
+}
+
+/// Run SENet on `st` down to `b_target` ReLUs, mutating it.
+pub fn run_senet(
+    sess: &Session,
+    st: &mut ModelState,
+    ds: &Dataset,
+    b_target: usize,
+    cfg: &SenetConfig,
+) -> Result<SenetOutcome> {
+    if b_target >= st.budget() {
+        bail!("SENet: target {b_target} >= current budget {}", st.budget());
+    }
+    let info = sess.info();
+    let mut rng = Rng::new(cfg.seed);
+    let ev = Evaluator::new(sess, ds, cfg.proxy_batches)?;
+
+    // 1. ReLU sensitivity per layer.
+    let sens = layer_sensitivity(sess, &ev, st)?;
+
+    // 2. Budget allocation across layers.
+    let sizes: Vec<usize> = info.mask_layers.iter().map(|e| e.size).collect();
+    let alloc = allocate_budget(&sens, &sizes, b_target);
+
+    // 3. Within-layer keep-set: best of `layer_trials` random candidates,
+    //    scored jointly with previously-fixed layers.
+    let params = ev.upload_params(&st.params)?;
+    let mut dense = vec![0.0f32; info.mask_size];
+    for (l, entry) in info.mask_layers.iter().enumerate() {
+        let keep = alloc[l];
+        if keep == 0 {
+            continue;
+        }
+        if keep == entry.size {
+            for i in entry.offset..entry.offset + entry.size {
+                dense[i] = 1.0;
+            }
+            continue;
+        }
+        let mut best: Option<(f64, Vec<usize>)> = None;
+        for _ in 0..cfg.layer_trials.max(1) {
+            let cand: Vec<usize> = rng
+                .sample_indices(entry.size, keep)
+                .into_iter()
+                .map(|j| entry.offset + j)
+                .collect();
+            for &i in &cand {
+                dense[i] = 1.0;
+            }
+            let acc = ev.accuracy(&params, &dense)?;
+            for &i in &cand {
+                dense[i] = 0.0;
+            }
+            if best.as_ref().map(|(a, _)| acc > *a).unwrap_or(true) {
+                best = Some((acc, cand));
+            }
+        }
+        for i in best.expect("layer_trials >= 1").1 {
+            dense[i] = 1.0;
+        }
+    }
+    st.mask = Mask::from_dense(&dense);
+    debug_assert_eq!(st.budget(), b_target);
+
+    // 4. KD finetune: teacher logits come from the pre-reduction weights
+    //    with the full-ReLU mask, computed per batch via `forward`.
+    let teacher_params = st.params.clone();
+    let full_mask = vec![1.0f32; info.mask_size];
+    st.reset_momentum();
+    let mut batcher = Batcher::new(ds, sess.batch, &mut rng);
+    let mut out = SenetOutcome {
+        sensitivity: sens,
+        allocation: alloc,
+        ..Default::default()
+    };
+    for step in 0..cfg.kd_steps {
+        let (x, y) = batcher.next_batch(&mut rng);
+        let t_logits = sess.forward(&teacher_params, &full_mask, &x)?;
+        let lr = cosine_lr(cfg.kd_lr, step, cfg.kd_steps);
+        let loss = sess.kd_step(st, &x, &y, &t_logits, lr, cfg.kd_temp)?;
+        if step == 0 {
+            out.kd_first_loss = loss;
+        }
+        out.kd_last_loss = loss;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_exact_and_capped() {
+        let alloc = allocate_budget(&[1.0, 0.5, 2.0], &[10, 10, 4], 12);
+        assert_eq!(alloc.iter().sum::<usize>(), 12);
+        assert!(alloc[2] <= 4);
+        // Most sensitive (per unit) layer should not be starved.
+        assert!(alloc[2] > 0);
+    }
+
+    #[test]
+    fn allocation_full_budget() {
+        let alloc = allocate_budget(&[0.1, 0.2], &[5, 7], 12);
+        assert_eq!(alloc, vec![5, 7]);
+    }
+
+    #[test]
+    fn allocation_zero_budget() {
+        assert_eq!(allocate_budget(&[1.0, 1.0], &[5, 5], 0), vec![0, 0]);
+    }
+
+    #[test]
+    fn allocation_zero_sensitivity_still_exact() {
+        let alloc = allocate_budget(&[0.0, 0.0, 0.0], &[8, 8, 8], 10);
+        assert_eq!(alloc.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn higher_sensitivity_gets_more() {
+        let alloc = allocate_budget(&[5.0, 0.1], &[100, 100], 50);
+        assert!(alloc[0] > alloc[1], "{alloc:?}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Selective Network Linearization (Cho et al. 2022b) — the paper's main
+//! baseline *and* the reference-model producer BCD starts from.
+//!
+//! Training alternates compiled `snl_step` calls (CE + λ·||α||₁, projected
+//! to α ∈ [0,1]) with an L3-owned λ schedule: when the thresholded budget
+//! stalls, λ ← κ·λ (the mechanism the paper's Fig. 9/10 debug section
+//! analyses). The run records everything those figures need: λ trace,
+//! budget-vs-step trace, mask snapshots (IoU dynamics, Fig. 6) and sampled
+//! α trajectories (Fig. 11).
+
+use crate::config::SnlConfig;
+use crate::coordinator::finetune::finetune;
+use crate::data::{Batcher, Dataset};
+use crate::methods::top_k_mask;
+use crate::model::{Mask, ModelState};
+use crate::runtime::session::Session;
+use crate::util::prng::Rng;
+use anyhow::{bail, Result};
+
+/// Full trace of one SNL run (everything Figs. 6/9/10/11 consume).
+#[derive(Clone, Debug, Default)]
+pub struct SnlOutcome {
+    pub steps_run: usize,
+    /// (step, λ) at every schedule check.
+    pub lambda_trace: Vec<(usize, f32)>,
+    /// (step, thresholded budget) at every schedule check (Fig. 10a).
+    pub budget_trace: Vec<(usize, usize)>,
+    /// Steps at which λ ← κ·λ fired (Fig. 10b's counter).
+    pub kappa_updates: Vec<usize>,
+    /// Binarized mask snapshots at every check (Fig. 6 IoU dynamics).
+    pub snapshots: Vec<(usize, Mask)>,
+    /// Trajectories of `track_alphas` randomly-chosen α entries (Fig. 11):
+    /// `alpha_traces[k]` = that α's value at every check.
+    pub alpha_indices: Vec<usize>,
+    pub alpha_traces: Vec<Vec<f32>>,
+    /// Final budget after hard thresholding.
+    pub final_budget: usize,
+}
+
+/// Run SNL on `st` down to `b_target` ReLUs, mutating it.
+///
+/// On return `st.mask` is binary with exactly `b_target` present ReLUs and
+/// the weights have been finetuned under the binarized mask (the paper's
+/// "hard thresholding + finetune" stage).
+pub fn run_snl(
+    sess: &Session,
+    st: &mut ModelState,
+    ds: &Dataset,
+    b_target: usize,
+    cfg: &SnlConfig,
+    track_alphas: usize,
+) -> Result<SnlOutcome> {
+    if b_target >= st.budget() {
+        bail!("SNL: target {b_target} >= current budget {}", st.budget());
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut batcher = Batcher::new(ds, sess.batch, &mut rng);
+
+    // Alphas start at the current (binary) mask: present ReLUs at 1.0,
+    // removed at 0.0. Projected SGD keeps them in [0, 1].
+    let mut alphas = st.mask.to_tensor();
+    let mut lam = cfg.lambda0;
+    let mut out = SnlOutcome::default();
+
+    // Pick alpha entries to trace (Fig. 11) among initially-present ones.
+    if track_alphas > 0 {
+        let present: Vec<usize> =
+            (0..alphas.len()).filter(|&i| alphas.data[i] > 0.5).collect();
+        let k = track_alphas.min(present.len());
+        out.alpha_indices = rng
+            .sample_indices(present.len(), k)
+            .into_iter()
+            .map(|j| present[j])
+            .collect();
+        out.alpha_traces = vec![Vec::new(); k];
+    }
+
+    let mut last_budget = usize::MAX;
+    let mut stalled = 0usize;
+    for step in 0..cfg.max_steps {
+        let (x, y) = batcher.next_batch(&mut rng);
+        sess.snl_step(
+            &mut st.params,
+            &mut st.mom,
+            &mut alphas,
+            &x,
+            &y,
+            cfg.lr,
+            cfg.alpha_lr,
+            lam,
+        )?;
+        out.steps_run = step + 1;
+
+        if (step + 1) % cfg.steps_per_check != 0 {
+            continue;
+        }
+        let budget = alphas.data.iter().filter(|&&a| a >= cfg.threshold).count();
+        out.lambda_trace.push((step + 1, lam));
+        out.budget_trace.push((step + 1, budget));
+        out.snapshots.push((
+            budget,
+            Mask::from_dense(
+                &alphas
+                    .data
+                    .iter()
+                    .map(|&a| if a >= cfg.threshold { 1.0 } else { 0.0 })
+                    .collect::<Vec<f32>>(),
+            ),
+        ));
+        for (k, &i) in out.alpha_indices.iter().enumerate() {
+            out.alpha_traces[k].push(alphas.data[i]);
+        }
+        crate::debug!("snl step {}: budget={budget} lam={lam:.2e}", step + 1);
+
+        if budget <= b_target {
+            break; // reached the target budget
+        }
+        if budget >= last_budget {
+            stalled += 1;
+            if stalled >= cfg.stall_patience {
+                // Reduction stalled: crank the lasso coefficient (Fig. 9/10).
+                lam *= cfg.kappa;
+                out.kappa_updates.push(step + 1);
+                stalled = 0;
+            }
+        } else {
+            stalled = 0;
+        }
+        last_budget = budget;
+    }
+
+    // Hard thresholding: keep exactly the top-B_target alphas. (A fixed 0.5
+    // threshold can over/under-shoot; top-k guarantees the budget, and is
+    // how SNL's official code meets exact budgets.)
+    st.mask = top_k_mask(&alphas.data, b_target);
+    out.final_budget = st.mask.count();
+
+    // Finetune under the binarized mask to recover the thresholding loss.
+    let mut ft_rng = rng.fork(0x57E9);
+    finetune(sess, st, ds, cfg.finetune_steps, cfg.finetune_lr, &mut ft_rng)?;
+    Ok(out)
+}
+
+/// Containment-IoU between consecutive snapshot masks (Fig. 6a series).
+pub fn consecutive_iou(snapshots: &[(usize, Mask)]) -> Vec<f64> {
+    snapshots
+        .windows(2)
+        .map(|w| {
+            let (_, ref larger) = w[0]; // budgets shrink over time
+            let (_, ref smaller) = w[1];
+            smaller.containment(larger)
+        })
+        .collect()
+}

@@ -1,0 +1,161 @@
+//! Result recording: CSV emission + terminal ASCII plots.
+//!
+//! Every bench regenerates a paper table/figure by printing paper-style
+//! rows AND writing `results/<id>.csv`; figures additionally render as
+//! ASCII line charts so the "shape" criteria in DESIGN.md §5 are visible
+//! in the terminal.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Write a CSV file (creates parent dirs). Values are escaped minimally —
+/// our cells are numbers and identifiers.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        debug_assert_eq!(row.len(), header.len(), "csv row arity");
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {path:?}"))?;
+    crate::info!("wrote {path:?} ({} rows)", rows.len());
+    Ok(())
+}
+
+/// A named (x, y) series for plotting.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: &str, points: Vec<(f64, f64)>) -> Series {
+        Series { label: label.to_string(), points }
+    }
+}
+
+const MARKS: &[char] = &['o', 'x', '+', '*', '#', '@'];
+
+/// Render series as an ASCII chart (the terminal analog of a paper figure).
+pub fn ascii_plot(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let pts: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if pts.is_empty() {
+        return format!("{title}\n  (no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::MAX, f64::MIN);
+    let (mut y0, mut y1) = (f64::MAX, f64::MIN);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = mark;
+        }
+    }
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("{y1:>10.2} ┤"));
+    out.push_str(&grid[0].iter().collect::<String>());
+    out.push('\n');
+    for row in &grid[1..height - 1] {
+        out.push_str("           │");
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{y0:>10.2} ┤"));
+    out.push_str(&grid[height - 1].iter().collect::<String>());
+    out.push('\n');
+    out.push_str(&format!(
+        "           └{}\n            {:<10.2}{:>w$.2}\n",
+        "─".repeat(width),
+        x0,
+        x1,
+        w = width - 10
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("            {} {}\n", MARKS[si % MARKS.len()], s.label));
+    }
+    out
+}
+
+/// Paper-style table printer: fixed-width columns from string rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, c) in row.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    println!("\n{title}");
+    let line: String = header
+        .iter()
+        .enumerate()
+        .map(|(i, h)| format!("{:<w$}", h, w = widths[i] + 2))
+        .collect();
+    println!("{line}");
+    println!("{}", "-".repeat(line.len()));
+    for row in rows {
+        let line: String = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths[i] + 2))
+            .collect();
+        println!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let path = std::env::temp_dir().join("cdnl_metrics_test/t.csv");
+        write_csv(
+            &path,
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+    }
+
+    #[test]
+    fn plot_contains_marks_and_labels() {
+        let p = ascii_plot(
+            "fig",
+            &[Series::new("ours", vec![(0.0, 1.0), (1.0, 2.0)])],
+            20,
+            6,
+        );
+        assert!(p.contains('o'));
+        assert!(p.contains("ours"));
+    }
+
+    #[test]
+    fn plot_handles_degenerate_ranges() {
+        let p = ascii_plot("f", &[Series::new("s", vec![(1.0, 1.0)])], 10, 4);
+        assert!(p.contains('o'));
+        let empty = ascii_plot("f", &[], 10, 4);
+        assert!(empty.contains("no data"));
+    }
+}

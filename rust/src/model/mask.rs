@@ -1,0 +1,267 @@
+//! Binary ReLU masks — the paper's optimization variable `m`.
+//!
+//! A [`Mask`] is a flat 0/1 vector over every ReLU location of a model
+//! (layout given by the manifest's `mask_layers` table), plus a maintained
+//! *present set* so the BCD trial sampler draws `DRC` distinct present
+//! ReLUs in O(DRC) with no per-trial scan of the full vector (§Perf).
+
+use crate::runtime::manifest::ModelInfo;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use anyhow::{bail, Result};
+
+/// Binary mask over all ReLU locations with O(1) removal and O(k) sampling.
+#[derive(Clone, Debug)]
+pub struct Mask {
+    /// Dense 0.0/1.0 values, ready to ship to the artifact boundary.
+    data: Vec<f32>,
+    /// Flat indices currently 1, in arbitrary order.
+    present: Vec<u32>,
+    /// `pos[i]` = index of `i` inside `present` (u32::MAX when absent).
+    pos: Vec<u32>,
+}
+
+impl Mask {
+    /// All-ones mask (the full-ReLU network).
+    pub fn full(size: usize) -> Mask {
+        Mask {
+            data: vec![1.0; size],
+            present: (0..size as u32).collect(),
+            pos: (0..size as u32).collect(),
+        }
+    }
+
+    /// Mask from dense 0/1 values (e.g. a thresholded SNL alpha vector).
+    pub fn from_dense(values: &[f32]) -> Mask {
+        let mut m = Mask {
+            data: vec![0.0; values.len()],
+            present: Vec::new(),
+            pos: vec![u32::MAX; values.len()],
+        };
+        for (i, &v) in values.iter().enumerate() {
+            if v != 0.0 {
+                m.data[i] = 1.0;
+                m.pos[i] = m.present.len() as u32;
+                m.present.push(i as u32);
+            }
+        }
+        m
+    }
+
+    /// Total ReLU locations (present + removed).
+    pub fn size(&self) -> usize {
+        self.data.len()
+    }
+
+    /// `||m||_0` — the current ReLU budget.
+    pub fn count(&self) -> usize {
+        self.present.len()
+    }
+
+    pub fn is_present(&self, i: usize) -> bool {
+        self.pos[i] != u32::MAX
+    }
+
+    /// Dense values (a `[M]` f32 view for the artifact boundary).
+    pub fn dense(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Copy out as a host tensor.
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(vec![self.data.len()], self.data.clone())
+    }
+
+    /// Remove one present ReLU. Returns an error if already removed —
+    /// the BCD invariant is that ReLUs are never revisited.
+    pub fn remove(&mut self, i: usize) -> Result<()> {
+        let p = self.pos[i];
+        if p == u32::MAX {
+            bail!("mask: index {i} already removed");
+        }
+        let last = *self.present.last().unwrap();
+        self.present.swap_remove(p as usize);
+        if (p as usize) < self.present.len() {
+            self.pos[last as usize] = p;
+        }
+        self.pos[i] = u32::MAX;
+        self.data[i] = 0.0;
+        Ok(())
+    }
+
+    /// Sample `k` distinct *present* flat indices (the BCD trial draw).
+    pub fn sample_present(&self, rng: &mut Rng, k: usize) -> Vec<usize> {
+        assert!(
+            k <= self.present.len(),
+            "sample_present: k={k} > present={}",
+            self.present.len()
+        );
+        rng.sample_indices(self.present.len(), k)
+            .into_iter()
+            .map(|j| self.present[j] as usize)
+            .collect()
+    }
+
+    /// Dense copy with `removed` additionally zeroed (a trial hypothesis).
+    /// Does not mutate `self`; the caller reuses `scratch` across trials so
+    /// the hot loop performs no allocation (§Perf).
+    pub fn hypothesis_into(&self, removed: &[usize], scratch: &mut Vec<f32>) {
+        scratch.clear();
+        scratch.extend_from_slice(&self.data);
+        for &i in removed {
+            debug_assert!(self.is_present(i), "hypothesis removes absent ReLU {i}");
+            scratch[i] = 0.0;
+        }
+    }
+
+    /// Apply an accepted trial: permanently remove all `removed` indices.
+    pub fn apply_removal(&mut self, removed: &[usize]) -> Result<()> {
+        for &i in removed {
+            self.remove(i)?;
+        }
+        Ok(())
+    }
+
+    /// `||m_self ⊙ m_other||_0 / ||m_self||_0` — the paper's (asymmetric)
+    /// IoU score between a smaller-budget mask and a larger one (Fig. 6).
+    pub fn containment(&self, other: &Mask) -> f64 {
+        assert_eq!(self.size(), other.size());
+        if self.count() == 0 {
+            return 1.0;
+        }
+        let inter = self
+            .present
+            .iter()
+            .filter(|&&i| other.is_present(i as usize))
+            .count();
+        inter as f64 / self.count() as f64
+    }
+
+    /// Per-layer present-ReLU counts (Fig. 7 distributions).
+    pub fn layer_histogram(&self, info: &ModelInfo) -> Vec<usize> {
+        let mut h = vec![0usize; info.mask_layers.len()];
+        for &i in &self.present {
+            h[info.layer_of(i as usize)] += 1;
+        }
+        h
+    }
+
+    /// Remove every ReLU of layer `l` (DeepReDuce layer-granularity action).
+    pub fn remove_layer(&mut self, info: &ModelInfo, l: usize) -> usize {
+        let e = &info.mask_layers[l];
+        let mut removed = 0;
+        for i in e.offset..e.offset + e.size {
+            if self.is_present(i) {
+                self.remove(i).unwrap();
+                removed += 1;
+            }
+        }
+        removed
+    }
+
+    /// Internal consistency check (used by tests and debug assertions).
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut seen = vec![false; self.size()];
+        for (p, &i) in self.present.iter().enumerate() {
+            let i = i as usize;
+            if seen[i] {
+                bail!("present contains {i} twice");
+            }
+            seen[i] = true;
+            if self.pos[i] != p as u32 {
+                bail!("pos[{i}]={} but present[{p}]={i}", self.pos[i]);
+            }
+            if self.data[i] != 1.0 {
+                bail!("present index {i} has dense value {}", self.data[i]);
+            }
+        }
+        for i in 0..self.size() {
+            if !seen[i] {
+                if self.pos[i] != u32::MAX {
+                    bail!("absent index {i} has pos {}", self.pos[i]);
+                }
+                if self.data[i] != 0.0 {
+                    bail!("absent index {i} has dense value {}", self.data[i]);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_mask_counts() {
+        let m = Mask::full(10);
+        assert_eq!(m.count(), 10);
+        assert_eq!(m.size(), 10);
+        assert!(m.is_present(9));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_updates_all_views() {
+        let mut m = Mask::full(5);
+        m.remove(2).unwrap();
+        assert_eq!(m.count(), 4);
+        assert!(!m.is_present(2));
+        assert_eq!(m.dense()[2], 0.0);
+        assert!(m.remove(2).is_err(), "double removal must fail");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let m = Mask::from_dense(&[1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(m.count(), 2);
+        assert!(m.is_present(0) && m.is_present(2));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hypothesis_does_not_mutate() {
+        let m = Mask::full(6);
+        let mut scratch = Vec::new();
+        m.hypothesis_into(&[1, 4], &mut scratch);
+        assert_eq!(scratch, vec![1.0, 0.0, 1.0, 1.0, 0.0, 1.0]);
+        assert_eq!(m.count(), 6);
+    }
+
+    #[test]
+    fn sampling_only_present() {
+        let mut rng = Rng::new(1);
+        let mut m = Mask::full(50);
+        for i in 0..25 {
+            m.remove(i * 2).unwrap(); // remove evens
+        }
+        for _ in 0..100 {
+            for i in m.sample_present(&mut rng, 10) {
+                assert!(i % 2 == 1, "sampled removed index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn containment_score() {
+        let big = Mask::full(8);
+        let mut small = Mask::full(8);
+        small.apply_removal(&[0, 1]).unwrap();
+        assert_eq!(small.containment(&big), 1.0);
+        assert_eq!(big.containment(&small), 6.0 / 8.0);
+    }
+
+    #[test]
+    fn mass_removal_invariants_hold() {
+        let mut rng = Rng::new(3);
+        let mut m = Mask::full(200);
+        while m.count() > 50 {
+            let r = m.sample_present(&mut rng, 10);
+            m.apply_removal(&r).unwrap();
+            m.check_invariants().unwrap();
+        }
+        assert_eq!(m.count(), 50);
+    }
+}

@@ -1,0 +1,14 @@
+//! Model-side state owned by the coordinator: binary ReLU masks, parameter
+//! bundles, checkpoints, and the model zoo cache.
+//!
+//! The paper's object of study is the binary mask `m` over all ReLU
+//! locations of a network ([`mask::Mask`]); everything else (weights,
+//! momentum) is an opaque flat vector whose layout is dictated by the
+//! artifact manifest.
+
+pub mod mask;
+pub mod state;
+pub mod zoo;
+
+pub use mask::Mask;
+pub use state::ModelState;

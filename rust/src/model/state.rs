@@ -1,0 +1,194 @@
+//! Full model state (params + momentum + mask) and checkpoint I/O.
+//!
+//! Checkpoints are a tiny self-describing binary format (`.cdnl`): magic,
+//! model key, named f32 sections. Hand-rolled because the vendor set has no
+//! serde — DESIGN.md §0.
+
+use super::mask::Mask;
+use crate::runtime::manifest::ModelInfo;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CDNLCKP1";
+
+/// Everything the coordinator owns about one network instance.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub model_key: String,
+    pub params: Tensor,
+    pub mom: Tensor,
+    pub mask: Mask,
+}
+
+impl ModelState {
+    /// Fresh state: zero momentum, full-ReLU mask, params from `init`.
+    pub fn new(info: &ModelInfo, params: Tensor) -> ModelState {
+        assert_eq!(params.len(), info.param_size, "param vector size mismatch");
+        ModelState {
+            model_key: info.key.clone(),
+            mom: Tensor::zeros(vec![info.param_size]),
+            mask: Mask::full(info.mask_size),
+            params,
+        }
+    }
+
+    /// Reset optimizer momentum (done between training phases: the paper
+    /// restarts SGD with a fresh cosine schedule per finetune run).
+    pub fn reset_momentum(&mut self) {
+        self.mom = Tensor::zeros(vec![self.mom.len()]);
+    }
+
+    /// Current ReLU budget `||m||_0`.
+    pub fn budget(&self) -> usize {
+        self.mask.count()
+    }
+
+    // ---- checkpoint I/O ---------------------------------------------------
+
+    /// Serialize to `<path>` (creates parent dirs).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        write_str(&mut f, &self.model_key)?;
+        write_f32s(&mut f, &self.params.data)?;
+        write_f32s(&mut f, &self.mom.data)?;
+        write_f32s(&mut f, self.mask.dense())?;
+        Ok(())
+    }
+
+    /// Load and validate against the manifest `info`.
+    pub fn load(path: &Path, info: &ModelInfo) -> Result<ModelState> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not a CDNL checkpoint");
+        }
+        let key = read_str(&mut f)?;
+        if key != info.key {
+            bail!("{path:?}: checkpoint is for model {key:?}, expected {:?}", info.key);
+        }
+        let params = read_f32s(&mut f)?;
+        let mom = read_f32s(&mut f)?;
+        let mask = read_f32s(&mut f)?;
+        if params.len() != info.param_size || mask.len() != info.mask_size {
+            bail!(
+                "{path:?}: sizes {}/{} do not match manifest {}/{}",
+                params.len(),
+                mask.len(),
+                info.param_size,
+                info.mask_size
+            );
+        }
+        Ok(ModelState {
+            model_key: key,
+            params: Tensor::new(vec![params.len()], params),
+            mom: Tensor::new(vec![mom.len()], mom),
+            mask: Mask::from_dense(&mask),
+        })
+    }
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let mut buf = vec![0u8; u32::from_le_bytes(len) as usize];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R) -> Result<Vec<f32>> {
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len)?;
+    let n = u64::from_le_bytes(len) as usize;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::PackEntry;
+
+    fn fake_info() -> ModelInfo {
+        ModelInfo {
+            key: "m1".into(),
+            backbone: "resnet".into(),
+            num_classes: 2,
+            image_size: 4,
+            channels: 3,
+            poly: false,
+            param_size: 7,
+            mask_size: 5,
+            mask_layers: vec![PackEntry {
+                name: "a".into(),
+                shape: vec![5],
+                offset: 0,
+                size: 5,
+            }],
+            param_entries: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let info = fake_info();
+        let mut st = ModelState::new(&info, Tensor::new(vec![7], (0..7).map(|i| i as f32).collect()));
+        st.mask.remove(3).unwrap();
+        st.mom.data[0] = 2.5;
+        let path = std::env::temp_dir().join("cdnl_state_test/ck.cdnl");
+        st.save(&path).unwrap();
+        let back = ModelState::load(&path, &info).unwrap();
+        assert_eq!(back.params, st.params);
+        assert_eq!(back.mom.data[0], 2.5);
+        assert_eq!(back.budget(), 4);
+        assert!(!back.mask.is_present(3));
+    }
+
+    #[test]
+    fn wrong_model_key_rejected() {
+        let info = fake_info();
+        let st = ModelState::new(&info, Tensor::zeros(vec![7]));
+        let path = std::env::temp_dir().join("cdnl_state_test/ck2.cdnl");
+        st.save(&path).unwrap();
+        let mut other = fake_info();
+        other.key = "different".into();
+        assert!(ModelState::load(&path, &other).is_err());
+    }
+
+    #[test]
+    fn garbage_file_rejected() {
+        let path = std::env::temp_dir().join("cdnl_state_test/garbage.cdnl");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(ModelState::load(&path, &fake_info()).is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Checkpoint cache ("model zoo"): benches and examples share expensive
+//! intermediate models (trained baselines, SNL reference models) instead of
+//! re-training them per run.
+
+use super::state::ModelState;
+use crate::runtime::manifest::ModelInfo;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Path of the cached checkpoint for (model, tag).
+pub fn cache_path(dir: &Path, info: &ModelInfo, tag: &str) -> PathBuf {
+    dir.join(format!("{}__{}.cdnl", info.key, tag))
+}
+
+/// Load the checkpoint `(info, tag)` from `dir`, or `build` + save it.
+///
+/// The tag must encode everything the build depends on (dataset, budgets,
+/// seeds) — the cache trusts it blindly.
+pub fn cached<F>(dir: &Path, info: &ModelInfo, tag: &str, build: F) -> Result<ModelState>
+where
+    F: FnOnce() -> Result<ModelState>,
+{
+    let path = cache_path(dir, info, tag);
+    if path.exists() {
+        match ModelState::load(&path, info) {
+            Ok(st) => {
+                crate::info!("zoo: loaded {path:?} (budget {})", st.budget());
+                return Ok(st);
+            }
+            Err(e) => {
+                crate::warnlog!("zoo: stale checkpoint {path:?} ({e}); rebuilding");
+            }
+        }
+    }
+    let st = build()?;
+    st.save(&path)?;
+    crate::info!("zoo: built + saved {path:?} (budget {})", st.budget());
+    Ok(st)
+}

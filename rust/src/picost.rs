@@ -1,0 +1,181 @@
+//! Private-Inference cost model — why ReLU budgets matter at all.
+//!
+//! The paper's motivation (after DELPHI, GAZELLE): in hybrid HE/MPC
+//! protocols, *linear* layers run under additively-homomorphic encryption
+//! or pre-shared Beaver triples, while each *ReLU* needs a garbled-circuit
+//! (GC) evaluation costing kilobytes of online communication. ReLU count
+//! therefore dominates online latency. This module turns a (model, mask)
+//! pair into estimated online bytes/latency so experiments can report the
+//! PI-latency implication of every budget.
+//!
+//! Constants follow the DELPHI paper's reported costs (~2 KB and ~88 us
+//! of compute per ReLU online with garbled circuits); they are estimates
+//! and clearly labelled as such in reports.
+
+use crate::runtime::manifest::ModelInfo;
+
+/// Network + crypto cost constants for one deployment scenario.
+#[derive(Clone, Debug)]
+pub struct Protocol {
+    pub name: &'static str,
+    /// Online GC bytes exchanged per ReLU evaluation.
+    pub gc_bytes_per_relu: f64,
+    /// Local GC compute time per ReLU [s].
+    pub gc_secs_per_relu: f64,
+    /// Link bandwidth [bytes/s].
+    pub bandwidth: f64,
+    /// Round-trip time [s]; each masked layer costs one round of
+    /// share-translation between the HE and GC domains.
+    pub rtt: f64,
+    /// Homomorphic MAC throughput for linear layers [MACs/s].
+    pub he_macs_per_sec: f64,
+}
+
+/// 1 Gbit/s, 0.5 ms RTT — same-datacenter deployment.
+pub fn lan() -> Protocol {
+    Protocol {
+        name: "LAN",
+        gc_bytes_per_relu: 2048.0,
+        gc_secs_per_relu: 88e-6,
+        bandwidth: 125e6,
+        rtt: 0.5e-3,
+        he_macs_per_sec: 5e8,
+    }
+}
+
+/// 100 Mbit/s, 40 ms RTT — client-to-cloud deployment.
+pub fn wan() -> Protocol {
+    Protocol {
+        name: "WAN",
+        gc_bytes_per_relu: 2048.0,
+        gc_secs_per_relu: 88e-6,
+        bandwidth: 12.5e6,
+        rtt: 40e-3,
+        he_macs_per_sec: 5e8,
+    }
+}
+
+/// Estimated online cost of one private inference.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    pub protocol: &'static str,
+    pub relus: usize,
+    pub macs: f64,
+    pub online_bytes: f64,
+    /// Communication + GC compute for the non-linear layers [s].
+    pub relu_secs: f64,
+    /// HE evaluation of the linear layers [s].
+    pub linear_secs: f64,
+    /// Round-trip latency across active masked layers [s].
+    pub round_secs: f64,
+    pub total_secs: f64,
+}
+
+/// Estimate multiply-accumulate count of the network from the manifest's
+/// mask-layer table: each activation layer `[C, H, W]` is preceded by a
+/// 3x3 conv from the previous layer's channel count (stem: input channels),
+/// plus a final dense head. An analytic estimate — good to ~2x, which is
+/// enough for relative PI-latency comparisons.
+pub fn estimate_macs(info: &ModelInfo) -> f64 {
+    let mut macs = 0.0f64;
+    let mut prev_c = info.channels as f64;
+    for e in &info.mask_layers {
+        let (c, h, w) = (e.shape[0] as f64, e.shape[1] as f64, e.shape[2] as f64);
+        macs += c * h * w * prev_c * 9.0;
+        prev_c = c;
+    }
+    macs += prev_c * info.num_classes as f64; // head
+    macs
+}
+
+/// Online-phase cost for a network with `relus` active ReLUs. Each mask
+/// layer that still holds a ReLU costs one GC exchange = two direction
+/// flips (tables down, re-shares up); the input/logit share transfers add
+/// two endpoint rounds. This matches [`crate::protosim`]'s message walk.
+pub fn estimate(info: &ModelInfo, relus: usize, active_layers: usize, proto: &Protocol) -> CostReport {
+    let macs = estimate_macs(info);
+    let online_bytes = relus as f64 * proto.gc_bytes_per_relu;
+    let relu_secs = online_bytes / proto.bandwidth + relus as f64 * proto.gc_secs_per_relu;
+    let linear_secs = macs / proto.he_macs_per_sec;
+    let round_secs = (2 * active_layers + 2) as f64 * proto.rtt;
+    CostReport {
+        protocol: proto.name,
+        relus,
+        macs,
+        online_bytes,
+        relu_secs,
+        linear_secs,
+        round_secs,
+        total_secs: relu_secs + linear_secs + round_secs,
+    }
+}
+
+/// Convenience over a model state: counts active layers from the mask.
+pub fn estimate_state(
+    info: &ModelInfo,
+    mask: &crate::model::Mask,
+    proto: &Protocol,
+) -> CostReport {
+    let hist = mask.layer_histogram(info);
+    let active = hist.iter().filter(|&&h| h > 0).count();
+    estimate(info, mask.count(), active, proto)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::PackEntry;
+
+    fn fake_info() -> ModelInfo {
+        ModelInfo {
+            key: "m".into(),
+            backbone: "resnet".into(),
+            num_classes: 10,
+            image_size: 8,
+            channels: 3,
+            poly: false,
+            param_size: 1,
+            mask_size: 128 + 64,
+            mask_layers: vec![
+                PackEntry { name: "a".into(), shape: vec![2, 8, 8], offset: 0, size: 128 },
+                PackEntry { name: "b".into(), shape: vec![4, 4, 4], offset: 128, size: 64 },
+            ],
+            param_entries: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn macs_analytic() {
+        // conv1: 2*8*8*3*9 = 3456 ; conv2: 4*4*4*2*9 = 1152 ; head 4*10=40.
+        assert_eq!(estimate_macs(&fake_info()), 3456.0 + 1152.0 + 40.0);
+    }
+
+    #[test]
+    fn fewer_relus_cheaper() {
+        let info = fake_info();
+        let p = lan();
+        let full = estimate(&info, 192, 2, &p);
+        let half = estimate(&info, 96, 2, &p);
+        assert!(half.total_secs < full.total_secs);
+        assert_eq!(half.linear_secs, full.linear_secs, "linear part unaffected");
+    }
+
+    #[test]
+    fn wan_dominated_by_comms() {
+        let info = fake_info();
+        let r = estimate(&info, 10_000, 2, &wan());
+        assert!(r.relu_secs > r.linear_secs);
+    }
+
+    #[test]
+    fn empty_layers_drop_rounds() {
+        let info = fake_info();
+        let mut m = crate::model::Mask::full(192);
+        m.remove_layer(&info, 1);
+        let r = estimate_state(&info, &m, &lan());
+        assert_eq!(r.relus, 128);
+        let full = estimate_state(&info, &crate::model::Mask::full(192), &lan());
+        assert!(r.round_secs < full.round_secs);
+    }
+}

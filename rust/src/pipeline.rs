@@ -1,0 +1,145 @@
+//! Experiment pipeline: the composition layer every bench, example and CLI
+//! subcommand shares.
+//!
+//! A [`Pipeline`] owns one (engine session, dataset pair, experiment
+//! config) triple and produces the staged models of the paper's protocol:
+//!
+//! ```text
+//! baseline (full ReLUs, trained)        -> pipeline.baseline()
+//!   └─ SNL reference at B_ref           -> pipeline.snl_ref(b_ref)
+//!        └─ BCD down to B_target        -> pipeline.bcd_from(&ref, b_target)
+//!   └─ AutoReP reference at B_ref (poly)-> pipeline.autorep_ref(b_ref)
+//! ```
+//!
+//! Expensive stages are cached in the model zoo keyed by (model, dataset,
+//! stage, budget, seed) so figure benches that share prefixes don't retrain.
+
+use crate::config::Experiment;
+use crate::coordinator::bcd::{run_bcd, BcdOutcome};
+use crate::coordinator::eval::test_accuracy;
+use crate::coordinator::train::train;
+use crate::data::{synth, Dataset};
+use crate::methods::autorep::{run_autorep, AutorepConfig};
+use crate::methods::snl::run_snl;
+use crate::model::{zoo, ModelState};
+use crate::runtime::engine::Engine;
+use crate::runtime::session::Session;
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+
+/// One experiment's shared context.
+pub struct Pipeline<'e> {
+    pub sess: Session<'e>,
+    pub exp: Experiment,
+    pub train_ds: Dataset,
+    pub test_ds: Dataset,
+    zoo_dir: PathBuf,
+}
+
+impl<'e> Pipeline<'e> {
+    pub fn new(engine: &'e Engine, exp: Experiment) -> Result<Pipeline<'e>> {
+        let sess = Session::new(engine, &exp.model_key())
+            .with_context(|| format!("experiment wants model {}", exp.model_key()))?;
+        let spec = synth::by_name(&exp.dataset)
+            .ok_or_else(|| anyhow!("unknown dataset {:?}", exp.dataset))?;
+        let (train_ds, test_ds) = synth::generate(spec);
+        let zoo_dir = PathBuf::from(&exp.out_dir).join("zoo");
+        Ok(Pipeline { sess, exp, train_ds, test_ds, zoo_dir })
+    }
+
+    /// Trained full-ReLU baseline (cached).
+    pub fn baseline(&self) -> Result<ModelState> {
+        let tag = format!(
+            "{}_base_s{}_t{}",
+            self.exp.dataset, self.exp.train.seed, self.exp.train.steps
+        );
+        zoo::cached(&self.zoo_dir, self.sess.info(), &tag, || {
+            let mut st = self.sess.init_state(self.exp.train.seed as i32)?;
+            train(&self.sess, &mut st, &self.train_ds, &self.exp.train)?;
+            Ok(st)
+        })
+    }
+
+    /// SNL reference model at `b_ref` ReLUs, from the baseline (cached).
+    /// This is the model BCD starts from — paper Tables 4/5.
+    pub fn snl_ref(&self, b_ref: usize) -> Result<ModelState> {
+        if b_ref >= self.sess.info().total_relus() {
+            return self.baseline(); // degenerate: reference == full network
+        }
+        let tag = format!(
+            "{}_snlref_b{}_s{}",
+            self.exp.dataset, b_ref, self.exp.snl.seed
+        );
+        zoo::cached(&self.zoo_dir, self.sess.info(), &tag, || {
+            let mut st = self.baseline()?;
+            run_snl(&self.sess, &mut st, &self.train_ds, b_ref, &self.exp.snl, 0)?;
+            Ok(st)
+        })
+    }
+
+    /// AutoReP reference model at `b_ref` ReLUs (poly variants; cached).
+    pub fn autorep_ref(&self, b_ref: usize) -> Result<ModelState> {
+        if b_ref >= self.sess.info().total_relus() {
+            return self.baseline();
+        }
+        let tag = format!(
+            "{}_arpref_b{}_s{}",
+            self.exp.dataset, b_ref, self.exp.snl.seed
+        );
+        let cfg = AutorepConfig { base: self.exp.snl.clone(), ..Default::default() };
+        zoo::cached(&self.zoo_dir, self.sess.info(), &tag, || {
+            let mut st = self.baseline()?;
+            run_autorep(&self.sess, &mut st, &self.train_ds, b_ref, &cfg)?;
+            Ok(st)
+        })
+    }
+
+    /// Run BCD from a copy of `reference` down to `b_target`; returns the
+    /// reduced state and the iteration trace.
+    pub fn bcd_from(
+        &self,
+        reference: &ModelState,
+        b_target: usize,
+    ) -> Result<(ModelState, BcdOutcome)> {
+        let mut st = reference.clone();
+        let out = run_bcd(&self.sess, &mut st, &self.train_ds, b_target, &self.exp.bcd, 0)?;
+        Ok((st, out))
+    }
+
+    /// Zoo-cached BCD: like [`Self::bcd_from`] but keyed on the run's
+    /// determinants (dataset, reference budget, target, BCD knobs, seed) so
+    /// benches sharing a configuration don't recompute. The iteration trace
+    /// is not cached — use `bcd_from` when you need it.
+    pub fn bcd_cached(&self, reference: &ModelState, b_target: usize) -> Result<ModelState> {
+        let b = &self.exp.bcd;
+        // Non-default schedule/granularity are tagged explicitly; the paper
+        // configuration keeps the plain tag (stable across releases).
+        let variant = if b.drc_schedule == crate::config::DrcSchedule::Constant
+            && b.granularity == crate::config::Granularity::Pixel
+        {
+            String::new()
+        } else {
+            format!("_{:?}{:?}", b.drc_schedule, b.granularity)
+        };
+        let tag = format!(
+            "{}_bcd_r{}_t{}_d{}{}_rt{}_a{}_f{}_s{}",
+            self.exp.dataset,
+            reference.budget(),
+            b_target,
+            b.drc,
+            variant,
+            b.rt,
+            b.adt,
+            b.finetune_steps,
+            b.seed
+        );
+        zoo::cached(&self.zoo_dir, self.sess.info(), &tag, || {
+            Ok(self.bcd_from(reference, b_target)?.0)
+        })
+    }
+
+    /// Test-set accuracy [%] of a state.
+    pub fn test_acc(&self, st: &ModelState) -> Result<f64> {
+        test_accuracy(&self.sess, st, &self.test_ds)
+    }
+}

@@ -1,0 +1,239 @@
+//! PJRT execution engine: load HLO-text artifacts, compile once, execute.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`. The
+//! engine caches compiled executables per (model, entry point) so each
+//! artifact pays its XLA compile exactly once per process.
+
+use super::manifest::{ArtifactInfo, Manifest, ModelInfo};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// Cumulative execution statistics (per entry point), for §Perf.
+#[derive(Clone, Debug, Default)]
+pub struct CallStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// The runtime engine: one PJRT CPU client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<BTreeMap<String, CallStats>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::info!(
+            "engine: platform={} devices={} models={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.models.len()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            stats: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn model(&self, key: &str) -> Result<&ModelInfo> {
+        self.manifest.model(key)
+    }
+
+    /// Compile (or fetch cached) the executable for `model_key:fn_name`.
+    pub fn executable(
+        &self,
+        model_key: &str,
+        fn_name: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let cache_key = format!("{model_key}:{fn_name}");
+        if let Some(e) = self.executables.borrow().get(&cache_key) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.model(model_key)?.artifact(fn_name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&info.file)
+            .with_context(|| format!("loading HLO text {:?}", info.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {cache_key}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        crate::debug!("compiled {cache_key} in {dt:.2}s");
+        self.stats
+            .borrow_mut()
+            .entry(cache_key.clone())
+            .or_default()
+            .compile_secs += dt;
+        let rc = std::rc::Rc::new(exe);
+        self.executables.borrow_mut().insert(cache_key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute an entry point with literal inputs; returns the decomposed
+    /// output tuple (artifacts are lowered with `return_tuple=True`).
+    pub fn call(
+        &self,
+        model_key: &str,
+        fn_name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let info = self.manifest.model(model_key)?.artifact(fn_name)?;
+        self.check_inputs(model_key, fn_name, info, inputs)?;
+        let exe = self.executable(model_key, fn_name)?;
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(format!("{model_key}:{fn_name}")).or_default();
+        s.calls += 1;
+        s.total_secs += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    /// Shape-check inputs against the manifest before dispatch: a wrong
+    /// tensor must fail with a readable message, not an XLA abort.
+    fn check_inputs(
+        &self,
+        model_key: &str,
+        fn_name: &str,
+        info: &ArtifactInfo,
+        inputs: &[xla::Literal],
+    ) -> Result<()> {
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "{model_key}:{fn_name}: got {} inputs, artifact expects {} ({:?})",
+                inputs.len(),
+                info.inputs.len(),
+                info.inputs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>()
+            );
+        }
+        for (lit, spec) in inputs.iter().zip(&info.inputs) {
+            let got = lit.element_count();
+            let want: usize = spec.shape.iter().product();
+            if got != want {
+                bail!(
+                    "{model_key}:{fn_name}: input {:?} has {} elements, expects {:?} ({} elements)",
+                    spec.name,
+                    got,
+                    spec.shape,
+                    want
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Upload an f32 tensor to the default device (for input caching across
+    /// calls: params during the BCD trial loop, proxy eval batches — §Perf).
+    ///
+    /// Uses `buffer_from_host_buffer` (synchronous `kImmutableOnlyDuringCall`
+    /// copy), NOT `buffer_from_host_literal`: the TFRT CPU client copies
+    /// literals *asynchronously*, so a literal dropped right after the call
+    /// is a use-after-free that aborts with a size-check failure.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor (labels) to the default device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Buffer-input variant of [`Engine::call`]: every input is already
+    /// device-resident, so the per-call host→device conversion is limited
+    /// to whatever the caller actually changed. Shape checking happened
+    /// when the cached buffers were built.
+    pub fn call_b(
+        &self,
+        model_key: &str,
+        fn_name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(model_key, fn_name)?;
+        let t0 = Instant::now();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(format!("{model_key}:{fn_name}")).or_default();
+        s.calls += 1;
+        s.total_secs += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    /// Convenience: call with host tensors, returning host tensors.
+    pub fn call_tensors(
+        &self,
+        model_key: &str,
+        fn_name: &str,
+        inputs: &[&dyn ToLiteral],
+    ) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let outs = self.call(model_key, fn_name, &lits)?;
+        outs.iter().map(|l| Tensor::from_literal(l)).collect()
+    }
+
+    /// Snapshot of per-entry-point execution statistics.
+    pub fn stats(&self) -> BTreeMap<String, CallStats> {
+        self.stats.borrow().clone()
+    }
+
+    /// Pretty statistics table (used by `cdnl info --stats` and benches).
+    pub fn stats_table(&self) -> String {
+        let mut out = String::from(
+            "entry point                              calls   total[s]  mean[ms]  compile[s]\n",
+        );
+        for (k, s) in self.stats.borrow().iter() {
+            let mean_ms = if s.calls > 0 {
+                1000.0 * s.total_secs / s.calls as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{k:40} {calls:6} {total:9.2} {mean:9.2} {comp:10.2}\n",
+                k = k,
+                calls = s.calls,
+                total = s.total_secs,
+                mean = mean_ms,
+                comp = s.compile_secs,
+            ));
+        }
+        out
+    }
+}
+
+/// Anything convertible to an `xla::Literal` (host tensors of both dtypes).
+pub trait ToLiteral {
+    fn to_literal(&self) -> Result<xla::Literal>;
+}
+
+impl ToLiteral for Tensor {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Tensor::to_literal(self)
+    }
+}
+
+impl ToLiteral for crate::tensor::TensorI32 {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        crate::tensor::TensorI32::to_literal(self)
+    }
+}

@@ -1,0 +1,250 @@
+//! `artifacts/manifest.json` — the interchange contract written by aot.py.
+//!
+//! The manifest is the ONLY source of shape knowledge on the rust side:
+//! parameter-vector length, mask-layer table (name/shape/offset), and the
+//! input/output specs of every compiled entry point.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One named tensor in a flat pack (mirror of python spec.Entry).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Input/output slot of a compiled artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One compiled entry point (e.g. `train_step`) of one model variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: PathBuf,
+    pub inputs: Vec<SlotSpec>,
+    pub outputs: Vec<SlotSpec>,
+}
+
+/// One model variant (backbone x input shape x classes x replacement).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub key: String,
+    pub backbone: String,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub channels: usize,
+    pub poly: bool,
+    pub param_size: usize,
+    pub mask_size: usize,
+    /// Masked activation layers in network order; offsets index the flat
+    /// mask vector (== the paper's global ReLU pool).
+    pub mask_layers: Vec<PackEntry>,
+    pub param_entries: Vec<PackEntry>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl ModelInfo {
+    /// Total ReLU locations (paper Table 1 row for this variant).
+    pub fn total_relus(&self) -> usize {
+        self.mask_size
+    }
+
+    /// Layer index containing flat mask index `i`.
+    pub fn layer_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.mask_size);
+        // Layers are ordered by offset; binary search the containing one.
+        match self
+            .mask_layers
+            .binary_search_by(|e| e.offset.cmp(&i))
+        {
+            Ok(l) => l,
+            Err(ins) => ins - 1,
+        }
+    }
+
+    pub fn artifact(&self, fn_name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(fn_name)
+            .ok_or_else(|| anyhow!("model {}: no artifact {fn_name:?}", self.key))
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub kernel_impl: String,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub dir: PathBuf,
+}
+
+fn parse_entries(v: &Json) -> Vec<PackEntry> {
+    v.as_arr()
+        .iter()
+        .map(|e| PackEntry {
+            name: e.expect("name").as_str().to_string(),
+            shape: e.expect("shape").as_usize_vec(),
+            offset: e.expect("offset").as_usize(),
+            size: e.expect("size").as_usize(),
+        })
+        .collect()
+}
+
+fn parse_slots(v: &Json) -> Vec<SlotSpec> {
+    v.as_arr()
+        .iter()
+        .map(|s| SlotSpec {
+            name: s.expect("name").as_str().to_string(),
+            shape: s.expect("shape").as_usize_vec(),
+            dtype: s.expect("dtype").as_str().to_string(),
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (key, m) in root.expect("models").as_obj() {
+            let mut artifacts = BTreeMap::new();
+            for (fname, a) in m.expect("artifacts").as_obj() {
+                artifacts.insert(
+                    fname.clone(),
+                    ArtifactInfo {
+                        file: dir.join(a.expect("file").as_str()),
+                        inputs: parse_slots(a.expect("inputs")),
+                        outputs: parse_slots(a.expect("outputs")),
+                    },
+                );
+            }
+            let info = ModelInfo {
+                key: key.clone(),
+                backbone: m.expect("backbone").as_str().to_string(),
+                num_classes: m.expect("num_classes").as_usize(),
+                image_size: m.expect("image_size").as_usize(),
+                channels: m.expect("channels").as_usize(),
+                poly: m.expect("poly").as_bool(),
+                param_size: m.expect("param_size").as_usize(),
+                mask_size: m.expect("mask_size").as_usize(),
+                mask_layers: parse_entries(m.expect("mask_layers")),
+                param_entries: parse_entries(m.expect("param_entries")),
+                artifacts,
+            };
+            Self::validate(&info)?;
+            models.insert(key.clone(), info);
+        }
+        Ok(Manifest {
+            batch: root.expect("batch").as_usize(),
+            kernel_impl: root.expect("kernel_impl").as_str().to_string(),
+            models,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    fn validate(info: &ModelInfo) -> Result<()> {
+        // Mask layers must tile [0, mask_size) exactly, in order.
+        let mut expect_off = 0usize;
+        for l in &info.mask_layers {
+            if l.offset != expect_off {
+                bail!(
+                    "model {}: mask layer {} offset {} != expected {}",
+                    info.key,
+                    l.name,
+                    l.offset,
+                    expect_off
+                );
+            }
+            if l.shape.iter().product::<usize>() != l.size {
+                bail!("model {}: mask layer {} shape/size mismatch", info.key, l.name);
+            }
+            expect_off += l.size;
+        }
+        if expect_off != info.mask_size {
+            bail!(
+                "model {}: mask layers cover {} of {} entries",
+                info.key,
+                expect_off,
+                info.mask_size
+            );
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, key: &str) -> Result<&ModelInfo> {
+        self.models.get(key).ok_or_else(|| {
+            anyhow!(
+                "manifest has no model {key:?} (available: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_json() -> String {
+        r#"{
+ "format": 1, "batch": 4, "kernel_impl": "pallas", "jax_version": "t",
+ "models": {
+  "m1": {
+   "key": "m1", "backbone": "resnet", "num_classes": 2, "image_size": 4,
+   "channels": 3, "poly": false, "param_size": 10, "mask_size": 6,
+   "mask_layers": [
+     {"name": "a", "shape": [1, 2, 2], "offset": 0, "size": 4},
+     {"name": "b", "shape": [2, 1, 1], "offset": 4, "size": 2}
+   ],
+   "param_entries": [{"name": "w", "shape": [10], "offset": 0, "size": 10}],
+   "artifacts": {
+     "forward": {"file": "m1__forward.hlo.txt",
+       "inputs": [{"name": "params", "shape": [10], "dtype": "float32"}],
+       "outputs": [{"name": "logits", "shape": [4, 2], "dtype": "float32"}]}
+   }
+  }
+ }
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = std::env::temp_dir().join("cdnl_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 4);
+        let info = m.model("m1").unwrap();
+        assert_eq!(info.total_relus(), 6);
+        assert_eq!(info.layer_of(0), 0);
+        assert_eq!(info.layer_of(3), 0);
+        assert_eq!(info.layer_of(4), 1);
+        assert_eq!(info.layer_of(5), 1);
+        assert!(info.artifact("forward").is_ok());
+        assert!(info.artifact("nope").is_err());
+        assert!(m.model("zz").is_err());
+    }
+
+    #[test]
+    fn rejects_gappy_layers() {
+        let bad = fake_manifest_json().replace("\"offset\": 4", "\"offset\": 5");
+        let dir = std::env::temp_dir().join("cdnl_manifest_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

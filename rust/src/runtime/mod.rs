@@ -1,0 +1,16 @@
+//! AOT runtime: PJRT client wrapper over `artifacts/*.hlo.txt`.
+//!
+//! `xla` crate flow: `PjRtClient::cpu()` -> `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`
+//! (adapted from /opt/xla-example/load_hlo). The [`manifest`] module parses
+//! the interchange contract written by `python/compile/aot.py`; [`engine`]
+//! owns the client + executable cache; [`session`] adds buffer-resident
+//! model state for the hot path (§Perf).
+
+pub mod engine;
+pub mod manifest;
+pub mod session;
+
+pub use engine::Engine;
+pub use manifest::{Manifest, ModelInfo};
+pub use session::Session;

@@ -1,0 +1,230 @@
+//! Typed session over one model variant's artifact set.
+//!
+//! [`Session`] maps the manifest entry points (`init`, `forward`,
+//! `eval_batch`, `train_step`, `snl_step`, `kd_step`) to rust signatures so
+//! coordinator code never touches raw literals, and owns the device-buffer
+//! cache for inputs that stay constant across many calls (§Perf: the BCD
+//! trial loop re-sends only the trial mask).
+
+use super::engine::Engine;
+use super::manifest::ModelInfo;
+use crate::model::ModelState;
+use crate::tensor::{Tensor, TensorI32};
+use anyhow::{Context, Result};
+
+/// Output of one SGD/finetune step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOut {
+    pub loss: f32,
+    /// Correct predictions in this batch (absolute count).
+    pub correct: f32,
+}
+
+/// A typed handle on one model variant (`model_key`) of an [`Engine`].
+pub struct Session<'e> {
+    pub engine: &'e Engine,
+    pub key: String,
+    pub batch: usize,
+}
+
+impl<'e> Session<'e> {
+    pub fn new(engine: &'e Engine, model_key: &str) -> Result<Session<'e>> {
+        let _ = engine.model(model_key)?; // fail fast on unknown keys
+        Ok(Session { engine, key: model_key.to_string(), batch: engine.manifest.batch })
+    }
+
+    pub fn info(&self) -> &ModelInfo {
+        self.engine.model(&self.key).expect("validated in new()")
+    }
+
+    /// Deterministic parameter initialization (artifact `init`).
+    pub fn init(&self, seed: i32) -> Result<Tensor> {
+        let outs = self.engine.call(
+            &self.key,
+            "init",
+            &[TensorI32::scalar(seed).to_literal()?],
+        )?;
+        Tensor::from_literal(&outs[0])
+    }
+
+    /// Fresh [`ModelState`] from a seed.
+    pub fn init_state(&self, seed: i32) -> Result<ModelState> {
+        Ok(ModelState::new(self.info(), self.init(seed)?))
+    }
+
+    /// Forward pass -> logits `[B, K]`.
+    pub fn forward(&self, params: &Tensor, mask: &[f32], x: &Tensor) -> Result<Tensor> {
+        let outs = self.engine.call(
+            &self.key,
+            "forward",
+            &[
+                params.to_literal()?,
+                Tensor::new(vec![mask.len()], mask.to_vec()).to_literal()?,
+                x.to_literal()?,
+            ],
+        )?;
+        Tensor::from_literal(&outs[0])
+    }
+
+    /// Loss + correct-count on one batch (artifact `eval_batch`).
+    pub fn eval_batch(
+        &self,
+        params: &Tensor,
+        mask: &[f32],
+        x: &Tensor,
+        y: &TensorI32,
+    ) -> Result<StepOut> {
+        let outs = self.engine.call(
+            &self.key,
+            "eval_batch",
+            &[
+                params.to_literal()?,
+                Tensor::new(vec![mask.len()], mask.to_vec()).to_literal()?,
+                x.to_literal()?,
+                y.to_literal()?,
+            ],
+        )?;
+        Ok(StepOut {
+            loss: Tensor::from_literal(&outs[0])?.item(),
+            correct: Tensor::from_literal(&outs[1])?.item(),
+        })
+    }
+
+    /// Buffer-input eval (the BCD trial hot path): `params`, `x`, `y` are
+    /// cached device buffers; only the trial mask is uploaded per call.
+    pub fn eval_batch_b(
+        &self,
+        params: &xla::PjRtBuffer,
+        mask: &xla::PjRtBuffer,
+        x: &xla::PjRtBuffer,
+        y: &xla::PjRtBuffer,
+    ) -> Result<StepOut> {
+        let outs = self
+            .engine
+            .call_b(&self.key, "eval_batch", &[params, mask, x, y])?;
+        Ok(StepOut {
+            loss: Tensor::from_literal(&outs[0])?.item(),
+            correct: Tensor::from_literal(&outs[1])?.item(),
+        })
+    }
+
+    /// Upload a flat f32 slice as a device buffer.
+    pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.engine.upload_f32(data, shape)
+    }
+
+    /// Upload a host tensor pair (x, y) as device buffers.
+    pub fn upload_batch(
+        &self,
+        x: &Tensor,
+        y: &TensorI32,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        Ok((
+            self.engine.upload_f32(&x.data, &x.shape)?,
+            self.engine.upload_i32(&y.data, &y.shape)?,
+        ))
+    }
+
+    /// One SGD-momentum step; updates `st.params` / `st.mom` in place.
+    pub fn train_step(
+        &self,
+        st: &mut ModelState,
+        x: &Tensor,
+        y: &TensorI32,
+        lr: f32,
+    ) -> Result<StepOut> {
+        let outs = self
+            .engine
+            .call(
+                &self.key,
+                "train_step",
+                &[
+                    st.params.to_literal()?,
+                    st.mom.to_literal()?,
+                    st.mask.to_tensor().to_literal()?,
+                    x.to_literal()?,
+                    y.to_literal()?,
+                    Tensor::scalar(lr).to_literal()?,
+                ],
+            )
+            .context("train_step")?;
+        st.params = Tensor::from_literal(&outs[0])?;
+        st.mom = Tensor::from_literal(&outs[1])?;
+        Ok(StepOut {
+            loss: Tensor::from_literal(&outs[2])?.item(),
+            correct: Tensor::from_literal(&outs[3])?.item(),
+        })
+    }
+
+    /// One selective (SNL) step: trains weights AND soft alphas under
+    /// `CE + lam * ||alpha||_1`; updates `params`, `mom`, `alphas` in place.
+    /// `alpha_lr` is the separate alpha step size (see fn_snl_step in
+    /// python/compile/model.py for why it must exceed the weight lr at our
+    /// compressed step budget).
+    #[allow(clippy::too_many_arguments)]
+    pub fn snl_step(
+        &self,
+        params: &mut Tensor,
+        mom: &mut Tensor,
+        alphas: &mut Tensor,
+        x: &Tensor,
+        y: &TensorI32,
+        lr: f32,
+        alpha_lr: f32,
+        lam: f32,
+    ) -> Result<f32> {
+        let outs = self
+            .engine
+            .call(
+                &self.key,
+                "snl_step",
+                &[
+                    params.to_literal()?,
+                    mom.to_literal()?,
+                    alphas.to_literal()?,
+                    x.to_literal()?,
+                    y.to_literal()?,
+                    Tensor::scalar(lr).to_literal()?,
+                    Tensor::scalar(alpha_lr).to_literal()?,
+                    Tensor::scalar(lam).to_literal()?,
+                ],
+            )
+            .context("snl_step")?;
+        *params = Tensor::from_literal(&outs[0])?;
+        *mom = Tensor::from_literal(&outs[1])?;
+        *alphas = Tensor::from_literal(&outs[2])?;
+        Ok(Tensor::from_literal(&outs[3])?.item())
+    }
+
+    /// One knowledge-distillation step (SENet finetune), teacher logits in.
+    pub fn kd_step(
+        &self,
+        st: &mut ModelState,
+        x: &Tensor,
+        y: &TensorI32,
+        t_logits: &Tensor,
+        lr: f32,
+        temp: f32,
+    ) -> Result<f32> {
+        let outs = self
+            .engine
+            .call(
+                &self.key,
+                "kd_step",
+                &[
+                    st.params.to_literal()?,
+                    st.mom.to_literal()?,
+                    st.mask.to_tensor().to_literal()?,
+                    x.to_literal()?,
+                    y.to_literal()?,
+                    t_logits.to_literal()?,
+                    Tensor::scalar(lr).to_literal()?,
+                    Tensor::scalar(temp).to_literal()?,
+                ],
+            )
+            .context("kd_step")?;
+        st.params = Tensor::from_literal(&outs[0])?;
+        st.mom = Tensor::from_literal(&outs[1])?;
+        Ok(Tensor::from_literal(&outs[2])?.item())
+    }
+}

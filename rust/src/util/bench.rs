@@ -1,0 +1,84 @@
+//! Timing harness for `benches/` (criterion substitute — DESIGN.md §0):
+//! warmup, N timed samples, mean/p50/p95, paper-style row printing.
+
+use super::{mean, percentile};
+use std::time::Instant;
+
+/// Timing summary of one benchmarked operation.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ms: Vec<f64>,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            format!("{:.3}", self.mean_ms),
+            format!("{:.3}", self.p50_ms),
+            format!("{:.3}", self.p95_ms),
+            format!("{}", self.samples_ms.len()),
+        ]
+    }
+}
+
+/// Time `f` for `iters` samples after `warmup` unrecorded runs.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    summarize(name, samples)
+}
+
+/// Build a result from externally-collected millisecond samples.
+pub fn summarize(name: &str, samples_ms: Vec<f64>) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        mean_ms: mean(&samples_ms),
+        p50_ms: percentile(&samples_ms, 50.0),
+        p95_ms: percentile(&samples_ms, 95.0),
+        samples_ms,
+    }
+}
+
+/// Print a block of results as a fixed-width table.
+pub fn print_results(title: &str, results: &[BenchResult]) {
+    let rows: Vec<Vec<String>> = results.iter().map(|r| r.row()).collect();
+    crate::metrics::print_table(
+        title,
+        &["operation", "mean[ms]", "p50[ms]", "p95[ms]", "n"],
+        &rows,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_collects_samples() {
+        let r = time("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples_ms.len(), 5);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.p95_ms >= r.p50_ms);
+    }
+
+    #[test]
+    fn summarize_stats() {
+        let r = summarize("x", vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((r.mean_ms - 2.5).abs() < 1e-9);
+        assert_eq!(r.p50_ms, 3.0); // nearest-rank
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny argument parser (substrate; no `clap` in the vendor set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional args
+//! and subcommands. Unknown flags fail with a usage hint — typos in
+//! experiment parameters must never run the wrong experiment silently.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flags + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `bool_flags` lists flags that take no value.
+    pub fn parse(argv: &[String], bool_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.bools.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("flag --{body} expects a value"))?;
+                    out.flags.insert(body.to_string(), v.clone());
+                }
+            } else if out.subcommand.is_none() && out.flags.is_empty() && out.positional.is_empty()
+            {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse_env(bool_flags: &[&str]) -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv, bool_flags)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad usize {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad u64 {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: bad f64 {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get_f64(key, default as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = Args::parse(&v(&["bcd", "--budget", "1000", "--quiet", "pos1"]), &["quiet"])
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("bcd"));
+        assert_eq!(a.get_usize("budget", 0), 1000);
+        assert!(a.has("quiet"));
+        assert_eq!(a.positional, v(&["pos1"]));
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = Args::parse(&v(&["--lr=0.01"]), &[]).unwrap();
+        assert_eq!(a.get_f64("lr", 0.0), 0.01);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&v(&["--budget"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&v(&[]), &[]).unwrap();
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

@@ -1,0 +1,66 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, logging, and a mini property-testing harness.
+//! See DESIGN.md §0 for why these are hand-rolled (vendor set has no
+//! rand/serde/clap/tracing/proptest).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod prop;
+
+/// Format a ReLU count the way the paper does: `6K`, `59.1K`, `570K`.
+pub fn fmt_relu_count(n: usize) -> String {
+    if n >= 1000 {
+        let k = n as f64 / 1000.0;
+        if (k - k.round()).abs() < 1e-9 {
+            format!("{}K", k.round() as usize)
+        } else {
+            format!("{k:.1}K")
+        }
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Percentile (nearest-rank) of an unsorted slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_count_formatting() {
+        assert_eq!(fmt_relu_count(6000), "6K");
+        assert_eq!(fmt_relu_count(59_100), "59.1K");
+        assert_eq!(fmt_relu_count(570_000), "570K");
+        assert_eq!(fmt_relu_count(123), "123");
+    }
+
+    #[test]
+    fn stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Mini property-testing harness (substrate; `proptest` is not in the
+//! offline vendor set — documented substitution, DESIGN.md §0).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs and asserts
+//! the property on each; on failure it performs greedy input shrinking (if
+//! the generator supports it via [`Shrink`]) and reports the minimal
+//! counterexample with the seed needed to replay it.
+
+use super::prng::Rng;
+
+/// Types that can propose smaller versions of themselves for shrinking.
+pub trait Shrink: Sized {
+    /// Candidate strictly-smaller inputs, most aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        if *self == 0 {
+            return vec![];
+        }
+        let mut c = vec![0, self / 2];
+        if *self > 1 {
+            c.push(self - 1);
+        }
+        c.dedup();
+        c
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<f32> {
+        if *self == 0.0 {
+            return vec![];
+        }
+        vec![0.0, self / 2.0]
+    }
+}
+
+impl<T: Shrink + Clone> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Halve the vector, drop one element, shrink one element.
+        out.push(self[..self.len() / 2].to_vec());
+        if self.len() > 1 {
+            out.push(self[1..].to_vec());
+        }
+        if let Some(first) = self.first() {
+            for s in first.shrink() {
+                let mut v = self.clone();
+                v[0] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`; panic with the (shrunk)
+/// counterexample on the first failure.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let minimal = shrink_failure(input, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\n  minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_failure<T, P>(mut input: T, prop: &P) -> T
+where
+    T: Shrink + Clone + std::fmt::Debug,
+    P: Fn(&T) -> Result<(), String>,
+{
+    // Greedy descent, bounded so pathological shrinkers terminate.
+    for _ in 0..64 {
+        let mut advanced = false;
+        for cand in input.shrink() {
+            if prop(&cand).is_err() {
+                input = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    input
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, |r| r.usize_below(100), |&n| {
+            if n < 100 {
+                Ok(())
+            } else {
+                Err(format!("{n} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        check(2, 200, |r| r.usize_below(100), |&n| {
+            if n < 50 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // The minimal usize failing "n < 50" under our shrinker is 50.
+        let min = shrink_failure(97usize, &|&n: &usize| {
+            if n < 50 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+        assert_eq!(min, 50);
+    }
+
+    #[test]
+    fn vec_shrinker_shrinks_length() {
+        let min = shrink_failure(vec![5usize; 16], &|v: &Vec<usize>| {
+            if v.len() < 3 {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+        assert!(min.len() >= 3 && min.len() <= 4, "{min:?}");
+    }
+}

@@ -1,0 +1,121 @@
+//! BCD coordinator integration over the real runtime: Algorithm 2
+//! invariants hold on a live model (budgets exact, ReLUs never revisited,
+//! early-exit bound sound), with finetuning disabled so the test only pays
+//! the (fast) eval_batch compile.
+
+use cdnl::config::BcdConfig;
+use cdnl::coordinator::bcd::run_bcd;
+use cdnl::coordinator::eval::Evaluator;
+use cdnl::coordinator::trials::{scan_trials, BlockSampler};
+use cdnl::data::synth;
+use cdnl::model::Mask;
+use cdnl::runtime::engine::Engine;
+use cdnl::runtime::session::Session;
+use cdnl::util::prng::Rng;
+use std::path::Path;
+
+#[test]
+fn bcd_invariants_on_live_model() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new(Path::new("artifacts")).unwrap();
+    let sess = Session::new(&engine, "resnet_16x16_c10").unwrap();
+    let (train_ds, _) = synth::generate(synth::by_name("synth10").unwrap());
+    let mut st = sess.init_state(42).unwrap();
+    let total = st.budget();
+
+    // --- evaluator: bound soundness -----------------------------------------
+    let ev = Evaluator::new(&sess, &train_ds, 2).unwrap();
+    assert_eq!(ev.num_batches(), 2);
+    let params = ev.upload_params(&st.params).unwrap();
+    let acc = ev.accuracy(&params, st.mask.dense()).unwrap();
+    assert!((0.0..=100.0).contains(&acc));
+    // A bound below the true accuracy must not cut; far above must cut.
+    let kept = ev
+        .accuracy_bounded(&params, st.mask.dense(), (acc - 1.0).max(0.0))
+        .unwrap();
+    assert_eq!(kept, Some(acc), "bound below truth must return the value");
+    let cut = ev.accuracy_bounded(&params, st.mask.dense(), 100.1).unwrap();
+    assert_eq!(cut, None, "unreachable bound must cut");
+
+    // --- trial scan: honest outputs -----------------------------------------
+    let mut rng = Rng::new(1);
+    let sampler = BlockSampler::new(cdnl::config::Granularity::Pixel, sess.info());
+    let scan =
+        scan_trials(&ev, &params, &st.mask, &sampler, 50, 4, -1000.0, acc, &mut rng).unwrap();
+    // ADT = -1000 is unreachable => no early accept, all 4 trials evaluated.
+    assert!(!scan.early_accept);
+    assert_eq!(scan.evaluated, 4);
+    assert_eq!(scan.chosen.removed.len(), 50);
+    for &i in &scan.chosen.removed {
+        assert!(st.mask.is_present(i), "scan proposed an absent ReLU");
+    }
+    let scan_easy =
+        scan_trials(&ev, &params, &st.mask, &sampler, 50, 4, 1000.0, acc, &mut rng).unwrap();
+    assert!(scan_easy.early_accept, "ADT=1000%% must accept the first trial");
+    assert_eq!(scan_easy.evaluated, 1);
+
+    // --- the full BCD loop ----------------------------------------------------
+    let cfg = BcdConfig {
+        drc: 64,
+        rt: 3,
+        adt: 0.5,
+        finetune_steps: 0, // keep the test off the train_step compile path
+        finetune_lr: 0.0,
+        proxy_batches: 2,
+        seed: 0xB0B,
+        ..Default::default()
+    };
+    // A target that does NOT divide evenly by DRC: 3 full steps + remainder.
+    let target = total - 3 * 64 - 17;
+    let before = st.mask.clone();
+    let out = run_bcd(&sess, &mut st, &train_ds, target, &cfg, 1).unwrap();
+
+    assert_eq!(st.budget(), target, "BCD must land exactly on the target");
+    assert_eq!(out.final_budget, target);
+    assert_eq!(out.iterations.len(), 4, "ceil((3*64+17)/64) = 4 iterations");
+    assert_eq!(out.iterations.last().unwrap().budget_after, target);
+    // Sparse-by-design: the final mask is a strict subset of the start mask.
+    assert_eq!(st.mask.containment(&before), 1.0);
+    st.mask.check_invariants().unwrap();
+    // Budgets strictly decrease across iterations.
+    let mut prev = total;
+    for rec in &out.iterations {
+        assert!(rec.budget_after < prev, "budget did not decrease at t={}", rec.t);
+        assert!(rec.trials_evaluated >= 1 && rec.trials_evaluated <= cfg.rt);
+        prev = rec.budget_after;
+    }
+    // Snapshots were recorded each iteration and shrink monotonically.
+    assert_eq!(out.snapshots.len(), 4);
+    for w in out.snapshots.windows(2) {
+        assert!(w[1].0 < w[0].0);
+        // Later masks are contained in earlier ones (never-revisit).
+        assert_eq!(w[1].1.containment(&w[0].1), 1.0);
+    }
+
+    // --- error paths -----------------------------------------------------------
+    assert!(
+        run_bcd(&sess, &mut st, &train_ds, target + 10, &cfg, 0).is_err(),
+        "target above current budget must be rejected"
+    );
+    let bad = BcdConfig { drc: 0, ..cfg.clone() };
+    assert!(run_bcd(&sess, &mut st, &train_ds, 10, &bad, 0).is_err());
+
+    // --- determinism: same seed, same chosen masks ------------------------------
+    let mut st_a = sess.init_state(42).unwrap();
+    let mut st_b = sess.init_state(42).unwrap();
+    let cfg2 = BcdConfig { drc: 80, rt: 2, ..cfg.clone() };
+    run_bcd(&sess, &mut st_a, &train_ds, total - 160, &cfg2, 0).unwrap();
+    run_bcd(&sess, &mut st_b, &train_ds, total - 160, &cfg2, 0).unwrap();
+    assert_eq!(
+        st_a.mask.dense(),
+        st_b.mask.dense(),
+        "same seed must replay bit-exactly"
+    );
+
+    // --- mask containment metric on live masks (Fig. 6 machinery) --------------
+    let m_small: &Mask = &st.mask;
+    assert!(m_small.containment(&before) > 0.999);
+}

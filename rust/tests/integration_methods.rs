@@ -1,0 +1,142 @@
+//! Baseline-method integration over the real runtime: SNL, AutoReP, SENet
+//! and DeepReDuce all reach exact budgets and leave consistent state.
+//! This is the expensive test binary (compiles train/snl/kd steps once);
+//! every method run is kept tiny.
+
+use cdnl::config::{SnlConfig, TrainConfig};
+use cdnl::coordinator::train::train;
+use cdnl::data::synth;
+use cdnl::methods::autorep::{run_autorep, AutorepConfig};
+use cdnl::methods::deepreduce::{run_deepreduce, DeepReduceConfig};
+use cdnl::methods::senet::{run_senet, SenetConfig};
+use cdnl::methods::snl::{consecutive_iou, run_snl};
+use cdnl::model::ModelState;
+use cdnl::runtime::engine::Engine;
+use cdnl::runtime::session::Session;
+use std::path::Path;
+
+#[test]
+fn methods_reach_exact_budgets() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new(Path::new("artifacts")).unwrap();
+    let sess = Session::new(&engine, "resnet_16x16_c10").unwrap();
+    let (train_ds, _) = synth::generate(synth::by_name("synth10").unwrap());
+    let total = sess.info().total_relus();
+
+    // --- a few real SGD steps move the loss ---------------------------------
+    let mut st = sess.init_state(7).unwrap();
+    let tcfg = TrainConfig { steps: 6, lr: 5e-3, warmup_steps: 2, batch: sess.batch, seed: 1 };
+    let stats = train(&sess, &mut st, &train_ds, &tcfg).unwrap();
+    assert_eq!(stats.losses.len(), 6);
+    assert!(
+        stats.losses.last().unwrap() < stats.losses.first().unwrap(),
+        "training loss did not decrease: {:?}",
+        stats.losses
+    );
+    let trained = st.clone();
+
+    // --- SNL: budget trace decreases, snapshots produced, exact landing ----
+    let snl_cfg = SnlConfig {
+        lambda0: 4e-3,
+        kappa: 1.3,
+        stall_patience: 2,
+        threshold: 0.5,
+        steps_per_check: 4,
+        max_steps: 24,
+        lr: 1e-2,
+        alpha_lr: 1.0,
+        finetune_steps: 2,
+        finetune_lr: 1e-3,
+        seed: 3,
+    };
+    let target = total - 400;
+    let mut st_snl = trained.clone();
+    let out = run_snl(&sess, &mut st_snl, &train_ds, target, &snl_cfg, 4).unwrap();
+    assert_eq!(st_snl.budget(), target, "SNL must land exactly");
+    assert_eq!(out.final_budget, target);
+    assert!(!out.budget_trace.is_empty());
+    assert!(!out.snapshots.is_empty());
+    assert_eq!(out.alpha_traces.len(), 4);
+    for tr in &out.alpha_traces {
+        assert_eq!(tr.len(), out.budget_trace.len());
+        assert!(tr.iter().all(|a| (0.0..=1.0).contains(a)), "alpha out of range");
+    }
+    // IoU of consecutive snapshots is high (paper Fig. 6: > 0.85); with our
+    // short run it should be very high.
+    for iou in consecutive_iou(&out.snapshots) {
+        assert!(iou > 0.5, "consecutive IoU collapsed: {iou}");
+    }
+    st_snl.mask.check_invariants().unwrap();
+
+    // --- SENet: allocation + KD, exact landing ------------------------------
+    let mut st_se = trained.clone();
+    let se_cfg = SenetConfig {
+        proxy_batches: 1,
+        layer_trials: 2,
+        kd_steps: 3,
+        kd_lr: 1e-3,
+        kd_temp: 4.0,
+        seed: 5,
+    };
+    let se_target = total / 2;
+    let out = run_senet(&sess, &mut st_se, &train_ds, se_target, &se_cfg).unwrap();
+    assert_eq!(st_se.budget(), se_target);
+    assert_eq!(out.sensitivity.len(), sess.info().mask_layers.len());
+    assert_eq!(out.allocation.iter().sum::<usize>(), se_target);
+    for (a, e) in out.allocation.iter().zip(&sess.info().mask_layers) {
+        assert!(a <= &e.size);
+    }
+    st_se.mask.check_invariants().unwrap();
+
+    // --- DeepReDuce: whole layers drop, exact landing ------------------------
+    let mut st_dr = trained.clone();
+    let dr_cfg = DeepReduceConfig {
+        proxy_batches: 1,
+        finetune_steps: 2,
+        finetune_lr: 1e-3,
+        seed: 6,
+    };
+    let dr_target = total / 3;
+    let out = run_deepreduce(&sess, &mut st_dr, &train_ds, dr_target, &dr_cfg).unwrap();
+    assert_eq!(st_dr.budget(), dr_target);
+    assert!(!out.dropped_layers.is_empty(), "no layer was fully dropped");
+    let hist = st_dr.mask.layer_histogram(sess.info());
+    for &l in &out.dropped_layers {
+        assert_eq!(hist[l], 0, "dropped layer {l} still has ReLUs");
+    }
+
+    // --- checkpoint roundtrip through a method output ------------------------
+    let path = std::env::temp_dir().join("cdnl_it_methods/snl.cdnl");
+    st_snl.save(&path).unwrap();
+    let back = ModelState::load(&path, sess.info()).unwrap();
+    assert_eq!(back.budget(), target);
+    assert_eq!(back.mask.dense(), st_snl.mask.dense());
+    assert_eq!(back.params.data, st_snl.params.data);
+
+    // --- AutoReP on the poly variant ------------------------------------------
+    let sess_p = Session::new(&engine, "resnet_16x16_c20_poly").unwrap();
+    let (train_100, _) = synth::generate(synth::by_name("synth100").unwrap());
+    let mut st_p = sess_p.init_state(9).unwrap();
+    let ar_cfg = AutorepConfig {
+        base: SnlConfig {
+            steps_per_check: 4,
+            max_steps: 16,
+            finetune_steps: 2,
+            ..snl_cfg.clone()
+        },
+        hysteresis: 0.2,
+    };
+    let p_total = sess_p.info().total_relus();
+    let p_target = p_total - 300;
+    let out = run_autorep(&sess_p, &mut st_p, &train_100, p_target, &ar_cfg).unwrap();
+    assert_eq!(st_p.budget(), p_target);
+    assert!(!out.budget_trace.is_empty());
+    st_p.mask.check_invariants().unwrap();
+
+    // AutoReP must refuse non-poly sessions.
+    let mut st_bad = trained.clone();
+    assert!(run_autorep(&sess, &mut st_bad, &train_ds, 100, &ar_cfg).is_err());
+}

@@ -1,0 +1,116 @@
+//! Runtime integration: HLO-text artifacts load, compile and execute with
+//! correct semantics through the PJRT CPU client.
+//!
+//! One #[test] running staged checks sequentially — a PJRT client per test
+//! thread is wasteful, and Engine is deliberately !Sync. Requires
+//! `make artifacts`; skips (with a message) when artifacts/ is absent.
+
+use cdnl::model::Mask;
+use cdnl::runtime::engine::Engine;
+use cdnl::runtime::session::Session;
+use cdnl::tensor::{Tensor, TensorI32};
+use std::path::Path;
+
+const MODEL: &str = "resnet_16x16_c10";
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        None
+    }
+}
+
+#[test]
+fn runtime_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let engine = Engine::new(dir).expect("engine");
+    let sess = Session::new(&engine, MODEL).expect("session");
+    let info = sess.info();
+    let batch = sess.batch;
+
+    // --- manifest sanity --------------------------------------------------
+    assert!(info.param_size > 0 && info.mask_size > 0);
+    assert_eq!(info.num_classes, 10);
+    assert!(Session::new(&engine, "no_such_model").is_err());
+
+    // --- init: deterministic in the seed, seed-sensitive -------------------
+    let p1 = sess.init(7).expect("init");
+    let p2 = sess.init(7).expect("init");
+    let p3 = sess.init(8).expect("init");
+    assert_eq!(p1.data, p2.data, "init must be deterministic");
+    assert_ne!(p1.data, p3.data, "different seeds must differ");
+    assert_eq!(p1.len(), info.param_size);
+    assert!(p1.data.iter().all(|v| v.is_finite()));
+
+    // --- forward: shape + mask sensitivity ---------------------------------
+    let full = vec![1.0f32; info.mask_size];
+    let zero = vec![0.0f32; info.mask_size];
+    let mut x = Tensor::zeros(vec![batch, info.channels, info.image_size, info.image_size]);
+    // Deterministic pseudo-images.
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i % 37) as f32 - 18.0) / 18.0;
+    }
+    let logits_full = sess.forward(&p1, &full, &x).expect("forward");
+    assert_eq!(logits_full.shape, vec![batch, info.num_classes]);
+    let logits_lin = sess.forward(&p1, &zero, &x).expect("forward zero-mask");
+    assert_ne!(
+        logits_full.data, logits_lin.data,
+        "linearizing all ReLUs must change the output"
+    );
+    // Forward is pure: same inputs, same outputs.
+    let logits_again = sess.forward(&p1, &full, &x).expect("forward repeat");
+    assert_eq!(logits_full.data, logits_again.data);
+
+    // --- eval_batch agrees with forward-side argmax -------------------------
+    let y = TensorI32::new(vec![batch], (0..batch).map(|i| (i % 10) as i32).collect());
+    let out = sess.eval_batch(&p1, &full, &x, &y).expect("eval");
+    let preds = logits_full.argmax_rows().unwrap();
+    let want: f32 = preds
+        .iter()
+        .zip(&y.data)
+        .filter(|(p, &t)| **p == t as usize)
+        .count() as f32;
+    assert_eq!(out.correct, want, "eval_batch correct-count mismatch");
+    assert!(out.loss > 0.0 && out.loss.is_finite());
+
+    // --- literal path == buffer path ----------------------------------------
+    let pbuf = engine.upload_f32(&p1.data, &p1.shape).expect("upload p");
+    let mbuf = engine.upload_f32(&full, &[full.len()]).expect("upload m");
+    let (xbuf, ybuf) = sess.upload_batch(&x, &y).expect("upload batch");
+    let out_b = sess.eval_batch_b(&pbuf, &mbuf, &xbuf, &ybuf).expect("eval_b");
+    assert_eq!(out.correct, out_b.correct, "buffer path diverges from literal path");
+    assert!((out.loss - out_b.loss).abs() < 1e-5);
+
+    // --- input validation errors are readable, not aborts -------------------
+    let bad = Tensor::zeros(vec![3]);
+    let err = match engine.call(MODEL, "forward", &[bad.to_literal().unwrap()]) {
+        Ok(_) => panic!("arity error not detected"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("inputs"), "unhelpful arity error: {err}");
+
+    // --- masks: partial linearization moves logits monotonically-ish --------
+    // (not a strict property, but removing *some* ReLUs must produce output
+    // between "no change" and "all removed" in the sense of being different
+    // from both with overwhelming probability)
+    let mut half = Mask::full(info.mask_size);
+    for i in 0..info.mask_size / 2 {
+        half.remove(i).unwrap();
+    }
+    let logits_half = sess.forward(&p1, half.dense(), &x).expect("half");
+    assert_ne!(logits_half.data, logits_full.data);
+    assert_ne!(logits_half.data, logits_lin.data);
+
+    // --- stats accounting ----------------------------------------------------
+    let stats = engine.stats();
+    let fwd_stats = stats.get(&format!("{MODEL}:forward")).expect("forward stats");
+    assert_eq!(fwd_stats.calls, 4);
+    assert!(fwd_stats.compile_secs > 0.0);
+    let eval_stats = stats.get(&format!("{MODEL}:eval_batch")).expect("eval stats");
+    assert_eq!(eval_stats.calls, 2);
+}

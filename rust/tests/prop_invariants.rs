@@ -1,0 +1,315 @@
+//! Property-based tests on coordinator invariants (mask state, budget
+//! allocation, selection, JSON, config) — no PJRT engine required.
+//!
+//! Uses the in-tree mini property harness (`cdnl::util::prop`): seeded
+//! generators + shrinking, DESIGN.md §0's proptest substitute.
+
+use cdnl::methods::{senet::allocate_budget, top_k_mask};
+use cdnl::model::Mask;
+use cdnl::util::json;
+use cdnl::util::prng::Rng;
+use cdnl::util::prop::check;
+
+/// Random removal sequences keep every Mask view consistent.
+#[test]
+fn prop_mask_removal_invariants() {
+    check(
+        0xA11CE,
+        60,
+        |r| {
+            let size = r.usize_below(300) + 2;
+            let removals = r.usize_below(size.min(64));
+            (size, removals)
+        },
+        |&(size, removals)| {
+            let mut rng = Rng::new(size as u64 * 31 + removals as u64);
+            let mut m = Mask::full(size);
+            for _ in 0..removals {
+                if m.count() == 0 {
+                    break;
+                }
+                let pick = m.sample_present(&mut rng, 1)[0];
+                m.remove(pick).map_err(|e| e.to_string())?;
+            }
+            m.check_invariants().map_err(|e| e.to_string())?;
+            let dense_count = m.dense().iter().filter(|&&v| v == 1.0).count();
+            if dense_count != m.count() {
+                return Err(format!("dense {} != count {}", dense_count, m.count()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// sample_present never returns absent or duplicate indices.
+#[test]
+fn prop_mask_sampling_sound() {
+    check(
+        0xBEEF,
+        60,
+        |r| {
+            let size = r.usize_below(200) + 10;
+            let removed = r.usize_below(size / 2);
+            let k = r.usize_below(size - removed - 1) + 1;
+            (size, (removed, k))
+        },
+        |&(size, (removed, k))| {
+            let mut rng = Rng::new(size as u64 ^ 0x9E37);
+            let mut m = Mask::full(size);
+            for i in 0..removed {
+                m.remove(i).unwrap();
+            }
+            let s = m.sample_present(&mut rng, k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            if set.len() != k {
+                return Err(format!("duplicates in sample {s:?}"));
+            }
+            for &i in &s {
+                if !m.is_present(i) {
+                    return Err(format!("sampled absent index {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// hypothesis_into equals clone+apply_removal (pure vs destructive paths).
+#[test]
+fn prop_hypothesis_matches_apply() {
+    check(
+        0xCAFE,
+        60,
+        |r| {
+            let size = r.usize_below(150) + 5;
+            let k = r.usize_below(size.min(20)) + 1;
+            (size, k)
+        },
+        |&(size, k)| {
+            let mut rng = Rng::new(size as u64 * 7919 + k as u64);
+            let mut base = Mask::full(size);
+            // Remove a random prefix to make the present set non-trivial.
+            for i in 0..size / 3 {
+                base.remove(i).unwrap();
+            }
+            if k > base.count() {
+                return Ok(());
+            }
+            let removed = base.sample_present(&mut rng, k);
+            let mut scratch = Vec::new();
+            base.hypothesis_into(&removed, &mut scratch);
+            let mut applied = base.clone();
+            applied.apply_removal(&removed).unwrap();
+            if scratch != applied.dense() {
+                return Err("hypothesis dense != applied dense".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Budget allocation is exact, capped, and monotone in sensitivity.
+#[test]
+fn prop_allocation_exact_and_capped() {
+    check(
+        0xD00D,
+        80,
+        |r| {
+            let n = r.usize_below(12) + 1;
+            let sizes: Vec<usize> = (0..n).map(|_| r.usize_below(500) + 1).collect();
+            let sens: Vec<usize> = (0..n).map(|_| r.usize_below(1000)).collect();
+            let total: usize = sizes.iter().sum();
+            let budget = r.usize_below(total + 1);
+            (sizes, (sens, budget))
+        },
+        |&(ref sizes, (ref sens, budget))| {
+            let sens_f: Vec<f64> = sens.iter().map(|&s| s as f64 / 100.0).collect();
+            let alloc = allocate_budget(&sens_f, sizes, budget);
+            if alloc.iter().sum::<usize>() != budget {
+                return Err(format!("sum {} != budget {budget}", alloc.iter().sum::<usize>()));
+            }
+            for (a, s) in alloc.iter().zip(sizes) {
+                if a > s {
+                    return Err(format!("alloc {a} > size {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// top_k_mask always hits the budget exactly and keeps the largest scores.
+#[test]
+fn prop_top_k_exact() {
+    check(
+        0xF00D,
+        80,
+        |r| {
+            let n = r.usize_below(200) + 1;
+            let k = r.usize_below(n + 1);
+            (n, k)
+        },
+        |&(n, k)| {
+            let mut rng = Rng::new(n as u64 * 13 + k as u64);
+            let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let m = top_k_mask(&scores, k);
+            if m.count() != k {
+                return Err(format!("count {} != k {k}", m.count()));
+            }
+            // Every kept score >= every dropped score.
+            let kept_min = (0..n)
+                .filter(|&i| m.is_present(i))
+                .map(|i| scores[i])
+                .fold(f32::INFINITY, f32::min);
+            let dropped_max = (0..n)
+                .filter(|&i| !m.is_present(i))
+                .map(|i| scores[i])
+                .fold(f32::NEG_INFINITY, f32::max);
+            if k > 0 && k < n && kept_min < dropped_max {
+                return Err(format!("kept min {kept_min} < dropped max {dropped_max}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Containment is 1.0 against a superset and multiplicative removals only
+/// lower it against unrelated masks.
+#[test]
+fn prop_containment_bounds() {
+    check(
+        0x10,
+        60,
+        |r| {
+            let size = r.usize_below(100) + 4;
+            let k = r.usize_below(size / 2) + 1;
+            (size, k)
+        },
+        |&(size, k)| {
+            let mut rng = Rng::new(size as u64 + (k as u64) << 3);
+            let full = Mask::full(size);
+            let mut sub = full.clone();
+            let rem = sub.sample_present(&mut rng, k);
+            sub.apply_removal(&rem).unwrap();
+            let c = sub.containment(&full);
+            if (c - 1.0).abs() > 1e-12 {
+                return Err(format!("subset containment {c} != 1"));
+            }
+            let c2 = full.containment(&sub);
+            let want = sub.count() as f64 / full.count() as f64;
+            if (c2 - want).abs() > 1e-12 {
+                return Err(format!("superset containment {c2} != {want}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// JSON writer output re-parses to the same structure (fuzzed trees).
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_json(r: &mut Rng, depth: usize) -> json::Json {
+        match if depth == 0 { r.usize_below(3) } else { r.usize_below(5) } {
+            0 => json::Json::num((r.usize_below(100000) as f64) / 10.0),
+            1 => json::Json::str(&format!("s{}", r.usize_below(1000))),
+            2 => json::Json::Bool(r.f32() > 0.5),
+            3 => json::Json::arr((0..r.usize_below(4)).map(|_| gen_json(r, depth - 1))),
+            _ => {
+                let n = r.usize_below(4);
+                json::Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), gen_json(r, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    let mut rng = Rng::new(0x15);
+    for _ in 0..100 {
+        let v = gen_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("reparse {text}: {e}"));
+        assert_eq!(back.to_string(), text, "unstable roundtrip for {text}");
+    }
+}
+
+/// Config apply() accepts exactly its documented keys (round-trip fuzz on
+/// numeric fields).
+#[test]
+fn prop_config_numeric_fields_roundtrip() {
+    check(
+        0x31337,
+        50,
+        |r| (r.usize_below(500) + 1, r.usize_below(100) + 1),
+        |&(drc, rt)| {
+            let mut e = cdnl::config::Experiment::default();
+            e.apply("bcd.drc", &drc.to_string()).map_err(|x| x)?;
+            e.apply("bcd.rt", &rt.to_string()).map_err(|x| x)?;
+            if e.bcd.drc != drc || e.bcd.rt != rt {
+                return Err("numeric field did not round-trip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Removing a whole layer then checking histogram slots zero out.
+#[test]
+fn prop_layer_histogram_consistent() {
+    use cdnl::runtime::manifest::{ModelInfo, PackEntry};
+    check(
+        0x77,
+        40,
+        |r| {
+            let layers = r.usize_below(6) + 1;
+            let sizes: Vec<usize> = (0..layers).map(|_| r.usize_below(50) + 1).collect();
+            (sizes, 0usize)
+        },
+        |&(ref sizes, _)| {
+            let mut off = 0;
+            let mask_layers: Vec<PackEntry> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    let e = PackEntry {
+                        name: format!("l{i}"),
+                        shape: vec![s],
+                        offset: off,
+                        size: s,
+                    };
+                    off += s;
+                    e
+                })
+                .collect();
+            let info = ModelInfo {
+                key: "t".into(),
+                backbone: "resnet".into(),
+                num_classes: 2,
+                image_size: 4,
+                channels: 3,
+                poly: false,
+                param_size: 1,
+                mask_size: off,
+                mask_layers,
+                param_entries: vec![],
+                artifacts: Default::default(),
+            };
+            let mut m = Mask::full(off);
+            let hist0 = m.layer_histogram(&info);
+            if hist0 != *sizes {
+                return Err(format!("full histogram {hist0:?} != sizes {sizes:?}"));
+            }
+            let victim = sizes.len() / 2;
+            m.remove_layer(&info, victim);
+            let hist = m.layer_histogram(&info);
+            if hist[victim] != 0 {
+                return Err(format!("layer {victim} not emptied: {hist:?}"));
+            }
+            let expect: usize = sizes.iter().sum::<usize>() - sizes[victim];
+            if m.count() != expect {
+                return Err(format!("count {} != {expect}", m.count()));
+            }
+            Ok(())
+        },
+    );
+}
