@@ -5,6 +5,7 @@
 //!   - trial scan with vs without the early-exit accuracy bound (opt 2)
 //!   - per-trial mask hypothesis cost (zero-alloc scratch, opt 3)
 //!   - host->device upload costs by tensor size
+//!   - parallel trial-scan throughput across worker counts (opt 4)
 //!   - end-to-end BCD iteration throughput
 
 #[path = "common/mod.rs"]
@@ -15,6 +16,7 @@ use cdnl::coordinator::trials::{scan_trials, BlockSampler};
 use cdnl::data::synth;
 use cdnl::metrics::write_csv;
 use cdnl::runtime::session::Session;
+use cdnl::runtime::Backend;
 use cdnl::util::bench::{print_results, summarize, time};
 use cdnl::util::prng::Rng;
 
@@ -24,26 +26,41 @@ fn main() -> anyhow::Result<()> {
     let sess = Session::new(&engine, "resnet_16x16_c10")?;
     let (train_ds, _) = synth::generate(synth::by_name("synth10").unwrap());
     let st = sess.init_state(1)?;
-    let info = sess.info();
+    let info = sess.info().clone();
     let (iters, warmup) = if common::full_mode() { (30, 5) } else { (10, 2) };
 
     let mut results = Vec::new();
 
     // --- upload costs ------------------------------------------------------
     let mask = vec![1.0f32; info.mask_size];
-    results.push(time("upload mask [17K f32]", warmup, iters, || {
-        let _ = engine.upload_f32(&mask, &[mask.len()]).unwrap();
-    }));
-    results.push(time("upload params [176K f32]", warmup, iters, || {
-        let _ = engine.upload_f32(&st.params.data, &st.params.shape).unwrap();
-    }));
+    results.push(time(
+        &format!("upload mask [{} f32]", mask.len()),
+        warmup,
+        iters,
+        || {
+            let _ = engine.upload_f32(&mask, &[mask.len()]).unwrap();
+        },
+    ));
+    results.push(time(
+        &format!("upload params [{} f32]", st.params.len()),
+        warmup,
+        iters,
+        || {
+            let _ = engine.upload_f32(&st.params.data, &st.params.shape).unwrap();
+        },
+    ));
     let (x, y) = train_ds.batch_at(0, sess.batch);
-    results.push(time("upload batch x+y [98K f32]", warmup, iters, || {
-        let _ = sess.upload_batch(&x, &y).unwrap();
-    }));
+    results.push(time(
+        &format!("upload batch x+y [{} f32]", x.len()),
+        warmup,
+        iters,
+        || {
+            let _ = sess.upload_batch(&x, &y).unwrap();
+        },
+    ));
 
-    // --- eval: literal vs buffer path ---------------------------------------
-    results.push(time("eval_batch literal path", warmup, iters, || {
+    // --- eval: host path vs buffer path -------------------------------------
+    results.push(time("eval_batch host path", warmup, iters, || {
         let _ = sess.eval_batch(&st.params, &mask, &x, &y).unwrap();
     }));
     let pbuf = engine.upload_f32(&st.params.data, &st.params.shape)?;
@@ -54,6 +71,7 @@ fn main() -> anyhow::Result<()> {
     }));
 
     // --- trial scan: bound on vs off ----------------------------------------
+    let drc = (info.mask_size / 20).max(1);
     let ev = Evaluator::new(&sess, &train_ds, 2)?;
     let params = ev.upload_params(&st.params)?;
     let base = ev.accuracy(&params, st.mask.dense())?;
@@ -62,13 +80,22 @@ fn main() -> anyhow::Result<()> {
     let sampler = BlockSampler::new(cdnl::config::Granularity::Pixel, sess.info());
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
-    let scan = scan_trials(&ev, &params, &st.mask, &sampler, 100, 8, -1e9, base, &mut rng)?;
+    let scan =
+        scan_trials(&ev, &params, &st.mask, &sampler, drc, 8, -1e9, base, &mut rng, 1)?;
     let bounded_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    // Replay scan_trials' exact draw procedure (per-index fork + dedup) so
+    // both timings score the identical hypothesis set.
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
     let mut scratch = Vec::new();
-    for _ in 0..8 {
-        let removed = st.mask.sample_present(&mut rng, 100);
+    let mut seen = std::collections::HashSet::new();
+    for t in 0..8u64 {
+        let mut trial_rng = rng.fork(t);
+        let mut removed = sampler.sample(&st.mask, &mut trial_rng, drc);
+        removed.sort_unstable();
+        if !seen.insert(removed.clone()) {
+            continue;
+        }
         st.mask.hypothesis_into(&removed, &mut scratch);
         let _ = ev.accuracy(&params, &scratch)?; // no bound: full evaluation
     }
@@ -80,17 +107,49 @@ fn main() -> anyhow::Result<()> {
         scan.bounded, scan.evaluated, scan.bounded
     );
 
+    // --- parallel trial scan: worker sweep -----------------------------------
+    // Unreachable ADT so every worker count scores the full RT hypotheses;
+    // throughput = hypotheses/sec. The outcome must be identical at every
+    // worker count (deterministic merge) — verified as we sweep.
+    let sweep_rt = if common::full_mode() { 32 } else { 16 };
+    let mut sweep_rows = Vec::new();
+    let mut reference_outcome = None;
+    for &w in &[1usize, 2, 4, 8] {
+        let mut rng = Rng::new(21);
+        let t0 = std::time::Instant::now();
+        let out = scan_trials(
+            &ev, &params, &st.mask, &sampler, drc, sweep_rt, -1e9, base, &mut rng, w,
+        )?;
+        let secs = t0.elapsed().as_secs_f64();
+        let hps = out.evaluated as f64 / secs;
+        match &reference_outcome {
+            None => reference_outcome = Some(out.clone()),
+            Some(r) => assert_eq!(r, &out, "worker count {w} changed the scan outcome"),
+        }
+        println!("scan workers={w}: {hps:7.1} hypotheses/sec ({:.1} ms)", 1000.0 * secs);
+        results.push(summarize(
+            &format!("trial scan x{sweep_rt}, workers={w}"),
+            vec![1000.0 * secs],
+        ));
+        sweep_rows.push(vec![w.to_string(), format!("{hps:.1}"), format!("{:.2}", 1000.0 * secs)]);
+    }
+    write_csv(
+        &common::results_csv("perf_scan_workers"),
+        &["workers", "hypotheses_per_sec", "total_ms"],
+        &sweep_rows,
+    )?;
+
     // --- mask hypothesis cost (pure host) ------------------------------------
     let mut rng2 = Rng::new(9);
     results.push(time("mask sample+hypothesis (host)", warmup, 1000, || {
-        let removed = st.mask.sample_present(&mut rng2, 100);
+        let removed = st.mask.sample_present(&mut rng2, drc);
         st.mask.hypothesis_into(&removed, &mut scratch);
     }));
 
     // --- end-to-end BCD iteration throughput ---------------------------------
     let mut st2 = sess.init_state(2)?;
     let cfg = cdnl::config::BcdConfig {
-        drc: 100,
+        drc,
         rt: 4,
         adt: 0.3,
         finetune_steps: 4,
@@ -99,7 +158,7 @@ fn main() -> anyhow::Result<()> {
         seed: 3,
         ..Default::default()
     };
-    let target = st2.budget() - 400;
+    let target = st2.budget() - 4 * drc;
     let t0 = std::time::Instant::now();
     let out = cdnl::coordinator::bcd::run_bcd(&sess, &mut st2, &train_ds, target, &cfg, 0)?;
     let secs = t0.elapsed().as_secs_f64();

@@ -6,6 +6,8 @@
 #[path = "common/mod.rs"]
 mod common;
 
+use cdnl::runtime::Backend;
+
 use cdnl::metrics::{print_table, write_csv};
 use cdnl::util::fmt_relu_count;
 
@@ -15,7 +17,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     let mut csv = Vec::new();
-    for (key, m) in &engine.manifest.models {
+    for (key, m) in &engine.manifest().models {
         if m.poly {
             continue; // the paper's table counts the identity-replacement nets
         }
@@ -47,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     )?;
 
     // Shape criteria.
-    let g = |k: &str| engine.manifest.models[k].mask_size as f64;
+    let g = |k: &str| engine.manifest().models[k].mask_size as f64;
     assert!(g("wrn_16x16_c10") > g("resnet_16x16_c10"), "wider net must have more ReLUs");
     let r_ratio = g("resnet_32x32_c20") / g("resnet_16x16_c20");
     let w_ratio = g("wrn_32x32_c20") / g("wrn_16x16_c20");

@@ -8,6 +8,8 @@
 #[path = "common/mod.rs"]
 mod common;
 
+use cdnl::runtime::Backend;
+
 fn main() -> anyhow::Result<()> {
     common::banner("table2", "WideResNet-22-8: SNL vs Ours across budgets");
     let engine = common::engine();
@@ -22,8 +24,8 @@ fn main() -> anyhow::Result<()> {
     ];
     for (dataset, paper_budgets, quick_n) in grids {
         let key = common::experiment(dataset, "wrn", false).model_key();
-        let total = engine.manifest.models[&key].mask_size;
-        let size = engine.manifest.models[&key].image_size;
+        let total = engine.manifest().models[&key].mask_size;
+        let size = engine.manifest().models[&key].image_size;
         let budgets: Vec<usize> = common::grid(paper_budgets, *quick_n)
             .iter()
             .map(|&b| common::scale_budget(b, total, "wrn", size).max(50))

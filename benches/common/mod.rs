@@ -13,7 +13,7 @@
 #![allow(dead_code)]
 
 use cdnl::config::Experiment;
-use cdnl::runtime::engine::Engine;
+use cdnl::runtime::Backend;
 use std::path::{Path, PathBuf};
 
 /// Paper Table 1 totals [#ReLUs] for scaling budgets to our backbones.
@@ -95,7 +95,7 @@ pub struct PointResult {
 /// each target vs BCD ("ours") run from the SNL reference at B_ref.
 /// All stages go through the shared zoo cache.
 pub fn snl_vs_ours(
-    engine: &Engine,
+    engine: &dyn Backend,
     dataset: &str,
     backbone: &str,
     budgets: &[usize],
@@ -164,9 +164,13 @@ pub fn report_snl_vs_ours(id: &str, title: &str, points: &[PointResult]) -> anyh
     Ok(())
 }
 
-pub fn engine() -> Engine {
+/// The bench backend: PJRT over `artifacts/` when available (and compiled
+/// in), otherwise the pure-Rust reference backend.
+pub fn engine() -> Box<dyn Backend> {
     cdnl::util::logging::init();
-    Engine::new(Path::new("artifacts")).expect("run `make artifacts` first")
+    let be = cdnl::runtime::open_backend(Path::new("artifacts"), "auto").expect("backend");
+    println!("backend: {}", be.name());
+    be
 }
 
 pub fn results_csv(id: &str) -> PathBuf {

@@ -12,12 +12,12 @@
 use cdnl::config::Experiment;
 use cdnl::methods::snl::{consecutive_iou, run_snl};
 use cdnl::pipeline::Pipeline;
-use cdnl::runtime::engine::Engine;
+use cdnl::runtime::open_backend;
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     cdnl::util::logging::init();
-    let engine = Engine::new(Path::new("artifacts"))?;
+    let engine = open_backend(Path::new("artifacts"), "auto")?;
 
     let mut exp = Experiment::default();
     exp.dataset = "synth10".into();

@@ -10,13 +10,13 @@
 
 use cdnl::config::Experiment;
 use cdnl::pipeline::Pipeline;
-use cdnl::runtime::engine::Engine;
+use cdnl::runtime::open_backend;
 use cdnl::util::fmt_relu_count;
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     cdnl::util::logging::init();
-    let engine = Engine::new(Path::new("artifacts"))?;
+    let engine = open_backend(Path::new("artifacts"), "auto")?;
 
     // An Experiment bundles dataset + backbone + all hyperparameters.
     let mut exp = Experiment::default();

@@ -95,6 +95,10 @@ pub struct BcdConfig {
     pub proxy_batches: usize,
     /// RNG seed for trial sampling.
     pub seed: u64,
+    /// Worker threads for the parallel trial scan; 0 = available
+    /// parallelism. The scan outcome is identical for every worker count
+    /// (deterministic merge), so this is purely a throughput knob.
+    pub workers: usize,
 }
 
 impl Default for BcdConfig {
@@ -110,6 +114,18 @@ impl Default for BcdConfig {
             finetune_lr: 1e-2,
             proxy_batches: 2,
             seed: 0xC0DE,
+            workers: 0,
+        }
+    }
+}
+
+impl BcdConfig {
+    /// Resolve the `workers` knob: 0 means all available parallelism.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.workers
         }
     }
 }
@@ -253,6 +269,7 @@ impl Experiment {
             "bcd.finetune_lr" => self.bcd.finetune_lr = p!(value),
             "bcd.proxy_batches" => self.bcd.proxy_batches = p!(value),
             "bcd.seed" => self.bcd.seed = p!(value),
+            "bcd.workers" => self.bcd.workers = p!(value),
             "snl.lambda0" => self.snl.lambda0 = p!(value),
             "snl.kappa" => self.snl.kappa = p!(value),
             "snl.stall_patience" => self.snl.stall_patience = p!(value),
@@ -364,9 +381,13 @@ mod tests {
     #[test]
     fn apply_and_file() {
         let mut e = Experiment::default();
-        e.apply_file("bcd.drc = 50\n# comment\nsnl.kappa = 1.5\n").unwrap();
+        e.apply_file("bcd.drc = 50\n# comment\nsnl.kappa = 1.5\nbcd.workers = 3\n").unwrap();
         assert_eq!(e.bcd.drc, 50);
         assert!((e.snl.kappa - 1.5).abs() < 1e-6);
+        assert_eq!(e.bcd.workers, 3);
+        assert_eq!(e.bcd.effective_workers(), 3);
+        e.bcd.workers = 0;
+        assert!(e.bcd.effective_workers() >= 1, "auto must resolve to >= 1");
     }
 
     #[test]

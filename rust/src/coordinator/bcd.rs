@@ -7,6 +7,10 @@
 //! proxy-accuracy degradation (early-accepting under ADT), apply it
 //! permanently — removed ReLUs are never revisited, so every intermediate
 //! state is sparse by design — then finetune with cosine-annealed SGD.
+//!
+//! The per-iteration hypothesis scan fans out across `cfg.workers` threads
+//! (see [`crate::coordinator::trials`]); results are bit-identical for any
+//! worker count, so runs replay exactly regardless of the machine.
 
 use crate::config::BcdConfig;
 use crate::coordinator::eval::Evaluator;
@@ -70,8 +74,9 @@ pub fn run_bcd(
         bail!("BCD: drc and rt must be positive");
     }
     let t_est = (b_ref - b_target).div_ceil(cfg.drc);
+    let workers = cfg.effective_workers();
     crate::info!(
-        "bcd: {} -> {} ReLUs, T~{} iterations (DRC={} {:?}, RT={}, ADT={}%, {:?})",
+        "bcd: {} -> {} ReLUs, T~{} iterations (DRC={} {:?}, RT={}, ADT={}%, {:?}, workers={})",
         b_ref,
         b_target,
         t_est,
@@ -79,7 +84,8 @@ pub fn run_bcd(
         cfg.drc_schedule,
         cfg.rt,
         cfg.adt,
-        cfg.granularity
+        cfg.granularity,
+        workers
     );
 
     let wall0 = std::time::Instant::now();
@@ -109,7 +115,7 @@ pub fn run_bcd(
         let base_acc = ev.accuracy(&params, st.mask.dense())?;
 
         let ScanOutcome { chosen, evaluated, bounded, early_accept } = scan_trials(
-            &ev, &params, &st.mask, &sampler, drc, cfg.rt, cfg.adt, base_acc, &mut rng,
+            &ev, &params, &st.mask, &sampler, drc, cfg.rt, cfg.adt, base_acc, &mut rng, workers,
         )?;
         st.mask.apply_removal(&chosen.removed)?;
 

@@ -9,17 +9,50 @@
 //! 2. **Early-exit bound** — while scanning trials for the argmin
 //!    degradation, a trial is aborted as soon as even 100%-correct remaining
 //!    batches could not beat the incumbent.
+//!
+//! **Partial-batch accounting.** Backends run a fixed batch shape, so the
+//! final batch of a dataset that does not divide evenly is wrap-padded.
+//! The evaluator tracks the *valid* prefix of every batch: padded examples
+//! are excluded from the accuracy numerator (the padded tail of the last
+//! batch is re-scored exactly through the `forward` entry point) and from
+//! the denominator (`num_examples` is the true example count, not
+//! `batches * batch`), so neither the accuracy nor the early-exit bound is
+//! skewed.
 
 use crate::data::Dataset;
+use crate::runtime::backend::DeviceBuf;
 use crate::runtime::session::Session;
 use crate::tensor::Tensor;
 use anyhow::Result;
 
+/// One cached evaluation batch: device buffers plus the host-side labels
+/// needed to re-score a padded tail exactly.
+struct EvalBatch {
+    x: DeviceBuf,
+    y: DeviceBuf,
+    /// Host copy of the labels (only consulted for partial batches).
+    labels: Vec<i32>,
+    /// How many leading examples are real (== batch except possibly last).
+    valid: usize,
+}
+
+/// Outcome of scoring one mask hypothesis against the batch set.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrialEval {
+    /// The early-exit bound proved the trial cannot reach the floor.
+    Bounded,
+    /// Full evaluation: accuracy [%] plus the per-batch correct counts
+    /// (valid examples only) — the replay data the deterministic parallel
+    /// scan merge needs (see [`crate::coordinator::trials`]).
+    Scored { acc: f64, batch_corrects: Vec<f64> },
+}
+
 /// A fixed, device-resident set of evaluation batches.
 pub struct Evaluator<'e, 's> {
     sess: &'s Session<'e>,
-    batches: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    batches: Vec<EvalBatch>,
     batch: usize,
+    examples: usize,
 }
 
 impl<'e, 's> Evaluator<'e, 's> {
@@ -35,16 +68,22 @@ impl<'e, 's> Evaluator<'e, 's> {
         let avail = ds.len().div_ceil(batch);
         let n = max_batches.min(avail).max(1);
         let mut batches = Vec::with_capacity(n);
+        let mut examples = 0usize;
         for b in 0..n {
-            let (x, y) = ds.batch_at(b * batch, batch);
-            batches.push(sess.upload_batch(&x, &y)?);
+            let start = b * batch;
+            let (x, y) = ds.batch_at(start, batch);
+            let valid = batch.min(ds.len().saturating_sub(start)).max(1);
+            let labels = y.data.clone();
+            let (xb, yb) = sess.upload_batch(&x, &y)?;
+            examples += valid;
+            batches.push(EvalBatch { x: xb, y: yb, labels, valid });
         }
-        Ok(Evaluator { sess, batches, batch })
+        Ok(Evaluator { sess, batches, batch, examples })
     }
 
-    /// Number of examples this evaluator scores.
+    /// Number of *real* examples this evaluator scores (padding excluded).
     pub fn num_examples(&self) -> usize {
-        self.batches.len() * self.batch
+        self.examples
     }
 
     pub fn num_batches(&self) -> usize {
@@ -53,13 +92,50 @@ impl<'e, 's> Evaluator<'e, 's> {
 
     /// Upload a parameter vector for reuse across many [`Self::accuracy`]
     /// calls (one upload per BCD iteration, not per trial).
-    pub fn upload_params(&self, params: &Tensor) -> Result<xla::PjRtBuffer> {
-        self.sess.engine.upload_f32(&params.data, &params.shape)
+    pub fn upload_params(&self, params: &Tensor) -> Result<DeviceBuf> {
+        self.sess.upload_f32(&params.data, &params.shape)
+    }
+
+    /// Upload a trial mask for reuse across the batch sweep (the one
+    /// per-call upload of the hot path, shared by every scoring method).
+    pub fn upload_mask(&self, mask: &[f32]) -> Result<DeviceBuf> {
+        self.sess.upload_f32(mask, &[mask.len()])
+    }
+
+    /// Loss + valid-prefix correct count of one cached batch.
+    fn score_batch(
+        &self,
+        b: &EvalBatch,
+        params: &DeviceBuf,
+        mask_buf: &DeviceBuf,
+    ) -> Result<(f64, f64)> {
+        if b.valid == self.batch {
+            let out = self.sess.eval_batch_b(params, mask_buf, &b.x, &b.y)?;
+            return Ok((out.loss as f64, out.correct as f64));
+        }
+        // Partial batch: the compiled eval_batch scalar includes the padded
+        // tail, so re-score through forward and count the valid prefix only.
+        let logits = self.sess.forward_b(params, mask_buf, &b.x)?;
+        let k = logits.shape[1];
+        let preds = logits.argmax_rows()?;
+        let mut correct = 0.0f64;
+        let mut loss = 0.0f64;
+        for (i, &label) in b.labels.iter().take(b.valid).enumerate() {
+            if preds[i] == label as usize {
+                correct += 1.0;
+            }
+            let row = &logits.data[i * k..(i + 1) * k];
+            loss += cross_entropy(row, label as usize % k);
+        }
+        Ok((loss / b.valid as f64, correct))
     }
 
     /// Accuracy [%] of (params, mask) on the cached batches.
-    pub fn accuracy(&self, params: &xla::PjRtBuffer, mask: &[f32]) -> Result<f64> {
-        Ok(self.accuracy_bounded(params, mask, 0.0)?.expect("bound 0 never cuts"))
+    pub fn accuracy(&self, params: &DeviceBuf, mask: &[f32]) -> Result<f64> {
+        match self.eval_trial(params, mask, 0.0)? {
+            TrialEval::Scored { acc, .. } => Ok(acc),
+            TrialEval::Bounded => unreachable!("bound 0 never cuts"),
+        }
     }
 
     /// Accuracy [%] with an early-exit bound: returns `None` as soon as the
@@ -67,39 +143,80 @@ impl<'e, 's> Evaluator<'e, 's> {
     /// example were classified correctly.
     pub fn accuracy_bounded(
         &self,
-        params: &xla::PjRtBuffer,
+        params: &DeviceBuf,
         mask: &[f32],
         min_acc: f64,
     ) -> Result<Option<f64>> {
-        let total = self.num_examples() as f64;
+        Ok(match self.eval_trial(params, mask, min_acc)? {
+            TrialEval::Scored { acc, .. } => Some(acc),
+            TrialEval::Bounded => None,
+        })
+    }
+
+    /// Score one mask hypothesis with the early-exit bound, keeping the
+    /// per-batch correct counts (the trial scan's replay data).
+    pub fn eval_trial(
+        &self,
+        params: &DeviceBuf,
+        mask: &[f32],
+        min_acc: f64,
+    ) -> Result<TrialEval> {
+        let total = self.examples as f64;
         let need_correct = min_acc / 100.0 * total;
-        let mask_buf = self.sess.upload_f32(mask, &[mask.len()])?;
+        let mask_buf = self.upload_mask(mask)?;
         let mut correct = 0.0f64;
-        for (i, (x, y)) in self.batches.iter().enumerate() {
-            let out = self.sess.eval_batch_b(params, &mask_buf, x, y)?;
-            correct += out.correct as f64;
-            let remaining = (self.batches.len() - 1 - i) as f64 * self.batch as f64;
+        let mut remaining = total;
+        let mut batch_corrects = Vec::with_capacity(self.batches.len());
+        for b in &self.batches {
+            let (_, c) = self.score_batch(b, params, &mask_buf)?;
+            correct += c;
+            remaining -= b.valid as f64;
+            batch_corrects.push(c);
             if correct + remaining < need_correct {
-                return Ok(None); // cannot beat the incumbent
+                return Ok(TrialEval::Bounded); // cannot beat the incumbent
             }
         }
-        Ok(Some(100.0 * correct / total))
+        Ok(TrialEval::Scored { acc: 100.0 * correct / total, batch_corrects })
+    }
+
+    /// Replay the early-exit bound decision on recorded per-batch correct
+    /// counts: would a sequential evaluation against `min_acc` have cut this
+    /// trial? Uses the exact arithmetic of [`Self::eval_trial`], so the
+    /// parallel scan's merge is bit-identical to a sequential scan.
+    pub fn would_bound(&self, batch_corrects: &[f64], min_acc: f64) -> bool {
+        let total = self.examples as f64;
+        let need_correct = min_acc / 100.0 * total;
+        let mut correct = 0.0f64;
+        let mut remaining = total;
+        for (b, &c) in self.batches.iter().zip(batch_corrects) {
+            correct += c;
+            remaining -= b.valid as f64;
+            if correct + remaining < need_correct {
+                return true;
+            }
+        }
+        false
     }
 
     /// Mean loss + accuracy [%] (used for reporting, not the trial loop).
-    pub fn loss_accuracy(&self, params: &xla::PjRtBuffer, mask: &[f32]) -> Result<(f64, f64)> {
-        let mask_buf = self.sess.upload_f32(mask, &[mask.len()])?;
+    /// The loss is the example-weighted mean, exact under partial batches.
+    pub fn loss_accuracy(&self, params: &DeviceBuf, mask: &[f32]) -> Result<(f64, f64)> {
+        let mask_buf = self.upload_mask(mask)?;
         let (mut correct, mut loss) = (0.0f64, 0.0f64);
-        for (x, y) in &self.batches {
-            let out = self.sess.eval_batch_b(params, &mask_buf, x, y)?;
-            correct += out.correct as f64;
-            loss += out.loss as f64;
+        for b in &self.batches {
+            let (l, c) = self.score_batch(b, params, &mask_buf)?;
+            correct += c;
+            loss += l * b.valid as f64;
         }
-        Ok((
-            loss / self.batches.len() as f64,
-            100.0 * correct / self.num_examples() as f64,
-        ))
+        Ok((loss / self.examples as f64, 100.0 * correct / self.examples as f64))
     }
+}
+
+/// Host-side cross-entropy of one logit row (partial-batch rescoring).
+fn cross_entropy(row: &[f32], target: usize) -> f64 {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let denom: f64 = row.iter().map(|&v| (v as f64 - max).exp()).sum();
+    -(((row[target] as f64 - max).exp() / denom).max(1e-12)).ln()
 }
 
 /// One-shot test-set accuracy [%] for a model state (builds a throwaway

@@ -3,9 +3,10 @@
 //! - [`bcd`] — Block Coordinate Descent over binary ReLU masks
 //!   (Algorithm 2), the paper's optimizer.
 //! - [`trials`] — the random-trial scheduler inside one BCD iteration
-//!   (sampling, dedup, early-accept, argmin fallback).
-//! - [`eval`] — batched accuracy evaluation with device-buffer caching and
-//!   an early-exit bound (§Perf).
+//!   (sampling, dedup, early-accept, argmin fallback), fanned out across a
+//!   worker pool with a deterministic replay merge.
+//! - [`eval`] — batched accuracy evaluation with device-buffer caching,
+//!   an early-exit bound, and exact partial-batch accounting (§Perf).
 //! - [`finetune`] — cosine-annealed SGD finetune controller (L3 owns the
 //!   schedule; L2 computes one step per call).
 //! - [`train`] — the baseline full-ReLU training loop.

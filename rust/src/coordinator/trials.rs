@@ -1,14 +1,35 @@
 //! The random-trial scheduler inside one BCD iteration (Algorithm 2,
 //! lines 7–20): sample DRC present ReLUs, score the hypothesis, early-accept
 //! under ADT, otherwise keep the argmin-degradation candidate.
+//!
+//! # Parallel scan
+//!
+//! Hypothesis scoring dominates BCD wall-clock, so [`scan_trials`] fans the
+//! RT hypotheses across a scoped worker pool. Determinism is preserved by
+//! construction — the outcome is **bit-identical for every worker count**:
+//!
+//! 1. All RT draws are made up front on the caller's thread, each from an
+//!    RNG forked by trial index, and deduplicated in draw order.
+//! 2. Workers claim trial indices strictly in order from shared state and
+//!    score them with the early-exit bound, using as floor the best
+//!    accuracy among *completed lower-index* trials (a conservative subset
+//!    of the floor a sequential scan would have, so anything the runtime
+//!    cuts, a sequential scan would cut too). Once some trial passes the
+//!    ADT accept test, no indices beyond it are claimed.
+//! 3. A sequential **replay merge** over the per-trial results re-applies
+//!    Algorithm 2's exact decision sequence (incumbent floor, bound,
+//!    early-accept, argmin with ties to the lowest index) using the
+//!    recorded per-batch correct counts, yielding the same `ScanOutcome` a
+//!    single-threaded scan produces.
 
 use crate::config::Granularity;
-use crate::coordinator::eval::Evaluator;
+use crate::coordinator::eval::{Evaluator, TrialEval};
 use crate::model::Mask;
 use crate::runtime::manifest::ModelInfo;
 use crate::util::prng::Rng;
 use anyhow::Result;
 use std::collections::HashSet;
+use std::sync::Mutex;
 
 /// Draws one DRC-sized removal hypothesis at the configured granularity.
 pub struct BlockSampler<'a> {
@@ -66,7 +87,7 @@ impl<'a> BlockSampler<'a> {
 }
 
 /// One scored mask hypothesis.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Trial {
     /// Flat ReLU indices this hypothesis removes.
     pub removed: Vec<usize>,
@@ -77,7 +98,7 @@ pub struct Trial {
 }
 
 /// Result of one iteration's trial scan.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ScanOutcome {
     pub chosen: Trial,
     /// Trials actually evaluated (<= RT; early-accept can cut it short).
@@ -88,7 +109,44 @@ pub struct ScanOutcome {
     pub early_accept: bool,
 }
 
-/// Scan up to `rt` random DRC-sized hypotheses of `mask` (never mutates it).
+/// Worker-shared scan state: in-order claim counter, per-trial results, and
+/// the lowest accept index observed so far (the shared stop signal; the
+/// completed lower-index accuracies double as the shared early-exit floor).
+struct ScanState {
+    next: usize,
+    stop_at: Option<usize>,
+    results: Vec<Option<TrialEval>>,
+}
+
+impl ScanState {
+    /// Claim the next trial index plus the bound floor valid for it: the
+    /// best accuracy among completed trials with a *lower* index. Restricting
+    /// the floor to lower indices is what makes runtime cuts a subset of
+    /// sequential cuts (see the module docs' determinism argument).
+    fn claim(&mut self) -> Option<(usize, f64)> {
+        if self.next >= self.results.len() {
+            return None;
+        }
+        if let Some(stop) = self.stop_at {
+            if self.next > stop {
+                return None;
+            }
+        }
+        let i = self.next;
+        self.next += 1;
+        let mut floor = 0.0f64;
+        for r in &self.results[..i] {
+            if let Some(TrialEval::Scored { acc, .. }) = r {
+                floor = floor.max(*acc);
+            }
+        }
+        Some((i, floor))
+    }
+}
+
+/// Scan up to `rt` random DRC-sized hypotheses of `mask` (never mutates it),
+/// scoring across `workers` threads (1 = sequential; the outcome is
+/// identical either way).
 ///
 /// `base_acc` is the iteration's pre-removal proxy accuracy; `adt` the
 /// Accuracy Degradation Tolerance in percentage points. Duplicate draws are
@@ -96,7 +154,7 @@ pub struct ScanOutcome {
 #[allow(clippy::too_many_arguments)]
 pub fn scan_trials(
     ev: &Evaluator,
-    params: &xla::PjRtBuffer,
+    params: &crate::runtime::backend::DeviceBuf,
     mask: &Mask,
     sampler: &BlockSampler,
     drc: usize,
@@ -104,50 +162,96 @@ pub fn scan_trials(
     adt: f64,
     base_acc: f64,
     rng: &mut Rng,
+    workers: usize,
 ) -> Result<ScanOutcome> {
     assert!(drc <= mask.count(), "DRC {drc} > present ReLUs {}", mask.count());
-    let mut scratch: Vec<f32> = Vec::with_capacity(mask.size());
+    assert!(rt >= 1, "scan_trials needs rt >= 1");
+
+    // Phase 1: draw all hypotheses up front, each from a trial-index fork of
+    // the iteration RNG, deduplicating in draw order (a duplicate draw never
+    // burns an evaluation, exactly as in the sequential Algorithm 2 loop).
     let mut seen: HashSet<Vec<usize>> = HashSet::new();
+    let mut hyps: Vec<Vec<usize>> = Vec::new();
+    for t in 0..rt {
+        let mut trial_rng = rng.fork(t as u64);
+        let mut removed = sampler.sample(mask, &mut trial_rng, drc);
+        removed.sort_unstable();
+        if seen.insert(removed.clone()) {
+            hyps.push(removed);
+        }
+    }
+
+    // Phase 2: score across the worker pool.
+    let n = hyps.len();
+    let workers = workers.max(1).min(n);
+    let state = Mutex::new(ScanState { next: 0, stop_at: None, results: vec![None; n] });
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            handles.push(scope.spawn(|| -> Result<()> {
+                let mut scratch: Vec<f32> = Vec::with_capacity(mask.size());
+                loop {
+                    let Some((i, floor)) = state.lock().unwrap().claim() else {
+                        return Ok(());
+                    };
+                    mask.hypothesis_into(&hyps[i], &mut scratch);
+                    let result = ev.eval_trial(params, &scratch, floor)?;
+                    let mut st = state.lock().unwrap();
+                    if let TrialEval::Scored { acc, .. } = &result {
+                        if base_acc - acc < adt {
+                            st.stop_at = Some(st.stop_at.map_or(i, |s| s.min(i)));
+                        }
+                    }
+                    st.results[i] = Some(result);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("scan worker panicked")?;
+        }
+        Ok(())
+    })?;
+
+    // Phase 3: sequential replay merge — Algorithm 2's exact decision
+    // sequence over the recorded results. Speculative results past the
+    // accept index are discarded, and bound decisions are re-derived from
+    // the recorded per-batch corrects against the sequential incumbent
+    // floor, so the outcome matches a 1-worker scan bit for bit.
+    let results = state.into_inner().unwrap().results;
     let mut best: Option<Trial> = None;
     let mut evaluated = 0usize;
     let mut bounded = 0usize;
-
-    for _ in 0..rt {
-        let mut removed = sampler.sample(mask, rng, drc);
-        removed.sort_unstable();
-        if !seen.insert(removed.clone()) {
-            continue; // duplicate draw: re-sample without burning an eval
-        }
-        mask.hypothesis_into(&removed, &mut scratch);
-
-        // Early-exit bound: the hypothesis only matters if it beats the
-        // incumbent argmin accuracy.
-        let floor = best.as_ref().map(|b| b.acc).unwrap_or(0.0);
+    let mut early_accept = false;
+    for (i, r) in results.into_iter().enumerate() {
+        let Some(r) = r else { break }; // unclaimed tail beyond the stop index
         evaluated += 1;
-        let acc = match ev.accuracy_bounded(params, &scratch, floor)? {
-            Some(a) => a,
-            None => {
+        match r {
+            TrialEval::Bounded => {
+                // The runtime floor is never above the sequential floor, so
+                // a runtime cut implies a sequential cut.
                 bounded += 1;
-                continue;
             }
-        };
-        let dacc = base_acc - acc;
-        let better = best.as_ref().map(|b| acc > b.acc).unwrap_or(true);
-        if better {
-            best = Some(Trial { removed, acc, dacc });
-        }
-        if dacc < adt {
-            // Algorithm 2 line 11: accept immediately under the tolerance.
-            return Ok(ScanOutcome {
-                chosen: best.expect("just set"),
-                evaluated,
-                bounded,
-                early_accept: true,
-            });
+            TrialEval::Scored { acc, batch_corrects } => {
+                let floor = best.as_ref().map(|b| b.acc).unwrap_or(0.0);
+                if ev.would_bound(&batch_corrects, floor) {
+                    bounded += 1;
+                    continue;
+                }
+                let dacc = base_acc - acc;
+                let better = best.as_ref().map(|b| acc > b.acc).unwrap_or(true);
+                if better {
+                    best = Some(Trial { removed: hyps[i].clone(), acc, dacc });
+                }
+                if dacc < adt {
+                    // Algorithm 2 line 11: accept under the tolerance.
+                    early_accept = true;
+                    break;
+                }
+            }
         }
     }
-    let chosen = best.expect("rt >= 1 and first trial always completes");
-    Ok(ScanOutcome { chosen, evaluated, bounded, early_accept: false })
+    let chosen = best.expect("rt >= 1 and the first trial is never bounded");
+    Ok(ScanOutcome { chosen, evaluated, bounded, early_accept })
 }
 
 #[cfg(test)]
@@ -226,5 +330,17 @@ mod tests {
             let s = sampler.sample(&mask, &mut rng, 6);
             assert!(s.iter().all(|&i| i >= 4), "sampled from empty channel: {s:?}");
         }
+    }
+
+    #[test]
+    fn scan_state_claims_in_order_with_lower_index_floor() {
+        let mut st = ScanState { next: 0, stop_at: None, results: vec![None; 4] };
+        assert_eq!(st.claim(), Some((0, 0.0)));
+        st.results[0] = Some(TrialEval::Scored { acc: 60.0, batch_corrects: vec![] });
+        assert_eq!(st.claim(), Some((1, 60.0)));
+        st.results[1] = Some(TrialEval::Bounded); // bounded trials add no floor
+        assert_eq!(st.claim(), Some((2, 60.0)));
+        st.stop_at = Some(2);
+        assert_eq!(st.claim(), None, "no claims beyond the accept index");
     }
 }

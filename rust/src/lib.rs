@@ -7,14 +7,23 @@
 //!
 //! Three-layer architecture (DESIGN.md):
 //! - **L3 (this crate)** — the rust coordinator: BCD optimizer, baselines,
-//!   PI cost model, experiment launcher, metrics. Owns the event loop.
-//! - **L2** — JAX model (`python/compile/model.py`), lowered once to HLO
-//!   text by `make artifacts`; Python never runs on the request path.
+//!   PI cost model, experiment launcher, metrics. Owns the event loop. The
+//!   BCD hypothesis scan fans out across a thread pool with a deterministic
+//!   merge ([`coordinator::trials`]): identical results at any worker count.
+//! - **L2 — the [`runtime::Backend`] trait** — pluggable execution of the
+//!   model entry points behind opaque device-buffer handles. Two
+//!   implementations ship: the PJRT engine over AOT HLO artifacts
+//!   (`--features pjrt`; JAX lowers `python/compile/model.py` once via
+//!   `make artifacts`, Python never runs on the request path) and the
+//!   pure-Rust [`runtime::RefBackend`] reference backend (a masked-
+//!   activation MLP with hand-written autodiff) so the whole coordinator
+//!   runs — tests, CI, benches — with no artifacts or native deps.
 //! - **L1** — Pallas masked-activation kernels (`python/compile/kernels/`),
-//!   correctness-checked against a pure-jnp oracle.
+//!   correctness-checked against a pure-jnp oracle (PJRT path only).
 //!
-//! The [`runtime`] module bridges L3 to the AOT artifacts via the `xla`
-//! crate's PJRT CPU client.
+//! Backends are `Send + Sync`; [`runtime::open_backend`] picks one by name
+//! or automatically (`auto`: PJRT when compiled in and artifacts exist,
+//! else reference).
 
 pub mod config;
 pub mod coordinator;
@@ -30,4 +39,7 @@ pub mod tensor;
 pub mod util;
 
 pub use config::Experiment;
+pub use runtime::{open_backend, Backend, RefBackend};
+
+#[cfg(feature = "pjrt")]
 pub use runtime::engine::Engine;

@@ -13,7 +13,8 @@
 //!
 //! Shared flags: --dataset synth10|synth100|synthtiny  --backbone resnet|wrn
 //! --poly  --preset quick|full  --set k=v[,k=v...]  --artifacts DIR
-//! --out DIR  --ckpt FILE  --ref-budget N  --budget N  --verbose
+//! --backend auto|pjrt|reference  --out DIR  --ckpt FILE  --ref-budget N
+//! --budget N  --verbose
 //!
 //! Examples:
 //!   cdnl train --dataset synth10
@@ -30,7 +31,7 @@ use cdnl::methods::senet::{run_senet, SenetConfig};
 use cdnl::methods::snl::run_snl;
 use cdnl::model::ModelState;
 use cdnl::pipeline::Pipeline;
-use cdnl::runtime::engine::Engine;
+use cdnl::runtime::{open_backend, Backend};
 use cdnl::util::cli::Args;
 use cdnl::util::{fmt_relu_count, logging};
 use std::path::{Path, PathBuf};
@@ -79,24 +80,29 @@ fn run() -> Result<()> {
     }
     let sub = args.subcommand.clone().ok_or_else(|| anyhow!(USAGE))?;
     let exp = build_experiment(&args)?;
-    let engine = Engine::new(Path::new(&exp.artifacts_dir))?;
+    let backend = open_backend(
+        Path::new(&exp.artifacts_dir),
+        args.get_or("backend", "auto"),
+    )?;
+    let engine: &dyn Backend = backend.as_ref();
 
     match sub.as_str() {
-        "info" => cmd_info(&engine, &args),
-        "train" => cmd_train(&engine, exp),
-        "eval" => cmd_eval(&engine, exp, &args),
-        "picost" => cmd_picost(&engine, exp, &args),
+        "info" => cmd_info(engine, &args),
+        "train" => cmd_train(engine, exp),
+        "eval" => cmd_eval(engine, exp, &args),
+        "picost" => cmd_picost(engine, exp, &args),
         "snl" | "bcd" | "autorep" | "senet" | "deepreduce" => {
-            cmd_method(&sub, &engine, exp, &args)
+            cmd_method(&sub, engine, exp, &args)
         }
         other => bail!("unknown subcommand {other:?}\n{USAGE}"),
     }
 }
 
 /// `cdnl info`: manifest summary — the runtime's view of Table 1.
-fn cmd_info(engine: &Engine, args: &Args) -> Result<()> {
+fn cmd_info(engine: &dyn Backend, args: &Args) -> Result<()> {
+    println!("backend: {}", engine.name());
     let mut rows = Vec::new();
-    for (key, m) in &engine.manifest.models {
+    for (key, m) in &engine.manifest().models {
         rows.push(vec![
             key.clone(),
             m.backbone.clone(),
@@ -121,7 +127,7 @@ fn cmd_info(engine: &Engine, args: &Args) -> Result<()> {
 }
 
 /// `cdnl train`: full-ReLU baseline (cached in the zoo) + test accuracy.
-fn cmd_train(engine: &Engine, exp: Experiment) -> Result<()> {
+fn cmd_train(engine: &dyn Backend, exp: Experiment) -> Result<()> {
     let pl = Pipeline::new(engine, exp)?;
     let st = pl.baseline()?;
     let acc = pl.test_acc(&st)?;
@@ -151,7 +157,7 @@ fn starting_state(pl: &Pipeline, args: &Args) -> Result<ModelState> {
 }
 
 /// Shared driver for the five reduction methods.
-fn cmd_method(method: &str, engine: &Engine, exp: Experiment, args: &Args) -> Result<()> {
+fn cmd_method(method: &str, engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> {
     let budget = args
         .get("budget")
         .ok_or_else(|| anyhow!("--budget is required for {method}"))?
@@ -243,7 +249,7 @@ fn cmd_method(method: &str, engine: &Engine, exp: Experiment, args: &Args) -> Re
 }
 
 /// `cdnl eval`: test accuracy + per-layer ReLU distribution of a checkpoint.
-fn cmd_eval(engine: &Engine, exp: Experiment, args: &Args) -> Result<()> {
+fn cmd_eval(engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> {
     let pl = Pipeline::new(engine, exp)?;
     let st = starting_state(&pl, args)?;
     let acc = test_accuracy(&pl.sess, &st, &pl.test_ds)?;
@@ -282,7 +288,7 @@ fn cmd_eval(engine: &Engine, exp: Experiment, args: &Args) -> Result<()> {
 }
 
 /// `cdnl picost`: PI online-cost estimate under LAN and WAN protocols.
-fn cmd_picost(engine: &Engine, exp: Experiment, args: &Args) -> Result<()> {
+fn cmd_picost(engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> {
     let pl = Pipeline::new(engine, exp)?;
     let st = starting_state(&pl, args)?;
     let info = pl.sess.info();

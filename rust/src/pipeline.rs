@@ -1,7 +1,7 @@
 //! Experiment pipeline: the composition layer every bench, example and CLI
 //! subcommand shares.
 //!
-//! A [`Pipeline`] owns one (engine session, dataset pair, experiment
+//! A [`Pipeline`] owns one (backend session, dataset pair, experiment
 //! config) triple and produces the staged models of the paper's protocol:
 //!
 //! ```text
@@ -22,7 +22,7 @@ use crate::data::{synth, Dataset};
 use crate::methods::autorep::{run_autorep, AutorepConfig};
 use crate::methods::snl::run_snl;
 use crate::model::{zoo, ModelState};
-use crate::runtime::engine::Engine;
+use crate::runtime::backend::Backend;
 use crate::runtime::session::Session;
 use anyhow::{anyhow, Context, Result};
 use std::path::PathBuf;
@@ -37,13 +37,15 @@ pub struct Pipeline<'e> {
 }
 
 impl<'e> Pipeline<'e> {
-    pub fn new(engine: &'e Engine, exp: Experiment) -> Result<Pipeline<'e>> {
-        let sess = Session::new(engine, &exp.model_key())
+    pub fn new(backend: &'e dyn Backend, exp: Experiment) -> Result<Pipeline<'e>> {
+        let sess = Session::new(backend, &exp.model_key())
             .with_context(|| format!("experiment wants model {}", exp.model_key()))?;
         let spec = synth::by_name(&exp.dataset)
             .ok_or_else(|| anyhow!("unknown dataset {:?}", exp.dataset))?;
         let (train_ds, test_ds) = synth::generate(spec);
-        let zoo_dir = PathBuf::from(&exp.out_dir).join("zoo");
+        // Namespace the zoo by backend: checkpoints from different backends
+        // share model keys but not numerics, and must never cross-pollinate.
+        let zoo_dir = PathBuf::from(&exp.out_dir).join("zoo").join(backend.name());
         Ok(Pipeline { sess, exp, train_ds, test_ds, zoo_dir })
     }
 

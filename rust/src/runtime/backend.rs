@@ -1,0 +1,207 @@
+//! The execution-backend abstraction.
+//!
+//! [`Backend`] is the seam between the L3 coordinator and whatever actually
+//! runs the network: the PJRT engine over AOT HLO artifacts
+//! ([`crate::runtime::engine::Engine`], behind the `pjrt` feature) or the
+//! pure-Rust [`crate::runtime::reference::RefBackend`] that needs no
+//! artifacts at all. Coordinator code only ever sees host [`Tensor`]s and
+//! opaque [`DeviceBuf`] handles, so no backend type leaks upward.
+//!
+//! Backends are `Send + Sync`: the parallel BCD trial scan
+//! ([`crate::coordinator::trials::scan_trials`]) shares one backend across a
+//! scoped worker pool.
+
+use crate::runtime::manifest::{Manifest, ModelInfo};
+use crate::tensor::{Tensor, TensorI32};
+use anyhow::{anyhow, Result};
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Cumulative execution statistics (per entry point), for §Perf.
+#[derive(Clone, Debug, Default)]
+pub struct CallStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// An opaque device-resident buffer owned by some backend.
+///
+/// Backends wrap their native handle (a PJRT buffer, a host vector, ...) and
+/// downcast it back on use. Handles are `Send + Sync` so cached evaluation
+/// batches can be shared across scan workers.
+pub struct DeviceBuf {
+    inner: Box<dyn Any + Send + Sync>,
+}
+
+impl DeviceBuf {
+    pub fn new<T: Any + Send + Sync>(inner: T) -> DeviceBuf {
+        DeviceBuf { inner: Box::new(inner) }
+    }
+
+    /// View the native handle; fails when the buffer belongs to a different
+    /// backend (e.g. a reference-backend buffer handed to the PJRT engine).
+    pub fn downcast<T: Any>(&self) -> Result<&T> {
+        self.inner
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow!("DeviceBuf: handle belongs to a different backend"))
+    }
+}
+
+/// A borrowed host-side argument at the call boundary (the only two dtypes
+/// the artifact interface uses: f32 data, i32 labels/seeds).
+#[derive(Clone, Copy, Debug)]
+pub enum HostArg<'a> {
+    F32(&'a Tensor),
+    I32(&'a TensorI32),
+}
+
+impl HostArg<'_> {
+    pub fn element_count(&self) -> usize {
+        match self {
+            HostArg::F32(t) => t.data.len(),
+            HostArg::I32(t) => t.data.len(),
+        }
+    }
+}
+
+/// An execution backend: runs a model's entry points on host or device
+/// inputs and hands back host tensors.
+///
+/// Entry-point names and signatures follow the artifact contract written by
+/// `python/compile/aot.py` (`init`, `forward`, `eval_batch`, `train_step`,
+/// `snl_step`, `kd_step`); outputs are always f32 tensors.
+pub trait Backend: Send + Sync {
+    /// Short backend identifier ("pjrt", "reference"), used for logs and to
+    /// namespace the model-zoo cache.
+    fn name(&self) -> &'static str;
+
+    /// The model table this backend serves (shape + layer layout source of
+    /// truth; for the reference backend it is synthesized, not loaded).
+    fn manifest(&self) -> &Manifest;
+
+    fn model(&self, key: &str) -> Result<&ModelInfo> {
+        self.manifest().model(key)
+    }
+
+    /// The fixed batch size every batched entry point was built for.
+    fn batch(&self) -> usize {
+        self.manifest().batch
+    }
+
+    /// Upload an f32 tensor for reuse across many calls (params during the
+    /// BCD trial loop, proxy eval batches — §Perf).
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuf>;
+
+    /// Upload an i32 tensor (labels).
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<DeviceBuf>;
+
+    /// Execute an entry point on host inputs.
+    fn call(&self, model_key: &str, fn_name: &str, inputs: &[HostArg]) -> Result<Vec<Tensor>>;
+
+    /// Execute an entry point on device-resident inputs (the trial hot
+    /// path: every input was uploaded once and is re-used across calls).
+    fn call_b(&self, model_key: &str, fn_name: &str, inputs: &[&DeviceBuf]) -> Result<Vec<Tensor>>;
+
+    /// Snapshot of per-entry-point execution statistics.
+    fn stats(&self) -> BTreeMap<String, CallStats>;
+
+    /// Pretty statistics table (used by `cdnl info --stats` and benches).
+    fn stats_table(&self) -> String {
+        format_stats_table(&self.stats())
+    }
+}
+
+/// Render a stats map as the fixed-width table both backends share.
+pub fn format_stats_table(stats: &BTreeMap<String, CallStats>) -> String {
+    let mut out = String::from(
+        "entry point                              calls   total[s]  mean[ms]  compile[s]\n",
+    );
+    for (k, s) in stats {
+        let mean_ms = if s.calls > 0 {
+            1000.0 * s.total_secs / s.calls as f64
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "{k:40} {calls:6} {total:9.2} {mean:9.2} {comp:10.2}\n",
+            calls = s.calls,
+            total = s.total_secs,
+            mean = mean_ms,
+            comp = s.compile_secs,
+        ));
+    }
+    out
+}
+
+/// Thread-safe per-entry-point stats accumulator shared by every backend —
+/// the single implementation of the record-keeping that used to be
+/// duplicated between `Engine::call` and `Engine::call_b`.
+#[derive(Default)]
+pub struct StatsRecorder {
+    stats: Mutex<BTreeMap<String, CallStats>>,
+}
+
+impl StatsRecorder {
+    pub fn new() -> StatsRecorder {
+        StatsRecorder::default()
+    }
+
+    /// Run `f`, crediting its wall time (and one call) to `key`.
+    pub fn timed<T>(&self, key: &str, f: impl FnOnce() -> Result<T>) -> Result<T> {
+        let t0 = Instant::now();
+        let out = f()?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.lock().unwrap();
+        let s = stats.entry(key.to_string()).or_default();
+        s.calls += 1;
+        s.total_secs += dt;
+        Ok(out)
+    }
+
+    /// Credit one-time compile/setup seconds to `key`.
+    pub fn add_compile(&self, key: &str, secs: f64) {
+        let mut stats = self.stats.lock().unwrap();
+        stats.entry(key.to_string()).or_default().compile_secs += secs;
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, CallStats> {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_buf_downcast() {
+        let b = DeviceBuf::new(vec![1.0f32, 2.0]);
+        assert_eq!(b.downcast::<Vec<f32>>().unwrap(), &vec![1.0, 2.0]);
+        assert!(b.downcast::<Vec<i32>>().is_err());
+    }
+
+    #[test]
+    fn stats_recorder_accumulates() {
+        let r = StatsRecorder::new();
+        let v: i32 = r.timed("m:f", || Ok(3)).unwrap();
+        assert_eq!(v, 3);
+        let _ = r.timed("m:f", || Ok(())).unwrap();
+        r.add_compile("m:f", 1.5);
+        let snap = r.snapshot();
+        let s = snap.get("m:f").unwrap();
+        assert_eq!(s.calls, 2);
+        assert!(s.compile_secs > 1.0);
+        assert!(format_stats_table(&snap).contains("m:f"));
+    }
+
+    #[test]
+    fn failed_call_not_counted() {
+        let r = StatsRecorder::new();
+        let out: Result<()> = r.timed("m:g", || Err(anyhow!("boom")));
+        assert!(out.is_err());
+        assert!(r.snapshot().get("m:g").is_none());
+    }
+}

@@ -4,31 +4,55 @@
 //! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`. The
 //! engine caches compiled executables per (model, entry point) so each
 //! artifact pays its XLA compile exactly once per process.
+//!
+//! The engine implements [`Backend`] and is `Send + Sync`: the executable
+//! cache sits behind a `Mutex`, call statistics behind the shared
+//! [`StatsRecorder`], and device buffers travel as opaque [`DeviceBuf`]
+//! handles so the parallel trial scan can share one engine across workers.
+//!
+//! Only compiled with `--features pjrt` (the `xla` crate is not in the
+//! offline vendor set; see Cargo.toml).
 
+use super::backend::{Backend, CallStats, DeviceBuf, HostArg, StatsRecorder};
 use super::manifest::{ArtifactInfo, Manifest, ModelInfo};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Cumulative execution statistics (per entry point), for §Perf.
-#[derive(Clone, Debug, Default)]
-pub struct CallStats {
-    pub calls: u64,
-    pub total_secs: f64,
-    pub compile_secs: f64,
-}
+/// Device-buffer payload of the PJRT engine.
+///
+/// SAFETY: this relies on the PJRT C API's documented thread-safety
+/// contract — `PJRT_Buffer` handles are immutable once created, and buffer
+/// creation, execution, and destruction may be invoked from any thread (the
+/// TFRT CPU client synchronizes internally). The Rust-side `!Send`/`!Sync`
+/// on xla-rs types is the blanket raw-pointer default, not a statement
+/// about the runtime. If a vendored xla-rs build ever wraps handles in
+/// thread-affine state, run with `bcd.workers = 1` (the scan result is
+/// identical at any worker count) — the parallel scan concurrently
+/// uploads trial masks and drops them from worker threads.
+pub(crate) struct PjrtBuf(pub(crate) xla::PjRtBuffer);
+unsafe impl Send for PjrtBuf {}
+unsafe impl Sync for PjrtBuf {}
 
 /// The runtime engine: one PJRT CPU client + compiled-executable cache.
 pub struct Engine {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    executables: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<BTreeMap<String, CallStats>>,
+    executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: StatsRecorder,
 }
+
+// SAFETY: the PJRT CPU client is internally synchronized — compilation,
+// buffer creation and execution are safe from multiple threads per the PJRT
+// C API contract (see the PjrtBuf note above for the same caveat about
+// vendored builds); all interior mutability on the Rust side is behind
+// Mutex/StatsRecorder.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     /// Create a CPU engine over an artifacts directory.
@@ -44,8 +68,8 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            executables: RefCell::new(HashMap::new()),
-            stats: RefCell::new(BTreeMap::new()),
+            executables: Mutex::new(HashMap::new()),
+            stats: StatsRecorder::new(),
         })
     }
 
@@ -58,9 +82,9 @@ impl Engine {
         &self,
         model_key: &str,
         fn_name: &str,
-    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         let cache_key = format!("{model_key}:{fn_name}");
-        if let Some(e) = self.executables.borrow().get(&cache_key) {
+        if let Some(e) = self.executables.lock().unwrap().get(&cache_key) {
             return Ok(e.clone());
         }
         let info = self.manifest.model(model_key)?.artifact(fn_name)?;
@@ -74,36 +98,19 @@ impl Engine {
             .with_context(|| format!("compiling {cache_key}"))?;
         let dt = t0.elapsed().as_secs_f64();
         crate::debug!("compiled {cache_key} in {dt:.2}s");
-        self.stats
-            .borrow_mut()
-            .entry(cache_key.clone())
-            .or_default()
-            .compile_secs += dt;
-        let rc = std::rc::Rc::new(exe);
-        self.executables.borrow_mut().insert(cache_key, rc.clone());
-        Ok(rc)
+        self.stats.add_compile(&cache_key, dt);
+        let rc = Arc::new(exe);
+        // A racing thread may have compiled concurrently; keep the first.
+        let mut cache = self.executables.lock().unwrap();
+        Ok(cache.entry(cache_key).or_insert(rc).clone())
     }
 
-    /// Execute an entry point with literal inputs; returns the decomposed
-    /// output tuple (artifacts are lowered with `return_tuple=True`).
-    pub fn call(
-        &self,
-        model_key: &str,
-        fn_name: &str,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let info = self.manifest.model(model_key)?.artifact(fn_name)?;
-        self.check_inputs(model_key, fn_name, info, inputs)?;
-        let exe = self.executable(model_key, fn_name)?;
-        let t0 = Instant::now();
-        let result = exe.execute::<xla::Literal>(inputs)?;
+    /// Decompose the executable output into host tensors (artifacts are
+    /// lowered with `return_tuple=True`).
+    fn decompose(result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Tensor>> {
         let tuple = result[0][0].to_literal_sync()?;
         let outs = tuple.to_tuple()?;
-        let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(format!("{model_key}:{fn_name}")).or_default();
-        s.calls += 1;
-        s.total_secs += t0.elapsed().as_secs_f64();
-        Ok(outs)
+        outs.iter().map(Tensor::from_literal).collect()
     }
 
     /// Shape-check inputs against the manifest before dispatch: a wrong
@@ -113,7 +120,7 @@ impl Engine {
         model_key: &str,
         fn_name: &str,
         info: &ArtifactInfo,
-        inputs: &[xla::Literal],
+        inputs: &[HostArg],
     ) -> Result<()> {
         if inputs.len() != info.inputs.len() {
             bail!(
@@ -123,8 +130,8 @@ impl Engine {
                 info.inputs.iter().map(|s| s.name.as_str()).collect::<Vec<_>>()
             );
         }
-        for (lit, spec) in inputs.iter().zip(&info.inputs) {
-            let got = lit.element_count();
+        for (arg, spec) in inputs.iter().zip(&info.inputs) {
+            let got = arg.element_count();
             let want: usize = spec.shape.iter().product();
             if got != want {
                 bail!(
@@ -138,6 +145,16 @@ impl Engine {
         }
         Ok(())
     }
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
 
     /// Upload an f32 tensor to the default device (for input caching across
     /// calls: params during the BCD trial loop, proxy eval batches — §Perf).
@@ -146,94 +163,53 @@ impl Engine {
     /// copy), NOT `buffer_from_host_literal`: the TFRT CPU client copies
     /// literals *asynchronously*, so a literal dropped right after the call
     /// is a use-after-free that aborts with a size-check failure.
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuf> {
+        Ok(DeviceBuf::new(PjrtBuf(
+            self.client.buffer_from_host_buffer(data, dims, None)?,
+        )))
     }
 
     /// Upload an i32 tensor (labels) to the default device.
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<DeviceBuf> {
+        Ok(DeviceBuf::new(PjrtBuf(
+            self.client.buffer_from_host_buffer(data, dims, None)?,
+        )))
     }
 
-    /// Buffer-input variant of [`Engine::call`]: every input is already
+    /// Execute an entry point with host inputs.
+    fn call(&self, model_key: &str, fn_name: &str, inputs: &[HostArg]) -> Result<Vec<Tensor>> {
+        let info = self.manifest.model(model_key)?.artifact(fn_name)?;
+        self.check_inputs(model_key, fn_name, info, inputs)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|a| match a {
+                HostArg::F32(t) => t.to_literal(),
+                HostArg::I32(t) => t.to_literal(),
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.executable(model_key, fn_name)?;
+        self.stats.timed(&format!("{model_key}:{fn_name}"), || {
+            Self::decompose(exe.execute::<xla::Literal>(&lits)?)
+        })
+    }
+
+    /// Device-buffer variant of [`Backend::call`]: every input is already
     /// device-resident, so the per-call host→device conversion is limited
     /// to whatever the caller actually changed. Shape checking happened
     /// when the cached buffers were built.
-    pub fn call_b(
-        &self,
-        model_key: &str,
-        fn_name: &str,
-        inputs: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<xla::Literal>> {
+    fn call_b(&self, model_key: &str, fn_name: &str, inputs: &[&DeviceBuf]) -> Result<Vec<Tensor>> {
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for b in inputs {
+            bufs.push(&b.downcast::<PjrtBuf>()?.0);
+        }
         let exe = self.executable(model_key, fn_name)?;
-        let t0 = Instant::now();
-        let result = exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let outs = tuple.to_tuple()?;
-        let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(format!("{model_key}:{fn_name}")).or_default();
-        s.calls += 1;
-        s.total_secs += t0.elapsed().as_secs_f64();
-        Ok(outs)
-    }
-
-    /// Convenience: call with host tensors, returning host tensors.
-    pub fn call_tensors(
-        &self,
-        model_key: &str,
-        fn_name: &str,
-        inputs: &[&dyn ToLiteral],
-    ) -> Result<Vec<Tensor>> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let outs = self.call(model_key, fn_name, &lits)?;
-        outs.iter().map(|l| Tensor::from_literal(l)).collect()
+        self.stats.timed(&format!("{model_key}:{fn_name}"), || {
+            Self::decompose(exe.execute_b::<&xla::PjRtBuffer>(&bufs)?)
+        })
     }
 
     /// Snapshot of per-entry-point execution statistics.
-    pub fn stats(&self) -> BTreeMap<String, CallStats> {
-        self.stats.borrow().clone()
-    }
-
-    /// Pretty statistics table (used by `cdnl info --stats` and benches).
-    pub fn stats_table(&self) -> String {
-        let mut out = String::from(
-            "entry point                              calls   total[s]  mean[ms]  compile[s]\n",
-        );
-        for (k, s) in self.stats.borrow().iter() {
-            let mean_ms = if s.calls > 0 {
-                1000.0 * s.total_secs / s.calls as f64
-            } else {
-                0.0
-            };
-            out.push_str(&format!(
-                "{k:40} {calls:6} {total:9.2} {mean:9.2} {comp:10.2}\n",
-                k = k,
-                calls = s.calls,
-                total = s.total_secs,
-                mean = mean_ms,
-                comp = s.compile_secs,
-            ));
-        }
-        out
-    }
-}
-
-/// Anything convertible to an `xla::Literal` (host tensors of both dtypes).
-pub trait ToLiteral {
-    fn to_literal(&self) -> Result<xla::Literal>;
-}
-
-impl ToLiteral for Tensor {
-    fn to_literal(&self) -> Result<xla::Literal> {
-        Tensor::to_literal(self)
-    }
-}
-
-impl ToLiteral for crate::tensor::TensorI32 {
-    fn to_literal(&self) -> Result<xla::Literal> {
-        crate::tensor::TensorI32::to_literal(self)
+    fn stats(&self) -> BTreeMap<String, CallStats> {
+        self.stats.snapshot()
     }
 }

@@ -1,16 +1,91 @@
-//! AOT runtime: PJRT client wrapper over `artifacts/*.hlo.txt`.
+//! Multi-backend runtime.
 //!
-//! `xla` crate flow: `PjRtClient::cpu()` -> `HloModuleProto::from_text_file`
-//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`
-//! (adapted from /opt/xla-example/load_hlo). The [`manifest`] module parses
-//! the interchange contract written by `python/compile/aot.py`; [`engine`]
-//! owns the client + executable cache; [`session`] adds buffer-resident
-//! model state for the hot path (§Perf).
+//! The [`backend::Backend`] trait is the execution seam: the coordinator
+//! sees host tensors and opaque [`backend::DeviceBuf`] handles only.
+//! Implementations:
+//!
+//! - [`engine::Engine`] (`--features pjrt`) — the PJRT CPU client over AOT
+//!   HLO-text artifacts (`artifacts/*.hlo.txt`), flow adapted from
+//!   /opt/xla-example/load_hlo. [`manifest`] parses the interchange contract
+//!   written by `python/compile/aot.py`.
+//! - [`reference::RefBackend`] — a pure-Rust masked-activation MLP with
+//!   hand-written autodiff; runs the full coordinator (BCD + baselines)
+//!   with no artifacts or native deps, for tests/CI and as a template for
+//!   future backends.
+//!
+//! [`session::Session`] adds the typed entry-point API both share. All
+//! backends are `Send + Sync` so the BCD trial scan can fan out across
+//! threads.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod reference;
 pub mod session;
 
+pub use backend::{Backend, CallStats, DeviceBuf, HostArg};
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use manifest::{Manifest, ModelInfo};
+pub use reference::RefBackend;
 pub use session::Session;
+
+use anyhow::Result;
+use std::path::Path;
+
+#[cfg(feature = "pjrt")]
+const HAVE_PJRT: bool = true;
+#[cfg(not(feature = "pjrt"))]
+const HAVE_PJRT: bool = false;
+
+#[cfg(feature = "pjrt")]
+fn open_pjrt(artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(engine::Engine::new(artifacts_dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn open_pjrt(_artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    anyhow::bail!(
+        "backend \"pjrt\" requires building with `--features pjrt` (and a vendored xla crate; see Cargo.toml)"
+    )
+}
+
+/// Open an execution backend by name.
+///
+/// - `"pjrt"` — the PJRT engine over `artifacts_dir` (needs the feature).
+/// - `"reference"` — the pure-Rust reference backend (always available).
+/// - `"auto"` — PJRT when compiled in *and* artifacts exist, else reference.
+pub fn open_backend(artifacts_dir: &Path, kind: &str) -> Result<Box<dyn Backend>> {
+    match kind {
+        "pjrt" => open_pjrt(artifacts_dir),
+        "reference" => Ok(Box::new(RefBackend::standard())),
+        "auto" => {
+            if HAVE_PJRT && artifacts_dir.join("manifest.json").exists() {
+                open_pjrt(artifacts_dir)
+            } else {
+                crate::info!(
+                    "runtime: using reference backend ({})",
+                    if HAVE_PJRT { "no artifacts found" } else { "built without pjrt" }
+                );
+                Ok(Box::new(RefBackend::standard()))
+            }
+        }
+        other => anyhow::bail!("unknown backend {other:?} (expected auto|pjrt|reference)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_reference_and_auto() {
+        let be = open_backend(Path::new("/nonexistent"), "reference").unwrap();
+        assert_eq!(be.name(), "reference");
+        // auto falls back to reference when there are no artifacts.
+        let be = open_backend(Path::new("/nonexistent"), "auto").unwrap();
+        assert_eq!(be.name(), "reference");
+        assert!(open_backend(Path::new("."), "bogus").is_err());
+    }
+}

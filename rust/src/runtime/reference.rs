@@ -1,0 +1,970 @@
+//! Pure-Rust reference backend: a masked-activation MLP with hand-written
+//! forward/backward passes, implementing the full artifact entry-point
+//! contract (`init`, `forward`, `eval_batch`, `train_step`, `snl_step`,
+//! `kd_step`) without HLO artifacts, XLA, or any native dependency.
+//!
+//! Purpose (DESIGN note): coordinator logic — BCD, the baselines, the
+//! parallel trial scan — is backbone-agnostic; it only needs *some*
+//! differentiable network whose accuracy degrades as ReLUs are masked off.
+//! This backend provides that, so integration tests and CI exercise
+//! `run_bcd` end-to-end on machines with neither artifacts nor a PJRT
+//! toolchain. Numerics intentionally do NOT match the HLO models: it is a
+//! reference implementation of the *interface*, not of the backbone.
+//!
+//! Semantics of the mask, shared with the compiled models: for a hidden
+//! unit with pre-activation `z` and mask value `m`,
+//! `a = m * relu(z) + (1 - m) * g(z)` where `g` is the identity (paper
+//! setting) or the AutoReP-style quadratic `0.25 z^2 + 0.5 z` for `_poly`
+//! variants. `m = 1` keeps the ReLU, `m = 0` linearizes it.
+
+// Index-heavy numeric kernels: explicit loops over computed flat offsets
+// read better than iterator chains here.
+#![allow(clippy::needless_range_loop)]
+
+use crate::runtime::backend::{Backend, CallStats, DeviceBuf, HostArg, StatsRecorder};
+use crate::runtime::manifest::{Manifest, ModelInfo, PackEntry};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Specification of one reference-backend model variant.
+#[derive(Clone, Debug)]
+pub struct RefSpec {
+    pub key: String,
+    pub backbone: String,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub channels: usize,
+    pub poly: bool,
+    /// Hidden-layer widths; each must be a multiple of 4 (the layer is
+    /// exposed to channel-granularity sampling as `[width/4, 2, 2]`).
+    pub hidden: (usize, usize),
+}
+
+/// Flat-pack layout of the MLP parameter vector.
+#[derive(Clone, Copy, Debug)]
+struct Layout {
+    d_in: usize,
+    h1: usize,
+    h2: usize,
+    k: usize,
+}
+
+impl Layout {
+    fn param_size(&self) -> usize {
+        self.d_in * self.h1 + self.h1 + self.h1 * self.h2 + self.h2 + self.h2 * self.k + self.k
+    }
+
+    fn mask_size(&self) -> usize {
+        self.h1 + self.h2
+    }
+
+    /// Split a parameter vector into [w1, b1, w2, b2, w3, b3].
+    fn split<'a>(&self, p: &'a [f32]) -> [&'a [f32]; 6] {
+        let (w1, rest) = p.split_at(self.d_in * self.h1);
+        let (b1, rest) = rest.split_at(self.h1);
+        let (w2, rest) = rest.split_at(self.h1 * self.h2);
+        let (b2, rest) = rest.split_at(self.h2);
+        let (w3, b3) = rest.split_at(self.h2 * self.k);
+        [w1, b1, w2, b2, w3, b3]
+    }
+
+    fn split_mut<'a>(&self, p: &'a mut [f32]) -> [&'a mut [f32]; 6] {
+        let (w1, rest) = p.split_at_mut(self.d_in * self.h1);
+        let (b1, rest) = rest.split_at_mut(self.h1);
+        let (w2, rest) = rest.split_at_mut(self.h1 * self.h2);
+        let (b2, rest) = rest.split_at_mut(self.h2);
+        let (w3, b3) = rest.split_at_mut(self.h2 * self.k);
+        [w1, b1, w2, b2, w3, b3]
+    }
+}
+
+struct RefModel {
+    layout: Layout,
+    poly: bool,
+}
+
+/// Device-buffer payload of the reference backend (host-resident copies —
+/// the "device" is the CPU, but the caching contract is identical to PJRT:
+/// upload once, reuse across calls).
+enum RefBuf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A borrowed argument after host/device unification.
+#[derive(Clone, Copy)]
+enum ArgView<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// The pure-Rust execution backend.
+pub struct RefBackend {
+    manifest: Manifest,
+    models: BTreeMap<String, RefModel>,
+    stats: StatsRecorder,
+}
+
+const MOMENTUM: f32 = 0.9;
+
+impl RefBackend {
+    /// Build a backend serving `specs` at a fixed batch size.
+    pub fn new(specs: &[RefSpec], batch: usize) -> RefBackend {
+        let mut models = BTreeMap::new();
+        let mut infos = BTreeMap::new();
+        for spec in specs {
+            assert!(
+                spec.hidden.0 % 4 == 0 && spec.hidden.1 % 4 == 0,
+                "hidden widths must be multiples of 4 for channel granularity"
+            );
+            let layout = Layout {
+                d_in: spec.channels * spec.image_size * spec.image_size,
+                h1: spec.hidden.0,
+                h2: spec.hidden.1,
+                k: spec.num_classes,
+            };
+            let mask_layers = vec![
+                PackEntry {
+                    name: "fc1".into(),
+                    shape: vec![layout.h1 / 4, 2, 2],
+                    offset: 0,
+                    size: layout.h1,
+                },
+                PackEntry {
+                    name: "fc2".into(),
+                    shape: vec![layout.h2 / 4, 2, 2],
+                    offset: layout.h1,
+                    size: layout.h2,
+                },
+            ];
+            let mut off = 0usize;
+            let mut param_entries = Vec::new();
+            for (name, n) in [
+                ("w1", layout.d_in * layout.h1),
+                ("b1", layout.h1),
+                ("w2", layout.h1 * layout.h2),
+                ("b2", layout.h2),
+                ("w3", layout.h2 * layout.k),
+                ("b3", layout.k),
+            ] {
+                param_entries.push(PackEntry {
+                    name: name.into(),
+                    shape: vec![n],
+                    offset: off,
+                    size: n,
+                });
+                off += n;
+            }
+            let info = ModelInfo {
+                key: spec.key.clone(),
+                backbone: spec.backbone.clone(),
+                num_classes: spec.num_classes,
+                image_size: spec.image_size,
+                channels: spec.channels,
+                poly: spec.poly,
+                param_size: layout.param_size(),
+                mask_size: layout.mask_size(),
+                mask_layers,
+                param_entries,
+                artifacts: BTreeMap::new(),
+            };
+            infos.insert(spec.key.clone(), info);
+            models.insert(spec.key.clone(), RefModel { layout, poly: spec.poly });
+        }
+        RefBackend {
+            manifest: Manifest {
+                batch,
+                kernel_impl: "reference".into(),
+                models: infos,
+                dir: PathBuf::from("<builtin>"),
+            },
+            models,
+            stats: StatsRecorder::new(),
+        }
+    }
+
+    /// The standard model table, mirroring the artifact manifest's key
+    /// naming (`Experiment::model_key`) so pipelines, benches and the CLI
+    /// run unchanged on this backend.
+    pub fn standard() -> RefBackend {
+        let mut specs = Vec::new();
+        for backbone in ["resnet", "wrn"] {
+            let hidden = if backbone == "resnet" { (256, 128) } else { (320, 160) };
+            for (size, classes) in [(16usize, 10usize), (16, 20), (32, 20)] {
+                for poly in [false, true] {
+                    let suffix = if poly { "_poly" } else { "" };
+                    specs.push(RefSpec {
+                        key: format!("{backbone}_{size}x{size}_c{classes}{suffix}"),
+                        backbone: backbone.into(),
+                        num_classes: classes,
+                        image_size: size,
+                        channels: 3,
+                        poly,
+                        hidden,
+                    });
+                }
+            }
+        }
+        RefBackend::new(&specs, 16)
+    }
+
+    fn model_impl(&self, key: &str) -> Result<&RefModel> {
+        self.models
+            .get(key)
+            .ok_or_else(|| anyhow!("reference backend has no model {key:?}"))
+    }
+
+    fn execute(&self, key: &str, fn_name: &str, args: &[ArgView]) -> Result<Vec<Tensor>> {
+        let model = self.model_impl(key)?;
+        match fn_name {
+            "init" => {
+                check_arity(key, fn_name, args, 1)?;
+                let seed = i32_scalar(args, 0, "seed")?;
+                Ok(vec![vec1(init_params(&model.layout, seed))])
+            }
+            "forward" => {
+                check_arity(key, fn_name, args, 3)?;
+                let (p, m, x, bsz) = pm_x(model, args, key, fn_name)?;
+                let f = forward(&model.layout, model.poly, p, m, x, bsz);
+                Ok(vec![Tensor::new(vec![bsz, model.layout.k], f.logits)])
+            }
+            "eval_batch" => {
+                check_arity(key, fn_name, args, 4)?;
+                let (p, m, x, bsz) = pm_x(model, args, key, fn_name)?;
+                let y = i32_arg(args, 3, "y")?;
+                check_len(key, fn_name, "y", y.len(), bsz)?;
+                let f = forward(&model.layout, model.poly, p, m, x, bsz);
+                let (loss, correct, _) = softmax_ce(&f.logits, y, model.layout.k);
+                Ok(vec![Tensor::scalar(loss), Tensor::scalar(correct as f32)])
+            }
+            "train_step" => {
+                check_arity(key, fn_name, args, 6)?;
+                let p = f32_arg(args, 0, "params")?;
+                let mom = f32_arg(args, 1, "mom")?;
+                let m = f32_arg(args, 2, "mask")?;
+                let x = f32_arg(args, 3, "x")?;
+                let y = i32_arg(args, 4, "y")?;
+                let lr = f32_scalar(args, 5, "lr")?;
+                let bsz = batch_of(model, key, fn_name, x.len())?;
+                check_len(key, fn_name, "params", p.len(), model.layout.param_size())?;
+                check_len(key, fn_name, "mask", m.len(), model.layout.mask_size())?;
+                check_len(key, fn_name, "y", y.len(), bsz)?;
+                let f = forward(&model.layout, model.poly, p, m, x, bsz);
+                let (loss, correct, dlogits) = softmax_ce(&f.logits, y, model.layout.k);
+                let (grad, _) = backward(&model.layout, model.poly, p, m, x, &f, &dlogits, bsz);
+                let (new_p, new_mom) = sgd_momentum(p, mom, &grad, lr);
+                Ok(vec![
+                    vec1(new_p),
+                    vec1(new_mom),
+                    Tensor::scalar(loss),
+                    Tensor::scalar(correct as f32),
+                ])
+            }
+            "snl_step" => {
+                check_arity(key, fn_name, args, 8)?;
+                let p = f32_arg(args, 0, "params")?;
+                let mom = f32_arg(args, 1, "mom")?;
+                let alphas = f32_arg(args, 2, "alphas")?;
+                let x = f32_arg(args, 3, "x")?;
+                let y = i32_arg(args, 4, "y")?;
+                let lr = f32_scalar(args, 5, "lr")?;
+                let alpha_lr = f32_scalar(args, 6, "alpha_lr")?;
+                let lam = f32_scalar(args, 7, "lam")?;
+                let bsz = batch_of(model, key, fn_name, x.len())?;
+                check_len(key, fn_name, "alphas", alphas.len(), model.layout.mask_size())?;
+                check_len(key, fn_name, "y", y.len(), bsz)?;
+                let f = forward(&model.layout, model.poly, p, alphas, x, bsz);
+                let (ce, _, dlogits) = softmax_ce(&f.logits, y, model.layout.k);
+                let (grad, dalpha) =
+                    backward(&model.layout, model.poly, p, alphas, x, &f, &dlogits, bsz);
+                let (new_p, new_mom) = sgd_momentum(p, mom, &grad, lr);
+                // Projected SGD on alpha under CE + lam * ||alpha||_1; alphas
+                // live in [0, 1] so the l1 subgradient is simply +lam.
+                let new_alphas: Vec<f32> = alphas
+                    .iter()
+                    .zip(&dalpha)
+                    .map(|(&a, &da)| (a - alpha_lr * (da + lam)).clamp(0.0, 1.0))
+                    .collect();
+                let l1: f32 = alphas.iter().sum();
+                Ok(vec![
+                    vec1(new_p),
+                    vec1(new_mom),
+                    vec1(new_alphas),
+                    Tensor::scalar(ce + lam * l1),
+                ])
+            }
+            "kd_step" => {
+                check_arity(key, fn_name, args, 8)?;
+                let p = f32_arg(args, 0, "params")?;
+                let mom = f32_arg(args, 1, "mom")?;
+                let m = f32_arg(args, 2, "mask")?;
+                let x = f32_arg(args, 3, "x")?;
+                let y = i32_arg(args, 4, "y")?;
+                let t_logits = f32_arg(args, 5, "t_logits")?;
+                let lr = f32_scalar(args, 6, "lr")?;
+                let temp = f32_scalar(args, 7, "temp")?.max(1e-3);
+                let bsz = batch_of(model, key, fn_name, x.len())?;
+                let k = model.layout.k;
+                check_len(key, fn_name, "mask", m.len(), model.layout.mask_size())?;
+                check_len(key, fn_name, "y", y.len(), bsz)?;
+                check_len(key, fn_name, "t_logits", t_logits.len(), bsz * k)?;
+                let f = forward(&model.layout, model.poly, p, m, x, bsz);
+                let (ce, _, mut dlogits) = softmax_ce(&f.logits, y, model.layout.k);
+                // Distillation: 0.5*CE(y) + 0.5*T^2*CE(softmax(t/T), softmax(s/T)).
+                let mut kd_loss = 0.0f32;
+                for bi in 0..bsz {
+                    let s = &f.logits[bi * k..(bi + 1) * k];
+                    let t = &t_logits[bi * k..(bi + 1) * k];
+                    let ps = softmax_t(s, temp);
+                    let pt = softmax_t(t, temp);
+                    for j in 0..k {
+                        kd_loss -= pt[j] * ps[j].max(1e-12).ln();
+                        // d(T^2 * soft-CE)/ds = T * (softmax(s/T) - softmax(t/T)).
+                        dlogits[bi * k + j] = 0.5 * dlogits[bi * k + j]
+                            + 0.5 * temp * (ps[j] - pt[j]) / bsz as f32;
+                    }
+                }
+                kd_loss = temp * temp * kd_loss / bsz as f32;
+                let loss = 0.5 * ce + 0.5 * kd_loss;
+                let (grad, _) = backward(&model.layout, model.poly, p, m, x, &f, &dlogits, bsz);
+                let (new_p, new_mom) = sgd_momentum(p, mom, &grad, lr);
+                Ok(vec![vec1(new_p), vec1(new_mom), Tensor::scalar(loss)])
+            }
+            other => bail!("reference backend: model {key}: no entry point {other:?}"),
+        }
+    }
+}
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn upload_f32(&self, data: &[f32], _dims: &[usize]) -> Result<DeviceBuf> {
+        Ok(DeviceBuf::new(RefBuf::F32(data.to_vec())))
+    }
+
+    fn upload_i32(&self, data: &[i32], _dims: &[usize]) -> Result<DeviceBuf> {
+        Ok(DeviceBuf::new(RefBuf::I32(data.to_vec())))
+    }
+
+    fn call(&self, model_key: &str, fn_name: &str, inputs: &[HostArg]) -> Result<Vec<Tensor>> {
+        let args: Vec<ArgView> = inputs
+            .iter()
+            .map(|a| match a {
+                HostArg::F32(t) => ArgView::F32(&t.data),
+                HostArg::I32(t) => ArgView::I32(&t.data),
+            })
+            .collect();
+        self.stats
+            .timed(&format!("{model_key}:{fn_name}"), || self.execute(model_key, fn_name, &args))
+    }
+
+    fn call_b(
+        &self,
+        model_key: &str,
+        fn_name: &str,
+        inputs: &[&DeviceBuf],
+    ) -> Result<Vec<Tensor>> {
+        let mut args = Vec::with_capacity(inputs.len());
+        for b in inputs {
+            args.push(match b.downcast::<RefBuf>()? {
+                RefBuf::F32(v) => ArgView::F32(v.as_slice()),
+                RefBuf::I32(v) => ArgView::I32(v.as_slice()),
+            });
+        }
+        self.stats
+            .timed(&format!("{model_key}:{fn_name}"), || self.execute(model_key, fn_name, &args))
+    }
+
+    fn stats(&self) -> BTreeMap<String, CallStats> {
+        self.stats.snapshot()
+    }
+}
+
+// ---- argument plumbing ----------------------------------------------------
+
+fn check_arity(key: &str, fn_name: &str, args: &[ArgView], want: usize) -> Result<()> {
+    if args.len() != want {
+        bail!("{key}:{fn_name}: got {} inputs, expects {want}", args.len());
+    }
+    Ok(())
+}
+
+fn check_len(key: &str, fn_name: &str, name: &str, got: usize, want: usize) -> Result<()> {
+    if got != want {
+        bail!("{key}:{fn_name}: input {name:?} has {got} elements, expects {want}");
+    }
+    Ok(())
+}
+
+fn f32_arg<'a>(args: &[ArgView<'a>], i: usize, name: &str) -> Result<&'a [f32]> {
+    match args[i] {
+        ArgView::F32(v) => Ok(v),
+        ArgView::I32(_) => bail!("input {name:?} (slot {i}): expected f32, got i32"),
+    }
+}
+
+fn i32_arg<'a>(args: &[ArgView<'a>], i: usize, name: &str) -> Result<&'a [i32]> {
+    match args[i] {
+        ArgView::I32(v) => Ok(v),
+        ArgView::F32(_) => bail!("input {name:?} (slot {i}): expected i32, got f32"),
+    }
+}
+
+fn f32_scalar(args: &[ArgView], i: usize, name: &str) -> Result<f32> {
+    let v = f32_arg(args, i, name)?;
+    if v.len() != 1 {
+        bail!("input {name:?}: expected a scalar, got {} elements", v.len());
+    }
+    Ok(v[0])
+}
+
+fn i32_scalar(args: &[ArgView], i: usize, name: &str) -> Result<i32> {
+    let v = i32_arg(args, i, name)?;
+    if v.len() != 1 {
+        bail!("input {name:?}: expected a scalar, got {} elements", v.len());
+    }
+    Ok(v[0])
+}
+
+/// Shared (params, mask, x) prefix of forward/eval entry points.
+fn pm_x<'a>(
+    model: &RefModel,
+    args: &[ArgView<'a>],
+    key: &str,
+    fn_name: &str,
+) -> Result<(&'a [f32], &'a [f32], &'a [f32], usize)> {
+    let p = f32_arg(args, 0, "params")?;
+    let m = f32_arg(args, 1, "mask")?;
+    let x = f32_arg(args, 2, "x")?;
+    check_len(key, fn_name, "params", p.len(), model.layout.param_size())?;
+    check_len(key, fn_name, "mask", m.len(), model.layout.mask_size())?;
+    let bsz = batch_of(model, key, fn_name, x.len())?;
+    Ok((p, m, x, bsz))
+}
+
+fn batch_of(model: &RefModel, key: &str, fn_name: &str, x_len: usize) -> Result<usize> {
+    let d = model.layout.d_in;
+    if x_len == 0 || x_len % d != 0 {
+        bail!("{key}:{fn_name}: input \"x\" has {x_len} elements, expects a multiple of {d}");
+    }
+    Ok(x_len / d)
+}
+
+fn vec1(data: Vec<f32>) -> Tensor {
+    Tensor::new(vec![data.len()], data)
+}
+
+// ---- the network ----------------------------------------------------------
+
+/// Deterministic Xavier-uniform initialization from a seed.
+fn init_params(layout: &Layout, seed: i32) -> Vec<f32> {
+    let mut rng = Rng::new((seed as u32 as u64) ^ 0x5EED_BACC_E17D_0001);
+    let mut p = vec![0.0f32; layout.param_size()];
+    let [w1, _b1, w2, _b2, w3, _b3] = layout.split_mut(&mut p);
+    for (w, fan_in, fan_out) in [
+        (w1, layout.d_in, layout.h1),
+        (w2, layout.h1, layout.h2),
+        (w3, layout.h2, layout.k),
+    ] {
+        let limit = (6.0f32 / (fan_in + fan_out) as f32).sqrt();
+        for v in w.iter_mut() {
+            *v = rng.range_f32(-limit, limit);
+        }
+    }
+    p
+}
+
+/// The non-ReLU branch `g` taken where the mask is 0.
+fn g(z: f32, poly: bool) -> f32 {
+    if poly {
+        0.25 * z * z + 0.5 * z
+    } else {
+        z
+    }
+}
+
+fn g_prime(z: f32, poly: bool) -> f32 {
+    if poly {
+        0.5 * z + 0.5
+    } else {
+        1.0
+    }
+}
+
+/// `z @ [bsz, d_in] x [d_in, d_out] + b`.
+fn affine(x: &[f32], w: &[f32], b: &[f32], bsz: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+    let mut z = vec![0.0f32; bsz * d_out];
+    for bi in 0..bsz {
+        let xr = &x[bi * d_in..(bi + 1) * d_in];
+        let zr = &mut z[bi * d_out..(bi + 1) * d_out];
+        zr.copy_from_slice(b);
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv != 0.0 {
+                let wr = &w[i * d_out..(i + 1) * d_out];
+                for (zj, &wj) in zr.iter_mut().zip(wr) {
+                    *zj += xv * wj;
+                }
+            }
+        }
+    }
+    z
+}
+
+/// Masked activation: `a = m*relu(z) + (1-m)*g(z)` per unit (mask is
+/// per-unit, broadcast over the batch).
+fn act(z: &[f32], mask: &[f32], bsz: usize, d: usize, poly: bool) -> Vec<f32> {
+    let mut a = vec![0.0f32; z.len()];
+    for bi in 0..bsz {
+        for j in 0..d {
+            let zv = z[bi * d + j];
+            let m = mask[j];
+            a[bi * d + j] = m * zv.max(0.0) + (1.0 - m) * g(zv, poly);
+        }
+    }
+    a
+}
+
+struct ForwardCache {
+    z1: Vec<f32>,
+    a1: Vec<f32>,
+    z2: Vec<f32>,
+    a2: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+fn forward(
+    layout: &Layout,
+    poly: bool,
+    p: &[f32],
+    mask: &[f32],
+    x: &[f32],
+    bsz: usize,
+) -> ForwardCache {
+    let [w1, b1, w2, b2, w3, b3] = layout.split(p);
+    let (m1, m2) = mask.split_at(layout.h1);
+    let z1 = affine(x, w1, b1, bsz, layout.d_in, layout.h1);
+    let a1 = act(&z1, m1, bsz, layout.h1, poly);
+    let z2 = affine(&a1, w2, b2, bsz, layout.h1, layout.h2);
+    let a2 = act(&z2, m2, bsz, layout.h2, poly);
+    let logits = affine(&a2, w3, b3, bsz, layout.h2, layout.k);
+    ForwardCache { z1, a1, z2, a2, logits }
+}
+
+/// Mean cross-entropy + correct count + `dL/dlogits` for logits `[bsz, k]`.
+/// Argmax ties resolve to the highest index, matching
+/// [`Tensor::argmax_rows`].
+fn softmax_ce(logits: &[f32], y: &[i32], k: usize) -> (f32, usize, Vec<f32>) {
+    let bsz = y.len();
+    let mut dlogits = vec![0.0f32; logits.len()];
+    let mut loss = 0.0f32;
+    let mut correct = 0usize;
+    for bi in 0..bsz {
+        let row = &logits[bi * k..(bi + 1) * k];
+        let mut am = 0usize;
+        let mut max = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v >= max {
+                max = v;
+                am = j;
+            }
+        }
+        let target = y[bi] as usize % k;
+        if am == target {
+            correct += 1;
+        }
+        let exps: Vec<f32> = row.iter().map(|&v| (v - max).exp()).collect();
+        let denom: f32 = exps.iter().sum();
+        for j in 0..k {
+            let pj = exps[j] / denom;
+            dlogits[bi * k + j] = (pj - if j == target { 1.0 } else { 0.0 }) / bsz as f32;
+            if j == target {
+                loss -= pj.max(1e-12).ln();
+            }
+        }
+    }
+    (loss / bsz as f32, correct, dlogits)
+}
+
+/// Temperature softmax of one row.
+fn softmax_t(row: &[f32], temp: f32) -> Vec<f32> {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = row.iter().map(|&v| ((v - max) / temp).exp()).collect();
+    let denom: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / denom).collect()
+}
+
+/// Backprop from `dlogits` to the full parameter gradient; also returns the
+/// per-unit mask gradient `dL/dm_j = sum_b da_bj * (relu(z) - g(z))` needed
+/// by `snl_step`.
+#[allow(clippy::too_many_arguments)]
+fn backward(
+    layout: &Layout,
+    poly: bool,
+    p: &[f32],
+    mask: &[f32],
+    x: &[f32],
+    f: &ForwardCache,
+    dlogits: &[f32],
+    bsz: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let [_w1, _b1, w2, _b2, w3, _b3] = layout.split(p);
+    let (m1, m2) = mask.split_at(layout.h1);
+    let mut grad = vec![0.0f32; layout.param_size()];
+    let mut dmask = vec![0.0f32; layout.mask_size()];
+    {
+        let [gw1, gb1, gw2, gb2, gw3, gb3] = layout.split_mut(&mut grad);
+        // Output layer.
+        matgrad(&f.a2, dlogits, gw3, gb3, bsz, layout.h2, layout.k);
+        let da2 = dinput(dlogits, w3, bsz, layout.h2, layout.k);
+        // Hidden layer 2.
+        let (dm2, dz2) = dact(&f.z2, m2, &da2, bsz, layout.h2, poly);
+        dmask[layout.h1..].copy_from_slice(&dm2);
+        matgrad(&f.a1, &dz2, gw2, gb2, bsz, layout.h1, layout.h2);
+        let da1 = dinput(&dz2, w2, bsz, layout.h1, layout.h2);
+        // Hidden layer 1.
+        let (dm1, dz1) = dact(&f.z1, m1, &da1, bsz, layout.h1, poly);
+        dmask[..layout.h1].copy_from_slice(&dm1);
+        matgrad(x, &dz1, gw1, gb1, bsz, layout.d_in, layout.h1);
+    }
+    (grad, dmask)
+}
+
+/// Accumulate `dw = x^T dz` and `db = colsum(dz)`.
+#[allow(clippy::too_many_arguments)]
+fn matgrad(
+    x: &[f32],
+    dz: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    bsz: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    for bi in 0..bsz {
+        let xr = &x[bi * d_in..(bi + 1) * d_in];
+        let dzr = &dz[bi * d_out..(bi + 1) * d_out];
+        for (j, &dv) in dzr.iter().enumerate() {
+            db[j] += dv;
+        }
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv != 0.0 {
+                let dwr = &mut dw[i * d_out..(i + 1) * d_out];
+                for (dwj, &dv) in dwr.iter_mut().zip(dzr) {
+                    *dwj += xv * dv;
+                }
+            }
+        }
+    }
+}
+
+/// `dx = dz @ w^T`.
+fn dinput(dz: &[f32], w: &[f32], bsz: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; bsz * d_in];
+    for bi in 0..bsz {
+        let dzr = &dz[bi * d_out..(bi + 1) * d_out];
+        let dxr = &mut dx[bi * d_in..(bi + 1) * d_in];
+        for (i, dxi) in dxr.iter_mut().enumerate() {
+            let wr = &w[i * d_out..(i + 1) * d_out];
+            let mut acc = 0.0f32;
+            for (&dv, &wv) in dzr.iter().zip(wr) {
+                acc += dv * wv;
+            }
+            *dxi = acc;
+        }
+    }
+    dx
+}
+
+/// Backprop through the masked activation: returns (`dL/dmask` per unit,
+/// `dL/dz`).
+fn dact(
+    z: &[f32],
+    mask: &[f32],
+    da: &[f32],
+    bsz: usize,
+    d: usize,
+    poly: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dmask = vec![0.0f32; d];
+    let mut dz = vec![0.0f32; z.len()];
+    for bi in 0..bsz {
+        for j in 0..d {
+            let idx = bi * d + j;
+            let zv = z[idx];
+            let m = mask[j];
+            let relu_grad = if zv > 0.0 { 1.0 } else { 0.0 };
+            dz[idx] = da[idx] * (m * relu_grad + (1.0 - m) * g_prime(zv, poly));
+            dmask[j] += da[idx] * (zv.max(0.0) - g(zv, poly));
+        }
+    }
+    (dmask, dz)
+}
+
+/// SGD with momentum: `mom = mu*mom + g; p -= lr*mom`.
+fn sgd_momentum(p: &[f32], mom: &[f32], grad: &[f32], lr: f32) -> (Vec<f32>, Vec<f32>) {
+    let mut new_p = Vec::with_capacity(p.len());
+    let mut new_mom = Vec::with_capacity(mom.len());
+    for i in 0..p.len() {
+        let m = MOMENTUM * mom[i] + grad[i];
+        new_mom.push(m);
+        new_p.push(p[i] - lr * m);
+    }
+    (new_p, new_mom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorI32;
+
+    fn tiny_backend() -> RefBackend {
+        RefBackend::new(
+            &[RefSpec {
+                key: "tiny".into(),
+                backbone: "resnet".into(),
+                num_classes: 3,
+                image_size: 2,
+                channels: 1,
+                poly: false,
+                hidden: (8, 4),
+            }],
+            4,
+        )
+    }
+
+    fn host_call(be: &RefBackend, fn_name: &str, args: &[HostArg]) -> Vec<Tensor> {
+        be.call("tiny", fn_name, args).unwrap()
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let be = tiny_backend();
+        let s7 = TensorI32::scalar(7);
+        let s8 = TensorI32::scalar(8);
+        let a = host_call(&be, "init", &[HostArg::I32(&s7)]);
+        let b = host_call(&be, "init", &[HostArg::I32(&s7)]);
+        let c = host_call(&be, "init", &[HostArg::I32(&s8)]);
+        assert_eq!(a[0].data, b[0].data);
+        assert_ne!(a[0].data, c[0].data);
+        let info = be.model("tiny").unwrap();
+        assert_eq!(a[0].len(), info.param_size);
+        assert!(a[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_shapes_and_mask_sensitivity() {
+        let be = tiny_backend();
+        let info = be.model("tiny").unwrap().clone();
+        let seed = TensorI32::scalar(1);
+        let p = host_call(&be, "init", &[HostArg::I32(&seed)]).remove(0);
+        let full = Tensor::ones(vec![info.mask_size]);
+        let zero = Tensor::zeros(vec![info.mask_size]);
+        let mut x = Tensor::zeros(vec![4, 1, 2, 2]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i % 7) as f32 - 3.0) / 3.0;
+        }
+        let lf = host_call(
+            &be,
+            "forward",
+            &[HostArg::F32(&p), HostArg::F32(&full), HostArg::F32(&x)],
+        )
+        .remove(0);
+        assert_eq!(lf.shape, vec![4, 3]);
+        let lz = host_call(
+            &be,
+            "forward",
+            &[HostArg::F32(&p), HostArg::F32(&zero), HostArg::F32(&x)],
+        )
+        .remove(0);
+        assert_ne!(lf.data, lz.data, "removing every ReLU must change the output");
+    }
+
+    #[test]
+    fn zero_mask_network_is_affine() {
+        // With the identity branch everywhere the whole net is affine:
+        // f(x1 + x2) = f(x1) + f(x2) - f(0) row-wise.
+        let be = tiny_backend();
+        let info = be.model("tiny").unwrap().clone();
+        let seed = TensorI32::scalar(3);
+        let p = host_call(&be, "init", &[HostArg::I32(&seed)]).remove(0);
+        let zero_mask = Tensor::zeros(vec![info.mask_size]);
+        let fwd = |x: &Tensor| {
+            host_call(
+                &be,
+                "forward",
+                &[HostArg::F32(&p), HostArg::F32(&zero_mask), HostArg::F32(x)],
+            )
+            .remove(0)
+        };
+        let mut x1 = Tensor::zeros(vec![1, 1, 2, 2]);
+        let mut x2 = Tensor::zeros(vec![1, 1, 2, 2]);
+        for i in 0..4 {
+            x1.data[i] = 0.1 * (i as f32 + 1.0);
+            x2.data[i] = -0.2 * (i as f32 - 1.5);
+        }
+        let xs = Tensor::new(vec![1, 1, 2, 2], (0..4).map(|i| x1.data[i] + x2.data[i]).collect());
+        let x0 = Tensor::zeros(vec![1, 1, 2, 2]);
+        let (f1, f2, fs, f0) = (fwd(&x1), fwd(&x2), fwd(&xs), fwd(&x0));
+        for j in 0..3 {
+            let lhs = fs.data[j];
+            let rhs = f1.data[j] + f2.data[j] - f0.data[j];
+            assert!(
+                (lhs - rhs).abs() < 1e-3,
+                "affine identity violated at {j}: {lhs} vs {rhs}"
+            );
+        }
+        // Sanity: with the full (ReLU) mask the identity must generally fail.
+        let full = Tensor::ones(vec![info.mask_size]);
+        let fwd_relu = |x: &Tensor| {
+            host_call(
+                &be,
+                "forward",
+                &[HostArg::F32(&p), HostArg::F32(&full), HostArg::F32(x)],
+            )
+            .remove(0)
+        };
+        let (r1, r2, rs, r0) = (fwd_relu(&x1), fwd_relu(&x2), fwd_relu(&xs), fwd_relu(&x0));
+        let dev: f32 = (0..3)
+            .map(|j| (rs.data[j] - (r1.data[j] + r2.data[j] - r0.data[j])).abs())
+            .sum();
+        assert!(dev > 1e-6, "ReLU network unexpectedly affine");
+    }
+
+    #[test]
+    fn eval_batch_matches_forward_argmax() {
+        let be = tiny_backend();
+        let info = be.model("tiny").unwrap().clone();
+        let seed = TensorI32::scalar(5);
+        let p = host_call(&be, "init", &[HostArg::I32(&seed)]).remove(0);
+        let full = Tensor::ones(vec![info.mask_size]);
+        let mut x = Tensor::zeros(vec![4, 1, 2, 2]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 13 % 11) as f32 - 5.0) / 5.0;
+        }
+        let y = TensorI32::new(vec![4], vec![0, 1, 2, 0]);
+        let logits = host_call(
+            &be,
+            "forward",
+            &[HostArg::F32(&p), HostArg::F32(&full), HostArg::F32(&x)],
+        )
+        .remove(0);
+        let out = host_call(
+            &be,
+            "eval_batch",
+            &[HostArg::F32(&p), HostArg::F32(&full), HostArg::F32(&x), HostArg::I32(&y)],
+        );
+        let preds = logits.argmax_rows().unwrap();
+        let want = preds
+            .iter()
+            .zip(&y.data)
+            .filter(|(p, &t)| **p == t as usize)
+            .count() as f32;
+        assert_eq!(out[1].item(), want);
+        assert!(out[0].item() > 0.0 && out[0].item().is_finite());
+    }
+
+    #[test]
+    fn train_step_moves_params_and_momentum() {
+        let be = tiny_backend();
+        let info = be.model("tiny").unwrap().clone();
+        let seed = TensorI32::scalar(2);
+        let p = host_call(&be, "init", &[HostArg::I32(&seed)]).remove(0);
+        let mom = Tensor::zeros(vec![info.param_size]);
+        let mask = Tensor::ones(vec![info.mask_size]);
+        let mut x = Tensor::zeros(vec![4, 1, 2, 2]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = (i as f32 % 5.0 - 2.0) / 2.0;
+        }
+        let y = TensorI32::new(vec![4], vec![1, 0, 2, 1]);
+        let lr = Tensor::scalar(0.05);
+        let out = host_call(
+            &be,
+            "train_step",
+            &[
+                HostArg::F32(&p),
+                HostArg::F32(&mom),
+                HostArg::F32(&mask),
+                HostArg::F32(&x),
+                HostArg::I32(&y),
+                HostArg::F32(&lr),
+            ],
+        );
+        assert_ne!(out[0].data, p.data, "params must move under a gradient step");
+        assert!(out[1].data.iter().any(|&m| m != 0.0), "momentum must be nonzero");
+        assert!(out[2].item().is_finite());
+        // Deterministic: the same step replays bit-exactly.
+        let out2 = host_call(
+            &be,
+            "train_step",
+            &[
+                HostArg::F32(&p),
+                HostArg::F32(&mom),
+                HostArg::F32(&mask),
+                HostArg::F32(&x),
+                HostArg::I32(&y),
+                HostArg::F32(&lr),
+            ],
+        );
+        assert_eq!(out[0].data, out2[0].data);
+    }
+
+    #[test]
+    fn snl_l1_pressure_shrinks_alphas() {
+        // With weight lr = 0 and a large lambda, alphas must strictly
+        // decrease (the l1 term alone drives them down).
+        let be = tiny_backend();
+        let info = be.model("tiny").unwrap().clone();
+        let seed = TensorI32::scalar(4);
+        let p = host_call(&be, "init", &[HostArg::I32(&seed)]).remove(0);
+        let mom = Tensor::zeros(vec![info.param_size]);
+        let alphas = Tensor::ones(vec![info.mask_size]);
+        let x = Tensor::zeros(vec![4, 1, 2, 2]);
+        let y = TensorI32::new(vec![4], vec![0, 1, 2, 0]);
+        let out = host_call(
+            &be,
+            "snl_step",
+            &[
+                HostArg::F32(&p),
+                HostArg::F32(&mom),
+                HostArg::F32(&alphas),
+                HostArg::F32(&x),
+                HostArg::I32(&y),
+                HostArg::F32(&Tensor::scalar(0.0)),
+                HostArg::F32(&Tensor::scalar(0.1)),
+                HostArg::F32(&Tensor::scalar(1.0)),
+            ],
+        );
+        assert_eq!(out[0].data, p.data, "lr=0 must leave weights untouched");
+        let new_alphas = &out[2];
+        let before: f32 = alphas.data.iter().sum();
+        let after: f32 = new_alphas.data.iter().sum();
+        assert!(after < before, "l1 pressure failed: {after} >= {before}");
+        assert!(new_alphas.data.iter().all(|&a| (0.0..=1.0).contains(&a)));
+    }
+
+    #[test]
+    fn standard_models_cover_experiment_keys() {
+        let be = RefBackend::standard();
+        for key in [
+            "resnet_16x16_c10",
+            "resnet_16x16_c20",
+            "resnet_32x32_c20",
+            "wrn_16x16_c20_poly",
+            "wrn_32x32_c20",
+        ] {
+            let info = be.model(key).unwrap();
+            assert!(info.mask_size > 0 && info.param_size > 0, "{key}");
+        }
+        assert!(be.model("nope").is_err());
+        assert_eq!(be.batch(), 16);
+    }
+}

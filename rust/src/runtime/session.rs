@@ -1,12 +1,13 @@
-//! Typed session over one model variant's artifact set.
+//! Typed session over one model variant of a [`Backend`].
 //!
-//! [`Session`] maps the manifest entry points (`init`, `forward`,
-//! `eval_batch`, `train_step`, `snl_step`, `kd_step`) to rust signatures so
-//! coordinator code never touches raw literals, and owns the device-buffer
+//! [`Session`] maps the entry points (`init`, `forward`, `eval_batch`,
+//! `train_step`, `snl_step`, `kd_step`) to rust signatures so coordinator
+//! code never touches raw backend calls, and brokers the device-buffer
 //! cache for inputs that stay constant across many calls (§Perf: the BCD
-//! trial loop re-sends only the trial mask).
+//! trial loop re-sends only the trial mask). A `Session` is `Sync` — the
+//! parallel trial scan shares one across its worker pool.
 
-use super::engine::Engine;
+use super::backend::{Backend, DeviceBuf, HostArg};
 use super::manifest::ModelInfo;
 use crate::model::ModelState;
 use crate::tensor::{Tensor, TensorI32};
@@ -20,31 +21,28 @@ pub struct StepOut {
     pub correct: f32,
 }
 
-/// A typed handle on one model variant (`model_key`) of an [`Engine`].
+/// A typed handle on one model variant (`model_key`) of a [`Backend`].
 pub struct Session<'e> {
-    pub engine: &'e Engine,
+    pub backend: &'e dyn Backend,
     pub key: String,
     pub batch: usize,
 }
 
 impl<'e> Session<'e> {
-    pub fn new(engine: &'e Engine, model_key: &str) -> Result<Session<'e>> {
-        let _ = engine.model(model_key)?; // fail fast on unknown keys
-        Ok(Session { engine, key: model_key.to_string(), batch: engine.manifest.batch })
+    pub fn new(backend: &'e dyn Backend, model_key: &str) -> Result<Session<'e>> {
+        let _ = backend.model(model_key)?; // fail fast on unknown keys
+        Ok(Session { backend, key: model_key.to_string(), batch: backend.batch() })
     }
 
     pub fn info(&self) -> &ModelInfo {
-        self.engine.model(&self.key).expect("validated in new()")
+        self.backend.model(&self.key).expect("validated in new()")
     }
 
-    /// Deterministic parameter initialization (artifact `init`).
+    /// Deterministic parameter initialization (entry point `init`).
     pub fn init(&self, seed: i32) -> Result<Tensor> {
-        let outs = self.engine.call(
-            &self.key,
-            "init",
-            &[TensorI32::scalar(seed).to_literal()?],
-        )?;
-        Tensor::from_literal(&outs[0])
+        let seed = TensorI32::scalar(seed);
+        let mut outs = self.backend.call(&self.key, "init", &[HostArg::I32(&seed)])?;
+        Ok(outs.remove(0))
     }
 
     /// Fresh [`ModelState`] from a seed.
@@ -54,19 +52,28 @@ impl<'e> Session<'e> {
 
     /// Forward pass -> logits `[B, K]`.
     pub fn forward(&self, params: &Tensor, mask: &[f32], x: &Tensor) -> Result<Tensor> {
-        let outs = self.engine.call(
+        let mask = Tensor::new(vec![mask.len()], mask.to_vec());
+        let mut outs = self.backend.call(
             &self.key,
             "forward",
-            &[
-                params.to_literal()?,
-                Tensor::new(vec![mask.len()], mask.to_vec()).to_literal()?,
-                x.to_literal()?,
-            ],
+            &[HostArg::F32(params), HostArg::F32(&mask), HostArg::F32(x)],
         )?;
-        Tensor::from_literal(&outs[0])
+        Ok(outs.remove(0))
     }
 
-    /// Loss + correct-count on one batch (artifact `eval_batch`).
+    /// Buffer-input forward (used for exact scoring of the final partial
+    /// evaluation batch): all inputs are cached device buffers.
+    pub fn forward_b(
+        &self,
+        params: &DeviceBuf,
+        mask: &DeviceBuf,
+        x: &DeviceBuf,
+    ) -> Result<Tensor> {
+        let mut outs = self.backend.call_b(&self.key, "forward", &[params, mask, x])?;
+        Ok(outs.remove(0))
+    }
+
+    /// Loss + correct-count on one batch (entry point `eval_batch`).
     pub fn eval_batch(
         &self,
         params: &Tensor,
@@ -74,54 +81,40 @@ impl<'e> Session<'e> {
         x: &Tensor,
         y: &TensorI32,
     ) -> Result<StepOut> {
-        let outs = self.engine.call(
+        let mask = Tensor::new(vec![mask.len()], mask.to_vec());
+        let outs = self.backend.call(
             &self.key,
             "eval_batch",
-            &[
-                params.to_literal()?,
-                Tensor::new(vec![mask.len()], mask.to_vec()).to_literal()?,
-                x.to_literal()?,
-                y.to_literal()?,
-            ],
+            &[HostArg::F32(params), HostArg::F32(&mask), HostArg::F32(x), HostArg::I32(y)],
         )?;
-        Ok(StepOut {
-            loss: Tensor::from_literal(&outs[0])?.item(),
-            correct: Tensor::from_literal(&outs[1])?.item(),
-        })
+        Ok(StepOut { loss: outs[0].item(), correct: outs[1].item() })
     }
 
     /// Buffer-input eval (the BCD trial hot path): `params`, `x`, `y` are
     /// cached device buffers; only the trial mask is uploaded per call.
     pub fn eval_batch_b(
         &self,
-        params: &xla::PjRtBuffer,
-        mask: &xla::PjRtBuffer,
-        x: &xla::PjRtBuffer,
-        y: &xla::PjRtBuffer,
+        params: &DeviceBuf,
+        mask: &DeviceBuf,
+        x: &DeviceBuf,
+        y: &DeviceBuf,
     ) -> Result<StepOut> {
         let outs = self
-            .engine
+            .backend
             .call_b(&self.key, "eval_batch", &[params, mask, x, y])?;
-        Ok(StepOut {
-            loss: Tensor::from_literal(&outs[0])?.item(),
-            correct: Tensor::from_literal(&outs[1])?.item(),
-        })
+        Ok(StepOut { loss: outs[0].item(), correct: outs[1].item() })
     }
 
     /// Upload a flat f32 slice as a device buffer.
-    pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.engine.upload_f32(data, shape)
+    pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<DeviceBuf> {
+        self.backend.upload_f32(data, shape)
     }
 
     /// Upload a host tensor pair (x, y) as device buffers.
-    pub fn upload_batch(
-        &self,
-        x: &Tensor,
-        y: &TensorI32,
-    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+    pub fn upload_batch(&self, x: &Tensor, y: &TensorI32) -> Result<(DeviceBuf, DeviceBuf)> {
         Ok((
-            self.engine.upload_f32(&x.data, &x.shape)?,
-            self.engine.upload_i32(&y.data, &y.shape)?,
+            self.backend.upload_f32(&x.data, &x.shape)?,
+            self.backend.upload_i32(&y.data, &y.shape)?,
         ))
     }
 
@@ -133,27 +126,27 @@ impl<'e> Session<'e> {
         y: &TensorI32,
         lr: f32,
     ) -> Result<StepOut> {
-        let outs = self
-            .engine
+        let mask = st.mask.to_tensor();
+        let lr = Tensor::scalar(lr);
+        let mut outs = self
+            .backend
             .call(
                 &self.key,
                 "train_step",
                 &[
-                    st.params.to_literal()?,
-                    st.mom.to_literal()?,
-                    st.mask.to_tensor().to_literal()?,
-                    x.to_literal()?,
-                    y.to_literal()?,
-                    Tensor::scalar(lr).to_literal()?,
+                    HostArg::F32(&st.params),
+                    HostArg::F32(&st.mom),
+                    HostArg::F32(&mask),
+                    HostArg::F32(x),
+                    HostArg::I32(y),
+                    HostArg::F32(&lr),
                 ],
             )
             .context("train_step")?;
-        st.params = Tensor::from_literal(&outs[0])?;
-        st.mom = Tensor::from_literal(&outs[1])?;
-        Ok(StepOut {
-            loss: Tensor::from_literal(&outs[2])?.item(),
-            correct: Tensor::from_literal(&outs[3])?.item(),
-        })
+        let out = StepOut { loss: outs[2].item(), correct: outs[3].item() };
+        st.mom = outs.swap_remove(1);
+        st.params = outs.swap_remove(0);
+        Ok(out)
     }
 
     /// One selective (SNL) step: trains weights AND soft alphas under
@@ -173,27 +166,31 @@ impl<'e> Session<'e> {
         alpha_lr: f32,
         lam: f32,
     ) -> Result<f32> {
-        let outs = self
-            .engine
+        let lr = Tensor::scalar(lr);
+        let alpha_lr = Tensor::scalar(alpha_lr);
+        let lam = Tensor::scalar(lam);
+        let mut outs = self
+            .backend
             .call(
                 &self.key,
                 "snl_step",
                 &[
-                    params.to_literal()?,
-                    mom.to_literal()?,
-                    alphas.to_literal()?,
-                    x.to_literal()?,
-                    y.to_literal()?,
-                    Tensor::scalar(lr).to_literal()?,
-                    Tensor::scalar(alpha_lr).to_literal()?,
-                    Tensor::scalar(lam).to_literal()?,
+                    HostArg::F32(params),
+                    HostArg::F32(mom),
+                    HostArg::F32(alphas),
+                    HostArg::F32(x),
+                    HostArg::I32(y),
+                    HostArg::F32(&lr),
+                    HostArg::F32(&alpha_lr),
+                    HostArg::F32(&lam),
                 ],
             )
             .context("snl_step")?;
-        *params = Tensor::from_literal(&outs[0])?;
-        *mom = Tensor::from_literal(&outs[1])?;
-        *alphas = Tensor::from_literal(&outs[2])?;
-        Ok(Tensor::from_literal(&outs[3])?.item())
+        let loss = outs[3].item();
+        *alphas = outs.swap_remove(2);
+        *mom = outs.swap_remove(1);
+        *params = outs.swap_remove(0);
+        Ok(loss)
     }
 
     /// One knowledge-distillation step (SENet finetune), teacher logits in.
@@ -206,25 +203,29 @@ impl<'e> Session<'e> {
         lr: f32,
         temp: f32,
     ) -> Result<f32> {
-        let outs = self
-            .engine
+        let mask = st.mask.to_tensor();
+        let lr = Tensor::scalar(lr);
+        let temp = Tensor::scalar(temp);
+        let mut outs = self
+            .backend
             .call(
                 &self.key,
                 "kd_step",
                 &[
-                    st.params.to_literal()?,
-                    st.mom.to_literal()?,
-                    st.mask.to_tensor().to_literal()?,
-                    x.to_literal()?,
-                    y.to_literal()?,
-                    t_logits.to_literal()?,
-                    Tensor::scalar(lr).to_literal()?,
-                    Tensor::scalar(temp).to_literal()?,
+                    HostArg::F32(&st.params),
+                    HostArg::F32(&st.mom),
+                    HostArg::F32(&mask),
+                    HostArg::F32(x),
+                    HostArg::I32(y),
+                    HostArg::F32(t_logits),
+                    HostArg::F32(&lr),
+                    HostArg::F32(&temp),
                 ],
             )
             .context("kd_step")?;
-        st.params = Tensor::from_literal(&outs[0])?;
-        st.mom = Tensor::from_literal(&outs[1])?;
-        Ok(Tensor::from_literal(&outs[2])?.item())
+        let loss = outs[2].item();
+        st.mom = outs.swap_remove(1);
+        st.params = outs.swap_remove(0);
+        Ok(loss)
     }
 }

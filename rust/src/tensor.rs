@@ -1,9 +1,9 @@
-//! Host-side tensors and conversion to/from `xla::Literal`.
+//! Host-side tensors (plus `xla::Literal` conversions under `pjrt`).
 //!
-//! The coordinator only ever needs two dtypes at the artifact boundary
+//! The coordinator only ever needs two dtypes at the backend boundary
 //! (f32 data, i32 labels/seeds), so [`Tensor`] is an f32 container with an
 //! explicit shape plus a thin i32 variant. Everything heavier (matmuls,
-//! convs) lives behind the AOT boundary in compiled HLO.
+//! convs) lives behind the [`crate::runtime::Backend`] boundary.
 
 use anyhow::{bail, Result};
 
@@ -48,6 +48,7 @@ impl Tensor {
     }
 
     /// Convert to an `xla::Literal` with this tensor's shape.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
@@ -55,6 +56,7 @@ impl Tensor {
     }
 
     /// Read a Literal back into a host tensor (f32 only).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -112,6 +114,7 @@ impl TensorI32 {
         Self { shape: vec![1], data: vec![v] }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let lit = xla::Literal::vec1(&self.data);
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();

@@ -1,7 +1,10 @@
-//! BCD coordinator integration over the real runtime: Algorithm 2
+//! BCD coordinator integration over the PJRT runtime: Algorithm 2
 //! invariants hold on a live model (budgets exact, ReLUs never revisited,
 //! early-exit bound sound), with finetuning disabled so the test only pays
-//! the (fast) eval_batch compile.
+//! the (fast) eval_batch compile. Requires `--features pjrt` + artifacts;
+//! the backend-agnostic twin in `integration_reference.rs` always runs.
+
+#![cfg(feature = "pjrt")]
 
 use cdnl::config::BcdConfig;
 use cdnl::coordinator::bcd::run_bcd;
@@ -44,7 +47,7 @@ fn bcd_invariants_on_live_model() {
     let mut rng = Rng::new(1);
     let sampler = BlockSampler::new(cdnl::config::Granularity::Pixel, sess.info());
     let scan =
-        scan_trials(&ev, &params, &st.mask, &sampler, 50, 4, -1000.0, acc, &mut rng).unwrap();
+        scan_trials(&ev, &params, &st.mask, &sampler, 50, 4, -1000.0, acc, &mut rng, 1).unwrap();
     // ADT = -1000 is unreachable => no early accept, all 4 trials evaluated.
     assert!(!scan.early_accept);
     assert_eq!(scan.evaluated, 4);
@@ -53,7 +56,7 @@ fn bcd_invariants_on_live_model() {
         assert!(st.mask.is_present(i), "scan proposed an absent ReLU");
     }
     let scan_easy =
-        scan_trials(&ev, &params, &st.mask, &sampler, 50, 4, 1000.0, acc, &mut rng).unwrap();
+        scan_trials(&ev, &params, &st.mask, &sampler, 50, 4, 1000.0, acc, &mut rng, 1).unwrap();
     assert!(scan_easy.early_accept, "ADT=1000%% must accept the first trial");
     assert_eq!(scan_easy.evaluated, 1);
 

@@ -1,7 +1,9 @@
-//! Baseline-method integration over the real runtime: SNL, AutoReP, SENet
+//! Baseline-method integration over the PJRT runtime: SNL, AutoReP, SENet
 //! and DeepReDuce all reach exact budgets and leave consistent state.
 //! This is the expensive test binary (compiles train/snl/kd steps once);
-//! every method run is kept tiny.
+//! every method run is kept tiny. Requires `--features pjrt` + artifacts.
+
+#![cfg(feature = "pjrt")]
 
 use cdnl::config::{SnlConfig, TrainConfig};
 use cdnl::coordinator::train::train;

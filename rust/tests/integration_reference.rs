@@ -1,0 +1,282 @@
+//! Coordinator integration on the pure-Rust reference backend — no
+//! artifacts, no PJRT, always runs (tests + CI).
+//!
+//! Covers the backend-agnostic contract end-to-end: session semantics,
+//! evaluator partial-batch accounting, the deterministic parallel trial
+//! scan (bit-identical outcome for every worker count), and Algorithm 2
+//! invariants through `run_bcd`.
+
+use cdnl::config::{BcdConfig, Granularity};
+use cdnl::coordinator::bcd::run_bcd;
+use cdnl::coordinator::eval::Evaluator;
+use cdnl::coordinator::trials::{scan_trials, BlockSampler, ScanOutcome};
+use cdnl::data::{synth, Dataset};
+use cdnl::runtime::{open_backend, Backend, RefBackend, Session};
+use cdnl::tensor::TensorI32;
+use cdnl::util::prng::Rng;
+
+const MODEL: &str = "resnet_16x16_c10";
+
+fn backend() -> RefBackend {
+    RefBackend::standard()
+}
+
+fn small_synth10() -> Dataset {
+    let (train, _) = synth::generate(&synth::SynthSpec {
+        train_n: 96,
+        test_n: 16,
+        ..synth::SYNTH10
+    });
+    train
+}
+
+#[test]
+fn session_semantics() {
+    let be = backend();
+    let sess = Session::new(&be, MODEL).unwrap();
+    let info = sess.info();
+    assert!(info.param_size > 0 && info.mask_size > 0);
+    assert_eq!(info.num_classes, 10);
+    assert!(Session::new(&be, "no_such_model").is_err());
+
+    // init: deterministic in the seed, seed-sensitive.
+    let p1 = sess.init(7).unwrap();
+    let p2 = sess.init(7).unwrap();
+    let p3 = sess.init(8).unwrap();
+    assert_eq!(p1.data, p2.data);
+    assert_ne!(p1.data, p3.data);
+
+    // Host path and buffer path agree exactly.
+    let ds = small_synth10();
+    let (x, y) = ds.batch_at(0, sess.batch);
+    let mask = vec![1.0f32; sess.info().mask_size];
+    let host = sess.eval_batch(&p1, &mask, &x, &y).unwrap();
+    let pbuf = sess.upload_f32(&p1.data, &p1.shape).unwrap();
+    let mbuf = sess.upload_f32(&mask, &[mask.len()]).unwrap();
+    let (xbuf, ybuf) = sess.upload_batch(&x, &y).unwrap();
+    let dev = sess.eval_batch_b(&pbuf, &mbuf, &xbuf, &ybuf).unwrap();
+    assert_eq!(host.correct, dev.correct);
+    assert!((host.loss - dev.loss).abs() < 1e-6);
+
+    // eval_batch agrees with forward-side argmax.
+    let logits = sess.forward(&p1, &mask, &x).unwrap();
+    let preds = logits.argmax_rows().unwrap();
+    let want = preds
+        .iter()
+        .zip(&y.data)
+        .filter(|(p, &t)| **p == t as usize)
+        .count() as f32;
+    assert_eq!(host.correct, want);
+
+    // Stats were recorded per entry point.
+    let stats = be.stats();
+    assert!(stats.get(&format!("{MODEL}:eval_batch")).is_some());
+    assert!(be.stats_table().contains("eval_batch"));
+}
+
+#[test]
+fn evaluator_partial_batch_accounting() {
+    let be = backend();
+    let sess = Session::new(&be, MODEL).unwrap();
+    // 21 examples with batch 16: the second batch holds only 5 real
+    // examples; the wrap-padded tail must count for nothing.
+    let mut rng = Rng::new(3);
+    let n = 21usize;
+    let ie = 3 * 16 * 16;
+    let ds = Dataset {
+        name: "tiny".into(),
+        num_classes: 10,
+        channels: 3,
+        image_size: 16,
+        images: (0..n * ie).map(|_| rng.normal()).collect(),
+        labels: (0..n).map(|i| (i % 10) as i32).collect(),
+    };
+    let ev = Evaluator::new(&sess, &ds, usize::MAX).unwrap();
+    assert_eq!(ev.num_batches(), 2);
+    assert_eq!(
+        ev.num_examples(),
+        n,
+        "padded tail must be excluded from the denominator"
+    );
+    assert_ne!(ev.num_examples(), ev.num_batches() * sess.batch);
+
+    let st = sess.init_state(1).unwrap();
+    let params = ev.upload_params(&st.params).unwrap();
+    let acc = ev.accuracy(&params, st.mask.dense()).unwrap();
+    assert!((0.0..=100.0).contains(&acc));
+    // Accuracy is a multiple of 1/21, not of 1/32: exactly n examples scored.
+    let counts = acc / 100.0 * n as f64;
+    assert!(
+        (counts - counts.round()).abs() < 1e-9,
+        "accuracy {acc} is not a whole count over {n} examples"
+    );
+
+    // Bound soundness on the partial-batch evaluator.
+    let kept = ev
+        .accuracy_bounded(&params, st.mask.dense(), (acc - 1.0).max(0.0))
+        .unwrap();
+    assert_eq!(kept, Some(acc), "bound below truth must return the value");
+    let cut = ev.accuracy_bounded(&params, st.mask.dense(), 100.1).unwrap();
+    assert_eq!(cut, None, "unreachable bound must cut");
+
+    // Weighted mean loss is finite and positive.
+    let (loss, acc2) = ev.loss_accuracy(&params, st.mask.dense()).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((acc - acc2).abs() < 1e-9);
+}
+
+fn scan_with_workers(workers: usize, rt: usize, adt: f64) -> ScanOutcome {
+    let be = backend();
+    let sess = Session::new(&be, MODEL).unwrap();
+    let ds = small_synth10();
+    let st = sess.init_state(42).unwrap();
+    let ev = Evaluator::new(&sess, &ds, 2).unwrap();
+    let params = ev.upload_params(&st.params).unwrap();
+    let base = ev.accuracy(&params, st.mask.dense()).unwrap();
+    let sampler = BlockSampler::new(Granularity::Pixel, sess.info());
+    let mut rng = Rng::new(0xD00D);
+    scan_trials(&ev, &params, &st.mask, &sampler, 24, rt, adt, base, &mut rng, workers).unwrap()
+}
+
+#[test]
+fn scan_outcome_identical_across_worker_counts() {
+    // No early accept (unreachable ADT): every hypothesis gets scored.
+    let seq = scan_with_workers(1, 8, -1000.0);
+    assert!(!seq.early_accept);
+    assert!(seq.evaluated >= 1 && seq.evaluated <= 8);
+    for w in [2, 4, 8] {
+        let par = scan_with_workers(w, 8, -1000.0);
+        assert_eq!(seq, par, "workers={w} diverged from sequential scan");
+    }
+    // Early accept (generous ADT): parallel runs must stop at the same
+    // trial and return the same incumbent.
+    let seq = scan_with_workers(1, 8, 1000.0);
+    assert!(seq.early_accept, "ADT=1000%% must accept immediately");
+    assert_eq!(seq.evaluated, 1);
+    for w in [2, 4, 8] {
+        let par = scan_with_workers(w, 8, 1000.0);
+        assert_eq!(seq, par, "workers={w} diverged under early accept");
+    }
+    // A realistic tolerance exercises the bound + accept interplay.
+    let seq = scan_with_workers(1, 10, 0.5);
+    for w in [3, 7] {
+        let par = scan_with_workers(w, 10, 0.5);
+        assert_eq!(seq, par, "workers={w} diverged at ADT=0.5");
+    }
+}
+
+#[test]
+fn bcd_invariants_end_to_end() {
+    let be = backend();
+    let sess = Session::new(&be, MODEL).unwrap();
+    let ds = small_synth10();
+    let mut st = sess.init_state(42).unwrap();
+    let total = st.budget();
+
+    let cfg = BcdConfig {
+        drc: 32,
+        rt: 3,
+        adt: 0.5,
+        finetune_steps: 2,
+        finetune_lr: 1e-3,
+        proxy_batches: 2,
+        seed: 0xB0B,
+        workers: 2,
+        ..Default::default()
+    };
+    // A target that does NOT divide evenly by DRC: 3 full steps + remainder.
+    let target = total - 3 * 32 - 7;
+    let before = st.mask.clone();
+    let out = run_bcd(&sess, &mut st, &ds, target, &cfg, 1).unwrap();
+
+    assert_eq!(st.budget(), target, "BCD must land exactly on the target");
+    assert_eq!(out.final_budget, target);
+    assert_eq!(out.iterations.len(), 4, "ceil((3*32+7)/32) = 4 iterations");
+    assert_eq!(out.iterations.last().unwrap().budget_after, target);
+    // Sparse-by-design: the final mask is a strict subset of the start mask.
+    assert_eq!(st.mask.containment(&before), 1.0);
+    st.mask.check_invariants().unwrap();
+    let mut prev = total;
+    for rec in &out.iterations {
+        assert!(rec.budget_after < prev, "budget did not decrease at t={}", rec.t);
+        assert!(rec.trials_evaluated >= 1 && rec.trials_evaluated <= cfg.rt);
+        prev = rec.budget_after;
+    }
+    assert_eq!(out.snapshots.len(), 4);
+    for w in out.snapshots.windows(2) {
+        assert!(w[1].0 < w[0].0);
+        assert_eq!(w[1].1.containment(&w[0].1), 1.0);
+    }
+
+    // Error paths.
+    assert!(run_bcd(&sess, &mut st, &ds, target + 10, &cfg, 0).is_err());
+    let bad = BcdConfig { drc: 0, ..cfg.clone() };
+    assert!(run_bcd(&sess, &mut st, &ds, 10, &bad, 0).is_err());
+}
+
+#[test]
+fn bcd_replays_identically_across_worker_counts() {
+    let be = backend();
+    let sess = Session::new(&be, MODEL).unwrap();
+    let ds = small_synth10();
+    let total = sess.init_state(1).unwrap().budget();
+    let target = total - 80;
+
+    let run = |workers: usize| {
+        let mut st = sess.init_state(1).unwrap();
+        let cfg = BcdConfig {
+            drc: 24,
+            rt: 4,
+            adt: 0.3,
+            finetune_steps: 2,
+            finetune_lr: 1e-3,
+            proxy_batches: 2,
+            seed: 7,
+            workers,
+            ..Default::default()
+        };
+        let out = run_bcd(&sess, &mut st, &ds, target, &cfg, 0).unwrap();
+        (st, out)
+    };
+    let (st_a, out_a) = run(1);
+    let (st_b, out_b) = run(4);
+    assert_eq!(st_a.mask.dense(), st_b.mask.dense(), "masks diverged across worker counts");
+    assert_eq!(st_a.params.data, st_b.params.data, "params diverged across worker counts");
+    assert_eq!(out_a.iterations.len(), out_b.iterations.len());
+    for (ra, rb) in out_a.iterations.iter().zip(&out_b.iterations) {
+        assert_eq!(ra.budget_after, rb.budget_after);
+        assert_eq!(ra.chosen_dacc, rb.chosen_dacc);
+        assert_eq!(ra.trials_evaluated, rb.trials_evaluated);
+        assert_eq!(ra.trials_bounded, rb.trials_bounded);
+        assert_eq!(ra.early_accept, rb.early_accept);
+    }
+}
+
+#[test]
+fn open_backend_serves_all_model_keys() {
+    let be = open_backend(std::path::Path::new("artifacts_that_do_not_exist"), "auto").unwrap();
+    assert_eq!(be.name(), "reference");
+    for key in ["resnet_16x16_c10", "wrn_32x32_c20", "resnet_16x16_c20_poly"] {
+        let sess = Session::new(be.as_ref(), key).unwrap();
+        let p = sess.init(1).unwrap();
+        assert_eq!(p.len(), sess.info().param_size, "{key}");
+    }
+    // A poly model must actually run a train step (exercises the quadratic
+    // branch gradient).
+    let sess = Session::new(be.as_ref(), "resnet_16x16_c20_poly").unwrap();
+    let mut st = sess.init_state(2).unwrap();
+    let (train, _) = synth::generate(&synth::SynthSpec {
+        train_n: 32,
+        test_n: 8,
+        ..synth::SYNTH100
+    });
+    let (x, y) = train.batch_at(0, sess.batch);
+    let out = sess.train_step(&mut st, &x, &y, 1e-3).unwrap();
+    assert!(out.loss.is_finite());
+
+    // kd_step runs with teacher logits.
+    let y2 = TensorI32::new(vec![sess.batch], vec![0; sess.batch]);
+    let t_logits = sess.forward(&st.params, st.mask.dense(), &x).unwrap();
+    let kd = sess.kd_step(&mut st, &x, &y2, &t_logits, 1e-3, 2.0).unwrap();
+    assert!(kd.is_finite());
+}

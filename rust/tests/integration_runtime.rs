@@ -2,12 +2,17 @@
 //! correct semantics through the PJRT CPU client.
 //!
 //! One #[test] running staged checks sequentially — a PJRT client per test
-//! thread is wasteful, and Engine is deliberately !Sync. Requires
-//! `make artifacts`; skips (with a message) when artifacts/ is absent.
+//! thread is wasteful. Requires `--features pjrt` (compiled out otherwise)
+//! and `make artifacts`; skips (with a message) when artifacts/ is absent.
+//! The backend-agnostic twin of this test lives in
+//! `integration_reference.rs` and always runs.
+
+#![cfg(feature = "pjrt")]
 
 use cdnl::model::Mask;
 use cdnl::runtime::engine::Engine;
 use cdnl::runtime::session::Session;
+use cdnl::runtime::{Backend, HostArg};
 use cdnl::tensor::{Tensor, TensorI32};
 use std::path::Path;
 
@@ -88,7 +93,7 @@ fn runtime_end_to_end() {
 
     // --- input validation errors are readable, not aborts -------------------
     let bad = Tensor::zeros(vec![3]);
-    let err = match engine.call(MODEL, "forward", &[bad.to_literal().unwrap()]) {
+    let err = match engine.call(MODEL, "forward", &[HostArg::F32(&bad)]) {
         Ok(_) => panic!("arity error not detected"),
         Err(e) => e.to_string(),
     };
