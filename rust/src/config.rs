@@ -36,6 +36,15 @@ impl DrcSchedule {
         }
     }
 
+    /// Canonical name, the inverse of [`Self::parse`] (config dumps).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DrcSchedule::Constant => "constant",
+            DrcSchedule::Linear => "linear",
+            DrcSchedule::Cosine => "cosine",
+        }
+    }
+
     /// DRC for the current state: `done` of `total` ReLUs already removed.
     pub fn drc_at(&self, drc0: usize, drc_final: usize, done: usize, total: usize) -> usize {
         let t = if total == 0 { 0.0 } else { done as f64 / total as f64 };
@@ -66,6 +75,14 @@ impl Granularity {
             "pixel" => Some(Granularity::Pixel),
             "channel" => Some(Granularity::Channel),
             _ => None,
+        }
+    }
+
+    /// Canonical name, the inverse of [`Self::parse`] (config dumps).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Granularity::Pixel => "pixel",
+            Granularity::Channel => "channel",
         }
     }
 }
@@ -302,6 +319,70 @@ impl Experiment {
         Ok(())
     }
 
+    /// Canonical `key -> value` dump of every setting [`Self::apply`]
+    /// accepts. `apply`ing the dump onto a default [`Experiment`]
+    /// reconstructs this one exactly — the run-store records it in
+    /// `run.json` so `cdnl runs resume` rebuilds the experiment without any
+    /// out-of-band state, and fingerprints it for cache identity.
+    pub fn dump(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        let mut put = |k: &str, v: String| {
+            m.insert(k.to_string(), v);
+        };
+        put("dataset", self.dataset.clone());
+        put("backbone", self.backbone.clone());
+        put("poly", self.poly.to_string());
+        put("out_dir", self.out_dir.clone());
+        put("artifacts_dir", self.artifacts_dir.clone());
+        put("train.steps", self.train.steps.to_string());
+        put("train.lr", self.train.lr.to_string());
+        put("train.warmup_steps", self.train.warmup_steps.to_string());
+        put("train.seed", self.train.seed.to_string());
+        put("bcd.drc", self.bcd.drc.to_string());
+        put("bcd.drc_final", self.bcd.drc_final.to_string());
+        put("bcd.drc_schedule", self.bcd.drc_schedule.name().to_string());
+        put("bcd.granularity", self.bcd.granularity.name().to_string());
+        put("bcd.rt", self.bcd.rt.to_string());
+        put("bcd.adt", self.bcd.adt.to_string());
+        put("bcd.finetune_steps", self.bcd.finetune_steps.to_string());
+        put("bcd.finetune_lr", self.bcd.finetune_lr.to_string());
+        put("bcd.proxy_batches", self.bcd.proxy_batches.to_string());
+        put("bcd.seed", self.bcd.seed.to_string());
+        put("bcd.workers", self.bcd.workers.to_string());
+        put("snl.lambda0", self.snl.lambda0.to_string());
+        put("snl.kappa", self.snl.kappa.to_string());
+        put("snl.stall_patience", self.snl.stall_patience.to_string());
+        put("snl.alpha_lr", self.snl.alpha_lr.to_string());
+        put("snl.threshold", self.snl.threshold.to_string());
+        put("snl.max_steps", self.snl.max_steps.to_string());
+        put("snl.steps_per_check", self.snl.steps_per_check.to_string());
+        put("snl.lr", self.snl.lr.to_string());
+        put("snl.finetune_steps", self.snl.finetune_steps.to_string());
+        put("snl.finetune_lr", self.snl.finetune_lr.to_string());
+        put("snl.seed", self.snl.seed.to_string());
+        m
+    }
+
+    /// FNV-1a 64 fingerprint of the canonical dump, as 16 hex chars. Two
+    /// experiments with equal fingerprints produce identical results:
+    /// keys that cannot change numerics (paths, `bcd.workers` — the scan is
+    /// worker-count invariant) are excluded, so moving an output directory
+    /// or rescaling the thread pool does not orphan a resumable run.
+    pub fn fingerprint(&self) -> String {
+        const NON_SEMANTIC: [&str; 3] = ["out_dir", "artifacts_dir", "bcd.workers"];
+        let mut h: u64 = 0xcbf29ce484222325;
+        for (k, v) in self.dump() {
+            if NON_SEMANTIC.contains(&k.as_str()) {
+                continue;
+            }
+            for b in k.bytes().chain([b'='].into_iter()).chain(v.bytes()).chain([b'\n']) {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        format!("{h:016x}")
+    }
+
     /// Overlay CLI flags of the form `--set key=value` (repeatable via
     /// comma) plus first-class flags (--dataset, --backbone, ...).
     pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
@@ -388,6 +469,29 @@ mod tests {
         assert_eq!(e.bcd.effective_workers(), 3);
         e.bcd.workers = 0;
         assert!(e.bcd.effective_workers() >= 1, "auto must resolve to >= 1");
+    }
+
+    #[test]
+    fn dump_reconstructs_and_fingerprints() {
+        let mut e = Experiment::default();
+        e.apply("bcd.drc", "77").unwrap();
+        e.apply("snl.kappa", "1.75").unwrap();
+        e.apply("dataset", "synth100").unwrap();
+        e.apply("bcd.drc_schedule", "cosine").unwrap();
+        // Re-applying the dump onto a default reconstructs the experiment.
+        let mut back = Experiment::default();
+        for (k, v) in e.dump() {
+            back.apply(&k, &v).unwrap_or_else(|err| panic!("dump key {k}: {err}"));
+        }
+        assert_eq!(back.dump(), e.dump());
+        assert_eq!(back.fingerprint(), e.fingerprint());
+        // Semantic changes move the fingerprint; non-semantic ones don't.
+        let fp = e.fingerprint();
+        e.bcd.workers = 9;
+        e.out_dir = "elsewhere".into();
+        assert_eq!(e.fingerprint(), fp, "workers/out_dir must not shift identity");
+        e.bcd.rt = 99;
+        assert_ne!(e.fingerprint(), fp, "rt change must shift identity");
     }
 
     #[test]

@@ -11,6 +11,18 @@
 //! The per-iteration hypothesis scan fans out across `cfg.workers` threads
 //! (see [`crate::coordinator::trials`]); results are bit-identical for any
 //! worker count, so runs replay exactly regardless of the machine.
+//!
+//! # Checkpointing and resume
+//!
+//! A sweep is the unit of durability. [`run_bcd_resumable`] calls a
+//! [`SweepHook`] after every completed sweep with a [`SweepEvent`]: the
+//! iteration record, the removed indices, the post-sweep [`ModelState`],
+//! and a [`BcdCursor`] — the loop-carried coordinates (sweep count,
+//! original `B_ref`, both RNG states) that, together with the state, fully
+//! determine the remainder of the run. The run-store
+//! ([`crate::runstore`]) persists these; feeding the cursor back via
+//! `resume` continues an interrupted run bit-identically to one that never
+//! stopped (DESIGN.md §6).
 
 use crate::config::BcdConfig;
 use crate::coordinator::eval::Evaluator;
@@ -33,6 +45,10 @@ pub struct IterRecord {
     pub trials_bounded: usize,
     pub early_accept: bool,
     pub finetune: FinetuneStats,
+    /// Wall-clock of this sweep (scan + finetune) in milliseconds. Not part
+    /// of the replay contract — timing differs between a resumed and an
+    /// uninterrupted run even when every numeric result is identical.
+    pub wall_ms: f64,
 }
 
 /// Outcome of a full BCD run.
@@ -53,6 +69,39 @@ impl BcdOutcome {
     }
 }
 
+/// The loop-carried coordinates of a BCD run after some number of completed
+/// sweeps. Everything beyond the [`ModelState`] that [`run_bcd_resumable`]
+/// needs to continue exactly where a previous process stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BcdCursor {
+    /// Completed sweeps so far (the next sweep is `sweeps_done + 1`).
+    pub sweeps_done: usize,
+    /// The budget the run *started* from — the DRC schedule is positioned
+    /// by progress relative to this, so it must survive interruption.
+    pub b_ref: usize,
+    /// Trial-sampling RNG state after the last completed sweep.
+    pub rng: [u64; 4],
+    /// Finetune-batch RNG state after the last completed sweep.
+    pub ft_rng: [u64; 4],
+}
+
+/// Everything a checkpoint hook sees after one completed sweep.
+pub struct SweepEvent<'a> {
+    /// Cursor positioned *after* this sweep.
+    pub cursor: BcdCursor,
+    pub record: &'a IterRecord,
+    /// Flat ReLU indices this sweep removed (the BCD trace entry).
+    pub removed: &'a [usize],
+    /// Model state after removal + finetune.
+    pub state: &'a ModelState,
+    /// True when this sweep landed on the target budget.
+    pub done: bool,
+}
+
+/// Called after every completed sweep; returning an error aborts the run
+/// (the checkpoint written for this sweep remains valid for resume).
+pub type SweepHook<'h> = dyn FnMut(&SweepEvent) -> Result<()> + 'h;
+
 /// Run Algorithm 2 on `st` until `||m||_0 == b_target`, mutating it.
 ///
 /// `train_ds` provides both the trial proxy batches and finetune batches.
@@ -66,9 +115,55 @@ pub fn run_bcd(
     cfg: &BcdConfig,
     snapshot_every: usize,
 ) -> Result<BcdOutcome> {
-    let b_ref = st.budget();
-    if b_target >= b_ref {
-        bail!("BCD: target budget {b_target} >= current budget {b_ref}");
+    run_bcd_resumable(sess, st, train_ds, b_target, cfg, snapshot_every, None, &mut |_| Ok(()))
+}
+
+/// [`run_bcd`] with checkpoint hooks: `on_sweep` fires after every
+/// completed sweep, and `resume` continues a run from a persisted
+/// [`BcdCursor`] (with `st` being the matching checkpointed state).
+///
+/// The resumed trajectory is **bit-identical** to the uninterrupted one:
+/// the cursor carries both RNG streams mid-sequence and the original
+/// `b_ref` (which positions the DRC schedule), and everything else the loop
+/// reads is a pure function of `(st, cfg, train_ds)`. Verified end-to-end
+/// in `rust/tests/integration_runstore.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_bcd_resumable(
+    sess: &Session,
+    st: &mut ModelState,
+    train_ds: &Dataset,
+    b_target: usize,
+    cfg: &BcdConfig,
+    snapshot_every: usize,
+    resume: Option<&BcdCursor>,
+    on_sweep: &mut SweepHook,
+) -> Result<BcdOutcome> {
+    let (b_ref, mut t, mut rng, mut ft_rng) = match resume {
+        Some(c) => (
+            c.b_ref,
+            c.sweeps_done,
+            Rng::from_state(c.rng),
+            Rng::from_state(c.ft_rng),
+        ),
+        None => {
+            // Fresh run: fork the finetune stream off the trial stream
+            // exactly once, up front (order matters for replay).
+            let mut rng = Rng::new(cfg.seed);
+            let ft_rng = rng.fork(0xF17E);
+            (st.budget(), 0, rng, ft_rng)
+        }
+    };
+    if resume.is_some() && st.budget() == b_target {
+        // The interruption landed exactly on completion; nothing to do.
+        return Ok(BcdOutcome {
+            iterations: Vec::new(),
+            snapshots: Vec::new(),
+            final_budget: b_target,
+            wall_secs: 0.0,
+        });
+    }
+    if b_target >= st.budget() {
+        bail!("BCD: target budget {b_target} >= current budget {}", st.budget());
     }
     if cfg.drc == 0 || cfg.rt == 0 {
         bail!("BCD: drc and rt must be positive");
@@ -76,8 +171,8 @@ pub fn run_bcd(
     let t_est = (b_ref - b_target).div_ceil(cfg.drc);
     let workers = cfg.effective_workers();
     crate::info!(
-        "bcd: {} -> {} ReLUs, T~{} iterations (DRC={} {:?}, RT={}, ADT={}%, {:?}, workers={})",
-        b_ref,
+        "bcd: {} -> {} ReLUs, T~{} iterations (DRC={} {:?}, RT={}, ADT={}%, {:?}, workers={}{})",
+        st.budget(),
         b_target,
         t_est,
         cfg.drc,
@@ -85,25 +180,24 @@ pub fn run_bcd(
         cfg.rt,
         cfg.adt,
         cfg.granularity,
-        workers
+        workers,
+        if t > 0 { format!(", resumed at sweep {t}") } else { String::new() }
     );
 
     let wall0 = std::time::Instant::now();
-    let mut rng = Rng::new(cfg.seed);
-    let mut ft_rng = rng.fork(0xF17E);
     let ev = Evaluator::new(sess, train_ds, cfg.proxy_batches)?;
     let sampler = BlockSampler::new(cfg.granularity, sess.info());
     let to_remove_total = b_ref - b_target;
     let mut out = BcdOutcome {
-        iterations: Vec::with_capacity(t_est),
+        iterations: Vec::with_capacity(t_est.saturating_sub(t)),
         snapshots: Vec::new(),
         final_budget: b_ref,
         wall_secs: 0.0,
     };
 
-    let mut t = 0usize;
     while st.budget() > b_target {
         t += 1;
+        let sweep0 = std::time::Instant::now();
         // Schedule-driven DRC; the last iteration may need fewer removals
         // to land exactly on the target.
         let drc = cfg
@@ -146,10 +240,24 @@ pub fn run_bcd(
             trials_bounded: bounded,
             early_accept,
             finetune: ft,
+            wall_ms: 1e3 * sweep0.elapsed().as_secs_f64(),
         });
         if snapshot_every > 0 && (t % snapshot_every == 0 || st.budget() == b_target) {
             out.snapshots.push((st.budget(), st.mask.clone()));
         }
+        let done = st.budget() == b_target;
+        on_sweep(&SweepEvent {
+            cursor: BcdCursor {
+                sweeps_done: t,
+                b_ref,
+                rng: rng.state(),
+                ft_rng: ft_rng.state(),
+            },
+            record: out.iterations.last().expect("just pushed"),
+            removed: &chosen.removed,
+            state: st,
+            done,
+        })?;
     }
 
     debug_assert_eq!(st.budget(), b_target);

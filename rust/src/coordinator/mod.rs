@@ -1,7 +1,8 @@
 //! The L3 coordinator — the paper's system contribution.
 //!
 //! - [`bcd`] — Block Coordinate Descent over binary ReLU masks
-//!   (Algorithm 2), the paper's optimizer.
+//!   (Algorithm 2), the paper's optimizer, with per-sweep checkpoint hooks
+//!   feeding the run-store ([`crate::runstore`]).
 //! - [`trials`] — the random-trial scheduler inside one BCD iteration
 //!   (sampling, dedup, early-accept, argmin fallback), fanned out across a
 //!   worker pool with a deterministic replay merge.
@@ -17,5 +18,5 @@ pub mod finetune;
 pub mod train;
 pub mod trials;
 
-pub use bcd::{run_bcd, BcdOutcome};
+pub use bcd::{run_bcd, run_bcd_resumable, BcdOutcome};
 pub use eval::Evaluator;

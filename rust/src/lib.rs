@@ -5,7 +5,9 @@
 //! binary ReLU masks for efficient Private Inference, plus every baseline
 //! the paper compares against (SNL, AutoReP, SENet, DeepReDuce).
 //!
-//! Three-layer architecture (DESIGN.md):
+//! Three-layer architecture — described in depth in `DESIGN.md` at the
+//! repository root (section references like "DESIGN.md §0" throughout this
+//! crate point there):
 //! - **L3 (this crate)** — the rust coordinator: BCD optimizer, baselines,
 //!   PI cost model, experiment launcher, metrics. Owns the event loop. The
 //!   BCD hypothesis scan fans out across a thread pool with a deterministic
@@ -21,6 +23,12 @@
 //! - **L1** — Pallas masked-activation kernels (`python/compile/kernels/`),
 //!   correctness-checked against a pure-jnp oracle (PJRT path only).
 //!
+//! Long-lived runs are durable: the [`runstore`] gives every experiment a
+//! directory with a versioned serde-backed `run.json` manifest (config
+//! fingerprint, stage provenance, per-sweep BCD trace, RNG resume cursor),
+//! written atomically after every sweep, so an interrupted `run_bcd`
+//! resumes bit-identically via `cdnl runs resume <id>`.
+//!
 //! Backends are `Send + Sync`; [`runtime::open_backend`] picks one by name
 //! or automatically (`auto`: PJRT when compiled in and artifacts exist,
 //! else reference).
@@ -34,6 +42,7 @@ pub mod model;
 pub mod picost;
 pub mod pipeline;
 pub mod protosim;
+pub mod runstore;
 pub mod runtime;
 pub mod tensor;
 pub mod util;

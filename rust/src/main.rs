@@ -4,21 +4,29 @@
 //!   info         manifest summary: models, ReLU counts (Table 1), artifacts
 //!   train        train a full-ReLU baseline and checkpoint it
 //!   snl          SNL linearization down to --budget
-//!   bcd          Block Coordinate Descent down to --budget (the paper)
+//!   bcd          Block Coordinate Descent down to --budget (the paper).
+//!                Recorded in the run-store by default (resumable after a
+//!                crash); --no-record opts out.
 //!   autorep      AutoReP polynomial replacement down to --budget
 //!   senet        SENet sensitivity allocation + KD down to --budget
 //!   deepreduce   DeepReDuce layer dropping down to --budget
 //!   eval         evaluate a checkpoint on its dataset's test split
 //!   picost       PI online-cost estimate of a checkpoint (LAN + WAN)
+//!   runs         the experiment run-store:
+//!                  runs list            all runs under <out>/runs
+//!                  runs show <id>       manifest, stages, sweep trace
+//!                  runs resume <id>     continue an interrupted BCD run
+//!                  runs gc [--keep N] [--all]   delete old run directories
 //!
 //! Shared flags: --dataset synth10|synth100|synthtiny  --backbone resnet|wrn
 //! --poly  --preset quick|full  --set k=v[,k=v...]  --artifacts DIR
 //! --backend auto|pjrt|reference  --out DIR  --ckpt FILE  --ref-budget N
-//! --budget N  --verbose
+//! --budget N  --verbose  --no-record
 //!
 //! Examples:
 //!   cdnl train --dataset synth10
 //!   cdnl bcd --dataset synth10 --budget 1000 --ref-budget 2000
+//!   cdnl runs resume bcd-resnet_16x16_c10-5fa3c1d2-1
 //!   cdnl picost --ckpt results/resnet_16x16_c10__synth10_bcd_b1000.cdnl
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -31,12 +39,13 @@ use cdnl::methods::senet::{run_senet, SenetConfig};
 use cdnl::methods::snl::run_snl;
 use cdnl::model::ModelState;
 use cdnl::pipeline::Pipeline;
+use cdnl::runstore::{RunDir, RunResult, RunStore, COMPLETE};
 use cdnl::runtime::{open_backend, Backend};
 use cdnl::util::cli::Args;
 use cdnl::util::{fmt_relu_count, logging};
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: cdnl <info|train|snl|bcd|autorep|senet|deepreduce|eval|picost> [flags]
+const USAGE: &str = "usage: cdnl <info|train|snl|bcd|autorep|senet|deepreduce|eval|picost|runs> [flags]
   see rust/src/main.rs header or README.md for flag documentation";
 
 fn main() {
@@ -70,8 +79,8 @@ fn build_experiment(args: &Args) -> Result<Experiment> {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse_env(&["poly", "verbose", "stats", "quiet", "simulate"])
-        .map_err(|e| anyhow!(e))?;
+    let bools = ["poly", "verbose", "stats", "quiet", "simulate", "no-record", "all"];
+    let args = Args::parse_env(&bools).map_err(|e| anyhow!(e))?;
     if args.has("verbose") {
         logging::set_level(logging::Level::Debug);
     }
@@ -80,6 +89,10 @@ fn run() -> Result<()> {
     }
     let sub = args.subcommand.clone().ok_or_else(|| anyhow!(USAGE))?;
     let exp = build_experiment(&args)?;
+    if sub == "runs" {
+        // The run-store carries its own backend + config; don't open one here.
+        return cmd_runs(&args, exp);
+    }
     let backend = open_backend(
         Path::new(&exp.artifacts_dir),
         args.get_or("backend", "auto"),
@@ -181,9 +194,19 @@ fn cmd_method(method: &str, engine: &dyn Backend, exp: Experiment, args: &Args) 
     let b0 = st.budget();
 
     let t0 = std::time::Instant::now();
+    let mut recorded: Option<RunDir> = None;
+    let mut sweep_secs: Option<f64> = None;
     match method {
         "bcd" => {
-            let out = run_bcd(&pl.sess, &mut st, &pl.train_ds, budget, &pl.exp.bcd, 0)?;
+            let out = if args.has("no-record") {
+                run_bcd(&pl.sess, &mut st, &pl.train_ds, budget, &pl.exp.bcd, 0)?
+            } else {
+                let store = RunStore::for_experiment(&pl.exp);
+                let (out, run) = pl.bcd_record(&store, &mut st, budget)?;
+                recorded = Some(run);
+                sweep_secs = Some(out.iterations.iter().map(|r| r.wall_ms).sum::<f64>() / 1e3);
+                out
+            };
             println!(
                 "bcd: {} iterations, {} trials total ({} bounded early)",
                 out.iterations.len(),
@@ -230,22 +253,49 @@ fn cmd_method(method: &str, engine: &dyn Backend, exp: Experiment, args: &Args) 
         fmt_relu_count(b0),
         fmt_relu_count(st.budget()),
     );
+    let result = RunResult {
+        final_budget: st.budget(),
+        acc_before: before_acc,
+        acc_after: after_acc,
+        // BCD runs record sweep-loop time (comparable across interrupted
+        // and uninterrupted runs); other methods record command time.
+        wall_secs: sweep_secs.unwrap_or(secs),
+    };
+    if let Some(mut run) = recorded {
+        run.manifest.result = Some(result);
+        run.save()?;
+        println!("run recorded: {} ({})", run.manifest.run_id, run.dir.display());
+    } else if method != "bcd" && !args.has("no-record") {
+        // Non-BCD methods are minutes, not hours: a write-once manifest
+        // (identity, config, provenance, result) without sweep-level resume.
+        let store = RunStore::for_experiment(&pl.exp);
+        let mut m = cdnl::runstore::RunManifest::new(method, &pl.exp, engine.name(), b0, budget);
+        m.stages = pl.take_stages();
+        m.status = COMPLETE.to_string();
+        m.result = Some(result);
+        let run = store.create(m)?;
+        println!("run recorded: {} ({})", run.manifest.run_id, run.dir.display());
+    }
 
     let out_path = args
         .get("save")
         .map(PathBuf::from)
-        .unwrap_or_else(|| {
-            PathBuf::from(&pl.exp.out_dir).join(format!(
-                "{}__{}_{}_b{}.cdnl",
-                pl.sess.key, pl.exp.dataset, method, budget
-            ))
-        });
+        .unwrap_or_else(|| default_ckpt_path(&pl.exp, &pl.sess.key, method, budget));
     st.save(&out_path)?;
     println!("saved {}", out_path.display());
     if args.has("stats") {
         println!("\n{}", engine.stats_table());
     }
     Ok(())
+}
+
+/// `<out>/<model>__<dataset>_<method>_b<budget>.cdnl` — shared by fresh
+/// runs and `runs resume` so a resumed run lands in the same place.
+fn default_ckpt_path(exp: &Experiment, model_key: &str, method: &str, budget: usize) -> PathBuf {
+    PathBuf::from(&exp.out_dir).join(format!(
+        "{}__{}_{}_b{}.cdnl",
+        model_key, exp.dataset, method, budget
+    ))
 }
 
 /// `cdnl eval`: test accuracy + per-layer ReLU distribution of a checkpoint.
@@ -336,6 +386,222 @@ fn cmd_picost(engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> 
             &["protocol", "msgs", "rounds", "gc[MB]", "shares[MB]", "sim[ms]", "analytic[ms]"],
             &rows,
         );
+    }
+    Ok(())
+}
+
+// ---- the run-store surface -------------------------------------------------
+
+/// `cdnl runs <list|show|resume|gc>`.
+fn cmd_runs(args: &Args, exp: Experiment) -> Result<()> {
+    let store = RunStore::for_experiment(&exp);
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
+    match action {
+        "list" => runs_list(&store),
+        "show" => runs_show(&store, runs_id_arg(args)?),
+        "resume" => runs_resume(&store, runs_id_arg(args)?, args),
+        "gc" => runs_gc(&store, args),
+        other => bail!("unknown runs action {other:?}\nusage: cdnl runs <list|show|resume|gc>"),
+    }
+}
+
+fn runs_id_arg(args: &Args) -> Result<&str> {
+    args.positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("usage: cdnl runs <show|resume> <run-id>"))
+}
+
+fn fmt_age(now: usize, then: usize) -> String {
+    let secs = now.saturating_sub(then);
+    match secs {
+        0..=119 => format!("{secs}s"),
+        120..=7199 => format!("{}m", secs / 60),
+        7200..=172_799 => format!("{}h", secs / 3600),
+        _ => format!("{}d", secs / 86_400),
+    }
+}
+
+fn runs_list(store: &RunStore) -> Result<()> {
+    let runs = store.list()?;
+    if runs.is_empty() {
+        println!("no runs under {:?}", store.root());
+        return Ok(());
+    }
+    let now = cdnl::runstore::manifest::now_unix();
+    let rows: Vec<Vec<String>> = runs
+        .iter()
+        .map(|m| {
+            let sweeps = m.bcd.as_ref().map(|p| p.sweeps_done).unwrap_or(0);
+            let progress = match &m.bcd {
+                Some(p) if !p.iterations.is_empty() => format!(
+                    "{} -> {}",
+                    fmt_relu_count(m.b_start),
+                    fmt_relu_count(p.iterations.last().expect("non-empty").budget_after)
+                ),
+                _ => fmt_relu_count(m.b_start),
+            };
+            vec![
+                m.run_id.clone(),
+                m.method.clone(),
+                m.dataset.clone(),
+                m.backend.clone(),
+                m.status.clone(),
+                sweeps.to_string(),
+                progress,
+                fmt_relu_count(m.b_target),
+                fmt_age(now, m.updated_unix),
+            ]
+        })
+        .collect();
+    cdnl::metrics::print_table(
+        &format!("Runs in {:?} (newest first)", store.root()),
+        &["id", "method", "dataset", "backend", "status", "sweeps", "budget", "target", "age"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn runs_show(store: &RunStore, id: &str) -> Result<()> {
+    let run = store.get(id)?;
+    let m = &run.manifest;
+    println!("run       {}", m.run_id);
+    println!("method    {} on {} ({} backend)", m.method, m.model_key, m.backend);
+    println!("dataset   {}", m.dataset);
+    println!("status    {}", m.status);
+    println!("config    fingerprint {}", m.config_fingerprint);
+    println!(
+        "budget    {} -> {} target",
+        fmt_relu_count(m.b_start),
+        fmt_relu_count(m.b_target)
+    );
+    if let Some(r) = &m.result {
+        println!(
+            "result    {} ReLUs, test_acc {:.2}% -> {:.2}%  ({:.1}s)",
+            fmt_relu_count(r.final_budget),
+            r.acc_before,
+            r.acc_after,
+            r.wall_secs
+        );
+    }
+    if !m.stages.is_empty() {
+        let rows: Vec<Vec<String>> = m
+            .stages
+            .iter()
+            .map(|s| {
+                vec![
+                    s.stage.clone(),
+                    fmt_relu_count(s.budget),
+                    if s.cached { "cache" } else { "built" }.to_string(),
+                    format!("{:.1}s", s.wall_secs),
+                    s.path.clone(),
+                ]
+            })
+            .collect();
+        cdnl::metrics::print_table(
+            "Stage provenance",
+            &["stage", "budget", "source", "wall", "path"],
+            &rows,
+        );
+    }
+    if let Some(p) = &m.bcd {
+        println!("\nbcd progress: {} sweeps done", p.sweeps_done);
+        let tail = p.iterations.iter().rev().take(10).rev();
+        let rows: Vec<Vec<String>> = tail
+            .map(|it| {
+                vec![
+                    it.t.to_string(),
+                    it.budget_after.to_string(),
+                    format!("{:.2}", it.base_acc),
+                    format!("{:+.2}", it.chosen_dacc),
+                    format!("{}/{}", it.trials_evaluated, it.trials_bounded),
+                    if it.early_accept { "yes" } else { "" }.to_string(),
+                    it.removed.len().to_string(),
+                    format!("{:.0}ms", it.wall_ms),
+                ]
+            })
+            .collect();
+        cdnl::metrics::print_table(
+            "Sweep trace (last 10)",
+            &["t", "budget", "base%", "dAcc", "trials/bnd", "early", "removed", "wall"],
+            &rows,
+        );
+    }
+    Ok(())
+}
+
+fn runs_resume(store: &RunStore, id: &str, args: &Args) -> Result<()> {
+    let run = store.get(id)?;
+    // Cheap validation first — before any backend open or dataset eval.
+    if run.manifest.method != "bcd" {
+        bail!(
+            "run {} is a {:?} run; only bcd runs checkpoint per sweep (re-run it instead)",
+            run.manifest.run_id,
+            run.manifest.method
+        );
+    }
+    if run.manifest.status == COMPLETE {
+        bail!("run {} is already complete", run.manifest.run_id);
+    }
+    let mut rexp = run.manifest.experiment()?;
+    // Paths may legitimately differ from when the run was recorded (moved
+    // output tree, different artifact mount) — CLI overrides win, matching
+    // the fingerprint's path-independence.
+    if let Some(a) = args.get("artifacts") {
+        rexp.artifacts_dir = a.to_string();
+    }
+    if let Some(o) = args.get("out") {
+        rexp.out_dir = o.to_string();
+    }
+    // The manifest knows which backend produced the run; --backend overrides
+    // (at your own risk — numerics differ across backends).
+    let backend_name = args
+        .get("backend")
+        .unwrap_or(run.manifest.backend.as_str())
+        .to_string();
+    let backend = open_backend(Path::new(&rexp.artifacts_dir), &backend_name)?;
+    let pl = Pipeline::new(backend.as_ref(), rexp)?;
+
+    let t0 = std::time::Instant::now();
+    let (st, out, mut run) = pl.bcd_resume(run)?;
+    let secs = t0.elapsed().as_secs_f64();
+    // Accuracy bracket: the state the run started from vs the final state.
+    let ref_st = ModelState::load(&run.ref_state_path(), pl.sess.info())?;
+    let acc_before = test_accuracy(&pl.sess, &ref_st, &pl.test_ds)?;
+    let after_acc = pl.test_acc(&st)?;
+    println!(
+        "bcd (resumed) {}: {} iterations total, {} -> {} ReLUs  test_acc {acc_before:.2}% -> {after_acc:.2}%  ({secs:.1}s this session)",
+        run.manifest.run_id,
+        out.iterations.len(),
+        fmt_relu_count(run.manifest.b_start),
+        fmt_relu_count(st.budget()),
+    );
+    run.manifest.result = Some(RunResult {
+        final_budget: st.budget(),
+        acc_before,
+        acc_after: after_acc,
+        // Sweep-loop time across all sessions — same basis as a fresh
+        // recorded bcd run (see cmd_method).
+        wall_secs: out.iterations.iter().map(|r| r.wall_ms).sum::<f64>() / 1e3,
+    });
+    run.save()?;
+
+    let out_path = default_ckpt_path(&pl.exp, &pl.sess.key, "bcd", run.manifest.b_target);
+    st.save(&out_path)?;
+    println!("saved {}", out_path.display());
+    Ok(())
+}
+
+fn runs_gc(store: &RunStore, args: &Args) -> Result<()> {
+    let keep = args.get_usize("keep", 3);
+    let removed = store.gc(keep, args.has("all"))?;
+    if removed.is_empty() {
+        println!("nothing to remove (kept the {keep} most recent terminal runs)");
+    } else {
+        for id in &removed {
+            println!("removed {id}");
+        }
+        println!("{} run(s) removed", removed.len());
     }
     Ok(())
 }

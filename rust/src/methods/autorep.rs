@@ -9,6 +9,12 @@
 //! when its score crosses `threshold ± hysteresis/2`, which damps the
 //! oscillation the paper's Discussion section attributes to plain SGD
 //! indicators.
+//!
+//! Reference: Peng et al., *AutoReP: Automatic ReLU Replacement for Fast
+//! Private Network Inference*, ICCV 2023 (not in the PAPERS.md retrieved
+//! set; the closest retrieved relative on learned non-linearity reduction
+//! is Kundu et al., *Making Models Shallow Again* —
+//! <https://arxiv.org/pdf/2304.13274>).
 
 use crate::config::SnlConfig;
 use crate::coordinator::finetune::finetune;

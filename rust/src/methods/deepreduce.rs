@@ -6,6 +6,10 @@
 //! instead of hand analysis — the same coarse-granularity policy, made
 //! reproducible. The final layer is partially dropped to land exactly on
 //! the budget.
+//!
+//! Reference: Jha, Ghodsi, Garg, Reagen, *DeepReDuce: ReLU Reduction for
+//! Fast Private Inference*, ICML 2021 —
+//! <https://arxiv.org/pdf/2103.01396> (abstract in PAPERS.md).
 
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::finetune::finetune;

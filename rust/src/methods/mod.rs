@@ -14,6 +14,21 @@
 //! All methods mutate a [`crate::model::ModelState`] toward a target ReLU
 //! budget; the paper's BCD ([`crate::coordinator::bcd`]) can then run *on
 //! top of* any of their outputs (paper Fig. 4).
+//!
+//! # References (see PAPERS.md for the retrieved abstracts)
+//!
+//! - Cho, Joshi, Garg, Reagen, Hegde, *Selective Network Linearization for
+//!   Efficient Private Inference*, ICML 2022 —
+//!   <https://arxiv.org/pdf/2202.02340>
+//! - Kundu, Lu, Zhang, Liu, Beerel, *Learning to Linearize Deep Neural
+//!   Networks for Secure and Efficient Private Inference* (SENet),
+//!   ICLR 2023 — <https://arxiv.org/pdf/2301.09254>
+//! - Jha, Ghodsi, Garg, Reagen, *DeepReDuce: ReLU Reduction for Fast
+//!   Private Inference*, ICML 2021 — <https://arxiv.org/pdf/2103.01396>
+//! - Peng et al., *AutoReP: Automatic ReLU Replacement for Fast Private
+//!   Network Inference*, ICCV 2023 — not in the retrieved set; the closest
+//!   retrieved relative is Kundu et al., *Making Models Shallow Again*
+//!   — <https://arxiv.org/pdf/2304.13274>
 
 pub mod autorep;
 pub mod deepreduce;

@@ -7,6 +7,10 @@
 //! PRAM activation-matching loss becomes logit distillation (the compiled
 //! `kd_step`). The structure (sensitivity → allocation → distillation) is
 //! the paper's.
+//!
+//! Reference: Kundu, Lu, Zhang, Liu, Beerel, *Learning to Linearize Deep
+//! Neural Networks for Secure and Efficient Private Inference*, ICLR 2023
+//! — <https://arxiv.org/pdf/2301.09254> (abstract in PAPERS.md).
 
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::finetune::cosine_lr;

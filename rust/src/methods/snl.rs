@@ -7,6 +7,10 @@
 //! analyses). The run records everything those figures need: λ trace,
 //! budget-vs-step trace, mask snapshots (IoU dynamics, Fig. 6) and sampled
 //! α trajectories (Fig. 11).
+//!
+//! Reference: Cho, Joshi, Garg, Reagen, Hegde, *Selective Network
+//! Linearization for Efficient Private Inference*, ICML 2022 —
+//! <https://arxiv.org/pdf/2202.02340> (abstract in PAPERS.md).
 
 use crate::config::SnlConfig;
 use crate::coordinator::finetune::finetune;

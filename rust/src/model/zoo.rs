@@ -1,11 +1,26 @@
 //! Checkpoint cache ("model zoo"): benches and examples share expensive
 //! intermediate models (trained baselines, SNL reference models) instead of
 //! re-training them per run.
+//!
+//! [`cached_traced`] additionally reports *where* a state came from (path,
+//! hit/built, wall time) so the pipeline can record stage provenance into
+//! the run-store manifest ([`crate::runstore`]).
 
 use super::state::ModelState;
 use crate::runtime::manifest::ModelInfo;
 use anyhow::Result;
 use std::path::{Path, PathBuf};
+
+/// Provenance of one zoo access: where the checkpoint lives and whether it
+/// was served from cache or built by the closure.
+#[derive(Clone, Debug)]
+pub struct CacheInfo {
+    pub path: PathBuf,
+    /// True when the checkpoint was loaded, false when it was built+saved.
+    pub hit: bool,
+    /// Wall-clock of the access (load or build+save) in seconds.
+    pub wall_secs: f64,
+}
 
 /// Path of the cached checkpoint for (model, tag).
 pub fn cache_path(dir: &Path, info: &ModelInfo, tag: &str) -> PathBuf {
@@ -20,12 +35,28 @@ pub fn cached<F>(dir: &Path, info: &ModelInfo, tag: &str, build: F) -> Result<Mo
 where
     F: FnOnce() -> Result<ModelState>,
 {
+    cached_traced(dir, info, tag, build).map(|(st, _)| st)
+}
+
+/// [`cached`] with provenance: returns the state plus a [`CacheInfo`]
+/// describing how it was obtained.
+pub fn cached_traced<F>(
+    dir: &Path,
+    info: &ModelInfo,
+    tag: &str,
+    build: F,
+) -> Result<(ModelState, CacheInfo)>
+where
+    F: FnOnce() -> Result<ModelState>,
+{
     let path = cache_path(dir, info, tag);
+    let t0 = std::time::Instant::now();
     if path.exists() {
         match ModelState::load(&path, info) {
             Ok(st) => {
                 crate::info!("zoo: loaded {path:?} (budget {})", st.budget());
-                return Ok(st);
+                let wall_secs = t0.elapsed().as_secs_f64();
+                return Ok((st, CacheInfo { path, hit: true, wall_secs }));
             }
             Err(e) => {
                 crate::warnlog!("zoo: stale checkpoint {path:?} ({e}); rebuilding");
@@ -35,5 +66,6 @@ where
     let st = build()?;
     st.save(&path)?;
     crate::info!("zoo: built + saved {path:?} (budget {})", st.budget());
-    Ok(st)
+    let wall_secs = t0.elapsed().as_secs_f64();
+    Ok((st, CacheInfo { path, hit: false, wall_secs }))
 }

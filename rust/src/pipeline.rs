@@ -13,19 +13,27 @@
 //!
 //! Expensive stages are cached in the model zoo keyed by (model, dataset,
 //! stage, budget, seed) so figure benches that share prefixes don't retrain.
+//! Every zoo access is recorded as a [`StageRecord`] so runs created
+//! through [`Pipeline::bcd_record`] carry their full staging provenance in
+//! `run.json` — and [`Pipeline::bcd_resume`] continues an interrupted run
+//! bit-identically (see [`crate::runstore`]).
 
 use crate::config::Experiment;
-use crate::coordinator::bcd::{run_bcd, BcdOutcome};
+use crate::coordinator::bcd::{run_bcd, run_bcd_resumable, BcdOutcome, IterRecord};
 use crate::coordinator::eval::test_accuracy;
 use crate::coordinator::train::train;
 use crate::data::{synth, Dataset};
 use crate::methods::autorep::{run_autorep, AutorepConfig};
 use crate::methods::snl::run_snl;
 use crate::model::{zoo, ModelState};
+use crate::runstore::{
+    BcdRecorder, RunDir, RunManifest, RunStore, StageRecord, COMPLETE, FAILED, RUNNING,
+};
 use crate::runtime::backend::Backend;
 use crate::runtime::session::Session;
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
+use std::sync::Mutex;
 
 /// One experiment's shared context.
 pub struct Pipeline<'e> {
@@ -34,6 +42,8 @@ pub struct Pipeline<'e> {
     pub train_ds: Dataset,
     pub test_ds: Dataset,
     zoo_dir: PathBuf,
+    /// Zoo accesses since the last [`Self::take_stages`] (run provenance).
+    stages: Mutex<Vec<StageRecord>>,
 }
 
 impl<'e> Pipeline<'e> {
@@ -46,7 +56,40 @@ impl<'e> Pipeline<'e> {
         // Namespace the zoo by backend: checkpoints from different backends
         // share model keys but not numerics, and must never cross-pollinate.
         let zoo_dir = PathBuf::from(&exp.out_dir).join("zoo").join(backend.name());
-        Ok(Pipeline { sess, exp, train_ds, test_ds, zoo_dir })
+        Ok(Pipeline {
+            sess,
+            exp,
+            train_ds,
+            test_ds,
+            zoo_dir,
+            stages: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Zoo access with provenance recording.
+    fn staged<F>(&self, stage: &str, tag: &str, build: F) -> Result<ModelState>
+    where
+        F: FnOnce() -> Result<ModelState>,
+    {
+        let (st, info) = zoo::cached_traced(&self.zoo_dir, self.sess.info(), tag, build)?;
+        self.stages.lock().unwrap().push(StageRecord {
+            stage: stage.to_string(),
+            path: info.path.display().to_string(),
+            budget: st.budget(),
+            cached: info.hit,
+            wall_secs: info.wall_secs,
+        });
+        Ok(st)
+    }
+
+    /// Drain the stage-provenance log (recorded into a run manifest).
+    /// Nested builds log their prerequisites too, so the order is
+    /// dependency-first; duplicates from repeated zoo hits are collapsed.
+    pub fn take_stages(&self) -> Vec<StageRecord> {
+        let mut v: Vec<StageRecord> = std::mem::take(&mut *self.stages.lock().unwrap());
+        let mut seen = std::collections::HashSet::new();
+        v.retain(|s| seen.insert((s.stage.clone(), s.path.clone())));
+        v
     }
 
     /// Trained full-ReLU baseline (cached).
@@ -55,7 +98,7 @@ impl<'e> Pipeline<'e> {
             "{}_base_s{}_t{}",
             self.exp.dataset, self.exp.train.seed, self.exp.train.steps
         );
-        zoo::cached(&self.zoo_dir, self.sess.info(), &tag, || {
+        self.staged("baseline", &tag, || {
             let mut st = self.sess.init_state(self.exp.train.seed as i32)?;
             train(&self.sess, &mut st, &self.train_ds, &self.exp.train)?;
             Ok(st)
@@ -72,7 +115,7 @@ impl<'e> Pipeline<'e> {
             "{}_snlref_b{}_s{}",
             self.exp.dataset, b_ref, self.exp.snl.seed
         );
-        zoo::cached(&self.zoo_dir, self.sess.info(), &tag, || {
+        self.staged("snl_ref", &tag, || {
             let mut st = self.baseline()?;
             run_snl(&self.sess, &mut st, &self.train_ds, b_ref, &self.exp.snl, 0)?;
             Ok(st)
@@ -89,7 +132,7 @@ impl<'e> Pipeline<'e> {
             self.exp.dataset, b_ref, self.exp.snl.seed
         );
         let cfg = AutorepConfig { base: self.exp.snl.clone(), ..Default::default() };
-        zoo::cached(&self.zoo_dir, self.sess.info(), &tag, || {
+        self.staged("autorep_ref", &tag, || {
             let mut st = self.baseline()?;
             run_autorep(&self.sess, &mut st, &self.train_ds, b_ref, &cfg)?;
             Ok(st)
@@ -135,9 +178,131 @@ impl<'e> Pipeline<'e> {
             b.finetune_steps,
             b.seed
         );
-        zoo::cached(&self.zoo_dir, self.sess.info(), &tag, || {
-            Ok(self.bcd_from(reference, b_target)?.0)
-        })
+        self.staged("bcd", &tag, || Ok(self.bcd_from(reference, b_target)?.0))
+    }
+
+    // ---- run-store orchestration ------------------------------------------
+
+    /// Run BCD on `st` with sweep-by-sweep durability: creates a run
+    /// directory in `store` (manifest + reference checkpoint + staging
+    /// provenance), persists every completed sweep through a
+    /// [`BcdRecorder`], and marks the run `complete`/`failed`. If the
+    /// process dies mid-run, `cdnl runs resume <id>` picks up from the last
+    /// completed sweep.
+    pub fn bcd_record(
+        &self,
+        store: &RunStore,
+        st: &mut ModelState,
+        b_target: usize,
+    ) -> Result<(BcdOutcome, RunDir)> {
+        let backend = self.sess.backend.name();
+        let mut m = RunManifest::new("bcd", &self.exp, backend, st.budget(), b_target);
+        m.stages = self.take_stages();
+        let mut run = store.create(m)?;
+        crate::runstore::save_state_atomic(st, &run.ref_state_path())?;
+        crate::info!("runstore: recording run {} in {:?}", run.manifest.run_id, run.dir);
+
+        let result = {
+            let mut rec = BcdRecorder::new(&mut run);
+            run_bcd_resumable(
+                &self.sess,
+                st,
+                &self.train_ds,
+                b_target,
+                &self.exp.bcd,
+                0,
+                None,
+                &mut |ev| rec.observe(ev),
+            )
+        };
+        self.seal(run, result)
+    }
+
+    /// Continue an interrupted run from its last durable sweep. Returns the
+    /// final state plus the *stitched* outcome: recorded sweeps from before
+    /// the interruption followed by the sweeps executed now — field-for-
+    /// field what the uninterrupted run would have produced (timings aside).
+    pub fn bcd_resume(&self, mut run: RunDir) -> Result<(ModelState, BcdOutcome, RunDir)> {
+        let m = &run.manifest;
+        if m.status == COMPLETE {
+            bail!("run {} is already complete", m.run_id);
+        }
+        if m.method != "bcd" {
+            bail!("run {} is a {:?} run; only bcd runs resume", m.run_id, m.method);
+        }
+        if m.model_key != self.sess.key {
+            bail!(
+                "run {} is for model {:?}, this pipeline drives {:?}",
+                m.run_id,
+                m.model_key,
+                self.sess.key
+            );
+        }
+        let b_target = m.b_target;
+        let mut st = run.load_resume_state(self.sess.info())?;
+        let cursor = match &run.manifest.bcd {
+            Some(p) if p.sweeps_done > 0 => Some(p.cursor(run.manifest.b_start)?),
+            _ => None, // interrupted before the first sweep: fresh replay
+        };
+        let prior: Vec<IterRecord> = run
+            .manifest
+            .bcd
+            .as_ref()
+            .map(|p| p.iterations.iter().map(|it| it.to_record()).collect())
+            .unwrap_or_default();
+        crate::info!(
+            "runstore: resuming run {} at sweep {} (budget {} -> {})",
+            run.manifest.run_id,
+            prior.len(),
+            st.budget(),
+            b_target
+        );
+        run.manifest.status = RUNNING.to_string();
+
+        let result = {
+            let mut rec = BcdRecorder::new(&mut run);
+            run_bcd_resumable(
+                &self.sess,
+                &mut st,
+                &self.train_ds,
+                b_target,
+                &self.exp.bcd,
+                0,
+                cursor.as_ref(),
+                &mut |ev| rec.observe(ev),
+            )
+        };
+        let (mut out, run) = self.seal(run, result)?;
+        let mut iterations = prior;
+        iterations.append(&mut out.iterations);
+        out.iterations = iterations;
+        out.final_budget = st.budget();
+        Ok((st, out, run))
+    }
+
+    /// Common epilogue: flip the manifest to its terminal status.
+    fn seal(
+        &self,
+        mut run: RunDir,
+        result: Result<BcdOutcome>,
+    ) -> Result<(BcdOutcome, RunDir)> {
+        match result {
+            Ok(out) => {
+                run.manifest.status = COMPLETE.to_string();
+                run.save()?;
+                Ok((out, run))
+            }
+            Err(e) => {
+                run.manifest.status = FAILED.to_string();
+                if let Err(save_err) = run.save() {
+                    crate::warnlog!(
+                        "runstore: could not mark {} failed: {save_err:#}",
+                        run.manifest.run_id
+                    );
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Test-set accuracy [%] of a state.

@@ -1,0 +1,350 @@
+//! `run.json` — the versioned, serde-backed manifest of one experiment run.
+//!
+//! One manifest fully describes a run: identity (method, model, dataset,
+//! config fingerprint), the exact config dump needed to reconstruct the
+//! [`crate::config::Experiment`], stage provenance (which zoo checkpoints
+//! fed it), and — for BCD — the per-sweep trace plus the resume cursor
+//! (RNG states as hex, sweep count, starting budget). The manifest is
+//! rewritten atomically after every sweep, so at any kill point the
+//! directory holds a consistent `(run.json, sweep_<n>.cdnl)` pair.
+
+use crate::config::Experiment;
+use crate::coordinator::bcd::{BcdCursor, IterRecord, SweepEvent};
+use crate::coordinator::finetune::FinetuneStats;
+use crate::derive_serde;
+use crate::util::serde::{hex_state, unhex_state, HexU64};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// On-disk format version; [`crate::runstore::RunDir::load`] rejects
+/// anything else (bump on breaking schema changes).
+pub const RUN_FORMAT: usize = 1;
+
+/// `status` values. Plain strings on disk; a killed process simply leaves
+/// `RUNNING` behind, which is what makes a run recognizably resumable.
+pub const RUNNING: &str = "running";
+pub const COMPLETE: &str = "complete";
+pub const FAILED: &str = "failed";
+
+/// Seconds since the unix epoch (manifest timestamps).
+pub fn now_unix() -> usize {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as usize)
+        .unwrap_or(0)
+}
+
+/// Provenance of one pipeline stage that fed this run (zoo access).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageRecord {
+    /// Stage name: `baseline`, `snl_ref`, `autorep_ref`, `bcd`, ...
+    pub stage: String,
+    /// Checkpoint path the stage was loaded from / saved to.
+    pub path: String,
+    /// ReLU budget of the stage's output state.
+    pub budget: usize,
+    /// True when served from the zoo cache, false when built this run.
+    pub cached: bool,
+    pub wall_secs: f64,
+}
+derive_serde!(StageRecord { stage, path, budget, cached, wall_secs });
+
+/// One completed BCD sweep — [`IterRecord`] plus the removed-index trace
+/// (which makes every intermediate mask reconstructable from the reference
+/// checkpoint alone).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IterTrace {
+    pub t: usize,
+    pub budget_after: usize,
+    pub base_acc: f64,
+    pub chosen_dacc: f64,
+    pub trials_evaluated: usize,
+    pub trials_bounded: usize,
+    pub early_accept: bool,
+    pub ft_steps: usize,
+    pub ft_first_loss: f32,
+    pub ft_last_loss: f32,
+    pub ft_mean_acc: f64,
+    pub wall_ms: f64,
+    /// Flat ReLU indices removed by this sweep (sorted).
+    pub removed: Vec<usize>,
+}
+derive_serde!(IterTrace {
+    t,
+    budget_after,
+    base_acc,
+    chosen_dacc,
+    trials_evaluated,
+    trials_bounded,
+    early_accept,
+    ft_steps,
+    ft_first_loss,
+    ft_last_loss,
+    ft_mean_acc,
+    wall_ms,
+    removed,
+});
+
+impl IterTrace {
+    pub fn from_event(ev: &SweepEvent) -> IterTrace {
+        let r = ev.record;
+        IterTrace {
+            t: r.t,
+            budget_after: r.budget_after,
+            base_acc: r.base_acc,
+            chosen_dacc: r.chosen_dacc,
+            trials_evaluated: r.trials_evaluated,
+            trials_bounded: r.trials_bounded,
+            early_accept: r.early_accept,
+            ft_steps: r.finetune.steps,
+            ft_first_loss: r.finetune.first_loss,
+            ft_last_loss: r.finetune.last_loss,
+            ft_mean_acc: r.finetune.mean_acc,
+            wall_ms: r.wall_ms,
+            removed: ev.removed.to_vec(),
+        }
+    }
+
+    /// Back to the in-memory record — used to reconstruct a full
+    /// [`crate::coordinator::bcd::BcdOutcome`] across an interruption.
+    pub fn to_record(&self) -> IterRecord {
+        IterRecord {
+            t: self.t,
+            budget_after: self.budget_after,
+            base_acc: self.base_acc,
+            chosen_dacc: self.chosen_dacc,
+            trials_evaluated: self.trials_evaluated,
+            trials_bounded: self.trials_bounded,
+            early_accept: self.early_accept,
+            finetune: FinetuneStats {
+                steps: self.ft_steps,
+                first_loss: self.ft_first_loss,
+                last_loss: self.ft_last_loss,
+                mean_acc: self.ft_mean_acc,
+            },
+            wall_ms: self.wall_ms,
+        }
+    }
+}
+
+/// BCD progress: the resume cursor + the full sweep trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BcdProgress {
+    pub sweeps_done: usize,
+    /// Trial-sampling RNG state after the last completed sweep (hex words —
+    /// JSON numbers cannot carry full-range u64).
+    pub rng: Vec<HexU64>,
+    /// Finetune-batch RNG state after the last completed sweep.
+    pub ft_rng: Vec<HexU64>,
+    pub iterations: Vec<IterTrace>,
+}
+derive_serde!(BcdProgress { sweeps_done, rng, ft_rng, iterations });
+
+impl BcdProgress {
+    /// The [`BcdCursor`] to hand `run_bcd_resumable`. `b_ref` is the run's
+    /// starting budget (the manifest's `b_start`).
+    pub fn cursor(&self, b_ref: usize) -> Result<BcdCursor> {
+        Ok(BcdCursor {
+            sweeps_done: self.sweeps_done,
+            b_ref,
+            rng: unhex_state(&self.rng).map_err(|e| anyhow!("bcd.rng: {e}"))?,
+            ft_rng: unhex_state(&self.ft_rng).map_err(|e| anyhow!("bcd.ft_rng: {e}"))?,
+        })
+    }
+
+    /// Record a sweep event (cursor overwrite + trace append).
+    pub fn update(&mut self, ev: &SweepEvent) {
+        self.sweeps_done = ev.cursor.sweeps_done;
+        self.rng = hex_state(ev.cursor.rng);
+        self.ft_rng = hex_state(ev.cursor.ft_rng);
+        self.iterations.push(IterTrace::from_event(ev));
+    }
+}
+
+/// Final result summary, filled when a run completes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunResult {
+    pub final_budget: usize,
+    pub acc_before: f64,
+    pub acc_after: f64,
+    /// BCD runs: total sweep-loop time summed across sessions (comparable
+    /// between interrupted and uninterrupted runs). Other methods: whole
+    /// command wall time.
+    pub wall_secs: f64,
+}
+derive_serde!(RunResult { final_budget, acc_before, acc_after, wall_secs });
+
+/// The `run.json` document.
+#[derive(Clone, Debug)]
+pub struct RunManifest {
+    pub format: usize,
+    pub run_id: String,
+    /// `bcd`, `snl`, `autorep`, `senet`, `deepreduce`, `train`.
+    pub method: String,
+    pub status: String,
+    pub backend: String,
+    pub model_key: String,
+    pub dataset: String,
+    pub config_fingerprint: String,
+    /// Canonical key=value dump ([`Experiment::dump`]); re-`apply`ing it
+    /// onto a default experiment reconstructs this run's configuration.
+    pub config: BTreeMap<String, String>,
+    pub created_unix: usize,
+    pub updated_unix: usize,
+    /// Budget at run start (for BCD this is `B_ref`, the schedule anchor).
+    pub b_start: usize,
+    pub b_target: usize,
+    pub stages: Vec<StageRecord>,
+    pub bcd: Option<BcdProgress>,
+    pub result: Option<RunResult>,
+}
+derive_serde!(RunManifest {
+    format,
+    run_id,
+    method,
+    status,
+    backend,
+    model_key,
+    dataset,
+    config_fingerprint,
+    config,
+    created_unix,
+    updated_unix,
+    b_start,
+    b_target,
+    stages,
+    bcd,
+    result,
+});
+
+impl RunManifest {
+    /// Fresh `running` manifest for a method run. `run_id` is assigned by
+    /// [`crate::runstore::RunStore::create`].
+    pub fn new(
+        method: &str,
+        exp: &Experiment,
+        backend: &str,
+        b_start: usize,
+        b_target: usize,
+    ) -> RunManifest {
+        let now = now_unix();
+        RunManifest {
+            format: RUN_FORMAT,
+            run_id: String::new(),
+            method: method.to_string(),
+            status: RUNNING.to_string(),
+            backend: backend.to_string(),
+            model_key: exp.model_key(),
+            dataset: exp.dataset.clone(),
+            config_fingerprint: exp.fingerprint(),
+            config: exp.dump(),
+            created_unix: now,
+            updated_unix: now,
+            b_start,
+            b_target,
+            stages: Vec::new(),
+            bcd: None,
+            result: None,
+        }
+    }
+
+    /// A run is resumable when it never reached a terminal success state.
+    pub fn resumable(&self) -> bool {
+        self.method == "bcd" && self.status != COMPLETE
+    }
+
+    /// Rebuild the [`Experiment`] this run was configured with. A
+    /// fingerprint drift (new config keys with changed defaults since the
+    /// run was recorded) is logged, not fatal: the recorded keys still
+    /// apply verbatim.
+    pub fn experiment(&self) -> Result<Experiment> {
+        let mut exp = Experiment::default();
+        for (k, v) in &self.config {
+            exp.apply(k, v)
+                .map_err(|e| anyhow!("run {}: config {k}={v}: {e}", self.run_id))?;
+        }
+        if exp.fingerprint() != self.config_fingerprint {
+            crate::warnlog!(
+                "run {}: config fingerprint drifted ({} recorded, {} reconstructed) — defaults added since recording?",
+                self.run_id,
+                self.config_fingerprint,
+                exp.fingerprint()
+            );
+        }
+        Ok(exp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::serde as sd;
+
+    fn sample() -> RunManifest {
+        let exp = Experiment::default();
+        let mut m = RunManifest::new("bcd", &exp, "reference", 2000, 1000);
+        m.run_id = "bcd-resnet_16x16_c10-00000000-1".into();
+        m.stages.push(StageRecord {
+            stage: "snl_ref".into(),
+            path: "results/zoo/reference/x.cdnl".into(),
+            budget: 2000,
+            cached: true,
+            wall_secs: 0.1,
+        });
+        m.bcd = Some(BcdProgress {
+            sweeps_done: 2,
+            rng: hex_state([u64::MAX, 1, 2, 3]),
+            ft_rng: hex_state([4, 5, 6, u64::MAX - 1]),
+            iterations: vec![IterTrace {
+                t: 1,
+                budget_after: 1900,
+                base_acc: 51.25,
+                chosen_dacc: 0.5,
+                trials_evaluated: 7,
+                trials_bounded: 3,
+                early_accept: false,
+                ft_steps: 4,
+                ft_first_loss: 2.5,
+                ft_last_loss: 2.25,
+                ft_mean_acc: 50.0,
+                wall_ms: 12.5,
+                removed: vec![3, 14, 15],
+            }],
+        });
+        m
+    }
+
+    #[test]
+    fn manifest_roundtrips_bit_exact() {
+        let m = sample();
+        let text = sd::to_string_pretty(&m);
+        let back: RunManifest = sd::from_str(&text).unwrap();
+        assert_eq!(back.run_id, m.run_id);
+        assert_eq!(back.config, m.config);
+        assert_eq!(back.stages, m.stages);
+        assert_eq!(back.bcd, m.bcd);
+        assert_eq!(back.result, m.result);
+        // Full-range RNG words survive the JSON round trip exactly.
+        let cur = back.bcd.as_ref().unwrap().cursor(m.b_start).unwrap();
+        assert_eq!(cur.rng, [u64::MAX, 1, 2, 3]);
+        assert_eq!(cur.b_ref, 2000);
+        assert_eq!(cur.sweeps_done, 2);
+    }
+
+    #[test]
+    fn experiment_reconstructs() {
+        let m = sample();
+        let exp = m.experiment().unwrap();
+        assert_eq!(exp.dataset, "synth10");
+        assert_eq!(exp.fingerprint(), m.config_fingerprint);
+    }
+
+    #[test]
+    fn iter_trace_record_roundtrip() {
+        let tr = sample().bcd.unwrap().iterations[0].clone();
+        let rec = tr.to_record();
+        assert_eq!(rec.t, 1);
+        assert_eq!(rec.finetune.steps, 4);
+        assert_eq!(rec.budget_after, tr.budget_after);
+    }
+}

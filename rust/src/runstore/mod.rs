@@ -1,0 +1,379 @@
+//! Resumable experiment run-store (DESIGN.md §6).
+//!
+//! BCD linearization runs are long-lived discrete searches (hundreds of
+//! coordinate sweeps); before this subsystem a crash or preemption lost
+//! everything except what the model zoo happened to cache. The run-store
+//! gives every experiment run a directory under `<out_dir>/runs/<run_id>/`:
+//!
+//! ```text
+//! runs/bcd-resnet_16x16_c10-5fa3c1d2-1/
+//!   run.json          versioned serde manifest: config dump + fingerprint,
+//!                     backend, stage provenance, per-sweep BCD trace,
+//!                     resume cursor (RNG states), timings, result
+//!   ref.cdnl          the state the run started from (checkpoint)
+//!   sweep_<n>.cdnl    state after the last completed sweep (rolling)
+//! ```
+//!
+//! `run.json` and every checkpoint are written **atomically**
+//! (write-to-temp + rename) and the manifest is only advanced *after* its
+//! sweep checkpoint exists, so a kill at any instant leaves a consistent
+//! pair on disk. `cdnl runs resume <id>` rebuilds the experiment from the
+//! config dump, loads the checkpoint, restores both RNG streams from the
+//! cursor, and continues — bit-identical to an uninterrupted run (verified
+//! in `rust/tests/integration_runstore.rs`).
+//!
+//! The CLI surface is `cdnl runs list|show|resume|gc`.
+
+pub mod manifest;
+
+pub use manifest::{
+    BcdProgress, IterTrace, RunManifest, RunResult, StageRecord, COMPLETE, FAILED, RUNNING,
+    RUN_FORMAT,
+};
+
+use crate::coordinator::bcd::SweepEvent;
+use crate::model::ModelState;
+use crate::runtime::manifest::ModelInfo;
+use crate::util::serde as sd;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// then rename (rename is atomic on POSIX within a filesystem).
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path.parent().ok_or_else(|| anyhow!("{path:?} has no parent"))?;
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!(
+        ".{}.tmp",
+        path.file_name().and_then(|n| n.to_str()).unwrap_or("runstore")
+    ));
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+/// Atomic [`ModelState::save`]: serialize to a temp sibling, then rename.
+pub fn save_state_atomic(st: &ModelState, path: &Path) -> Result<()> {
+    let dir = path.parent().ok_or_else(|| anyhow!("{path:?} has no parent"))?;
+    std::fs::create_dir_all(dir)?;
+    let tmp = dir.join(format!(
+        ".{}.tmp",
+        path.file_name().and_then(|n| n.to_str()).unwrap_or("state")
+    ));
+    st.save(&tmp)?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+/// One run's directory + its (in-memory) manifest.
+#[derive(Debug)]
+pub struct RunDir {
+    pub dir: PathBuf,
+    pub manifest: RunManifest,
+}
+
+impl RunDir {
+    /// Load `<dir>/run.json`, rejecting unknown format versions.
+    pub fn load(dir: PathBuf) -> Result<RunDir> {
+        let path = dir.join("run.json");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let m: RunManifest =
+            sd::from_str(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        if m.format != RUN_FORMAT {
+            bail!(
+                "{path:?}: run format {} unsupported (this build reads format {RUN_FORMAT})",
+                m.format
+            );
+        }
+        Ok(RunDir { dir, manifest: m })
+    }
+
+    /// Atomically persist the manifest (bumps `updated_unix`).
+    pub fn save(&mut self) -> Result<()> {
+        self.manifest.updated_unix = manifest::now_unix();
+        let text = sd::to_string_pretty(&self.manifest);
+        write_atomic(&self.dir.join("run.json"), text.as_bytes())
+    }
+
+    /// Checkpoint of the state the run started from.
+    pub fn ref_state_path(&self) -> PathBuf {
+        self.dir.join("ref.cdnl")
+    }
+
+    /// Checkpoint written after sweep `t`.
+    pub fn sweep_state_path(&self, t: usize) -> PathBuf {
+        self.dir.join(format!("sweep_{t}.cdnl"))
+    }
+
+    /// The checkpoint a resume should start from: the last completed
+    /// sweep's state, or the reference state when no sweep finished.
+    pub fn resume_state_path(&self) -> PathBuf {
+        match &self.manifest.bcd {
+            Some(p) if p.sweeps_done > 0 => self.sweep_state_path(p.sweeps_done),
+            _ => self.ref_state_path(),
+        }
+    }
+
+    /// Load the resume checkpoint, validated against the model `info` and
+    /// the manifest's recorded progress (a half-written directory — e.g. a
+    /// checkpoint ahead of the manifest — is detected here, not silently
+    /// resumed into a diverged trajectory).
+    pub fn load_resume_state(&self, info: &ModelInfo) -> Result<ModelState> {
+        let path = self.resume_state_path();
+        let st = ModelState::load(&path, info)
+            .with_context(|| format!("run {}: loading {path:?}", self.manifest.run_id))?;
+        let expect = match &self.manifest.bcd {
+            Some(p) if p.sweeps_done > 0 => p
+                .iterations
+                .last()
+                .map(|it| it.budget_after)
+                .unwrap_or(self.manifest.b_start),
+            _ => self.manifest.b_start,
+        };
+        if st.budget() != expect {
+            bail!(
+                "run {}: checkpoint budget {} does not match manifest ({expect}) — \
+                 the run directory is inconsistent",
+                self.manifest.run_id,
+                st.budget()
+            );
+        }
+        Ok(st)
+    }
+}
+
+/// A directory of runs: `<root>/<run_id>/run.json`.
+#[derive(Clone, Debug)]
+pub struct RunStore {
+    root: PathBuf,
+}
+
+impl RunStore {
+    /// Open (lazily creating) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> RunStore {
+        RunStore { root: root.into() }
+    }
+
+    /// The conventional store for an experiment: `<out_dir>/runs`.
+    pub fn for_experiment(exp: &crate::config::Experiment) -> RunStore {
+        RunStore::open(Path::new(&exp.out_dir).join("runs"))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Allocate a run directory for `m` (assigning a unique, readable
+    /// `run_id`) and write the initial manifest.
+    pub fn create(&self, mut m: RunManifest) -> Result<RunDir> {
+        std::fs::create_dir_all(&self.root)?;
+        let base = format!("{}-{}-{}", m.method, m.model_key, &m.config_fingerprint[..8]);
+        let mut n = 1usize;
+        let (run_id, dir) = loop {
+            let id = format!("{base}-{n}");
+            let dir = self.root.join(&id);
+            if !dir.exists() {
+                break (id, dir);
+            }
+            n += 1;
+        };
+        std::fs::create_dir_all(&dir)?;
+        m.run_id = run_id;
+        let mut rd = RunDir { dir, manifest: m };
+        rd.save()?;
+        Ok(rd)
+    }
+
+    /// Load one run by id.
+    pub fn get(&self, run_id: &str) -> Result<RunDir> {
+        let dir = self.root.join(run_id);
+        if !dir.join("run.json").exists() {
+            bail!(
+                "no run {run_id:?} under {:?} (try `cdnl runs list`)",
+                self.root
+            );
+        }
+        RunDir::load(dir)
+    }
+
+    /// All runs, newest first (by creation time). Unreadable or
+    /// foreign-format directories are skipped with a warning.
+    pub fn list(&self) -> Result<Vec<RunManifest>> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(_) => return Ok(out), // no store yet == no runs
+        };
+        for entry in entries {
+            let entry = entry?;
+            if !entry.path().join("run.json").exists() {
+                continue;
+            }
+            match RunDir::load(entry.path()) {
+                Ok(rd) => out.push(rd.manifest),
+                Err(e) => crate::warnlog!("runstore: skipping {:?}: {e:#}", entry.path()),
+            }
+        }
+        // Same-second creations (common for back-to-back CLI runs) tie on
+        // created_unix; the numeric id suffix breaks the tie newest-first,
+        // so `gc --keep N` never favors an older run over a newer one.
+        fn id_seq(id: &str) -> usize {
+            id.rsplit('-').next().and_then(|s| s.parse().ok()).unwrap_or(0)
+        }
+        out.sort_by(|a, b| {
+            b.created_unix
+                .cmp(&a.created_unix)
+                .then_with(|| id_seq(&b.run_id).cmp(&id_seq(&a.run_id)))
+                .then_with(|| b.run_id.cmp(&a.run_id))
+        });
+        Ok(out)
+    }
+
+    /// Garbage-collect run directories. Terminal runs (`complete` /
+    /// `failed`) beyond the `keep` most recent are removed; `all` also
+    /// removes non-terminal (resumable) runs. Returns the removed ids.
+    pub fn gc(&self, keep: usize, all: bool) -> Result<Vec<String>> {
+        let runs = self.list()?; // newest first
+        let mut removed = Vec::new();
+        let mut kept_terminal = 0usize;
+        for m in runs {
+            let terminal = m.status == COMPLETE || m.status == FAILED;
+            let doomed = if terminal {
+                kept_terminal += 1;
+                kept_terminal > keep
+            } else {
+                all
+            };
+            if doomed {
+                std::fs::remove_dir_all(self.root.join(&m.run_id))
+                    .with_context(|| format!("removing run {}", m.run_id))?;
+                removed.push(m.run_id);
+            }
+        }
+        Ok(removed)
+    }
+}
+
+/// Sweep-by-sweep persister: wire [`BcdRecorder::observe`] into
+/// [`crate::coordinator::bcd::run_bcd_resumable`]'s sweep hook and every
+/// completed sweep becomes durable.
+///
+/// Write order per sweep (crash-safe at every point):
+/// 1. `sweep_<t>.cdnl` — post-sweep state, atomic;
+/// 2. `run.json` — cursor + trace advanced to `t`, atomic;
+/// 3. `sweep_<t-1>.cdnl` removed (the manifest no longer references it).
+///
+/// A kill between (1) and (2) leaves the manifest at `t-1` with both
+/// checkpoints present — resume reads `sweep_<t-1>` and replays sweep `t`
+/// identically, overwriting the orphan.
+pub struct BcdRecorder<'a> {
+    run: &'a mut RunDir,
+}
+
+impl<'a> BcdRecorder<'a> {
+    pub fn new(run: &'a mut RunDir) -> BcdRecorder<'a> {
+        BcdRecorder { run }
+    }
+
+    /// Persist one completed sweep.
+    pub fn observe(&mut self, ev: &SweepEvent) -> Result<()> {
+        let t = ev.cursor.sweeps_done;
+        save_state_atomic(ev.state, &self.run.sweep_state_path(t))?;
+        self.run
+            .manifest
+            .bcd
+            .get_or_insert_with(BcdProgress::default)
+            .update(ev);
+        self.run.save()?;
+        if t > 1 {
+            // Best-effort: the manifest now points past the previous sweep.
+            let _ = std::fs::remove_file(self.run.sweep_state_path(t - 1));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Experiment;
+
+    fn tmp_store(tag: &str) -> RunStore {
+        let dir = std::env::temp_dir().join(format!("cdnl_runstore_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        RunStore::open(dir)
+    }
+
+    fn bcd_manifest(exp: &Experiment) -> RunManifest {
+        RunManifest::new("bcd", exp, "reference", 200, 100)
+    }
+
+    #[test]
+    fn create_get_list_assign_unique_ids() {
+        let store = tmp_store("ids");
+        let exp = Experiment::default();
+        let a = store.create(bcd_manifest(&exp)).unwrap();
+        let b = store.create(bcd_manifest(&exp)).unwrap();
+        assert_ne!(a.manifest.run_id, b.manifest.run_id);
+        assert!(a.manifest.run_id.starts_with("bcd-resnet_16x16_c10-"));
+        let got = store.get(&a.manifest.run_id).unwrap();
+        assert_eq!(got.manifest.b_target, 100);
+        assert_eq!(got.manifest.status, RUNNING);
+        assert_eq!(store.list().unwrap().len(), 2);
+        assert!(store.get("nope").is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_and_versioned() {
+        let store = tmp_store("atomic");
+        let exp = Experiment::default();
+        let m = RunManifest::new("snl", &exp, "reference", 300, 50);
+        let mut rd = store.create(m).unwrap();
+        rd.manifest.status = COMPLETE.to_string();
+        rd.save().unwrap();
+        // No temp residue, and the file reparses.
+        let names: Vec<_> = std::fs::read_dir(&rd.dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert!(names.iter().all(|n| !n.ends_with(".tmp")), "temp residue: {names:?}");
+        assert_eq!(store.get(&rd.manifest.run_id).unwrap().manifest.status, COMPLETE);
+        // Foreign format versions are rejected, not misread.
+        let text = std::fs::read_to_string(rd.dir.join("run.json")).unwrap();
+        std::fs::write(rd.dir.join("run.json"), text.replace("\"format\": 1", "\"format\": 99"))
+            .unwrap();
+        let err = format!("{:#}", store.get(&rd.manifest.run_id).unwrap_err());
+        assert!(err.contains("format 99"), "bad error: {err}");
+    }
+
+    #[test]
+    fn gc_keeps_recent_and_spares_resumable() {
+        let store = tmp_store("gc");
+        let exp = Experiment::default();
+        let mut ids = Vec::new();
+        for i in 0..4 {
+            let mut rd = store.create(bcd_manifest(&exp)).unwrap();
+            // Identical created_unix (the back-to-back CLI case): ordering
+            // must fall back to the numeric id suffix, newest first.
+            rd.manifest.created_unix = 1000;
+            if i < 3 {
+                rd.manifest.status = COMPLETE.to_string();
+            }
+            rd.save().unwrap();
+            ids.push(rd.manifest.run_id);
+        }
+        let listed = store.list().unwrap();
+        assert_eq!(listed[0].run_id, ids[3], "suffix tie-break must put newest first");
+        // keep=1: of the 3 terminal runs the newest survives; the running
+        // run (ids[3]) is spared.
+        let removed = store.gc(1, false).unwrap();
+        assert_eq!(removed.len(), 2);
+        assert!(!removed.contains(&ids[3]), "gc removed a resumable run");
+        assert!(!removed.contains(&ids[2]), "gc removed the newest terminal run");
+        // --all takes the resumable one too.
+        let removed = store.gc(0, true).unwrap();
+        assert!(removed.contains(&ids[3]));
+        assert_eq!(store.list().unwrap().len(), 0);
+    }
+}

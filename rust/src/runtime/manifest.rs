@@ -3,8 +3,16 @@
 //! The manifest is the ONLY source of shape knowledge on the rust side:
 //! parameter-vector length, mask-layer table (name/shape/offset), and the
 //! input/output specs of every compiled entry point.
+//!
+//! Parsing goes through the typed serde layer
+//! ([`crate::util::serde`] + [`crate::derive_serde!`]): the on-disk schema
+//! is described by *document* structs (`ManifestDoc`, `ModelDoc`,
+//! `ArtifactDoc`) that deserialize field-by-field, then convert into the
+//! runtime types below (resolving artifact paths against the manifest
+//! directory and validating the mask-layer tiling).
 
-use crate::util::json::{self, Json};
+use crate::derive_serde;
+use crate::util::serde as sd;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -17,6 +25,7 @@ pub struct PackEntry {
     pub offset: usize,
     pub size: usize,
 }
+derive_serde!(PackEntry { name, shape, offset, size });
 
 /// Input/output slot of a compiled artifact.
 #[derive(Clone, Debug, PartialEq)]
@@ -25,6 +34,7 @@ pub struct SlotSpec {
     pub shape: Vec<usize>,
     pub dtype: String,
 }
+derive_serde!(SlotSpec { name, shape, dtype });
 
 /// One compiled entry point (e.g. `train_step`) of one model variant.
 #[derive(Clone, Debug)]
@@ -87,28 +97,48 @@ pub struct Manifest {
     pub dir: PathBuf,
 }
 
-fn parse_entries(v: &Json) -> Vec<PackEntry> {
-    v.as_arr()
-        .iter()
-        .map(|e| PackEntry {
-            name: e.expect("name").as_str().to_string(),
-            shape: e.expect("shape").as_usize_vec(),
-            offset: e.expect("offset").as_usize(),
-            size: e.expect("size").as_usize(),
-        })
-        .collect()
-}
+// ---- on-disk schema (document structs, serde-deserialized) ----------------
 
-fn parse_slots(v: &Json) -> Vec<SlotSpec> {
-    v.as_arr()
-        .iter()
-        .map(|s| SlotSpec {
-            name: s.expect("name").as_str().to_string(),
-            shape: s.expect("shape").as_usize_vec(),
-            dtype: s.expect("dtype").as_str().to_string(),
-        })
-        .collect()
+/// Disk shape of one artifact entry: the `file` is a path *relative to the
+/// manifest directory* until [`Manifest::load`] resolves it.
+struct ArtifactDoc {
+    file: String,
+    inputs: Vec<SlotSpec>,
+    outputs: Vec<SlotSpec>,
 }
+derive_serde!(ArtifactDoc { file, inputs, outputs });
+
+struct ModelDoc {
+    backbone: String,
+    num_classes: usize,
+    image_size: usize,
+    channels: usize,
+    poly: bool,
+    param_size: usize,
+    mask_size: usize,
+    mask_layers: Vec<PackEntry>,
+    param_entries: Vec<PackEntry>,
+    artifacts: BTreeMap<String, ArtifactDoc>,
+}
+derive_serde!(ModelDoc {
+    backbone,
+    num_classes,
+    image_size,
+    channels,
+    poly,
+    param_size,
+    mask_size,
+    mask_layers,
+    param_entries,
+    artifacts,
+});
+
+struct ManifestDoc {
+    batch: usize,
+    kernel_impl: String,
+    models: BTreeMap<String, ModelDoc>,
+}
+derive_serde!(ManifestDoc { batch, kernel_impl, models });
 
 impl Manifest {
     /// Load `<dir>/manifest.json`.
@@ -116,40 +146,44 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
-        let root = json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let doc: ManifestDoc =
+            sd::from_str(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
 
         let mut models = BTreeMap::new();
-        for (key, m) in root.expect("models").as_obj() {
-            let mut artifacts = BTreeMap::new();
-            for (fname, a) in m.expect("artifacts").as_obj() {
-                artifacts.insert(
-                    fname.clone(),
-                    ArtifactInfo {
-                        file: dir.join(a.expect("file").as_str()),
-                        inputs: parse_slots(a.expect("inputs")),
-                        outputs: parse_slots(a.expect("outputs")),
-                    },
-                );
-            }
+        for (key, m) in doc.models {
+            let artifacts = m
+                .artifacts
+                .into_iter()
+                .map(|(fname, a)| {
+                    (
+                        fname,
+                        ArtifactInfo {
+                            file: dir.join(a.file),
+                            inputs: a.inputs,
+                            outputs: a.outputs,
+                        },
+                    )
+                })
+                .collect();
             let info = ModelInfo {
                 key: key.clone(),
-                backbone: m.expect("backbone").as_str().to_string(),
-                num_classes: m.expect("num_classes").as_usize(),
-                image_size: m.expect("image_size").as_usize(),
-                channels: m.expect("channels").as_usize(),
-                poly: m.expect("poly").as_bool(),
-                param_size: m.expect("param_size").as_usize(),
-                mask_size: m.expect("mask_size").as_usize(),
-                mask_layers: parse_entries(m.expect("mask_layers")),
-                param_entries: parse_entries(m.expect("param_entries")),
+                backbone: m.backbone,
+                num_classes: m.num_classes,
+                image_size: m.image_size,
+                channels: m.channels,
+                poly: m.poly,
+                param_size: m.param_size,
+                mask_size: m.mask_size,
+                mask_layers: m.mask_layers,
+                param_entries: m.param_entries,
                 artifacts,
             };
             Self::validate(&info)?;
-            models.insert(key.clone(), info);
+            models.insert(key, info);
         }
         Ok(Manifest {
-            batch: root.expect("batch").as_usize(),
-            kernel_impl: root.expect("kernel_impl").as_str().to_string(),
+            batch: doc.batch,
+            kernel_impl: doc.kernel_impl,
             models,
             dir: dir.to_path_buf(),
         })
@@ -237,6 +271,12 @@ mod tests {
         assert!(info.artifact("forward").is_ok());
         assert!(info.artifact("nope").is_err());
         assert!(m.model("zz").is_err());
+        // Artifact paths are resolved against the manifest directory.
+        assert_eq!(
+            info.artifact("forward").unwrap().file,
+            dir.join("m1__forward.hlo.txt")
+        );
+        assert_eq!(info.artifact("forward").unwrap().inputs[0].dtype, "float32");
     }
 
     #[test]
@@ -246,5 +286,22 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("manifest.json"), bad).unwrap();
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn schema_error_names_the_field() {
+        let bad = fake_manifest_json().replace("\"mask_size\": 6", "\"mask_size\": \"six\"");
+        let dir = std::env::temp_dir().join("cdnl_manifest_test_field");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(err.contains("mask_size"), "error lacks field path: {err}");
+    }
+
+    #[test]
+    fn pack_entry_serde_roundtrip() {
+        let e = PackEntry { name: "w".into(), shape: vec![2, 3], offset: 4, size: 6 };
+        let back: PackEntry = sd::from_str(&sd::to_string(&e)).unwrap();
+        assert_eq!(back, e);
     }
 }

@@ -108,6 +108,56 @@ impl Json {
         out
     }
 
+    /// Indented serialization (2 spaces) — manifests meant for humans
+    /// (`run.json`) use this; machine interchange stays compact.
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_pretty(&mut out, 0);
+        out
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    for _ in 0..indent + 2 {
+                        out.push(' ');
+                    }
+                    v.write_pretty(out, indent + 2);
+                }
+                out.push('\n');
+                for _ in 0..indent {
+                    out.push(' ');
+                }
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    for _ in 0..indent + 2 {
+                        out.push(' ');
+                    }
+                    write_escaped(k, out);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 2);
+                }
+                out.push('\n');
+                for _ in 0..indent {
+                    out.push(' ');
+                }
+                out.push('}');
+            }
+            other => other.write(out),
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -416,6 +466,15 @@ mod tests {
     fn integers_written_exactly() {
         let v = Json::num(176402.0);
         assert_eq!(v.to_string(), "176402");
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_indents() {
+        let v = parse(r#"{"a": [1, {"b": []}], "c": {}, "d": "x"}"#).unwrap();
+        let pretty = v.to_string_pretty();
+        assert_eq!(parse(&pretty).unwrap(), v, "pretty output must reparse");
+        assert!(pretty.contains("\n  \"a\": ["), "expected 2-space indent: {pretty}");
+        assert!(pretty.contains("\"b\": []"), "empty containers stay inline");
     }
 
     #[test]

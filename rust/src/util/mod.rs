@@ -1,7 +1,7 @@
 //! Substrate utilities built from scratch for the offline environment:
-//! PRNG, JSON, CLI parsing, logging, and a mini property-testing harness.
-//! See DESIGN.md §0 for why these are hand-rolled (vendor set has no
-//! rand/serde/clap/tracing/proptest).
+//! PRNG, JSON (+ a serde-compatible typed layer), CLI parsing, logging, and
+//! a mini property-testing harness. See DESIGN.md §0 for why these are
+//! hand-rolled (vendor set has no rand/serde/clap/tracing/proptest).
 
 pub mod bench;
 pub mod cli;
@@ -9,6 +9,7 @@ pub mod json;
 pub mod logging;
 pub mod prng;
 pub mod prop;
+pub mod serde;
 
 /// Format a ReLU count the way the paper does: `6K`, `59.1K`, `570K`.
 pub fn fmt_relu_count(n: usize) -> String {

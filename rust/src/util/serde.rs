@@ -1,0 +1,356 @@
+//! serde-compatible serialization over [`crate::util::json::Json`].
+//!
+//! The offline vendor set has no `serde`/`serde_json` (DESIGN.md §0), so
+//! this module provides the same *shape* the ecosystem expects: a
+//! [`Serialize`] and a [`Deserialize`] trait, [`to_string`] /
+//! [`to_string_pretty`] / [`from_str`] free functions mirroring
+//! `serde_json`, and the [`crate::derive_serde!`] macro standing in for
+//! `#[derive(Serialize, Deserialize)]` on plain structs. Typed manifests
+//! (the artifact manifest, the run-store's `run.json`) build on this layer
+//! instead of walking raw [`Json`] trees; swapping in the real crates later
+//! is a mechanical change confined to this module.
+//!
+//! Semantics follow serde_json where it matters:
+//! - unknown object keys are ignored on deserialization;
+//! - a missing key deserializes as [`Json::Null`], so `Option<T>` fields
+//!   absorb absent keys as `None`;
+//! - errors carry a `key: expected ...` breadcrumb path.
+//!
+//! Numbers ride on `f64` (exact for integers `< 2^53`, far beyond any count
+//! this crate stores). Full-range `u64` values — RNG states, seeds — must
+//! NOT be stored as numbers; use [`HexU64`], which serializes as a hex
+//! string.
+
+use super::json::{self, Json};
+use std::collections::BTreeMap;
+
+/// A value that can render itself as a [`Json`] tree.
+pub trait Serialize {
+    fn serialize(&self) -> Json;
+}
+
+/// A value that can be reconstructed from a [`Json`] tree.
+pub trait Deserialize: Sized {
+    fn deserialize(v: &Json) -> Result<Self, String>;
+}
+
+/// Serialize to a compact JSON document (serde_json::to_string analog).
+pub fn to_string<T: Serialize>(value: &T) -> String {
+    value.serialize().to_string()
+}
+
+/// Serialize to an indented JSON document (serde_json::to_string_pretty
+/// analog) — the run-store manifests use this so `run.json` stays
+/// greppable and diffable.
+pub fn to_string_pretty<T: Serialize>(value: &T) -> String {
+    value.serialize().to_string_pretty()
+}
+
+/// Parse a JSON document into `T` (serde_json::from_str analog).
+pub fn from_str<T: Deserialize>(text: &str) -> Result<T, String> {
+    let v = json::parse(text)?;
+    T::deserialize(&v)
+}
+
+/// Extract + deserialize one object field, with the key on the error path.
+/// Missing keys yield [`Json::Null`] so `Option<T>` fields default to
+/// `None` (the serde `#[serde(default)]` behavior this layer bakes in).
+pub fn field<T: Deserialize>(v: &Json, key: &str) -> Result<T, String> {
+    let item = match v {
+        Json::Obj(m) => m.get(key),
+        other => return Err(format!("{key}: expected object, got {other:.40?}")),
+    };
+    T::deserialize(item.unwrap_or(&Json::Null)).map_err(|e| format!("{key}: {e}"))
+}
+
+/// Implement [`Serialize`] + [`Deserialize`] for an existing plain struct —
+/// the stand-in for `#[derive(Serialize, Deserialize)]` (DESIGN.md §0).
+/// List every field; types are inferred from the struct definition:
+///
+/// ```
+/// use cdnl::derive_serde;
+/// pub struct Point { pub x: f64, pub y: f64 }
+/// derive_serde!(Point { x, y });
+/// let p: Point = cdnl::util::serde::from_str(r#"{"x": 1, "y": 2}"#).unwrap();
+/// assert_eq!(p.y, 2.0);
+/// ```
+#[macro_export]
+macro_rules! derive_serde {
+    ($name:ident { $($field:ident),* $(,)? }) => {
+        impl $crate::util::serde::Serialize for $name {
+            fn serialize(&self) -> $crate::util::json::Json {
+                let mut m = ::std::collections::BTreeMap::new();
+                $(
+                    m.insert(
+                        stringify!($field).to_string(),
+                        $crate::util::serde::Serialize::serialize(&self.$field),
+                    );
+                )*
+                $crate::util::json::Json::Obj(m)
+            }
+        }
+        impl $crate::util::serde::Deserialize for $name {
+            fn deserialize(
+                v: &$crate::util::json::Json,
+            ) -> ::std::result::Result<Self, ::std::string::String> {
+                ::std::result::Result::Ok($name {
+                    $($field: $crate::util::serde::field(v, stringify!($field))?,)*
+                })
+            }
+        }
+    };
+}
+
+// ---- primitive impls -------------------------------------------------------
+
+impl Serialize for bool {
+    fn serialize(&self) -> Json {
+        Json::Bool(*self)
+    }
+}
+
+impl Deserialize for bool {
+    fn deserialize(v: &Json) -> Result<Self, String> {
+        match v {
+            Json::Bool(b) => Ok(*b),
+            other => Err(format!("expected bool, got {other:.40?}")),
+        }
+    }
+}
+
+impl Serialize for String {
+    fn serialize(&self) -> Json {
+        Json::Str(self.clone())
+    }
+}
+
+impl Deserialize for String {
+    fn deserialize(v: &Json) -> Result<Self, String> {
+        match v {
+            Json::Str(s) => Ok(s.clone()),
+            other => Err(format!("expected string, got {other:.40?}")),
+        }
+    }
+}
+
+impl Serialize for f64 {
+    fn serialize(&self) -> Json {
+        Json::Num(*self)
+    }
+}
+
+impl Deserialize for f64 {
+    fn deserialize(v: &Json) -> Result<Self, String> {
+        match v {
+            Json::Num(n) => Ok(*n),
+            other => Err(format!("expected number, got {other:.40?}")),
+        }
+    }
+}
+
+impl Serialize for f32 {
+    fn serialize(&self) -> Json {
+        Json::Num(*self as f64)
+    }
+}
+
+impl Deserialize for f32 {
+    fn deserialize(v: &Json) -> Result<Self, String> {
+        f64::deserialize(v).map(|n| n as f32)
+    }
+}
+
+impl Serialize for usize {
+    fn serialize(&self) -> Json {
+        debug_assert!(*self < (1usize << 53), "usize {self} exceeds exact f64 range");
+        Json::Num(*self as f64)
+    }
+}
+
+impl Deserialize for usize {
+    fn deserialize(v: &Json) -> Result<Self, String> {
+        let n = f64::deserialize(v)?;
+        if n < 0.0 || n.fract() != 0.0 {
+            return Err(format!("expected unsigned integer, got {n}"));
+        }
+        Ok(n as usize)
+    }
+}
+
+/// A `u64` carried as a hex *string* in JSON, because JSON numbers round
+/// through `f64` and lose bits above 2^53. RNG states and seeds use this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct HexU64(pub u64);
+
+impl Serialize for HexU64 {
+    fn serialize(&self) -> Json {
+        Json::Str(format!("{:016x}", self.0))
+    }
+}
+
+impl Deserialize for HexU64 {
+    fn deserialize(v: &Json) -> Result<Self, String> {
+        let s = String::deserialize(v)?;
+        u64::from_str_radix(&s, 16)
+            .map(HexU64)
+            .map_err(|_| format!("expected hex u64, got {s:?}"))
+    }
+}
+
+/// Pack an RNG state for a manifest (see [`crate::util::prng::Rng::state`]).
+pub fn hex_state(s: [u64; 4]) -> Vec<HexU64> {
+    s.iter().map(|&w| HexU64(w)).collect()
+}
+
+/// Unpack an RNG state from a manifest.
+pub fn unhex_state(v: &[HexU64]) -> Result<[u64; 4], String> {
+    if v.len() != 4 {
+        return Err(format!("expected 4 RNG state words, got {}", v.len()));
+    }
+    Ok([v[0].0, v[1].0, v[2].0, v[3].0])
+}
+
+// ---- container impls -------------------------------------------------------
+
+impl<T: Serialize> Serialize for Vec<T> {
+    fn serialize(&self) -> Json {
+        Json::Arr(self.iter().map(Serialize::serialize).collect())
+    }
+}
+
+impl<T: Deserialize> Deserialize for Vec<T> {
+    fn deserialize(v: &Json) -> Result<Self, String> {
+        match v {
+            Json::Arr(items) => items
+                .iter()
+                .enumerate()
+                .map(|(i, item)| T::deserialize(item).map_err(|e| format!("[{i}]: {e}")))
+                .collect(),
+            other => Err(format!("expected array, got {other:.40?}")),
+        }
+    }
+}
+
+impl<T: Serialize> Serialize for Option<T> {
+    fn serialize(&self) -> Json {
+        match self {
+            Some(v) => v.serialize(),
+            None => Json::Null,
+        }
+    }
+}
+
+impl<T: Deserialize> Deserialize for Option<T> {
+    fn deserialize(v: &Json) -> Result<Self, String> {
+        match v {
+            Json::Null => Ok(None),
+            other => T::deserialize(other).map(Some),
+        }
+    }
+}
+
+impl<T: Serialize> Serialize for BTreeMap<String, T> {
+    fn serialize(&self) -> Json {
+        Json::Obj(self.iter().map(|(k, v)| (k.clone(), v.serialize())).collect())
+    }
+}
+
+impl<T: Deserialize> Deserialize for BTreeMap<String, T> {
+    fn deserialize(v: &Json) -> Result<Self, String> {
+        match v {
+            Json::Obj(m) => m
+                .iter()
+                .map(|(k, item)| {
+                    T::deserialize(item)
+                        .map(|t| (k.clone(), t))
+                        .map_err(|e| format!("{k}: {e}"))
+                })
+                .collect(),
+            other => Err(format!("expected object, got {other:.40?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct Inner {
+        label: String,
+        vals: Vec<usize>,
+    }
+    derive_serde!(Inner { label, vals });
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct Outer {
+        flag: bool,
+        ratio: f64,
+        inner: Inner,
+        maybe: Option<String>,
+        map: BTreeMap<String, f32>,
+        words: Vec<HexU64>,
+    }
+    derive_serde!(Outer { flag, ratio, inner, maybe, map, words });
+
+    fn sample() -> Outer {
+        let mut map = BTreeMap::new();
+        map.insert("a".to_string(), 0.5f32);
+        Outer {
+            flag: true,
+            ratio: 2.25,
+            inner: Inner { label: "x\ny".into(), vals: vec![1, 2, 3] },
+            maybe: None,
+            map,
+            words: hex_state([u64::MAX, 0, 1, 0xDEADBEEFDEADBEEF]),
+        }
+    }
+
+    #[test]
+    fn roundtrip_compact_and_pretty() {
+        let v = sample();
+        for text in [to_string(&v), to_string_pretty(&v)] {
+            let back: Outer = from_str(&text).unwrap();
+            assert_eq!(back, v);
+        }
+    }
+
+    #[test]
+    fn hex_u64_exact_at_full_range() {
+        // 2^53-adjacent and full-range values survive exactly (a plain JSON
+        // number would not).
+        let v = sample();
+        let back: Outer = from_str(&to_string(&v)).unwrap();
+        assert_eq!(unhex_state(&back.words).unwrap(), [u64::MAX, 0, 1, 0xDEADBEEFDEADBEEF]);
+        assert!(unhex_state(&back.words[..3]).is_err());
+    }
+
+    #[test]
+    fn missing_key_is_none_extra_key_ignored() {
+        let text = r#"{"flag": false, "ratio": 1, "inner": {"label": "l", "vals": []},
+                       "map": {}, "words": [], "unknown_extra": 42}"#;
+        let v: Outer = from_str(text).unwrap();
+        assert_eq!(v.maybe, None);
+        assert!(!v.flag);
+    }
+
+    #[test]
+    fn errors_carry_key_path() {
+        let text = r#"{"flag": false, "ratio": "nope", "inner": {"label": "l", "vals": []},
+                       "map": {}, "words": []}"#;
+        let err = from_str::<Outer>(text).unwrap_err();
+        assert!(err.contains("ratio"), "error lacks key path: {err}");
+        // Nested path: bad element inside inner.vals.
+        let text = r#"{"flag": false, "ratio": 1, "inner": {"label": "l", "vals": [1, "x"]},
+                       "map": {}, "words": []}"#;
+        let err = from_str::<Outer>(text).unwrap_err();
+        assert!(err.contains("inner") && err.contains("[1]"), "bad path: {err}");
+    }
+
+    #[test]
+    fn non_integer_usize_rejected() {
+        assert!(usize::deserialize(&Json::Num(1.5)).is_err());
+        assert!(usize::deserialize(&Json::Num(-2.0)).is_err());
+        assert_eq!(usize::deserialize(&Json::Num(7.0)).unwrap(), 7);
+    }
+}

@@ -1,0 +1,289 @@
+//! Run-store integration on the pure-Rust reference backend.
+//!
+//! The acceptance criterion of the run-store: a BCD run killed mid-search
+//! and resumed from its `run.json` + sweep checkpoint produces a final
+//! mask, parameter vector and iteration trace **bit-identical** to the
+//! same run executed uninterrupted.
+
+use anyhow::bail;
+use cdnl::config::{BcdConfig, Experiment};
+use cdnl::coordinator::bcd::run_bcd_resumable;
+use cdnl::pipeline::Pipeline;
+use cdnl::runstore::{save_state_atomic, BcdRecorder, RunManifest, RunStore, COMPLETE, RUNNING};
+use cdnl::runtime::RefBackend;
+use std::path::PathBuf;
+
+/// Fresh scratch directory per test (process id + tag keeps parallel test
+/// binaries and repeated runs apart).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cdnl_it_runstore_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn quick_exp(out_dir: &std::path::Path) -> Experiment {
+    let mut exp = Experiment::default();
+    exp.out_dir = out_dir.display().to_string();
+    exp.bcd = BcdConfig {
+        drc: 24,
+        rt: 3,
+        adt: 0.3,
+        finetune_steps: 2,
+        finetune_lr: 1e-3,
+        proxy_batches: 2,
+        seed: 7,
+        workers: 2,
+        ..Default::default()
+    };
+    exp
+}
+
+fn assert_same_trace(
+    a: &[cdnl::coordinator::bcd::IterRecord],
+    b: &[cdnl::coordinator::bcd::IterRecord],
+) {
+    assert_eq!(a.len(), b.len(), "iteration counts differ");
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.t, rb.t);
+        assert_eq!(ra.budget_after, rb.budget_after, "t={}", ra.t);
+        assert_eq!(ra.base_acc, rb.base_acc, "t={}", ra.t);
+        assert_eq!(ra.chosen_dacc, rb.chosen_dacc, "t={}", ra.t);
+        assert_eq!(ra.trials_evaluated, rb.trials_evaluated, "t={}", ra.t);
+        assert_eq!(ra.trials_bounded, rb.trials_bounded, "t={}", ra.t);
+        assert_eq!(ra.early_accept, rb.early_accept, "t={}", ra.t);
+        assert_eq!(ra.finetune.last_loss, rb.finetune.last_loss, "t={}", ra.t);
+    }
+}
+
+#[test]
+fn interrupted_bcd_resumes_bit_identical() {
+    let tmp = scratch("kill");
+    let be = RefBackend::standard();
+    let pl = Pipeline::new(&be, quick_exp(&tmp)).unwrap();
+    let st0 = pl.sess.init_state(42).unwrap();
+    let total = st0.budget();
+    // 3 full sweeps + a 7-ReLU remainder sweep.
+    let target = total - 3 * 24 - 7;
+
+    // A: the uninterrupted run.
+    let mut st_a = st0.clone();
+    let out_a = run_bcd_resumable(
+        &pl.sess,
+        &mut st_a,
+        &pl.train_ds,
+        target,
+        &pl.exp.bcd,
+        0,
+        None,
+        &mut |_| Ok(()),
+    )
+    .unwrap();
+
+    // B: the same run, recorded, killed mid-search after sweep 2's
+    // checkpoint lands (a hook error aborts exactly like a kill: the
+    // process never gets to write a terminal status).
+    let store = RunStore::open(tmp.join("runs"));
+    let m = RunManifest::new("bcd", &pl.exp, "reference", total, target);
+    let mut run = store.create(m).unwrap();
+    save_state_atomic(&st0, &run.ref_state_path()).unwrap();
+    let run_id = run.manifest.run_id.clone();
+    let mut st_b = st0.clone();
+    let res = {
+        let mut rec = BcdRecorder::new(&mut run);
+        run_bcd_resumable(
+            &pl.sess,
+            &mut st_b,
+            &pl.train_ds,
+            target,
+            &pl.exp.bcd,
+            0,
+            None,
+            &mut |ev| {
+                rec.observe(ev)?;
+                if ev.cursor.sweeps_done == 2 {
+                    bail!("simulated kill");
+                }
+                Ok(())
+            },
+        )
+    };
+    assert!(res.is_err(), "the kill must abort the run");
+    drop(run);
+
+    // The directory is in the killed state: status still `running`, two
+    // sweeps durable, checkpoint for sweep 2 present.
+    let rd = store.get(&run_id).unwrap();
+    assert_eq!(rd.manifest.status, RUNNING);
+    let prog = rd.manifest.bcd.as_ref().unwrap();
+    assert_eq!(prog.sweeps_done, 2);
+    assert_eq!(prog.iterations.len(), 2);
+    assert!(rd.sweep_state_path(2).exists());
+    assert!(!rd.sweep_state_path(1).exists(), "superseded checkpoint not pruned");
+
+    // Simulate the nastiest kill window too: a sweep-3 checkpoint written
+    // but the manifest never advanced. Resume must ignore the orphan (the
+    // manifest is the source of truth) and overwrite it.
+    std::fs::copy(rd.sweep_state_path(2), rd.sweep_state_path(3)).unwrap();
+
+    // C: resume exactly as `cdnl runs resume <id>` does — experiment
+    // rebuilt from the recorded config dump, state from the checkpoint,
+    // RNG streams from the cursor.
+    let exp2 = rd.manifest.experiment().unwrap();
+    assert_eq!(exp2.fingerprint(), pl.exp.fingerprint());
+    let pl2 = Pipeline::new(&be, exp2).unwrap();
+    let (st_r, out_r, run2) = pl2.bcd_resume(rd).unwrap();
+    assert_eq!(run2.manifest.status, COMPLETE);
+
+    // Bit-identical to the uninterrupted run.
+    assert_eq!(st_r.mask.dense(), st_a.mask.dense(), "final masks diverged");
+    assert_eq!(st_r.params.data, st_a.params.data, "final params diverged");
+    assert_eq!(st_r.mom.data, st_a.mom.data, "final momentum diverged");
+    assert_eq!(st_r.budget(), target);
+    assert_same_trace(&out_a.iterations, &out_r.iterations);
+
+    // The recorded removal trace accounts for every removed ReLU, so any
+    // intermediate mask is reconstructable from ref.cdnl alone.
+    let removed_total: usize = run2
+        .manifest
+        .bcd
+        .as_ref()
+        .unwrap()
+        .iterations
+        .iter()
+        .map(|it| it.removed.len())
+        .sum();
+    assert_eq!(removed_total, total - target);
+}
+
+#[test]
+fn resume_before_first_sweep_replays_from_scratch() {
+    let tmp = scratch("fresh");
+    let be = RefBackend::standard();
+    let pl = Pipeline::new(&be, quick_exp(&tmp)).unwrap();
+    let st0 = pl.sess.init_state(11).unwrap();
+    let total = st0.budget();
+    let target = total - 2 * 24;
+
+    let mut st_a = st0.clone();
+    let out_a = run_bcd_resumable(
+        &pl.sess,
+        &mut st_a,
+        &pl.train_ds,
+        target,
+        &pl.exp.bcd,
+        0,
+        None,
+        &mut |_| Ok(()),
+    )
+    .unwrap();
+
+    // Killed after the run directory was created but before any sweep
+    // completed: only ref.cdnl exists, manifest has no bcd progress.
+    let store = RunStore::open(tmp.join("runs"));
+    let m = RunManifest::new("bcd", &pl.exp, "reference", total, target);
+    let run = store.create(m).unwrap();
+    save_state_atomic(&st0, &run.ref_state_path()).unwrap();
+    let run_id = run.manifest.run_id.clone();
+    drop(run);
+
+    let rd = store.get(&run_id).unwrap();
+    let pl2 = Pipeline::new(&be, rd.manifest.experiment().unwrap()).unwrap();
+    let (st_r, out_r, run2) = pl2.bcd_resume(rd).unwrap();
+    assert_eq!(run2.manifest.status, COMPLETE);
+    assert_eq!(st_r.mask.dense(), st_a.mask.dense());
+    assert_eq!(st_r.params.data, st_a.params.data);
+    assert_same_trace(&out_a.iterations, &out_r.iterations);
+}
+
+#[test]
+fn resume_rejects_inconsistent_directory() {
+    let tmp = scratch("tamper");
+    let be = RefBackend::standard();
+    let pl = Pipeline::new(&be, quick_exp(&tmp)).unwrap();
+    let st0 = pl.sess.init_state(5).unwrap();
+    let total = st0.budget();
+    let target = total - 24;
+
+    let store = RunStore::open(tmp.join("runs"));
+    let m = RunManifest::new("bcd", &pl.exp, "reference", total, target);
+    let mut run = store.create(m).unwrap();
+    save_state_atomic(&st0, &run.ref_state_path()).unwrap();
+    let run_id = run.manifest.run_id.clone();
+    let mut st_b = st0.clone();
+    let _ = {
+        let mut rec = BcdRecorder::new(&mut run);
+        run_bcd_resumable(
+            &pl.sess,
+            &mut st_b,
+            &pl.train_ds,
+            target,
+            &pl.exp.bcd,
+            0,
+            None,
+            &mut |ev| {
+                rec.observe(ev)?;
+                bail!("kill after first sweep")
+            },
+        )
+    };
+    drop(run);
+
+    // Overwrite the sweep-1 checkpoint with the reference state: its budget
+    // contradicts the manifest's recorded progress.
+    let rd = store.get(&run_id).unwrap();
+    save_state_atomic(&st0, &rd.sweep_state_path(1)).unwrap();
+    let pl2 = Pipeline::new(&be, rd.manifest.experiment().unwrap()).unwrap();
+    let err = format!("{:#}", pl2.bcd_resume(rd).unwrap_err());
+    assert!(err.contains("inconsistent"), "wrong error: {err}");
+}
+
+#[test]
+fn stage_provenance_records_zoo_accesses() {
+    let tmp = scratch("stages");
+    let be = RefBackend::standard();
+    let mut exp = quick_exp(&tmp);
+    exp.train.steps = 5;
+    exp.train.warmup_steps = 1;
+    let pl = Pipeline::new(&be, exp).unwrap();
+    let _ = pl.baseline().unwrap();
+    let stages = pl.take_stages();
+    assert_eq!(stages.len(), 1, "one zoo access expected: {stages:?}");
+    assert_eq!(stages[0].stage, "baseline");
+    assert!(!stages[0].cached, "first access must be a build");
+    assert!(stages[0].path.contains("zoo"), "path should live in the zoo: {}", stages[0].path);
+    // Second access hits the cache; the log was drained by take_stages.
+    let _ = pl.baseline().unwrap();
+    let stages = pl.take_stages();
+    assert_eq!(stages.len(), 1);
+    assert!(stages[0].cached, "second access must be a cache hit");
+}
+
+#[test]
+fn completed_runs_do_not_resume() {
+    let tmp = scratch("complete");
+    let be = RefBackend::standard();
+    let pl = Pipeline::new(&be, quick_exp(&tmp)).unwrap();
+    let mut st = pl.sess.init_state(3).unwrap();
+    let target = st.budget() - 24;
+
+    let store = RunStore::open(tmp.join("runs"));
+    let (out, run) = pl.bcd_record(&store, &mut st, target).unwrap();
+    assert_eq!(run.manifest.status, COMPLETE);
+    assert_eq!(out.final_budget, target);
+    assert_eq!(st.budget(), target);
+    let run_id = run.manifest.run_id.clone();
+    drop(run);
+
+    let rd = store.get(&run_id).unwrap();
+    assert!(!rd.manifest.resumable());
+    let pl2 = Pipeline::new(&be, rd.manifest.experiment().unwrap()).unwrap();
+    let err = format!("{:#}", pl2.bcd_resume(rd).unwrap_err());
+    assert!(err.contains("already complete"), "wrong error: {err}");
+
+    // The stored manifest reflects a completed run: full sweep trace, no
+    // CLI-level result (the library leaves that to the caller).
+    let stored = store.get(&run_id).unwrap();
+    assert!(stored.manifest.result.is_none()); // CLI fills this, not the lib
+    assert_eq!(stored.manifest.bcd.as_ref().unwrap().sweeps_done, 1);
+}
