@@ -139,6 +139,57 @@ fn main() -> anyhow::Result<()> {
         &sweep_rows,
     )?;
 
+    // --- staged execution: full-forward vs incremental trial scan ------------
+    // The bcd.cache_mb knob (DESIGN.md §8). Outcomes must be bit-identical;
+    // only wall-clock may differ. Low DRC lands more hypotheses entirely in
+    // late layers, so the prefix-reuse win shrinks as DRC grows.
+    let ev_inc = Evaluator::with_cache(&sess, &train_ds, 2, 64)?;
+    let staged_rt = if common::full_mode() { 48 } else { 24 };
+    let mut staged_rows = Vec::new();
+    for &d in &[1usize, 8, 64] {
+        let mut rng = Rng::new(33);
+        let t0 = std::time::Instant::now();
+        let full_out = scan_trials(
+            &ev, &params, &st.mask, &sampler, d, staged_rt, -1e9, base, &mut rng, 1,
+        )?;
+        let full_ms = 1000.0 * t0.elapsed().as_secs_f64();
+        let mut rng = Rng::new(33);
+        let t0 = std::time::Instant::now();
+        let inc_out = scan_trials(
+            &ev_inc, &params, &st.mask, &sampler, d, staged_rt, -1e9, base, &mut rng, 1,
+        )?;
+        let inc_ms = 1000.0 * t0.elapsed().as_secs_f64();
+        assert_eq!(
+            full_out, inc_out,
+            "staged scan diverged from full scan at DRC={d}"
+        );
+        let speedup = full_ms / inc_ms.max(1e-9);
+        println!(
+            "staged scan DRC={d}: full {full_ms:.1} ms, incremental {inc_ms:.1} ms => {speedup:.2}x"
+        );
+        results.push(summarize(
+            &format!("trial scan x{staged_rt} DRC={d}, full fwd"),
+            vec![full_ms],
+        ));
+        results.push(summarize(
+            &format!("trial scan x{staged_rt} DRC={d}, incremental"),
+            vec![inc_ms],
+        ));
+        staged_rows.push(vec![
+            d.to_string(),
+            format!("{full_ms:.2}"),
+            format!("{inc_ms:.2}"),
+            format!("{speedup:.2}"),
+        ]);
+    }
+    let (hits, misses, evictions) = ev_inc.cache_counters();
+    println!("prefix cache: {hits} hits, {misses} misses, {evictions} evictions");
+    write_csv(
+        &common::results_csv("perf_staged"),
+        &["drc", "full_ms", "incremental_ms", "speedup"],
+        &staged_rows,
+    )?;
+
     // --- mask hypothesis cost (pure host) ------------------------------------
     let mut rng2 = Rng::new(9);
     results.push(time("mask sample+hypothesis (host)", warmup, 1000, || {

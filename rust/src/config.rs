@@ -116,6 +116,11 @@ pub struct BcdConfig {
     /// parallelism. The scan outcome is identical for every worker count
     /// (deterministic merge), so this is purely a throughput knob.
     pub workers: usize,
+    /// Prefix-activation cache budget in MiB for staged trial execution
+    /// (DESIGN.md §8); 0 disables the cache and every trial runs full
+    /// forwards. Staged scoring is bit-identical to full scoring, so —
+    /// like `workers` — this is purely a throughput knob.
+    pub cache_mb: usize,
 }
 
 impl Default for BcdConfig {
@@ -132,6 +137,7 @@ impl Default for BcdConfig {
             proxy_batches: 2,
             seed: 0xC0DE,
             workers: 0,
+            cache_mb: 64,
         }
     }
 }
@@ -287,6 +293,7 @@ impl Experiment {
             "bcd.proxy_batches" => self.bcd.proxy_batches = p!(value),
             "bcd.seed" => self.bcd.seed = p!(value),
             "bcd.workers" => self.bcd.workers = p!(value),
+            "bcd.cache_mb" => self.bcd.cache_mb = p!(value),
             "snl.lambda0" => self.snl.lambda0 = p!(value),
             "snl.kappa" => self.snl.kappa = p!(value),
             "snl.stall_patience" => self.snl.stall_patience = p!(value),
@@ -349,6 +356,7 @@ impl Experiment {
         put("bcd.proxy_batches", self.bcd.proxy_batches.to_string());
         put("bcd.seed", self.bcd.seed.to_string());
         put("bcd.workers", self.bcd.workers.to_string());
+        put("bcd.cache_mb", self.bcd.cache_mb.to_string());
         put("snl.lambda0", self.snl.lambda0.to_string());
         put("snl.kappa", self.snl.kappa.to_string());
         put("snl.stall_patience", self.snl.stall_patience.to_string());
@@ -364,12 +372,15 @@ impl Experiment {
     }
 
     /// FNV-1a 64 fingerprint of the canonical dump, as 16 hex chars. Two
-    /// experiments with equal fingerprints produce identical results:
-    /// keys that cannot change numerics (paths, `bcd.workers` — the scan is
-    /// worker-count invariant) are excluded, so moving an output directory
-    /// or rescaling the thread pool does not orphan a resumable run.
+    /// experiments with equal fingerprints produce identical results: keys
+    /// that cannot change numerics (paths, `bcd.workers` — the scan is
+    /// worker-count invariant — and `bcd.cache_mb` — staged scoring is
+    /// bit-identical to full scoring) are excluded, so moving an output
+    /// directory, rescaling the thread pool, or resizing the prefix cache
+    /// does not orphan a resumable run.
     pub fn fingerprint(&self) -> String {
-        const NON_SEMANTIC: [&str; 3] = ["out_dir", "artifacts_dir", "bcd.workers"];
+        const NON_SEMANTIC: [&str; 4] =
+            ["out_dir", "artifacts_dir", "bcd.workers", "bcd.cache_mb"];
         let mut h: u64 = 0xcbf29ce484222325;
         for (k, v) in self.dump() {
             if NON_SEMANTIC.contains(&k.as_str()) {
@@ -489,9 +500,24 @@ mod tests {
         let fp = e.fingerprint();
         e.bcd.workers = 9;
         e.out_dir = "elsewhere".into();
-        assert_eq!(e.fingerprint(), fp, "workers/out_dir must not shift identity");
+        e.bcd.cache_mb = 0;
+        assert_eq!(
+            e.fingerprint(),
+            fp,
+            "workers/out_dir/cache_mb must not shift identity"
+        );
         e.bcd.rt = 99;
         assert_ne!(e.fingerprint(), fp, "rt change must shift identity");
+    }
+
+    #[test]
+    fn cache_mb_knob_applies() {
+        let mut e = Experiment::default();
+        assert_eq!(e.bcd.cache_mb, 64, "staged execution on by default");
+        e.apply("bcd.cache_mb", "0").unwrap();
+        assert_eq!(e.bcd.cache_mb, 0);
+        assert!(e.apply("bcd.cache_mb", "lots").is_err());
+        assert_eq!(e.dump().get("bcd.cache_mb").unwrap(), "0");
     }
 
     #[test]

@@ -185,7 +185,10 @@ pub fn run_bcd_resumable(
     );
 
     let wall0 = std::time::Instant::now();
-    let ev = Evaluator::new(sess, train_ds, cfg.proxy_batches)?;
+    // The hot-path evaluator carries the prefix-activation cache
+    // (`bcd.cache_mb`, 0 = full forwards only); staged and full scoring are
+    // bit-identical, so the knob never moves results (DESIGN.md §8).
+    let ev = Evaluator::with_cache(sess, train_ds, cfg.proxy_batches, cfg.cache_mb)?;
     let sampler = BlockSampler::new(cfg.granularity, sess.info());
     let to_remove_total = b_ref - b_target;
     let mut out = BcdOutcome {

@@ -1,7 +1,7 @@
 //! Batched accuracy evaluation over a fixed batch set.
 //!
 //! The BCD inner loop evaluates O(T·RT) mask hypotheses; this is the L3 hot
-//! path. Two optimizations live here (§Perf, measured in EXPERIMENTS.md):
+//! path. Three optimizations live here (§Perf, measured in EXPERIMENTS.md):
 //!
 //! 1. **Device-buffer caching** — the evaluation batches and the current
 //!    parameter vector are uploaded once per BCD iteration; each trial only
@@ -9,6 +9,15 @@
 //! 2. **Early-exit bound** — while scanning trials for the argmin
 //!    degradation, a trial is aborted as soon as even 100%-correct remaining
 //!    batches could not beat the incumbent.
+//! 3. **Staged execution** (DESIGN.md §8) — a hypothesis differs from the
+//!    iteration's base mask at only DRC indices; when they all land past
+//!    mask layer 0, the forward pass resumes from a cached base-mask
+//!    boundary activation ([`Evaluator::eval_trial_delta`]) instead of
+//!    re-running the whole network. The cache is per iteration, bounded by
+//!    `bcd.cache_mb` with LRU eviction, and the incremental per-batch
+//!    correct counts are **bit-identical** to full forwards (assert-checked
+//!    per batch in debug builds), so the replay-merge determinism contract
+//!    of [`crate::coordinator::trials`] is untouched.
 //!
 //! **Partial-batch accounting.** Backends run a fixed batch shape, so the
 //! final batch of a dataset that does not divide evenly is wrap-padded.
@@ -20,20 +29,105 @@
 //! skewed.
 
 use crate::data::Dataset;
+use crate::model::{Mask, MaskDelta};
 use crate::runtime::backend::DeviceBuf;
 use crate::runtime::session::Session;
 use crate::tensor::Tensor;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// One cached evaluation batch: device buffers plus the host-side labels
 /// needed to re-score a padded tail exactly.
 struct EvalBatch {
     x: DeviceBuf,
     y: DeviceBuf,
-    /// Host copy of the labels (only consulted for partial batches).
+    /// Host copy of the labels, kept ONLY for batches with a padded tail
+    /// (`valid < batch`); full batches never consult them, so cloning
+    /// labels for every batch would be pure waste.
     labels: Vec<i32>,
     /// How many leading examples are real (== batch except possibly last).
     valid: usize,
+}
+
+/// Per-iteration cache of base-mask boundary activations (§Perf opt 3).
+///
+/// Keyed by `(batch index, segment boundary)`; shared across scan workers
+/// behind a mutex. Values are `Arc`s so a worker can keep using an
+/// activation another worker just evicted.
+struct PrefixCache {
+    /// Byte budget for cached activations (the `bcd.cache_mb` knob).
+    budget_bytes: usize,
+    /// Segment boundaries the backend supports for this model.
+    segments: usize,
+    /// Size in bytes of one cached entry per boundary.
+    entry_bytes: Vec<usize>,
+    inner: Mutex<PrefixInner>,
+}
+
+/// Prefix-cache event tallies. Tracked in ONE place (under the cache's own
+/// mutex, which the hot path already holds) and mirrored into the backend
+/// `StatsRecorder` once per scan by [`Evaluator::flush_cache_stats`] — not
+/// per batch, which would add global-mutex traffic to the path this cache
+/// exists to speed up.
+#[derive(Clone, Copy, Default)]
+struct CacheCounts {
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    staged_trials: u64,
+}
+
+#[derive(Default)]
+struct PrefixInner {
+    /// The iteration's base mask, uploaded by [`Evaluator::begin_iteration`].
+    base: Option<Arc<DeviceBuf>>,
+    map: HashMap<(usize, usize), Arc<DeviceBuf>>,
+    /// LRU order, oldest first.
+    order: Vec<(usize, usize)>,
+    bytes: usize,
+    counts: CacheCounts,
+    /// Counter values already mirrored into the backend stats.
+    flushed: CacheCounts,
+}
+
+impl PrefixCache {
+    /// `None` when staging cannot help: zero budget, no backend support,
+    /// or a budget too small to hold even one boundary activation.
+    fn build(sess: &Session, batch: usize, budget_bytes: usize) -> Option<PrefixCache> {
+        if budget_bytes == 0 {
+            return None;
+        }
+        // A boundary past the second-to-last mask layer can never be
+        // resumed from (no dirty layer lies beyond it), so clamp whatever
+        // the backend reports to the layer table.
+        let info = sess.info();
+        let segments = sess
+            .segments()
+            .min(info.mask_layers.len().saturating_sub(1));
+        if segments == 0 {
+            return None;
+        }
+        // Entry sizes come from the backend — it owns the handle layout
+        // (`Backend::prefix_entry_bytes`; one f32 per mask-layer unit for
+        // the reference backend).
+        let entry_bytes: Vec<usize> = (0..segments)
+            .map(|b| sess.backend.prefix_entry_bytes(&sess.key, b, batch))
+            .collect();
+        if entry_bytes.iter().all(|&e| e > budget_bytes) {
+            return None;
+        }
+        Some(PrefixCache {
+            budget_bytes,
+            segments,
+            entry_bytes,
+            inner: Mutex::new(PrefixInner::default()),
+        })
+    }
+
+    fn has_base(&self) -> bool {
+        self.inner.lock().unwrap().base.is_some()
+    }
 }
 
 /// Outcome of scoring one mask hypothesis against the batch set.
@@ -53,16 +147,44 @@ pub struct Evaluator<'e, 's> {
     batches: Vec<EvalBatch>,
     batch: usize,
     examples: usize,
+    /// Prefix-activation cache for staged trial scoring (None = disabled;
+    /// every trial then runs full forwards).
+    prefix: Option<PrefixCache>,
 }
 
 impl<'e, 's> Evaluator<'e, 's> {
     /// Build from the first `max_batches` deterministic contiguous batches
     /// of `ds` (the paper evaluates trial ΔAcc on the *train* set; using a
-    /// fixed subset keeps trial comparisons consistent).
+    /// fixed subset keeps trial comparisons consistent). Staged execution
+    /// is disabled; use [`Self::with_cache`] on the BCD hot path.
     pub fn new(
         sess: &'s Session<'e>,
         ds: &Dataset,
         max_batches: usize,
+    ) -> Result<Evaluator<'e, 's>> {
+        Self::with_cache(sess, ds, max_batches, 0)
+    }
+
+    /// [`Self::new`] plus a prefix-activation cache of `cache_mb` MiB — the
+    /// `bcd.cache_mb` knob. `0` disables staging entirely (every trial runs
+    /// full forwards); any positive budget lets trials whose [`MaskDelta`]
+    /// leaves mask layer 0 untouched resume from cached base-mask
+    /// activations, bit-identically (DESIGN.md §8).
+    pub fn with_cache(
+        sess: &'s Session<'e>,
+        ds: &Dataset,
+        max_batches: usize,
+        cache_mb: usize,
+    ) -> Result<Evaluator<'e, 's>> {
+        Self::with_cache_bytes(sess, ds, max_batches, cache_mb.saturating_mul(1 << 20))
+    }
+
+    /// Byte-granular [`Self::with_cache`] (benches and eviction tests).
+    pub fn with_cache_bytes(
+        sess: &'s Session<'e>,
+        ds: &Dataset,
+        max_batches: usize,
+        cache_bytes: usize,
     ) -> Result<Evaluator<'e, 's>> {
         let batch = sess.batch;
         let avail = ds.len().div_ceil(batch);
@@ -73,12 +195,14 @@ impl<'e, 's> Evaluator<'e, 's> {
             let start = b * batch;
             let (x, y) = ds.batch_at(start, batch);
             let valid = batch.min(ds.len().saturating_sub(start)).max(1);
-            let labels = y.data.clone();
+            // Host labels only matter for re-scoring a wrap-padded tail.
+            let labels = if valid < batch { y.data.clone() } else { Vec::new() };
             let (xb, yb) = sess.upload_batch(&x, &y)?;
             examples += valid;
             batches.push(EvalBatch { x: xb, y: yb, labels, valid });
         }
-        Ok(Evaluator { sess, batches, batch, examples })
+        let prefix = PrefixCache::build(sess, batch, cache_bytes);
+        Ok(Evaluator { sess, batches, batch, examples, prefix })
     }
 
     /// Number of *real* examples this evaluator scores (padding excluded).
@@ -116,14 +240,10 @@ impl<'e, 's> Evaluator<'e, 's> {
         // Partial batch: the compiled eval_batch scalar includes the padded
         // tail, so re-score through forward and count the valid prefix only.
         let logits = self.sess.forward_b(params, mask_buf, &b.x)?;
+        let correct = count_valid_correct(&logits, &b.labels, b.valid)?;
         let k = logits.shape[1];
-        let preds = logits.argmax_rows()?;
-        let mut correct = 0.0f64;
         let mut loss = 0.0f64;
         for (i, &label) in b.labels.iter().take(b.valid).enumerate() {
-            if preds[i] == label as usize {
-                correct += 1.0;
-            }
             let row = &logits.data[i * k..(i + 1) * k];
             loss += cross_entropy(row, label as usize % k);
         }
@@ -179,6 +299,215 @@ impl<'e, 's> Evaluator<'e, 's> {
         Ok(TrialEval::Scored { acc: 100.0 * correct / total, batch_corrects })
     }
 
+    /// Arm the prefix-activation cache for a new BCD iteration: upload
+    /// `base` (the iteration's mask) and drop every cached activation from
+    /// the previous iteration — both the parameters and the base mask have
+    /// moved, so stale prefixes would be silently wrong. No-op when the
+    /// cache is disabled.
+    pub fn begin_iteration(&self, base: &Mask) -> Result<()> {
+        let Some(pc) = &self.prefix else { return Ok(()) };
+        let buf = Arc::new(self.sess.upload_f32(base.dense(), &[base.size()])?);
+        let mut inner = pc.inner.lock().unwrap();
+        inner.base = Some(buf);
+        inner.map.clear();
+        inner.order.clear();
+        inner.bytes = 0;
+        Ok(())
+    }
+
+    /// Whether trials can take the staged path (cache enabled AND the
+    /// backend supports segmented forwards for this model).
+    pub fn staged_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Cumulative prefix-cache counters `(hits, misses, evictions)`; zeros
+    /// when the cache is disabled. [`Self::flush_cache_stats`] mirrors the
+    /// same counts into the backend's stats table.
+    pub fn cache_counters(&self) -> (u64, u64, u64) {
+        match &self.prefix {
+            Some(pc) => {
+                let c = pc.inner.lock().unwrap().counts;
+                (c.hits, c.misses, c.evictions)
+            }
+            None => (0, 0, 0),
+        }
+    }
+
+    /// Mirror prefix-cache counters accumulated since the last flush into
+    /// the backend stats table (`prefix_cache:*` keys). Called once per
+    /// trial scan — the per-batch hot path only ever touches the cache's
+    /// own mutex.
+    pub fn flush_cache_stats(&self) {
+        let Some(pc) = &self.prefix else { return };
+        let d = {
+            let mut inner = pc.inner.lock().unwrap();
+            let d = CacheCounts {
+                hits: inner.counts.hits - inner.flushed.hits,
+                misses: inner.counts.misses - inner.flushed.misses,
+                evictions: inner.counts.evictions - inner.flushed.evictions,
+                staged_trials: inner.counts.staged_trials - inner.flushed.staged_trials,
+            };
+            inner.flushed = inner.counts;
+            d
+        };
+        for (key, n) in [
+            ("prefix_cache:hit", d.hits),
+            ("prefix_cache:miss", d.misses),
+            ("prefix_cache:evict", d.evictions),
+            ("prefix_cache:staged_trials", d.staged_trials),
+        ] {
+            if n > 0 {
+                self.sess.backend.bump_stat(key, n);
+            }
+        }
+    }
+
+    /// Score one hypothesis expressed as a sparse [`MaskDelta`] against the
+    /// iteration's base mask. When the backend supports staged execution,
+    /// the cache is armed ([`Self::begin_iteration`]) and the delta leaves
+    /// mask layer 0 clean, each batch resumes from a cached boundary
+    /// activation; otherwise this falls back to [`Self::eval_trial`]. The
+    /// outcome is **bit-identical** either way — per-batch correct counts
+    /// are assert-checked against full forwards in debug builds.
+    ///
+    /// `base` must be the mask handed to [`Self::begin_iteration`];
+    /// `scratch` is the caller's dense-hypothesis buffer (no allocation on
+    /// the hot path).
+    pub fn eval_trial_delta(
+        &self,
+        params: &DeviceBuf,
+        base: &Mask,
+        delta: &MaskDelta,
+        min_acc: f64,
+        scratch: &mut Vec<f32>,
+    ) -> Result<TrialEval> {
+        base.hypothesis_into(delta.indices(), scratch);
+        let dirty = delta.first_dirty_layer(self.sess.info());
+        // Resume from the deepest boundary before the first dirty layer
+        // whose entry actually FITS the cache budget (boundary b = output of
+        // mask layer b) — an uncacheable boundary would recompute its prefix
+        // per trial, costing more than a full forward. A layer-0 delta, a
+        // disarmed cache, or no affordable boundary means full forwards.
+        let staged = match &self.prefix {
+            Some(pc) if dirty >= 1 && pc.has_base() => (0..dirty.min(pc.segments))
+                .rev()
+                .find(|&b| pc.entry_bytes[b] <= pc.budget_bytes)
+                .map(|b| (pc, b)),
+            _ => None,
+        };
+        let Some((pc, boundary)) = staged else {
+            return self.eval_trial(params, scratch, min_acc);
+        };
+        let info = self.sess.info();
+        let suffix_off = info.mask_layers[boundary + 1].offset;
+        let suffix_buf = self
+            .sess
+            .upload_f32(&scratch[suffix_off..], &[scratch.len() - suffix_off])?;
+        #[cfg(debug_assertions)]
+        let full_mask_buf = self.upload_mask(scratch)?;
+        pc.inner.lock().unwrap().counts.staged_trials += 1;
+
+        let total = self.examples as f64;
+        let need_correct = min_acc / 100.0 * total;
+        let mut correct = 0.0f64;
+        let mut remaining = total;
+        let mut batch_corrects = Vec::with_capacity(self.batches.len());
+        for (bi, b) in self.batches.iter().enumerate() {
+            let acts = self.prefix_acts(pc, bi, boundary, params, &b.x)?;
+            let c = self.score_batch_from(b, boundary, &acts, params, &suffix_buf)?;
+            #[cfg(debug_assertions)]
+            {
+                // The incremental-vs-full determinism contract, checked on
+                // every staged batch in debug builds (DESIGN.md §8).
+                let (_, full_c) = self.score_batch(b, params, &full_mask_buf)?;
+                assert_eq!(
+                    c, full_c,
+                    "staged scoring diverged from full forward (batch {bi})"
+                );
+            }
+            correct += c;
+            remaining -= b.valid as f64;
+            batch_corrects.push(c);
+            if correct + remaining < need_correct {
+                return Ok(TrialEval::Bounded);
+            }
+        }
+        Ok(TrialEval::Scored { acc: 100.0 * correct / total, batch_corrects })
+    }
+
+    /// Fetch (or compute and cache) the base-mask activations of batch `bi`
+    /// at `boundary`. Concurrent workers may duplicate a miss; the results
+    /// are bit-identical, so last-writer-wins insertion is safe.
+    fn prefix_acts(
+        &self,
+        pc: &PrefixCache,
+        bi: usize,
+        boundary: usize,
+        params: &DeviceBuf,
+        x: &DeviceBuf,
+    ) -> Result<Arc<DeviceBuf>> {
+        let key = (bi, boundary);
+        let base = {
+            let mut inner = pc.inner.lock().unwrap();
+            if let Some(a) = inner.map.get(&key).cloned() {
+                inner.counts.hits += 1;
+                if let Some(p) = inner.order.iter().position(|&k| k == key) {
+                    inner.order.remove(p);
+                    inner.order.push(key);
+                }
+                return Ok(a);
+            }
+            inner
+                .base
+                .clone()
+                .ok_or_else(|| anyhow!("prefix cache: begin_iteration not called"))?
+        };
+        // Miss: compute outside the lock.
+        let acts = Arc::new(self.sess.forward_prefix_b(boundary, params, &base, x)?);
+        let entry = pc.entry_bytes[boundary];
+        let mut inner = pc.inner.lock().unwrap();
+        inner.counts.misses += 1;
+        if entry <= pc.budget_bytes && !inner.map.contains_key(&key) {
+            inner.map.insert(key, acts.clone());
+            inner.order.push(key);
+            inner.bytes += entry;
+            // LRU eviction down to budget; the entry just inserted is at
+            // the back and is never the one evicted.
+            while inner.bytes > pc.budget_bytes && inner.order.len() > 1 {
+                let old = inner.order.remove(0);
+                if inner.map.remove(&old).is_some() {
+                    inner.bytes -= pc.entry_bytes[old.1];
+                    inner.counts.evictions += 1;
+                }
+            }
+        }
+        drop(inner);
+        Ok(acts)
+    }
+
+    /// Valid-prefix correct count of one cached batch, resumed from a
+    /// cached boundary activation (the staged twin of [`Self::score_batch`]
+    /// — the trial loop never needs the loss).
+    fn score_batch_from(
+        &self,
+        b: &EvalBatch,
+        boundary: usize,
+        acts: &DeviceBuf,
+        params: &DeviceBuf,
+        suffix: &DeviceBuf,
+    ) -> Result<f64> {
+        if b.valid == self.batch {
+            let out = self.sess.eval_from_b(boundary, acts, params, suffix, &b.y)?;
+            return Ok(out.correct as f64);
+        }
+        // Padded tail: resume to logits and count the valid prefix through
+        // the same helper as the full path — the bit-identity of the two
+        // tail rescorings is structural, not duplicated.
+        let logits = self.sess.forward_from_b(boundary, acts, params, suffix)?;
+        count_valid_correct(&logits, &b.labels, b.valid)
+    }
+
     /// Replay the early-exit bound decision on recorded per-batch correct
     /// counts: would a sequential evaluation against `min_acc` have cut this
     /// trial? Uses the exact arithmetic of [`Self::eval_trial`], so the
@@ -210,6 +539,21 @@ impl<'e, 's> Evaluator<'e, 's> {
         }
         Ok((loss / self.examples as f64, 100.0 * correct / self.examples as f64))
     }
+}
+
+/// Valid-prefix correct count from logits — the padded-tail rescoring
+/// shared by the full ([`Evaluator::score_batch`]) and staged
+/// ([`Evaluator::score_batch_from`]) paths, so their agreement is by
+/// construction rather than by parallel maintenance.
+fn count_valid_correct(logits: &Tensor, labels: &[i32], valid: usize) -> Result<f64> {
+    let preds = logits.argmax_rows()?;
+    let mut correct = 0.0f64;
+    for (i, &label) in labels.iter().take(valid).enumerate() {
+        if preds[i] == label as usize {
+            correct += 1.0;
+        }
+    }
+    Ok(correct)
 }
 
 /// Host-side cross-entropy of one logit row (partial-batch rescoring).

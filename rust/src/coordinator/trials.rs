@@ -5,8 +5,13 @@
 //! # Parallel scan
 //!
 //! Hypothesis scoring dominates BCD wall-clock, so [`scan_trials`] fans the
-//! RT hypotheses across a scoped worker pool. Determinism is preserved by
-//! construction — the outcome is **bit-identical for every worker count**:
+//! RT hypotheses across a scoped worker pool, and each hypothesis travels
+//! as a sparse [`MaskDelta`] so the evaluator can resume its forward pass
+//! from cached base-mask activations when the delta leaves the early layers
+//! clean (staged execution, DESIGN.md §8 — incremental scoring is
+//! bit-identical to full forwards, so nothing below changes). Determinism
+//! is preserved by construction — the outcome is **bit-identical for every
+//! worker count**:
 //!
 //! 1. All RT draws are made up front on the caller's thread, each from an
 //!    RNG forked by trial index, and deduplicated in draw order.
@@ -24,7 +29,7 @@
 
 use crate::config::Granularity;
 use crate::coordinator::eval::{Evaluator, TrialEval};
-use crate::model::Mask;
+use crate::model::{Mask, MaskDelta};
 use crate::runtime::manifest::ModelInfo;
 use crate::util::prng::Rng;
 use anyhow::Result;
@@ -170,16 +175,21 @@ pub fn scan_trials(
     // Phase 1: draw all hypotheses up front, each from a trial-index fork of
     // the iteration RNG, deduplicating in draw order (a duplicate draw never
     // burns an evaluation, exactly as in the sequential Algorithm 2 loop).
+    // Each hypothesis becomes a sparse MaskDelta against the base mask, so
+    // the evaluator can route it through staged execution (DESIGN.md §8).
     let mut seen: HashSet<Vec<usize>> = HashSet::new();
-    let mut hyps: Vec<Vec<usize>> = Vec::new();
+    let mut hyps: Vec<MaskDelta> = Vec::new();
     for t in 0..rt {
         let mut trial_rng = rng.fork(t as u64);
         let mut removed = sampler.sample(mask, &mut trial_rng, drc);
         removed.sort_unstable();
         if seen.insert(removed.clone()) {
-            hyps.push(removed);
+            hyps.push(MaskDelta::new(removed));
         }
     }
+
+    // Arm the per-iteration prefix-activation cache (no-op when disabled).
+    ev.begin_iteration(mask)?;
 
     // Phase 2: score across the worker pool.
     let n = hyps.len();
@@ -194,8 +204,8 @@ pub fn scan_trials(
                     let Some((i, floor)) = state.lock().unwrap().claim() else {
                         return Ok(());
                     };
-                    mask.hypothesis_into(&hyps[i], &mut scratch);
-                    let result = ev.eval_trial(params, &scratch, floor)?;
+                    let result =
+                        ev.eval_trial_delta(params, mask, &hyps[i], floor, &mut scratch)?;
                     let mut st = state.lock().unwrap();
                     if let TrialEval::Scored { acc, .. } = &result {
                         if base_acc - acc < adt {
@@ -211,6 +221,9 @@ pub fn scan_trials(
         }
         Ok(())
     })?;
+    // Mirror this scan's prefix-cache tallies into the backend stats once,
+    // off the per-batch hot path.
+    ev.flush_cache_stats();
 
     // Phase 3: sequential replay merge — Algorithm 2's exact decision
     // sequence over the recorded results. Speculative results past the
@@ -240,7 +253,7 @@ pub fn scan_trials(
                 let dacc = base_acc - acc;
                 let better = best.as_ref().map(|b| acc > b.acc).unwrap_or(true);
                 if better {
-                    best = Some(Trial { removed: hyps[i].clone(), acc, dacc });
+                    best = Some(Trial { removed: hyps[i].indices().to_vec(), acc, dacc });
                 }
                 if dacc < adt {
                     // Algorithm 2 line 11: accept under the tolerance.

@@ -13,8 +13,12 @@
 //!   BCD hypothesis scan fans out across a thread pool with a deterministic
 //!   merge ([`coordinator::trials`]): identical results at any worker count.
 //! - **L2 — the [`runtime::Backend`] trait** — pluggable execution of the
-//!   model entry points behind opaque device-buffer handles. Two
-//!   implementations ship: the PJRT engine over AOT HLO artifacts
+//!   model entry points behind opaque device-buffer handles, plus an
+//!   optional segmented forward API for staged trial execution: backends
+//!   that know their layer structure resume a hypothesis's forward pass
+//!   from cached prefix activations, bit-identically to a full forward
+//!   (DESIGN.md §8; the PJRT engine gracefully stays on full forwards).
+//!   Two implementations ship: the PJRT engine over AOT HLO artifacts
 //!   (`--features pjrt`; JAX lowers `python/compile/model.py` once via
 //!   `make artifacts`, Python never runs on the request path) and the
 //!   pure-Rust [`runtime::RefBackend`] reference backend (a masked-

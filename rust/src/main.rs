@@ -14,9 +14,12 @@
 //!   picost       PI online-cost estimate of a checkpoint (LAN + WAN)
 //!   runs         the experiment run-store:
 //!                  runs list            all runs under <out>/runs
-//!                  runs show <id>       manifest, stages, sweep trace
+//!                  runs show <id>       manifest, stages, sweep trace,
+//!                                       recorded backend stats
 //!                  runs resume <id>     continue an interrupted BCD run
-//!                  runs gc [--keep N] [--all]   delete old run directories
+//!                  runs gc [--keep N] [--all] [--dry-run]
+//!                                       delete old run directories
+//!                                       (--dry-run previews, deletes nothing)
 //!
 //! Shared flags: --dataset synth10|synth100|synthtiny  --backbone resnet|wrn
 //! --poly  --preset quick|full  --set k=v[,k=v...]  --artifacts DIR
@@ -79,7 +82,7 @@ fn build_experiment(args: &Args) -> Result<Experiment> {
 }
 
 fn run() -> Result<()> {
-    let bools = ["poly", "verbose", "stats", "quiet", "simulate", "no-record", "all"];
+    let bools = ["poly", "verbose", "stats", "quiet", "simulate", "no-record", "all", "dry-run"];
     let args = Args::parse_env(&bools).map_err(|e| anyhow!(e))?;
     if args.has("verbose") {
         logging::set_level(logging::Level::Debug);
@@ -263,6 +266,9 @@ fn cmd_method(method: &str, engine: &dyn Backend, exp: Experiment, args: &Args) 
     };
     if let Some(mut run) = recorded {
         run.manifest.result = Some(result);
+        // Snapshot per-entry-point stats (incl. prefix_cache counters) so
+        // `runs show` can replay them after this process is gone.
+        run.manifest.stats = Some(cdnl::runstore::stats_snapshot(&engine.stats()));
         run.save()?;
         println!("run recorded: {} ({})", run.manifest.run_id, run.dir.display());
     } else if method != "bcd" && !args.has("no-record") {
@@ -273,6 +279,7 @@ fn cmd_method(method: &str, engine: &dyn Backend, exp: Experiment, args: &Args) 
         m.stages = pl.take_stages();
         m.status = COMPLETE.to_string();
         m.result = Some(result);
+        m.stats = Some(cdnl::runstore::stats_snapshot(&engine.stats()));
         let run = store.create(m)?;
         println!("run recorded: {} ({})", run.manifest.run_id, run.dir.display());
     }
@@ -527,6 +534,27 @@ fn runs_show(store: &RunStore, id: &str) -> Result<()> {
             &rows,
         );
     }
+    if let Some(stats) = &m.stats {
+        if !stats.is_empty() {
+            // Re-inflate the snapshot and reuse the one stats renderer
+            // (same table as `--stats`, compile column included).
+            let rows: std::collections::BTreeMap<String, cdnl::runtime::CallStats> = stats
+                .iter()
+                .map(|(k, s)| {
+                    (
+                        k.clone(),
+                        cdnl::runtime::CallStats {
+                            calls: s.calls as u64,
+                            total_secs: s.total_secs,
+                            compile_secs: s.compile_secs,
+                        },
+                    )
+                })
+                .collect();
+            println!("\nBackend stats at seal time (incl. prefix-cache counters):");
+            print!("{}", cdnl::runtime::backend::format_stats_table(&rows));
+        }
+    }
     Ok(())
 }
 
@@ -584,6 +612,7 @@ fn runs_resume(store: &RunStore, id: &str, args: &Args) -> Result<()> {
         // recorded bcd run (see cmd_method).
         wall_secs: out.iterations.iter().map(|r| r.wall_ms).sum::<f64>() / 1e3,
     });
+    run.manifest.stats = Some(cdnl::runstore::stats_snapshot(&backend.stats()));
     run.save()?;
 
     let out_path = default_ckpt_path(&pl.exp, &pl.sess.key, "bcd", run.manifest.b_target);
@@ -594,6 +623,20 @@ fn runs_resume(store: &RunStore, id: &str, args: &Args) -> Result<()> {
 
 fn runs_gc(store: &RunStore, args: &Args) -> Result<()> {
     let keep = args.get_usize("keep", 3);
+    if args.has("dry-run") {
+        // Preview mode for the only destructive CLI verb: list what gc
+        // would reclaim, touch nothing.
+        let doomed = store.gc_candidates(keep, args.has("all"))?;
+        if doomed.is_empty() {
+            println!("nothing to remove (kept the {keep} most recent terminal runs)");
+        } else {
+            for id in &doomed {
+                println!("would remove {id}");
+            }
+            println!("{} run(s) reclaimable (dry run — nothing deleted)", doomed.len());
+        }
+        return Ok(());
+    }
     let removed = store.gc(keep, args.has("all"))?;
     if removed.is_empty() {
         println!("nothing to remove (kept the {keep} most recent terminal runs)");

@@ -159,6 +159,68 @@ impl Mask {
         removed
     }
 
+    /// Apply a sparse [`MaskDelta`], returning the undo token that lets
+    /// [`Self::revert_delta`] restore this mask *exactly* — dense values,
+    /// present-set order, and position index all return to their pre-apply
+    /// state, so RNG-driven sampling after a revert replays identically.
+    pub fn apply_delta(&mut self, delta: &MaskDelta) -> Result<DeltaUndo> {
+        let mut positions = Vec::with_capacity(delta.removed.len());
+        for &i in &delta.removed {
+            if self.pos[i] == u32::MAX {
+                // Roll back what we already removed before reporting.
+                let partial = DeltaUndo { positions };
+                let done = partial.positions.len();
+                self.undo_removals(&delta.removed[..done], partial)?;
+                bail!("mask delta: index {i} already removed");
+            }
+            positions.push(self.pos[i]);
+            self.remove(i)?;
+        }
+        Ok(DeltaUndo { positions })
+    }
+
+    /// Revert a previous [`Self::apply_delta`] with its undo token. The
+    /// token must come from the matching apply on this mask, with no other
+    /// mutations in between.
+    pub fn revert_delta(&mut self, delta: &MaskDelta, undo: DeltaUndo) -> Result<()> {
+        if undo.positions.len() != delta.removed.len() {
+            bail!(
+                "mask delta: undo token covers {} removals, delta has {}",
+                undo.positions.len(),
+                delta.removed.len()
+            );
+        }
+        self.undo_removals(&delta.removed, undo)
+    }
+
+    /// Undo `removed[..]` (each paired with its recorded position), newest
+    /// first — the exact inverse of the swap-removes [`Self::remove`] did.
+    fn undo_removals(&mut self, removed: &[usize], undo: DeltaUndo) -> Result<()> {
+        for (&i, &p) in removed.iter().zip(&undo.positions).rev() {
+            if self.pos[i] != u32::MAX {
+                bail!("mask delta: cannot restore {i}: still present");
+            }
+            let p = p as usize;
+            if p > self.present.len() {
+                bail!("mask delta: undo position {p} out of range");
+            }
+            if p == self.present.len() {
+                // The removal popped `i` off the tail directly.
+                self.present.push(i as u32);
+            } else {
+                // The removal moved the then-last element into slot `p`;
+                // send it back to the tail and reseat `i`.
+                let moved = self.present[p];
+                self.present.push(moved);
+                self.pos[moved as usize] = (self.present.len() - 1) as u32;
+                self.present[p] = i as u32;
+            }
+            self.pos[i] = p as u32;
+            self.data[i] = 1.0;
+        }
+        Ok(())
+    }
+
     /// Internal consistency check (used by tests and debug assertions).
     pub fn check_invariants(&self) -> Result<()> {
         let mut seen = vec![false; self.size()];
@@ -186,6 +248,60 @@ impl Mask {
             }
         }
         Ok(())
+    }
+}
+
+/// A sparse difference against an iteration's base mask: the (sorted,
+/// distinct) flat ReLU indices a trial hypothesis removes.
+///
+/// The staged-execution hot path (DESIGN.md §8) routes on this instead of a
+/// dense hypothesis vector: [`Self::first_dirty_layer`] says where the
+/// hypothesis starts to differ from the base mask, so every layer before it
+/// can be served from the prefix-activation cache.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MaskDelta {
+    /// Removed flat indices, ascending and distinct.
+    removed: Vec<usize>,
+}
+
+/// Opaque undo token returned by [`Mask::apply_delta`]: the present-set
+/// position of each removed index at removal time.
+#[derive(Clone, Debug)]
+pub struct DeltaUndo {
+    positions: Vec<u32>,
+}
+
+impl MaskDelta {
+    /// Build from removal indices (sorted and deduplicated here).
+    pub fn new(mut removed: Vec<usize>) -> MaskDelta {
+        removed.sort_unstable();
+        removed.dedup();
+        MaskDelta { removed }
+    }
+
+    /// The removal indices, ascending.
+    pub fn indices(&self) -> &[usize] {
+        &self.removed
+    }
+
+    pub fn len(&self) -> usize {
+        self.removed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.removed.is_empty()
+    }
+
+    /// Index of the first mask layer this delta touches, per the manifest's
+    /// `mask_layers` table. Layers are offset-ordered and the indices are
+    /// sorted, so this is `layer_of` the smallest removed index. An empty
+    /// delta returns `mask_layers.len()` ("dirty past the last layer"), the
+    /// identity under prefix reuse: everything can be served from cache.
+    pub fn first_dirty_layer(&self, info: &ModelInfo) -> usize {
+        match self.removed.first() {
+            Some(&i) => info.layer_of(i),
+            None => info.mask_layers.len(),
+        }
     }
 }
 
@@ -251,6 +367,78 @@ mod tests {
         small.apply_removal(&[0, 1]).unwrap();
         assert_eq!(small.containment(&big), 1.0);
         assert_eq!(big.containment(&small), 6.0 / 8.0);
+    }
+
+    #[test]
+    fn delta_apply_revert_restores_exactly() {
+        let mut rng = Rng::new(11);
+        let mut base = Mask::full(40);
+        for i in 0..10 {
+            base.remove(i * 3).unwrap(); // non-trivial present ordering
+        }
+        let removed = base.sample_present(&mut rng, 7);
+        let delta = MaskDelta::new(removed);
+        let (data0, present0, pos0) = (base.data.clone(), base.present.clone(), base.pos.clone());
+        let undo = base.apply_delta(&delta).unwrap();
+        assert_eq!(base.count(), present0.len() - 7);
+        for &i in delta.indices() {
+            assert!(!base.is_present(i));
+        }
+        base.check_invariants().unwrap();
+        base.revert_delta(&delta, undo).unwrap();
+        // Exact restoration: dense values, present ORDER, and pos index.
+        assert_eq!(base.data, data0);
+        assert_eq!(base.present, present0);
+        assert_eq!(base.pos, pos0);
+    }
+
+    #[test]
+    fn delta_rejects_absent_index_and_rolls_back() {
+        let mut m = Mask::full(10);
+        m.remove(4).unwrap();
+        let snapshot = m.present.clone();
+        // 4 is already removed: apply must fail and leave m untouched.
+        let delta = MaskDelta::new(vec![2, 4, 7]);
+        assert!(m.apply_delta(&delta).is_err());
+        assert_eq!(m.present, snapshot, "failed apply must roll back");
+        m.check_invariants().unwrap();
+        // Mismatched undo token is rejected.
+        let d2 = MaskDelta::new(vec![2]);
+        let undo = m.apply_delta(&d2).unwrap();
+        assert!(m.revert_delta(&MaskDelta::new(vec![2, 7]), undo.clone()).is_err());
+        m.revert_delta(&d2, undo).unwrap();
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn delta_first_dirty_layer() {
+        use crate::runtime::manifest::PackEntry;
+        let info = ModelInfo {
+            key: "t".into(),
+            backbone: "resnet".into(),
+            num_classes: 2,
+            image_size: 4,
+            channels: 3,
+            poly: false,
+            param_size: 1,
+            mask_size: 22,
+            mask_layers: vec![
+                PackEntry { name: "a".into(), shape: vec![16], offset: 0, size: 16 },
+                PackEntry { name: "b".into(), shape: vec![6], offset: 16, size: 6 },
+            ],
+            param_entries: vec![],
+            artifacts: Default::default(),
+        };
+        assert_eq!(MaskDelta::new(vec![17, 20]).first_dirty_layer(&info), 1);
+        assert_eq!(MaskDelta::new(vec![20, 3]).first_dirty_layer(&info), 0);
+        assert_eq!(MaskDelta::new(vec![15]).first_dirty_layer(&info), 0);
+        assert_eq!(MaskDelta::new(vec![16]).first_dirty_layer(&info), 1);
+        assert_eq!(MaskDelta::new(vec![]).first_dirty_layer(&info), 2);
+        // new() sorts and dedups.
+        let d = MaskDelta::new(vec![9, 2, 9, 5]);
+        assert_eq!(d.indices(), &[2, 5, 9]);
+        assert_eq!(d.len(), 3);
+        assert!(!d.is_empty());
     }
 
     #[test]

@@ -10,5 +10,5 @@ pub mod mask;
 pub mod state;
 pub mod zoo;
 
-pub use mask::Mask;
+pub use mask::{DeltaUndo, Mask, MaskDelta};
 pub use state::ModelState;

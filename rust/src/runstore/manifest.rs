@@ -12,6 +12,7 @@ use crate::config::Experiment;
 use crate::coordinator::bcd::{BcdCursor, IterRecord, SweepEvent};
 use crate::coordinator::finetune::FinetuneStats;
 use crate::derive_serde;
+use crate::runtime::backend::CallStats;
 use crate::util::serde::{hex_state, unhex_state, HexU64};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -161,6 +162,36 @@ impl BcdProgress {
     }
 }
 
+/// On-disk snapshot of one entry point's backend statistics — the document
+/// dual of [`CallStats`] (`calls` rides as a JSON number; per-entry-point
+/// call counts sit far below 2^53).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CallStatsDoc {
+    pub calls: usize,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+derive_serde!(CallStatsDoc { calls, total_secs, compile_secs });
+
+/// Snapshot a backend stats map for a run manifest, so `cdnl runs show`
+/// can replay per-entry-point timings (and the `prefix_cache:*` counters)
+/// long after the recording process exited.
+pub fn stats_snapshot(stats: &BTreeMap<String, CallStats>) -> BTreeMap<String, CallStatsDoc> {
+    stats
+        .iter()
+        .map(|(k, s)| {
+            (
+                k.clone(),
+                CallStatsDoc {
+                    calls: s.calls as usize,
+                    total_secs: s.total_secs,
+                    compile_secs: s.compile_secs,
+                },
+            )
+        })
+        .collect()
+}
+
 /// Final result summary, filled when a run completes.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunResult {
@@ -197,6 +228,10 @@ pub struct RunManifest {
     pub stages: Vec<StageRecord>,
     pub bcd: Option<BcdProgress>,
     pub result: Option<RunResult>,
+    /// Per-entry-point backend statistics at seal time (including the
+    /// staged-execution `prefix_cache:*` counters). `None` on manifests
+    /// written before this field existed — format 1 stays readable.
+    pub stats: Option<BTreeMap<String, CallStatsDoc>>,
 }
 derive_serde!(RunManifest {
     format,
@@ -215,6 +250,7 @@ derive_serde!(RunManifest {
     stages,
     bcd,
     result,
+    stats,
 });
 
 impl RunManifest {
@@ -245,6 +281,7 @@ impl RunManifest {
             stages: Vec::new(),
             bcd: None,
             result: None,
+            stats: None,
         }
     }
 
@@ -316,7 +353,17 @@ mod tests {
 
     #[test]
     fn manifest_roundtrips_bit_exact() {
-        let m = sample();
+        let mut m = sample();
+        let mut stats = std::collections::BTreeMap::new();
+        stats.insert(
+            "m:eval_batch".to_string(),
+            CallStats { calls: 42, total_secs: 1.5, compile_secs: 0.0 },
+        );
+        stats.insert(
+            "prefix_cache:hit".to_string(),
+            CallStats { calls: 7, total_secs: 0.0, compile_secs: 0.0 },
+        );
+        m.stats = Some(stats_snapshot(&stats));
         let text = sd::to_string_pretty(&m);
         let back: RunManifest = sd::from_str(&text).unwrap();
         assert_eq!(back.run_id, m.run_id);
@@ -324,11 +371,24 @@ mod tests {
         assert_eq!(back.stages, m.stages);
         assert_eq!(back.bcd, m.bcd);
         assert_eq!(back.result, m.result);
+        assert_eq!(back.stats, m.stats);
+        assert_eq!(back.stats.as_ref().unwrap()["prefix_cache:hit"].calls, 7);
         // Full-range RNG words survive the JSON round trip exactly.
         let cur = back.bcd.as_ref().unwrap().cursor(m.b_start).unwrap();
         assert_eq!(cur.rng, [u64::MAX, 1, 2, 3]);
         assert_eq!(cur.b_ref, 2000);
         assert_eq!(cur.sweeps_done, 2);
+    }
+
+    #[test]
+    fn manifest_without_stats_field_still_parses() {
+        // Pre-stats format-1 documents lack the key entirely; it must
+        // deserialize as None, not fail.
+        let m = sample();
+        let text = sd::to_string_pretty(&m).replace("\"stats\"", "\"stats_from_the_future\"");
+        let back: RunManifest = sd::from_str(&text).unwrap();
+        assert_eq!(back.stats, None);
+        assert_eq!(back.run_id, m.run_id);
     }
 
     #[test]

@@ -27,8 +27,8 @@
 pub mod manifest;
 
 pub use manifest::{
-    BcdProgress, IterTrace, RunManifest, RunResult, StageRecord, COMPLETE, FAILED, RUNNING,
-    RUN_FORMAT,
+    stats_snapshot, BcdProgress, CallStatsDoc, IterTrace, RunManifest, RunResult, StageRecord,
+    COMPLETE, FAILED, RUNNING, RUN_FORMAT,
 };
 
 use crate::coordinator::bcd::SweepEvent;
@@ -230,26 +230,36 @@ impl RunStore {
         Ok(out)
     }
 
-    /// Garbage-collect run directories. Terminal runs (`complete` /
-    /// `failed`) beyond the `keep` most recent are removed; `all` also
-    /// removes non-terminal (resumable) runs. Returns the removed ids.
-    pub fn gc(&self, keep: usize, all: bool) -> Result<Vec<String>> {
+    /// The run ids [`Self::gc`] would remove, without touching the disk —
+    /// the `cdnl runs gc --dry-run` preview. Terminal runs (`complete` /
+    /// `failed`) beyond the `keep` most recent are reclaimable; `all` also
+    /// marks non-terminal (resumable) runs.
+    pub fn gc_candidates(&self, keep: usize, all: bool) -> Result<Vec<String>> {
         let runs = self.list()?; // newest first
-        let mut removed = Vec::new();
+        let mut doomed = Vec::new();
         let mut kept_terminal = 0usize;
         for m in runs {
             let terminal = m.status == COMPLETE || m.status == FAILED;
-            let doomed = if terminal {
+            let reclaim = if terminal {
                 kept_terminal += 1;
                 kept_terminal > keep
             } else {
                 all
             };
-            if doomed {
-                std::fs::remove_dir_all(self.root.join(&m.run_id))
-                    .with_context(|| format!("removing run {}", m.run_id))?;
-                removed.push(m.run_id);
+            if reclaim {
+                doomed.push(m.run_id);
             }
+        }
+        Ok(doomed)
+    }
+
+    /// Garbage-collect run directories (the policy of
+    /// [`Self::gc_candidates`], applied). Returns the removed ids.
+    pub fn gc(&self, keep: usize, all: bool) -> Result<Vec<String>> {
+        let removed = self.gc_candidates(keep, all)?;
+        for id in &removed {
+            std::fs::remove_dir_all(self.root.join(id))
+                .with_context(|| format!("removing run {id}"))?;
         }
         Ok(removed)
     }
@@ -365,9 +375,14 @@ mod tests {
         }
         let listed = store.list().unwrap();
         assert_eq!(listed[0].run_id, ids[3], "suffix tie-break must put newest first");
+        // Dry run: candidates are reported but nothing is deleted.
+        let preview = store.gc_candidates(1, false).unwrap();
+        assert_eq!(preview.len(), 2);
+        assert_eq!(store.list().unwrap().len(), 4, "dry run must not delete");
         // keep=1: of the 3 terminal runs the newest survives; the running
-        // run (ids[3]) is spared.
+        // run (ids[3]) is spared. The real gc removes exactly the preview.
         let removed = store.gc(1, false).unwrap();
+        assert_eq!(removed, preview, "gc must remove exactly what the dry run listed");
         assert_eq!(removed.len(), 2);
         assert!(!removed.contains(&ids[3]), "gc removed a resumable run");
         assert!(!removed.contains(&ids[2]), "gc removed the newest terminal run");

@@ -10,6 +10,14 @@
 //! Backends are `Send + Sync`: the parallel BCD trial scan
 //! ([`crate::coordinator::trials::scan_trials`]) shares one backend across a
 //! scoped worker pool.
+//!
+//! Backends that know their model's layer structure can additionally opt
+//! into **staged execution** ([`Backend::segments`] /
+//! [`Backend::forward_prefix`] / [`Backend::forward_from`] /
+//! [`Backend::eval_from`]): a trial whose mask differs from the iteration's
+//! base mask only from layer `l` onward resumes from a cached boundary
+//! activation instead of re-running the whole network, bit-identically to a
+//! full forward (DESIGN.md §8).
 
 use crate::runtime::manifest::{Manifest, ModelInfo};
 use crate::tensor::{Tensor, TensorI32};
@@ -105,6 +113,97 @@ pub trait Backend: Send + Sync {
     /// path: every input was uploaded once and is re-used across calls).
     fn call_b(&self, model_key: &str, fn_name: &str, inputs: &[&DeviceBuf]) -> Result<Vec<Tensor>>;
 
+    // ---- staged execution (DESIGN.md §8) ----------------------------------
+    //
+    // A backend that knows its model's layer structure can resume a forward
+    // pass from a cached intermediate activation instead of re-running the
+    // whole network. Boundary `b` is the activation emitted by mask layer
+    // `b` (manifest `mask_layers` order); a hypothesis whose first dirty
+    // layer is `l >= 1` can resume from any boundary `<= l - 1`. The
+    // incremental results must be **bit-identical** to a full forward — the
+    // replay-merge determinism contract of the trial scan depends on it.
+
+    /// Number of resumable segment boundaries for `model_key`. `0` (the
+    /// default) means staged execution is unsupported and callers must fall
+    /// back to full forwards — the graceful degradation path the PJRT
+    /// engine takes, since an AOT HLO artifact is one opaque executable.
+    fn segments(&self, _model_key: &str) -> usize {
+        0
+    }
+
+    /// Compute the boundary-`segment` activations of one batch under
+    /// (params, mask). The returned handle is only meaningful to this
+    /// backend's [`Backend::forward_from`] / [`Backend::eval_from`].
+    fn forward_prefix(
+        &self,
+        model_key: &str,
+        segment: usize,
+        _params: &DeviceBuf,
+        _mask: &DeviceBuf,
+        _x: &DeviceBuf,
+    ) -> Result<DeviceBuf> {
+        Err(anyhow!(
+            "backend {}: staged execution unsupported ({model_key}:forward_prefix@{segment})",
+            self.name()
+        ))
+    }
+
+    /// Resume the forward pass from boundary `segment`: `acts` comes from
+    /// [`Backend::forward_prefix`], `mask_suffix` covers the mask entries
+    /// of every layer *after* `segment` (`mask[mask_layers[segment + 1]
+    /// .offset..]`). Returns logits `[B, K]`, bit-identical to a full
+    /// forward whose mask agrees with the prefix that produced `acts`.
+    fn forward_from(
+        &self,
+        model_key: &str,
+        segment: usize,
+        _acts: &DeviceBuf,
+        _params: &DeviceBuf,
+        _mask_suffix: &DeviceBuf,
+    ) -> Result<Tensor> {
+        Err(anyhow!(
+            "backend {}: staged execution unsupported ({model_key}:forward_from@{segment})",
+            self.name()
+        ))
+    }
+
+    /// [`Backend::forward_from`] fused with the `eval_batch` epilogue:
+    /// returns `[loss, correct]` scalars computed by the exact same scoring
+    /// code as `eval_batch`, so incremental and full trial scoring agree
+    /// bit for bit.
+    fn eval_from(
+        &self,
+        model_key: &str,
+        segment: usize,
+        _acts: &DeviceBuf,
+        _params: &DeviceBuf,
+        _mask_suffix: &DeviceBuf,
+        _y: &DeviceBuf,
+    ) -> Result<Vec<Tensor>> {
+        Err(anyhow!(
+            "backend {}: staged execution unsupported ({model_key}:eval_from@{segment})",
+            self.name()
+        ))
+    }
+
+    /// Size in bytes of one cached boundary-`segment` activation for a
+    /// batch of `batch` examples — the evaluator's cache accounting for
+    /// handles this backend returns from [`Backend::forward_prefix`]. The
+    /// default assumes one f32 per mask-layer unit (the reference layout);
+    /// a backend whose handles carry more (pre-activations, padding, wider
+    /// dtypes) must override so `bcd.cache_mb` keeps meaning bytes.
+    fn prefix_entry_bytes(&self, model_key: &str, segment: usize, batch: usize) -> usize {
+        self.model(model_key)
+            .ok()
+            .and_then(|m| m.mask_layers.get(segment))
+            .map(|e| 4 * batch * e.size)
+            .unwrap_or(0)
+    }
+
+    /// Bump a named counter in this backend's statistics (prefix-cache
+    /// hits/misses/evictions and friends — §Perf). Default: no-op.
+    fn bump_stat(&self, _key: &str, _n: u64) {}
+
     /// Snapshot of per-entry-point execution statistics.
     fn stats(&self) -> BTreeMap<String, CallStats>;
 
@@ -167,6 +266,13 @@ impl StatsRecorder {
         stats.entry(key.to_string()).or_default().compile_secs += secs;
     }
 
+    /// Bump a pure counter by `n` (no wall time): cache hit/miss/eviction
+    /// tallies ride in `calls` with zero seconds.
+    pub fn bump(&self, key: &str, n: u64) {
+        let mut stats = self.stats.lock().unwrap();
+        stats.entry(key.to_string()).or_default().calls += n;
+    }
+
     pub fn snapshot(&self) -> BTreeMap<String, CallStats> {
         self.stats.lock().unwrap().clone()
     }
@@ -195,6 +301,59 @@ mod tests {
         assert_eq!(s.calls, 2);
         assert!(s.compile_secs > 1.0);
         assert!(format_stats_table(&snap).contains("m:f"));
+    }
+
+    #[test]
+    fn bump_counts_without_time() {
+        let r = StatsRecorder::new();
+        r.bump("prefix_cache:hit", 3);
+        r.bump("prefix_cache:hit", 2);
+        let snap = r.snapshot();
+        let s = snap.get("prefix_cache:hit").unwrap();
+        assert_eq!(s.calls, 5);
+        assert_eq!(s.total_secs, 0.0);
+    }
+
+    #[test]
+    fn staged_execution_defaults_are_unsupported() {
+        // A minimal backend relying on every staged-execution default.
+        struct Stub(Manifest);
+        impl Backend for Stub {
+            fn name(&self) -> &'static str {
+                "stub"
+            }
+            fn manifest(&self) -> &Manifest {
+                &self.0
+            }
+            fn upload_f32(&self, d: &[f32], _dims: &[usize]) -> Result<DeviceBuf> {
+                Ok(DeviceBuf::new(d.to_vec()))
+            }
+            fn upload_i32(&self, d: &[i32], _dims: &[usize]) -> Result<DeviceBuf> {
+                Ok(DeviceBuf::new(d.to_vec()))
+            }
+            fn call(&self, _m: &str, _f: &str, _i: &[HostArg]) -> Result<Vec<Tensor>> {
+                Ok(vec![])
+            }
+            fn call_b(&self, _m: &str, _f: &str, _i: &[&DeviceBuf]) -> Result<Vec<Tensor>> {
+                Ok(vec![])
+            }
+            fn stats(&self) -> BTreeMap<String, CallStats> {
+                BTreeMap::new()
+            }
+        }
+        let stub = Stub(Manifest {
+            batch: 1,
+            kernel_impl: "stub".into(),
+            models: BTreeMap::new(),
+            dir: std::path::PathBuf::new(),
+        });
+        assert_eq!(stub.segments("m"), 0);
+        let buf = stub.upload_f32(&[1.0], &[1]).unwrap();
+        let err = stub.forward_prefix("m", 0, &buf, &buf, &buf).unwrap_err();
+        assert!(err.to_string().contains("unsupported"), "{err}");
+        assert!(stub.forward_from("m", 0, &buf, &buf, &buf).is_err());
+        assert!(stub.eval_from("m", 0, &buf, &buf, &buf, &buf).is_err());
+        stub.bump_stat("x", 1); // default no-op must not panic
     }
 
     #[test]

@@ -208,6 +208,21 @@ impl Backend for Engine {
         })
     }
 
+    /// Staged execution is deliberately unsupported here: an AOT HLO
+    /// artifact is one opaque executable with no addressable layer
+    /// boundaries. Returning 0 is the graceful full-forward fallback — the
+    /// evaluator sees it and routes every trial through `eval_batch`
+    /// (DESIGN.md §8), so PJRT runs behave exactly as before the staged
+    /// refactor. (Per-boundary artifacts would need aot.py to emit prefix/
+    /// suffix entry points; see ROADMAP.)
+    fn segments(&self, _model_key: &str) -> usize {
+        0
+    }
+
+    fn bump_stat(&self, key: &str, n: u64) {
+        self.stats.bump(key, n)
+    }
+
     /// Snapshot of per-entry-point execution statistics.
     fn stats(&self) -> BTreeMap<String, CallStats> {
         self.stats.snapshot()

@@ -336,6 +336,37 @@ impl RefBackend {
             other => bail!("reference backend: model {key}: no entry point {other:?}"),
         }
     }
+
+    /// Validate the boundary-0 resume arguments shared by
+    /// [`Backend::forward_from`] and [`Backend::eval_from`]: returns
+    /// `(model, params, layer-1 mask, boundary-0 activations, batch)`.
+    fn staged_args<'a>(
+        &self,
+        model_key: &str,
+        fn_name: &str,
+        segment: usize,
+        acts: &'a DeviceBuf,
+        params: &'a DeviceBuf,
+        mask_suffix: &'a DeviceBuf,
+    ) -> Result<(&RefModel, &'a [f32], &'a [f32], &'a [f32], usize)> {
+        let model = self.model_impl(model_key)?;
+        if segment != 0 {
+            bail!("{model_key}:{fn_name}: no segment boundary {segment} (this model has 1)");
+        }
+        let p = ref_f32(params, "params")?;
+        let m2 = ref_f32(mask_suffix, "mask_suffix")?;
+        let a1 = ref_f32(acts, "acts")?;
+        check_len(model_key, fn_name, "params", p.len(), model.layout.param_size())?;
+        check_len(model_key, fn_name, "mask_suffix", m2.len(), model.layout.h2)?;
+        let h1 = model.layout.h1;
+        if a1.is_empty() || a1.len() % h1 != 0 {
+            bail!(
+                "{model_key}:{fn_name}: input \"acts\" has {} elements, expects a multiple of {h1}",
+                a1.len()
+            );
+        }
+        Ok((model, p, m2, a1, a1.len() / h1))
+    }
 }
 
 impl Backend for RefBackend {
@@ -384,12 +415,102 @@ impl Backend for RefBackend {
             .timed(&format!("{model_key}:{fn_name}"), || self.execute(model_key, fn_name, &args))
     }
 
+    /// One resumable boundary per model: `a1`, the activation of mask
+    /// layer 0. (Mask layer 1 feeds the output head directly, so no
+    /// hypothesis has a first dirty layer past 1 — a second boundary would
+    /// never be consulted.)
+    fn segments(&self, model_key: &str) -> usize {
+        usize::from(self.models.contains_key(model_key))
+    }
+
+    fn forward_prefix(
+        &self,
+        model_key: &str,
+        segment: usize,
+        params: &DeviceBuf,
+        mask: &DeviceBuf,
+        x: &DeviceBuf,
+    ) -> Result<DeviceBuf> {
+        let model = self.model_impl(model_key)?;
+        if segment != 0 {
+            bail!("{model_key}:forward_prefix: no segment boundary {segment} (this model has 1)");
+        }
+        let p = ref_f32(params, "params")?;
+        let m = ref_f32(mask, "mask")?;
+        let xv = ref_f32(x, "x")?;
+        check_len(model_key, "forward_prefix", "params", p.len(), model.layout.param_size())?;
+        check_len(model_key, "forward_prefix", "mask", m.len(), model.layout.mask_size())?;
+        let bsz = batch_of(model, model_key, "forward_prefix", xv.len())?;
+        self.stats.timed(&format!("{model_key}:forward_prefix"), || {
+            let head =
+                forward_head(&model.layout, model.poly, p, &m[..model.layout.h1], xv, bsz);
+            Ok(DeviceBuf::new(RefBuf::F32(head.a1)))
+        })
+    }
+
+    fn forward_from(
+        &self,
+        model_key: &str,
+        segment: usize,
+        acts: &DeviceBuf,
+        params: &DeviceBuf,
+        mask_suffix: &DeviceBuf,
+    ) -> Result<Tensor> {
+        let (model, p, m2, a1, bsz) =
+            self.staged_args(model_key, "forward_from", segment, acts, params, mask_suffix)?;
+        self.stats.timed(&format!("{model_key}:forward_from"), || {
+            let tail = forward_tail(&model.layout, model.poly, p, m2, a1, bsz);
+            Ok(Tensor::new(vec![bsz, model.layout.k], tail.logits))
+        })
+    }
+
+    fn eval_from(
+        &self,
+        model_key: &str,
+        segment: usize,
+        acts: &DeviceBuf,
+        params: &DeviceBuf,
+        mask_suffix: &DeviceBuf,
+        y: &DeviceBuf,
+    ) -> Result<Vec<Tensor>> {
+        let (model, p, m2, a1, bsz) =
+            self.staged_args(model_key, "eval_from", segment, acts, params, mask_suffix)?;
+        let yv = ref_i32(y, "y")?;
+        check_len(model_key, "eval_from", "y", yv.len(), bsz)?;
+        self.stats.timed(&format!("{model_key}:eval_from"), || {
+            let tail = forward_tail(&model.layout, model.poly, p, m2, a1, bsz);
+            let (loss, correct, _) = softmax_ce(&tail.logits, yv, model.layout.k);
+            Ok(vec![Tensor::scalar(loss), Tensor::scalar(correct as f32)])
+        })
+    }
+
+    fn bump_stat(&self, key: &str, n: u64) {
+        self.stats.bump(key, n)
+    }
+
     fn stats(&self) -> BTreeMap<String, CallStats> {
         self.stats.snapshot()
     }
 }
 
 // ---- argument plumbing ----------------------------------------------------
+
+/// View a staged-execution device buffer as f32 (typed trait methods take
+/// individual buffers, not `ArgView` lists).
+fn ref_f32<'a>(buf: &'a DeviceBuf, name: &str) -> Result<&'a [f32]> {
+    match buf.downcast::<RefBuf>()? {
+        RefBuf::F32(v) => Ok(v.as_slice()),
+        RefBuf::I32(_) => bail!("staged input {name:?}: expected f32, got i32"),
+    }
+}
+
+/// View a staged-execution device buffer as i32.
+fn ref_i32<'a>(buf: &'a DeviceBuf, name: &str) -> Result<&'a [i32]> {
+    match buf.downcast::<RefBuf>()? {
+        RefBuf::I32(v) => Ok(v.as_slice()),
+        RefBuf::F32(_) => bail!("staged input {name:?}: expected i32, got f32"),
+    }
+}
 
 fn check_arity(key: &str, fn_name: &str, args: &[ArgView], want: usize) -> Result<()> {
     if args.len() != want {
@@ -541,6 +662,55 @@ struct ForwardCache {
     logits: Vec<f32>,
 }
 
+/// Activations up to segment boundary 0 (`a1`, the output of mask layer 0).
+struct HeadCache {
+    z1: Vec<f32>,
+    a1: Vec<f32>,
+}
+
+/// Everything past boundary 0: mask layer 1 plus the output head.
+struct TailCache {
+    z2: Vec<f32>,
+    a2: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+/// The forward prefix: input -> boundary-0 activation. `forward` and
+/// `forward_prefix` both call this, so a cached prefix is bit-identical to
+/// the one a full forward would compute (the staged-execution contract,
+/// DESIGN.md §8).
+fn forward_head(
+    layout: &Layout,
+    poly: bool,
+    p: &[f32],
+    m1: &[f32],
+    x: &[f32],
+    bsz: usize,
+) -> HeadCache {
+    let [w1, b1, _w2, _b2, _w3, _b3] = layout.split(p);
+    let z1 = affine(x, w1, b1, bsz, layout.d_in, layout.h1);
+    let a1 = act(&z1, m1, bsz, layout.h1, poly);
+    HeadCache { z1, a1 }
+}
+
+/// The forward tail: boundary-0 activation -> logits, under the layer-1
+/// mask `m2`. Shared by `forward`, `forward_from` and `eval_from` for the
+/// same bit-identity-by-construction reason as [`forward_head`].
+fn forward_tail(
+    layout: &Layout,
+    poly: bool,
+    p: &[f32],
+    m2: &[f32],
+    a1: &[f32],
+    bsz: usize,
+) -> TailCache {
+    let [_w1, _b1, w2, b2, w3, b3] = layout.split(p);
+    let z2 = affine(a1, w2, b2, bsz, layout.h1, layout.h2);
+    let a2 = act(&z2, m2, bsz, layout.h2, poly);
+    let logits = affine(&a2, w3, b3, bsz, layout.h2, layout.k);
+    TailCache { z2, a2, logits }
+}
+
 fn forward(
     layout: &Layout,
     poly: bool,
@@ -549,14 +719,10 @@ fn forward(
     x: &[f32],
     bsz: usize,
 ) -> ForwardCache {
-    let [w1, b1, w2, b2, w3, b3] = layout.split(p);
     let (m1, m2) = mask.split_at(layout.h1);
-    let z1 = affine(x, w1, b1, bsz, layout.d_in, layout.h1);
-    let a1 = act(&z1, m1, bsz, layout.h1, poly);
-    let z2 = affine(&a1, w2, b2, bsz, layout.h1, layout.h2);
-    let a2 = act(&z2, m2, bsz, layout.h2, poly);
-    let logits = affine(&a2, w3, b3, bsz, layout.h2, layout.k);
-    ForwardCache { z1, a1, z2, a2, logits }
+    let head = forward_head(layout, poly, p, m1, x, bsz);
+    let tail = forward_tail(layout, poly, p, m2, &head.a1, bsz);
+    ForwardCache { z1: head.z1, a1: head.a1, z2: tail.z2, a2: tail.a2, logits: tail.logits }
 }
 
 /// Mean cross-entropy + correct count + `dL/dlogits` for logits `[bsz, k]`.
@@ -949,6 +1115,64 @@ mod tests {
         let after: f32 = new_alphas.data.iter().sum();
         assert!(after < before, "l1 pressure failed: {after} >= {before}");
         assert!(new_alphas.data.iter().all(|&a| (0.0..=1.0).contains(&a)));
+    }
+
+    #[test]
+    fn staged_forward_matches_full_bitwise() {
+        let be = tiny_backend();
+        let info = be.model("tiny").unwrap().clone();
+        let seed = TensorI32::scalar(9);
+        let p = host_call(&be, "init", &[HostArg::I32(&seed)]).remove(0);
+        // Hypothesis differs from the all-ones base mask only in layer 1.
+        let h1 = info.mask_layers[0].size;
+        let mut hyp = vec![1.0f32; info.mask_size];
+        hyp[h1 + 1] = 0.0;
+        hyp[h1 + 3] = 0.0;
+        let mut x = Tensor::zeros(vec![4, 1, 2, 2]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 7 % 13) as f32 - 6.0) / 6.0;
+        }
+        let hyp_t = Tensor::new(vec![hyp.len()], hyp.clone());
+        let full = host_call(
+            &be,
+            "forward",
+            &[HostArg::F32(&p), HostArg::F32(&hyp_t), HostArg::F32(&x)],
+        )
+        .remove(0);
+
+        assert_eq!(be.segments("tiny"), 1);
+        assert_eq!(be.segments("no_such_model"), 0);
+        let pb = be.upload_f32(&p.data, &p.shape).unwrap();
+        let base = vec![1.0f32; info.mask_size];
+        let mb = be.upload_f32(&base, &[base.len()]).unwrap();
+        let xb = be.upload_f32(&x.data, &x.shape).unwrap();
+        let acts = be.forward_prefix("tiny", 0, &pb, &mb, &xb).unwrap();
+        let sb = be.upload_f32(&hyp[h1..], &[info.mask_size - h1]).unwrap();
+        let inc = be.forward_from("tiny", 0, &acts, &pb, &sb).unwrap();
+        assert_eq!(inc.shape, full.shape);
+        assert_eq!(inc.data, full.data, "incremental logits must be bit-identical");
+
+        // eval_from agrees with eval_batch exactly (same scoring code).
+        let y = TensorI32::new(vec![4], vec![0, 1, 2, 1]);
+        let yb = be.upload_i32(&y.data, &y.shape).unwrap();
+        let hb = be.upload_f32(&hyp, &[hyp.len()]).unwrap();
+        let full_eval = be.call_b("tiny", "eval_batch", &[&pb, &hb, &xb, &yb]).unwrap();
+        let inc_eval = be.eval_from("tiny", 0, &acts, &pb, &sb, &yb).unwrap();
+        assert_eq!(inc_eval[0].item(), full_eval[0].item());
+        assert_eq!(inc_eval[1].item(), full_eval[1].item());
+
+        // Staged calls are recorded per entry point.
+        let stats = be.stats();
+        assert!(stats.contains_key("tiny:forward_prefix"));
+        assert!(stats.contains_key("tiny:forward_from"));
+        assert!(stats.contains_key("tiny:eval_from"));
+        be.bump_stat("prefix_cache:hit", 2);
+        assert_eq!(be.stats().get("prefix_cache:hit").unwrap().calls, 2);
+
+        // Bad boundary / suffix shapes fail readably, not numerically.
+        assert!(be.forward_prefix("tiny", 1, &pb, &mb, &xb).is_err());
+        assert!(be.forward_from("tiny", 1, &acts, &pb, &sb).is_err());
+        assert!(be.forward_from("tiny", 0, &acts, &pb, &mb).is_err(), "full mask is not a suffix");
     }
 
     #[test]

@@ -105,6 +105,54 @@ impl<'e> Session<'e> {
         Ok(StepOut { loss: outs[0].item(), correct: outs[1].item() })
     }
 
+    /// Number of resumable segment boundaries of this model's forward pass
+    /// (0 = the backend only runs full forwards; see
+    /// [`crate::runtime::backend::Backend::segments`]).
+    pub fn segments(&self) -> usize {
+        self.backend.segments(&self.key)
+    }
+
+    /// Boundary-`segment` activations of one cached batch under
+    /// (params, mask) — the prefix the staged trial path caches and reuses
+    /// (DESIGN.md §8).
+    pub fn forward_prefix_b(
+        &self,
+        segment: usize,
+        params: &DeviceBuf,
+        mask: &DeviceBuf,
+        x: &DeviceBuf,
+    ) -> Result<DeviceBuf> {
+        self.backend.forward_prefix(&self.key, segment, params, mask, x)
+    }
+
+    /// Resume a forward pass from boundary `segment` -> logits `[B, K]`.
+    /// `mask_suffix` covers the mask layers after the boundary.
+    pub fn forward_from_b(
+        &self,
+        segment: usize,
+        acts: &DeviceBuf,
+        params: &DeviceBuf,
+        mask_suffix: &DeviceBuf,
+    ) -> Result<Tensor> {
+        self.backend.forward_from(&self.key, segment, acts, params, mask_suffix)
+    }
+
+    /// Resume + score one batch from boundary `segment` (the staged twin of
+    /// [`Self::eval_batch_b`], bit-identical by contract).
+    pub fn eval_from_b(
+        &self,
+        segment: usize,
+        acts: &DeviceBuf,
+        params: &DeviceBuf,
+        mask_suffix: &DeviceBuf,
+        y: &DeviceBuf,
+    ) -> Result<StepOut> {
+        let outs = self
+            .backend
+            .eval_from(&self.key, segment, acts, params, mask_suffix, y)?;
+        Ok(StepOut { loss: outs[0].item(), correct: outs[1].item() })
+    }
+
     /// Upload a flat f32 slice as a device buffer.
     pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<DeviceBuf> {
         self.backend.upload_f32(data, shape)

@@ -1,0 +1,232 @@
+//! Staged execution (prefix-activation reuse) — the incremental-vs-full
+//! determinism contract, end-to-end on the reference backend (DESIGN.md §8).
+//!
+//! The acceptance bar: the same BCD configuration run with the prefix
+//! cache disabled (`bcd.cache_mb = 0`, every trial a full forward) and
+//! enabled (`> 0`, staged forwards where the delta allows), across worker
+//! counts, must produce identical `ScanOutcome`s, `IterRecord`s, and
+//! run-manifest fingerprints. Debug builds additionally assert-check every
+//! staged batch against a full forward inside the evaluator itself.
+
+use cdnl::config::{BcdConfig, Experiment, Granularity};
+use cdnl::coordinator::bcd::run_bcd;
+use cdnl::coordinator::eval::{Evaluator, TrialEval};
+use cdnl::coordinator::trials::{scan_trials, BlockSampler, ScanOutcome};
+use cdnl::data::{synth, Dataset};
+use cdnl::model::MaskDelta;
+use cdnl::runstore::RunManifest;
+use cdnl::runtime::{RefBackend, Session};
+use cdnl::util::prng::Rng;
+
+const MODEL: &str = "resnet_16x16_c10";
+
+fn backend() -> RefBackend {
+    RefBackend::standard()
+}
+
+fn small_synth10() -> Dataset {
+    let (train, _) = synth::generate(&synth::SynthSpec {
+        train_n: 96,
+        test_n: 16,
+        ..synth::SYNTH10
+    });
+    train
+}
+
+fn scan_with(cache_mb: usize, workers: usize, drc: usize, rt: usize, adt: f64) -> ScanOutcome {
+    let be = backend();
+    let sess = Session::new(&be, MODEL).unwrap();
+    let ds = small_synth10();
+    let st = sess.init_state(42).unwrap();
+    let ev = Evaluator::with_cache(&sess, &ds, 2, cache_mb).unwrap();
+    let params = ev.upload_params(&st.params).unwrap();
+    let base = ev.accuracy(&params, st.mask.dense()).unwrap();
+    let sampler = BlockSampler::new(Granularity::Pixel, sess.info());
+    let mut rng = Rng::new(0xFACE);
+    scan_trials(&ev, &params, &st.mask, &sampler, drc, rt, adt, base, &mut rng, workers).unwrap()
+}
+
+#[test]
+fn scan_outcome_identical_with_and_without_cache() {
+    // Low DRC maximizes staged-path coverage (hypotheses confined to mask
+    // layer 1); the higher-DRC and early-accept configs exercise fallback
+    // and the bound/accept interplay.
+    for &(drc, rt, adt) in &[(1usize, 10usize, -1000.0f64), (4, 8, 0.5), (24, 8, 1000.0)] {
+        let reference = scan_with(0, 1, drc, rt, adt);
+        for &cache in &[0usize, 16] {
+            for &w in &[1usize, 4] {
+                let out = scan_with(cache, w, drc, rt, adt);
+                assert_eq!(
+                    reference, out,
+                    "scan diverged at cache={cache} workers={w} drc={drc} adt={adt}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bcd_bit_identical_across_cache_and_workers() {
+    let be = backend();
+    let sess = Session::new(&be, MODEL).unwrap();
+    let ds = small_synth10();
+    let total = sess.init_state(1).unwrap().budget();
+    let target = total - 60;
+
+    let run = |cache_mb: usize, workers: usize| {
+        let mut st = sess.init_state(1).unwrap();
+        let cfg = BcdConfig {
+            drc: 12, // small DRC: many hypotheses stay inside mask layer 1
+            rt: 6,
+            adt: 0.3,
+            finetune_steps: 2,
+            finetune_lr: 1e-3,
+            proxy_batches: 2,
+            seed: 7,
+            workers,
+            cache_mb,
+            ..Default::default()
+        };
+        let out = run_bcd(&sess, &mut st, &ds, target, &cfg, 0).unwrap();
+        (st, out)
+    };
+    // Ground truth: cache disabled, sequential scan.
+    let (st0, out0) = run(0, 1);
+    for &(cache, workers) in &[(16usize, 1usize), (0, 4), (16, 4)] {
+        let (st, out) = run(cache, workers);
+        assert_eq!(
+            st0.mask.dense(),
+            st.mask.dense(),
+            "mask diverged (cache={cache}, workers={workers})"
+        );
+        assert_eq!(
+            st0.params.data, st.params.data,
+            "params diverged (cache={cache}, workers={workers})"
+        );
+        assert_eq!(out0.iterations.len(), out.iterations.len());
+        for (a, b) in out0.iterations.iter().zip(&out.iterations) {
+            assert_eq!(a.t, b.t);
+            assert_eq!(a.budget_after, b.budget_after);
+            assert_eq!(a.base_acc, b.base_acc);
+            assert_eq!(a.chosen_dacc, b.chosen_dacc);
+            assert_eq!(a.trials_evaluated, b.trials_evaluated);
+            assert_eq!(a.trials_bounded, b.trials_bounded);
+            assert_eq!(a.early_accept, b.early_accept);
+            assert_eq!(a.finetune.steps, b.finetune.steps);
+            assert_eq!(a.finetune.first_loss, b.finetune.first_loss);
+            assert_eq!(a.finetune.last_loss, b.finetune.last_loss);
+            assert_eq!(a.finetune.mean_acc, b.finetune.mean_acc);
+        }
+    }
+}
+
+#[test]
+fn run_manifest_fingerprint_ignores_cache_and_workers() {
+    let mut a = Experiment::default();
+    a.apply("bcd.cache_mb", "0").unwrap();
+    a.apply("bcd.workers", "1").unwrap();
+    let mut b = Experiment::default();
+    b.apply("bcd.cache_mb", "128").unwrap();
+    b.apply("bcd.workers", "4").unwrap();
+    let ma = RunManifest::new("bcd", &a, "reference", 200, 100);
+    let mb = RunManifest::new("bcd", &b, "reference", 200, 100);
+    assert_eq!(
+        ma.config_fingerprint, mb.config_fingerprint,
+        "cache_mb/workers are throughput knobs and must not shift run identity"
+    );
+    // A semantic knob still moves the fingerprint.
+    let mut c = Experiment::default();
+    c.apply("bcd.rt", "99").unwrap();
+    let mc = RunManifest::new("bcd", &c, "reference", 200, 100);
+    assert_ne!(mc.config_fingerprint, ma.config_fingerprint);
+}
+
+#[test]
+fn staged_partial_batch_and_direct_delta_scoring() {
+    let be = backend();
+    let sess = Session::new(&be, MODEL).unwrap();
+    // 21 examples with batch 16: the second batch carries a padded tail,
+    // so the staged path must also reproduce the valid-prefix rescoring.
+    let mut rng = Rng::new(3);
+    let n = 21usize;
+    let ie = 3 * 16 * 16;
+    let ds = Dataset {
+        name: "tiny".into(),
+        num_classes: 10,
+        channels: 3,
+        image_size: 16,
+        images: (0..n * ie).map(|_| rng.normal()).collect(),
+        labels: (0..n).map(|i| (i % 10) as i32).collect(),
+    };
+    let st = sess.init_state(5).unwrap();
+    let ev_full = Evaluator::new(&sess, &ds, usize::MAX).unwrap();
+    let ev = Evaluator::with_cache(&sess, &ds, usize::MAX, 16).unwrap();
+    assert!(ev.staged_enabled());
+    assert!(!ev_full.staged_enabled());
+    let params = ev.upload_params(&st.params).unwrap();
+    ev.begin_iteration(&st.mask).unwrap();
+
+    // Layer-1-only deltas take the staged path; a delta touching layer 0
+    // (anywhere) falls back to full forwards. All must score identically.
+    let l1 = sess.info().mask_layers[1].offset;
+    let mut scratch = Vec::new();
+    for delta in [
+        MaskDelta::new(vec![l1, l1 + 3, l1 + 10]),
+        MaskDelta::new(vec![l1 + 1]),
+        MaskDelta::new(vec![0, 5]),
+        MaskDelta::new(vec![l1 - 1, l1 + 1]),
+    ] {
+        let staged = ev
+            .eval_trial_delta(&params, &st.mask, &delta, 0.0, &mut scratch)
+            .unwrap();
+        st.mask.hypothesis_into(delta.indices(), &mut scratch);
+        let full = ev_full.eval_trial(&params, &scratch, 0.0).unwrap();
+        assert_eq!(staged, full, "delta {:?}", delta.indices());
+    }
+    let (hits, misses, _) = ev.cache_counters();
+    assert!(misses >= 2, "staged deltas must have populated the cache (misses={misses})");
+    assert!(hits >= 2, "the second staged delta must hit the cache (hits={hits})");
+
+    // The early-exit bound cuts identically on the staged path.
+    let delta = MaskDelta::new(vec![l1 + 2]);
+    let cut = ev
+        .eval_trial_delta(&params, &st.mask, &delta, 200.0, &mut scratch)
+        .unwrap();
+    assert_eq!(cut, TrialEval::Bounded, "unreachable floor must bound");
+}
+
+#[test]
+fn prefix_cache_lru_eviction_keeps_results_exact() {
+    let be = backend();
+    let sess = Session::new(&be, MODEL).unwrap();
+    let ds = small_synth10(); // 96 examples -> 6 full batches of 16
+    let st = sess.init_state(9).unwrap();
+    // Budget of exactly ONE boundary-0 entry; with 4 eval batches rotating
+    // through it, the cache thrashes — results must not care.
+    let entry = 4 * sess.batch * sess.info().mask_layers[0].size;
+    let ev = Evaluator::with_cache_bytes(&sess, &ds, 4, entry).unwrap();
+    assert!(ev.staged_enabled());
+    let ev_full = Evaluator::new(&sess, &ds, 4).unwrap();
+    let params = ev.upload_params(&st.params).unwrap();
+    ev.begin_iteration(&st.mask).unwrap();
+    let l1 = sess.info().mask_layers[1].offset;
+    let mut scratch = Vec::new();
+    for k in 0..3 {
+        let delta = MaskDelta::new(vec![l1 + k]);
+        let staged = ev
+            .eval_trial_delta(&params, &st.mask, &delta, 0.0, &mut scratch)
+            .unwrap();
+        st.mask.hypothesis_into(delta.indices(), &mut scratch);
+        let full = ev_full.eval_trial(&params, &scratch, 0.0).unwrap();
+        assert_eq!(staged, full, "eviction must never change results (k={k})");
+    }
+    let (hits, misses, evictions) = ev.cache_counters();
+    assert_eq!(hits, 0, "capacity 1 with 4 rotating batches can never hit");
+    assert!(
+        evictions >= 3,
+        "expected LRU thrashing: {evictions} evictions ({misses} misses)"
+    );
+    // A budget too small for even one entry disables staging cleanly.
+    let tiny = Evaluator::with_cache_bytes(&sess, &ds, 4, entry - 1).unwrap();
+    assert!(!tiny.staged_enabled());
+}

@@ -5,7 +5,7 @@
 //! generators + shrinking, DESIGN.md §0's proptest substitute.
 
 use cdnl::methods::{senet::allocate_budget, top_k_mask};
-use cdnl::model::Mask;
+use cdnl::model::{Mask, MaskDelta};
 use cdnl::util::json;
 use cdnl::util::prng::Rng;
 use cdnl::util::prop::check;
@@ -102,6 +102,134 @@ fn prop_hypothesis_matches_apply() {
             applied.apply_removal(&removed).unwrap();
             if scratch != applied.dense() {
                 return Err("hypothesis dense != applied dense".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// MaskDelta apply+revert restores the base mask EXACTLY: dense values,
+/// the present set, and the position index. Observable from outside via
+/// dense(), the invariant checker, and — the part that actually matters
+/// for determinism — identical sampling behavior after the round trip.
+#[test]
+fn prop_mask_delta_roundtrip_exact() {
+    check(
+        0xDE17A,
+        60,
+        |r| {
+            let size = r.usize_below(200) + 8;
+            let pre_removed = r.usize_below(size / 2);
+            let k = r.usize_below((size - pre_removed).min(24)) + 1;
+            (size, (pre_removed, k))
+        },
+        |&(size, (pre_removed, k))| {
+            let mut rng = Rng::new(size as u64 * 131 + k as u64);
+            let mut base = Mask::full(size);
+            for _ in 0..pre_removed {
+                let pick = base.sample_present(&mut rng, 1)[0];
+                base.remove(pick).map_err(|e| e.to_string())?;
+            }
+            if k > base.count() {
+                return Ok(());
+            }
+            let delta = MaskDelta::new(base.sample_present(&mut rng, k));
+            let dense0 = base.dense().to_vec();
+            let mut m = base.clone();
+            let undo = m.apply_delta(&delta).map_err(|e| e.to_string())?;
+            if m.count() != base.count() - delta.len() {
+                return Err(format!("count {} after removing {}", m.count(), delta.len()));
+            }
+            for &i in delta.indices() {
+                if m.is_present(i) {
+                    return Err(format!("{i} still present after apply"));
+                }
+            }
+            m.check_invariants().map_err(|e| e.to_string())?;
+            m.revert_delta(&delta, undo).map_err(|e| e.to_string())?;
+            m.check_invariants().map_err(|e| e.to_string())?;
+            if m.dense() != dense0.as_slice() {
+                return Err("dense values differ after revert".into());
+            }
+            // Present-set ORDER must be restored exactly, or trial sampling
+            // would diverge after a revert; identical draws prove it.
+            for probe in 0..3u64 {
+                let draw = base.count().min(5).max(1);
+                let a = base.sample_present(&mut Rng::new(0x5EED + probe), draw);
+                let b = m.sample_present(&mut Rng::new(0x5EED + probe), draw);
+                if a != b {
+                    return Err(format!("sampling diverged after revert: {a:?} vs {b:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// first_dirty_layer always matches a brute-force scan over mask_layers.
+#[test]
+fn prop_mask_delta_first_dirty_layer_matches_brute_force() {
+    use cdnl::runtime::manifest::{ModelInfo, PackEntry};
+    check(
+        0xD1127,
+        60,
+        |r| {
+            let layers = r.usize_below(6) + 1;
+            let sizes: Vec<usize> = (0..layers).map(|_| r.usize_below(40) + 1).collect();
+            let k = r.usize_below(8) + 1;
+            (sizes, k)
+        },
+        |&(ref sizes, k)| {
+            let mut off = 0usize;
+            let mask_layers: Vec<PackEntry> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| {
+                    let e = PackEntry {
+                        name: format!("l{i}"),
+                        shape: vec![s],
+                        offset: off,
+                        size: s,
+                    };
+                    off += s;
+                    e
+                })
+                .collect();
+            let info = ModelInfo {
+                key: "t".into(),
+                backbone: "resnet".into(),
+                num_classes: 2,
+                image_size: 4,
+                channels: 3,
+                poly: false,
+                param_size: 1,
+                mask_size: off,
+                mask_layers,
+                param_entries: vec![],
+                artifacts: Default::default(),
+            };
+            let mut rng = Rng::new(off as u64 * 17 + k as u64);
+            let mask = Mask::full(off);
+            let delta = MaskDelta::new(mask.sample_present(&mut rng, k.min(off)));
+            // Brute force: the smallest layer index containing any removed
+            // index, scanning the whole mask_layers table.
+            let brute = delta
+                .indices()
+                .iter()
+                .map(|&i| {
+                    info.mask_layers
+                        .iter()
+                        .position(|e| i >= e.offset && i < e.offset + e.size)
+                        .expect("index outside every layer")
+                })
+                .min()
+                .unwrap_or(info.mask_layers.len());
+            if delta.first_dirty_layer(&info) != brute {
+                return Err(format!(
+                    "first_dirty_layer {} != brute force {brute} for {:?}",
+                    delta.first_dirty_layer(&info),
+                    delta.indices()
+                ));
             }
             Ok(())
         },
