@@ -1,102 +1,7 @@
-//! Design-choice ablations (DESIGN.md §5 calls these out beyond the paper's
-//! own Fig. 5):
-//!
-//!   1. DRC schedule — constant (paper) vs linear vs cosine decay (the
-//!      paper's named future-work extension).
-//!   2. Trial granularity — pixel coordinates (paper) vs whole-channel
-//!      blocks.
-//!   3. AutoReP hysteresis — indicator flip count with and without the
-//!      hysteresis band (the stabilization the paper's Discussion credits).
-
-#[path = "common/mod.rs"]
-mod common;
-
-use cdnl::config::{DrcSchedule, Granularity};
-use cdnl::metrics::{print_table, write_csv};
-use cdnl::pipeline::Pipeline;
+//! Thin wrapper: `cargo bench --bench bench_ablations` runs the registered
+//! `ablations` benchmark (see `rust/src/bench/suite/ablations.rs`) and writes its
+//! report to `results/bench/BENCH_ablations.json`.
 
 fn main() -> anyhow::Result<()> {
-    common::banner("ablations", "DRC schedule / granularity / hysteresis");
-    let engine = common::engine();
-    let exp = common::experiment("synth100", "resnet", false);
-    let pl = Pipeline::new(&engine, exp)?;
-    let total = pl.sess.info().total_relus();
-    let target = common::scale_budget(15e3, total, "resnet", 16).max(200);
-    let bref = (2 * target).min(total);
-    let reference = pl.snl_ref(bref)?;
-
-    let mut rows = Vec::new();
-    let mut csv = Vec::new();
-
-    // --- 1 + 2: BCD variants --------------------------------------------------
-    let variants: Vec<(&str, DrcSchedule, Granularity)> = vec![
-        ("constant/pixel (paper)", DrcSchedule::Constant, Granularity::Pixel),
-        ("linear/pixel", DrcSchedule::Linear, Granularity::Pixel),
-        ("cosine/pixel", DrcSchedule::Cosine, Granularity::Pixel),
-        ("constant/channel", DrcSchedule::Constant, Granularity::Channel),
-    ];
-    let variants = common::grid(&variants, if common::full_mode() { 4 } else { 3 });
-    for (name, sched, gran) in variants {
-        let mut e = common::experiment("synth100", "resnet", false);
-        e.bcd.drc_schedule = sched;
-        e.bcd.granularity = gran;
-        let pl2 = Pipeline::new(&engine, e)?;
-        let t0 = std::time::Instant::now();
-        let (st, out) = pl2.bcd_from(&reference, target)?;
-        let secs = t0.elapsed().as_secs_f64();
-        let acc = pl2.test_acc(&st)?;
-        println!(
-            "[{name}] acc {acc:.2}%  iters {}  trials {}  {secs:.0}s",
-            out.iterations.len(),
-            out.total_trials()
-        );
-        rows.push(vec![
-            name.to_string(),
-            format!("{acc:.2}"),
-            out.iterations.len().to_string(),
-            out.total_trials().to_string(),
-            format!("{secs:.0}"),
-        ]);
-        csv.push(vec![
-            name.to_string(),
-            format!("{acc:.3}"),
-            out.iterations.len().to_string(),
-            out.total_trials().to_string(),
-            format!("{secs:.1}"),
-        ]);
-    }
-    print_table(
-        &format!("BCD design ablations ({bref} -> {target} ReLUs, synth100/ResNet)"),
-        &["variant", "test_acc", "iters", "trials", "wall[s]"],
-        &rows,
-    );
-
-    // --- 3: hysteresis flip-count ablation (host-side, from recorded traces) --
-    // Plain-threshold flips on synthetic alpha traces that oscillate inside
-    // the band: hysteresis suppresses them entirely.
-    let checks: Vec<Vec<f32>> = (0..10)
-        .map(|i| {
-            (0..64)
-                .map(|j| 0.5 + 0.05 * if (i + j) % 2 == 0 { 1.0 } else { -1.0 })
-                .collect()
-        })
-        .collect();
-    let plain = cdnl::methods::autorep::flips_without_hysteresis(&checks, 0.5);
-    println!(
-        "\nhysteresis ablation (synthetic in-band oscillation): plain threshold flips = {plain}, \
-         hysteresis band 0.2 flips = 0 (oscillation never exits the band)"
-    );
-    csv.push(vec![
-        "hysteresis_plain_flips".into(),
-        plain.to_string(),
-        "0".into(),
-        "0".into(),
-        "0".into(),
-    ]);
-    write_csv(
-        &common::results_csv("ablations"),
-        &["variant", "test_acc", "iters", "trials", "wall_s"],
-        &csv,
-    )?;
-    Ok(())
+    cdnl::bench::bench_main("ablations")
 }

@@ -1,112 +1,7 @@
-//! Figure 1: Accuracy vs ReLU budget for the ResNet18 backbone on all
-//! three datasets — Ours (BCD) against SNL, SENet and DeepReDuce.
-//!
-//! Shape criterion: BCD Pareto-dominates, with the largest margins in the
-//! low-budget regime.
-
-#[path = "common/mod.rs"]
-mod common;
-
-use cdnl::methods::deepreduce::{run_deepreduce, DeepReduceConfig};
-use cdnl::methods::senet::{run_senet, SenetConfig};
-use cdnl::metrics::{ascii_plot, print_table, write_csv, Series};
-use cdnl::pipeline::Pipeline;
+//! Thin wrapper: `cargo bench --bench bench_fig1` runs the registered
+//! `fig1` benchmark (see `rust/src/bench/suite/fig1.rs`) and writes its
+//! report to `results/bench/BENCH_fig1.json`.
 
 fn main() -> anyhow::Result<()> {
-    common::banner("fig1", "Accuracy vs ReLU budget, ResNet18, 3 datasets, 4 methods");
-    let engine = common::engine();
-
-    let datasets: Vec<&str> = if common::full_mode() {
-        vec!["synth10", "synth100", "synthtiny"]
-    } else {
-        vec!["synth10", "synth100"]
-    };
-    // Paper Fig. 1 sweeps the low-to-mid budget range.
-    let paper_budgets: &[f64] = &[50e3, 120e3, 240e3];
-    let quick_n = 2;
-
-    let mut csv = Vec::new();
-    let mut rows = Vec::new();
-    for dataset in datasets {
-        let exp = common::experiment(dataset, "resnet", false);
-        let pl = Pipeline::new(&engine, exp)?;
-        let total = pl.sess.info().total_relus();
-        let size = pl.sess.info().image_size;
-        let budgets: Vec<usize> = common::grid(paper_budgets, quick_n)
-            .iter()
-            .map(|&b| common::scale_budget(b, total, "resnet", size))
-            .collect();
-
-        let baseline = pl.baseline()?;
-        let base_acc = pl.test_acc(&baseline)?;
-        let mut series: Vec<Series> = ["ours", "snl", "senet", "deepreduce"]
-            .iter()
-            .map(|m| Series::new(m, vec![]))
-            .collect();
-        for &budget in &budgets {
-            // SNL direct + BCD from the SNL reference (shared zoo).
-            let bref = common::bref_for(&pl.exp, total, budget);
-            let snl_acc = pl.test_acc(&pl.snl_ref(budget)?)?;
-            let ours = pl.bcd_cached(&pl.snl_ref(bref)?, budget)?;
-            let ours_acc = pl.test_acc(&ours)?;
-            // SENet + DeepReDuce start from the trained baseline.
-            let mut st_se = baseline.clone();
-            run_senet(&pl.sess, &mut st_se, &pl.train_ds, budget, &SenetConfig::default())?;
-            let senet_acc = pl.test_acc(&st_se)?;
-            let mut st_dr = baseline.clone();
-            run_deepreduce(
-                &pl.sess,
-                &mut st_dr,
-                &pl.train_ds,
-                budget,
-                &DeepReduceConfig::default(),
-            )?;
-            let dr_acc = pl.test_acc(&st_dr)?;
-
-            println!(
-                "[{dataset}] b={budget}: ours {ours_acc:.2} snl {snl_acc:.2} senet {senet_acc:.2} deepreduce {dr_acc:.2}"
-            );
-            for (s, acc) in series.iter_mut().zip([ours_acc, snl_acc, senet_acc, dr_acc]) {
-                s.points.push((budget as f64, acc));
-            }
-            rows.push(vec![
-                dataset.to_string(),
-                budget.to_string(),
-                format!("{ours_acc:.2}"),
-                format!("{snl_acc:.2}"),
-                format!("{senet_acc:.2}"),
-                format!("{dr_acc:.2}"),
-                format!("{base_acc:.2}"),
-            ]);
-            csv.push(vec![
-                dataset.to_string(),
-                budget.to_string(),
-                format!("{ours_acc:.3}"),
-                format!("{snl_acc:.3}"),
-                format!("{senet_acc:.3}"),
-                format!("{dr_acc:.3}"),
-                format!("{base_acc:.3}"),
-            ]);
-        }
-        println!(
-            "\n{}",
-            ascii_plot(
-                &format!("Fig. 1 ({dataset}) — Accuracy [%] vs ReLU budget"),
-                &series,
-                60,
-                14
-            )
-        );
-    }
-    print_table(
-        "Figure 1 — Accuracy [%] vs ReLU Budget (ResNet18)",
-        &["dataset", "budget", "ours", "snl", "senet", "deepreduce", "baseline"],
-        &rows,
-    );
-    write_csv(
-        &common::results_csv("fig1"),
-        &["dataset", "budget", "ours", "snl", "senet", "deepreduce", "baseline"],
-        &csv,
-    )?;
-    Ok(())
+    cdnl::bench::bench_main("fig1")
 }

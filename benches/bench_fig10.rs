@@ -1,94 +1,7 @@
-//! Figure 10 (supplementary): SNL ReLU budget vs training step, and the
-//! per-check budget decrease rate with the κ-update counter.
-//!
-//! Shape criterion: the decrease rate starts monotone; once the κ mechanism
-//! fires it becomes erratic — the debugging evidence for how hard the
-//! Lagrange multiplier is to tune.
-
-#[path = "common/mod.rs"]
-mod common;
-
-use cdnl::methods::snl::run_snl;
-use cdnl::metrics::{ascii_plot, write_csv, Series};
-use cdnl::pipeline::Pipeline;
+//! Thin wrapper: `cargo bench --bench bench_fig10` runs the registered
+//! `fig10` benchmark (see `rust/src/bench/suite/fig10.rs`) and writes its
+//! report to `results/bench/BENCH_fig10.json`.
 
 fn main() -> anyhow::Result<()> {
-    common::banner("fig10", "SNL budget vs step + decrease-rate trace");
-    let engine = common::engine();
-    let exp = common::experiment("synth100", "resnet", false);
-    let pl = Pipeline::new(&engine, exp)?;
-    let total = pl.sess.info().total_relus();
-    let target = common::scale_budget(15e3, total, "resnet", 16);
-
-    let mut st = pl.baseline()?;
-    let mut cfg = pl.exp.snl.clone();
-    cfg.steps_per_check = 2;
-    let out = run_snl(&pl.sess, &mut st, &pl.train_ds, target, &cfg, 0)?;
-
-    // (a) budget vs step.
-    let s_budget = Series::new(
-        "budget",
-        out.budget_trace.iter().map(|&(s, b)| (s as f64, b as f64)).collect(),
-    );
-    println!("\n{}", ascii_plot("Fig. 10a — ReLU budget vs SNL step", &[s_budget], 60, 12));
-
-    // (b) decrease per check + cumulative kappa updates.
-    let mut deltas = Vec::new();
-    for w in out.budget_trace.windows(2) {
-        let (s, b1) = w[1];
-        let (_, b0) = w[0];
-        deltas.push((s as f64, b0 as f64 - b1 as f64));
-    }
-    let s_delta = Series::new("Δbudget per check", deltas.clone());
-    let kappa_counter: Vec<(f64, f64)> = out
-        .budget_trace
-        .iter()
-        .map(|&(s, _)| {
-            (
-                s as f64,
-                out.kappa_updates.iter().filter(|&&u| u <= s).count() as f64,
-            )
-        })
-        .collect();
-    let s_kappa = Series::new("κ-update counter", kappa_counter.clone());
-    println!(
-        "{}",
-        ascii_plot("Fig. 10b — budget decrease rate & κ updates", &[s_delta, s_kappa], 60, 12)
-    );
-
-    let rows: Vec<Vec<String>> = out
-        .budget_trace
-        .iter()
-        .zip(std::iter::once(&(0usize, 0usize)).chain(out.budget_trace.iter()))
-        .map(|(&(s, b), &(_, prev))| {
-            vec![
-                s.to_string(),
-                b.to_string(),
-                if prev > 0 { (prev as i64 - b as i64).to_string() } else { "0".into() },
-                out.kappa_updates.iter().filter(|&&u| u <= s).count().to_string(),
-            ]
-        })
-        .collect();
-    write_csv(
-        &common::results_csv("fig10"),
-        &["step", "budget", "delta", "kappa_updates"],
-        &rows,
-    )?;
-
-    // Shape: was the decrease rate monotone before the first kappa update
-    // and non-monotone after?
-    if let Some(&first_kappa) = out.kappa_updates.first() {
-        let before: Vec<f64> = deltas.iter().filter(|(s, _)| *s <= first_kappa as f64).map(|p| p.1).collect();
-        let after: Vec<f64> = deltas.iter().filter(|(s, _)| *s > first_kappa as f64).map(|p| p.1).collect();
-        let non_monotone = after.windows(2).any(|w| w[1] > w[0] + 1.0);
-        println!(
-            "\nshape: first κ update at step {first_kappa}; pre-κ checks {} post-κ checks {} (rate erratic after κ: {})",
-            before.len(),
-            after.len(),
-            non_monotone
-        );
-    } else {
-        println!("\nshape: κ never fired in this run (budget fell freely)");
-    }
-    Ok(())
+    cdnl::bench::bench_main("fig10")
 }

@@ -1,96 +1,7 @@
-//! Figure 3: Ours vs SENet on the ResNet18 backbone, in the paper's
-//! baseline-agnostic metric: accuracy-at-budget / baseline accuracy.
-//!
-//! Shape criterion: Ours reaches the Pareto frontier on the CIFAR-100 and
-//! TinyImageNet analogs, stays competitive on the CIFAR-10 analog.
+//! Thin wrapper: `cargo bench --bench bench_fig3` runs the registered
+//! `fig3` benchmark (see `rust/src/bench/suite/fig3.rs`) and writes its
+//! report to `results/bench/BENCH_fig3.json`.
 
-#[path = "common/mod.rs"]
-mod common;
-
-use cdnl::methods::senet::{run_senet, SenetConfig};
-use cdnl::metrics::{ascii_plot, print_table, write_csv, Series};
-use cdnl::pipeline::Pipeline;
-
-pub const BACKBONE: &str = "resnet";
-pub const BENCH_ID: &str = "fig3";
-
-// (also compiled as a module by bench_fig8, where this main is unused)
-#[allow(dead_code)]
 fn main() -> anyhow::Result<()> {
-    run(BACKBONE, BENCH_ID)
-}
-
-pub fn run(backbone: &str, id: &str) -> anyhow::Result<()> {
-    common::banner(id, "Ours vs SENet, relative-to-baseline accuracy");
-    let engine = common::engine();
-
-    let datasets: Vec<&str> = if common::full_mode() {
-        vec!["synth10", "synth100", "synthtiny"]
-    } else {
-        vec!["synth100"]
-    };
-    let paper_budgets: &[f64] = &[50e3, 120e3, 180e3];
-    let quick_n = 2;
-
-    let mut rows = Vec::new();
-    let mut csv = Vec::new();
-    for dataset in datasets {
-        let exp = common::experiment(dataset, backbone, false);
-        let pl = Pipeline::new(&engine, exp)?;
-        let total = pl.sess.info().total_relus();
-        let size = pl.sess.info().image_size;
-        let budgets: Vec<usize> = common::grid(paper_budgets, quick_n)
-            .iter()
-            .map(|&b| common::scale_budget(b, total, backbone, size))
-            .collect();
-        let baseline = pl.baseline()?;
-        let base_acc = pl.test_acc(&baseline)?;
-
-        let mut s_ours = Series::new("ours", vec![]);
-        let mut s_senet = Series::new("senet", vec![]);
-        for &budget in &budgets {
-            let bref = common::bref_for(&pl.exp, total, budget);
-            let ours = pl.bcd_cached(&pl.snl_ref(bref)?, budget)?;
-            let ours_rel = pl.test_acc(&ours)? / base_acc;
-            let mut st_se = baseline.clone();
-            run_senet(&pl.sess, &mut st_se, &pl.train_ds, budget, &SenetConfig::default())?;
-            let senet_rel = pl.test_acc(&st_se)? / base_acc;
-            println!("[{dataset}] b={budget}: ours {ours_rel:.3} senet {senet_rel:.3} (rel. to {base_acc:.2}%)");
-            s_ours.points.push((budget as f64, ours_rel));
-            s_senet.points.push((budget as f64, senet_rel));
-            rows.push(vec![
-                dataset.to_string(),
-                budget.to_string(),
-                format!("{ours_rel:.3}"),
-                format!("{senet_rel:.3}"),
-            ]);
-            csv.push(vec![
-                dataset.to_string(),
-                budget.to_string(),
-                format!("{ours_rel:.4}"),
-                format!("{senet_rel:.4}"),
-                format!("{base_acc:.3}"),
-            ]);
-        }
-        println!(
-            "\n{}",
-            ascii_plot(
-                &format!("{id} ({dataset}) — acc/baseline vs budget"),
-                &[s_ours, s_senet],
-                60,
-                12
-            )
-        );
-    }
-    print_table(
-        &format!("Figure {id} — relative accuracy (acc@budget / baseline acc)"),
-        &["dataset", "budget", "ours", "senet"],
-        &rows,
-    );
-    write_csv(
-        &common::results_csv(id),
-        &["dataset", "budget", "ours_rel", "senet_rel", "baseline_acc"],
-        &csv,
-    )?;
-    Ok(())
+    cdnl::bench::bench_main("fig3")
 }

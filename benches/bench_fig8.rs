@@ -1,11 +1,7 @@
-//! Figure 8 (supplementary): Ours vs SENet on the WideResNet-22-8 backbone,
-//! relative-to-baseline metric — same harness as Fig. 3, wide backbone.
-
-#[path = "common/mod.rs"]
-mod common;
-#[path = "bench_fig3.rs"]
-mod fig3;
+//! Thin wrapper: `cargo bench --bench bench_fig8` runs the registered
+//! `fig8` benchmark (see `rust/src/bench/suite/fig8.rs`) and writes its
+//! report to `results/bench/BENCH_fig8.json`.
 
 fn main() -> anyhow::Result<()> {
-    fig3::run("wrn", "fig8")
+    cdnl::bench::bench_main("fig8")
 }

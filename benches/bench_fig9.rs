@@ -1,96 +1,7 @@
-//! Figure 9 (supplementary): SNL accuracy vs the λ-correction factor κ,
-//! for two run configurations — from the full network down to the
-//! 15K-analog, and from an SNL 30K-analog reference down to the same
-//! target. Overlaid: BCD from the same 30K-analog reference.
-//!
-//! Shape criteria: lower κ helps SNL slightly (~0.5% in the paper); BCD
-//! from the reference beats both (paper: +2%).
-
-#[path = "common/mod.rs"]
-mod common;
-
-use cdnl::methods::snl::run_snl;
-use cdnl::metrics::{ascii_plot, print_table, write_csv, Series};
-use cdnl::pipeline::Pipeline;
+//! Thin wrapper: `cargo bench --bench bench_fig9` runs the registered
+//! `fig9` benchmark (see `rust/src/bench/suite/fig9.rs`) and writes its
+//! report to `results/bench/BENCH_fig9.json`.
 
 fn main() -> anyhow::Result<()> {
-    common::banner("fig9", "SNL accuracy vs kappa; BCD overlay");
-    let engine = common::engine();
-    let exp = common::experiment("synth100", "resnet", false);
-    let pl = Pipeline::new(&engine, exp)?;
-    let total = pl.sess.info().total_relus();
-    let target = common::scale_budget(15e3, total, "resnet", 16);
-    let bref = (2 * target).min(total);
-
-    let kappas: Vec<f32> = common::grid(&[1.05, 1.2, 1.5, 2.0], 2);
-    let reference = pl.snl_ref(bref)?;
-    let baseline = pl.baseline()?;
-
-    let mut rows = Vec::new();
-    let mut csv = Vec::new();
-    let mut s_full = Series::new("snl from full", vec![]);
-    let mut s_ref = Series::new("snl from 30K-analog", vec![]);
-    for &kappa in &kappas {
-        let mut cfg = pl.exp.snl.clone();
-        cfg.kappa = kappa;
-        // From the full network.
-        let mut st_a = baseline.clone();
-        run_snl(&pl.sess, &mut st_a, &pl.train_ds, target, &cfg, 0)?;
-        let acc_full = pl.test_acc(&st_a)?;
-        // From the SNL reference.
-        let mut st_b = reference.clone();
-        run_snl(&pl.sess, &mut st_b, &pl.train_ds, target, &cfg, 0)?;
-        let acc_ref = pl.test_acc(&st_b)?;
-        println!("[kappa={kappa}] from-full {acc_full:.2}%  from-ref {acc_ref:.2}%");
-        s_full.points.push((kappa as f64, acc_full));
-        s_ref.points.push((kappa as f64, acc_ref));
-        rows.push(vec![
-            format!("{kappa}"),
-            format!("{acc_full:.2}"),
-            format!("{acc_ref:.2}"),
-        ]);
-        csv.push(vec![
-            format!("{kappa}"),
-            format!("{acc_full:.3}"),
-            format!("{acc_ref:.3}"),
-        ]);
-    }
-
-    // BCD overlay from the same reference (κ-independent).
-    let ours = pl.bcd_cached(&reference, target)?;
-    let bcd_acc = pl.test_acc(&ours)?;
-    println!("[bcd] from-ref {bcd_acc:.2}% (kappa-independent)");
-
-    println!(
-        "\n{}",
-        ascii_plot(
-            &format!("Fig. 9 — SNL acc vs kappa at budget {target} (BCD: {bcd_acc:.2}%)"),
-            &[s_full.clone(), s_ref.clone()],
-            50,
-            10
-        )
-    );
-    print_table(
-        "Figure 9 — Accuracy vs kappa (synth100 / ResNet18)",
-        &["kappa", "snl_from_full", "snl_from_ref"],
-        &rows,
-    );
-    csv.push(vec!["bcd".into(), format!("{bcd_acc:.3}"), format!("{bcd_acc:.3}")]);
-    write_csv(
-        &common::results_csv("fig9"),
-        &["kappa", "snl_from_full", "snl_from_ref"],
-        &csv,
-    )?;
-
-    let best_snl = s_full
-        .points
-        .iter()
-        .chain(&s_ref.points)
-        .map(|p| p.1)
-        .fold(f64::NEG_INFINITY, f64::max);
-    println!(
-        "\nshape: BCD {bcd_acc:.2}% vs best SNL {best_snl:.2}% ({})",
-        if bcd_acc >= best_snl { "BCD wins — matches paper" } else { "gap" }
-    );
-    Ok(())
+    cdnl::bench::bench_main("fig9")
 }

@@ -1,236 +1,7 @@
-//! §Perf: runtime microbenchmarks of the L3 hot path.
-//!
-//! Measures (and records in EXPERIMENTS.md §Perf):
-//!   - eval_batch literal path vs buffer-cached path (§Perf opt 1)
-//!   - trial scan with vs without the early-exit accuracy bound (opt 2)
-//!   - per-trial mask hypothesis cost (zero-alloc scratch, opt 3)
-//!   - host->device upload costs by tensor size
-//!   - parallel trial-scan throughput across worker counts (opt 4)
-//!   - end-to-end BCD iteration throughput
-
-#[path = "common/mod.rs"]
-mod common;
-
-use cdnl::coordinator::eval::Evaluator;
-use cdnl::coordinator::trials::{scan_trials, BlockSampler};
-use cdnl::data::synth;
-use cdnl::metrics::write_csv;
-use cdnl::runtime::session::Session;
-use cdnl::runtime::Backend;
-use cdnl::util::bench::{print_results, summarize, time};
-use cdnl::util::prng::Rng;
+//! Thin wrapper: `cargo bench --bench bench_perf` runs the registered
+//! `perf` benchmark (see `rust/src/bench/suite/perf.rs`) and writes its
+//! report to `results/bench/BENCH_perf.json`.
 
 fn main() -> anyhow::Result<()> {
-    common::banner("perf", "L3 hot-path microbenchmarks");
-    let engine = common::engine();
-    let sess = Session::new(&engine, "resnet_16x16_c10")?;
-    let (train_ds, _) = synth::generate(synth::by_name("synth10").unwrap());
-    let st = sess.init_state(1)?;
-    let info = sess.info().clone();
-    let (iters, warmup) = if common::full_mode() { (30, 5) } else { (10, 2) };
-
-    let mut results = Vec::new();
-
-    // --- upload costs ------------------------------------------------------
-    let mask = vec![1.0f32; info.mask_size];
-    results.push(time(
-        &format!("upload mask [{} f32]", mask.len()),
-        warmup,
-        iters,
-        || {
-            let _ = engine.upload_f32(&mask, &[mask.len()]).unwrap();
-        },
-    ));
-    results.push(time(
-        &format!("upload params [{} f32]", st.params.len()),
-        warmup,
-        iters,
-        || {
-            let _ = engine.upload_f32(&st.params.data, &st.params.shape).unwrap();
-        },
-    ));
-    let (x, y) = train_ds.batch_at(0, sess.batch);
-    results.push(time(
-        &format!("upload batch x+y [{} f32]", x.len()),
-        warmup,
-        iters,
-        || {
-            let _ = sess.upload_batch(&x, &y).unwrap();
-        },
-    ));
-
-    // --- eval: host path vs buffer path -------------------------------------
-    results.push(time("eval_batch host path", warmup, iters, || {
-        let _ = sess.eval_batch(&st.params, &mask, &x, &y).unwrap();
-    }));
-    let pbuf = engine.upload_f32(&st.params.data, &st.params.shape)?;
-    let mbuf = engine.upload_f32(&mask, &[mask.len()])?;
-    let (xbuf, ybuf) = sess.upload_batch(&x, &y)?;
-    results.push(time("eval_batch buffer path", warmup, iters, || {
-        let _ = sess.eval_batch_b(&pbuf, &mbuf, &xbuf, &ybuf).unwrap();
-    }));
-
-    // --- trial scan: bound on vs off ----------------------------------------
-    let drc = (info.mask_size / 20).max(1);
-    let ev = Evaluator::new(&sess, &train_ds, 2)?;
-    let params = ev.upload_params(&st.params)?;
-    let base = ev.accuracy(&params, st.mask.dense())?;
-    // Bound ON is the production path (floor = incumbent best); bound OFF is
-    // emulated by an unreachable ADT and floor via accuracy() per trial.
-    let sampler = BlockSampler::new(cdnl::config::Granularity::Pixel, sess.info());
-    let mut rng = Rng::new(7);
-    let t0 = std::time::Instant::now();
-    let scan =
-        scan_trials(&ev, &params, &st.mask, &sampler, drc, 8, -1e9, base, &mut rng, 1)?;
-    let bounded_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    // Replay scan_trials' exact draw procedure (per-index fork + dedup) so
-    // both timings score the identical hypothesis set.
-    let mut rng = Rng::new(7);
-    let t0 = std::time::Instant::now();
-    let mut scratch = Vec::new();
-    let mut seen = std::collections::HashSet::new();
-    for t in 0..8u64 {
-        let mut trial_rng = rng.fork(t);
-        let mut removed = sampler.sample(&st.mask, &mut trial_rng, drc);
-        removed.sort_unstable();
-        if !seen.insert(removed.clone()) {
-            continue;
-        }
-        st.mask.hypothesis_into(&removed, &mut scratch);
-        let _ = ev.accuracy(&params, &scratch)?; // no bound: full evaluation
-    }
-    let unbounded_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    results.push(summarize("trial scan x8, bound ON", vec![bounded_ms]));
-    results.push(summarize("trial scan x8, bound OFF", vec![unbounded_ms]));
-    println!(
-        "bound cut {} of {} trials early ({} evals saved)",
-        scan.bounded, scan.evaluated, scan.bounded
-    );
-
-    // --- parallel trial scan: worker sweep -----------------------------------
-    // Unreachable ADT so every worker count scores the full RT hypotheses;
-    // throughput = hypotheses/sec. The outcome must be identical at every
-    // worker count (deterministic merge) — verified as we sweep.
-    let sweep_rt = if common::full_mode() { 32 } else { 16 };
-    let mut sweep_rows = Vec::new();
-    let mut reference_outcome = None;
-    for &w in &[1usize, 2, 4, 8] {
-        let mut rng = Rng::new(21);
-        let t0 = std::time::Instant::now();
-        let out = scan_trials(
-            &ev, &params, &st.mask, &sampler, drc, sweep_rt, -1e9, base, &mut rng, w,
-        )?;
-        let secs = t0.elapsed().as_secs_f64();
-        let hps = out.evaluated as f64 / secs;
-        match &reference_outcome {
-            None => reference_outcome = Some(out.clone()),
-            Some(r) => assert_eq!(r, &out, "worker count {w} changed the scan outcome"),
-        }
-        println!("scan workers={w}: {hps:7.1} hypotheses/sec ({:.1} ms)", 1000.0 * secs);
-        results.push(summarize(
-            &format!("trial scan x{sweep_rt}, workers={w}"),
-            vec![1000.0 * secs],
-        ));
-        sweep_rows.push(vec![w.to_string(), format!("{hps:.1}"), format!("{:.2}", 1000.0 * secs)]);
-    }
-    write_csv(
-        &common::results_csv("perf_scan_workers"),
-        &["workers", "hypotheses_per_sec", "total_ms"],
-        &sweep_rows,
-    )?;
-
-    // --- staged execution: full-forward vs incremental trial scan ------------
-    // The bcd.cache_mb knob (DESIGN.md §8). Outcomes must be bit-identical;
-    // only wall-clock may differ. Low DRC lands more hypotheses entirely in
-    // late layers, so the prefix-reuse win shrinks as DRC grows.
-    let ev_inc = Evaluator::with_cache(&sess, &train_ds, 2, 64)?;
-    let staged_rt = if common::full_mode() { 48 } else { 24 };
-    let mut staged_rows = Vec::new();
-    for &d in &[1usize, 8, 64] {
-        let mut rng = Rng::new(33);
-        let t0 = std::time::Instant::now();
-        let full_out = scan_trials(
-            &ev, &params, &st.mask, &sampler, d, staged_rt, -1e9, base, &mut rng, 1,
-        )?;
-        let full_ms = 1000.0 * t0.elapsed().as_secs_f64();
-        let mut rng = Rng::new(33);
-        let t0 = std::time::Instant::now();
-        let inc_out = scan_trials(
-            &ev_inc, &params, &st.mask, &sampler, d, staged_rt, -1e9, base, &mut rng, 1,
-        )?;
-        let inc_ms = 1000.0 * t0.elapsed().as_secs_f64();
-        assert_eq!(
-            full_out, inc_out,
-            "staged scan diverged from full scan at DRC={d}"
-        );
-        let speedup = full_ms / inc_ms.max(1e-9);
-        println!(
-            "staged scan DRC={d}: full {full_ms:.1} ms, incremental {inc_ms:.1} ms => {speedup:.2}x"
-        );
-        results.push(summarize(
-            &format!("trial scan x{staged_rt} DRC={d}, full fwd"),
-            vec![full_ms],
-        ));
-        results.push(summarize(
-            &format!("trial scan x{staged_rt} DRC={d}, incremental"),
-            vec![inc_ms],
-        ));
-        staged_rows.push(vec![
-            d.to_string(),
-            format!("{full_ms:.2}"),
-            format!("{inc_ms:.2}"),
-            format!("{speedup:.2}"),
-        ]);
-    }
-    let (hits, misses, evictions) = ev_inc.cache_counters();
-    println!("prefix cache: {hits} hits, {misses} misses, {evictions} evictions");
-    write_csv(
-        &common::results_csv("perf_staged"),
-        &["drc", "full_ms", "incremental_ms", "speedup"],
-        &staged_rows,
-    )?;
-
-    // --- mask hypothesis cost (pure host) ------------------------------------
-    let mut rng2 = Rng::new(9);
-    results.push(time("mask sample+hypothesis (host)", warmup, 1000, || {
-        let removed = st.mask.sample_present(&mut rng2, drc);
-        st.mask.hypothesis_into(&removed, &mut scratch);
-    }));
-
-    // --- end-to-end BCD iteration throughput ---------------------------------
-    let mut st2 = sess.init_state(2)?;
-    let cfg = cdnl::config::BcdConfig {
-        drc,
-        rt: 4,
-        adt: 0.3,
-        finetune_steps: 4,
-        finetune_lr: 1e-3,
-        proxy_batches: 2,
-        seed: 3,
-        ..Default::default()
-    };
-    let target = st2.budget() - 4 * drc;
-    let t0 = std::time::Instant::now();
-    let out = cdnl::coordinator::bcd::run_bcd(&sess, &mut st2, &train_ds, target, &cfg, 0)?;
-    let secs = t0.elapsed().as_secs_f64();
-    results.push(summarize(
-        "BCD iteration (RT=4, ft=4)",
-        vec![1000.0 * secs / out.iterations.len() as f64],
-    ));
-    println!(
-        "BCD end-to-end: {} iters in {secs:.1}s => {:.2} iters/s, {} trials ({} bounded)",
-        out.iterations.len(),
-        out.iterations.len() as f64 / secs,
-        out.total_trials(),
-        out.iterations.iter().map(|r| r.trials_bounded).sum::<usize>(),
-    );
-
-    print_results("§Perf — L3 hot-path microbenchmarks", &results);
-    write_csv(
-        &common::results_csv("perf"),
-        &["operation", "mean_ms", "p50_ms", "p95_ms", "n"],
-        &results.iter().map(|r| r.row()).collect::<Vec<_>>(),
-    )?;
-    println!("\n{}", engine.stats_table());
-    Ok(())
+    cdnl::bench::bench_main("perf")
 }

@@ -1,39 +1,7 @@
-//! Table 3: Test accuracy vs ReLU budget for the ResNet18-analog backbone,
-//! SNL vs Ours (BCD), on all three datasets.
-//!
-//! Paper budgets (50K-300K for CIFAR, 200K-488.8K for TinyImageNet) are
-//! scaled by the backbone ReLU ratio; quick mode keeps the first points of
-//! each grid. Shape criterion: Ours >= SNL on every budget.
-
-#[path = "common/mod.rs"]
-mod common;
-
-use cdnl::runtime::Backend;
+//! Thin wrapper: `cargo bench --bench bench_table3` runs the registered
+//! `table3` benchmark (see `rust/src/bench/suite/table3.rs`) and writes its
+//! report to `results/bench/BENCH_table3.json`.
 
 fn main() -> anyhow::Result<()> {
-    common::banner("table3", "ResNet18: SNL vs Ours across budgets");
-    let engine = common::engine();
-
-    let mut all = Vec::new();
-    // (dataset, paper budgets [#K], quick points)
-    let grids: &[(&str, &[f64], usize)] = &[
-        ("synth10", &[50e3, 240e3, 300e3], 2),
-        ("synth100", &[50e3, 120e3, 150e3, 180e3], 2),
-        ("synthtiny", &[200e3, 250e3, 488.8e3], 1),
-    ];
-    for (dataset, paper_budgets, quick_n) in grids {
-        let key = common::experiment(dataset, "resnet", false).model_key();
-        let total = engine.manifest().models[&key].mask_size;
-        let size = engine.manifest().models[&key].image_size;
-        let budgets: Vec<usize> = common::grid(paper_budgets, *quick_n)
-            .iter()
-            .map(|&b| common::scale_budget(b, total, "resnet", size))
-            .collect();
-        all.extend(common::snl_vs_ours(&engine, dataset, "resnet", &budgets)?);
-    }
-    common::report_snl_vs_ours(
-        "table3",
-        "Table 3 — Test Accuracy [%] vs ReLU Budget, ResNet18 backbone",
-        &all,
-    )
+    cdnl::bench::bench_main("table3")
 }

@@ -1,0 +1,569 @@
+//! Report-vs-baseline comparison: the perf-regression gate (DESIGN.md §9).
+//!
+//! [`compare`] diffs a fresh [`BenchReport`] against a committed baseline,
+//! metric by metric, applying per-kind noise-floor thresholds
+//! ([`Thresholds`]). The outcome feeds three consumers:
+//!
+//! - `cdnl bench compare --gate` exits nonzero when any diff
+//!   [`Status::is_failure`] — the CI contract;
+//! - [`CompareOutcome::table`] renders the fixed-width terminal table;
+//! - [`CompareOutcome::markdown`] renders the same rows for
+//!   `$GITHUB_STEP_SUMMARY`.
+//!
+//! Gating is scoped to what a comparison can actually prove:
+//!
+//! - wall-clock metrics (`time_ms`, `rate`) gate only when report and
+//!   baseline carry the same host fingerprint (a laptop baseline must not
+//!   fail CI on a slower runner; `--strict-host` overrides) *and* the same
+//!   configuration;
+//! - `stat` metrics are deterministic functions of the configuration, so
+//!   they gate only when the config fingerprint, quick/full mode and
+//!   backend all match;
+//! - `count` metrics are structural contracts and gate everywhere, as does
+//!   a metric that silently disappears from the report.
+//!
+//! Everything downgraded by those rules is reported as
+//! [`Status::Skipped`] (advisory), never silently dropped.
+
+use super::report::{kind, BenchReport};
+use std::fmt::Write as _;
+
+/// Per-kind noise floors. The defaults are deliberately generous: the gate
+/// exists to catch *regressions*, not scheduler jitter.
+#[derive(Clone, Copy, Debug)]
+pub struct Thresholds {
+    /// `time_ms`: fail when `new > base * (1 + time_rel_tol)` ...
+    pub time_rel_tol: f64,
+    /// ... AND the absolute growth exceeds this floor (sub-floor diffs are
+    /// noise regardless of the ratio — a 0.1ms op doubling is not a
+    /// regression signal).
+    pub time_floor_ms: f64,
+    /// `rate` (higher = better): fail when `new < base * (1 - rate_rel_tol)`.
+    pub rate_rel_tol: f64,
+    /// `stat`: fail when `|new - base| > stat_abs_tol`.
+    pub stat_abs_tol: f64,
+}
+
+impl Default for Thresholds {
+    fn default() -> Self {
+        Thresholds {
+            time_rel_tol: 0.35,
+            time_floor_ms: 2.0,
+            rate_rel_tol: 0.35,
+            stat_abs_tol: 0.05,
+        }
+    }
+}
+
+/// Verdict for one metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Within thresholds.
+    Pass,
+    /// Beyond the improvement threshold (reported, never fails).
+    Improved,
+    /// Beyond the regression threshold — fails the gate.
+    Regressed,
+    /// Present in the baseline, absent from the report — fails the gate
+    /// (a silently dropped metric is how coverage rots).
+    Missing,
+    /// Present in the report only (new coverage; informational).
+    New,
+    /// Compared advisorily, never gating: a timing metric across different
+    /// hosts, a stat metric across different configs, or a metric kind
+    /// this binary does not know. The verdict line names the reason.
+    Skipped,
+}
+
+impl Status {
+    pub fn is_failure(&self) -> bool {
+        matches!(self, Status::Regressed | Status::Missing)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Status::Pass => "ok",
+            Status::Improved => "improved",
+            Status::Regressed => "REGRESSED",
+            Status::Missing => "MISSING",
+            Status::New => "new",
+            Status::Skipped => "advisory",
+        }
+    }
+}
+
+/// One metric's comparison row.
+#[derive(Clone, Debug)]
+pub struct MetricDiff {
+    pub case: String,
+    pub name: String,
+    pub kind: String,
+    pub unit: String,
+    pub base: Option<f64>,
+    pub new: Option<f64>,
+    pub status: Status,
+}
+
+impl MetricDiff {
+    /// Relative change in percent (None when undefined).
+    pub fn delta_pct(&self) -> Option<f64> {
+        match (self.base, self.new) {
+            (Some(b), Some(n)) if b != 0.0 => Some(100.0 * (n - b) / b),
+            _ => None,
+        }
+    }
+}
+
+/// Full comparison of one (report, baseline) pair.
+#[derive(Clone, Debug)]
+pub struct CompareOutcome {
+    pub bench: String,
+    /// Same host fingerprint on both sides (timing gates active).
+    pub host_match: bool,
+    /// Same config fingerprint + full/quick mode on both sides.
+    pub config_match: bool,
+    pub diffs: Vec<MetricDiff>,
+}
+
+impl CompareOutcome {
+    pub fn failures(&self) -> usize {
+        self.diffs.iter().filter(|d| d.status.is_failure()).count()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.failures() == 0
+    }
+
+    fn rows(&self) -> Vec<[String; 6]> {
+        self.diffs
+            .iter()
+            .map(|d| {
+                let fmt = |v: Option<f64>| match v {
+                    Some(x) if d.kind == kind::COUNT => format!("{x:.0}"),
+                    Some(x) => format!("{x:.3}"),
+                    None => "-".to_string(),
+                };
+                let delta = d
+                    .delta_pct()
+                    .map(|p| format!("{p:+.1}%"))
+                    .unwrap_or_else(|| "-".to_string());
+                [
+                    format!("{}/{}", d.case, d.name),
+                    d.kind.clone(),
+                    fmt(d.base),
+                    fmt(d.new),
+                    delta,
+                    d.status.label().to_string(),
+                ]
+            })
+            .collect()
+    }
+
+    /// Fixed-width terminal table (one line per metric) + verdict line.
+    pub fn table(&self) -> String {
+        const HEADER: [&str; 6] = ["metric", "kind", "baseline", "new", "delta", "status"];
+        let rows = self.rows();
+        let mut widths: Vec<usize> = HEADER.iter().map(|h| h.len()).collect();
+        for row in &rows {
+            for (w, cell) in widths.iter_mut().zip(row.iter()) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = format!("bench {}: {}\n", self.bench, self.verdict());
+        let line: String = HEADER
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:<w$}", h, w = widths[i] + 2))
+            .collect();
+        out.push_str(&line);
+        out.push('\n');
+        out.push_str(&"-".repeat(line.len()));
+        out.push('\n');
+        for row in &rows {
+            for (i, cell) in row.iter().enumerate() {
+                let _ = write!(out, "{:<w$}", cell, w = widths[i] + 2);
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown table (for `$GITHUB_STEP_SUMMARY`).
+    pub fn markdown(&self) -> String {
+        let mut out = format!(
+            "### bench `{}` — {}\n\n| metric | kind | baseline | new | delta | status |\n|---|---|---|---|---|---|\n",
+            self.bench,
+            self.verdict()
+        );
+        for row in self.rows() {
+            let _ = writeln!(
+                out,
+                "| {} | {} | {} | {} | {} | {} |",
+                row[0], row[1], row[2], row[3], row[4], row[5]
+            );
+        }
+        out
+    }
+
+    /// One-line summary ("PASS (12 metrics, 1 improved, 3 advisory)" /
+    /// "FAIL (2 regressions)").
+    pub fn verdict(&self) -> String {
+        let fails = self.failures();
+        let count = |s: Status| self.diffs.iter().filter(|d| d.status == s).count();
+        let mut notes = Vec::new();
+        if !self.config_match {
+            notes.push("config differs".to_string());
+        }
+        if !self.host_match {
+            notes.push("host differs; timing advisory".to_string());
+        }
+        for (n, lbl) in [
+            (count(Status::Improved), "improved"),
+            (count(Status::New), "new"),
+            (count(Status::Skipped), "advisory"),
+        ] {
+            if n > 0 {
+                notes.push(format!("{n} {lbl}"));
+            }
+        }
+        let notes = if notes.is_empty() {
+            String::new()
+        } else {
+            format!(" ({})", notes.join(", "))
+        };
+        if fails == 0 {
+            format!("PASS — {} metrics{notes}", self.diffs.len())
+        } else {
+            format!("FAIL — {fails} of {} metrics{notes}", self.diffs.len())
+        }
+    }
+}
+
+/// Judge one (baseline, new) pair of values under `th`.
+///
+/// `gate_timing` is false when the host fingerprints differ (wall-clock
+/// numbers from different machines only inform); `gate_stats` is false
+/// when the config fingerprint / quick-full mode / backend differ — stat
+/// metrics are deterministic functions of the *configuration*, so a
+/// cross-config comparison must not fail the gate. `count` metrics encode
+/// structural contracts (manifest shapes, layer counts) and gate
+/// everywhere.
+fn judge(
+    kind_tag: &str,
+    base: f64,
+    new: f64,
+    th: &Thresholds,
+    gate_timing: bool,
+    gate_stats: bool,
+) -> Status {
+    match kind_tag {
+        kind::COUNT => {
+            if new == base {
+                Status::Pass
+            } else {
+                Status::Regressed
+            }
+        }
+        kind::STAT => {
+            if !gate_stats {
+                Status::Skipped
+            } else if (new - base).abs() <= th.stat_abs_tol {
+                Status::Pass
+            } else {
+                Status::Regressed
+            }
+        }
+        kind::TIME_MS => {
+            if !gate_timing {
+                return Status::Skipped;
+            }
+            if new > base * (1.0 + th.time_rel_tol) && (new - base) > th.time_floor_ms {
+                Status::Regressed
+            } else if new < base * (1.0 - th.time_rel_tol) && (base - new) > th.time_floor_ms {
+                Status::Improved
+            } else {
+                Status::Pass
+            }
+        }
+        kind::RATE => {
+            if !gate_timing {
+                return Status::Skipped;
+            }
+            if new < base * (1.0 - th.rate_rel_tol) {
+                Status::Regressed
+            } else if new > base * (1.0 + th.rate_rel_tol) {
+                Status::Improved
+            } else {
+                Status::Pass
+            }
+        }
+        // Unknown kinds (a future format extension read by an old binary)
+        // are advisory, never silently gating.
+        _ => Status::Skipped,
+    }
+}
+
+/// Diff `report` against `baseline`. `strict_host` forces timing gates even
+/// across host fingerprints (the --strict-host flag).
+pub fn compare(
+    report: &BenchReport,
+    baseline: &BenchReport,
+    th: &Thresholds,
+    strict_host: bool,
+) -> CompareOutcome {
+    let host_match = report.host.fingerprint() == baseline.host.fingerprint();
+    let config_match = report.config_fingerprint == baseline.config_fingerprint
+        && report.full_mode == baseline.full_mode
+        && report.backend == baseline.backend;
+    // Timing gates need the same machine (unless forced) AND the same
+    // configuration — full-grid wall times against a quick-grid baseline
+    // measure different workloads entirely.
+    let gate_timing = (host_match || strict_host) && config_match;
+    // Incomparable configurations (quick vs full grid, different
+    // hyperparameters, different backend) downgrade config-dependent stat
+    // metrics to advisory instead of reporting false regressions; timing
+    // additionally requires the same host. A metric silently *disappearing*
+    // still fails regardless — coverage rot is config-independent.
+    let gate_stats = config_match;
+    let mut diffs = Vec::new();
+
+    // Every baseline metric must be judged (or flagged missing)...
+    for case in &baseline.cases {
+        for m in &case.metrics {
+            let found = report.metric(&case.name, &m.name);
+            let status = match found {
+                Some(n) => judge(&m.kind, m.value, n.value, th, gate_timing, gate_stats),
+                None => Status::Missing,
+            };
+            diffs.push(MetricDiff {
+                case: case.name.clone(),
+                name: m.name.clone(),
+                kind: m.kind.clone(),
+                unit: m.unit.clone(),
+                base: Some(m.value),
+                new: found.map(|n| n.value),
+                status,
+            });
+        }
+    }
+    // ... and report-only metrics are surfaced as new coverage.
+    for case in &report.cases {
+        for m in &case.metrics {
+            if baseline.metric(&case.name, &m.name).is_none() {
+                diffs.push(MetricDiff {
+                    case: case.name.clone(),
+                    name: m.name.clone(),
+                    kind: m.kind.clone(),
+                    unit: m.unit.clone(),
+                    base: None,
+                    new: Some(m.value),
+                    status: Status::New,
+                });
+            }
+        }
+    }
+    CompareOutcome { bench: report.bench.clone(), host_match, config_match, diffs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::report::{BenchCase, HostInfo, Metric, BENCH_FORMAT};
+
+    fn metric(name: &str, value: f64, kind_tag: &str) -> Metric {
+        Metric {
+            name: name.into(),
+            value,
+            unit: "u".into(),
+            kind: kind_tag.into(),
+            repeats: 1,
+        }
+    }
+
+    fn report(metrics: Vec<Metric>) -> BenchReport {
+        BenchReport {
+            format: BENCH_FORMAT,
+            bench: "t".into(),
+            tier: "smoke".into(),
+            backend: "reference".into(),
+            full_mode: false,
+            config_fingerprint: "f".into(),
+            host: HostInfo { os: "linux".into(), arch: "x86_64".into(), cpus: 4 },
+            created_unix: 0,
+            wall_secs: 0.0,
+            cases: vec![BenchCase { name: "c".into(), metrics }],
+        }
+    }
+
+    fn th() -> Thresholds {
+        Thresholds::default()
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let r = report(vec![
+            metric("n", 384.0, kind::COUNT),
+            metric("acc", 61.25, kind::STAT),
+            metric("t", 10.0, kind::TIME_MS),
+            metric("r", 100.0, kind::RATE),
+        ]);
+        let out = compare(&r, &r.clone(), &th(), false);
+        assert!(out.passed(), "{}", out.table());
+        assert!(out.host_match && out.config_match);
+        assert_eq!(out.diffs.len(), 4);
+        assert!(out.diffs.iter().all(|d| d.status == Status::Pass));
+        assert!(out.verdict().starts_with("PASS"));
+    }
+
+    #[test]
+    fn count_gates_exactly() {
+        let base = report(vec![metric("n", 384.0, kind::COUNT)]);
+        let ok = compare(&report(vec![metric("n", 384.0, kind::COUNT)]), &base, &th(), false);
+        assert!(ok.passed());
+        let bad = compare(&report(vec![metric("n", 385.0, kind::COUNT)]), &base, &th(), false);
+        assert_eq!(bad.failures(), 1);
+        assert_eq!(bad.diffs[0].status, Status::Regressed);
+    }
+
+    #[test]
+    fn stat_tolerance_band_edges() {
+        let base = report(vec![metric("acc", 60.0, kind::STAT)]);
+        // Exactly at the band edge passes (<=), just beyond fails.
+        let at_edge = report(vec![metric("acc", 60.0 + th().stat_abs_tol, kind::STAT)]);
+        assert!(compare(&at_edge, &base, &th(), false).passed());
+        let beyond = report(vec![metric("acc", 60.0 + th().stat_abs_tol * 1.01, kind::STAT)]);
+        assert_eq!(compare(&beyond, &base, &th(), false).failures(), 1);
+        // The band is symmetric: a drop fails too.
+        let drop = report(vec![metric("acc", 59.0, kind::STAT)]);
+        assert_eq!(compare(&drop, &base, &th(), false).failures(), 1);
+    }
+
+    #[test]
+    fn missing_metric_fails_new_metric_does_not() {
+        let base = report(vec![metric("a", 1.0, kind::COUNT), metric("b", 2.0, kind::COUNT)]);
+        let new = report(vec![metric("a", 1.0, kind::COUNT), metric("c", 3.0, kind::COUNT)]);
+        let out = compare(&new, &base, &th(), false);
+        assert_eq!(out.failures(), 1, "{}", out.table());
+        let b = out.diffs.iter().find(|d| d.name == "b").unwrap();
+        assert_eq!(b.status, Status::Missing);
+        assert_eq!(b.new, None);
+        let c = out.diffs.iter().find(|d| d.name == "c").unwrap();
+        assert_eq!(c.status, Status::New);
+        assert!(!c.status.is_failure());
+    }
+
+    #[test]
+    fn time_noise_floor_and_rel_tol_must_both_trip() {
+        let t = th(); // rel 0.35, floor 2.0ms
+        let base = report(vec![metric("op", 1.0, kind::TIME_MS)]);
+        // 2.5x slower but only +1.5ms: under the noise floor -> pass.
+        let small = report(vec![metric("op", 2.5, kind::TIME_MS)]);
+        assert!(compare(&small, &base, &t, false).passed());
+        // Large op: +30% is inside rel tol even though +30ms > floor.
+        let base_big = report(vec![metric("op", 100.0, kind::TIME_MS)]);
+        let within = report(vec![metric("op", 130.0, kind::TIME_MS)]);
+        assert!(compare(&within, &base_big, &t, false).passed());
+        // +50% and +50ms: both thresholds tripped -> regression.
+        let slow = report(vec![metric("op", 150.0, kind::TIME_MS)]);
+        let out = compare(&slow, &base_big, &t, false);
+        assert_eq!(out.failures(), 1);
+        // Symmetric improvement detection (never a failure).
+        let fast = report(vec![metric("op", 50.0, kind::TIME_MS)]);
+        let out = compare(&fast, &base_big, &t, false);
+        assert!(out.passed());
+        assert_eq!(out.diffs[0].status, Status::Improved);
+    }
+
+    #[test]
+    fn rate_regression_direction() {
+        let base = report(vec![metric("hps", 100.0, kind::RATE)]);
+        // Lower throughput beyond tol fails; higher never does.
+        let slow = report(vec![metric("hps", 60.0, kind::RATE)]);
+        assert_eq!(compare(&slow, &base, &th(), false).failures(), 1);
+        let fast = report(vec![metric("hps", 140.0, kind::RATE)]);
+        let out = compare(&fast, &base, &th(), false);
+        assert!(out.passed());
+        assert_eq!(out.diffs[0].status, Status::Improved);
+    }
+
+    #[test]
+    fn cross_host_timing_is_advisory_counts_still_gate() {
+        let base = report(vec![
+            metric("n", 384.0, kind::COUNT),
+            metric("op", 1.0, kind::TIME_MS),
+            metric("hps", 100.0, kind::RATE),
+        ]);
+        let mut new = report(vec![
+            metric("n", 999.0, kind::COUNT),
+            metric("op", 500.0, kind::TIME_MS),
+            metric("hps", 1.0, kind::RATE),
+        ]);
+        new.host.cpus = 64; // different machine
+        let out = compare(&new, &base, &th(), false);
+        assert!(!out.host_match);
+        // Only the count fails; both wall metrics are skipped.
+        assert_eq!(out.failures(), 1);
+        assert_eq!(
+            out.diffs.iter().filter(|d| d.status == Status::Skipped).count(),
+            2
+        );
+        // --strict-host turns them back into failures.
+        let strict = compare(&new, &base, &th(), true);
+        assert_eq!(strict.failures(), 3);
+        assert!(strict.verdict().starts_with("FAIL"));
+    }
+
+    #[test]
+    fn cross_config_stats_and_timing_are_advisory_counts_still_gate() {
+        let base = report(vec![
+            metric("n", 384.0, kind::COUNT),
+            metric("acc", 60.0, kind::STAT),
+            metric("op", 10.0, kind::TIME_MS),
+        ]);
+        // Same host, but the full/quick mode differs: the stat and the
+        // timing are measurements of a different workload.
+        let mut new = report(vec![
+            metric("n", 384.0, kind::COUNT),
+            metric("acc", 20.0, kind::STAT),
+            metric("op", 500.0, kind::TIME_MS),
+        ]);
+        new.full_mode = true;
+        let out = compare(&new, &base, &th(), false);
+        assert!(!out.config_match);
+        assert!(out.passed(), "{}", out.table());
+        assert_eq!(
+            out.diffs.iter().filter(|d| d.status == Status::Skipped).count(),
+            2
+        );
+        // The structural count still gates across configs...
+        new.cases[0].metrics[0].value = 999.0;
+        assert_eq!(compare(&new, &base, &th(), false).failures(), 1);
+        // ...and so does a missing metric (coverage rot is config-blind).
+        new.cases[0].metrics.remove(1);
+        new.cases[0].metrics[0].value = 384.0;
+        let out = compare(&new, &base, &th(), false);
+        assert_eq!(out.failures(), 1);
+        assert!(out.diffs.iter().any(|d| d.status == Status::Missing));
+    }
+
+    #[test]
+    fn unknown_kind_is_advisory() {
+        let base = report(vec![metric("x", 1.0, "from_the_future")]);
+        let new = report(vec![metric("x", 99.0, "from_the_future")]);
+        let out = compare(&new, &base, &th(), false);
+        assert!(out.passed());
+        assert_eq!(out.diffs[0].status, Status::Skipped);
+    }
+
+    #[test]
+    fn renders_table_and_markdown() {
+        let base = report(vec![metric("n", 384.0, kind::COUNT)]);
+        let new = report(vec![metric("n", 385.0, kind::COUNT)]);
+        let out = compare(&new, &base, &th(), false);
+        let table = out.table();
+        assert!(table.contains("c/n") && table.contains("REGRESSED"), "{table}");
+        let md = out.markdown();
+        assert!(md.contains("| c/n |") && md.contains("FAIL"), "{md}");
+        assert_eq!(out.diffs[0].delta_pct().map(|p| p.round()), Some(0.0));
+    }
+}

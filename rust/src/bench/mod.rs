@@ -1,0 +1,411 @@
+//! The unified benchmark subsystem (DESIGN.md §9).
+//!
+//! Every benchmark — the 15 paper tables/figures plus the perf and smoke
+//! suites — is a registered [`BenchDef`]: a name, a [`Tier`], and a run
+//! function over a [`BenchCtx`]. One driver ([`run_bench`]) owns the
+//! lifecycle all benches used to hand-roll: banner, backend, timing, and a
+//! typed [`report::BenchReport`] written to `BENCH_<name>.json`. The old
+//! `benches/bench_*.rs` binaries survive as thin wrappers over
+//! [`bench_main`], and the CLI drives the same registry via
+//! `cdnl bench list|run|compare` (`main.rs`).
+//!
+//! Tiers:
+//! - `smoke` — seconds; structural counts + hot-path micro timings; runs in
+//!   CI on every push and gates against the committed baseline;
+//! - `paper` — the table/figure grid (minutes in quick mode, hours under
+//!   `CDNL_BENCH_FULL=1`);
+//! - `perf`  — the §Perf microbenchmark suite.
+//!
+//! Reports land in `results/bench/BENCH_<name>.json`; committed baselines
+//! live at the repository root (`BENCH_<name>.json`), and
+//! `cdnl bench compare --gate` diffs the two ([`compare`]).
+
+pub mod compare;
+pub mod report;
+pub mod setup;
+pub mod suite;
+
+pub use compare::{compare as compare_reports, CompareOutcome, Status, Thresholds};
+pub use report::{BenchCase, BenchReport, HostInfo, Metric, BENCH_FORMAT};
+
+use crate::runtime::Backend;
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// Benchmark tier: how expensive it is and where it runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Smoke,
+    Paper,
+    Perf,
+}
+
+impl Tier {
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s {
+            "smoke" => Some(Tier::Smoke),
+            "paper" => Some(Tier::Paper),
+            "perf" => Some(Tier::Perf),
+            _ => None,
+        }
+    }
+
+    /// Canonical name, the inverse of [`Self::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Smoke => "smoke",
+            Tier::Paper => "paper",
+            Tier::Perf => "perf",
+        }
+    }
+}
+
+/// One registered benchmark.
+pub struct BenchDef {
+    /// Registry name; the report file is `BENCH_<name>.json`.
+    pub name: &'static str,
+    pub tier: Tier,
+    /// One-line description (the old per-bench banner text).
+    pub title: &'static str,
+    /// Paper artifact this bench regenerates ("Table 2", "Fig. 7", "-").
+    pub paper: &'static str,
+    pub run: fn(&mut BenchCtx) -> Result<()>,
+}
+
+/// Execution context handed to every suite function: the backend, the
+/// quick/full switch, and the metric sink the driver turns into a
+/// [`BenchReport`].
+pub struct BenchCtx<'e> {
+    pub engine: &'e dyn Backend,
+    /// `CDNL_BENCH_FULL=1` — suites use this instead of re-reading the env.
+    pub full: bool,
+    cases: Vec<BenchCase>,
+}
+
+impl<'e> BenchCtx<'e> {
+    pub fn new(engine: &'e dyn Backend) -> BenchCtx<'e> {
+        BenchCtx { engine, full: setup::full_mode(), cases: Vec::new() }
+    }
+
+    fn push(&mut self, case: &str, m: Metric) {
+        match self.cases.iter_mut().find(|c| c.name == case) {
+            Some(c) => c.metrics.push(m),
+            None => self.cases.push(BenchCase { name: case.to_string(), metrics: vec![m] }),
+        }
+    }
+
+    /// Record an exact-integer metric (gate: any change fails).
+    pub fn count(&mut self, case: &str, name: &str, value: usize, unit: &str) {
+        self.push(
+            case,
+            Metric {
+                name: name.to_string(),
+                value: value as f64,
+                unit: unit.to_string(),
+                kind: report::kind::COUNT.to_string(),
+                repeats: 1,
+            },
+        );
+    }
+
+    /// Record a deterministic float metric (gate: absolute tolerance band).
+    pub fn stat(&mut self, case: &str, name: &str, value: f64, unit: &str) {
+        self.push(
+            case,
+            Metric {
+                name: name.to_string(),
+                value,
+                unit: unit.to_string(),
+                kind: report::kind::STAT.to_string(),
+                repeats: 1,
+            },
+        );
+    }
+
+    /// Record a wall-time metric as the repeat-median of `samples_ms`.
+    pub fn time_ms(&mut self, case: &str, name: &str, samples_ms: &[f64]) {
+        self.push(
+            case,
+            Metric {
+                name: name.to_string(),
+                value: crate::util::percentile(samples_ms, 50.0),
+                unit: "ms".to_string(),
+                kind: report::kind::TIME_MS.to_string(),
+                repeats: samples_ms.len().max(1),
+            },
+        );
+    }
+
+    /// Record a throughput metric (higher is better).
+    pub fn rate(&mut self, case: &str, name: &str, value: f64, unit: &str) {
+        self.push(
+            case,
+            Metric {
+                name: name.to_string(),
+                value,
+                unit: unit.to_string(),
+                kind: report::kind::RATE.to_string(),
+                repeats: 1,
+            },
+        );
+    }
+}
+
+/// The benchmark registry — the single source of truth `cdnl bench list`,
+/// the thin `benches/*.rs` wrappers and CI all share.
+pub fn registry() -> &'static [BenchDef] {
+    &REGISTRY
+}
+
+static REGISTRY: [BenchDef; 16] = [
+    BenchDef {
+        name: "smoke",
+        tier: Tier::Smoke,
+        title: "structural manifest contract + hot-path micro timings",
+        paper: "-",
+        run: suite::smoke::run,
+    },
+    BenchDef {
+        name: "table1",
+        tier: Tier::Paper,
+        title: "Overall number of ReLUs per network x image size",
+        paper: "Table 1",
+        run: suite::table1::run,
+    },
+    BenchDef {
+        name: "table2",
+        tier: Tier::Paper,
+        title: "WideResNet-22-8: SNL vs Ours across budgets",
+        paper: "Table 2",
+        run: suite::table2::run,
+    },
+    BenchDef {
+        name: "table3",
+        tier: Tier::Paper,
+        title: "ResNet18: SNL vs Ours across budgets",
+        paper: "Table 3",
+        run: suite::table3::run,
+    },
+    BenchDef {
+        name: "fig1",
+        tier: Tier::Paper,
+        title: "Accuracy vs ReLU budget, ResNet18, 3 datasets, 4 methods",
+        paper: "Fig. 1",
+        run: suite::fig1::run,
+    },
+    BenchDef {
+        name: "fig3",
+        tier: Tier::Paper,
+        title: "Ours vs SENet, relative-to-baseline accuracy",
+        paper: "Fig. 3",
+        run: suite::fig3::run,
+    },
+    BenchDef {
+        name: "fig4",
+        tier: Tier::Paper,
+        title: "Ours on top of AutoReP, synth100, poly backbones",
+        paper: "Fig. 4",
+        run: suite::fig4::run,
+    },
+    BenchDef {
+        name: "fig5",
+        tier: Tier::Paper,
+        title: "BCD hyperparameter ablations (DRC / finetune / ADT)",
+        paper: "Fig. 5",
+        run: suite::fig5::run,
+    },
+    BenchDef {
+        name: "fig6",
+        tier: Tier::Paper,
+        title: "SNL mask IoU dynamics",
+        paper: "Fig. 6",
+        run: suite::fig6::run,
+    },
+    BenchDef {
+        name: "fig7",
+        tier: Tier::Paper,
+        title: "ReLU distribution across layers",
+        paper: "Fig. 7",
+        run: suite::fig7::run,
+    },
+    BenchDef {
+        name: "fig8",
+        tier: Tier::Paper,
+        title: "Ours vs SENet on the wide backbone (Fig. 3 harness)",
+        paper: "Fig. 8 (supp)",
+        run: suite::fig8::run,
+    },
+    BenchDef {
+        name: "fig9",
+        tier: Tier::Paper,
+        title: "SNL accuracy vs kappa; BCD overlay",
+        paper: "Fig. 9 (supp)",
+        run: suite::fig9::run,
+    },
+    BenchDef {
+        name: "fig10",
+        tier: Tier::Paper,
+        title: "SNL budget vs step + decrease-rate trace",
+        paper: "Fig. 10 (supp)",
+        run: suite::fig10::run,
+    },
+    BenchDef {
+        name: "fig11",
+        tier: Tier::Paper,
+        title: "SNL alpha trajectories vs lambda schedule",
+        paper: "Fig. 11 (supp)",
+        run: suite::fig11::run,
+    },
+    BenchDef {
+        name: "ablations",
+        tier: Tier::Paper,
+        title: "DRC schedule / granularity / hysteresis ablations",
+        paper: "beyond paper",
+        run: suite::ablations::run,
+    },
+    BenchDef {
+        name: "perf",
+        tier: Tier::Perf,
+        title: "L3 hot-path microbenchmarks",
+        paper: "§Perf",
+        run: suite::perf::run,
+    },
+];
+
+/// Look up one benchmark by registry name.
+pub fn find(name: &str) -> Result<&'static BenchDef> {
+    registry()
+        .iter()
+        .find(|d| d.name == name)
+        .ok_or_else(|| anyhow!("no benchmark {name:?} (try `cdnl bench list`)"))
+}
+
+/// All benchmarks of one tier, registry order.
+pub fn by_tier(tier: Tier) -> Vec<&'static BenchDef> {
+    registry().iter().filter(|d| d.tier == tier).collect()
+}
+
+/// Default location a fresh report is written to.
+pub fn default_report_dir() -> PathBuf {
+    PathBuf::from("results").join("bench")
+}
+
+/// `<dir>/BENCH_<name>.json`.
+pub fn report_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("BENCH_{name}.json"))
+}
+
+/// Run one benchmark on `engine` and build its typed report. The driver
+/// owns the banner, the wall clock, and the provenance fields; the suite
+/// function only measures and records.
+pub fn run_bench(def: &BenchDef, engine: &dyn Backend) -> Result<BenchReport> {
+    setup::banner(def.name, def.title);
+    let t0 = std::time::Instant::now();
+    let mut cx = BenchCtx::new(engine);
+    (def.run)(&mut cx)?;
+    Ok(BenchReport {
+        format: BENCH_FORMAT,
+        bench: def.name.to_string(),
+        tier: def.tier.name().to_string(),
+        backend: engine.name().to_string(),
+        full_mode: cx.full,
+        // Identity of the canonical bench-grid configuration: hyperparameter
+        // changes move this fingerprint, flagging reports as incomparable
+        // instead of mysteriously regressed.
+        config_fingerprint: setup::experiment("synth10", "resnet", false).fingerprint(),
+        host: HostInfo::current(),
+        created_unix: crate::runstore::manifest::now_unix(),
+        wall_secs: t0.elapsed().as_secs_f64(),
+        cases: cx.cases,
+    })
+}
+
+/// Run one benchmark, persist its report under `report_dir`, and print the
+/// one-line summary — the shared tail of [`bench_main`] and the CLI's
+/// `cdnl bench run` (main.rs), so the two entry points cannot drift.
+pub fn run_and_save(
+    def: &BenchDef,
+    engine: &dyn Backend,
+    report_dir: &Path,
+) -> Result<BenchReport> {
+    let report = run_bench(def, engine)?;
+    let path = report_path(report_dir, def.name);
+    report.save(&path)?;
+    println!(
+        "\nreport: {} ({} cases, {} metrics, {:.1}s) -> {}",
+        report.bench,
+        report.cases.len(),
+        report.num_metrics(),
+        report.wall_secs,
+        path.display()
+    );
+    Ok(report)
+}
+
+/// Entry point for the thin `benches/bench_<name>.rs` wrappers (`cargo
+/// bench --bench bench_<name>`): open the auto backend, run, persist the
+/// report to [`default_report_dir`].
+pub fn bench_main(name: &str) -> Result<()> {
+    let def = find(name)?;
+    let engine = setup::engine();
+    run_and_save(def, engine.as_ref(), &default_report_dir())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_findable() {
+        let mut seen = std::collections::HashSet::new();
+        for d in registry() {
+            assert!(seen.insert(d.name), "duplicate bench name {}", d.name);
+            assert!(find(d.name).is_ok());
+            assert!(!d.title.is_empty() && !d.paper.is_empty());
+        }
+        assert!(find("nope").is_err());
+        assert_eq!(registry().len(), 16);
+    }
+
+    #[test]
+    fn tiers_parse_and_partition() {
+        for t in [Tier::Smoke, Tier::Paper, Tier::Perf] {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+        }
+        assert_eq!(Tier::parse("bogus"), None);
+        assert_eq!(by_tier(Tier::Smoke).len(), 1);
+        assert_eq!(by_tier(Tier::Perf).len(), 1);
+        assert_eq!(
+            by_tier(Tier::Paper).len() + 2,
+            registry().len(),
+            "every bench belongs to exactly one tier"
+        );
+    }
+
+    #[test]
+    fn ctx_records_metric_kinds() {
+        let be = crate::runtime::RefBackend::standard();
+        let mut cx = BenchCtx::new(&be);
+        cx.count("c", "n", 384, "relus");
+        cx.stat("c", "acc", 61.5, "%");
+        cx.time_ms("c", "op", &[3.0, 1.0, 2.0]);
+        cx.rate("c2", "hps", 100.0, "hyp/s");
+        assert_eq!(cx.cases.len(), 2);
+        let m = &cx.cases[0].metrics;
+        assert_eq!(m.len(), 3);
+        assert_eq!(m[2].value, 2.0, "time_ms must record the median");
+        assert_eq!(m[2].repeats, 3);
+        assert_eq!(m[0].kind, report::kind::COUNT);
+        assert_eq!(m[1].kind, report::kind::STAT);
+        assert_eq!(cx.cases[1].metrics[0].kind, report::kind::RATE);
+    }
+
+    #[test]
+    fn report_paths() {
+        assert_eq!(
+            report_path(Path::new("x"), "smoke"),
+            PathBuf::from("x").join("BENCH_smoke.json")
+        );
+    }
+}

@@ -1,0 +1,243 @@
+//! `BENCH_<name>.json` — the machine-readable result of one benchmark run
+//! (DESIGN.md §9).
+//!
+//! A [`BenchReport`] is the typed, serde-backed dual of what the benches
+//! used to print ad hoc: per-case metric groups, each metric tagged with a
+//! *kind* that tells the comparator how to judge a change, plus enough
+//! provenance (config fingerprint, backend, host, quick/full mode, format
+//! version) to know when two reports are even comparable. Reports are
+//! written atomically (like `run.json`) and round-trip bit-identically
+//! through [`crate::util::serde`] — `rust/tests/integration_bench.rs`
+//! asserts it.
+//!
+//! Metric kinds and their comparison semantics (see
+//! [`crate::bench::compare`]):
+//!
+//! | kind      | meaning                      | gate policy                |
+//! |-----------|------------------------------|----------------------------|
+//! | `count`   | exact integer contract       | any change fails           |
+//! | `stat`    | deterministic float (acc, …) | absolute tolerance band    |
+//! | `time_ms` | wall time, repeat-median     | rel. tol + noise floor;    |
+//! |           |                              | advisory across hosts      |
+//! | `rate`    | throughput (higher = better) | relative tolerance,        |
+//! |           |                              | advisory across hosts      |
+
+use crate::derive_serde;
+use crate::runstore::write_atomic;
+use crate::util::serde as sd;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// On-disk format version; [`BenchReport::load`] rejects anything else.
+pub const BENCH_FORMAT: usize = 1;
+
+/// Metric-kind tags (plain strings on disk; `derive_serde!` has no enums).
+pub mod kind {
+    /// Exact integer contract (manifest sizes, layer counts): any drift is
+    /// a gate failure that must be re-blessed deliberately.
+    pub const COUNT: &str = "count";
+    /// Deterministic float (accuracies, losses): compared with an absolute
+    /// tolerance band.
+    pub const STAT: &str = "stat";
+    /// Wall time in milliseconds (repeat-median): relative tolerance plus
+    /// an absolute noise floor; advisory unless the hosts match.
+    pub const TIME_MS: &str = "time_ms";
+    /// Throughput, higher is better: relative tolerance; advisory unless
+    /// the hosts match.
+    pub const RATE: &str = "rate";
+}
+
+/// One measured value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    /// Display unit ("relus", "%", "ms", "hyp/s", ...).
+    pub unit: String,
+    /// One of the [`kind`] tags.
+    pub kind: String,
+    /// Samples folded into `value` (median); 1 for single observations.
+    pub repeats: usize,
+}
+derive_serde!(Metric { name, value, unit, kind, repeats });
+
+/// A named group of metrics (one scenario / model / budget point).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchCase {
+    pub name: String,
+    pub metrics: Vec<Metric>,
+}
+derive_serde!(BenchCase { name, metrics });
+
+/// Host provenance: enough to decide whether wall-clock comparisons
+/// against a baseline mean anything.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostInfo {
+    pub os: String,
+    pub arch: String,
+    pub cpus: usize,
+}
+derive_serde!(HostInfo { os, arch, cpus });
+
+impl HostInfo {
+    pub fn current() -> HostInfo {
+        HostInfo {
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            cpus: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+
+    /// Identity string for timing comparability ("linux/x86_64/8").
+    pub fn fingerprint(&self) -> String {
+        format!("{}/{}/{}", self.os, self.arch, self.cpus)
+    }
+}
+
+/// The `BENCH_<name>.json` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub format: usize,
+    /// Registry name ("smoke", "fig1", "perf", ...).
+    pub bench: String,
+    /// Registry tier ("smoke" | "paper" | "perf").
+    pub tier: String,
+    /// Backend that produced the numbers ("reference" | "pjrt").
+    pub backend: String,
+    /// True when CDNL_BENCH_FULL=1 selected the full paper grid. Full and
+    /// quick reports measure different workloads: the comparator gates
+    /// only structural `count` metrics across the mode boundary and
+    /// downgrades everything else to advisory.
+    pub full_mode: bool,
+    /// Fingerprint of the canonical bench experiment configuration
+    /// ([`crate::bench::setup::experiment`] on the default grid), so a
+    /// hyperparameter change shows up as an identity change rather than a
+    /// mysterious regression.
+    pub config_fingerprint: String,
+    pub host: HostInfo,
+    pub created_unix: usize,
+    /// Whole-benchmark wall time (provenance, never gated).
+    pub wall_secs: f64,
+    pub cases: Vec<BenchCase>,
+}
+derive_serde!(BenchReport {
+    format,
+    bench,
+    tier,
+    backend,
+    full_mode,
+    config_fingerprint,
+    host,
+    created_unix,
+    wall_secs,
+    cases,
+});
+
+impl BenchReport {
+    /// Look up one metric by (case, name).
+    pub fn metric(&self, case: &str, name: &str) -> Option<&Metric> {
+        self.cases
+            .iter()
+            .find(|c| c.name == case)
+            .and_then(|c| c.metrics.iter().find(|m| m.name == name))
+    }
+
+    /// Total metric count across cases.
+    pub fn num_metrics(&self) -> usize {
+        self.cases.iter().map(|c| c.metrics.len()).sum()
+    }
+
+    /// Atomically write `self` as pretty JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(path, sd::to_string_pretty(self).as_bytes())
+            .with_context(|| format!("writing bench report {path:?}"))
+    }
+
+    /// Load + format-check a report.
+    pub fn load(path: &Path) -> Result<BenchReport> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let r: BenchReport =
+            sd::from_str(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        if r.format != BENCH_FORMAT {
+            bail!(
+                "{path:?}: bench report format {} unsupported (this build reads format {BENCH_FORMAT})",
+                r.format
+            );
+        }
+        Ok(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        BenchReport {
+            format: BENCH_FORMAT,
+            bench: "smoke".into(),
+            tier: "smoke".into(),
+            backend: "reference".into(),
+            full_mode: false,
+            config_fingerprint: "0123456789abcdef".into(),
+            host: HostInfo { os: "linux".into(), arch: "x86_64".into(), cpus: 8 },
+            created_unix: 1_700_000_000,
+            wall_secs: 1.25,
+            cases: vec![BenchCase {
+                name: "resnet_16x16_c10".into(),
+                metrics: vec![
+                    Metric {
+                        name: "mask_size".into(),
+                        value: 384.0,
+                        unit: "relus".into(),
+                        kind: kind::COUNT.into(),
+                        repeats: 1,
+                    },
+                    Metric {
+                        name: "eval_batch".into(),
+                        value: 0.75,
+                        unit: "ms".into(),
+                        kind: kind::TIME_MS.into(),
+                        repeats: 10,
+                    },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_lookup() {
+        let r = sample();
+        let text = sd::to_string_pretty(&r);
+        let back: BenchReport = sd::from_str(&text).unwrap();
+        assert_eq!(back, r);
+        // Serialization is canonical: a second pass is byte-identical.
+        assert_eq!(sd::to_string_pretty(&back), text);
+        assert_eq!(r.metric("resnet_16x16_c10", "mask_size").unwrap().value, 384.0);
+        assert!(r.metric("resnet_16x16_c10", "nope").is_none());
+        assert!(r.metric("nope", "mask_size").is_none());
+        assert_eq!(r.num_metrics(), 2);
+    }
+
+    #[test]
+    fn save_load_rejects_foreign_format() {
+        let dir = std::env::temp_dir().join(format!("cdnl_bench_report_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("BENCH_smoke.json");
+        let r = sample();
+        r.save(&path).unwrap();
+        assert_eq!(BenchReport::load(&path).unwrap(), r);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"format\": 1", "\"format\": 99")).unwrap();
+        let err = format!("{:#}", BenchReport::load(&path).unwrap_err());
+        assert!(err.contains("format 99"), "bad error: {err}");
+    }
+
+    #[test]
+    fn host_fingerprint_shape() {
+        let h = HostInfo::current();
+        assert!(h.cpus >= 1);
+        assert_eq!(h.fingerprint(), format!("{}/{}/{}", h.os, h.arch, h.cpus));
+    }
+}

@@ -1,0 +1,88 @@
+//! Figure 11 (supplementary): trajectories of individual SNL α values
+//! (the soft mask entries) against the λ schedule.
+//!
+//! Shape criteria: αs decay slowly toward the threshold; threshold
+//! crossings correlate with λ←κ·λ update events.
+
+use crate::bench::{setup, BenchCtx};
+use crate::methods::snl::run_snl;
+use crate::metrics::{ascii_plot, write_csv, Series};
+use crate::pipeline::Pipeline;
+use anyhow::Result;
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+    let exp = setup::experiment("synth100", "resnet", false);
+    let pl = Pipeline::new(engine, exp)?;
+    let total = pl.sess.info().total_relus();
+    let target = setup::scale_budget(15e3, total, "resnet", 16);
+
+    let mut st = pl.baseline()?;
+    let mut cfg = pl.exp.snl.clone();
+    cfg.steps_per_check = 2;
+    let tracked = 8;
+    let out = run_snl(&pl.sess, &mut st, &pl.train_ds, target, &cfg, tracked)?;
+
+    let series: Vec<Series> = out
+        .alpha_traces
+        .iter()
+        .enumerate()
+        .map(|(k, tr)| {
+            Series::new(
+                &format!("alpha[{}]", out.alpha_indices[k]),
+                tr.iter()
+                    .enumerate()
+                    .map(|(i, &a)| ((i * cfg.steps_per_check) as f64, a as f64))
+                    .collect(),
+            )
+        })
+        .collect();
+    println!(
+        "\n{}",
+        ascii_plot(
+            &format!(
+                "Fig. 11 — {} tracked alphas over SNL steps (κ updates at {:?})",
+                tracked, out.kappa_updates
+            ),
+            &series,
+            64,
+            14
+        )
+    );
+
+    let mut rows = Vec::new();
+    for (ci, _) in out.budget_trace.iter().enumerate() {
+        let mut row = vec![(ci * cfg.steps_per_check).to_string()];
+        for tr in &out.alpha_traces {
+            row.push(format!("{:.4}", tr[ci]));
+        }
+        rows.push(row);
+    }
+    let header: Vec<String> = std::iter::once("step".to_string())
+        .chain(out.alpha_indices.iter().map(|i| format!("alpha_{i}")))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    write_csv(&setup::results_csv("fig11"), &header_refs, &rows)?;
+
+    // Shape: alphas decay on average; some hover near the 0.5 threshold.
+    let mut decayed = 0;
+    let mut hovered = 0;
+    for tr in &out.alpha_traces {
+        if tr.last().unwrap_or(&1.0) < tr.first().unwrap_or(&1.0) {
+            decayed += 1;
+        }
+        if tr.iter().any(|&a| (a - cfg.threshold).abs() < 0.15) {
+            hovered += 1;
+        }
+    }
+    cx.count("alphas", "tracked", out.alpha_traces.len(), "alphas");
+    cx.stat("alphas", "decayed", decayed as f64, "alphas");
+    cx.stat("alphas", "hovered_near_threshold", hovered as f64, "alphas");
+    println!(
+        "\nshape: {decayed}/{} alphas decayed, {hovered}/{} passed near the threshold, {} κ updates",
+        out.alpha_traces.len(),
+        out.alpha_traces.len(),
+        out.kappa_updates.len()
+    );
+    Ok(())
+}

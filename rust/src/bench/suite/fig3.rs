@@ -1,0 +1,93 @@
+//! Figure 3: Ours vs SENet on the ResNet18 backbone, in the paper's
+//! baseline-agnostic metric: accuracy-at-budget / baseline accuracy.
+//! Figure 8 (supplementary) reruns the same harness on the wide backbone
+//! via [`run_with`].
+//!
+//! Shape criterion: Ours reaches the Pareto frontier on the CIFAR-100 and
+//! TinyImageNet analogs, stays competitive on the CIFAR-10 analog.
+
+use crate::bench::{setup, BenchCtx};
+use crate::methods::senet::{run_senet, SenetConfig};
+use crate::metrics::{ascii_plot, print_table, write_csv, Series};
+use crate::pipeline::Pipeline;
+use anyhow::Result;
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    run_with(cx, "resnet", "fig3")
+}
+
+pub fn run_with(cx: &mut BenchCtx, backbone: &str, id: &str) -> Result<()> {
+    let engine = cx.engine;
+    let datasets: Vec<&str> = if cx.full {
+        vec!["synth10", "synth100", "synthtiny"]
+    } else {
+        vec!["synth100"]
+    };
+    let paper_budgets: &[f64] = &[50e3, 120e3, 180e3];
+    let quick_n = 2;
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for dataset in datasets {
+        let exp = setup::experiment(dataset, backbone, false);
+        let pl = Pipeline::new(engine, exp)?;
+        let total = pl.sess.info().total_relus();
+        let size = pl.sess.info().image_size;
+        let budgets: Vec<usize> = setup::grid(paper_budgets, quick_n)
+            .iter()
+            .map(|&b| setup::scale_budget(b, total, backbone, size))
+            .collect();
+        let baseline = pl.baseline()?;
+        let base_acc = pl.test_acc(&baseline)?;
+
+        let mut s_ours = Series::new("ours", vec![]);
+        let mut s_senet = Series::new("senet", vec![]);
+        for &budget in &budgets {
+            let bref = setup::bref_for(&pl.exp, total, budget);
+            let ours = pl.bcd_cached(&pl.snl_ref(bref)?, budget)?;
+            let ours_rel = pl.test_acc(&ours)? / base_acc;
+            let mut st_se = baseline.clone();
+            run_senet(&pl.sess, &mut st_se, &pl.train_ds, budget, &SenetConfig::default())?;
+            let senet_rel = pl.test_acc(&st_se)? / base_acc;
+            println!("[{dataset}] b={budget}: ours {ours_rel:.3} senet {senet_rel:.3} (rel. to {base_acc:.2}%)");
+            let case = format!("{dataset}/b{budget}");
+            cx.stat(&case, "ours_rel", ours_rel, "x");
+            cx.stat(&case, "senet_rel", senet_rel, "x");
+            s_ours.points.push((budget as f64, ours_rel));
+            s_senet.points.push((budget as f64, senet_rel));
+            rows.push(vec![
+                dataset.to_string(),
+                budget.to_string(),
+                format!("{ours_rel:.3}"),
+                format!("{senet_rel:.3}"),
+            ]);
+            csv.push(vec![
+                dataset.to_string(),
+                budget.to_string(),
+                format!("{ours_rel:.4}"),
+                format!("{senet_rel:.4}"),
+                format!("{base_acc:.3}"),
+            ]);
+        }
+        println!(
+            "\n{}",
+            ascii_plot(
+                &format!("{id} ({dataset}) — acc/baseline vs budget"),
+                &[s_ours, s_senet],
+                60,
+                12
+            )
+        );
+    }
+    print_table(
+        &format!("Figure {id} — relative accuracy (acc@budget / baseline acc)"),
+        &["dataset", "budget", "ours", "senet"],
+        &rows,
+    );
+    write_csv(
+        &setup::results_csv(id),
+        &["dataset", "budget", "ours_rel", "senet_rel", "baseline_acc"],
+        &csv,
+    )?;
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Figure 4: Ours on top of AutoReP (CIFAR-100 analog), ResNet18 and
+//! WideResNet-22-8 poly variants.
+//!
+//! Shape criterion: BCD run from an AutoReP reference reaches AutoReP's
+//! accuracy with roughly half the ReLU budget.
+
+use crate::bench::{setup, BenchCtx};
+use crate::metrics::{ascii_plot, print_table, write_csv, Series};
+use crate::pipeline::Pipeline;
+use anyhow::Result;
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+    let backbones: Vec<&str> = if cx.full {
+        vec!["resnet", "wrn"]
+    } else {
+        vec!["resnet"]
+    };
+    let paper_budgets: &[f64] = &[50e3, 100e3, 150e3];
+    let quick_n = 2;
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for backbone in backbones {
+        let exp = setup::experiment("synth100", backbone, true);
+        let pl = Pipeline::new(engine, exp)?;
+        let total = pl.sess.info().total_relus();
+        let size = pl.sess.info().image_size;
+        let budgets: Vec<usize> = setup::grid(paper_budgets, quick_n)
+            .iter()
+            .map(|&b| setup::scale_budget(b, total, backbone, size))
+            .collect();
+
+        let mut s_arp = Series::new("autorep", vec![]);
+        let mut s_ours = Series::new("ours on autorep", vec![]);
+        for &budget in &budgets {
+            let bref = setup::bref_for(&pl.exp, total, budget);
+            // AutoReP straight to the target...
+            let arp = pl.autorep_ref(budget)?;
+            let arp_acc = pl.test_acc(&arp)?;
+            // ...vs BCD from the AutoReP reference at B_ref.
+            let ours = pl.bcd_cached(&pl.autorep_ref(bref)?, budget)?;
+            let ours_acc = pl.test_acc(&ours)?;
+            println!("[{backbone}] b={budget}: autorep {arp_acc:.2}%  ours {ours_acc:.2}%");
+            let case = format!("{backbone}/b{budget}");
+            cx.stat(&case, "autorep_acc", arp_acc, "%");
+            cx.stat(&case, "ours_acc", ours_acc, "%");
+            s_arp.points.push((budget as f64, arp_acc));
+            s_ours.points.push((budget as f64, ours_acc));
+            rows.push(vec![
+                backbone.to_string(),
+                budget.to_string(),
+                format!("{arp_acc:.2}"),
+                format!("{ours_acc:.2}"),
+                format!("{:+.2}", ours_acc - arp_acc),
+            ]);
+            csv.push(vec![
+                backbone.to_string(),
+                budget.to_string(),
+                bref.to_string(),
+                format!("{arp_acc:.3}"),
+                format!("{ours_acc:.3}"),
+            ]);
+        }
+        println!(
+            "\n{}",
+            ascii_plot(
+                &format!("Fig. 4 ({backbone}, synth100) — Accuracy vs budget"),
+                &[s_ours.clone(), s_arp.clone()],
+                60,
+                12
+            )
+        );
+        // Half-budget criterion: ours at the LOWEST budget vs autorep at ~2x.
+        if s_ours.points.len() >= 2 {
+            let (b_low, ours_low) = s_ours.points[0];
+            let arp_best = s_arp
+                .points
+                .iter()
+                .filter(|(b, _)| *b >= 2.0 * b_low)
+                .map(|&(_, a)| a)
+                .fold(f64::NEG_INFINITY, f64::max);
+            if arp_best.is_finite() {
+                println!(
+                    "[{backbone}] half-budget check: ours@{b_low} = {ours_low:.2}% vs autorep@>=2x = {arp_best:.2}% {}",
+                    if ours_low >= arp_best - 1.0 { "(holds)" } else { "(gap)" }
+                );
+            }
+        }
+    }
+    print_table(
+        "Figure 4 — Ours on top of AutoReP (synth100)",
+        &["backbone", "budget", "autorep", "ours", "gap"],
+        &rows,
+    );
+    write_csv(
+        &setup::results_csv("fig4"),
+        &["backbone", "budget", "bref", "autorep_acc", "ours_acc"],
+        &csv,
+    )?;
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Figure 5: hyperparameter ablations on the ResNet18 / CIFAR-100-analog
+//! setting — (a) DRC, (b) finetune epochs, (c) ADT.
+//!
+//! Shape criteria: accuracy decreases as DRC increases (fewer CD iterations,
+//! Eq. 3/6); accuracy increases (saturating) with finetune steps; ADT is
+//! roughly flat.
+
+use crate::bench::{setup, BenchCtx};
+use crate::config::Experiment;
+use crate::metrics::{ascii_plot, print_table, write_csv, Series};
+use crate::pipeline::Pipeline;
+use anyhow::Result;
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+    let exp = setup::experiment("synth100", "resnet", false);
+    let pl = Pipeline::new(engine, exp)?;
+    let total = pl.sess.info().total_relus();
+
+    // Paper setting: B_ref = 30K, B_target = 15K (of 570K) => scaled ~2x.
+    let target = setup::scale_budget(15e3, total, "resnet", 16).max(200);
+    let bref = (2 * target).min(total);
+    let reference = pl.snl_ref(bref)?;
+    println!("ablation base: B_ref={bref} -> B_target={target}");
+
+    let drcs: Vec<usize> = setup::grid(&[50, 100, 200, 400], 2);
+    let fts: Vec<usize> = setup::grid(&[2, 8, 16, 32], 2);
+    let adts: Vec<f64> = setup::grid(&[0.1, 0.3, 1.0, 3.0], 2);
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut run_one = |knob: &str, value: String, exp2: Experiment| -> Result<f64> {
+        let pl2 = Pipeline::new(engine, exp2)?;
+        let (st, out) = pl2.bcd_from(&reference, target)?;
+        let acc = pl2.test_acc(&st)?;
+        println!("[{knob}={value}] acc {acc:.2}%  ({} iters, {} trials)", out.iterations.len(), out.total_trials());
+        rows.push(vec![knob.to_string(), value.clone(), format!("{acc:.2}")]);
+        csv.push(vec![knob.to_string(), value, format!("{acc:.3}")]);
+        Ok(acc)
+    };
+
+    // (a) DRC sweep.
+    let mut s_drc = Series::new("acc vs DRC", vec![]);
+    for &drc in &drcs {
+        let mut e = setup::experiment("synth100", "resnet", false);
+        e.bcd.drc = drc;
+        let acc = run_one("drc", drc.to_string(), e)?;
+        s_drc.points.push((drc as f64, acc));
+    }
+    // (b) finetune steps sweep.
+    let mut s_ft = Series::new("acc vs finetune steps", vec![]);
+    for &ft in &fts {
+        let mut e = setup::experiment("synth100", "resnet", false);
+        e.bcd.finetune_steps = ft;
+        let acc = run_one("finetune_steps", ft.to_string(), e)?;
+        s_ft.points.push((ft as f64, acc));
+    }
+    // (c) ADT sweep.
+    let mut s_adt = Series::new("acc vs ADT", vec![]);
+    for &adt in &adts {
+        let mut e = setup::experiment("synth100", "resnet", false);
+        e.bcd.adt = adt;
+        let acc = run_one("adt", format!("{adt}"), e)?;
+        s_adt.points.push((adt, acc));
+    }
+    for s in [&s_drc, &s_ft, &s_adt] {
+        for &(x, acc) in &s.points {
+            // Series label doubles as the case name; knob value keys the metric.
+            let knob = match s.label.as_str() {
+                "acc vs DRC" => "drc",
+                "acc vs finetune steps" => "finetune_steps",
+                _ => "adt",
+            };
+            cx.stat(knob, &format!("acc@{x}"), acc, "%");
+        }
+    }
+
+    for s in [&s_drc, &s_ft, &s_adt] {
+        println!("\n{}", ascii_plot(&s.label.clone(), std::slice::from_ref(s), 50, 10));
+    }
+    print_table(
+        "Figure 5 — hyperparameter ablations (synth100 / ResNet18)",
+        &["knob", "value", "test_acc"],
+        &rows,
+    );
+    write_csv(&setup::results_csv("fig5"), &["knob", "value", "test_acc"], &csv)?;
+
+    // Shape criteria (soft; report rather than assert in quick mode).
+    let inc = |s: &Series| s.points.windows(2).all(|w| w[1].1 >= w[0].1 - 1.0);
+    let dec = |s: &Series| s.points.windows(2).all(|w| w[1].1 <= w[0].1 + 1.0);
+    println!("\nshape: DRC↑→acc↓ {}; finetune↑→acc↑ {}; ADT flat-ish {}",
+        dec(&s_drc), inc(&s_ft),
+        s_adt.points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max)
+            - s_adt.points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min) < 5.0
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Figure 6: IoU of binarized ReLU masks along an SNL optimization path —
+//! the mask-dynamics evidence motivating BCD's never-revisit design.
+//!
+//! (a) IoU of consecutive snapshots; (b) IoU over all snapshot pairs
+//! (B1 < B2). Shape criterion: consistently high IoU (paper: > 0.85),
+//! i.e. masks mostly shrink rather than churn.
+
+use crate::bench::{setup, BenchCtx};
+use crate::methods::snl::{consecutive_iou, run_snl};
+use crate::metrics::{ascii_plot, print_table, write_csv, Series};
+use crate::pipeline::Pipeline;
+use anyhow::Result;
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+    let exp = setup::experiment("synth100", "resnet", false);
+    let pl = Pipeline::new(engine, exp)?;
+    let total = pl.sess.info().total_relus();
+    let target = setup::scale_budget(30e3, total, "resnet", 16);
+
+    // One SNL path from the trained baseline down to the 30K-analog,
+    // recording a mask snapshot at every schedule check.
+    let mut st = pl.baseline()?;
+    let mut snl_cfg = pl.exp.snl.clone();
+    snl_cfg.steps_per_check = 2;
+    let out = run_snl(&pl.sess, &mut st, &pl.train_ds, target, &snl_cfg, 0)?;
+    println!("snl path: {} steps, {} snapshots", out.steps_run, out.snapshots.len());
+
+    // (a) consecutive-pair IoU over the path.
+    let cons = consecutive_iou(&out.snapshots);
+    let s_cons = Series::new(
+        "consecutive IoU",
+        cons.iter().enumerate().map(|(i, &v)| (i as f64, v)).collect(),
+    );
+    println!("\n{}", ascii_plot("Fig. 6a — consecutive mask IoU over SNL checks", &[s_cons], 60, 10));
+
+    // (b) all pairs (B1 < B2): containment of the smaller-budget mask in the
+    // larger-budget one.
+    let mut pair_rows = Vec::new();
+    let mut min_iou: f64 = 1.0;
+    let mut below_085 = 0usize;
+    let mut n_pairs = 0usize;
+    for i in 0..out.snapshots.len() {
+        for j in (i + 1)..out.snapshots.len() {
+            let (b2, ref m2) = out.snapshots[i]; // earlier => larger budget
+            let (b1, ref m1) = out.snapshots[j];
+            if b1 >= b2 {
+                continue;
+            }
+            let iou = m1.containment(m2);
+            min_iou = min_iou.min(iou);
+            below_085 += (iou < 0.85) as usize;
+            n_pairs += 1;
+            pair_rows.push(vec![
+                b1.to_string(),
+                b2.to_string(),
+                format!("{iou:.4}"),
+            ]);
+        }
+    }
+    write_csv(&setup::results_csv("fig6"), &["b1", "b2", "iou"], &pair_rows)?;
+    cx.stat("iou", "min_pairwise", min_iou, "iou");
+    cx.stat("iou", "pairs_below_085", below_085 as f64, "pairs");
+
+    let show = pair_rows.iter().take(10).cloned().collect::<Vec<_>>();
+    print_table("Figure 6b — pairwise mask IoU (first rows)", &["B1", "B2", "IoU"], &show);
+    println!(
+        "\npairs: {n_pairs}, min IoU {min_iou:.3}, below 0.85: {below_085} \
+         (paper: all pairs above 0.85 => a shrinking 'golden set' of ReLUs)"
+    );
+    Ok(())
+}

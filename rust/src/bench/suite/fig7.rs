@@ -1,0 +1,80 @@
+//! Figure 7: ReLU distribution across layers — the original network, SNL at
+//! B_ref, SNL at B_target, and Ours (BCD) at B_target.
+//!
+//! Shape criterion: ours tracks the SNL-reference distribution shape;
+//! deeper layers lose proportionally more ReLUs.
+
+use crate::bench::{setup, BenchCtx};
+use crate::metrics::{print_table, write_csv};
+use crate::pipeline::Pipeline;
+use anyhow::{ensure, Result};
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+    let exp = setup::experiment("synth100", "resnet", false);
+    let pl = Pipeline::new(engine, exp)?;
+    let info = pl.sess.info();
+    let total = info.total_relus();
+
+    let target = setup::scale_budget(15e3, total, "resnet", 16);
+    let bref = (2 * target).min(total);
+
+    let snl_ref = pl.snl_ref(bref)?;
+    let snl_tgt = pl.snl_ref(target)?;
+    let ours = pl.bcd_cached(&snl_ref, target)?;
+
+    let h_orig: Vec<usize> = info.mask_layers.iter().map(|e| e.size).collect();
+    let h_ref = snl_ref.mask.layer_histogram(info);
+    let h_tgt = snl_tgt.mask.layer_histogram(info);
+    let h_ours = ours.mask.layer_histogram(info);
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for (l, e) in info.mask_layers.iter().enumerate() {
+        rows.push(vec![
+            l.to_string(),
+            e.name.clone(),
+            h_orig[l].to_string(),
+            h_ref[l].to_string(),
+            h_tgt[l].to_string(),
+            h_ours[l].to_string(),
+        ]);
+        csv.push(vec![
+            l.to_string(),
+            e.name.clone(),
+            h_orig[l].to_string(),
+            h_ref[l].to_string(),
+            h_tgt[l].to_string(),
+            h_ours[l].to_string(),
+        ]);
+    }
+    print_table(
+        &format!("Figure 7 — ReLUs kept per layer (orig / SNL@{bref} / SNL@{target} / Ours@{target})"),
+        &["#", "layer", "orig", "snl_ref", "snl_tgt", "ours"],
+        &rows,
+    );
+    write_csv(
+        &setup::results_csv("fig7"),
+        &["layer_idx", "layer", "orig", "snl_ref", "snl_tgt", "ours"],
+        &csv,
+    )?;
+
+    // Shape: ours ends exactly on budget and correlates with the SNL-ref
+    // distribution (rank correlation proxy: top-quartile overlap).
+    let ours_total: usize = h_ours.iter().sum();
+    ensure!(ours_total == target, "ours ended at {ours_total} ReLUs, target {target}");
+    cx.count("shape", "ours_budget", ours_total, "relus");
+    let top = |h: &[usize]| {
+        let mut idx: Vec<usize> = (0..h.len()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(h[i]));
+        idx.truncate((h.len() / 4).max(1));
+        idx.into_iter().collect::<std::collections::HashSet<_>>()
+    };
+    let overlap = top(&h_ours).intersection(&top(&h_ref)).count();
+    cx.stat("shape", "top_quartile_overlap", overlap as f64, "layers");
+    println!(
+        "\nshape: ours top-quartile layers overlap SNL-ref top-quartile in {overlap}/{} slots",
+        (info.mask_layers.len() / 4).max(1)
+    );
+    Ok(())
+}

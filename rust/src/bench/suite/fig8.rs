@@ -1,0 +1,9 @@
+//! Figure 8 (supplementary): Ours vs SENet on the WideResNet-22-8 backbone,
+//! relative-to-baseline metric — same harness as Fig. 3, wide backbone.
+
+use crate::bench::BenchCtx;
+use anyhow::Result;
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    super::fig3::run_with(cx, "wrn", "fig8")
+}

@@ -1,0 +1,26 @@
+//! Benchmark implementations, one module per registry entry.
+//!
+//! These are the bodies of the old `benches/bench_*.rs` binaries, moved
+//! into the library so the registry (`cdnl bench run`) and the thin cargo
+//! bench wrappers share one implementation. Each module exposes
+//! `pub fn run(&mut BenchCtx) -> Result<()>`: it prints the same tables /
+//! ASCII figures as before, writes the same `results/<id>.csv`, and
+//! additionally records typed metrics into the context's
+//! [`crate::bench::report::BenchReport`].
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig10;
+pub mod fig11;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod perf;
+pub mod smoke;
+pub mod table1;
+pub mod table2;
+pub mod table3;

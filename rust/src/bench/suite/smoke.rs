@@ -1,0 +1,91 @@
+//! Smoke tier: the CI gate benchmark (seconds, reference backend).
+//!
+//! Two case groups:
+//!
+//! 1. **Structural manifest contract** — per-model ReLU pool sizes,
+//!    parameter-vector lengths and mask-layer counts, plus the model count
+//!    and batch size. These are `count` metrics: exact, host-independent,
+//!    and the substance of the committed `BENCH_smoke.json` baseline — a
+//!    model-shape drift fails `cdnl bench compare --gate` until the
+//!    baseline is deliberately re-blessed.
+//! 2. **Hot-path micro timings** — mask upload, host/buffer `eval_batch`,
+//!    and a small trial scan. `time_ms` metrics gate only against a
+//!    same-host baseline (DESIGN.md §9); across hosts they are advisory.
+
+use crate::bench::BenchCtx;
+use crate::coordinator::eval::Evaluator;
+use crate::coordinator::trials::{scan_trials, BlockSampler};
+use crate::data::synth;
+use crate::runtime::session::Session;
+use crate::runtime::Backend;
+use crate::util::bench::time;
+use crate::util::prng::Rng;
+use anyhow::Result;
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+
+    // --- 1: structural manifest contract ------------------------------------
+    let manifest = engine.manifest();
+    cx.count("manifest", "models", manifest.models.len(), "models");
+    cx.count("manifest", "batch", manifest.batch, "examples");
+    for (key, m) in &manifest.models {
+        cx.count(key, "mask_size", m.mask_size, "relus");
+        cx.count(key, "param_size", m.param_size, "params");
+        cx.count(key, "mask_layers", m.mask_layers.len(), "layers");
+    }
+    println!(
+        "manifest: {} models, batch {}",
+        manifest.models.len(),
+        manifest.batch
+    );
+
+    // --- 2: hot-path micro timings -------------------------------------------
+    let sess = Session::new(engine, "resnet_16x16_c10")?;
+    let (train_ds, _) = synth::generate(synth::by_name("synth10").unwrap());
+    let st = sess.init_state(1)?;
+    let info = sess.info().clone();
+    let (iters, warmup) = if cx.full { (20, 4) } else { (8, 2) };
+
+    let mask = vec![1.0f32; info.mask_size];
+    let r = time("upload_mask", warmup, iters, || {
+        let _ = sess.upload_f32(&mask, &[mask.len()]).unwrap();
+    });
+    cx.time_ms("hotpath", "upload_mask", &r.samples_ms);
+
+    let (x, y) = train_ds.batch_at(0, sess.batch);
+    let r = time("eval_batch_host", warmup, iters, || {
+        let _ = sess.eval_batch(&st.params, &mask, &x, &y).unwrap();
+    });
+    cx.time_ms("hotpath", "eval_batch_host", &r.samples_ms);
+
+    let pbuf = sess.upload_f32(&st.params.data, &st.params.shape)?;
+    let mbuf = sess.upload_f32(&mask, &[mask.len()])?;
+    let (xbuf, ybuf) = sess.upload_batch(&x, &y)?;
+    let r = time("eval_batch_buffer", warmup, iters, || {
+        let _ = sess.eval_batch_b(&pbuf, &mbuf, &xbuf, &ybuf).unwrap();
+    });
+    cx.time_ms("hotpath", "eval_batch_buffer", &r.samples_ms);
+
+    // A small trial scan: wall time rides as a timing metric. The
+    // evaluated tally is deterministic for a fixed seed *within one
+    // configuration* — the early-exit bound depends on float accuracies —
+    // so it rides as a config-scoped `stat`, not a structural `count`
+    // (counts gate across config/backend boundaries; this must not).
+    let ev = Evaluator::new(&sess, &train_ds, 2)?;
+    let params = ev.upload_params(&st.params)?;
+    let base = ev.accuracy(&params, st.mask.dense())?;
+    cx.stat("hotpath", "base_acc", base, "%");
+    let sampler = BlockSampler::new(crate::config::Granularity::Pixel, sess.info());
+    let drc = (info.mask_size / 20).max(1);
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let scan = scan_trials(&ev, &params, &st.mask, &sampler, drc, 8, -1e9, base, &mut rng, 1)?;
+    cx.time_ms("hotpath", "trial_scan_x8", &[1000.0 * t0.elapsed().as_secs_f64()]);
+    cx.stat("hotpath", "scan_evaluated", scan.evaluated as f64, "trials");
+    println!(
+        "smoke: base acc {base:.2}%, scan evaluated {} ({} bounded)",
+        scan.evaluated, scan.bounded
+    );
+    Ok(())
+}

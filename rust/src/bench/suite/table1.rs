@@ -1,0 +1,61 @@
+//! Table 1: overall number of ReLUs per (network, image-size).
+//!
+//! Shape criterion (DESIGN.md §5): counts grow with backbone width and
+//! ~(image size)^2, mirroring the paper's 570K/1359K/1966K/5439K table.
+
+use crate::bench::{setup, BenchCtx};
+use crate::metrics::{print_table, write_csv};
+use crate::runtime::Backend;
+use crate::util::fmt_relu_count;
+use anyhow::{ensure, Result};
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for (key, m) in &engine.manifest().models {
+        if m.poly {
+            continue; // the paper's table counts the identity-replacement nets
+        }
+        let paper = setup::paper_total(&m.backbone, m.image_size);
+        cx.count(key, "relus_ours", m.mask_size, "relus");
+        cx.count(key, "relus_paper", paper as usize, "relus");
+        rows.push(vec![
+            key.clone(),
+            format!("{}x{}", m.image_size, m.image_size),
+            fmt_relu_count(m.mask_size),
+            fmt_relu_count(paper as usize),
+            format!("{:.1}x", paper / m.mask_size as f64),
+        ]);
+        csv.push(vec![
+            key.clone(),
+            m.backbone.clone(),
+            m.image_size.to_string(),
+            m.mask_size.to_string(),
+            (paper as usize).to_string(),
+        ]);
+    }
+    print_table(
+        "Table 1 — Overall Number of ReLUs (ours vs paper, scaled backbones)",
+        &["model", "input", "ours", "paper", "scale"],
+        &rows,
+    );
+    write_csv(
+        &setup::results_csv("table1"),
+        &["model", "backbone", "image_size", "relus_ours", "relus_paper"],
+        &csv,
+    )?;
+
+    // Shape criteria (ensure!, not assert!: a violation is a bench failure
+    // reported through the CLI, not a process abort).
+    let g = |k: &str| engine.manifest().models[k].mask_size as f64;
+    ensure!(g("wrn_16x16_c10") > g("resnet_16x16_c10"), "wider net must have more ReLUs");
+    let r_ratio = g("resnet_32x32_c20") / g("resnet_16x16_c20");
+    let w_ratio = g("wrn_32x32_c20") / g("wrn_16x16_c20");
+    ensure!((3.0..=4.1).contains(&r_ratio), "resnet image-size scaling {r_ratio}");
+    ensure!((3.0..=4.1).contains(&w_ratio), "wrn image-size scaling {w_ratio}");
+    cx.stat("scaling", "resnet_size_ratio", r_ratio, "x");
+    cx.stat("scaling", "wrn_size_ratio", w_ratio, "x");
+    println!("\nshape criteria OK: width ↑, image-size scaling {r_ratio:.2}x / {w_ratio:.2}x (paper: 3.4x-4.0x)");
+    Ok(())
+}

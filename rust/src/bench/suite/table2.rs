@@ -1,0 +1,42 @@
+//! Table 2: Test accuracy vs ReLU budget for the WideResNet-22-8-analog
+//! backbone, SNL vs Ours (BCD).
+//!
+//! Paper budgets run extremely sparse (6K of 1359K = 0.4%); scaled budgets
+//! preserve those fractions. Shape criterion: Ours >= SNL on every budget,
+//! gap widest at the lowest budgets.
+
+use crate::bench::{setup, BenchCtx};
+use crate::runtime::Backend;
+use anyhow::Result;
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+    let mut all = Vec::new();
+    let grids: &[(&str, &[f64], usize)] = &[
+        ("synth10", &[6e3, 15e3, 100e3, 150e3], 2),
+        ("synth100", &[6e3, 15e3, 100e3], 2),
+        // wrn@32x32 costs ~2s/step on this testbed; quick mode skips it
+        // (CDNL_BENCH_FULL=1 restores the full grid).
+        ("synthtiny", &[59.1e3, 99.6e3, 150e3, 200e3], 0),
+    ];
+    for (dataset, paper_budgets, quick_n) in grids {
+        let key = setup::experiment(dataset, "wrn", false).model_key();
+        let total = engine.manifest().models[&key].mask_size;
+        let size = engine.manifest().models[&key].image_size;
+        let budgets: Vec<usize> = setup::grid(paper_budgets, *quick_n)
+            .iter()
+            .map(|&b| setup::scale_budget(b, total, "wrn", size).max(50))
+            .collect();
+        all.extend(setup::snl_vs_ours(engine, dataset, "wrn", &budgets)?);
+    }
+    for p in &all {
+        let case = format!("{}/b{}", p.dataset, p.budget);
+        cx.stat(&case, "snl_acc", p.snl_acc, "%");
+        cx.stat(&case, "ours_acc", p.ours_acc, "%");
+    }
+    setup::report_snl_vs_ours(
+        "table2",
+        "Table 2 — Test Accuracy [%] vs ReLU Budget, WideResNet-22-8 backbone",
+        &all,
+    )
+}

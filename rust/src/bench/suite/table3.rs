@@ -1,0 +1,41 @@
+//! Table 3: Test accuracy vs ReLU budget for the ResNet18-analog backbone,
+//! SNL vs Ours (BCD), on all three datasets.
+//!
+//! Paper budgets (50K-300K for CIFAR, 200K-488.8K for TinyImageNet) are
+//! scaled by the backbone ReLU ratio; quick mode keeps the first points of
+//! each grid. Shape criterion: Ours >= SNL on every budget.
+
+use crate::bench::{setup, BenchCtx};
+use crate::runtime::Backend;
+use anyhow::Result;
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+    let mut all = Vec::new();
+    // (dataset, paper budgets [#K], quick points)
+    let grids: &[(&str, &[f64], usize)] = &[
+        ("synth10", &[50e3, 240e3, 300e3], 2),
+        ("synth100", &[50e3, 120e3, 150e3, 180e3], 2),
+        ("synthtiny", &[200e3, 250e3, 488.8e3], 1),
+    ];
+    for (dataset, paper_budgets, quick_n) in grids {
+        let key = setup::experiment(dataset, "resnet", false).model_key();
+        let total = engine.manifest().models[&key].mask_size;
+        let size = engine.manifest().models[&key].image_size;
+        let budgets: Vec<usize> = setup::grid(paper_budgets, *quick_n)
+            .iter()
+            .map(|&b| setup::scale_budget(b, total, "resnet", size))
+            .collect();
+        all.extend(setup::snl_vs_ours(engine, dataset, "resnet", &budgets)?);
+    }
+    for p in &all {
+        let case = format!("{}/b{}", p.dataset, p.budget);
+        cx.stat(&case, "snl_acc", p.snl_acc, "%");
+        cx.stat(&case, "ours_acc", p.ours_acc, "%");
+    }
+    setup::report_snl_vs_ours(
+        "table3",
+        "Table 3 — Test Accuracy [%] vs ReLU Budget, ResNet18 backbone",
+        &all,
+    )
+}

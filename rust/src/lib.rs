@@ -36,7 +36,14 @@
 //! Backends are `Send + Sync`; [`runtime::open_backend`] picks one by name
 //! or automatically (`auto`: PJRT when compiled in and artifacts exist,
 //! else reference).
+//!
+//! Benchmarks are first-class: the [`bench`] registry unifies the paper's
+//! table/figure grid, the §Perf microbenchmarks and a CI smoke tier behind
+//! `cdnl bench list|run|compare`, each run emitting a typed
+//! `BENCH_<name>.json` report that a comparator gates against committed
+//! baselines (DESIGN.md §9).
 
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -12,6 +12,15 @@
 //!   deepreduce   DeepReDuce layer dropping down to --budget
 //!   eval         evaluate a checkpoint on its dataset's test split
 //!   picost       PI online-cost estimate of a checkpoint (LAN + WAN)
+//!   bench        the benchmark registry (DESIGN.md §9):
+//!                  bench list           every registered benchmark + tier
+//!                  bench run <name>     run one benchmark, write
+//!                                       results/bench/BENCH_<name>.json
+//!                  bench run --tier t   run a whole tier (smoke|paper|perf)
+//!                  bench compare [<report> <baseline>] [--gate] [--md FILE]
+//!                                       diff reports against committed
+//!                                       baselines; --gate exits nonzero on
+//!                                       regression (the CI contract)
 //!   runs         the experiment run-store:
 //!                  runs list            all runs under <out>/runs
 //!                  runs show <id>       manifest, stages, sweep trace,
@@ -48,7 +57,7 @@ use cdnl::util::cli::Args;
 use cdnl::util::{fmt_relu_count, logging};
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: cdnl <info|train|snl|bcd|autorep|senet|deepreduce|eval|picost|runs> [flags]
+const USAGE: &str = "usage: cdnl <info|train|snl|bcd|autorep|senet|deepreduce|eval|picost|bench|runs> [flags]
   see rust/src/main.rs header or README.md for flag documentation";
 
 fn main() {
@@ -82,7 +91,10 @@ fn build_experiment(args: &Args) -> Result<Experiment> {
 }
 
 fn run() -> Result<()> {
-    let bools = ["poly", "verbose", "stats", "quiet", "simulate", "no-record", "all", "dry-run"];
+    let bools = [
+        "poly", "verbose", "stats", "quiet", "simulate", "no-record", "all", "dry-run", "gate",
+        "record", "strict-host",
+    ];
     let args = Args::parse_env(&bools).map_err(|e| anyhow!(e))?;
     if args.has("verbose") {
         logging::set_level(logging::Level::Debug);
@@ -95,6 +107,11 @@ fn run() -> Result<()> {
     if sub == "runs" {
         // The run-store carries its own backend + config; don't open one here.
         return cmd_runs(&args, exp);
+    }
+    if sub == "bench" {
+        // `bench list`/`bench compare` are pure file operations; `bench run`
+        // opens its backend itself.
+        return cmd_bench(&args, exp);
     }
     let backend = open_backend(
         Path::new(&exp.artifacts_dir),
@@ -397,6 +414,155 @@ fn cmd_picost(engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> 
     Ok(())
 }
 
+// ---- the benchmark surface -------------------------------------------------
+
+/// `cdnl bench <list|run|compare>` (DESIGN.md §9).
+fn cmd_bench(args: &Args, exp: Experiment) -> Result<()> {
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
+    match action {
+        "list" => bench_list(args),
+        "run" => bench_run(args, exp),
+        "compare" => bench_compare(args),
+        other => bail!("unknown bench action {other:?}\nusage: cdnl bench <list|run|compare>"),
+    }
+}
+
+fn bench_baseline_dir(args: &Args) -> PathBuf {
+    // Committed baselines live at the repository root by convention.
+    PathBuf::from(args.get_or("baseline-dir", "."))
+}
+
+fn bench_report_dir(args: &Args) -> PathBuf {
+    args.get("report-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(cdnl::bench::default_report_dir)
+}
+
+fn bench_list(args: &Args) -> Result<()> {
+    let baseline_dir = bench_baseline_dir(args);
+    let rows: Vec<Vec<String>> = cdnl::bench::registry()
+        .iter()
+        .map(|d| {
+            let has_baseline = cdnl::bench::report_path(&baseline_dir, d.name).exists();
+            vec![
+                d.name.to_string(),
+                d.tier.name().to_string(),
+                d.paper.to_string(),
+                if has_baseline { "yes" } else { "" }.to_string(),
+                d.title.to_string(),
+            ]
+        })
+        .collect();
+    cdnl::metrics::print_table(
+        "Registered benchmarks (cdnl bench run <name> | --tier <tier>)",
+        &["name", "tier", "paper", "baseline", "title"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn bench_run(args: &Args, exp: Experiment) -> Result<()> {
+    let defs: Vec<&'static cdnl::bench::BenchDef> =
+        if let Some(name) = args.positional.get(1) {
+            vec![cdnl::bench::find(name)?]
+        } else if let Some(t) = args.get("tier") {
+            let tier = cdnl::bench::Tier::parse(t)
+                .ok_or_else(|| anyhow!("--tier: expected smoke|paper|perf, got {t:?}"))?;
+            cdnl::bench::by_tier(tier)
+        } else {
+            bail!("usage: cdnl bench run <name> | cdnl bench run --tier smoke|paper|perf");
+        };
+    let backend = open_backend(
+        Path::new(&exp.artifacts_dir),
+        args.get_or("backend", "auto"),
+    )?;
+    println!("backend: {}", backend.name());
+    let report_dir = bench_report_dir(args);
+    for def in defs {
+        let report = cdnl::bench::run_and_save(def, backend.as_ref(), &report_dir)?;
+        if args.has("record") {
+            // Seal the report into the run-store like any other run, so the
+            // perf trajectory lives next to the experiments it describes.
+            let store = RunStore::for_experiment(&exp);
+            let mut m =
+                cdnl::runstore::RunManifest::new("bench", &exp, backend.name(), 0, 0);
+            m.status = COMPLETE.to_string();
+            m.bench = Some(report);
+            let run = store.create(m)?;
+            println!("run recorded: {} ({})", run.manifest.run_id, run.dir.display());
+        }
+    }
+    Ok(())
+}
+
+fn bench_compare(args: &Args) -> Result<()> {
+    let th = cdnl::bench::Thresholds::default();
+    let strict = args.has("strict-host");
+    let mut outcomes = Vec::new();
+    if let Some(rp) = args.positional.get(1) {
+        // Explicit pair: `cdnl bench compare <report> <baseline>`.
+        let bp = args
+            .positional
+            .get(2)
+            .ok_or_else(|| anyhow!("usage: cdnl bench compare <report> <baseline>"))?;
+        let report = cdnl::bench::BenchReport::load(Path::new(rp.as_str()))?;
+        let baseline = cdnl::bench::BenchReport::load(Path::new(bp.as_str()))?;
+        outcomes.push(cdnl::bench::compare_reports(&report, &baseline, &th, strict));
+    } else {
+        // Gate mode: every committed baseline must have a fresh report.
+        let baseline_dir = bench_baseline_dir(args);
+        let report_dir = bench_report_dir(args);
+        let mut names: Vec<String> = std::fs::read_dir(&baseline_dir)
+            .with_context(|| format!("reading baseline dir {baseline_dir:?}"))?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            .collect();
+        names.sort();
+        if names.is_empty() {
+            println!(
+                "no committed BENCH_*.json baselines under {baseline_dir:?} — nothing to gate"
+            );
+            return Ok(());
+        }
+        for name in names {
+            let baseline = cdnl::bench::BenchReport::load(&baseline_dir.join(&name))?;
+            let rp = report_dir.join(&name);
+            if !rp.exists() {
+                bail!(
+                    "baseline {name} has no fresh report at {rp:?} — run `cdnl bench run {}` first",
+                    baseline.bench
+                );
+            }
+            let report = cdnl::bench::BenchReport::load(&rp)?;
+            outcomes.push(cdnl::bench::compare_reports(&report, &baseline, &th, strict));
+        }
+    }
+
+    let mut failures = 0usize;
+    let mut md = String::new();
+    for out in &outcomes {
+        println!("{}", out.table());
+        md.push_str(&out.markdown());
+        md.push('\n');
+        failures += out.failures();
+    }
+    if let Some(md_path) = args.get("md") {
+        // Append, matching $GITHUB_STEP_SUMMARY semantics.
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(md_path)
+            .with_context(|| format!("opening {md_path:?}"))?;
+        f.write_all(md.as_bytes())?;
+    }
+    if args.has("gate") && failures > 0 {
+        bail!("bench gate failed: {failures} regressed/missing metric(s)");
+    }
+    Ok(())
+}
+
 // ---- the run-store surface -------------------------------------------------
 
 /// `cdnl runs <list|show|resume|gc>`.
@@ -489,6 +655,18 @@ fn runs_show(store: &RunStore, id: &str) -> Result<()> {
             r.acc_before,
             r.acc_after,
             r.wall_secs
+        );
+    }
+    if let Some(b) = &m.bench {
+        println!(
+            "bench     {} ({} tier, {} mode): {} cases, {} metrics, {:.1}s on {}",
+            b.bench,
+            b.tier,
+            if b.full_mode { "full" } else { "quick" },
+            b.cases.len(),
+            b.num_metrics(),
+            b.wall_secs,
+            b.host.fingerprint()
         );
     }
     if !m.stages.is_empty() {

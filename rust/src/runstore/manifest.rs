@@ -8,6 +8,7 @@
 //! rewritten atomically after every sweep, so at any kill point the
 //! directory holds a consistent `(run.json, sweep_<n>.cdnl)` pair.
 
+use crate::bench::report::BenchReport;
 use crate::config::Experiment;
 use crate::coordinator::bcd::{BcdCursor, IterRecord, SweepEvent};
 use crate::coordinator::finetune::FinetuneStats;
@@ -232,6 +233,11 @@ pub struct RunManifest {
     /// staged-execution `prefix_cache:*` counters). `None` on manifests
     /// written before this field existed — format 1 stays readable.
     pub stats: Option<BTreeMap<String, CallStatsDoc>>,
+    /// For `method == "bench"` runs sealed via `cdnl bench run --record`:
+    /// the full benchmark report, so the perf trajectory lives in the
+    /// run-store next to the experiments it describes. `None` everywhere
+    /// else (and on pre-bench manifests — format 1 stays readable).
+    pub bench: Option<BenchReport>,
 }
 derive_serde!(RunManifest {
     format,
@@ -251,6 +257,7 @@ derive_serde!(RunManifest {
     bcd,
     result,
     stats,
+    bench,
 });
 
 impl RunManifest {
@@ -282,6 +289,7 @@ impl RunManifest {
             bcd: None,
             result: None,
             stats: None,
+            bench: None,
         }
     }
 

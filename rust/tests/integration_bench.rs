@@ -1,0 +1,127 @@
+//! Bench-subsystem integration (DESIGN.md §9): registry-driven smoke run
+//! on the reference backend, bit-identical serde round trips, comparator
+//! gate semantics, and the committed-baseline contract the CI gate
+//! enforces (`cdnl bench run --tier smoke && cdnl bench compare --gate`).
+
+use cdnl::bench::report::kind;
+use cdnl::bench::{self, compare_reports, BenchReport, Status, Thresholds};
+use cdnl::runtime::RefBackend;
+use cdnl::util::serde as sd;
+use std::path::{Path, PathBuf};
+
+fn run_smoke() -> BenchReport {
+    let be = RefBackend::standard();
+    let def = bench::find("smoke").expect("smoke is registered");
+    bench::run_bench(def, &be).expect("smoke bench runs on the reference backend")
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cdnl_bench_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn smoke_report_roundtrips_bit_identically_through_serde() {
+    let report = run_smoke();
+    assert_eq!(report.bench, "smoke");
+    assert_eq!(report.tier, "smoke");
+    assert_eq!(report.backend, "reference");
+    assert!(report.num_metrics() > 12, "smoke must cover every model");
+
+    // String round trip: parse back and re-serialize byte-identically.
+    let text = sd::to_string_pretty(&report);
+    let back: BenchReport = sd::from_str(&text).unwrap();
+    assert_eq!(back, report);
+    assert_eq!(sd::to_string_pretty(&back), text, "canonical serialization");
+
+    // File round trip through save/load (atomic write path).
+    let dir = tmp_dir("roundtrip");
+    let path = bench::report_path(&dir, "smoke");
+    report.save(&path).unwrap();
+    let loaded = BenchReport::load(&path).unwrap();
+    assert_eq!(loaded, report);
+    // No temp residue from the atomic write.
+    let names: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    assert!(names.iter().all(|n| !n.ends_with(".tmp")), "temp residue: {names:?}");
+}
+
+#[test]
+fn self_compare_passes_the_gate() {
+    let report = run_smoke();
+    let out = compare_reports(&report, &report.clone(), &Thresholds::default(), false);
+    assert!(out.passed(), "a report must gate green against itself:\n{}", out.table());
+    assert!(out.host_match && out.config_match);
+    assert!(out.diffs.iter().all(|d| d.status == Status::Pass));
+}
+
+#[test]
+fn perturbed_baseline_fails_the_gate() {
+    let report = run_smoke();
+
+    // A drifted count metric must regress...
+    let mut drifted = report.clone();
+    let m = drifted.cases[0]
+        .metrics
+        .iter_mut()
+        .find(|m| m.kind == kind::COUNT)
+        .expect("smoke records count metrics");
+    m.value += 1.0;
+    let out = compare_reports(&report, &drifted, &Thresholds::default(), false);
+    assert_eq!(out.failures(), 1, "{}", out.table());
+
+    // ...and a metric missing from the report must fail, while extra
+    // report-side metrics only inform.
+    let mut truncated = report.clone();
+    let dropped = truncated.cases[0].metrics.remove(0);
+    let out = compare_reports(&truncated, &report, &Thresholds::default(), false);
+    assert_eq!(out.failures(), 1);
+    let miss = out
+        .diffs
+        .iter()
+        .find(|d| d.status == Status::Missing)
+        .expect("dropped metric must surface as Missing");
+    assert_eq!(miss.name, dropped.name);
+    let reverse = compare_reports(&report, &truncated, &Thresholds::default(), false);
+    assert!(reverse.passed(), "new coverage must not fail the gate");
+    assert!(reverse.diffs.iter().any(|d| d.status == Status::New));
+}
+
+#[test]
+fn committed_smoke_baseline_gates_green() {
+    // The acceptance contract: a fresh `bench run --tier smoke` must
+    // compare clean against the baseline committed at the repository root.
+    // Counts gate on every host; timing metrics in the baseline (if any)
+    // gate only when the host fingerprint matches, exactly as in CI.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_smoke.json");
+    let baseline = BenchReport::load(&path)
+        .expect("committed BENCH_smoke.json must parse (regenerate via `cdnl bench run smoke`)");
+    assert_eq!(baseline.bench, "smoke");
+    assert_eq!(baseline.backend, "reference");
+    let live = run_smoke();
+    let out = compare_reports(&live, &baseline, &Thresholds::default(), false);
+    assert!(
+        out.passed(),
+        "live smoke run regressed against the committed baseline:\n{}",
+        out.table()
+    );
+    // The baseline's structural contract must actually be exercised.
+    assert!(
+        out.diffs.iter().filter(|d| d.kind == kind::COUNT && d.status == Status::Pass).count()
+            >= 12,
+        "expected the per-model count contract to be compared:\n{}",
+        out.table()
+    );
+}
+
+#[test]
+fn markdown_and_table_render_for_ci_summary() {
+    let report = run_smoke();
+    let out = compare_reports(&report, &report.clone(), &Thresholds::default(), false);
+    let md = out.markdown();
+    assert!(md.contains("### bench `smoke`") && md.contains("PASS"), "{md}");
+    assert!(out.table().contains("manifest/models"), "{}", out.table());
+}
