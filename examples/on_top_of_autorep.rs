@@ -10,7 +10,7 @@
 //! masked activation is the L1 `masked_poly` Pallas kernel.
 
 use cdnl::config::Experiment;
-use cdnl::methods::autorep::{run_autorep, AutorepConfig};
+use cdnl::methods::autorep::run_autorep;
 use cdnl::pipeline::Pipeline;
 use cdnl::runtime::open_backend;
 use cdnl::util::fmt_relu_count;
@@ -43,9 +43,11 @@ fn main() -> anyhow::Result<()> {
         fmt_relu_count(total)
     );
 
+    // The selective-training base comes from exp.snl; exp.autorep carries
+    // the hysteresis band (both ride Experiment::dump for provenance).
     let mut arp = baseline.clone();
-    let cfg = AutorepConfig { base: exp.snl.clone(), ..Default::default() };
-    let out = run_autorep(&pl.sess, &mut arp, &pl.train_ds, b_ref, &cfg)?;
+    let out =
+        run_autorep(&pl.sess, &mut arp, &pl.train_ds, b_ref, &pl.exp.snl, &pl.exp.autorep)?;
     println!(
         "autorep reference: {} ReLUs, {:.2}%  ({} steps, {} indicator checks)",
         fmt_relu_count(arp.budget()),
@@ -56,7 +58,7 @@ fn main() -> anyhow::Result<()> {
 
     // AutoReP straight to the target (the baseline we beat)...
     let mut arp_direct = baseline.clone();
-    run_autorep(&pl.sess, &mut arp_direct, &pl.train_ds, b_target, &cfg)?;
+    run_autorep(&pl.sess, &mut arp_direct, &pl.train_ds, b_target, &pl.exp.snl, &pl.exp.autorep)?;
     let arp_acc = pl.test_acc(&arp_direct)?;
 
     // ...vs BCD on top of the AutoReP reference.

@@ -71,6 +71,29 @@ pub fn experiment(dataset: &str, backbone: &str, poly: bool) -> Experiment {
     exp
 }
 
+/// Tiny-but-real method schedules, shared by the smoke bench's
+/// method-registry contract and the dispatch-parity integration test so
+/// the two cannot drift apart: every method exercises its full control
+/// flow in sub-second runs on the reference backend. `drc` is the
+/// caller's BCD sweep size (the smoke contract uses 64 so one sweep lands
+/// exactly on its gated budget; the parity test uses 32 for a multi-sweep
+/// trajectory).
+pub fn tiny_method_experiment(drc: usize) -> Experiment {
+    let mut exp = Experiment::default();
+    exp.snl.max_steps = 12;
+    exp.snl.steps_per_check = 4;
+    exp.snl.finetune_steps = 2;
+    exp.bcd.drc = drc;
+    exp.bcd.rt = 3;
+    exp.bcd.finetune_steps = 2;
+    exp.senet.proxy_batches = 1;
+    exp.senet.layer_trials = 2;
+    exp.senet.kd_steps = 2;
+    exp.deepreduce.proxy_batches = 1;
+    exp.deepreduce.finetune_steps = 2;
+    exp
+}
+
 /// The BCD reference budget for a target: paper rule in full mode
 /// (config::reference_budget); in quick mode `target + 8*DRC` so every BCD
 /// run costs ~8 iterations and the zoo cache is shared across benches.

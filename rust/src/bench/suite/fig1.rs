@@ -5,8 +5,7 @@
 //! low-budget regime.
 
 use crate::bench::{setup, BenchCtx};
-use crate::methods::deepreduce::{run_deepreduce, DeepReduceConfig};
-use crate::methods::senet::{run_senet, SenetConfig};
+use crate::methods::registry::{self, Method};
 use crate::metrics::{ascii_plot, print_table, write_csv, Series};
 use crate::pipeline::Pipeline;
 use anyhow::Result;
@@ -46,18 +45,13 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
             let snl_acc = pl.test_acc(&pl.snl_ref(budget)?)?;
             let ours = pl.bcd_cached(&pl.snl_ref(bref)?, budget)?;
             let ours_acc = pl.test_acc(&ours)?;
-            // SENet + DeepReDuce start from the trained baseline.
+            // SENet + DeepReDuce start from the trained baseline, through
+            // the method registry (configs ride pl.exp — DESIGN.md §10).
             let mut st_se = baseline.clone();
-            run_senet(&pl.sess, &mut st_se, &pl.train_ds, budget, &SenetConfig::default())?;
+            registry::find("senet")?.run(&pl.ctx(), &mut st_se, budget)?;
             let senet_acc = pl.test_acc(&st_se)?;
             let mut st_dr = baseline.clone();
-            run_deepreduce(
-                &pl.sess,
-                &mut st_dr,
-                &pl.train_ds,
-                budget,
-                &DeepReduceConfig::default(),
-            )?;
+            registry::find("deepreduce")?.run(&pl.ctx(), &mut st_dr, budget)?;
             let dr_acc = pl.test_acc(&st_dr)?;
 
             println!(

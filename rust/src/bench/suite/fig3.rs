@@ -7,7 +7,7 @@
 //! TinyImageNet analogs, stays competitive on the CIFAR-10 analog.
 
 use crate::bench::{setup, BenchCtx};
-use crate::methods::senet::{run_senet, SenetConfig};
+use crate::methods::registry::{self, Method};
 use crate::metrics::{ascii_plot, print_table, write_csv, Series};
 use crate::pipeline::Pipeline;
 use anyhow::Result;
@@ -47,7 +47,7 @@ pub fn run_with(cx: &mut BenchCtx, backbone: &str, id: &str) -> Result<()> {
             let ours = pl.bcd_cached(&pl.snl_ref(bref)?, budget)?;
             let ours_rel = pl.test_acc(&ours)? / base_acc;
             let mut st_se = baseline.clone();
-            run_senet(&pl.sess, &mut st_se, &pl.train_ds, budget, &SenetConfig::default())?;
+            registry::find("senet")?.run(&pl.ctx(), &mut st_se, budget)?;
             let senet_rel = pl.test_acc(&st_se)? / base_acc;
             println!("[{dataset}] b={budget}: ours {ours_rel:.3} senet {senet_rel:.3} (rel. to {base_acc:.2}%)");
             let case = format!("{dataset}/b{budget}");

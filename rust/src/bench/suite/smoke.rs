@@ -1,6 +1,6 @@
 //! Smoke tier: the CI gate benchmark (seconds, reference backend).
 //!
-//! Two case groups:
+//! Three case groups:
 //!
 //! 1. **Structural manifest contract** — per-model ReLU pool sizes,
 //!    parameter-vector lengths and mask-layer counts, plus the model count
@@ -11,16 +11,24 @@
 //! 2. **Hot-path micro timings** — mask upload, host/buffer `eval_batch`,
 //!    and a small trial scan. `time_ms` metrics gate only against a
 //!    same-host baseline (DESIGN.md §9); across hosts they are advisory.
+//! 3. **Method-registry contract** — a tiny run of *every* registered
+//!    method, plus one `snl+bcd` chain, dispatched through the
+//!    [`crate::methods::Method`] trait (DESIGN.md §10). The registry size
+//!    and each run's exact
+//!    landing budget ride as `count` metrics in the committed baseline, so
+//!    a method that stops registering (or stops landing exactly) fails CI
+//!    until deliberately re-blessed.
 
 use crate::bench::BenchCtx;
 use crate::coordinator::eval::Evaluator;
 use crate::coordinator::trials::{scan_trials, BlockSampler};
 use crate::data::synth;
+use crate::methods::registry::{self, ChainSpec, Method, MethodCtx, RecordSink};
 use crate::runtime::session::Session;
 use crate::runtime::Backend;
 use crate::util::bench::time;
 use crate::util::prng::Rng;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 pub fn run(cx: &mut BenchCtx) -> Result<()> {
     let engine = cx.engine;
@@ -87,5 +95,51 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
         "smoke: base acc {base:.2}%, scan evaluated {} ({} bounded)",
         scan.evaluated, scan.bounded
     );
+
+    // --- 3: the method registry, one tiny run per method ---------------------
+    // Tiny schedules keep every run sub-second; every method lands on its
+    // target budget *exactly* by construction, so the landings are exact
+    // `count` contracts, not tolerance-band stats. drc=64 == the removal
+    // below, so the BCD run is exactly one sweep.
+    let exp = crate::bench::setup::tiny_method_experiment(64);
+
+    let reg = registry::registry();
+    cx.count("methods", "registered", reg.len(), "methods");
+    // AutoReP runs on the poly variant; everything else on the plain model.
+    let sess_poly = Session::new(engine, "resnet_16x16_c10_poly")?;
+    let total = sess.info().total_relus();
+    let target = total - 64;
+    let sink = RecordSink::default();
+    let t0 = std::time::Instant::now();
+    for m in reg {
+        let s: &Session = if m.name() == "autorep" { &sess_poly } else { &sess };
+        let mut mst = s.init_state(11)?;
+        let ctx = MethodCtx::new(s, &train_ds, &exp, &sink);
+        let out = m.run(&ctx, &mut mst, target)?;
+        ensure!(
+            out.method() == m.name(),
+            "outcome tag {} from method {}",
+            out.method(),
+            m.name()
+        );
+        cx.count("methods", &format!("{}_final", m.name()), mst.budget(), "relus");
+        println!("smoke method {}", out.describe());
+    }
+    // One chain through ChainSpec: two stages, two provenance records.
+    let chain = ChainSpec::parse("snl+bcd")?;
+    let mut mst = sess.init_state(11)?;
+    let ctx = MethodCtx::new(&sess, &train_ds, &exp, &sink);
+    let before_records = sink.lock().unwrap().len();
+    let outs = chain.run(&ctx, &mut mst, &[total - 40, total - 64])?;
+    cx.count("methods", "chain_final", mst.budget(), "relus");
+    cx.count("methods", "chain_stages", outs.len(), "stages");
+    cx.count(
+        "methods",
+        "chain_records",
+        sink.lock().unwrap().len() - before_records,
+        "records",
+    );
+    cx.time_ms("methods", "tiny_runs_all", &[1000.0 * t0.elapsed().as_secs_f64()]);
+    println!("smoke: {} methods + snl+bcd chain ran through the registry", reg.len());
     Ok(())
 }

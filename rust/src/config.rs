@@ -201,6 +201,71 @@ impl Default for SnlConfig {
     }
 }
 
+/// AutoReP-specific knobs (Peng et al. 2023) layered on the shared
+/// selective-training base. The base hyperparameters come from
+/// [`Experiment::snl`] at run time — AutoReP is SNL's training loop with a
+/// polynomial replacement function and a hysteresis-stabilized indicator —
+/// so only the genuinely AutoReP-specific knob lives here.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutorepConfig {
+    /// Full hysteresis band width around `snl.threshold`: an indicator
+    /// flips only when its score exits `threshold ± hysteresis/2`.
+    pub hysteresis: f32,
+}
+
+impl Default for AutorepConfig {
+    fn default() -> Self {
+        AutorepConfig { hysteresis: 0.2 }
+    }
+}
+
+/// SENet hyperparameters (Kundu et al. 2023).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SenetConfig {
+    /// Proxy batches for sensitivity measurement and trial scoring.
+    pub proxy_batches: usize,
+    /// Within-layer keep-set candidates tried per layer.
+    pub layer_trials: usize,
+    /// KD finetune steps / lr / temperature.
+    pub kd_steps: usize,
+    pub kd_lr: f32,
+    pub kd_temp: f32,
+    pub seed: u64,
+}
+
+impl Default for SenetConfig {
+    fn default() -> Self {
+        SenetConfig {
+            proxy_batches: 2,
+            layer_trials: 4,
+            kd_steps: 60,
+            kd_lr: 5e-3,
+            kd_temp: 4.0,
+            seed: 0x5E9E,
+        }
+    }
+}
+
+/// DeepReDuce hyperparameters (Jha et al. 2021).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeepReduceConfig {
+    pub proxy_batches: usize,
+    pub finetune_steps: usize,
+    pub finetune_lr: f32,
+    pub seed: u64,
+}
+
+impl Default for DeepReduceConfig {
+    fn default() -> Self {
+        DeepReduceConfig {
+            proxy_batches: 2,
+            finetune_steps: 60,
+            finetune_lr: 5e-3,
+            seed: 0xDEE9,
+        }
+    }
+}
+
 /// Baseline (full-ReLU) training schedule.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
@@ -229,6 +294,9 @@ pub struct Experiment {
     pub train: TrainConfig,
     pub bcd: BcdConfig,
     pub snl: SnlConfig,
+    pub autorep: AutorepConfig,
+    pub senet: SenetConfig,
+    pub deepreduce: DeepReduceConfig,
     /// Where checkpoints/results are written.
     pub out_dir: String,
     pub artifacts_dir: String,
@@ -243,6 +311,9 @@ impl Default for Experiment {
             train: TrainConfig::default(),
             bcd: BcdConfig::default(),
             snl: SnlConfig::default(),
+            autorep: AutorepConfig::default(),
+            senet: SenetConfig::default(),
+            deepreduce: DeepReduceConfig::default(),
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -305,6 +376,17 @@ impl Experiment {
             "snl.finetune_steps" => self.snl.finetune_steps = p!(value),
             "snl.finetune_lr" => self.snl.finetune_lr = p!(value),
             "snl.seed" => self.snl.seed = p!(value),
+            "autorep.hysteresis" => self.autorep.hysteresis = p!(value),
+            "senet.proxy_batches" => self.senet.proxy_batches = p!(value),
+            "senet.layer_trials" => self.senet.layer_trials = p!(value),
+            "senet.kd_steps" => self.senet.kd_steps = p!(value),
+            "senet.kd_lr" => self.senet.kd_lr = p!(value),
+            "senet.kd_temp" => self.senet.kd_temp = p!(value),
+            "senet.seed" => self.senet.seed = p!(value),
+            "deepreduce.proxy_batches" => self.deepreduce.proxy_batches = p!(value),
+            "deepreduce.finetune_steps" => self.deepreduce.finetune_steps = p!(value),
+            "deepreduce.finetune_lr" => self.deepreduce.finetune_lr = p!(value),
+            "deepreduce.seed" => self.deepreduce.seed = p!(value),
             _ => return Err(format!("config: unknown key {key:?}")),
         }
         Ok(())
@@ -368,6 +450,17 @@ impl Experiment {
         put("snl.finetune_steps", self.snl.finetune_steps.to_string());
         put("snl.finetune_lr", self.snl.finetune_lr.to_string());
         put("snl.seed", self.snl.seed.to_string());
+        put("autorep.hysteresis", self.autorep.hysteresis.to_string());
+        put("senet.proxy_batches", self.senet.proxy_batches.to_string());
+        put("senet.layer_trials", self.senet.layer_trials.to_string());
+        put("senet.kd_steps", self.senet.kd_steps.to_string());
+        put("senet.kd_lr", self.senet.kd_lr.to_string());
+        put("senet.kd_temp", self.senet.kd_temp.to_string());
+        put("senet.seed", self.senet.seed.to_string());
+        put("deepreduce.proxy_batches", self.deepreduce.proxy_batches.to_string());
+        put("deepreduce.finetune_steps", self.deepreduce.finetune_steps.to_string());
+        put("deepreduce.finetune_lr", self.deepreduce.finetune_lr.to_string());
+        put("deepreduce.seed", self.deepreduce.seed.to_string());
         m
     }
 
@@ -381,17 +474,9 @@ impl Experiment {
     pub fn fingerprint(&self) -> String {
         const NON_SEMANTIC: [&str; 4] =
             ["out_dir", "artifacts_dir", "bcd.workers", "bcd.cache_mb"];
-        let mut h: u64 = 0xcbf29ce484222325;
-        for (k, v) in self.dump() {
-            if NON_SEMANTIC.contains(&k.as_str()) {
-                continue;
-            }
-            for b in k.bytes().chain([b'='].into_iter()).chain(v.bytes()).chain([b'\n']) {
-                h ^= b as u64;
-                h = h.wrapping_mul(0x100000001b3);
-            }
-        }
-        format!("{h:016x}")
+        let mut dump = self.dump();
+        dump.retain(|k, _| !NON_SEMANTIC.contains(&k.as_str()));
+        fingerprint_pairs(&dump)
     }
 
     /// Overlay CLI flags of the form `--set key=value` (repeatable via
@@ -416,6 +501,21 @@ impl Experiment {
         }
         Ok(())
     }
+}
+
+/// FNV-1a 64 over canonical `key=value\n` lines, as 16 hex chars — the
+/// shared fingerprint primitive behind [`Experiment::fingerprint`] and the
+/// per-method `Method::config_fingerprint` hooks
+/// ([`crate::methods::registry`]).
+pub fn fingerprint_pairs(pairs: &BTreeMap<String, String>) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for (k, v) in pairs {
+        for b in k.bytes().chain([b'='].into_iter()).chain(v.bytes()).chain([b'\n']) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    format!("{h:016x}")
 }
 
 /// Paper Table 4 analog: reference budgets per (dataset, target budget),
@@ -524,6 +624,62 @@ mod tests {
     fn unknown_key_rejected() {
         let mut e = Experiment::default();
         assert!(e.apply("bcd.typo", "3").is_err());
+    }
+
+    /// Every field of every method config must shift the experiment
+    /// fingerprint — the reproducibility guarantee behind the run-store:
+    /// a manifest's `config_fingerprint` changes whenever any setting that
+    /// can move numerics changes (ISSUE 5's config-provenance bug).
+    fn assert_fingerprint_sensitive(keys: &[(&str, &str)]) {
+        for (k, v) in keys {
+            let mut e = Experiment::default();
+            let fp = e.fingerprint();
+            assert_ne!(
+                e.dump().get(*k).map(|s| s.as_str()),
+                Some(*v),
+                "test value for {k} must differ from the default"
+            );
+            e.apply(k, v).unwrap_or_else(|err| panic!("{k}: {err}"));
+            assert_ne!(e.fingerprint(), fp, "{k} change must shift the fingerprint");
+            // And the dump round-trips the change.
+            let mut back = Experiment::default();
+            for (dk, dv) in e.dump() {
+                back.apply(&dk, &dv).unwrap();
+            }
+            assert_eq!(back.fingerprint(), e.fingerprint(), "{k} dump roundtrip");
+        }
+    }
+
+    #[test]
+    fn autorep_config_fingerprint_coverage() {
+        assert_eq!(AutorepConfig::default().hysteresis, 0.2);
+        assert_fingerprint_sensitive(&[("autorep.hysteresis", "0.35")]);
+    }
+
+    #[test]
+    fn senet_config_fingerprint_coverage() {
+        let d = SenetConfig::default();
+        assert_eq!((d.proxy_batches, d.layer_trials, d.kd_steps), (2, 4, 60));
+        assert_fingerprint_sensitive(&[
+            ("senet.proxy_batches", "3"),
+            ("senet.layer_trials", "7"),
+            ("senet.kd_steps", "11"),
+            ("senet.kd_lr", "0.001"),
+            ("senet.kd_temp", "2.5"),
+            ("senet.seed", "99"),
+        ]);
+    }
+
+    #[test]
+    fn deepreduce_config_fingerprint_coverage() {
+        let d = DeepReduceConfig::default();
+        assert_eq!((d.proxy_batches, d.finetune_steps), (2, 60));
+        assert_fingerprint_sensitive(&[
+            ("deepreduce.proxy_batches", "3"),
+            ("deepreduce.finetune_steps", "11"),
+            ("deepreduce.finetune_lr", "0.001"),
+            ("deepreduce.seed", "99"),
+        ]);
     }
 
     #[test]

@@ -27,6 +27,13 @@
 //! - **L1** — Pallas masked-activation kernels (`python/compile/kernels/`),
 //!   correctness-checked against a pure-jnp oracle (PJRT path only).
 //!
+//! Every linearization method (SNL, AutoReP, SENet, DeepReDuce and BCD
+//! itself) registers in [`methods::registry`] behind the
+//! [`methods::Method`] trait: one typed `run(ctx, state, budget) ->
+//! MethodOutcome` entry point with per-method config slices of
+//! [`config::Experiment`] and chainable stages (`cdnl run snl+bcd`) —
+//! DESIGN.md §10.
+//!
 //! Long-lived runs are durable: the [`runstore`] gives every experiment a
 //! directory with a versioned serde-backed `run.json` manifest (config
 //! fingerprint, stage provenance, per-sweep BCD trace, RNG resume cursor),

@@ -3,13 +3,21 @@
 //! Subcommands:
 //!   info         manifest summary: models, ReLU counts (Table 1), artifacts
 //!   train        train a full-ReLU baseline and checkpoint it
-//!   snl          SNL linearization down to --budget
-//!   bcd          Block Coordinate Descent down to --budget (the paper).
-//!                Recorded in the run-store by default (resumable after a
-//!                crash); --no-record opts out.
-//!   autorep      AutoReP polynomial replacement down to --budget
-//!   senet        SENet sensitivity allocation + KD down to --budget
-//!   deepreduce   DeepReDuce layer dropping down to --budget
+//!   run          run one method, or a `+`-chain of methods, through the
+//!                method registry (DESIGN.md §10):
+//!                  run bcd --budget 1000          the paper's Algorithm 2
+//!                  run snl+bcd --budgets 2000,1000 Tables 4/5: BCD on top
+//!                                                  of an SNL reference
+//!                  run senet+bcd --budgets ...     any composition works
+//!                BCD runs are recorded in the run-store by default
+//!                (resumable after a crash); --no-record opts out. Other
+//!                methods and chains get write-once manifests with typed
+//!                per-stage outcomes and provenance.
+//!   methods      the method registry:
+//!                  methods list         registered methods, config-key
+//!                                       slices, per-method fingerprints
+//!   snl | bcd | autorep | senet | deepreduce
+//!                deprecated aliases for `cdnl run <method>`
 //!   eval         evaluate a checkpoint on its dataset's test split
 //!   picost       PI online-cost estimate of a checkpoint (LAN + WAN)
 //!   bench        the benchmark registry (DESIGN.md §9):
@@ -22,9 +30,12 @@
 //!                                       baselines; --gate exits nonzero on
 //!                                       regression (the CI contract)
 //!   runs         the experiment run-store:
-//!                  runs list            all runs under <out>/runs
-//!                  runs show <id>       manifest, stages, sweep trace,
-//!                                       recorded backend stats
+//!                  runs list [--method m] [--status s]
+//!                                       runs under <out>/runs, filterable
+//!                                       by registry method name and by
+//!                                       running|complete|failed
+//!                  runs show <id>       manifest, stages, typed outcomes,
+//!                                       sweep trace, recorded stats
 //!                  runs resume <id>     continue an interrupted BCD run
 //!                  runs gc [--keep N] [--all] [--dry-run]
 //!                                       delete old run directories
@@ -33,31 +44,29 @@
 //! Shared flags: --dataset synth10|synth100|synthtiny  --backbone resnet|wrn
 //! --poly  --preset quick|full  --set k=v[,k=v...]  --artifacts DIR
 //! --backend auto|pjrt|reference  --out DIR  --ckpt FILE  --ref-budget N
-//! --budget N  --verbose  --no-record
+//! --budget N  --budgets b1,b2,...  --verbose  --no-record
 //!
 //! Examples:
 //!   cdnl train --dataset synth10
-//!   cdnl bcd --dataset synth10 --budget 1000 --ref-budget 2000
+//!   cdnl run bcd --dataset synth10 --budget 1000 --ref-budget 2000
+//!   cdnl run snl+bcd --budgets 2000,1000
 //!   cdnl runs resume bcd-resnet_16x16_c10-5fa3c1d2-1
 //!   cdnl picost --ckpt results/resnet_16x16_c10__synth10_bcd_b1000.cdnl
 
 use anyhow::{anyhow, bail, Context, Result};
 use cdnl::config::{preset, reference_budget, Experiment};
-use cdnl::coordinator::bcd::run_bcd;
 use cdnl::coordinator::eval::test_accuracy;
-use cdnl::methods::autorep::{run_autorep, AutorepConfig};
-use cdnl::methods::deepreduce::{run_deepreduce, DeepReduceConfig};
-use cdnl::methods::senet::{run_senet, SenetConfig};
-use cdnl::methods::snl::run_snl;
+use cdnl::methods::registry::{self, BcdSummary, ChainSpec, Method, MethodOutcome};
 use cdnl::model::ModelState;
 use cdnl::pipeline::Pipeline;
-use cdnl::runstore::{RunDir, RunResult, RunStore, COMPLETE};
+use cdnl::runstore::{RunDir, RunResult, RunStore, COMPLETE, FAILED, RUNNING};
 use cdnl::runtime::{open_backend, Backend};
 use cdnl::util::cli::Args;
 use cdnl::util::{fmt_relu_count, logging};
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: cdnl <info|train|snl|bcd|autorep|senet|deepreduce|eval|picost|bench|runs> [flags]
+const USAGE: &str = "usage: cdnl <info|train|run|methods|eval|picost|bench|runs> [flags]
+  (cdnl <method> is a deprecated alias for cdnl run <method>)
   see rust/src/main.rs header or README.md for flag documentation";
 
 fn main() {
@@ -113,6 +122,10 @@ fn run() -> Result<()> {
         // opens its backend itself.
         return cmd_bench(&args, exp);
     }
+    if sub == "methods" {
+        // Pure registry introspection; no backend needed.
+        return cmd_methods(&args, &exp);
+    }
     let backend = open_backend(
         Path::new(&exp.artifacts_dir),
         args.get_or("backend", "auto"),
@@ -124,10 +137,24 @@ fn run() -> Result<()> {
         "train" => cmd_train(engine, exp),
         "eval" => cmd_eval(engine, exp, &args),
         "picost" => cmd_picost(engine, exp, &args),
-        "snl" | "bcd" | "autorep" | "senet" | "deepreduce" => {
-            cmd_method(&sub, engine, exp, &args)
+        "run" => {
+            let spec = args.positional.first().cloned().ok_or_else(|| {
+                anyhow!(
+                    "usage: cdnl run <method|chain> --budget N | --budgets b1,b2,...\n  registered methods: {}",
+                    registry::names().join(", ")
+                )
+            })?;
+            cmd_run(&spec, engine, exp, &args)
         }
-        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        // Deprecated aliases: `cdnl bcd ...` == `cdnl run bcd ...`.
+        name if registry::find(name).is_ok() => {
+            eprintln!("note: `cdnl {name}` is a deprecated alias for `cdnl run {name}`");
+            cmd_run(name, engine, exp, &args)
+        }
+        other => bail!(
+            "unknown subcommand {other:?} (registered methods: {}; see `cdnl methods list`)\n{USAGE}",
+            registry::names().join(", ")
+        ),
     }
 }
 
@@ -189,15 +216,74 @@ fn starting_state(pl: &Pipeline, args: &Args) -> Result<ModelState> {
     pl.baseline()
 }
 
-/// Shared driver for the five reduction methods.
-fn cmd_method(method: &str, engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> {
-    let budget = args
-        .get("budget")
-        .ok_or_else(|| anyhow!("--budget is required for {method}"))?
-        .parse::<usize>()
-        .map_err(|_| anyhow!("--budget: bad value"))?;
+/// Stage budgets for a parsed spec: `--budgets b1,b2,...` (one per stage,
+/// chains) or `--budget N` (single methods).
+fn parse_budgets(spec: &ChainSpec, args: &Args) -> Result<Vec<usize>> {
+    if let Some(list) = args.get("budgets") {
+        let v: Vec<usize> = list
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("--budgets: bad value {:?}", s.trim()))
+            })
+            .collect::<Result<_>>()?;
+        if v.len() != spec.stages.len() {
+            bail!(
+                "{} has {} stage(s); --budgets gave {} value(s)",
+                spec.name(),
+                spec.stages.len(),
+                v.len()
+            );
+        }
+        // Each stage reduces further; catch a mis-ordered list before any
+        // expensive stage runs (mid-chain it would fail after minutes of
+        // work, with nothing recorded).
+        if v.windows(2).any(|w| w[1] >= w[0]) {
+            bail!("--budgets must be strictly decreasing, got {list}");
+        }
+        return Ok(v);
+    }
+    if let Some(b) = args.get("budget") {
+        if spec.is_chain() {
+            bail!(
+                "chain {}: use --budgets b1,b2,... (one target per stage)",
+                spec.name()
+            );
+        }
+        return Ok(vec![b.parse().map_err(|_| anyhow!("--budget: bad value"))?]);
+    }
+    bail!(
+        "--budget (or --budgets for chains) is required for {}",
+        spec.name()
+    )
+}
+
+/// `cdnl run <method|chain>`: the registry-dispatched execution driver.
+fn cmd_run(spec_str: &str, engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> {
+    let spec = ChainSpec::parse(spec_str)?;
+    let budgets = parse_budgets(&spec, args)?;
     let pl = Pipeline::new(engine, exp)?;
-    let mut st = if method == "bcd" && args.get("ckpt").is_none() && args.get("ref-budget").is_none()
+    if spec.is_chain() {
+        cmd_run_chain(&spec, engine, &pl, &budgets, args)
+    } else {
+        cmd_run_single(spec.stages[0], engine, &pl, budgets[0], args)
+    }
+}
+
+/// One method through the registry. BCD keeps its specialized sweep-level
+/// recording (resumable); everything else gets a write-once manifest with
+/// the typed outcome embedded.
+fn cmd_run_single(
+    method: &'static dyn Method,
+    engine: &dyn Backend,
+    pl: &Pipeline,
+    budget: usize,
+    args: &Args,
+) -> Result<()> {
+    let mut st = if method.name() == "bcd"
+        && args.get("ckpt").is_none()
+        && args.get("ref-budget").is_none()
     {
         // Paper protocol: BCD starts from an SNL reference (Table 4 rule).
         let total = pl.sess.info().total_relus();
@@ -208,7 +294,7 @@ fn cmd_method(method: &str, engine: &dyn Backend, exp: Experiment, args: &Args) 
             pl.snl_ref(bref)?
         }
     } else {
-        starting_state(&pl, args)?
+        starting_state(pl, args)?
     };
     let before_acc = pl.test_acc(&st)?;
     let b0 = st.budget();
@@ -216,59 +302,21 @@ fn cmd_method(method: &str, engine: &dyn Backend, exp: Experiment, args: &Args) 
     let t0 = std::time::Instant::now();
     let mut recorded: Option<RunDir> = None;
     let mut sweep_secs: Option<f64> = None;
-    match method {
-        "bcd" => {
-            let out = if args.has("no-record") {
-                run_bcd(&pl.sess, &mut st, &pl.train_ds, budget, &pl.exp.bcd, 0)?
-            } else {
-                let store = RunStore::for_experiment(&pl.exp);
-                let (out, run) = pl.bcd_record(&store, &mut st, budget)?;
-                recorded = Some(run);
-                sweep_secs = Some(out.iterations.iter().map(|r| r.wall_ms).sum::<f64>() / 1e3);
-                out
-            };
-            println!(
-                "bcd: {} iterations, {} trials total ({} bounded early)",
-                out.iterations.len(),
-                out.total_trials(),
-                out.iterations.iter().map(|r| r.trials_bounded).sum::<usize>()
-            );
-        }
-        "snl" => {
-            let out = run_snl(&pl.sess, &mut st, &pl.train_ds, budget, &pl.exp.snl, 0)?;
-            println!(
-                "snl: {} steps, {} lambda updates",
-                out.steps_run,
-                out.kappa_updates.len()
-            );
-        }
-        "autorep" => {
-            let cfg = AutorepConfig { base: pl.exp.snl.clone(), ..Default::default() };
-            let out = run_autorep(&pl.sess, &mut st, &pl.train_ds, budget, &cfg)?;
-            println!("autorep: {} steps", out.steps_run);
-        }
-        "senet" => {
-            let cfg = SenetConfig::default();
-            let out = run_senet(&pl.sess, &mut st, &pl.train_ds, budget, &cfg)?;
-            println!(
-                "senet: kd loss {:.3} -> {:.3}",
-                out.kd_first_loss, out.kd_last_loss
-            );
-        }
-        "deepreduce" => {
-            let cfg = DeepReduceConfig::default();
-            let out = run_deepreduce(&pl.sess, &mut st, &pl.train_ds, budget, &cfg)?;
-            println!(
-                "deepreduce: dropped layers {:?}, partial {:?}",
-                out.dropped_layers, out.partial_layer
-            );
-        }
-        _ => unreachable!(),
-    }
+    let outcome: MethodOutcome = if method.name() == "bcd" && !args.has("no-record") {
+        let store = RunStore::for_experiment(&pl.exp);
+        let (out, run) = pl.bcd_record(&store, &mut st, budget)?;
+        recorded = Some(run);
+        sweep_secs = Some(out.iterations.iter().map(|r| r.wall_ms).sum::<f64>() / 1e3);
+        MethodOutcome::Bcd(BcdSummary::from_outcome(&out))
+    } else {
+        method.run(&pl.ctx(), &mut st, budget)?
+    };
+    println!("{}", outcome.describe());
     let secs = t0.elapsed().as_secs_f64();
     let after_acc = pl.test_acc(&st)?;
     println!(
-        "{method} {}: {} -> {} ReLUs  test_acc {before_acc:.2}% -> {after_acc:.2}%  ({secs:.1}s)",
+        "{} {}: {} -> {} ReLUs  test_acc {before_acc:.2}% -> {after_acc:.2}%  ({secs:.1}s)",
+        method.name(),
         pl.sess.key,
         fmt_relu_count(b0),
         fmt_relu_count(st.budget()),
@@ -282,25 +330,136 @@ fn cmd_method(method: &str, engine: &dyn Backend, exp: Experiment, args: &Args) 
         wall_secs: sweep_secs.unwrap_or(secs),
     };
     if let Some(mut run) = recorded {
-        run.manifest.result = Some(result);
-        // Snapshot per-entry-point stats (incl. prefix_cache counters) so
-        // `runs show` can replay them after this process is gone.
-        run.manifest.stats = Some(cdnl::runstore::stats_snapshot(&engine.stats()));
+        seal_complete(&mut run.manifest, vec![outcome], result, engine);
         run.save()?;
         println!("run recorded: {} ({})", run.manifest.run_id, run.dir.display());
-    } else if method != "bcd" && !args.has("no-record") {
+    } else if !args.has("no-record") {
         // Non-BCD methods are minutes, not hours: a write-once manifest
-        // (identity, config, provenance, result) without sweep-level resume.
+        // (identity, config, provenance, typed outcome, result) without
+        // sweep-level resume.
         let store = RunStore::for_experiment(&pl.exp);
-        let mut m = cdnl::runstore::RunManifest::new(method, &pl.exp, engine.name(), b0, budget);
+        let mut m =
+            cdnl::runstore::RunManifest::new(method.name(), &pl.exp, engine.name(), b0, budget);
         m.stages = pl.take_stages();
-        m.status = COMPLETE.to_string();
-        m.result = Some(result);
-        m.stats = Some(cdnl::runstore::stats_snapshot(&engine.stats()));
+        seal_complete(&mut m, vec![outcome], result, engine);
         let run = store.create(m)?;
         println!("run recorded: {} ({})", run.manifest.run_id, run.dir.display());
     }
 
+    save_and_report(pl, &st, method.name(), budget, engine, args)
+}
+
+/// Shared terminal fields of every sealed run manifest: status, typed
+/// outcomes, result, and the backend stats snapshot (incl. prefix_cache
+/// counters) so `runs show` can replay them after this process is gone.
+fn seal_complete(
+    m: &mut cdnl::runstore::RunManifest,
+    outcomes: Vec<MethodOutcome>,
+    result: RunResult,
+    engine: &dyn Backend,
+) {
+    m.status = COMPLETE.to_string();
+    m.outcomes = Some(outcomes);
+    m.result = Some(result);
+    m.stats = Some(cdnl::runstore::stats_snapshot(&engine.stats()));
+}
+
+/// A multi-stage chain (`snl+bcd`): stages run through the registry on one
+/// state, one sealed manifest with per-stage provenance + typed outcomes.
+fn cmd_run_chain(
+    spec: &ChainSpec,
+    engine: &dyn Backend,
+    pl: &Pipeline,
+    budgets: &[usize],
+    args: &Args,
+) -> Result<()> {
+    if args.get("ref-budget").is_some() {
+        bail!(
+            "--ref-budget does not apply to chains; make the reference a stage \
+             (e.g. `cdnl run snl+bcd --budgets <bref>,<btarget>`)"
+        );
+    }
+    let st0 = match args.get("ckpt") {
+        Some(ck) => ModelState::load(Path::new(ck), pl.sess.info())?,
+        None => pl.baseline()?,
+    };
+    let before_acc = pl.test_acc(&st0)?;
+    let b0 = st0.budget();
+    let chain = spec.name();
+    let b_target = *budgets.last().expect("parse_budgets guarantees non-empty");
+
+    // Create the manifest BEFORE any stage runs (status `running`): a
+    // mid-chain stage error seals it `failed` below, and a crash leaves
+    // `running` behind — either way the run is visible in `runs list`
+    // with the provenance of every completed stage, instead of hours of
+    // work vanishing without a trace. (Chains stay write-once: only
+    // single `cdnl run bcd` checkpoints per sweep for resume.)
+    let mut recorded: Option<RunDir> = if args.has("no-record") {
+        None
+    } else {
+        let store = RunStore::for_experiment(&pl.exp);
+        let mut m =
+            cdnl::runstore::RunManifest::new(&chain, &pl.exp, engine.name(), b0, b_target);
+        m.stages = pl.take_stages();
+        Some(store.create(m)?)
+    };
+
+    let t0 = std::time::Instant::now();
+    let (st, outs) = match pl.run_chain(spec, Some(st0), budgets) {
+        Ok(ok) => ok,
+        Err(e) => {
+            if let Some(run) = recorded.as_mut() {
+                run.manifest.status = FAILED.to_string();
+                // Provenance of the stages that did complete.
+                run.manifest.stages.extend(pl.take_stages());
+                if let Err(save_err) = run.save() {
+                    eprintln!(
+                        "cdnl: warning: could not mark {} failed: {save_err:#}",
+                        run.manifest.run_id
+                    );
+                } else {
+                    eprintln!("run marked failed: {}", run.manifest.run_id);
+                }
+            }
+            return Err(e);
+        }
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    for out in &outs {
+        println!("stage {}", out.describe());
+    }
+    let after_acc = pl.test_acc(&st)?;
+    println!(
+        "{chain} {}: {} -> {} ReLUs  test_acc {before_acc:.2}% -> {after_acc:.2}%  ({secs:.1}s)",
+        pl.sess.key,
+        fmt_relu_count(b0),
+        fmt_relu_count(st.budget()),
+    );
+    if let Some(mut run) = recorded {
+        run.manifest.stages.extend(pl.take_stages());
+        let result = RunResult {
+            final_budget: st.budget(),
+            acc_before: before_acc,
+            acc_after: after_acc,
+            wall_secs: secs,
+        };
+        seal_complete(&mut run.manifest, outs, result, engine);
+        run.save()?;
+        println!("run recorded: {} ({})", run.manifest.run_id, run.dir.display());
+    }
+
+    save_and_report(pl, &st, &chain, b_target, engine, args)
+}
+
+/// Common epilogue of every `cdnl run`: checkpoint + optional stats table.
+fn save_and_report(
+    pl: &Pipeline,
+    st: &ModelState,
+    method: &str,
+    budget: usize,
+    engine: &dyn Backend,
+    args: &Args,
+) -> Result<()> {
     let out_path = args
         .get("save")
         .map(PathBuf::from)
@@ -311,6 +470,34 @@ fn cmd_method(method: &str, engine: &dyn Backend, exp: Experiment, args: &Args) 
         println!("\n{}", engine.stats_table());
     }
     Ok(())
+}
+
+/// `cdnl methods list`: the registry, its config-key slices, and the
+/// per-method config fingerprints of the current experiment overlay.
+fn cmd_methods(args: &Args, exp: &Experiment) -> Result<()> {
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
+    match action {
+        "list" => {
+            let rows: Vec<Vec<String>> = registry::registry()
+                .iter()
+                .map(|m| {
+                    vec![
+                        m.name().to_string(),
+                        m.config_prefixes().join(" "),
+                        m.config_fingerprint(exp),
+                        m.describe().to_string(),
+                    ]
+                })
+                .collect();
+            cdnl::metrics::print_table(
+                "Registered methods (cdnl run <name> | <a>+<b> chains; configs ride Experiment)",
+                &["name", "config keys", "fingerprint", "description"],
+                &rows,
+            );
+            Ok(())
+        }
+        other => bail!("unknown methods action {other:?}\nusage: cdnl methods list"),
+    }
 }
 
 /// `<out>/<model>__<dataset>_<method>_b<budget>.cdnl` — shared by fresh
@@ -570,7 +757,7 @@ fn cmd_runs(args: &Args, exp: Experiment) -> Result<()> {
     let store = RunStore::for_experiment(&exp);
     let action = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
     match action {
-        "list" => runs_list(&store),
+        "list" => runs_list(&store, args),
         "show" => runs_show(&store, runs_id_arg(args)?),
         "resume" => runs_resume(&store, runs_id_arg(args)?, args),
         "gc" => runs_gc(&store, args),
@@ -595,10 +782,37 @@ fn fmt_age(now: usize, then: usize) -> String {
     }
 }
 
-fn runs_list(store: &RunStore) -> Result<()> {
-    let runs = store.list()?;
+fn runs_list(store: &RunStore, args: &Args) -> Result<()> {
+    // --method validates against the method registry ("snl", "snl+bcd",
+    // ...) so a typo fails loudly instead of silently matching nothing;
+    // the non-method manifest kinds recorded by other subcommands pass.
+    let method = match args.get("method") {
+        Some(name) if matches!(name, "bench" | "train") => Some(name.to_string()),
+        // Filter on the canonical spec string, so non-canonical spellings
+        // ("snl+", " snl + bcd ") match the manifests they mean instead of
+        // silently matching nothing.
+        Some(name) => Some(ChainSpec::parse(name)?.name()),
+        None => None,
+    };
+    let status = match args.get("status") {
+        Some(s) if matches!(s, RUNNING | COMPLETE | FAILED) => Some(s.to_string()),
+        Some(s) => bail!("--status: expected running|complete|failed, got {s:?}"),
+        None => None,
+    };
+    let mut runs = store.list()?;
+    runs.retain(|m| {
+        let method_ok = match &method {
+            Some(f) => &m.method == f,
+            None => true,
+        };
+        let status_ok = match &status {
+            Some(f) => &m.status == f,
+            None => true,
+        };
+        method_ok && status_ok
+    });
     if runs.is_empty() {
-        println!("no runs under {:?}", store.root());
+        println!("no matching runs under {:?}", store.root());
         return Ok(());
     }
     let now = cdnl::runstore::manifest::now_unix();
@@ -656,6 +870,13 @@ fn runs_show(store: &RunStore, id: &str) -> Result<()> {
             r.acc_after,
             r.wall_secs
         );
+    }
+    if let Some(outs) = &m.outcomes {
+        // Typed per-stage outcomes from the method registry: one line per
+        // stage, method-specific detail for every method (not just BCD).
+        for o in outs {
+            println!("outcome   {}", o.describe());
+        }
     }
     if let Some(b) = &m.bench {
         println!(

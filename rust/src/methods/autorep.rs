@@ -25,19 +25,10 @@ use crate::runtime::session::Session;
 use crate::util::prng::Rng;
 use anyhow::{bail, Result};
 
-/// AutoReP-specific knobs on top of the shared selective config.
-#[derive(Clone, Debug)]
-pub struct AutorepConfig {
-    pub base: SnlConfig,
-    /// Full hysteresis band width around the threshold.
-    pub hysteresis: f32,
-}
-
-impl Default for AutorepConfig {
-    fn default() -> Self {
-        AutorepConfig { base: SnlConfig::default(), hysteresis: 0.2 }
-    }
-}
+// The config lives in `crate::config` with every other method config, so
+// it rides `Experiment::dump`/`fingerprint` and run manifests; re-exported
+// here next to the run function.
+pub use crate::config::AutorepConfig;
 
 /// Trace of one AutoReP run.
 #[derive(Clone, Debug, Default)]
@@ -51,12 +42,15 @@ pub struct AutorepOutcome {
 }
 
 /// Run AutoReP on `st` (which must belong to a `*_poly` model variant)
-/// down to `b_target` ReLUs.
+/// down to `b_target` ReLUs. `base` is the shared selective-training
+/// schedule (an [`Experiment`](crate::config::Experiment) passes its
+/// `snl` config); `cfg` carries the AutoReP-specific hysteresis band.
 pub fn run_autorep(
     sess: &Session,
     st: &mut ModelState,
     ds: &Dataset,
     b_target: usize,
+    base: &SnlConfig,
     cfg: &AutorepConfig,
 ) -> Result<AutorepOutcome> {
     if !sess.info().poly {
@@ -65,7 +59,6 @@ pub fn run_autorep(
     if b_target >= st.budget() {
         bail!("AutoReP: target {b_target} >= current budget {}", st.budget());
     }
-    let base = &cfg.base;
     let mut rng = Rng::new(base.seed);
     let mut batcher = Batcher::new(ds, sess.batch, &mut rng);
 

@@ -20,25 +20,10 @@ use crate::runtime::session::Session;
 use crate::util::prng::Rng;
 use anyhow::{bail, Result};
 
-/// DeepReDuce hyperparameters.
-#[derive(Clone, Debug)]
-pub struct DeepReduceConfig {
-    pub proxy_batches: usize,
-    pub finetune_steps: usize,
-    pub finetune_lr: f32,
-    pub seed: u64,
-}
-
-impl Default for DeepReduceConfig {
-    fn default() -> Self {
-        DeepReduceConfig {
-            proxy_batches: 2,
-            finetune_steps: 60,
-            finetune_lr: 5e-3,
-            seed: 0xDEE9,
-        }
-    }
-}
+// The config lives in `crate::config` with every other method config, so
+// it rides `Experiment::dump`/`fingerprint` and run manifests; re-exported
+// here next to the run function.
+pub use crate::config::DeepReduceConfig;
 
 /// Outcome of one DeepReDuce run.
 #[derive(Clone, Debug, Default)]

@@ -15,6 +15,12 @@
 //! budget; the paper's BCD ([`crate::coordinator::bcd`]) can then run *on
 //! top of* any of their outputs (paper Fig. 4).
 //!
+//! Every method (the four baselines plus BCD itself) is registered in
+//! [`registry`] behind the [`Method`] trait — one typed `run(ctx, state,
+//! budget) -> MethodOutcome` entry point with per-method config slices of
+//! [`crate::config::Experiment`] and chainable stages ([`ChainSpec`],
+//! e.g. `snl+bcd`). See DESIGN.md §10.
+//!
 //! # References (see PAPERS.md for the retrieved abstracts)
 //!
 //! - Cho, Joshi, Garg, Reagen, Hegde, *Selective Network Linearization for
@@ -32,8 +38,11 @@
 
 pub mod autorep;
 pub mod deepreduce;
+pub mod registry;
 pub mod senet;
 pub mod snl;
+
+pub use registry::{ChainSpec, Method, MethodCtx, MethodOutcome};
 
 use crate::coordinator::eval::Evaluator;
 use crate::model::{Mask, ModelState};

@@ -1,0 +1,724 @@
+//! The unified method API (DESIGN.md §10): one typed entry point for every
+//! linearization method, with chainable stages and full config provenance.
+//!
+//! Before this module the five methods had five bespoke `run_*` signatures
+//! dispatched by a string `match` in `main.rs`, and three of the five
+//! method configs were built from `Default::default()` at the call site —
+//! invisible to [`Experiment::dump`]/[`Experiment::fingerprint`] and
+//! therefore to run manifests. The [`Method`] trait closes both holes:
+//!
+//! - every method runs through `Method::run(ctx, state, budget)` over a
+//!   [`MethodCtx`] (session + dataset + experiment + provenance sink), and
+//!   its hyperparameters live in [`Experiment`] (`snl.*`, `bcd.*`,
+//!   `autorep.*`, `senet.*`, `deepreduce.*`), so a run manifest's config
+//!   dump reconstructs *exactly* what ran;
+//! - `Method::run` returns a typed, serde-backed [`MethodOutcome`] that
+//!   serializes into `run.json`, so `cdnl runs show` prints method-specific
+//!   detail for every method, not just BCD;
+//! - [`ChainSpec`] composes registered methods into the paper's staging
+//!   protocols (`snl+bcd` is Tables 4/5 and Fig. 4's "ours on top of a
+//!   reference") as user-specifiable scenarios, one [`StageRecord`] of
+//!   provenance per stage.
+//!
+//! The registry impls are thin: each delegates to the same public `run_*`
+//! function the pre-registry call sites used, so registry dispatch is
+//! bit-identical to a direct call (`rust/tests/integration_registry.rs`
+//! asserts it method by method).
+
+use crate::config::{fingerprint_pairs, Experiment};
+use crate::coordinator::bcd::{run_bcd, BcdOutcome};
+use crate::data::Dataset;
+use crate::derive_serde;
+use crate::methods::autorep::{run_autorep, AutorepOutcome};
+use crate::methods::deepreduce::{run_deepreduce, DeepReduceOutcome};
+use crate::methods::senet::{run_senet, SenetOutcome};
+use crate::methods::snl::{run_snl, SnlOutcome};
+use crate::model::ModelState;
+use crate::runstore::StageRecord;
+use crate::runtime::session::Session;
+use crate::util::json::Json;
+use crate::util::serde as sd;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Per-stage provenance sink: chain execution appends one [`StageRecord`]
+/// per completed stage; the pipeline appends one per zoo access. A run
+/// manifest drains the sink at seal time (`Pipeline::take_stages`).
+pub type RecordSink = Mutex<Vec<StageRecord>>;
+
+/// Everything a method needs to run, bundled so every method shares one
+/// signature: the typed backend session, the training dataset, the full
+/// experiment config (each method reads its own `Experiment` slice), and
+/// the stage-provenance sink.
+pub struct MethodCtx<'a> {
+    pub sess: &'a Session<'a>,
+    pub train_ds: &'a Dataset,
+    pub exp: &'a Experiment,
+    pub stages: &'a RecordSink,
+}
+
+impl<'a> MethodCtx<'a> {
+    pub fn new(
+        sess: &'a Session<'a>,
+        train_ds: &'a Dataset,
+        exp: &'a Experiment,
+        stages: &'a RecordSink,
+    ) -> MethodCtx<'a> {
+        MethodCtx { sess, train_ds, exp, stages }
+    }
+}
+
+/// One linearization method, registered in [`registry`].
+///
+/// Implementations delegate to the method's public `run_*` function with
+/// configs read from `ctx.exp`, so the registry path and a direct call are
+/// bit-identical. The trait is object-safe; `Sync` lets the registry hand
+/// out `&'static dyn Method` across the parallel bench/test harnesses.
+pub trait Method: Sync {
+    /// Registry name — the CLI spelling (`cdnl run <name>`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `cdnl methods list`.
+    fn describe(&self) -> &'static str;
+
+    /// Key prefixes of this method's slice of [`Experiment::dump`] — the
+    /// settings that determine its numerics.
+    fn config_prefixes(&self) -> &'static [&'static str];
+
+    /// Run the method on `st` down to `budget` ReLUs, mutating it.
+    fn run(&self, ctx: &MethodCtx, st: &mut ModelState, budget: usize)
+        -> Result<MethodOutcome>;
+
+    /// The method-relevant subset of the experiment's canonical dump
+    /// (what a manifest must carry for this method to be reproducible).
+    fn config_dump(&self, exp: &Experiment) -> BTreeMap<String, String> {
+        exp.dump()
+            .into_iter()
+            .filter(|(k, _)| self.config_prefixes().iter().any(|p| k.starts_with(p)))
+            .collect()
+    }
+
+    /// FNV-1a 64 fingerprint of [`Method::config_dump`]: changes exactly
+    /// when a setting this method reads changes.
+    fn config_fingerprint(&self, exp: &Experiment) -> String {
+        fingerprint_pairs(&self.config_dump(exp))
+    }
+}
+
+// ---- typed outcomes --------------------------------------------------------
+
+/// Serializable summary of one SNL run (trace-level data — snapshots and
+/// per-alpha trajectories — stays in [`SnlOutcome`]; manifests carry the
+/// schedule facts Figs. 9/10 gate on).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SnlSummary {
+    pub steps_run: usize,
+    /// Steps at which λ ← κ·λ fired.
+    pub kappa_updates: Vec<usize>,
+    pub final_budget: usize,
+}
+derive_serde!(SnlSummary { steps_run, kappa_updates, final_budget });
+
+impl SnlSummary {
+    pub fn from_outcome(o: &SnlOutcome) -> SnlSummary {
+        SnlSummary {
+            steps_run: o.steps_run,
+            kappa_updates: o.kappa_updates.clone(),
+            final_budget: o.final_budget,
+        }
+    }
+}
+
+/// Serializable summary of one AutoReP run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutorepSummary {
+    pub steps_run: usize,
+    pub kappa_updates: Vec<usize>,
+    /// Total indicator flips across checks (the hysteresis metric).
+    pub total_flips: usize,
+    pub final_budget: usize,
+}
+derive_serde!(AutorepSummary { steps_run, kappa_updates, total_flips, final_budget });
+
+impl AutorepSummary {
+    pub fn from_outcome(o: &AutorepOutcome) -> AutorepSummary {
+        AutorepSummary {
+            steps_run: o.steps_run,
+            kappa_updates: o.kappa_updates.clone(),
+            total_flips: o.flips_trace.iter().map(|&(_, f)| f).sum(),
+            final_budget: o.final_budget,
+        }
+    }
+}
+
+/// Serializable summary of one SENet run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SenetSummary {
+    /// Per-layer accuracy sensitivity, as measured.
+    pub sensitivity: Vec<f64>,
+    /// Per-layer ReLU allocation (sums to the target budget).
+    pub allocation: Vec<usize>,
+    pub kd_first_loss: f32,
+    pub kd_last_loss: f32,
+    pub final_budget: usize,
+}
+derive_serde!(SenetSummary {
+    sensitivity,
+    allocation,
+    kd_first_loss,
+    kd_last_loss,
+    final_budget,
+});
+
+impl SenetSummary {
+    pub fn from_outcome(o: &SenetOutcome) -> SenetSummary {
+        SenetSummary {
+            sensitivity: o.sensitivity.clone(),
+            allocation: o.allocation.clone(),
+            kd_first_loss: o.kd_first_loss,
+            kd_last_loss: o.kd_last_loss,
+            final_budget: o.allocation.iter().sum(),
+        }
+    }
+}
+
+/// Serializable summary of one DeepReDuce run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeepReduceSummary {
+    /// Layers fully linearized, in drop order.
+    pub dropped_layers: Vec<usize>,
+    /// Layer partially dropped to land exactly on the budget (if any).
+    pub partial_layer: Option<usize>,
+    pub final_budget: usize,
+}
+derive_serde!(DeepReduceSummary { dropped_layers, partial_layer, final_budget });
+
+impl DeepReduceSummary {
+    pub fn from_outcome(o: &DeepReduceOutcome, final_budget: usize) -> DeepReduceSummary {
+        DeepReduceSummary {
+            dropped_layers: o.dropped_layers.clone(),
+            partial_layer: o.partial_layer,
+            final_budget,
+        }
+    }
+}
+
+/// Serializable summary of one BCD run (the full per-sweep trace rides the
+/// manifest separately as [`crate::runstore::BcdProgress`] for recorded
+/// runs; this is the cross-method summary shape).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BcdSummary {
+    pub sweeps: usize,
+    pub trials_evaluated: usize,
+    pub trials_bounded: usize,
+    pub early_accepts: usize,
+    pub final_budget: usize,
+}
+derive_serde!(BcdSummary {
+    sweeps,
+    trials_evaluated,
+    trials_bounded,
+    early_accepts,
+    final_budget,
+});
+
+impl BcdSummary {
+    pub fn from_outcome(o: &BcdOutcome) -> BcdSummary {
+        BcdSummary {
+            sweeps: o.iterations.len(),
+            trials_evaluated: o.total_trials(),
+            trials_bounded: o.iterations.iter().map(|r| r.trials_bounded).sum(),
+            early_accepts: o.iterations.iter().filter(|r| r.early_accept).count(),
+            final_budget: o.final_budget,
+        }
+    }
+}
+
+/// Typed outcome of one method run — the serde-backed enum a
+/// [`crate::runstore::RunManifest`] embeds (`outcomes`), one variant per
+/// registered method. On disk it is a single-key object tagged by the
+/// method name: `{"snl": {...}}`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MethodOutcome {
+    Snl(SnlSummary),
+    Bcd(BcdSummary),
+    Autorep(AutorepSummary),
+    Senet(SenetSummary),
+    Deepreduce(DeepReduceSummary),
+}
+
+impl MethodOutcome {
+    /// The registry name of the method that produced this outcome.
+    pub fn method(&self) -> &'static str {
+        match self {
+            MethodOutcome::Snl(_) => "snl",
+            MethodOutcome::Bcd(_) => "bcd",
+            MethodOutcome::Autorep(_) => "autorep",
+            MethodOutcome::Senet(_) => "senet",
+            MethodOutcome::Deepreduce(_) => "deepreduce",
+        }
+    }
+
+    /// ReLU budget the run landed on.
+    pub fn final_budget(&self) -> usize {
+        match self {
+            MethodOutcome::Snl(s) => s.final_budget,
+            MethodOutcome::Bcd(s) => s.final_budget,
+            MethodOutcome::Autorep(s) => s.final_budget,
+            MethodOutcome::Senet(s) => s.final_budget,
+            MethodOutcome::Deepreduce(s) => s.final_budget,
+        }
+    }
+
+    /// One-line human summary (the CLI epilogue and `cdnl runs show`).
+    pub fn describe(&self) -> String {
+        match self {
+            MethodOutcome::Snl(s) => format!(
+                "snl: {} steps, {} lambda updates -> {} ReLUs",
+                s.steps_run,
+                s.kappa_updates.len(),
+                s.final_budget
+            ),
+            MethodOutcome::Bcd(s) => format!(
+                "bcd: {} iterations, {} trials total ({} bounded early, {} early-accepted)",
+                s.sweeps, s.trials_evaluated, s.trials_bounded, s.early_accepts
+            ),
+            MethodOutcome::Autorep(s) => format!(
+                "autorep: {} steps, {} indicator flips -> {} ReLUs",
+                s.steps_run, s.total_flips, s.final_budget
+            ),
+            MethodOutcome::Senet(s) => format!(
+                "senet: kd loss {:.3} -> {:.3} across {} layers",
+                s.kd_first_loss,
+                s.kd_last_loss,
+                s.allocation.len()
+            ),
+            MethodOutcome::Deepreduce(s) => format!(
+                "deepreduce: dropped layers {:?}, partial {:?}",
+                s.dropped_layers, s.partial_layer
+            ),
+        }
+    }
+}
+
+impl sd::Serialize for MethodOutcome {
+    fn serialize(&self) -> Json {
+        let (tag, inner) = match self {
+            MethodOutcome::Snl(s) => ("snl", s.serialize()),
+            MethodOutcome::Bcd(s) => ("bcd", s.serialize()),
+            MethodOutcome::Autorep(s) => ("autorep", s.serialize()),
+            MethodOutcome::Senet(s) => ("senet", s.serialize()),
+            MethodOutcome::Deepreduce(s) => ("deepreduce", s.serialize()),
+        };
+        let mut m = BTreeMap::new();
+        m.insert(tag.to_string(), inner);
+        Json::Obj(m)
+    }
+}
+
+impl sd::Deserialize for MethodOutcome {
+    fn deserialize(v: &Json) -> Result<Self, String> {
+        let m = match v {
+            Json::Obj(m) if m.len() == 1 => m,
+            other => {
+                return Err(format!(
+                    "expected single-key method-outcome object, got {other:.40?}"
+                ))
+            }
+        };
+        let (tag, inner) = m.iter().next().expect("len checked above");
+        let err = |e: String| format!("{tag}: {e}");
+        match tag.as_str() {
+            "snl" => sd::Deserialize::deserialize(inner).map(MethodOutcome::Snl).map_err(err),
+            "bcd" => sd::Deserialize::deserialize(inner).map(MethodOutcome::Bcd).map_err(err),
+            "autorep" => {
+                sd::Deserialize::deserialize(inner).map(MethodOutcome::Autorep).map_err(err)
+            }
+            "senet" => {
+                sd::Deserialize::deserialize(inner).map(MethodOutcome::Senet).map_err(err)
+            }
+            "deepreduce" => sd::Deserialize::deserialize(inner)
+                .map(MethodOutcome::Deepreduce)
+                .map_err(err),
+            other => Err(format!("unknown method-outcome tag {other:?}")),
+        }
+    }
+}
+
+// ---- the five registered methods -------------------------------------------
+
+struct SnlMethod;
+
+impl Method for SnlMethod {
+    fn name(&self) -> &'static str {
+        "snl"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Selective Network Linearization: soft alpha masks under CE + lambda*||a||_1 (Cho et al. 2022)"
+    }
+
+    fn config_prefixes(&self) -> &'static [&'static str] {
+        &["snl."]
+    }
+
+    fn run(
+        &self,
+        ctx: &MethodCtx,
+        st: &mut ModelState,
+        budget: usize,
+    ) -> Result<MethodOutcome> {
+        let out = run_snl(ctx.sess, st, ctx.train_ds, budget, &ctx.exp.snl, 0)?;
+        Ok(MethodOutcome::Snl(SnlSummary::from_outcome(&out)))
+    }
+}
+
+struct BcdMethod;
+
+impl Method for BcdMethod {
+    fn name(&self) -> &'static str {
+        "bcd"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Block Coordinate Descent over binary ReLU masks — the paper's Algorithm 2"
+    }
+
+    fn config_prefixes(&self) -> &'static [&'static str] {
+        &["bcd."]
+    }
+
+    fn run(
+        &self,
+        ctx: &MethodCtx,
+        st: &mut ModelState,
+        budget: usize,
+    ) -> Result<MethodOutcome> {
+        let out = run_bcd(ctx.sess, st, ctx.train_ds, budget, &ctx.exp.bcd, 0)?;
+        Ok(MethodOutcome::Bcd(BcdSummary::from_outcome(&out)))
+    }
+}
+
+struct AutorepMethod;
+
+impl Method for AutorepMethod {
+    fn name(&self) -> &'static str {
+        "autorep"
+    }
+
+    fn describe(&self) -> &'static str {
+        "AutoReP polynomial ReLU replacement with a hysteresis indicator (Peng et al. 2023; *_poly models)"
+    }
+
+    fn config_prefixes(&self) -> &'static [&'static str] {
+        // AutoReP trains on the shared selective base (exp.snl) plus its
+        // own hysteresis band — both determine its numerics.
+        &["snl.", "autorep."]
+    }
+
+    fn run(
+        &self,
+        ctx: &MethodCtx,
+        st: &mut ModelState,
+        budget: usize,
+    ) -> Result<MethodOutcome> {
+        let out =
+            run_autorep(ctx.sess, st, ctx.train_ds, budget, &ctx.exp.snl, &ctx.exp.autorep)?;
+        Ok(MethodOutcome::Autorep(AutorepSummary::from_outcome(&out)))
+    }
+}
+
+struct SenetMethod;
+
+impl Method for SenetMethod {
+    fn name(&self) -> &'static str {
+        "senet"
+    }
+
+    fn describe(&self) -> &'static str {
+        "SENet sensitivity-driven budget allocation + KD finetune (Kundu et al. 2023)"
+    }
+
+    fn config_prefixes(&self) -> &'static [&'static str] {
+        &["senet."]
+    }
+
+    fn run(
+        &self,
+        ctx: &MethodCtx,
+        st: &mut ModelState,
+        budget: usize,
+    ) -> Result<MethodOutcome> {
+        let out = run_senet(ctx.sess, st, ctx.train_ds, budget, &ctx.exp.senet)?;
+        Ok(MethodOutcome::Senet(SenetSummary::from_outcome(&out)))
+    }
+}
+
+struct DeepreduceMethod;
+
+impl Method for DeepreduceMethod {
+    fn name(&self) -> &'static str {
+        "deepreduce"
+    }
+
+    fn describe(&self) -> &'static str {
+        "DeepReDuce layer-granularity ReLU dropping by sensitivity order (Jha et al. 2021)"
+    }
+
+    fn config_prefixes(&self) -> &'static [&'static str] {
+        &["deepreduce."]
+    }
+
+    fn run(
+        &self,
+        ctx: &MethodCtx,
+        st: &mut ModelState,
+        budget: usize,
+    ) -> Result<MethodOutcome> {
+        let out = run_deepreduce(ctx.sess, st, ctx.train_ds, budget, &ctx.exp.deepreduce)?;
+        Ok(MethodOutcome::Deepreduce(DeepReduceSummary::from_outcome(&out, st.budget())))
+    }
+}
+
+// ---- the registry ----------------------------------------------------------
+
+static REGISTRY: [&dyn Method; 5] =
+    [&SnlMethod, &BcdMethod, &AutorepMethod, &SenetMethod, &DeepreduceMethod];
+
+/// Every registered method, in CLI documentation order.
+pub fn registry() -> &'static [&'static dyn Method] {
+    &REGISTRY
+}
+
+/// Registered method names, registry order.
+pub fn names() -> Vec<&'static str> {
+    registry().iter().map(|m| m.name()).collect()
+}
+
+/// Look up one method by registry name; the error lists what is registered
+/// (the CLI's unknown-method message — no more `unreachable!()` arms).
+pub fn find(name: &str) -> Result<&'static dyn Method> {
+    registry()
+        .iter()
+        .copied()
+        .find(|m| m.name() == name)
+        .ok_or_else(|| {
+            anyhow!("unknown method {name:?} (registered: {})", names().join(", "))
+        })
+}
+
+// ---- chains ----------------------------------------------------------------
+
+/// A parsed method chain: one or more registered methods executed in
+/// sequence on the same [`ModelState`], each stage reducing to its own
+/// budget. `cdnl run snl+bcd --budgets 15000,12000` is the paper's
+/// Tables 4/5 protocol (BCD on top of an SNL reference); `senet+bcd`,
+/// `deepreduce+bcd`, or any other composition is the same one-liner.
+pub struct ChainSpec {
+    pub stages: Vec<&'static dyn Method>,
+}
+
+impl ChainSpec {
+    /// Parse a `+`-separated spec (`"snl+bcd"`); every component must be a
+    /// registered method name.
+    pub fn parse(spec: &str) -> Result<ChainSpec> {
+        let names: Vec<&str> =
+            spec.split('+').map(str::trim).filter(|s| !s.is_empty()).collect();
+        if names.is_empty() {
+            bail!("empty method spec (registered: {})", names_joined());
+        }
+        let mut stages = Vec::with_capacity(names.len());
+        for n in names {
+            stages.push(find(n)?);
+        }
+        Ok(ChainSpec { stages })
+    }
+
+    /// Canonical spec string (`"snl+bcd"`), the inverse of [`Self::parse`].
+    pub fn name(&self) -> String {
+        self.stages.iter().map(|m| m.name()).collect::<Vec<_>>().join("+")
+    }
+
+    /// More than one stage?
+    pub fn is_chain(&self) -> bool {
+        self.stages.len() > 1
+    }
+
+    /// Execute the stages in order on `st` — `budgets[i]` is stage `i`'s
+    /// target. Appends one `chain:<method>` [`StageRecord`] per completed
+    /// stage to the ctx sink (sealed into the run manifest) and returns the
+    /// per-stage typed outcomes.
+    pub fn run(
+        &self,
+        ctx: &MethodCtx,
+        st: &mut ModelState,
+        budgets: &[usize],
+    ) -> Result<Vec<MethodOutcome>> {
+        if budgets.len() != self.stages.len() {
+            bail!(
+                "chain {} has {} stages but {} budget(s) were given (--budgets b1,b2,...)",
+                self.name(),
+                self.stages.len(),
+                budgets.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(self.stages.len());
+        for (i, (m, &b)) in self.stages.iter().zip(budgets).enumerate() {
+            let t0 = std::time::Instant::now();
+            let out = m.run(ctx, st, b)?;
+            crate::info!(
+                "chain stage {}/{} ({}): -> {} ReLUs ({:.1}s)",
+                i + 1,
+                self.stages.len(),
+                m.name(),
+                st.budget(),
+                t0.elapsed().as_secs_f64()
+            );
+            ctx.stages.lock().unwrap().push(StageRecord {
+                stage: format!("chain:{}", m.name()),
+                // The stage index, not a checkpoint path: intermediate chain
+                // states live only in memory. Unique per stage so the
+                // provenance dedup (keyed on stage+path) keeps repeated
+                // methods (`bcd+bcd`) as distinct records.
+                path: format!("#{}", i + 1),
+                budget: st.budget(),
+                cached: false,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            });
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+}
+
+fn names_joined() -> String {
+    names().join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_findable() {
+        let mut seen = std::collections::HashSet::new();
+        for m in registry() {
+            assert!(seen.insert(m.name()), "duplicate method {}", m.name());
+            assert!(find(m.name()).is_ok());
+            assert!(!m.describe().is_empty());
+            assert!(!m.config_prefixes().is_empty());
+        }
+        assert_eq!(registry().len(), 5);
+        let err = format!("{:#}", find("nope").unwrap_err());
+        assert!(err.contains("snl") && err.contains("deepreduce"), "{err}");
+    }
+
+    #[test]
+    fn chain_parse_roundtrip_and_errors() {
+        let c = ChainSpec::parse("snl+bcd").unwrap();
+        assert_eq!(c.name(), "snl+bcd");
+        assert!(c.is_chain());
+        let single = ChainSpec::parse("senet").unwrap();
+        assert!(!single.is_chain());
+        assert_eq!(single.name(), "senet");
+        let err = format!("{:#}", ChainSpec::parse("snl+bogus").unwrap_err());
+        assert!(err.contains("registered:"), "{err}");
+        assert!(ChainSpec::parse("++").is_err());
+    }
+
+    #[test]
+    fn config_dump_slices_by_prefix() {
+        let exp = Experiment::default();
+        let snl = find("snl").unwrap();
+        let dump = snl.config_dump(&exp);
+        assert!(dump.keys().all(|k| k.starts_with("snl.")));
+        assert!(dump.contains_key("snl.lambda0"));
+        // AutoReP's slice spans the shared selective base + its own band.
+        let arp = find("autorep").unwrap();
+        let dump = arp.config_dump(&exp);
+        assert!(dump.contains_key("autorep.hysteresis"));
+        assert!(dump.contains_key("snl.kappa"));
+        assert!(!dump.contains_key("bcd.drc"));
+    }
+
+    #[test]
+    fn config_fingerprint_moves_with_owned_keys_only() {
+        let snl = find("snl").unwrap();
+        let bcd = find("bcd").unwrap();
+        let mut exp = Experiment::default();
+        let fp_snl = snl.config_fingerprint(&exp);
+        let fp_bcd = bcd.config_fingerprint(&exp);
+        exp.apply("snl.kappa", "1.75").unwrap();
+        assert_ne!(snl.config_fingerprint(&exp), fp_snl);
+        assert_eq!(bcd.config_fingerprint(&exp), fp_bcd, "bcd must ignore snl.* changes");
+        exp.apply("bcd.rt", "99").unwrap();
+        assert_ne!(bcd.config_fingerprint(&exp), fp_bcd);
+    }
+
+    #[test]
+    fn outcome_serde_roundtrips_every_variant() {
+        let outcomes = vec![
+            MethodOutcome::Snl(SnlSummary {
+                steps_run: 40,
+                kappa_updates: vec![5, 15],
+                final_budget: 300,
+            }),
+            MethodOutcome::Bcd(BcdSummary {
+                sweeps: 3,
+                trials_evaluated: 21,
+                trials_bounded: 4,
+                early_accepts: 1,
+                final_budget: 256,
+            }),
+            MethodOutcome::Autorep(AutorepSummary {
+                steps_run: 16,
+                kappa_updates: vec![],
+                total_flips: 9,
+                final_budget: 200,
+            }),
+            MethodOutcome::Senet(SenetSummary {
+                sensitivity: vec![0.5, 0.25],
+                allocation: vec![120, 80],
+                kd_first_loss: 2.5,
+                kd_last_loss: 2.25,
+                final_budget: 200,
+            }),
+            MethodOutcome::Deepreduce(DeepReduceSummary {
+                dropped_layers: vec![1],
+                partial_layer: Some(0),
+                final_budget: 128,
+            }),
+            MethodOutcome::Deepreduce(DeepReduceSummary {
+                dropped_layers: vec![],
+                partial_layer: None,
+                final_budget: 64,
+            }),
+        ];
+        for o in outcomes {
+            let text = sd::to_string(&o);
+            let back: MethodOutcome = sd::from_str(&text).unwrap();
+            assert_eq!(back, o, "roundtrip failed for {}", o.method());
+            assert!(text.contains(o.method()), "tag missing in {text}");
+            assert!(!o.describe().is_empty());
+        }
+        // Unknown tags and malformed shapes are rejected, not misread.
+        assert!(sd::from_str::<MethodOutcome>(r#"{"warp": {}}"#).is_err());
+        assert!(sd::from_str::<MethodOutcome>(r#"{"snl": {}, "bcd": {}}"#).is_err());
+        assert!(sd::from_str::<MethodOutcome>("42").is_err());
+    }
+
+    #[test]
+    fn outcome_accessors() {
+        let o = MethodOutcome::Bcd(BcdSummary {
+            sweeps: 2,
+            trials_evaluated: 10,
+            trials_bounded: 1,
+            early_accepts: 0,
+            final_budget: 77,
+        });
+        assert_eq!(o.method(), "bcd");
+        assert_eq!(o.final_budget(), 77);
+        assert!(o.describe().starts_with("bcd:"));
+    }
+}

@@ -21,32 +21,10 @@ use crate::runtime::session::Session;
 use crate::util::prng::Rng;
 use anyhow::{bail, Result};
 
-/// SENet hyperparameters.
-#[derive(Clone, Debug)]
-pub struct SenetConfig {
-    /// Proxy batches for sensitivity measurement and trial scoring.
-    pub proxy_batches: usize,
-    /// Within-layer keep-set candidates tried per layer.
-    pub layer_trials: usize,
-    /// KD finetune steps / lr / temperature.
-    pub kd_steps: usize,
-    pub kd_lr: f32,
-    pub kd_temp: f32,
-    pub seed: u64,
-}
-
-impl Default for SenetConfig {
-    fn default() -> Self {
-        SenetConfig {
-            proxy_batches: 2,
-            layer_trials: 4,
-            kd_steps: 60,
-            kd_lr: 5e-3,
-            kd_temp: 4.0,
-            seed: 0x5E9E,
-        }
-    }
-}
+// The config lives in `crate::config` with every other method config, so
+// it rides `Experiment::dump`/`fingerprint` and run manifests; re-exported
+// here next to the run function.
+pub use crate::config::SenetConfig;
 
 /// Outcome of a SENet run.
 #[derive(Clone, Debug, Default)]

@@ -23,8 +23,7 @@ use crate::coordinator::bcd::{run_bcd, run_bcd_resumable, BcdOutcome, IterRecord
 use crate::coordinator::eval::test_accuracy;
 use crate::coordinator::train::train;
 use crate::data::{synth, Dataset};
-use crate::methods::autorep::{run_autorep, AutorepConfig};
-use crate::methods::snl::run_snl;
+use crate::methods::registry::{self, ChainSpec, Method, MethodCtx, MethodOutcome, RecordSink};
 use crate::model::{zoo, ModelState};
 use crate::runstore::{
     BcdRecorder, RunDir, RunManifest, RunStore, StageRecord, COMPLETE, FAILED, RUNNING,
@@ -33,7 +32,6 @@ use crate::runtime::backend::Backend;
 use crate::runtime::session::Session;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
-use std::sync::Mutex;
 
 /// One experiment's shared context.
 pub struct Pipeline<'e> {
@@ -42,8 +40,9 @@ pub struct Pipeline<'e> {
     pub train_ds: Dataset,
     pub test_ds: Dataset,
     zoo_dir: PathBuf,
-    /// Zoo accesses since the last [`Self::take_stages`] (run provenance).
-    stages: Mutex<Vec<StageRecord>>,
+    /// Zoo accesses and chain stages since the last [`Self::take_stages`]
+    /// (run provenance; also the [`MethodCtx`] record sink).
+    stages: RecordSink,
 }
 
 impl<'e> Pipeline<'e> {
@@ -62,8 +61,14 @@ impl<'e> Pipeline<'e> {
             train_ds,
             test_ds,
             zoo_dir,
-            stages: Mutex::new(Vec::new()),
+            stages: RecordSink::default(),
         })
+    }
+
+    /// The [`MethodCtx`] this pipeline hands to registry methods: its
+    /// session, training split, config and stage-provenance sink.
+    pub fn ctx(&self) -> MethodCtx<'_> {
+        MethodCtx::new(&self.sess, &self.train_ds, &self.exp, &self.stages)
     }
 
     /// Zoo access with provenance recording.
@@ -106,7 +111,8 @@ impl<'e> Pipeline<'e> {
     }
 
     /// SNL reference model at `b_ref` ReLUs, from the baseline (cached).
-    /// This is the model BCD starts from — paper Tables 4/5.
+    /// This is the model BCD starts from — paper Tables 4/5. Runs through
+    /// the method registry, so it is exactly `cdnl run snl` numerics.
     pub fn snl_ref(&self, b_ref: usize) -> Result<ModelState> {
         if b_ref >= self.sess.info().total_relus() {
             return self.baseline(); // degenerate: reference == full network
@@ -117,12 +123,13 @@ impl<'e> Pipeline<'e> {
         );
         self.staged("snl_ref", &tag, || {
             let mut st = self.baseline()?;
-            run_snl(&self.sess, &mut st, &self.train_ds, b_ref, &self.exp.snl, 0)?;
+            registry::find("snl")?.run(&self.ctx(), &mut st, b_ref)?;
             Ok(st)
         })
     }
 
     /// AutoReP reference model at `b_ref` ReLUs (poly variants; cached).
+    /// Registry-dispatched, like [`Self::snl_ref`].
     pub fn autorep_ref(&self, b_ref: usize) -> Result<ModelState> {
         if b_ref >= self.sess.info().total_relus() {
             return self.baseline();
@@ -131,12 +138,31 @@ impl<'e> Pipeline<'e> {
             "{}_arpref_b{}_s{}",
             self.exp.dataset, b_ref, self.exp.snl.seed
         );
-        let cfg = AutorepConfig { base: self.exp.snl.clone(), ..Default::default() };
         self.staged("autorep_ref", &tag, || {
             let mut st = self.baseline()?;
-            run_autorep(&self.sess, &mut st, &self.train_ds, b_ref, &cfg)?;
+            registry::find("autorep")?.run(&self.ctx(), &mut st, b_ref)?;
             Ok(st)
         })
+    }
+
+    /// Execute a parsed method chain from the baseline (or from `from`
+    /// when given): stage `i` reduces to `budgets[i]`. The generalization
+    /// of the paper's staging protocol — `snl+bcd` at `(B_ref, B_target)`
+    /// is exactly [`Self::snl_ref`] followed by [`Self::bcd_from`]
+    /// (asserted bit-identical in `rust/tests/integration_registry.rs`).
+    /// Per-stage provenance lands in the stage sink for the run manifest.
+    pub fn run_chain(
+        &self,
+        spec: &ChainSpec,
+        from: Option<ModelState>,
+        budgets: &[usize],
+    ) -> Result<(ModelState, Vec<MethodOutcome>)> {
+        let mut st = match from {
+            Some(st) => st,
+            None => self.baseline()?,
+        };
+        let outs = spec.run(&self.ctx(), &mut st, budgets)?;
+        Ok((st, outs))
     }
 
     /// Run BCD from a copy of `reference` down to `b_target`; returns the

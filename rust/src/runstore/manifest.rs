@@ -13,6 +13,7 @@ use crate::config::Experiment;
 use crate::coordinator::bcd::{BcdCursor, IterRecord, SweepEvent};
 use crate::coordinator::finetune::FinetuneStats;
 use crate::derive_serde;
+use crate::methods::MethodOutcome;
 use crate::runtime::backend::CallStats;
 use crate::util::serde::{hex_state, unhex_state, HexU64};
 use anyhow::{anyhow, Result};
@@ -228,6 +229,13 @@ pub struct RunManifest {
     pub b_target: usize,
     pub stages: Vec<StageRecord>,
     pub bcd: Option<BcdProgress>,
+    /// Typed per-stage outcomes from the method registry
+    /// ([`crate::methods::registry`]): one entry for a single-method run,
+    /// one per stage for a chain (`snl+bcd`), in execution order — how
+    /// `cdnl runs show` prints method-specific detail for every method.
+    /// `None` on manifests written before this field existed (format 1
+    /// stays readable).
+    pub outcomes: Option<Vec<MethodOutcome>>,
     pub result: Option<RunResult>,
     /// Per-entry-point backend statistics at seal time (including the
     /// staged-execution `prefix_cache:*` counters). `None` on manifests
@@ -255,6 +263,7 @@ derive_serde!(RunManifest {
     b_target,
     stages,
     bcd,
+    outcomes,
     result,
     stats,
     bench,
@@ -287,6 +296,7 @@ impl RunManifest {
             b_target,
             stages: Vec::new(),
             bcd: None,
+            outcomes: None,
             result: None,
             stats: None,
             bench: None,
@@ -397,6 +407,44 @@ mod tests {
         let back: RunManifest = sd::from_str(&text).unwrap();
         assert_eq!(back.stats, None);
         assert_eq!(back.run_id, m.run_id);
+    }
+
+    #[test]
+    fn method_configs_and_outcomes_ride_the_manifest() {
+        // The ISSUE 5 provenance bug: autorep/senet/deepreduce configs used
+        // to be built from Default::default() at the call site, invisible
+        // to manifests. Now they live in Experiment, so the recorded config
+        // dump carries them and `experiment()` reconstructs them exactly.
+        let mut exp = Experiment::default();
+        exp.apply("senet.kd_steps", "7").unwrap();
+        exp.apply("autorep.hysteresis", "0.4").unwrap();
+        exp.apply("deepreduce.seed", "123").unwrap();
+        let mut m = RunManifest::new("senet", &exp, "reference", 384, 200);
+        assert_eq!(m.config.get("senet.kd_steps").unwrap(), "7");
+        assert_eq!(m.config.get("autorep.hysteresis").unwrap(), "0.4");
+        assert_eq!(m.config.get("deepreduce.seed").unwrap(), "123");
+        let back = m.experiment().unwrap();
+        assert_eq!(back.senet.kd_steps, 7);
+        assert_eq!(back.deepreduce.seed, 123);
+        assert_eq!(back.fingerprint(), m.config_fingerprint);
+
+        // Typed outcomes round-trip through run.json; old manifests
+        // without the key still parse (None).
+        m.outcomes = Some(vec![MethodOutcome::Senet(
+            crate::methods::registry::SenetSummary {
+                sensitivity: vec![1.5, 0.5],
+                allocation: vec![150, 50],
+                kd_first_loss: 2.0,
+                kd_last_loss: 1.5,
+                final_budget: 200,
+            },
+        )]);
+        let text = sd::to_string_pretty(&m);
+        let back: RunManifest = sd::from_str(&text).unwrap();
+        assert_eq!(back.outcomes, m.outcomes);
+        let stripped = text.replace("\"outcomes\"", "\"outcomes_from_the_future\"");
+        let old: RunManifest = sd::from_str(&stripped).unwrap();
+        assert_eq!(old.outcomes, None);
     }
 
     #[test]

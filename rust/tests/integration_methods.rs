@@ -122,23 +122,21 @@ fn methods_reach_exact_budgets() {
     let sess_p = Session::new(&engine, "resnet_16x16_c20_poly").unwrap();
     let (train_100, _) = synth::generate(synth::by_name("synth100").unwrap());
     let mut st_p = sess_p.init_state(9).unwrap();
-    let ar_cfg = AutorepConfig {
-        base: SnlConfig {
-            steps_per_check: 4,
-            max_steps: 16,
-            finetune_steps: 2,
-            ..snl_cfg.clone()
-        },
-        hysteresis: 0.2,
+    let ar_base = SnlConfig {
+        steps_per_check: 4,
+        max_steps: 16,
+        finetune_steps: 2,
+        ..snl_cfg.clone()
     };
+    let ar_cfg = AutorepConfig { hysteresis: 0.2 };
     let p_total = sess_p.info().total_relus();
     let p_target = p_total - 300;
-    let out = run_autorep(&sess_p, &mut st_p, &train_100, p_target, &ar_cfg).unwrap();
+    let out = run_autorep(&sess_p, &mut st_p, &train_100, p_target, &ar_base, &ar_cfg).unwrap();
     assert_eq!(st_p.budget(), p_target);
     assert!(!out.budget_trace.is_empty());
     st_p.mask.check_invariants().unwrap();
 
     // AutoReP must refuse non-poly sessions.
     let mut st_bad = trained.clone();
-    assert!(run_autorep(&sess, &mut st_bad, &train_ds, 100, &ar_cfg).is_err());
+    assert!(run_autorep(&sess, &mut st_bad, &train_ds, 100, &ar_base, &ar_cfg).is_err());
 }

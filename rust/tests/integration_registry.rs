@@ -1,0 +1,190 @@
+//! Method-registry integration on the pure-Rust reference backend
+//! (DESIGN.md §10): dispatch parity — every method produces bit-identical
+//! `ModelState` and outcome fields through the old-style direct `run_*`
+//! call and the registry path — plus chain semantics: `snl+bcd` reproduces
+//! the hard-coded `Pipeline::snl_ref -> bcd_from` staging exactly, with
+//! per-stage provenance and a manifest-ready typed outcome trail.
+
+use cdnl::config::Experiment;
+use cdnl::coordinator::bcd::run_bcd;
+use cdnl::data::{synth, Dataset};
+use cdnl::methods::autorep::run_autorep;
+use cdnl::methods::deepreduce::run_deepreduce;
+use cdnl::methods::registry::{
+    self, AutorepSummary, BcdSummary, ChainSpec, DeepReduceSummary, Method, MethodCtx,
+    MethodOutcome, RecordSink, SenetSummary, SnlSummary,
+};
+use cdnl::methods::senet::run_senet;
+use cdnl::methods::snl::run_snl;
+use cdnl::model::ModelState;
+use cdnl::pipeline::Pipeline;
+use cdnl::runstore::RunManifest;
+use cdnl::runtime::{RefBackend, Session};
+use cdnl::util::serde as sd;
+
+const MODEL: &str = "resnet_16x16_c10";
+const MODEL_POLY: &str = "resnet_16x16_c10_poly";
+
+/// Tiny-but-real schedules (shared with the smoke bench's registry
+/// contract via `bench::setup` so the two cannot drift): sub-second runs
+/// that still exercise each method's full control flow. drc=32 gives BCD
+/// a multi-sweep trajectory here.
+fn tiny_exp() -> Experiment {
+    cdnl::bench::setup::tiny_method_experiment(32)
+}
+
+fn small_synth10() -> Dataset {
+    synth::generate(&synth::SynthSpec { train_n: 96, test_n: 16, ..synth::SYNTH10 }).0
+}
+
+fn assert_states_identical(a: &ModelState, b: &ModelState, what: &str) {
+    assert_eq!(a.mask.dense(), b.mask.dense(), "{what}: masks diverged");
+    assert_eq!(a.params.data, b.params.data, "{what}: params diverged");
+    assert_eq!(a.mom.data, b.mom.data, "{what}: momentum diverged");
+}
+
+#[test]
+fn registry_dispatch_is_bit_identical_to_direct_calls() {
+    let be = RefBackend::standard();
+    let sess = Session::new(&be, MODEL).unwrap();
+    let sess_poly = Session::new(&be, MODEL_POLY).unwrap();
+    let ds = small_synth10();
+    let exp = tiny_exp();
+    let sink = RecordSink::default();
+    let total = sess.info().total_relus();
+    let target = total - 64;
+
+    // Each block: the pre-registry direct call and the registry path run on
+    // identical fresh states; states must match bit for bit and the typed
+    // outcome must carry exactly the direct outcome's fields.
+
+    // snl
+    let mut a = sess.init_state(5).unwrap();
+    let direct = run_snl(&sess, &mut a, &ds, target, &exp.snl, 0).unwrap();
+    let mut b = sess.init_state(5).unwrap();
+    let ctx = MethodCtx::new(&sess, &ds, &exp, &sink);
+    let out = registry::find("snl").unwrap().run(&ctx, &mut b, target).unwrap();
+    assert_states_identical(&a, &b, "snl");
+    assert_eq!(out, MethodOutcome::Snl(SnlSummary::from_outcome(&direct)));
+
+    // bcd
+    let mut a = sess.init_state(6).unwrap();
+    let direct = run_bcd(&sess, &mut a, &ds, target, &exp.bcd, 0).unwrap();
+    let mut b = sess.init_state(6).unwrap();
+    let ctx = MethodCtx::new(&sess, &ds, &exp, &sink);
+    let out = registry::find("bcd").unwrap().run(&ctx, &mut b, target).unwrap();
+    assert_states_identical(&a, &b, "bcd");
+    assert_eq!(out, MethodOutcome::Bcd(BcdSummary::from_outcome(&direct)));
+
+    // autorep (poly variant; base config comes from exp.snl either way)
+    let mut a = sess_poly.init_state(7).unwrap();
+    let direct =
+        run_autorep(&sess_poly, &mut a, &ds, target, &exp.snl, &exp.autorep).unwrap();
+    let mut b = sess_poly.init_state(7).unwrap();
+    let ctx = MethodCtx::new(&sess_poly, &ds, &exp, &sink);
+    let out = registry::find("autorep").unwrap().run(&ctx, &mut b, target).unwrap();
+    assert_states_identical(&a, &b, "autorep");
+    assert_eq!(out, MethodOutcome::Autorep(AutorepSummary::from_outcome(&direct)));
+
+    // senet
+    let mut a = sess.init_state(8).unwrap();
+    let direct = run_senet(&sess, &mut a, &ds, target, &exp.senet).unwrap();
+    let mut b = sess.init_state(8).unwrap();
+    let ctx = MethodCtx::new(&sess, &ds, &exp, &sink);
+    let out = registry::find("senet").unwrap().run(&ctx, &mut b, target).unwrap();
+    assert_states_identical(&a, &b, "senet");
+    assert_eq!(out, MethodOutcome::Senet(SenetSummary::from_outcome(&direct)));
+
+    // deepreduce
+    let mut a = sess.init_state(9).unwrap();
+    let direct = run_deepreduce(&sess, &mut a, &ds, target, &exp.deepreduce).unwrap();
+    let mut b = sess.init_state(9).unwrap();
+    let ctx = MethodCtx::new(&sess, &ds, &exp, &sink);
+    let out = registry::find("deepreduce").unwrap().run(&ctx, &mut b, target).unwrap();
+    assert_states_identical(&a, &b, "deepreduce");
+    assert_eq!(
+        out,
+        MethodOutcome::Deepreduce(DeepReduceSummary::from_outcome(&direct, a.budget()))
+    );
+
+    // No method pushed stage records on its own (chains do that).
+    assert!(sink.lock().unwrap().is_empty());
+}
+
+#[test]
+fn chain_snl_bcd_reproduces_pipeline_staging() {
+    let be = RefBackend::standard();
+    let mut exp = tiny_exp();
+    exp.train.steps = 8;
+    exp.train.warmup_steps = 2;
+    exp.out_dir = std::env::temp_dir()
+        .join(format!("cdnl_it_registry_chain_{}", std::process::id()))
+        .display()
+        .to_string();
+    let _ = std::fs::remove_dir_all(&exp.out_dir);
+    let pl = Pipeline::new(&be, exp).unwrap();
+    let total = pl.sess.info().total_relus();
+    let (b_ref, b_target) = (total - 40, total - 72);
+
+    // The hard-coded staging protocol (paper Tables 4/5)...
+    let reference = pl.snl_ref(b_ref).unwrap();
+    let (want, want_out) = pl.bcd_from(&reference, b_target).unwrap();
+    pl.take_stages(); // drop the staging provenance of the reference path
+
+    // ...must be exactly what the user-specifiable chain produces.
+    let spec = ChainSpec::parse("snl+bcd").unwrap();
+    let (got, outs) = pl.run_chain(&spec, None, &[b_ref, b_target]).unwrap();
+    assert_states_identical(&got, &want, "snl+bcd chain vs snl_ref->bcd_from");
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0].method(), "snl");
+    assert_eq!(outs[0].final_budget(), b_ref);
+    assert_eq!(outs[1], MethodOutcome::Bcd(BcdSummary::from_outcome(&want_out)));
+
+    // Per-stage provenance landed in the pipeline sink, in order.
+    let stages = pl.take_stages();
+    let chain_stages: Vec<&str> = stages
+        .iter()
+        .filter(|s| s.stage.starts_with("chain:"))
+        .map(|s| s.stage.as_str())
+        .collect();
+    assert_eq!(chain_stages, vec!["chain:snl", "chain:bcd"]);
+    let bcd_stage = stages.iter().find(|s| s.stage == "chain:bcd").unwrap();
+    assert_eq!(bcd_stage.budget, b_target);
+
+    // A chain manifest carries the typed outcome trail and round-trips.
+    let mut m = RunManifest::new(&spec.name(), &pl.exp, "reference", total, b_target);
+    m.outcomes = Some(outs);
+    let text = sd::to_string_pretty(&m);
+    let back: RunManifest = sd::from_str(&text).unwrap();
+    assert_eq!(back.method, "snl+bcd");
+    assert_eq!(back.outcomes, m.outcomes);
+    assert_eq!(back.experiment().unwrap().fingerprint(), m.config_fingerprint);
+}
+
+#[test]
+fn budget_validation_and_spec_errors_surface() {
+    let be = RefBackend::standard();
+    let sess = Session::new(&be, MODEL).unwrap();
+    let ds = small_synth10();
+    let exp = tiny_exp();
+    let sink = RecordSink::default();
+    let ctx = MethodCtx::new(&sess, &ds, &exp, &sink);
+    let mut st = sess.init_state(1).unwrap();
+    let total = st.budget();
+
+    // A chain with the wrong number of budgets is rejected up front.
+    let spec = ChainSpec::parse("snl+bcd").unwrap();
+    let err = format!("{:#}", spec.run(&ctx, &mut st, &[total - 10]).unwrap_err());
+    assert!(err.contains("2 stages"), "{err}");
+
+    // Stage-level validation propagates (target >= current budget).
+    let single = ChainSpec::parse("snl").unwrap();
+    assert!(single.run(&ctx, &mut st, &[total + 1]).is_err());
+
+    // AutoReP through the registry still refuses non-poly sessions.
+    let err = format!(
+        "{:#}",
+        registry::find("autorep").unwrap().run(&ctx, &mut st, total - 10).unwrap_err()
+    );
+    assert!(err.contains("poly"), "{err}");
+}
