@@ -7,10 +7,12 @@
 //!   - host->device upload costs by tensor size
 //!   - parallel trial-scan throughput across worker counts (opt 4)
 //!   - staged (prefix-reuse) vs full-forward scans at DRC ∈ {1,8,64} (opt 5)
+//!   - batched multi-trial scoring vs full and staged at DRC ∈ {1,8,64}
+//!     (`bcd.trial_batch`, opt 6)
 //!   - end-to-end BCD iteration throughput
 
 use crate::bench::{setup, BenchCtx};
-use crate::coordinator::eval::Evaluator;
+use crate::coordinator::eval::{EvalOpts, Evaluator};
 use crate::coordinator::trials::{scan_trials, BlockSampler};
 use crate::data::synth;
 use crate::metrics::write_csv;
@@ -210,6 +212,76 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
         &setup::results_csv("perf_staged"),
         &["drc", "full_ms", "incremental_ms", "speedup"],
         &staged_rows,
+    )?;
+
+    // --- batched multi-trial scoring: full vs staged vs batched --------------
+    // The bcd.trial_batch knob (DESIGN.md §11). A slab of hypotheses shares
+    // every mask-independent affine per backend call; outcomes must be
+    // bit-identical at every slab width — only wall-clock may differ. High
+    // DRC dirties early layers, so the batched-FULL route (shared first
+    // affine) carries the win where staged reuse cannot apply.
+    let ev_batched = Evaluator::with_opts(
+        &sess,
+        &train_ds,
+        2,
+        EvalOpts { cache_bytes: 64 << 20, trial_batch: 16, verify_staged: false },
+    )?;
+    let mut batched_rows = Vec::new();
+    for &d in &[1usize, 8, 64] {
+        let mut rng = Rng::new(33);
+        let t0 = std::time::Instant::now();
+        let full_out = scan_trials(
+            &ev, &params, &st.mask, &sampler, d, staged_rt, -1e9, base, &mut rng, 1,
+        )?;
+        let full_ms = 1000.0 * t0.elapsed().as_secs_f64();
+        let mut rng = Rng::new(33);
+        let t0 = std::time::Instant::now();
+        let staged_out = scan_trials(
+            &ev_inc, &params, &st.mask, &sampler, d, staged_rt, -1e9, base, &mut rng, 1,
+        )?;
+        let staged_ms = 1000.0 * t0.elapsed().as_secs_f64();
+        let mut rng = Rng::new(33);
+        let t0 = std::time::Instant::now();
+        let batched_out = scan_trials(
+            &ev_batched, &params, &st.mask, &sampler, d, staged_rt, -1e9, base, &mut rng, 1,
+        )?;
+        let batched_ms = 1000.0 * t0.elapsed().as_secs_f64();
+        ensure!(
+            full_out == batched_out && staged_out == batched_out,
+            "batched scan diverged at DRC={d}"
+        );
+        let x_vs_full = full_ms / batched_ms.max(1e-9);
+        let x_vs_staged = staged_ms / batched_ms.max(1e-9);
+        println!(
+            "batched scan DRC={d}: full {full_ms:.1} ms, staged {staged_ms:.1} ms, \
+             batched {batched_ms:.1} ms => {x_vs_full:.2}x vs full, {x_vs_staged:.2}x vs staged"
+        );
+        results.push(summarize(
+            &format!("trial scan x{staged_rt} DRC={d}, batched x16"),
+            vec![batched_ms],
+        ));
+        record(cx, &format!("batched_drc{d}"), results.last().unwrap());
+        cx.rate("staged_batched", &format!("speedup_vs_full_drc{d}"), x_vs_full, "x");
+        cx.rate("staged_batched", &format!("speedup_vs_staged_drc{d}"), x_vs_staged, "x");
+        batched_rows.push(vec![
+            d.to_string(),
+            format!("{full_ms:.2}"),
+            format!("{staged_ms:.2}"),
+            format!("{batched_ms:.2}"),
+            format!("{x_vs_full:.2}"),
+            format!("{x_vs_staged:.2}"),
+        ]);
+    }
+    let (slabs, staged_tr, full_tr, calls, width_sum) = ev_batched.batch_counters();
+    println!(
+        "trial batching: {slabs} slabs ({staged_tr} staged + {full_tr} full hyps), \
+         {calls} multi calls, mean width {:.1}",
+        width_sum as f64 / (calls.max(1)) as f64
+    );
+    write_csv(
+        &setup::results_csv("perf_staged_batched"),
+        &["drc", "full_ms", "staged_ms", "batched_ms", "x_vs_full", "x_vs_staged"],
+        &batched_rows,
     )?;
 
     // --- mask hypothesis cost (pure host) ------------------------------------

@@ -1,6 +1,6 @@
 //! Smoke tier: the CI gate benchmark (seconds, reference backend).
 //!
-//! Three case groups:
+//! Four case groups:
 //!
 //! 1. **Structural manifest contract** — per-model ReLU pool sizes,
 //!    parameter-vector lengths and mask-layer counts, plus the model count
@@ -18,11 +18,21 @@
 //!    landing budget ride as `count` metrics in the committed baseline, so
 //!    a method that stops registering (or stops landing exactly) fails CI
 //!    until deliberately re-blessed.
+//! 4. **Batched-scoring contract** (DESIGN.md §11) — hand-built hypothesis
+//!    slabs driven straight through [`Evaluator::eval_trial_slab`] with a
+//!    zero floor, so the slab/route/call tallies are pure grouping
+//!    arithmetic — exact, float-independent `count` metrics (the early-exit
+//!    bound can never fire at floor 0). A grouping or routing regression
+//!    changes a count and fails the gate until re-blessed; per-delta
+//!    results are also checked against the single-trial path here, with
+//!    `verify_staged` cross-checking every batched score against its own
+//!    full forward.
 
 use crate::bench::BenchCtx;
-use crate::coordinator::eval::Evaluator;
+use crate::coordinator::eval::{EvalOpts, Evaluator};
 use crate::coordinator::trials::{scan_trials, BlockSampler};
 use crate::data::synth;
+use crate::model::MaskDelta;
 use crate::methods::registry::{self, ChainSpec, Method, MethodCtx, RecordSink};
 use crate::runtime::session::Session;
 use crate::runtime::Backend;
@@ -141,5 +151,59 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
     );
     cx.time_ms("methods", "tiny_runs_all", &[1000.0 * t0.elapsed().as_secs_f64()]);
     println!("smoke: {} methods + snl+bcd chain ran through the registry", reg.len());
+
+    // --- 4: batched-scoring contract (DESIGN.md §11) -------------------------
+    // Slab width 4 against hand-built single-index deltas: 2 all-staged
+    // slabs, 1 all-full slab, and 1 mixed call that must split into one
+    // staged + one full slab. At floor 0 the bound never fires, so with 2
+    // eval batches every expected tally is exact grouping arithmetic:
+    //   slabs = 2 + 1 + 2                           = 5
+    //   staged_trials = 4 + 4 + 2                   = 10
+    //   full_trials = 4 + 2                         = 6
+    //   multi_calls = 5 slabs x 2 batches           = 10
+    //   width_sum = 3 width-4 slabs x 8 + 2 x 4     = 32
+    let ev_b = Evaluator::with_opts(
+        &sess,
+        &train_ds,
+        2,
+        EvalOpts { cache_bytes: 16 << 20, trial_batch: 4, verify_staged: true },
+    )?;
+    ensure!(ev_b.slab_width() == 4, "reference backend must accept slab width 4");
+    ensure!(ev_b.num_batches() == 2, "count derivation assumes 2 eval batches");
+    ev_b.begin_iteration(&st.mask)?;
+    let l1 = info.mask_layers[1].offset;
+    let staged_deltas: Vec<MaskDelta> =
+        (0..8).map(|j| MaskDelta::new(vec![l1 + j])).collect();
+    let full_deltas: Vec<MaskDelta> = (0..4).map(|j| MaskDelta::new(vec![j])).collect();
+    let mixed_deltas: Vec<MaskDelta> =
+        [l1 + 20, l1 + 21, 20, 21].map(|i| MaskDelta::new(vec![i])).into();
+    let mut scratch: Vec<f32> = Vec::new();
+    for slab in [
+        &staged_deltas[..4],
+        &staged_deltas[4..],
+        &full_deltas[..],
+        &mixed_deltas[..],
+    ] {
+        let evals = ev_b.eval_trial_slab(&params, &st.mask, slab, 0.0, &mut scratch)?;
+        for (d, got) in slab.iter().zip(&evals) {
+            let single = ev_b.eval_trial_delta(&params, &st.mask, d, 0.0, &mut scratch)?;
+            ensure!(
+                *got == single,
+                "slab result diverged from single-trial path for delta {:?}",
+                d.indices()
+            );
+        }
+    }
+    let (slabs, staged_trials, full_trials, multi_calls, width_sum) = ev_b.batch_counters();
+    cx.count("scan_batched", "slabs", slabs as usize, "slabs");
+    cx.count("scan_batched", "staged_trials", staged_trials as usize, "trials");
+    cx.count("scan_batched", "full_trials", full_trials as usize, "trials");
+    cx.count("scan_batched", "multi_calls", multi_calls as usize, "calls");
+    cx.count("scan_batched", "width_sum", width_sum as usize, "hyps");
+    ev_b.flush_cache_stats();
+    println!(
+        "smoke batched: {slabs} slabs ({staged_trials} staged + {full_trials} full), \
+         {multi_calls} multi calls, width sum {width_sum}"
+    );
     Ok(())
 }

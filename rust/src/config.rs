@@ -121,6 +121,17 @@ pub struct BcdConfig {
     /// forwards. Staged scoring is bit-identical to full scoring, so —
     /// like `workers` — this is purely a throughput knob.
     pub cache_mb: usize,
+    /// Hypothesis-slab width for batched multi-trial scoring (DESIGN.md
+    /// §11): up to this many trial masks are scored per forward, sharing
+    /// the mask-independent affines. Clamped to the backend's
+    /// `multi_width` (1 on PJRT = score singly). Batched scoring is
+    /// bit-identical per hypothesis, so this too is purely a throughput
+    /// knob.
+    pub trial_batch: usize,
+    /// Verify every staged/batched trial score against its own full
+    /// forward, in release builds too (debug builds always check). A CI
+    /// knob: scoring runs roughly double, mismatches abort the run.
+    pub verify_staged: bool,
 }
 
 impl Default for BcdConfig {
@@ -138,6 +149,8 @@ impl Default for BcdConfig {
             seed: 0xC0DE,
             workers: 0,
             cache_mb: 64,
+            trial_batch: 16,
+            verify_staged: false,
         }
     }
 }
@@ -365,6 +378,8 @@ impl Experiment {
             "bcd.seed" => self.bcd.seed = p!(value),
             "bcd.workers" => self.bcd.workers = p!(value),
             "bcd.cache_mb" => self.bcd.cache_mb = p!(value),
+            "bcd.trial_batch" => self.bcd.trial_batch = p!(value),
+            "bcd.verify_staged" => self.bcd.verify_staged = p!(value),
             "snl.lambda0" => self.snl.lambda0 = p!(value),
             "snl.kappa" => self.snl.kappa = p!(value),
             "snl.stall_patience" => self.snl.stall_patience = p!(value),
@@ -439,6 +454,8 @@ impl Experiment {
         put("bcd.seed", self.bcd.seed.to_string());
         put("bcd.workers", self.bcd.workers.to_string());
         put("bcd.cache_mb", self.bcd.cache_mb.to_string());
+        put("bcd.trial_batch", self.bcd.trial_batch.to_string());
+        put("bcd.verify_staged", self.bcd.verify_staged.to_string());
         put("snl.lambda0", self.snl.lambda0.to_string());
         put("snl.kappa", self.snl.kappa.to_string());
         put("snl.stall_patience", self.snl.stall_patience.to_string());
@@ -467,13 +484,20 @@ impl Experiment {
     /// FNV-1a 64 fingerprint of the canonical dump, as 16 hex chars. Two
     /// experiments with equal fingerprints produce identical results: keys
     /// that cannot change numerics (paths, `bcd.workers` — the scan is
-    /// worker-count invariant — and `bcd.cache_mb` — staged scoring is
-    /// bit-identical to full scoring) are excluded, so moving an output
-    /// directory, rescaling the thread pool, or resizing the prefix cache
-    /// does not orphan a resumable run.
+    /// worker-count invariant — `bcd.cache_mb` and `bcd.trial_batch` —
+    /// staged and batched scoring are bit-identical to full scoring — and
+    /// `bcd.verify_staged`, a pure cross-check) are excluded, so moving an
+    /// output directory, rescaling the thread pool, or resizing the prefix
+    /// cache or trial slab does not orphan a resumable run.
     pub fn fingerprint(&self) -> String {
-        const NON_SEMANTIC: [&str; 4] =
-            ["out_dir", "artifacts_dir", "bcd.workers", "bcd.cache_mb"];
+        const NON_SEMANTIC: [&str; 6] = [
+            "out_dir",
+            "artifacts_dir",
+            "bcd.workers",
+            "bcd.cache_mb",
+            "bcd.trial_batch",
+            "bcd.verify_staged",
+        ];
         let mut dump = self.dump();
         dump.retain(|k, _| !NON_SEMANTIC.contains(&k.as_str()));
         fingerprint_pairs(&dump)
@@ -601,10 +625,12 @@ mod tests {
         e.bcd.workers = 9;
         e.out_dir = "elsewhere".into();
         e.bcd.cache_mb = 0;
+        e.bcd.trial_batch = 1;
+        e.bcd.verify_staged = true;
         assert_eq!(
             e.fingerprint(),
             fp,
-            "workers/out_dir/cache_mb must not shift identity"
+            "workers/out_dir/cache_mb/trial_batch/verify_staged must not shift identity"
         );
         e.bcd.rt = 99;
         assert_ne!(e.fingerprint(), fp, "rt change must shift identity");
@@ -618,6 +644,21 @@ mod tests {
         assert_eq!(e.bcd.cache_mb, 0);
         assert!(e.apply("bcd.cache_mb", "lots").is_err());
         assert_eq!(e.dump().get("bcd.cache_mb").unwrap(), "0");
+    }
+
+    #[test]
+    fn trial_batch_and_verify_knobs_apply() {
+        let mut e = Experiment::default();
+        assert_eq!(e.bcd.trial_batch, 16, "batched scoring on by default");
+        assert!(!e.bcd.verify_staged, "verification is opt-in");
+        e.apply("bcd.trial_batch", "32").unwrap();
+        assert_eq!(e.bcd.trial_batch, 32);
+        e.apply("bcd.verify_staged", "true").unwrap();
+        assert!(e.bcd.verify_staged);
+        assert!(e.apply("bcd.trial_batch", "wide").is_err());
+        assert!(e.apply("bcd.verify_staged", "maybe").is_err());
+        assert_eq!(e.dump().get("bcd.trial_batch").unwrap(), "32");
+        assert_eq!(e.dump().get("bcd.verify_staged").unwrap(), "true");
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! stopped (DESIGN.md §6).
 
 use crate::config::BcdConfig;
-use crate::coordinator::eval::Evaluator;
+use crate::coordinator::eval::{EvalOpts, Evaluator};
 use crate::coordinator::finetune::{finetune, FinetuneStats};
 use crate::coordinator::trials::{scan_trials, BlockSampler, ScanOutcome};
 use crate::data::Dataset;
@@ -186,9 +186,21 @@ pub fn run_bcd_resumable(
 
     let wall0 = std::time::Instant::now();
     // The hot-path evaluator carries the prefix-activation cache
-    // (`bcd.cache_mb`, 0 = full forwards only); staged and full scoring are
-    // bit-identical, so the knob never moves results (DESIGN.md §8).
-    let ev = Evaluator::with_cache(sess, train_ds, cfg.proxy_batches, cfg.cache_mb)?;
+    // (`bcd.cache_mb`, 0 = full forwards only), the hypothesis-slab width
+    // (`bcd.trial_batch`) and the release-mode verification knob
+    // (`bcd.verify_staged`); staged, batched and full scoring are all
+    // bit-identical, so none of these knobs ever move results
+    // (DESIGN.md §8, §11).
+    let ev = Evaluator::with_opts(
+        sess,
+        train_ds,
+        cfg.proxy_batches,
+        EvalOpts {
+            cache_bytes: cfg.cache_mb.saturating_mul(1 << 20),
+            trial_batch: cfg.trial_batch,
+            verify_staged: cfg.verify_staged,
+        },
+    )?;
     let sampler = BlockSampler::new(cfg.granularity, sess.info());
     let to_remove_total = b_ref - b_target;
     let mut out = BcdOutcome {

@@ -15,9 +15,18 @@
 //!    boundary activation ([`Evaluator::eval_trial_delta`]) instead of
 //!    re-running the whole network. The cache is per iteration, bounded by
 //!    `bcd.cache_mb` with LRU eviction, and the incremental per-batch
-//!    correct counts are **bit-identical** to full forwards (assert-checked
-//!    per batch in debug builds), so the replay-merge determinism contract
-//!    of [`crate::coordinator::trials`] is untouched.
+//!    correct counts are **bit-identical** to full forwards (checked per
+//!    batch in debug builds, and in release under `bcd.verify_staged`), so
+//!    the replay-merge determinism contract of
+//!    [`crate::coordinator::trials`] is untouched.
+//! 4. **Batched multi-trial scoring** (DESIGN.md §11) — a slab of up to
+//!    `bcd.trial_batch` hypotheses is scored per backend call
+//!    ([`Evaluator::eval_trial_slab`]): hypotheses are grouped by route
+//!    (same resume boundary, or full forwards), the group's masks go up as
+//!    ONE slab upload, and the backend shares every mask-independent
+//!    affine across the hypothesis axis. Per-hypothesis results and the
+//!    early-exit bound arithmetic are bit-identical to the single-trial
+//!    path, so `ScanOutcome`s do not depend on the slab width.
 //!
 //! **Partial-batch accounting.** Backends run a fixed batch shape, so the
 //! final batch of a dataset that does not divide evenly is wrap-padded.
@@ -30,11 +39,11 @@
 
 use crate::data::Dataset;
 use crate::model::{Mask, MaskDelta};
-use crate::runtime::backend::DeviceBuf;
+use crate::runtime::backend::{DeviceBuf, MaskSlab};
 use crate::runtime::session::Session;
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
 /// One cached evaluation batch: device buffers plus the host-side labels
@@ -130,6 +139,52 @@ impl PrefixCache {
     }
 }
 
+/// Batched-scoring event tallies (§Perf opt 4), mirrored into the backend
+/// stats as `trial_batch:*` keys by [`Evaluator::flush_cache_stats`] —
+/// same once-per-scan flushing discipline as [`CacheCounts`].
+#[derive(Clone, Copy, Default)]
+struct BatchCounts {
+    /// Slab groups scored (each = one slab upload, satellite of ISSUE 6).
+    slabs: u64,
+    /// Hypotheses scored through batched *staged* (resume) calls.
+    staged_trials: u64,
+    /// Hypotheses scored through batched *full-forward* calls.
+    full_trials: u64,
+    /// Batched backend calls issued (`*_multi` entries).
+    multi_calls: u64,
+    /// Sum over batched calls of the live-hypothesis width — so
+    /// `width_sum / multi_calls` is the realized mean batch width.
+    width_sum: u64,
+}
+
+#[derive(Default)]
+struct BatchTallies {
+    counts: BatchCounts,
+    /// Counter values already mirrored into the backend stats.
+    flushed: BatchCounts,
+}
+
+/// Throughput/verification knobs of an [`Evaluator`] — all NON-semantic:
+/// none of them may change any score bit (`bcd.cache_mb`,
+/// `bcd.trial_batch`, `bcd.verify_staged`).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOpts {
+    /// Prefix-activation cache budget in bytes (0 disables staging).
+    pub cache_bytes: usize,
+    /// Hypothesis-slab width cap for batched scoring; clamped to the
+    /// backend's `multi_width`. 1 scores every trial singly.
+    pub trial_batch: usize,
+    /// Check every staged/batched score against its own full forward in
+    /// release builds too (debug builds always check).
+    pub verify_staged: bool,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts { cache_bytes: 64 << 20, trial_batch: 1, verify_staged: false }
+    }
+}
+
 /// Outcome of scoring one mask hypothesis against the batch set.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TrialEval {
@@ -150,6 +205,13 @@ pub struct Evaluator<'e, 's> {
     /// Prefix-activation cache for staged trial scoring (None = disabled;
     /// every trial then runs full forwards).
     prefix: Option<PrefixCache>,
+    /// Requested hypothesis-slab width (`bcd.trial_batch`); the effective
+    /// width is [`Self::slab_width`].
+    trial_batch: usize,
+    /// Release-mode staged/batched-vs-full verification (`bcd.verify_staged`).
+    verify_staged: bool,
+    /// Batched-scoring tallies (flushed by [`Self::flush_cache_stats`]).
+    tallies: Mutex<BatchTallies>,
 }
 
 impl<'e, 's> Evaluator<'e, 's> {
@@ -186,6 +248,18 @@ impl<'e, 's> Evaluator<'e, 's> {
         max_batches: usize,
         cache_bytes: usize,
     ) -> Result<Evaluator<'e, 's>> {
+        Self::with_opts(sess, ds, max_batches, EvalOpts { cache_bytes, ..EvalOpts::default() })
+    }
+
+    /// Full-knob constructor: cache budget, hypothesis-slab width and
+    /// staged/batched verification in one [`EvalOpts`] (how
+    /// [`crate::coordinator::bcd::run_bcd`] wires `bcd.*` through).
+    pub fn with_opts(
+        sess: &'s Session<'e>,
+        ds: &Dataset,
+        max_batches: usize,
+        opts: EvalOpts,
+    ) -> Result<Evaluator<'e, 's>> {
         let batch = sess.batch;
         let avail = ds.len().div_ceil(batch);
         let n = max_batches.min(avail).max(1);
@@ -201,8 +275,17 @@ impl<'e, 's> Evaluator<'e, 's> {
             examples += valid;
             batches.push(EvalBatch { x: xb, y: yb, labels, valid });
         }
-        let prefix = PrefixCache::build(sess, batch, cache_bytes);
-        Ok(Evaluator { sess, batches, batch, examples, prefix })
+        let prefix = PrefixCache::build(sess, batch, opts.cache_bytes);
+        Ok(Evaluator {
+            sess,
+            batches,
+            batch,
+            examples,
+            prefix,
+            trial_batch: opts.trial_batch,
+            verify_staged: opts.verify_staged,
+            tallies: Mutex::new(BatchTallies::default()),
+        })
     }
 
     /// Number of *real* examples this evaluator scores (padding excluded).
@@ -334,28 +417,67 @@ impl<'e, 's> Evaluator<'e, 's> {
         }
     }
 
-    /// Mirror prefix-cache counters accumulated since the last flush into
-    /// the backend stats table (`prefix_cache:*` keys). Called once per
+    /// The effective hypothesis-slab width: the `bcd.trial_batch` request
+    /// clamped to what the backend accepts (1 on PJRT).
+    pub fn slab_width(&self) -> usize {
+        self.trial_batch.min(self.sess.multi_width()).max(1)
+    }
+
+    /// Cumulative batched-scoring counters
+    /// `(slabs, staged_trials, full_trials, multi_calls, width_sum)`.
+    pub fn batch_counters(&self) -> (u64, u64, u64, u64, u64) {
+        let c = self.tallies.lock().unwrap().counts;
+        (c.slabs, c.staged_trials, c.full_trials, c.multi_calls, c.width_sum)
+    }
+
+    /// Mirror prefix-cache and batched-scoring counters accumulated since
+    /// the last flush into the backend stats table (`prefix_cache:*` and
+    /// `trial_batch:*` keys — shown by `cdnl runs show`). Called once per
     /// trial scan — the per-batch hot path only ever touches the cache's
-    /// own mutex.
+    /// own mutex and the tallies mutex.
     pub fn flush_cache_stats(&self) {
-        let Some(pc) = &self.prefix else { return };
-        let d = {
-            let mut inner = pc.inner.lock().unwrap();
-            let d = CacheCounts {
-                hits: inner.counts.hits - inner.flushed.hits,
-                misses: inner.counts.misses - inner.flushed.misses,
-                evictions: inner.counts.evictions - inner.flushed.evictions,
-                staged_trials: inner.counts.staged_trials - inner.flushed.staged_trials,
+        if let Some(pc) = &self.prefix {
+            let d = {
+                let mut inner = pc.inner.lock().unwrap();
+                let d = CacheCounts {
+                    hits: inner.counts.hits - inner.flushed.hits,
+                    misses: inner.counts.misses - inner.flushed.misses,
+                    evictions: inner.counts.evictions - inner.flushed.evictions,
+                    staged_trials: inner.counts.staged_trials - inner.flushed.staged_trials,
+                };
+                inner.flushed = inner.counts;
+                d
             };
-            inner.flushed = inner.counts;
+            for (key, n) in [
+                ("prefix_cache:hit", d.hits),
+                ("prefix_cache:miss", d.misses),
+                ("prefix_cache:evict", d.evictions),
+                ("prefix_cache:staged_trials", d.staged_trials),
+            ] {
+                if n > 0 {
+                    self.sess.backend.bump_stat(key, n);
+                }
+            }
+        }
+        let d = {
+            let mut t = self.tallies.lock().unwrap();
+            let d = BatchCounts {
+                slabs: t.counts.slabs - t.flushed.slabs,
+                staged_trials: t.counts.staged_trials - t.flushed.staged_trials,
+                full_trials: t.counts.full_trials - t.flushed.full_trials,
+                multi_calls: t.counts.multi_calls - t.flushed.multi_calls,
+                width_sum: t.counts.width_sum - t.flushed.width_sum,
+            };
+            t.flushed = t.counts;
             d
         };
         for (key, n) in [
-            ("prefix_cache:hit", d.hits),
-            ("prefix_cache:miss", d.misses),
-            ("prefix_cache:evict", d.evictions),
-            ("prefix_cache:staged_trials", d.staged_trials),
+            ("trial_batch:slabs", d.slabs),
+            ("trial_batch:trials_batched", d.staged_trials + d.full_trials),
+            ("trial_batch:staged_trials", d.staged_trials),
+            ("trial_batch:full_trials", d.full_trials),
+            ("trial_batch:multi_calls", d.multi_calls),
+            ("trial_batch:batch_width_sum", d.width_sum),
         ] {
             if n > 0 {
                 self.sess.backend.bump_stat(key, n);
@@ -369,7 +491,8 @@ impl<'e, 's> Evaluator<'e, 's> {
     /// mask layer 0 clean, each batch resumes from a cached boundary
     /// activation; otherwise this falls back to [`Self::eval_trial`]. The
     /// outcome is **bit-identical** either way — per-batch correct counts
-    /// are assert-checked against full forwards in debug builds.
+    /// are checked against full forwards in debug builds, and in release
+    /// builds under `bcd.verify_staged` (a mismatch is a hard error).
     ///
     /// `base` must be the mask handed to [`Self::begin_iteration`];
     /// `scratch` is the caller's dense-hypothesis buffer (no allocation on
@@ -384,19 +507,7 @@ impl<'e, 's> Evaluator<'e, 's> {
     ) -> Result<TrialEval> {
         base.hypothesis_into(delta.indices(), scratch);
         let dirty = delta.first_dirty_layer(self.sess.info());
-        // Resume from the deepest boundary before the first dirty layer
-        // whose entry actually FITS the cache budget (boundary b = output of
-        // mask layer b) — an uncacheable boundary would recompute its prefix
-        // per trial, costing more than a full forward. A layer-0 delta, a
-        // disarmed cache, or no affordable boundary means full forwards.
-        let staged = match &self.prefix {
-            Some(pc) if dirty >= 1 && pc.has_base() => (0..dirty.min(pc.segments))
-                .rev()
-                .find(|&b| pc.entry_bytes[b] <= pc.budget_bytes)
-                .map(|b| (pc, b)),
-            _ => None,
-        };
-        let Some((pc, boundary)) = staged else {
+        let Some((pc, boundary)) = self.staged_boundary(dirty) else {
             return self.eval_trial(params, scratch, min_acc);
         };
         let info = self.sess.info();
@@ -404,8 +515,11 @@ impl<'e, 's> Evaluator<'e, 's> {
         let suffix_buf = self
             .sess
             .upload_f32(&scratch[suffix_off..], &[scratch.len() - suffix_off])?;
-        #[cfg(debug_assertions)]
-        let full_mask_buf = self.upload_mask(scratch)?;
+        // The incremental-vs-full determinism contract (DESIGN.md §8):
+        // checked on every staged batch in debug builds, and in release
+        // builds under `bcd.verify_staged`.
+        let verify = self.verify_staged || cfg!(debug_assertions);
+        let full_mask_buf = if verify { Some(self.upload_mask(scratch)?) } else { None };
         pc.inner.lock().unwrap().counts.staged_trials += 1;
 
         let total = self.examples as f64;
@@ -416,15 +530,14 @@ impl<'e, 's> Evaluator<'e, 's> {
         for (bi, b) in self.batches.iter().enumerate() {
             let acts = self.prefix_acts(pc, bi, boundary, params, &b.x)?;
             let c = self.score_batch_from(b, boundary, &acts, params, &suffix_buf)?;
-            #[cfg(debug_assertions)]
-            {
-                // The incremental-vs-full determinism contract, checked on
-                // every staged batch in debug builds (DESIGN.md §8).
-                let (_, full_c) = self.score_batch(b, params, &full_mask_buf)?;
-                assert_eq!(
-                    c, full_c,
-                    "staged scoring diverged from full forward (batch {bi})"
-                );
+            if let Some(fb) = &full_mask_buf {
+                let (_, full_c) = self.score_batch(b, params, fb)?;
+                if c != full_c {
+                    bail!(
+                        "staged scoring diverged from full forward \
+                         (batch {bi}: {c} vs {full_c})"
+                    );
+                }
             }
             correct += c;
             remaining -= b.valid as f64;
@@ -434,6 +547,240 @@ impl<'e, 's> Evaluator<'e, 's> {
             }
         }
         Ok(TrialEval::Scored { acc: 100.0 * correct / total, batch_corrects })
+    }
+
+    /// The staged route for a delta whose first dirty layer is `dirty`:
+    /// resume from the deepest boundary before the first dirty layer whose
+    /// entry actually FITS the cache budget (boundary b = output of mask
+    /// layer b) — an uncacheable boundary would recompute its prefix per
+    /// trial, costing more than a full forward. A layer-0 delta, a disarmed
+    /// cache, or no affordable boundary means full forwards (`None`).
+    fn staged_boundary(&self, dirty: usize) -> Option<(&PrefixCache, usize)> {
+        match &self.prefix {
+            Some(pc) if dirty >= 1 && pc.has_base() => (0..dirty.min(pc.segments))
+                .rev()
+                .find(|&b| pc.entry_bytes[b] <= pc.budget_bytes)
+                .map(|b| (pc, b)),
+            _ => None,
+        }
+    }
+
+    /// Score a slab of hypotheses against the iteration's base mask,
+    /// batching up to [`Self::slab_width`] of them per backend call
+    /// (§Perf opt 4, DESIGN.md §11). Hypotheses are grouped by route —
+    /// identical resume boundary, or full forwards — because only
+    /// same-route hypotheses share their mask-independent affines; each
+    /// group's masks are uploaded as ONE slab (the per-trial
+    /// [`Self::upload_mask`] of the single path is hoisted to once per
+    /// slab). Results are **bit-identical** to calling
+    /// [`Self::eval_trial_delta`] per delta, including every `Bounded`
+    /// decision: the bound arithmetic consumes the same per-batch floats in
+    /// the same order.
+    pub fn eval_trial_slab(
+        &self,
+        params: &DeviceBuf,
+        base: &Mask,
+        deltas: &[MaskDelta],
+        min_acc: f64,
+        scratch: &mut Vec<f32>,
+    ) -> Result<Vec<TrialEval>> {
+        let width = self.slab_width();
+        if width <= 1 || deltas.len() <= 1 {
+            return deltas
+                .iter()
+                .map(|d| self.eval_trial_delta(params, base, d, min_acc, scratch))
+                .collect();
+        }
+        let info = self.sess.info();
+        // Group by resume boundary (None = full forward). BTreeMap so the
+        // grouping order is deterministic; results land by original index,
+        // so ordering only affects backend-call scheduling anyway.
+        let mut groups: BTreeMap<Option<usize>, Vec<usize>> = BTreeMap::new();
+        for (i, d) in deltas.iter().enumerate() {
+            let b = self.staged_boundary(d.first_dirty_layer(info)).map(|(_, b)| b);
+            groups.entry(b).or_default().push(i);
+        }
+        let mut results: Vec<Option<TrialEval>> = vec![None; deltas.len()];
+        for (boundary, idxs) in groups {
+            for chunk in idxs.chunks(width) {
+                if chunk.len() == 1 {
+                    // A lone hypothesis gains nothing from the slab path.
+                    results[chunk[0]] = Some(self.eval_trial_delta(
+                        params,
+                        base,
+                        &deltas[chunk[0]],
+                        min_acc,
+                        scratch,
+                    )?);
+                    continue;
+                }
+                let slab: Vec<&MaskDelta> = chunk.iter().map(|&i| &deltas[i]).collect();
+                let evals =
+                    self.eval_slab_group(params, base, &slab, boundary, min_acc, scratch)?;
+                for (&i, ev) in chunk.iter().zip(evals) {
+                    results[i] = Some(ev);
+                }
+            }
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every delta scored"))
+            .collect())
+    }
+
+    /// Score one same-route slab group (all `deltas` resume from
+    /// `boundary`, or all run full forwards). The early-exit bound runs
+    /// per hypothesis with the exact float sequence of the single-trial
+    /// path: `rem_after` is computed once per batch from the same
+    /// subtraction [`Self::eval_trial`] performs, and each live hypothesis
+    /// compares its own running `correct` against it.
+    fn eval_slab_group(
+        &self,
+        params: &DeviceBuf,
+        base: &Mask,
+        deltas: &[&MaskDelta],
+        boundary: Option<usize>,
+        min_acc: f64,
+        scratch: &mut Vec<f32>,
+    ) -> Result<Vec<TrialEval>> {
+        let n = deltas.len();
+        let info = self.sess.info();
+        let row_off = match boundary {
+            Some(b) => info.mask_layers[b + 1].offset,
+            None => 0,
+        };
+        let verify = self.verify_staged || cfg!(debug_assertions);
+        // ONE slab upload per group — the hoisted per-trial upload_mask.
+        let mut rows: Vec<f32> = Vec::new();
+        let mut verify_bufs: Vec<DeviceBuf> = Vec::new();
+        let mut width = 0usize;
+        for d in deltas {
+            base.hypothesis_into(d.indices(), scratch);
+            width = scratch.len() - row_off;
+            rows.extend_from_slice(&scratch[row_off..]);
+            if verify {
+                verify_bufs.push(self.upload_mask(scratch)?);
+            }
+        }
+        let slab = MaskSlab {
+            buf: self.sess.upload_f32(&rows, &[n, width])?,
+            n,
+            width,
+        };
+        let pc_boundary = boundary.map(|b| {
+            let pc = self.prefix.as_ref().expect("staged group without cache");
+            (pc, b)
+        });
+        if let Some((pc, _)) = pc_boundary {
+            pc.inner.lock().unwrap().counts.staged_trials += n as u64;
+        }
+        {
+            let mut t = self.tallies.lock().unwrap();
+            t.counts.slabs += 1;
+            match boundary {
+                Some(_) => t.counts.staged_trials += n as u64,
+                None => t.counts.full_trials += n as u64,
+            }
+        }
+
+        let total = self.examples as f64;
+        let need_correct = min_acc / 100.0 * total;
+        let mut live = vec![true; n];
+        let mut corrects = vec![0.0f64; n];
+        let mut batch_corrects: Vec<Vec<f64>> =
+            (0..n).map(|_| Vec::with_capacity(self.batches.len())).collect();
+        let mut results: Vec<Option<TrialEval>> = vec![None; n];
+        let mut remaining = total;
+        for (bi, b) in self.batches.iter().enumerate() {
+            let cs = self.score_batch_multi(b, bi, params, &slab, pc_boundary, &live)?;
+            // Same float op as the single path's `remaining -= valid`,
+            // hoisted out of the hypothesis loop (it is mask-independent).
+            let rem_after = remaining - b.valid as f64;
+            for h in 0..n {
+                if !live[h] {
+                    continue;
+                }
+                let c = cs[h].ok_or_else(|| anyhow!("live hypothesis {h} not scored"))?;
+                if verify {
+                    let (_, full_c) = self.score_batch(b, params, &verify_bufs[h])?;
+                    if c != full_c {
+                        bail!(
+                            "batched scoring diverged from full forward \
+                             (batch {bi}, hypothesis {h}: {c} vs {full_c})"
+                        );
+                    }
+                }
+                corrects[h] += c;
+                batch_corrects[h].push(c);
+                if corrects[h] + rem_after < need_correct {
+                    live[h] = false;
+                    results[h] = Some(TrialEval::Bounded);
+                }
+            }
+            remaining = rem_after;
+            if live.iter().all(|&l| !l) {
+                break; // every hypothesis bounded: skip the remaining batches
+            }
+        }
+        Ok((0..n)
+            .map(|h| {
+                results[h].take().unwrap_or_else(|| TrialEval::Scored {
+                    acc: 100.0 * corrects[h] / total,
+                    batch_corrects: std::mem::take(&mut batch_corrects[h]),
+                })
+            })
+            .collect())
+    }
+
+    /// Per-hypothesis valid-prefix correct counts of one cached batch for a
+    /// mask slab — the batched twin of [`Self::score_batch`] /
+    /// [`Self::score_batch_from`]. Dead (`!live`) hypotheses are skipped by
+    /// the backend and come back `None`.
+    fn score_batch_multi(
+        &self,
+        b: &EvalBatch,
+        bi: usize,
+        params: &DeviceBuf,
+        slab: &MaskSlab,
+        boundary: Option<(&PrefixCache, usize)>,
+        live: &[bool],
+    ) -> Result<Vec<Option<f64>>> {
+        {
+            let mut t = self.tallies.lock().unwrap();
+            t.counts.multi_calls += 1;
+            t.counts.width_sum += live.iter().filter(|&&l| l).count() as u64;
+        }
+        match boundary {
+            Some((pc, seg)) => {
+                let acts = self.prefix_acts(pc, bi, seg, params, &b.x)?;
+                if b.valid == self.batch {
+                    let outs = self.sess.eval_from_multi_b(seg, &acts, params, slab, &b.y, live)?;
+                    Ok(outs.into_iter().map(|o| o.map(|s| s.correct as f64)).collect())
+                } else {
+                    let logits = self.sess.forward_from_multi_b(seg, &acts, params, slab, live)?;
+                    logits
+                        .into_iter()
+                        .map(|o| {
+                            o.map(|l| count_valid_correct(&l, &b.labels, b.valid)).transpose()
+                        })
+                        .collect()
+                }
+            }
+            None => {
+                if b.valid == self.batch {
+                    let outs = self.sess.eval_batch_multi_b(params, slab, &b.x, &b.y, live)?;
+                    Ok(outs.into_iter().map(|o| o.map(|s| s.correct as f64)).collect())
+                } else {
+                    let logits = self.sess.forward_multi_b(params, slab, &b.x, live)?;
+                    logits
+                        .into_iter()
+                        .map(|o| {
+                            o.map(|l| count_valid_correct(&l, &b.labels, b.valid)).transpose()
+                        })
+                        .collect()
+                }
+            }
+        }
     }
 
     /// Fetch (or compute and cache) the base-mask activations of batch `bi`

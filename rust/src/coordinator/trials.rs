@@ -15,12 +15,16 @@
 //!
 //! 1. All RT draws are made up front on the caller's thread, each from an
 //!    RNG forked by trial index, and deduplicated in draw order.
-//! 2. Workers claim trial indices strictly in order from shared state and
-//!    score them with the early-exit bound, using as floor the best
-//!    accuracy among *completed lower-index* trials (a conservative subset
-//!    of the floor a sequential scan would have, so anything the runtime
-//!    cuts, a sequential scan would cut too). Once some trial passes the
-//!    ADT accept test, no indices beyond it are claimed.
+//! 2. Workers claim contiguous *slabs* of up to `bcd.trial_batch` trial
+//!    indices strictly in order from shared state and score them with the
+//!    early-exit bound, using as floor the best accuracy among *completed
+//!    below-slab-start* trials (a conservative subset of the floor a
+//!    sequential scan would have for every slab member, so anything the
+//!    runtime cuts, a sequential scan would cut too). Slab members are
+//!    batched into shared backend calls by [`Evaluator::eval_trial_slab`]
+//!    (DESIGN.md §11), bit-identically to scoring them one by one. Once
+//!    some trial passes the ADT accept test, no indices beyond it are
+//!    claimed.
 //! 3. A sequential **replay merge** over the per-trial results re-applies
 //!    Algorithm 2's exact decision sequence (incumbent floor, bound,
 //!    early-accept, argmin with ties to the lowest index) using the
@@ -124,11 +128,16 @@ struct ScanState {
 }
 
 impl ScanState {
-    /// Claim the next trial index plus the bound floor valid for it: the
-    /// best accuracy among completed trials with a *lower* index. Restricting
-    /// the floor to lower indices is what makes runtime cuts a subset of
-    /// sequential cuts (see the module docs' determinism argument).
-    fn claim(&mut self) -> Option<(usize, f64)> {
+    /// Claim the next contiguous slab of up to `max` trial indices, plus the
+    /// bound floor valid for it: the best accuracy among completed trials
+    /// with an index *below the slab start*. Restricting the floor to
+    /// lower-than-start indices keeps runtime cuts a subset of sequential
+    /// cuts for EVERY member of the slab (the sequential floor only grows
+    /// with the index), so the replay merge's determinism argument is
+    /// unchanged at any slab width — `claim_slab(1)` is exactly the old
+    /// single-index claim. Claims never extend past the accept index.
+    fn claim_slab(&mut self, max: usize) -> Option<(usize, usize, f64)> {
+        debug_assert!(max >= 1);
         if self.next >= self.results.len() {
             return None;
         }
@@ -137,15 +146,19 @@ impl ScanState {
                 return None;
             }
         }
-        let i = self.next;
-        self.next += 1;
+        let start = self.next;
+        let mut end = (start + max).min(self.results.len());
+        if let Some(stop) = self.stop_at {
+            end = end.min(stop + 1);
+        }
+        self.next = end;
         let mut floor = 0.0f64;
-        for r in &self.results[..i] {
+        for r in &self.results[..start] {
             if let Some(TrialEval::Scored { acc, .. }) = r {
                 floor = floor.max(*acc);
             }
         }
-        Some((i, floor))
+        Some((start, end - start, floor))
     }
 }
 
@@ -191,9 +204,14 @@ pub fn scan_trials(
     // Arm the per-iteration prefix-activation cache (no-op when disabled).
     ev.begin_iteration(mask)?;
 
-    // Phase 2: score across the worker pool.
+    // Phase 2: score across the worker pool. Each worker claims contiguous
+    // slabs of up to `slab_max` hypotheses so the evaluator can batch them
+    // into shared backend calls (DESIGN.md §11); slab width 1 degenerates to
+    // the old one-index-at-a-time loop, and the outcome is bit-identical at
+    // any width (see `ScanState::claim_slab` and the replay merge below).
     let n = hyps.len();
     let workers = workers.max(1).min(n);
+    let slab_max = ev.slab_width();
     let state = Mutex::new(ScanState { next: 0, stop_at: None, results: vec![None; n] });
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::with_capacity(workers);
@@ -201,18 +219,27 @@ pub fn scan_trials(
             handles.push(scope.spawn(|| -> Result<()> {
                 let mut scratch: Vec<f32> = Vec::with_capacity(mask.size());
                 loop {
-                    let Some((i, floor)) = state.lock().unwrap().claim() else {
+                    let Some((start, len, floor)) = state.lock().unwrap().claim_slab(slab_max)
+                    else {
                         return Ok(());
                     };
-                    let result =
-                        ev.eval_trial_delta(params, mask, &hyps[i], floor, &mut scratch)?;
+                    let evals = ev.eval_trial_slab(
+                        params,
+                        mask,
+                        &hyps[start..start + len],
+                        floor,
+                        &mut scratch,
+                    )?;
                     let mut st = state.lock().unwrap();
-                    if let TrialEval::Scored { acc, .. } = &result {
-                        if base_acc - acc < adt {
-                            st.stop_at = Some(st.stop_at.map_or(i, |s| s.min(i)));
+                    for (off, result) in evals.into_iter().enumerate() {
+                        let i = start + off;
+                        if let TrialEval::Scored { acc, .. } = &result {
+                            if base_acc - acc < adt {
+                                st.stop_at = Some(st.stop_at.map_or(i, |s| s.min(i)));
+                            }
                         }
+                        st.results[i] = Some(result);
                     }
-                    st.results[i] = Some(result);
                 }
             }));
         }
@@ -347,13 +374,30 @@ mod tests {
 
     #[test]
     fn scan_state_claims_in_order_with_lower_index_floor() {
+        // claim_slab(1) is exactly the old one-index claim.
         let mut st = ScanState { next: 0, stop_at: None, results: vec![None; 4] };
-        assert_eq!(st.claim(), Some((0, 0.0)));
+        assert_eq!(st.claim_slab(1), Some((0, 1, 0.0)));
         st.results[0] = Some(TrialEval::Scored { acc: 60.0, batch_corrects: vec![] });
-        assert_eq!(st.claim(), Some((1, 60.0)));
+        assert_eq!(st.claim_slab(1), Some((1, 1, 60.0)));
         st.results[1] = Some(TrialEval::Bounded); // bounded trials add no floor
-        assert_eq!(st.claim(), Some((2, 60.0)));
+        assert_eq!(st.claim_slab(1), Some((2, 1, 60.0)));
         st.stop_at = Some(2);
-        assert_eq!(st.claim(), None, "no claims beyond the accept index");
+        assert_eq!(st.claim_slab(1), None, "no claims beyond the accept index");
+    }
+
+    #[test]
+    fn scan_state_slab_claims_clamp_to_len_and_stop() {
+        let mut st = ScanState { next: 0, stop_at: None, results: vec![None; 7] };
+        // First slab: full width, floor 0 (nothing completed below it).
+        assert_eq!(st.claim_slab(3), Some((0, 3, 0.0)));
+        st.results[0] = Some(TrialEval::Scored { acc: 55.0, batch_corrects: vec![] });
+        st.results[2] = Some(TrialEval::Scored { acc: 70.0, batch_corrects: vec![] });
+        // Second slab: floor is the best COMPLETED accuracy below index 3,
+        // even though index 1 is still outstanding.
+        assert_eq!(st.claim_slab(3), Some((3, 3, 70.0)));
+        // An accept at index 6 clamps the final slab to end at stop + 1.
+        st.stop_at = Some(6);
+        assert_eq!(st.claim_slab(3), Some((6, 1, 70.0)));
+        assert_eq!(st.claim_slab(3), None, "nothing claimable past the accept");
     }
 }

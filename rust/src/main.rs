@@ -351,7 +351,8 @@ fn cmd_run_single(
 
 /// Shared terminal fields of every sealed run manifest: status, typed
 /// outcomes, result, and the backend stats snapshot (incl. prefix_cache
-/// counters) so `runs show` can replay them after this process is gone.
+/// and trial_batch counters) so `runs show` can replay them after this
+/// process is gone.
 fn seal_complete(
     m: &mut cdnl::runstore::RunManifest,
     outcomes: Vec<MethodOutcome>,
@@ -950,7 +951,10 @@ fn runs_show(store: &RunStore, id: &str) -> Result<()> {
                     )
                 })
                 .collect();
-            println!("\nBackend stats at seal time (incl. prefix-cache counters):");
+            println!(
+                "\nBackend stats at seal time (incl. prefix-cache and \
+                 trial-batch counters):"
+            );
             print!("{}", cdnl::runtime::backend::format_stats_table(&rows));
         }
     }

@@ -58,6 +58,19 @@ impl DeviceBuf {
     }
 }
 
+/// A device-resident slab of `n` dense mask rows of `width` f32s each,
+/// laid out row-major along the **hypothesis axis** (DESIGN.md §11): row
+/// `h` holds hypothesis `h`'s mask values. For the batched-full API the
+/// width is the whole dense mask; for the batched-staged API it is the
+/// mask suffix after the resume boundary (the same slice
+/// [`Backend::forward_from`] takes for a single hypothesis).
+pub struct MaskSlab {
+    /// The uploaded `[n, width]` f32 buffer.
+    pub buf: DeviceBuf,
+    pub n: usize,
+    pub width: usize,
+}
+
 /// A borrowed host-side argument at the call boundary (the only two dtypes
 /// the artifact interface uses: f32 data, i32 labels/seeds).
 #[derive(Clone, Copy, Debug)]
@@ -182,6 +195,98 @@ pub trait Backend: Send + Sync {
     ) -> Result<Vec<Tensor>> {
         Err(anyhow!(
             "backend {}: staged execution unsupported ({model_key}:eval_from@{segment})",
+            self.name()
+        ))
+    }
+
+    // ---- batched multi-hypothesis scoring (DESIGN.md §11) -----------------
+    //
+    // One BCD iteration scores RT hypotheses that differ from the base mask
+    // at only DRC indices. A backend can score a slab of B hypotheses per
+    // forward, sharing every mask-independent computation (the affine
+    // pre-activations) across the hypothesis axis and applying per-
+    // hypothesis masks only where they act. Results must be bit-identical,
+    // per hypothesis, to the corresponding single-hypothesis call — the
+    // replay-merge contract extends across the hypothesis axis.
+    //
+    // `live[h] == false` marks a hypothesis already cut by the scan bound:
+    // the backend skips its per-hypothesis work and returns `None` for it.
+
+    /// Maximum hypothesis-slab width this backend accepts for `model_key`.
+    /// `1` (the default) means the batched API is unsupported and callers
+    /// score hypotheses one at a time — the PJRT engine's answer, since an
+    /// AOT HLO artifact has no hypothesis axis.
+    fn multi_width(&self, _model_key: &str) -> usize {
+        1
+    }
+
+    /// `eval_batch` over a hypothesis slab of **full dense masks**: returns
+    /// `(loss, correct)` per live hypothesis, each bit-identical to the
+    /// single-mask `eval_batch` on that row.
+    fn eval_batch_multi(
+        &self,
+        model_key: &str,
+        _params: &DeviceBuf,
+        _masks: &MaskSlab,
+        _x: &DeviceBuf,
+        _y: &DeviceBuf,
+        _live: &[bool],
+    ) -> Result<Vec<Option<(f32, f32)>>> {
+        Err(anyhow!(
+            "backend {}: batched scoring unsupported ({model_key}:eval_batch_multi)",
+            self.name()
+        ))
+    }
+
+    /// `forward` over a hypothesis slab of full dense masks: logits
+    /// `[B, K]` per live hypothesis.
+    fn forward_multi(
+        &self,
+        model_key: &str,
+        _params: &DeviceBuf,
+        _masks: &MaskSlab,
+        _x: &DeviceBuf,
+        _live: &[bool],
+    ) -> Result<Vec<Option<Tensor>>> {
+        Err(anyhow!(
+            "backend {}: batched scoring unsupported ({model_key}:forward_multi)",
+            self.name()
+        ))
+    }
+
+    /// [`Backend::forward_from`] over a hypothesis slab of **mask
+    /// suffixes** (each row as that method's `mask_suffix`), resuming every
+    /// hypothesis from the same cached boundary activation.
+    fn forward_from_multi(
+        &self,
+        model_key: &str,
+        segment: usize,
+        _acts: &DeviceBuf,
+        _params: &DeviceBuf,
+        _mask_suffixes: &MaskSlab,
+        _live: &[bool],
+    ) -> Result<Vec<Option<Tensor>>> {
+        Err(anyhow!(
+            "backend {}: batched scoring unsupported ({model_key}:forward_from_multi@{segment})",
+            self.name()
+        ))
+    }
+
+    /// [`Backend::eval_from`] over a hypothesis slab of mask suffixes:
+    /// `(loss, correct)` per live hypothesis via the one shared scoring
+    /// epilogue.
+    fn eval_from_multi(
+        &self,
+        model_key: &str,
+        segment: usize,
+        _acts: &DeviceBuf,
+        _params: &DeviceBuf,
+        _mask_suffixes: &MaskSlab,
+        _y: &DeviceBuf,
+        _live: &[bool],
+    ) -> Result<Vec<Option<(f32, f32)>>> {
+        Err(anyhow!(
+            "backend {}: batched scoring unsupported ({model_key}:eval_from_multi@{segment})",
             self.name()
         ))
     }
@@ -354,6 +459,26 @@ mod tests {
         assert!(stub.forward_from("m", 0, &buf, &buf, &buf).is_err());
         assert!(stub.eval_from("m", 0, &buf, &buf, &buf, &buf).is_err());
         stub.bump_stat("x", 1); // default no-op must not panic
+
+        // Batched multi-hypothesis defaults: width 1, every method errors.
+        assert_eq!(stub.multi_width("m"), 1);
+        let slab = MaskSlab {
+            buf: stub.upload_f32(&[1.0], &[1]).unwrap(),
+            n: 1,
+            width: 1,
+        };
+        let live = [true];
+        let err = stub
+            .eval_batch_multi("m", &buf, &slab, &buf, &buf, &live)
+            .unwrap_err();
+        assert!(err.to_string().contains("batched scoring unsupported"), "{err}");
+        assert!(stub.forward_multi("m", &buf, &slab, &buf, &live).is_err());
+        assert!(stub
+            .forward_from_multi("m", 0, &buf, &buf, &slab, &live)
+            .is_err());
+        assert!(stub
+            .eval_from_multi("m", 0, &buf, &buf, &slab, &buf, &live)
+            .is_err());
     }
 
     #[test]

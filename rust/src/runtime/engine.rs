@@ -219,6 +219,14 @@ impl Backend for Engine {
         0
     }
 
+    /// Batched multi-hypothesis scoring is likewise unsupported: the AOT
+    /// executables have no hypothesis axis in their input signatures, so
+    /// this engine reports slab width 1 and the evaluator scores trials one
+    /// full forward at a time (DESIGN.md §11).
+    fn multi_width(&self, _model_key: &str) -> usize {
+        1
+    }
+
     fn bump_stat(&self, key: &str, n: u64) {
         self.stats.bump(key, n)
     }

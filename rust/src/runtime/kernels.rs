@@ -1,0 +1,479 @@
+//! Shared numeric kernels of the reference backend (DESIGN.md §11).
+//!
+//! Every dense-math loop of [`crate::runtime::reference`] lives here —
+//! forward GEMMs, the fused masked activation, the scoring epilogue, and
+//! the backward helpers — so the single-trial path, the batched
+//! multi-hypothesis path and the training entry points all run the *same*
+//! floating-point code. The bit-identical staged/batched scoring contract
+//! (DESIGN.md §8) then holds by construction: there is one summation order
+//! and one epilogue, not two implementations kept in sync by hand.
+//!
+//! # Determinism discipline
+//!
+//! f32 addition is not associative, so every kernel here preserves the
+//! accumulation order of the naive triple loop it replaced:
+//!
+//! - [`gemm_bias_into`] accumulates each output element over the input
+//!   index `i` in ascending order, one add per `i` (with the `x[i] != 0`
+//!   skip — skipping an exact-zero term never changes the sum). Blocking
+//!   tiles the *output* dimension ([`GEMM_TILE_J`]) and the inner loop is
+//!   unrolled [`GEMM_UNROLL`]-wide across *independent* output elements;
+//!   neither reorders any single element's additions.
+//! - [`dinput`]'s dot products stay strictly sequential: splitting a
+//!   serial reduction into unrolled partial sums would change its bits.
+//! - [`softmax_ce_batch`] accumulates the softmax denominator in
+//!   ascending class order — the same sequence the materialized
+//!   `exps.iter().sum()` of the scalar implementation used — whether or
+//!   not the gradient is requested, so scoring-only calls (the trial hot
+//!   path) and training calls produce identical losses.
+
+// Index-heavy numeric kernels: explicit loops over computed flat offsets
+// read better than iterator chains here.
+#![allow(clippy::needless_range_loop)]
+
+/// Inner-loop unroll width of [`gemm_bias_into`] / [`matgrad`] (the
+/// `axpy` over independent output elements).
+pub const GEMM_UNROLL: usize = 8;
+
+/// Output-dimension tile of [`gemm_bias_into`]: the `z` tile stays hot in
+/// L1 across the whole input sweep while `w` streams through once.
+pub const GEMM_TILE_J: usize = 256;
+
+/// `y[j] += a * x[j]` over independent elements, manually unrolled
+/// [`GEMM_UNROLL`]-wide. Each `y[j]` receives exactly one add, so the
+/// per-element accumulation order of any caller loop is untouched.
+#[inline]
+fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut xc = x.chunks_exact(GEMM_UNROLL);
+    let mut yc = y.chunks_exact_mut(GEMM_UNROLL);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        ys[0] += a * xs[0];
+        ys[1] += a * xs[1];
+        ys[2] += a * xs[2];
+        ys[3] += a * xs[3];
+        ys[4] += a * xs[4];
+        ys[5] += a * xs[5];
+        ys[6] += a * xs[6];
+        ys[7] += a * xs[7];
+    }
+    for (ys, &xs) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *ys += a * xs;
+    }
+}
+
+/// `z = x @ w + b` for row-major `x [bsz, d_in]`, `w [d_in, d_out]`,
+/// writing into `z` (cleared and resized — callers on the batched hot
+/// path reuse one buffer across hypotheses instead of allocating).
+///
+/// Accumulation order per output element: `i` ascending, one add per
+/// nonzero `x[i]` — bit-identical to the naive loop (see module docs).
+pub fn gemm_bias_into(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    bsz: usize,
+    d_in: usize,
+    d_out: usize,
+    z: &mut Vec<f32>,
+) {
+    debug_assert_eq!(x.len(), bsz * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(bias.len(), d_out);
+    z.clear();
+    z.resize(bsz * d_out, 0.0);
+    for bi in 0..bsz {
+        let xr = &x[bi * d_in..(bi + 1) * d_in];
+        let zr = &mut z[bi * d_out..(bi + 1) * d_out];
+        zr.copy_from_slice(bias);
+        let mut j0 = 0;
+        while j0 < d_out {
+            let j1 = (j0 + GEMM_TILE_J).min(d_out);
+            let zt = &mut zr[j0..j1];
+            for (i, &xv) in xr.iter().enumerate() {
+                // Exact zeros are common (ReLU outputs feeding the next
+                // layer); skipping them adds nothing to any sum.
+                if xv != 0.0 {
+                    axpy(xv, &w[i * d_out + j0..i * d_out + j1], zt);
+                }
+            }
+            j0 = j1;
+        }
+    }
+}
+
+/// Allocating convenience wrapper over [`gemm_bias_into`].
+pub fn gemm_bias(x: &[f32], w: &[f32], bias: &[f32], bsz: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+    let mut z = Vec::new();
+    gemm_bias_into(x, w, bias, bsz, d_in, d_out, &mut z);
+    z
+}
+
+/// The non-ReLU branch `g` taken where the mask is 0: identity in the
+/// paper setting, the AutoReP quadratic for `_poly` variants.
+pub fn g(z: f32, poly: bool) -> f32 {
+    if poly {
+        0.25 * z * z + 0.5 * z
+    } else {
+        z
+    }
+}
+
+pub fn g_prime(z: f32, poly: bool) -> f32 {
+    if poly {
+        0.5 * z + 0.5
+    } else {
+        1.0
+    }
+}
+
+/// Fused masked activation `a = m*relu(z) + (1-m)*g(z)` per unit (mask is
+/// per-unit, broadcast over the batch), written into a reusable buffer —
+/// the per-hypothesis step of the batched trial path.
+pub fn mask_act_into(z: &[f32], mask: &[f32], bsz: usize, d: usize, poly: bool, a: &mut Vec<f32>) {
+    debug_assert_eq!(z.len(), bsz * d);
+    debug_assert_eq!(mask.len(), d);
+    a.clear();
+    a.reserve(z.len());
+    for bi in 0..bsz {
+        let zr = &z[bi * d..(bi + 1) * d];
+        for (j, &zv) in zr.iter().enumerate() {
+            let m = mask[j];
+            a.push(m * zv.max(0.0) + (1.0 - m) * g(zv, poly));
+        }
+    }
+}
+
+/// Allocating convenience wrapper over [`mask_act_into`].
+pub fn mask_act(z: &[f32], mask: &[f32], bsz: usize, d: usize, poly: bool) -> Vec<f32> {
+    let mut a = Vec::new();
+    mask_act_into(z, mask, bsz, d, poly, &mut a);
+    a
+}
+
+/// The scoring epilogue: mean cross-entropy + argmax-correct count for
+/// logits `[bsz, k]`, optionally also writing `dL/dlogits` (training
+/// callers). Argmax ties resolve to the highest index, matching
+/// [`crate::tensor::Tensor::argmax_rows`].
+///
+/// This is the ONE epilogue of every scoring path — `eval_batch`,
+/// `eval_from`, both batched multi variants, and the training steps — so
+/// full, staged and batched trial scores agree bit for bit. The
+/// scoring-only mode (`dlogits = None`) allocates nothing and computes
+/// the exact same loss: the denominator accumulates in ascending class
+/// order either way.
+pub fn softmax_ce_batch(
+    logits: &[f32],
+    y: &[i32],
+    k: usize,
+    mut dlogits: Option<&mut [f32]>,
+) -> (f32, usize) {
+    let bsz = y.len();
+    debug_assert_eq!(logits.len(), bsz * k);
+    let mut loss = 0.0f32;
+    let mut correct = 0usize;
+    for bi in 0..bsz {
+        let row = &logits[bi * k..(bi + 1) * k];
+        let mut am = 0usize;
+        let mut max = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v >= max {
+                max = v;
+                am = j;
+            }
+        }
+        let target = y[bi] as usize % k;
+        if am == target {
+            correct += 1;
+        }
+        let mut denom = 0.0f32;
+        let mut e_target = 0.0f32;
+        match dlogits.as_deref_mut() {
+            Some(d) => {
+                let dr = &mut d[bi * k..(bi + 1) * k];
+                for (j, &v) in row.iter().enumerate() {
+                    let e = (v - max).exp();
+                    dr[j] = e;
+                    denom += e;
+                    if j == target {
+                        e_target = e;
+                    }
+                }
+                for (j, dj) in dr.iter_mut().enumerate() {
+                    let pj = *dj / denom;
+                    *dj = (pj - if j == target { 1.0 } else { 0.0 }) / bsz as f32;
+                }
+            }
+            None => {
+                for (j, &v) in row.iter().enumerate() {
+                    let e = (v - max).exp();
+                    denom += e;
+                    if j == target {
+                        e_target = e;
+                    }
+                }
+            }
+        }
+        loss -= (e_target / denom).max(1e-12).ln();
+    }
+    (loss / bsz as f32, correct)
+}
+
+/// [`softmax_ce_batch`] with the gradient materialized — the training
+/// entry points' calling convention.
+pub fn softmax_ce(logits: &[f32], y: &[i32], k: usize) -> (f32, usize, Vec<f32>) {
+    let mut dlogits = vec![0.0f32; logits.len()];
+    let (loss, correct) = softmax_ce_batch(logits, y, k, Some(&mut dlogits));
+    (loss, correct, dlogits)
+}
+
+/// Temperature softmax of one row (knowledge distillation).
+pub fn softmax_t(row: &[f32], temp: f32) -> Vec<f32> {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = row.iter().map(|&v| ((v - max) / temp).exp()).collect();
+    let denom: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / denom).collect()
+}
+
+/// Accumulate `dw += x^T dz` and `db += colsum(dz)`. Per `dw` element:
+/// one add per batch row, `bi` ascending (the unrolled `axpy` spans
+/// independent elements only).
+#[allow(clippy::too_many_arguments)]
+pub fn matgrad(
+    x: &[f32],
+    dz: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    bsz: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    for bi in 0..bsz {
+        let xr = &x[bi * d_in..(bi + 1) * d_in];
+        let dzr = &dz[bi * d_out..(bi + 1) * d_out];
+        for (j, &dv) in dzr.iter().enumerate() {
+            db[j] += dv;
+        }
+        for (i, &xv) in xr.iter().enumerate() {
+            if xv != 0.0 {
+                axpy(xv, dzr, &mut dw[i * d_out..(i + 1) * d_out]);
+            }
+        }
+    }
+}
+
+/// `dx = dz @ w^T`. Each output is a serial dot product and stays
+/// strictly sequential — unrolling a reduction would change its bits.
+pub fn dinput(dz: &[f32], w: &[f32], bsz: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; bsz * d_in];
+    for bi in 0..bsz {
+        let dzr = &dz[bi * d_out..(bi + 1) * d_out];
+        let dxr = &mut dx[bi * d_in..(bi + 1) * d_in];
+        for (i, dxi) in dxr.iter_mut().enumerate() {
+            let wr = &w[i * d_out..(i + 1) * d_out];
+            let mut acc = 0.0f32;
+            for (&dv, &wv) in dzr.iter().zip(wr) {
+                acc += dv * wv;
+            }
+            *dxi = acc;
+        }
+    }
+    dx
+}
+
+/// Backprop through the masked activation: returns (`dL/dmask` per unit,
+/// `dL/dz`).
+pub fn dact(
+    z: &[f32],
+    mask: &[f32],
+    da: &[f32],
+    bsz: usize,
+    d: usize,
+    poly: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dmask = vec![0.0f32; d];
+    let mut dz = vec![0.0f32; z.len()];
+    for bi in 0..bsz {
+        for j in 0..d {
+            let idx = bi * d + j;
+            let zv = z[idx];
+            let m = mask[j];
+            let relu_grad = if zv > 0.0 { 1.0 } else { 0.0 };
+            dz[idx] = da[idx] * (m * relu_grad + (1.0 - m) * g_prime(zv, poly));
+            dmask[j] += da[idx] * (zv.max(0.0) - g(zv, poly));
+        }
+    }
+    (dmask, dz)
+}
+
+/// SGD with momentum: `mom = mu*mom + g; p -= lr*mom`.
+pub fn sgd_momentum(p: &[f32], mom: &[f32], grad: &[f32], lr: f32, mu: f32) -> (Vec<f32>, Vec<f32>) {
+    let mut new_p = Vec::with_capacity(p.len());
+    let mut new_mom = Vec::with_capacity(mom.len());
+    for i in 0..p.len() {
+        let m = mu * mom[i] + grad[i];
+        new_mom.push(m);
+        new_p.push(p[i] - lr * m);
+    }
+    (new_p, new_mom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// The pre-kernel naive affine, kept verbatim as the bit-level oracle.
+    fn naive_affine(x: &[f32], w: &[f32], b: &[f32], bsz: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+        let mut z = vec![0.0f32; bsz * d_out];
+        for bi in 0..bsz {
+            let xr = &x[bi * d_in..(bi + 1) * d_in];
+            let zr = &mut z[bi * d_out..(bi + 1) * d_out];
+            zr.copy_from_slice(b);
+            for (i, &xv) in xr.iter().enumerate() {
+                if xv != 0.0 {
+                    let wr = &w[i * d_out..(i + 1) * d_out];
+                    for (zj, &wj) in zr.iter_mut().zip(wr) {
+                        *zj += xv * wj;
+                    }
+                }
+            }
+        }
+        z
+    }
+
+    fn pseudo(rng: &mut Rng, n: usize, zero_every: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                if zero_every > 0 && i % zero_every == 0 {
+                    0.0
+                } else {
+                    rng.normal()
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn blocked_gemm_matches_naive_bitwise_on_ragged_shapes() {
+        let mut rng = Rng::new(0xB10C);
+        // Shapes straddling the unroll (8) and tile (256) boundaries,
+        // including the degenerate 1s and a >1-tile output.
+        for &(bsz, d_in, d_out) in &[
+            (1usize, 1usize, 1usize),
+            (2, 5, 3),
+            (3, 8, 8),
+            (1, 13, 7),
+            (4, 9, 17),
+            (2, 31, 255),
+            (2, 7, 256),
+            (1, 10, 259),
+            (5, 16, 300),
+        ] {
+            let x = pseudo(&mut rng, bsz * d_in, 3);
+            let w = pseudo(&mut rng, d_in * d_out, 0);
+            let b = pseudo(&mut rng, d_out, 0);
+            let want = naive_affine(&x, &w, &b, bsz, d_in, d_out);
+            let got = gemm_bias(&x, &w, &b, bsz, d_in, d_out);
+            assert_eq!(got, want, "bsz={bsz} d_in={d_in} d_out={d_out}");
+            // The reusable-buffer entry point clears stale contents.
+            let mut z = vec![9.0f32; 3];
+            gemm_bias_into(&x, &w, &b, bsz, d_in, d_out, &mut z);
+            assert_eq!(z, want);
+        }
+    }
+
+    #[test]
+    fn fused_mask_act_matches_scalar_formula() {
+        let mut rng = Rng::new(0xAC7);
+        let (bsz, d) = (3usize, 11usize);
+        let z = pseudo(&mut rng, bsz * d, 4);
+        let mask: Vec<f32> = (0..d).map(|j| [0.0, 1.0, 0.5][j % 3]).collect();
+        for poly in [false, true] {
+            let a = mask_act(&z, &mask, bsz, d, poly);
+            for bi in 0..bsz {
+                for j in 0..d {
+                    let zv = z[bi * d + j];
+                    let m = mask[j];
+                    let want = m * zv.max(0.0) + (1.0 - m) * g(zv, poly);
+                    assert_eq!(a[bi * d + j], want, "bi={bi} j={j} poly={poly}");
+                }
+            }
+            // Buffer reuse across hypotheses must fully overwrite.
+            let mut buf = vec![7.0f32; 2];
+            mask_act_into(&z, &mask, bsz, d, poly, &mut buf);
+            assert_eq!(buf, a);
+        }
+    }
+
+    #[test]
+    fn score_only_epilogue_matches_gradient_epilogue_bitwise() {
+        let mut rng = Rng::new(0xCE0);
+        let (bsz, k) = (5usize, 7usize);
+        let logits = pseudo(&mut rng, bsz * k, 0);
+        let y: Vec<i32> = (0..bsz as i32).collect();
+        let (l_full, c_full, d) = softmax_ce(&logits, &y, k);
+        let (l_score, c_score) = softmax_ce_batch(&logits, &y, k, None);
+        assert_eq!(l_full, l_score, "loss must not depend on gradient materialization");
+        assert_eq!(c_full, c_score);
+        assert_eq!(d.len(), logits.len());
+        // Gradient rows sum to ~0 (softmax minus one-hot, mean-reduced).
+        for bi in 0..bsz {
+            let s: f32 = d[bi * k..(bi + 1) * k].iter().sum();
+            assert!(s.abs() < 1e-6, "row {bi} gradient sum {s}");
+        }
+    }
+
+    #[test]
+    fn epilogue_argmax_ties_resolve_to_highest_index() {
+        // Two equal maxima: the argmax must pick the higher index (the
+        // Tensor::argmax_rows convention the replay merge relies on).
+        let logits = vec![1.0f32, 3.0, 3.0, 0.0];
+        let (_, c_hi) = softmax_ce_batch(&logits, &[2], 4, None);
+        assert_eq!(c_hi, 1, "tie must resolve to index 2");
+        let (_, c_lo) = softmax_ce_batch(&logits, &[1], 4, None);
+        assert_eq!(c_lo, 0);
+    }
+
+    #[test]
+    fn matgrad_and_dinput_match_naive_bitwise() {
+        let mut rng = Rng::new(0x9AD);
+        let (bsz, d_in, d_out) = (3usize, 10usize, 9usize);
+        let x = pseudo(&mut rng, bsz * d_in, 3);
+        let dz = pseudo(&mut rng, bsz * d_out, 0);
+        let w = pseudo(&mut rng, d_in * d_out, 0);
+        // Naive matgrad oracle.
+        let mut dw_want = vec![0.0f32; d_in * d_out];
+        let mut db_want = vec![0.0f32; d_out];
+        for bi in 0..bsz {
+            let xr = &x[bi * d_in..(bi + 1) * d_in];
+            let dzr = &dz[bi * d_out..(bi + 1) * d_out];
+            for (j, &dv) in dzr.iter().enumerate() {
+                db_want[j] += dv;
+            }
+            for (i, &xv) in xr.iter().enumerate() {
+                if xv != 0.0 {
+                    for (j, &dv) in dzr.iter().enumerate() {
+                        dw_want[i * d_out + j] += xv * dv;
+                    }
+                }
+            }
+        }
+        let mut dw = vec![0.0f32; d_in * d_out];
+        let mut db = vec![0.0f32; d_out];
+        matgrad(&x, &dz, &mut dw, &mut db, bsz, d_in, d_out);
+        assert_eq!(dw, dw_want);
+        assert_eq!(db, db_want);
+
+        let dx = dinput(&dz, &w, bsz, d_in, d_out);
+        for bi in 0..bsz {
+            for i in 0..d_in {
+                let mut acc = 0.0f32;
+                for j in 0..d_out {
+                    acc += dz[bi * d_out + j] * w[i * d_out + j];
+                }
+                assert_eq!(dx[bi * d_in + i], acc, "bi={bi} i={i}");
+            }
+        }
+    }
+}

@@ -15,11 +15,15 @@
 //!
 //! [`session::Session`] adds the typed entry-point API both share. All
 //! backends are `Send + Sync` so the BCD trial scan can fan out across
-//! threads.
+//! threads. [`kernels`] holds the shared dense-math kernels (blocked GEMM,
+//! fused mask-apply, scoring epilogue) that both the single-trial and the
+//! batched multi-hypothesis reference paths run, so the bit-identity
+//! contract of DESIGN.md §8/§11 holds by construction.
 
 pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod kernels;
 pub mod manifest;
 pub mod reference;
 pub mod session;

@@ -16,12 +16,18 @@
 //! `a = m * relu(z) + (1 - m) * g(z)` where `g` is the identity (paper
 //! setting) or the AutoReP-style quadratic `0.25 z^2 + 0.5 z` for `_poly`
 //! variants. `m = 1` keeps the ReLU, `m = 0` linearizes it.
+//!
+//! All dense math lives in [`crate::runtime::kernels`]; this module only
+//! wires layouts and entry points. The batched multi-hypothesis paths
+//! (`*_multi`, DESIGN.md §11) share each mask-independent affine across
+//! the hypothesis axis — the masks act at the activations, so `z1` (full
+//! route) and `z2` (staged route) are computed once per slab — then run
+//! the per-hypothesis steps through the very same kernel functions the
+//! single-trial path uses, making per-hypothesis results bit-identical to
+//! single-hypothesis calls by construction.
 
-// Index-heavy numeric kernels: explicit loops over computed flat offsets
-// read better than iterator chains here.
-#![allow(clippy::needless_range_loop)]
-
-use crate::runtime::backend::{Backend, CallStats, DeviceBuf, HostArg, StatsRecorder};
+use crate::runtime::backend::{Backend, CallStats, DeviceBuf, HostArg, MaskSlab, StatsRecorder};
+use crate::runtime::kernels;
 use crate::runtime::manifest::{Manifest, ModelInfo, PackEntry};
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
@@ -109,6 +115,11 @@ pub struct RefBackend {
 }
 
 const MOMENTUM: f32 = 0.9;
+
+/// Hypothesis-slab width limit of the batched `*_multi` paths. Wide enough
+/// that one slab covers a whole BCD trial round (`rt` is typically ≤ 64),
+/// small enough that the per-hypothesis scratch stays cache-resident.
+const MULTI_WIDTH: usize = 64;
 
 impl RefBackend {
     /// Build a backend serving `specs` at a fixed batch size.
@@ -237,7 +248,8 @@ impl RefBackend {
                 let y = i32_arg(args, 3, "y")?;
                 check_len(key, fn_name, "y", y.len(), bsz)?;
                 let f = forward(&model.layout, model.poly, p, m, x, bsz);
-                let (loss, correct, _) = softmax_ce(&f.logits, y, model.layout.k);
+                let (loss, correct) =
+                    kernels::softmax_ce_batch(&f.logits, y, model.layout.k, None);
                 Ok(vec![Tensor::scalar(loss), Tensor::scalar(correct as f32)])
             }
             "train_step" => {
@@ -253,9 +265,9 @@ impl RefBackend {
                 check_len(key, fn_name, "mask", m.len(), model.layout.mask_size())?;
                 check_len(key, fn_name, "y", y.len(), bsz)?;
                 let f = forward(&model.layout, model.poly, p, m, x, bsz);
-                let (loss, correct, dlogits) = softmax_ce(&f.logits, y, model.layout.k);
+                let (loss, correct, dlogits) = kernels::softmax_ce(&f.logits, y, model.layout.k);
                 let (grad, _) = backward(&model.layout, model.poly, p, m, x, &f, &dlogits, bsz);
-                let (new_p, new_mom) = sgd_momentum(p, mom, &grad, lr);
+                let (new_p, new_mom) = kernels::sgd_momentum(p, mom, &grad, lr, MOMENTUM);
                 Ok(vec![
                     vec1(new_p),
                     vec1(new_mom),
@@ -277,10 +289,10 @@ impl RefBackend {
                 check_len(key, fn_name, "alphas", alphas.len(), model.layout.mask_size())?;
                 check_len(key, fn_name, "y", y.len(), bsz)?;
                 let f = forward(&model.layout, model.poly, p, alphas, x, bsz);
-                let (ce, _, dlogits) = softmax_ce(&f.logits, y, model.layout.k);
+                let (ce, _, dlogits) = kernels::softmax_ce(&f.logits, y, model.layout.k);
                 let (grad, dalpha) =
                     backward(&model.layout, model.poly, p, alphas, x, &f, &dlogits, bsz);
-                let (new_p, new_mom) = sgd_momentum(p, mom, &grad, lr);
+                let (new_p, new_mom) = kernels::sgd_momentum(p, mom, &grad, lr, MOMENTUM);
                 // Projected SGD on alpha under CE + lam * ||alpha||_1; alphas
                 // live in [0, 1] so the l1 subgradient is simply +lam.
                 let new_alphas: Vec<f32> = alphas
@@ -312,14 +324,14 @@ impl RefBackend {
                 check_len(key, fn_name, "y", y.len(), bsz)?;
                 check_len(key, fn_name, "t_logits", t_logits.len(), bsz * k)?;
                 let f = forward(&model.layout, model.poly, p, m, x, bsz);
-                let (ce, _, mut dlogits) = softmax_ce(&f.logits, y, model.layout.k);
+                let (ce, _, mut dlogits) = kernels::softmax_ce(&f.logits, y, model.layout.k);
                 // Distillation: 0.5*CE(y) + 0.5*T^2*CE(softmax(t/T), softmax(s/T)).
                 let mut kd_loss = 0.0f32;
                 for bi in 0..bsz {
                     let s = &f.logits[bi * k..(bi + 1) * k];
                     let t = &t_logits[bi * k..(bi + 1) * k];
-                    let ps = softmax_t(s, temp);
-                    let pt = softmax_t(t, temp);
+                    let ps = kernels::softmax_t(s, temp);
+                    let pt = kernels::softmax_t(t, temp);
                     for j in 0..k {
                         kd_loss -= pt[j] * ps[j].max(1e-12).ln();
                         // d(T^2 * soft-CE)/ds = T * (softmax(s/T) - softmax(t/T)).
@@ -330,7 +342,7 @@ impl RefBackend {
                 kd_loss = temp * temp * kd_loss / bsz as f32;
                 let loss = 0.5 * ce + 0.5 * kd_loss;
                 let (grad, _) = backward(&model.layout, model.poly, p, m, x, &f, &dlogits, bsz);
-                let (new_p, new_mom) = sgd_momentum(p, mom, &grad, lr);
+                let (new_p, new_mom) = kernels::sgd_momentum(p, mom, &grad, lr, MOMENTUM);
                 Ok(vec![vec1(new_p), vec1(new_mom), Tensor::scalar(loss)])
             }
             other => bail!("reference backend: model {key}: no entry point {other:?}"),
@@ -366,6 +378,90 @@ impl RefBackend {
             );
         }
         Ok((model, p, m2, a1, a1.len() / h1))
+    }
+
+    /// Validate a hypothesis slab: `n` rows of `want_width` f32s, one
+    /// liveness flag per row, within this backend's width limit.
+    fn slab_rows<'a>(
+        &self,
+        model_key: &str,
+        fn_name: &str,
+        slab: &'a MaskSlab,
+        want_width: usize,
+        live: &[bool],
+    ) -> Result<&'a [f32]> {
+        if slab.width != want_width {
+            bail!("{model_key}:{fn_name}: mask slab width {}, expects {want_width}", slab.width);
+        }
+        if slab.n != live.len() {
+            bail!(
+                "{model_key}:{fn_name}: mask slab has {} rows but live covers {}",
+                slab.n,
+                live.len()
+            );
+        }
+        if slab.n == 0 || slab.n > MULTI_WIDTH {
+            bail!(
+                "{model_key}:{fn_name}: slab of {} hypotheses (supported 1..={MULTI_WIDTH})",
+                slab.n
+            );
+        }
+        let rows = ref_f32(&slab.buf, "masks")?;
+        check_len(model_key, fn_name, "masks", rows.len(), slab.n * slab.width)?;
+        Ok(rows)
+    }
+
+    /// Validate the boundary-0 batched-resume arguments shared by
+    /// [`Backend::forward_from_multi`] and [`Backend::eval_from_multi`]:
+    /// returns `(model, params, suffix rows, boundary-0 acts, batch)`.
+    #[allow(clippy::too_many_arguments)]
+    fn staged_multi_args<'a>(
+        &self,
+        model_key: &str,
+        fn_name: &str,
+        segment: usize,
+        acts: &'a DeviceBuf,
+        params: &'a DeviceBuf,
+        slab: &'a MaskSlab,
+        live: &[bool],
+    ) -> Result<(&RefModel, &'a [f32], &'a [f32], &'a [f32], usize)> {
+        let model = self.model_impl(model_key)?;
+        if segment != 0 {
+            bail!("{model_key}:{fn_name}: no segment boundary {segment} (this model has 1)");
+        }
+        let p = ref_f32(params, "params")?;
+        check_len(model_key, fn_name, "params", p.len(), model.layout.param_size())?;
+        let rows = self.slab_rows(model_key, fn_name, slab, model.layout.h2, live)?;
+        let a1 = ref_f32(acts, "acts")?;
+        let h1 = model.layout.h1;
+        if a1.is_empty() || a1.len() % h1 != 0 {
+            bail!(
+                "{model_key}:{fn_name}: input \"acts\" has {} elements, expects a multiple of {h1}",
+                a1.len()
+            );
+        }
+        Ok((model, p, rows, a1, a1.len() / h1))
+    }
+
+    /// Validate the batched-full arguments shared by
+    /// [`Backend::forward_multi`] and [`Backend::eval_batch_multi`]:
+    /// returns `(model, params, full-mask rows, x, batch)`.
+    fn full_multi_args<'a>(
+        &self,
+        model_key: &str,
+        fn_name: &str,
+        params: &'a DeviceBuf,
+        slab: &'a MaskSlab,
+        x: &'a DeviceBuf,
+        live: &[bool],
+    ) -> Result<(&RefModel, &'a [f32], &'a [f32], &'a [f32], usize)> {
+        let model = self.model_impl(model_key)?;
+        let p = ref_f32(params, "params")?;
+        check_len(model_key, fn_name, "params", p.len(), model.layout.param_size())?;
+        let rows = self.slab_rows(model_key, fn_name, slab, model.layout.mask_size(), live)?;
+        let xv = ref_f32(x, "x")?;
+        let bsz = batch_of(model, model_key, fn_name, xv.len())?;
+        Ok((model, p, rows, xv, bsz))
     }
 }
 
@@ -479,8 +575,108 @@ impl Backend for RefBackend {
         check_len(model_key, "eval_from", "y", yv.len(), bsz)?;
         self.stats.timed(&format!("{model_key}:eval_from"), || {
             let tail = forward_tail(&model.layout, model.poly, p, m2, a1, bsz);
-            let (loss, correct, _) = softmax_ce(&tail.logits, yv, model.layout.k);
+            let (loss, correct) = kernels::softmax_ce_batch(&tail.logits, yv, model.layout.k, None);
             Ok(vec![Tensor::scalar(loss), Tensor::scalar(correct as f32)])
+        })
+    }
+
+    fn multi_width(&self, model_key: &str) -> usize {
+        if self.models.contains_key(model_key) {
+            MULTI_WIDTH
+        } else {
+            1
+        }
+    }
+
+    fn eval_batch_multi(
+        &self,
+        model_key: &str,
+        params: &DeviceBuf,
+        masks: &MaskSlab,
+        x: &DeviceBuf,
+        y: &DeviceBuf,
+        live: &[bool],
+    ) -> Result<Vec<Option<(f32, f32)>>> {
+        let (model, p, rows, xv, bsz) =
+            self.full_multi_args(model_key, "eval_batch_multi", params, masks, x, live)?;
+        let yv = ref_i32(y, "y")?;
+        check_len(model_key, "eval_batch_multi", "y", yv.len(), bsz)?;
+        self.stats.timed(&format!("{model_key}:eval_batch_multi"), || {
+            let logits = forward_full_multi(&model.layout, model.poly, p, rows, xv, bsz, live);
+            Ok(score_multi(&logits, yv, model.layout.k))
+        })
+    }
+
+    fn forward_multi(
+        &self,
+        model_key: &str,
+        params: &DeviceBuf,
+        masks: &MaskSlab,
+        x: &DeviceBuf,
+        live: &[bool],
+    ) -> Result<Vec<Option<Tensor>>> {
+        let (model, p, rows, xv, bsz) =
+            self.full_multi_args(model_key, "forward_multi", params, masks, x, live)?;
+        self.stats.timed(&format!("{model_key}:forward_multi"), || {
+            let logits = forward_full_multi(&model.layout, model.poly, p, rows, xv, bsz, live);
+            Ok(logits
+                .into_iter()
+                .map(|l| l.map(|v| Tensor::new(vec![bsz, model.layout.k], v)))
+                .collect())
+        })
+    }
+
+    fn forward_from_multi(
+        &self,
+        model_key: &str,
+        segment: usize,
+        acts: &DeviceBuf,
+        params: &DeviceBuf,
+        mask_suffixes: &MaskSlab,
+        live: &[bool],
+    ) -> Result<Vec<Option<Tensor>>> {
+        let (model, p, rows, a1, bsz) = self.staged_multi_args(
+            model_key,
+            "forward_from_multi",
+            segment,
+            acts,
+            params,
+            mask_suffixes,
+            live,
+        )?;
+        self.stats.timed(&format!("{model_key}:forward_from_multi"), || {
+            let logits = forward_tail_multi(&model.layout, model.poly, p, rows, a1, bsz, live);
+            Ok(logits
+                .into_iter()
+                .map(|l| l.map(|v| Tensor::new(vec![bsz, model.layout.k], v)))
+                .collect())
+        })
+    }
+
+    fn eval_from_multi(
+        &self,
+        model_key: &str,
+        segment: usize,
+        acts: &DeviceBuf,
+        params: &DeviceBuf,
+        mask_suffixes: &MaskSlab,
+        y: &DeviceBuf,
+        live: &[bool],
+    ) -> Result<Vec<Option<(f32, f32)>>> {
+        let (model, p, rows, a1, bsz) = self.staged_multi_args(
+            model_key,
+            "eval_from_multi",
+            segment,
+            acts,
+            params,
+            mask_suffixes,
+            live,
+        )?;
+        let yv = ref_i32(y, "y")?;
+        check_len(model_key, "eval_from_multi", "y", yv.len(), bsz)?;
+        self.stats.timed(&format!("{model_key}:eval_from_multi"), || {
+            let logits = forward_tail_multi(&model.layout, model.poly, p, rows, a1, bsz, live);
+            Ok(score_multi(&logits, yv, model.layout.k))
         })
     }
 
@@ -604,56 +800,6 @@ fn init_params(layout: &Layout, seed: i32) -> Vec<f32> {
     p
 }
 
-/// The non-ReLU branch `g` taken where the mask is 0.
-fn g(z: f32, poly: bool) -> f32 {
-    if poly {
-        0.25 * z * z + 0.5 * z
-    } else {
-        z
-    }
-}
-
-fn g_prime(z: f32, poly: bool) -> f32 {
-    if poly {
-        0.5 * z + 0.5
-    } else {
-        1.0
-    }
-}
-
-/// `z @ [bsz, d_in] x [d_in, d_out] + b`.
-fn affine(x: &[f32], w: &[f32], b: &[f32], bsz: usize, d_in: usize, d_out: usize) -> Vec<f32> {
-    let mut z = vec![0.0f32; bsz * d_out];
-    for bi in 0..bsz {
-        let xr = &x[bi * d_in..(bi + 1) * d_in];
-        let zr = &mut z[bi * d_out..(bi + 1) * d_out];
-        zr.copy_from_slice(b);
-        for (i, &xv) in xr.iter().enumerate() {
-            if xv != 0.0 {
-                let wr = &w[i * d_out..(i + 1) * d_out];
-                for (zj, &wj) in zr.iter_mut().zip(wr) {
-                    *zj += xv * wj;
-                }
-            }
-        }
-    }
-    z
-}
-
-/// Masked activation: `a = m*relu(z) + (1-m)*g(z)` per unit (mask is
-/// per-unit, broadcast over the batch).
-fn act(z: &[f32], mask: &[f32], bsz: usize, d: usize, poly: bool) -> Vec<f32> {
-    let mut a = vec![0.0f32; z.len()];
-    for bi in 0..bsz {
-        for j in 0..d {
-            let zv = z[bi * d + j];
-            let m = mask[j];
-            a[bi * d + j] = m * zv.max(0.0) + (1.0 - m) * g(zv, poly);
-        }
-    }
-    a
-}
-
 struct ForwardCache {
     z1: Vec<f32>,
     a1: Vec<f32>,
@@ -688,8 +834,8 @@ fn forward_head(
     bsz: usize,
 ) -> HeadCache {
     let [w1, b1, _w2, _b2, _w3, _b3] = layout.split(p);
-    let z1 = affine(x, w1, b1, bsz, layout.d_in, layout.h1);
-    let a1 = act(&z1, m1, bsz, layout.h1, poly);
+    let z1 = kernels::gemm_bias(x, w1, b1, bsz, layout.d_in, layout.h1);
+    let a1 = kernels::mask_act(&z1, m1, bsz, layout.h1, poly);
     HeadCache { z1, a1 }
 }
 
@@ -705,9 +851,9 @@ fn forward_tail(
     bsz: usize,
 ) -> TailCache {
     let [_w1, _b1, w2, b2, w3, b3] = layout.split(p);
-    let z2 = affine(a1, w2, b2, bsz, layout.h1, layout.h2);
-    let a2 = act(&z2, m2, bsz, layout.h2, poly);
-    let logits = affine(&a2, w3, b3, bsz, layout.h2, layout.k);
+    let z2 = kernels::gemm_bias(a1, w2, b2, bsz, layout.h1, layout.h2);
+    let a2 = kernels::mask_act(&z2, m2, bsz, layout.h2, poly);
+    let logits = kernels::gemm_bias(&a2, w3, b3, bsz, layout.h2, layout.k);
     TailCache { z2, a2, logits }
 }
 
@@ -725,47 +871,84 @@ fn forward(
     ForwardCache { z1: head.z1, a1: head.a1, z2: tail.z2, a2: tail.a2, logits: tail.logits }
 }
 
-/// Mean cross-entropy + correct count + `dL/dlogits` for logits `[bsz, k]`.
-/// Argmax ties resolve to the highest index, matching
-/// [`Tensor::argmax_rows`].
-fn softmax_ce(logits: &[f32], y: &[i32], k: usize) -> (f32, usize, Vec<f32>) {
-    let bsz = y.len();
-    let mut dlogits = vec![0.0f32; logits.len()];
-    let mut loss = 0.0f32;
-    let mut correct = 0usize;
-    for bi in 0..bsz {
-        let row = &logits[bi * k..(bi + 1) * k];
-        let mut am = 0usize;
-        let mut max = f32::NEG_INFINITY;
-        for (j, &v) in row.iter().enumerate() {
-            if v >= max {
-                max = v;
-                am = j;
-            }
+// ---- batched multi-hypothesis forwards (DESIGN.md §11) --------------------
+//
+// Bit-identity by construction: the shared affine gets the exact inputs the
+// single-hypothesis path would hand the same kernel (masks act only at the
+// activations, so `z1`/`z2` are hypothesis-independent), and every per-
+// hypothesis step below IS the kernel call [`forward_head`]/[`forward_tail`]
+// makes. Scratch buffers are reused across hypotheses (`*_into` clears).
+
+/// Full-route slab forward: `rows` holds `live.len()` full dense masks.
+/// Computes `z1` once, then per live hypothesis: mask-act, layer-2 affine,
+/// mask-act, output affine. Returns logits per live hypothesis.
+fn forward_full_multi(
+    layout: &Layout,
+    poly: bool,
+    p: &[f32],
+    rows: &[f32],
+    x: &[f32],
+    bsz: usize,
+    live: &[bool],
+) -> Vec<Option<Vec<f32>>> {
+    let [w1, b1, w2, b2, w3, b3] = layout.split(p);
+    let z1 = kernels::gemm_bias(x, w1, b1, bsz, layout.d_in, layout.h1);
+    let width = layout.mask_size();
+    let (mut a1, mut z2, mut a2) = (Vec::new(), Vec::new(), Vec::new());
+    let mut out = Vec::with_capacity(live.len());
+    for (h, &alive) in live.iter().enumerate() {
+        if !alive {
+            out.push(None);
+            continue;
         }
-        let target = y[bi] as usize % k;
-        if am == target {
-            correct += 1;
-        }
-        let exps: Vec<f32> = row.iter().map(|&v| (v - max).exp()).collect();
-        let denom: f32 = exps.iter().sum();
-        for j in 0..k {
-            let pj = exps[j] / denom;
-            dlogits[bi * k + j] = (pj - if j == target { 1.0 } else { 0.0 }) / bsz as f32;
-            if j == target {
-                loss -= pj.max(1e-12).ln();
-            }
-        }
+        let (m1, m2) = rows[h * width..(h + 1) * width].split_at(layout.h1);
+        kernels::mask_act_into(&z1, m1, bsz, layout.h1, poly, &mut a1);
+        kernels::gemm_bias_into(&a1, w2, b2, bsz, layout.h1, layout.h2, &mut z2);
+        kernels::mask_act_into(&z2, m2, bsz, layout.h2, poly, &mut a2);
+        out.push(Some(kernels::gemm_bias(&a2, w3, b3, bsz, layout.h2, layout.k)));
     }
-    (loss / bsz as f32, correct, dlogits)
+    out
 }
 
-/// Temperature softmax of one row.
-fn softmax_t(row: &[f32], temp: f32) -> Vec<f32> {
-    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = row.iter().map(|&v| ((v - max) / temp).exp()).collect();
-    let denom: f32 = exps.iter().sum();
-    exps.into_iter().map(|e| e / denom).collect()
+/// Staged-route slab forward: `rows` holds `live.len()` layer-1 mask
+/// suffixes, all resuming from the same boundary-0 activation `a1`.
+/// Computes `z2` once, then per live hypothesis: mask-act + output affine.
+fn forward_tail_multi(
+    layout: &Layout,
+    poly: bool,
+    p: &[f32],
+    rows: &[f32],
+    a1: &[f32],
+    bsz: usize,
+    live: &[bool],
+) -> Vec<Option<Vec<f32>>> {
+    let [_w1, _b1, w2, b2, w3, b3] = layout.split(p);
+    let z2 = kernels::gemm_bias(a1, w2, b2, bsz, layout.h1, layout.h2);
+    let h2 = layout.h2;
+    let mut a2 = Vec::new();
+    let mut out = Vec::with_capacity(live.len());
+    for (h, &alive) in live.iter().enumerate() {
+        if !alive {
+            out.push(None);
+            continue;
+        }
+        kernels::mask_act_into(&z2, &rows[h * h2..(h + 1) * h2], bsz, h2, poly, &mut a2);
+        out.push(Some(kernels::gemm_bias(&a2, w3, b3, bsz, h2, layout.k)));
+    }
+    out
+}
+
+/// Apply the one shared scoring epilogue to each live hypothesis' logits.
+fn score_multi(logits: &[Option<Vec<f32>>], y: &[i32], k: usize) -> Vec<Option<(f32, f32)>> {
+    logits
+        .iter()
+        .map(|l| {
+            l.as_ref().map(|v| {
+                let (loss, correct) = kernels::softmax_ce_batch(v, y, k, None);
+                (loss, correct as f32)
+            })
+        })
+        .collect()
 }
 
 /// Backprop from `dlogits` to the full parameter gradient; also returns the
@@ -789,102 +972,19 @@ fn backward(
     {
         let [gw1, gb1, gw2, gb2, gw3, gb3] = layout.split_mut(&mut grad);
         // Output layer.
-        matgrad(&f.a2, dlogits, gw3, gb3, bsz, layout.h2, layout.k);
-        let da2 = dinput(dlogits, w3, bsz, layout.h2, layout.k);
+        kernels::matgrad(&f.a2, dlogits, gw3, gb3, bsz, layout.h2, layout.k);
+        let da2 = kernels::dinput(dlogits, w3, bsz, layout.h2, layout.k);
         // Hidden layer 2.
-        let (dm2, dz2) = dact(&f.z2, m2, &da2, bsz, layout.h2, poly);
+        let (dm2, dz2) = kernels::dact(&f.z2, m2, &da2, bsz, layout.h2, poly);
         dmask[layout.h1..].copy_from_slice(&dm2);
-        matgrad(&f.a1, &dz2, gw2, gb2, bsz, layout.h1, layout.h2);
-        let da1 = dinput(&dz2, w2, bsz, layout.h1, layout.h2);
+        kernels::matgrad(&f.a1, &dz2, gw2, gb2, bsz, layout.h1, layout.h2);
+        let da1 = kernels::dinput(&dz2, w2, bsz, layout.h1, layout.h2);
         // Hidden layer 1.
-        let (dm1, dz1) = dact(&f.z1, m1, &da1, bsz, layout.h1, poly);
+        let (dm1, dz1) = kernels::dact(&f.z1, m1, &da1, bsz, layout.h1, poly);
         dmask[..layout.h1].copy_from_slice(&dm1);
-        matgrad(x, &dz1, gw1, gb1, bsz, layout.d_in, layout.h1);
+        kernels::matgrad(x, &dz1, gw1, gb1, bsz, layout.d_in, layout.h1);
     }
     (grad, dmask)
-}
-
-/// Accumulate `dw = x^T dz` and `db = colsum(dz)`.
-#[allow(clippy::too_many_arguments)]
-fn matgrad(
-    x: &[f32],
-    dz: &[f32],
-    dw: &mut [f32],
-    db: &mut [f32],
-    bsz: usize,
-    d_in: usize,
-    d_out: usize,
-) {
-    for bi in 0..bsz {
-        let xr = &x[bi * d_in..(bi + 1) * d_in];
-        let dzr = &dz[bi * d_out..(bi + 1) * d_out];
-        for (j, &dv) in dzr.iter().enumerate() {
-            db[j] += dv;
-        }
-        for (i, &xv) in xr.iter().enumerate() {
-            if xv != 0.0 {
-                let dwr = &mut dw[i * d_out..(i + 1) * d_out];
-                for (dwj, &dv) in dwr.iter_mut().zip(dzr) {
-                    *dwj += xv * dv;
-                }
-            }
-        }
-    }
-}
-
-/// `dx = dz @ w^T`.
-fn dinput(dz: &[f32], w: &[f32], bsz: usize, d_in: usize, d_out: usize) -> Vec<f32> {
-    let mut dx = vec![0.0f32; bsz * d_in];
-    for bi in 0..bsz {
-        let dzr = &dz[bi * d_out..(bi + 1) * d_out];
-        let dxr = &mut dx[bi * d_in..(bi + 1) * d_in];
-        for (i, dxi) in dxr.iter_mut().enumerate() {
-            let wr = &w[i * d_out..(i + 1) * d_out];
-            let mut acc = 0.0f32;
-            for (&dv, &wv) in dzr.iter().zip(wr) {
-                acc += dv * wv;
-            }
-            *dxi = acc;
-        }
-    }
-    dx
-}
-
-/// Backprop through the masked activation: returns (`dL/dmask` per unit,
-/// `dL/dz`).
-fn dact(
-    z: &[f32],
-    mask: &[f32],
-    da: &[f32],
-    bsz: usize,
-    d: usize,
-    poly: bool,
-) -> (Vec<f32>, Vec<f32>) {
-    let mut dmask = vec![0.0f32; d];
-    let mut dz = vec![0.0f32; z.len()];
-    for bi in 0..bsz {
-        for j in 0..d {
-            let idx = bi * d + j;
-            let zv = z[idx];
-            let m = mask[j];
-            let relu_grad = if zv > 0.0 { 1.0 } else { 0.0 };
-            dz[idx] = da[idx] * (m * relu_grad + (1.0 - m) * g_prime(zv, poly));
-            dmask[j] += da[idx] * (zv.max(0.0) - g(zv, poly));
-        }
-    }
-    (dmask, dz)
-}
-
-/// SGD with momentum: `mom = mu*mom + g; p -= lr*mom`.
-fn sgd_momentum(p: &[f32], mom: &[f32], grad: &[f32], lr: f32) -> (Vec<f32>, Vec<f32>) {
-    let mut new_p = Vec::with_capacity(p.len());
-    let mut new_mom = Vec::with_capacity(mom.len());
-    for i in 0..p.len() {
-        let m = MOMENTUM * mom[i] + grad[i];
-        new_mom.push(m);
-        new_p.push(p[i] - lr * m);
-    }
-    (new_p, new_mom)
 }
 
 #[cfg(test)]
@@ -1173,6 +1273,130 @@ mod tests {
         assert!(be.forward_prefix("tiny", 1, &pb, &mb, &xb).is_err());
         assert!(be.forward_from("tiny", 1, &acts, &pb, &sb).is_err());
         assert!(be.forward_from("tiny", 0, &acts, &pb, &mb).is_err(), "full mask is not a suffix");
+    }
+
+    #[test]
+    fn batched_multi_matches_single_bitwise() {
+        let be = tiny_backend();
+        let info = be.model("tiny").unwrap().clone();
+        let seed = TensorI32::scalar(11);
+        let p = host_call(&be, "init", &[HostArg::I32(&seed)]).remove(0);
+        let mut x = Tensor::zeros(vec![4, 1, 2, 2]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 5 % 9) as f32 - 4.0) / 4.0;
+        }
+        let y = TensorI32::new(vec![4], vec![2, 0, 1, 2]);
+        let pb = be.upload_f32(&p.data, &p.shape).unwrap();
+        let xb = be.upload_f32(&x.data, &x.shape).unwrap();
+        let yb = be.upload_i32(&y.data, &y.shape).unwrap();
+        assert_eq!(be.multi_width("tiny"), MULTI_WIDTH);
+        assert_eq!(be.multi_width("no_such_model"), 1);
+
+        // Three full-mask hypotheses (middle one dead) differing in both
+        // layers, plus the all-ones base.
+        let h1 = info.mask_layers[0].size;
+        let mut masks: Vec<Vec<f32>> = vec![vec![1.0; info.mask_size]; 3];
+        masks[0][2] = 0.0;
+        masks[1][h1] = 0.0;
+        masks[2][1] = 0.0;
+        masks[2][h1 + 3] = 0.0;
+        let flat: Vec<f32> = masks.iter().flatten().copied().collect();
+        let slab = MaskSlab {
+            buf: be.upload_f32(&flat, &[3, info.mask_size]).unwrap(),
+            n: 3,
+            width: info.mask_size,
+        };
+        let live = [true, false, true];
+        let multi = be.eval_batch_multi("tiny", &pb, &slab, &xb, &yb, &live).unwrap();
+        let fwd_multi = be.forward_multi("tiny", &pb, &slab, &xb, &live).unwrap();
+        assert!(multi[1].is_none() && fwd_multi[1].is_none(), "dead hypothesis must be skipped");
+        for h in [0usize, 2] {
+            let mb = be.upload_f32(&masks[h], &[info.mask_size]).unwrap();
+            let single = be.call_b("tiny", "eval_batch", &[&pb, &mb, &xb, &yb]).unwrap();
+            let (loss, correct) = multi[h].unwrap();
+            assert_eq!(loss, single[0].item(), "hyp {h} loss");
+            assert_eq!(correct, single[1].item(), "hyp {h} correct");
+            let single_f = be.call_b("tiny", "forward", &[&pb, &mb, &xb]).unwrap();
+            assert_eq!(fwd_multi[h].as_ref().unwrap().data, single_f[0].data, "hyp {h} logits");
+        }
+
+        // Staged route: suffix slab resuming from the base-mask prefix.
+        let base = vec![1.0f32; info.mask_size];
+        let mb = be.upload_f32(&base, &[base.len()]).unwrap();
+        let acts = be.forward_prefix("tiny", 0, &pb, &mb, &xb).unwrap();
+        let h2 = info.mask_size - h1;
+        let mut sufs: Vec<Vec<f32>> = vec![vec![1.0; h2]; 2];
+        sufs[0][0] = 0.0;
+        sufs[1][3] = 0.0;
+        let sflat: Vec<f32> = sufs.iter().flatten().copied().collect();
+        let sslab = MaskSlab {
+            buf: be.upload_f32(&sflat, &[2, h2]).unwrap(),
+            n: 2,
+            width: h2,
+        };
+        let slive = [true, true];
+        let inc = be
+            .eval_from_multi("tiny", 0, &acts, &pb, &sslab, &yb, &slive)
+            .unwrap();
+        let inc_f = be
+            .forward_from_multi("tiny", 0, &acts, &pb, &sslab, &slive)
+            .unwrap();
+        for h in 0..2 {
+            let sb = be.upload_f32(&sufs[h], &[h2]).unwrap();
+            let single = be.eval_from("tiny", 0, &acts, &pb, &sb, &yb).unwrap();
+            let (loss, correct) = inc[h].unwrap();
+            assert_eq!(loss, single[0].item(), "suffix hyp {h} loss");
+            assert_eq!(correct, single[1].item(), "suffix hyp {h} correct");
+            let single_f = be.forward_from("tiny", 0, &acts, &pb, &sb).unwrap();
+            assert_eq!(inc_f[h].as_ref().unwrap().data, single_f.data, "suffix hyp {h} logits");
+        }
+
+        // Multi calls are recorded per entry point.
+        let stats = be.stats();
+        for k in [
+            "tiny:eval_batch_multi",
+            "tiny:forward_multi",
+            "tiny:eval_from_multi",
+            "tiny:forward_from_multi",
+        ] {
+            assert!(stats.contains_key(k), "missing stat {k}");
+        }
+    }
+
+    #[test]
+    fn batched_multi_rejects_bad_slabs() {
+        let be = tiny_backend();
+        let info = be.model("tiny").unwrap().clone();
+        let seed = TensorI32::scalar(13);
+        let p = host_call(&be, "init", &[HostArg::I32(&seed)]).remove(0);
+        let pb = be.upload_f32(&p.data, &p.shape).unwrap();
+        let x = Tensor::zeros(vec![4, 1, 2, 2]);
+        let xb = be.upload_f32(&x.data, &x.shape).unwrap();
+        let yb = be.upload_i32(&[0, 1, 2, 0], &[4]).unwrap();
+        let mk_slab = |n: usize, width: usize| MaskSlab {
+            buf: be.upload_f32(&vec![1.0f32; n * width], &[n, width]).unwrap(),
+            n,
+            width,
+        };
+        // Wrong row width.
+        let bad = mk_slab(2, info.mask_size - 1);
+        assert!(be
+            .eval_batch_multi("tiny", &pb, &bad, &xb, &yb, &[true, true])
+            .is_err());
+        // live length mismatch.
+        let ok = mk_slab(2, info.mask_size);
+        assert!(be.eval_batch_multi("tiny", &pb, &ok, &xb, &yb, &[true]).is_err());
+        // Over the width limit.
+        let wide = mk_slab(MULTI_WIDTH + 1, info.mask_size);
+        let live = vec![true; MULTI_WIDTH + 1];
+        assert!(be.eval_batch_multi("tiny", &pb, &wide, &xb, &yb, &live).is_err());
+        // Staged slab must carry suffixes, not full masks.
+        let mb = be.upload_f32(&vec![1.0f32; info.mask_size], &[info.mask_size]).unwrap();
+        let acts = be.forward_prefix("tiny", 0, &pb, &mb, &xb).unwrap();
+        let full_rows = mk_slab(2, info.mask_size);
+        assert!(be
+            .eval_from_multi("tiny", 0, &acts, &pb, &full_rows, &yb, &[true, true])
+            .is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! trial loop re-sends only the trial mask). A `Session` is `Sync` — the
 //! parallel trial scan shares one across its worker pool.
 
-use super::backend::{Backend, DeviceBuf, HostArg};
+use super::backend::{Backend, DeviceBuf, HostArg, MaskSlab};
 use super::manifest::ModelInfo;
 use crate::model::ModelState;
 use crate::tensor::{Tensor, TensorI32};
@@ -151,6 +151,79 @@ impl<'e> Session<'e> {
             .backend
             .eval_from(&self.key, segment, acts, params, mask_suffix, y)?;
         Ok(StepOut { loss: outs[0].item(), correct: outs[1].item() })
+    }
+
+    /// Maximum hypothesis-slab width the backend accepts for this model
+    /// (1 = batched multi-hypothesis scoring unsupported; see
+    /// [`crate::runtime::backend::Backend::multi_width`]).
+    pub fn multi_width(&self) -> usize {
+        self.backend.multi_width(&self.key)
+    }
+
+    /// Score a slab of full dense-mask hypotheses on one cached batch:
+    /// per live hypothesis, bit-identical to [`Self::eval_batch_b`] on
+    /// that row (DESIGN.md §11).
+    pub fn eval_batch_multi_b(
+        &self,
+        params: &DeviceBuf,
+        masks: &MaskSlab,
+        x: &DeviceBuf,
+        y: &DeviceBuf,
+        live: &[bool],
+    ) -> Result<Vec<Option<StepOut>>> {
+        let outs = self
+            .backend
+            .eval_batch_multi(&self.key, params, masks, x, y, live)?;
+        Ok(outs
+            .into_iter()
+            .map(|o| o.map(|(loss, correct)| StepOut { loss, correct }))
+            .collect())
+    }
+
+    /// Forward a slab of full dense-mask hypotheses -> logits per live
+    /// hypothesis (exact rescoring of partial batches on the slab path).
+    pub fn forward_multi_b(
+        &self,
+        params: &DeviceBuf,
+        masks: &MaskSlab,
+        x: &DeviceBuf,
+        live: &[bool],
+    ) -> Result<Vec<Option<Tensor>>> {
+        self.backend.forward_multi(&self.key, params, masks, x, live)
+    }
+
+    /// Resume a slab of mask-suffix hypotheses from boundary `segment` ->
+    /// logits per live hypothesis.
+    pub fn forward_from_multi_b(
+        &self,
+        segment: usize,
+        acts: &DeviceBuf,
+        params: &DeviceBuf,
+        mask_suffixes: &MaskSlab,
+        live: &[bool],
+    ) -> Result<Vec<Option<Tensor>>> {
+        self.backend
+            .forward_from_multi(&self.key, segment, acts, params, mask_suffixes, live)
+    }
+
+    /// Resume + score a slab of mask-suffix hypotheses from boundary
+    /// `segment` (the slab twin of [`Self::eval_from_b`]).
+    pub fn eval_from_multi_b(
+        &self,
+        segment: usize,
+        acts: &DeviceBuf,
+        params: &DeviceBuf,
+        mask_suffixes: &MaskSlab,
+        y: &DeviceBuf,
+        live: &[bool],
+    ) -> Result<Vec<Option<StepOut>>> {
+        let outs = self
+            .backend
+            .eval_from_multi(&self.key, segment, acts, params, mask_suffixes, y, live)?;
+        Ok(outs
+            .into_iter()
+            .map(|o| o.map(|(loss, correct)| StepOut { loss, correct }))
+            .collect())
     }
 
     /// Upload a flat f32 slice as a device buffer.

@@ -1,16 +1,19 @@
-//! Staged execution (prefix-activation reuse) — the incremental-vs-full
-//! determinism contract, end-to-end on the reference backend (DESIGN.md §8).
+//! Staged execution (prefix-activation reuse) and batched multi-trial
+//! scoring — the incremental-vs-full determinism contract, end-to-end on
+//! the reference backend (DESIGN.md §8, §11).
 //!
 //! The acceptance bar: the same BCD configuration run with the prefix
 //! cache disabled (`bcd.cache_mb = 0`, every trial a full forward) and
 //! enabled (`> 0`, staged forwards where the delta allows), across worker
-//! counts, must produce identical `ScanOutcome`s, `IterRecord`s, and
-//! run-manifest fingerprints. Debug builds additionally assert-check every
-//! staged batch against a full forward inside the evaluator itself.
+//! counts AND hypothesis-slab widths (`bcd.trial_batch`), must produce
+//! identical `ScanOutcome`s, `IterRecord`s, and run-manifest fingerprints.
+//! Debug builds additionally check every staged/batched batch against a
+//! full forward inside the evaluator itself (release builds do the same
+//! under `bcd.verify_staged`).
 
 use cdnl::config::{BcdConfig, Experiment, Granularity};
 use cdnl::coordinator::bcd::run_bcd;
-use cdnl::coordinator::eval::{Evaluator, TrialEval};
+use cdnl::coordinator::eval::{EvalOpts, Evaluator, TrialEval};
 use cdnl::coordinator::trials::{scan_trials, BlockSampler, ScanOutcome};
 use cdnl::data::{synth, Dataset};
 use cdnl::model::MaskDelta;
@@ -34,11 +37,32 @@ fn small_synth10() -> Dataset {
 }
 
 fn scan_with(cache_mb: usize, workers: usize, drc: usize, rt: usize, adt: f64) -> ScanOutcome {
+    scan_with_batch(cache_mb, workers, 1, drc, rt, adt)
+}
+
+fn scan_with_batch(
+    cache_mb: usize,
+    workers: usize,
+    trial_batch: usize,
+    drc: usize,
+    rt: usize,
+    adt: f64,
+) -> ScanOutcome {
     let be = backend();
     let sess = Session::new(&be, MODEL).unwrap();
     let ds = small_synth10();
     let st = sess.init_state(42).unwrap();
-    let ev = Evaluator::with_cache(&sess, &ds, 2, cache_mb).unwrap();
+    let ev = Evaluator::with_opts(
+        &sess,
+        &ds,
+        2,
+        EvalOpts {
+            cache_bytes: cache_mb * (1 << 20),
+            trial_batch,
+            verify_staged: false,
+        },
+    )
+    .unwrap();
     let params = ev.upload_params(&st.params).unwrap();
     let base = ev.accuracy(&params, st.mask.dense()).unwrap();
     let sampler = BlockSampler::new(Granularity::Pixel, sess.info());
@@ -66,6 +90,31 @@ fn scan_outcome_identical_with_and_without_cache() {
 }
 
 #[test]
+fn scan_outcome_identical_across_trial_batch_widths() {
+    // The tentpole contract of DESIGN.md §11: the hypothesis-slab width is
+    // pure throughput. The grid covers remainder slabs (rt = 10 does not
+    // divide by 4, and 32 exceeds the whole hypothesis set), early accepts
+    // landing mid-slab (adt = 1000 accepts the first scored trial), bound
+    // cuts inside a slab (adt = 0.5 keeps a live floor), and the staged /
+    // full route split at each cache setting.
+    for &(drc, rt, adt) in &[(1usize, 10usize, -1000.0f64), (4, 8, 0.5), (2, 10, 1000.0)] {
+        let reference = scan_with_batch(0, 1, 1, drc, rt, adt);
+        for &tb in &[1usize, 4, 32] {
+            for &cache in &[0usize, 16] {
+                for &w in &[1usize, 4] {
+                    let out = scan_with_batch(cache, w, tb, drc, rt, adt);
+                    assert_eq!(
+                        reference, out,
+                        "scan diverged at trial_batch={tb} cache={cache} workers={w} \
+                         drc={drc} adt={adt}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn bcd_bit_identical_across_cache_and_workers() {
     let be = backend();
     let sess = Session::new(&be, MODEL).unwrap();
@@ -73,7 +122,7 @@ fn bcd_bit_identical_across_cache_and_workers() {
     let total = sess.init_state(1).unwrap().budget();
     let target = total - 60;
 
-    let run = |cache_mb: usize, workers: usize| {
+    let run = |cache_mb: usize, workers: usize, trial_batch: usize| {
         let mut st = sess.init_state(1).unwrap();
         let cfg = BcdConfig {
             drc: 12, // small DRC: many hypotheses stay inside mask layer 1
@@ -85,23 +134,31 @@ fn bcd_bit_identical_across_cache_and_workers() {
             seed: 7,
             workers,
             cache_mb,
+            trial_batch,
             ..Default::default()
         };
         let out = run_bcd(&sess, &mut st, &ds, target, &cfg, 0).unwrap();
         (st, out)
     };
-    // Ground truth: cache disabled, sequential scan.
-    let (st0, out0) = run(0, 1);
-    for &(cache, workers) in &[(16usize, 1usize), (0, 4), (16, 4)] {
-        let (st, out) = run(cache, workers);
+    // Ground truth: cache disabled, sequential scan, slab width 1.
+    let (st0, out0) = run(0, 1, 1);
+    for &(cache, workers, trial_batch) in &[
+        (16usize, 1usize, 1usize),
+        (0, 4, 1),
+        (16, 4, 1),
+        (16, 1, 4),
+        (16, 4, 32),
+        (0, 1, 8),
+    ] {
+        let (st, out) = run(cache, workers, trial_batch);
         assert_eq!(
             st0.mask.dense(),
             st.mask.dense(),
-            "mask diverged (cache={cache}, workers={workers})"
+            "mask diverged (cache={cache}, workers={workers}, trial_batch={trial_batch})"
         );
         assert_eq!(
             st0.params.data, st.params.data,
-            "params diverged (cache={cache}, workers={workers})"
+            "params diverged (cache={cache}, workers={workers}, trial_batch={trial_batch})"
         );
         assert_eq!(out0.iterations.len(), out.iterations.len());
         for (a, b) in out0.iterations.iter().zip(&out.iterations) {
@@ -125,14 +182,19 @@ fn run_manifest_fingerprint_ignores_cache_and_workers() {
     let mut a = Experiment::default();
     a.apply("bcd.cache_mb", "0").unwrap();
     a.apply("bcd.workers", "1").unwrap();
+    a.apply("bcd.trial_batch", "1").unwrap();
+    a.apply("bcd.verify_staged", "false").unwrap();
     let mut b = Experiment::default();
     b.apply("bcd.cache_mb", "128").unwrap();
     b.apply("bcd.workers", "4").unwrap();
+    b.apply("bcd.trial_batch", "32").unwrap();
+    b.apply("bcd.verify_staged", "true").unwrap();
     let ma = RunManifest::new("bcd", &a, "reference", 200, 100);
     let mb = RunManifest::new("bcd", &b, "reference", 200, 100);
     assert_eq!(
         ma.config_fingerprint, mb.config_fingerprint,
-        "cache_mb/workers are throughput knobs and must not shift run identity"
+        "cache_mb/workers/trial_batch/verify_staged are throughput knobs and \
+         must not shift run identity"
     );
     // A semantic knob still moves the fingerprint.
     let mut c = Experiment::default();
@@ -170,19 +232,47 @@ fn staged_partial_batch_and_direct_delta_scoring() {
     // (anywhere) falls back to full forwards. All must score identically.
     let l1 = sess.info().mask_layers[1].offset;
     let mut scratch = Vec::new();
-    for delta in [
+    let deltas = [
         MaskDelta::new(vec![l1, l1 + 3, l1 + 10]),
         MaskDelta::new(vec![l1 + 1]),
         MaskDelta::new(vec![0, 5]),
         MaskDelta::new(vec![l1 - 1, l1 + 1]),
-    ] {
+    ];
+    for delta in &deltas {
         let staged = ev
-            .eval_trial_delta(&params, &st.mask, &delta, 0.0, &mut scratch)
+            .eval_trial_delta(&params, &st.mask, delta, 0.0, &mut scratch)
             .unwrap();
         st.mask.hypothesis_into(delta.indices(), &mut scratch);
         let full = ev_full.eval_trial(&params, &scratch, 0.0).unwrap();
         assert_eq!(staged, full, "delta {:?}", delta.indices());
     }
+
+    // The batched slab path must route the same mixed delta set (2 staged +
+    // 2 full hypotheses -> one slab per route) through the padded-tail
+    // rescoring with identical results, with verification on.
+    let ev_b = Evaluator::with_opts(
+        &sess,
+        &ds,
+        usize::MAX,
+        EvalOpts { cache_bytes: 16 << 20, trial_batch: 4, verify_staged: true },
+    )
+    .unwrap();
+    let params_b = ev_b.upload_params(&st.params).unwrap();
+    ev_b.begin_iteration(&st.mask).unwrap();
+    let slab = ev_b
+        .eval_trial_slab(&params_b, &st.mask, &deltas, 0.0, &mut scratch)
+        .unwrap();
+    for (delta, got) in deltas.iter().zip(&slab) {
+        st.mask.hypothesis_into(delta.indices(), &mut scratch);
+        let full = ev_full.eval_trial(&params_b, &scratch, 0.0).unwrap();
+        assert_eq!(*got, full, "slab result for delta {:?}", delta.indices());
+    }
+    let (slabs, staged_trials, full_trials, _, _) = ev_b.batch_counters();
+    assert_eq!(
+        (slabs, staged_trials, full_trials),
+        (2, 2, 2),
+        "expected one staged slab of 2 and one full slab of 2"
+    );
     let (hits, misses, _) = ev.cache_counters();
     assert!(misses >= 2, "staged deltas must have populated the cache (misses={misses})");
     assert!(hits >= 2, "the second staged delta must hit the cache (hits={hits})");
