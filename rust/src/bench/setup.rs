@@ -18,12 +18,17 @@ use crate::runtime::Backend;
 use std::path::{Path, PathBuf};
 
 /// Paper Table 1 totals [#ReLUs] for scaling budgets to our backbones.
+///
+/// The ResNet-18 column covers the conv backbone (`resnet18`), its MLP
+/// stand-in (`mlp`) and the stand-in's deprecated `resnet` name — all
+/// three play the ResNet-18 role at a given image size; likewise the
+/// WRN-22-8 column (README "bench-to-paper map").
 pub fn paper_total(backbone: &str, image_size: usize) -> f64 {
     match (backbone, image_size) {
-        ("resnet", 16) => 570_000.0,
-        ("resnet", 32) => 1_966_000.0,
-        ("wrn", 16) => 1_359_000.0,
-        ("wrn", 32) => 5_439_000.0,
+        ("resnet" | "mlp" | "resnet18", 16) => 570_000.0,
+        ("resnet" | "mlp" | "resnet18", 32) => 1_966_000.0,
+        ("wrn" | "mlpw" | "wrn22", 16) => 1_359_000.0,
+        ("wrn" | "mlpw" | "wrn22", 32) => 5_439_000.0,
         _ => panic!("no paper total for {backbone}@{image_size}"),
     }
 }

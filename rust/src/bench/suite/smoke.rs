@@ -1,6 +1,6 @@
 //! Smoke tier: the CI gate benchmark (seconds, reference backend).
 //!
-//! Four case groups:
+//! Five case groups:
 //!
 //! 1. **Structural manifest contract** — per-model ReLU pool sizes,
 //!    parameter-vector lengths and mask-layer counts, plus the model count
@@ -27,6 +27,11 @@
 //!    results are also checked against the single-trial path here, with
 //!    `verify_staged` cross-checking every batched score against its own
 //!    full forward.
+//! 5. **Conv staged-execution contract** (DESIGN.md §12) — the smallest
+//!    conv topology (`resnet18_16x16_c10`): segment count, one scan
+//!    iteration (timing + evaluated stat), and the same slab grouping
+//!    arithmetic as group 4 driven across residual-block boundaries, so
+//!    the multi-segment staged route has its own exact `count` gate.
 
 use crate::bench::BenchCtx;
 use crate::coordinator::eval::{EvalOpts, Evaluator};
@@ -204,6 +209,73 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
     println!(
         "smoke batched: {slabs} slabs ({staged_trials} staged + {full_trials} full), \
          {multi_calls} multi calls, width sum {width_sum}"
+    );
+
+    // --- 5: conv staged-execution contract (DESIGN.md §12) -------------------
+    // The smallest conv topology: structural segment count, one small scan
+    // (timing + evaluated stat, like group 2), and group-4's slab grouping
+    // arithmetic across residual-block boundaries:
+    //   1 staged slab of 4 + 1 full slab of 4 + 1 mixed call split 2+2:
+    //   slabs = 1 + 1 + 2                           = 4
+    //   staged_trials = 4 + 2                       = 6
+    //   full_trials = 4 + 2                         = 6
+    //   multi_calls = 4 slabs x 2 batches           = 8
+    //   width_sum = (4 + 4 + 2 + 2) x 2 batches     = 24
+    let conv = Session::new(engine, "resnet18_16x16_c10")?;
+    let cinfo = conv.info().clone();
+    cx.count("conv_staged", "segments", engine.segments(&conv.key), "segments");
+    let cst = conv.init_state(1)?;
+    let ev_c = Evaluator::new(&conv, &train_ds, 2)?;
+    let cparams = ev_c.upload_params(&cst.params)?;
+    let cbase = ev_c.accuracy(&cparams, cst.mask.dense())?;
+    cx.stat("conv_staged", "base_acc", cbase, "%");
+    let csampler = BlockSampler::new(crate::config::Granularity::Pixel, conv.info());
+    let cdrc = (cinfo.mask_size / 20).max(1);
+    let mut crng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let cscan =
+        scan_trials(&ev_c, &cparams, &cst.mask, &csampler, cdrc, 6, -1e9, cbase, &mut crng, 1)?;
+    cx.time_ms("conv_staged", "trial_scan_x6", &[1000.0 * t0.elapsed().as_secs_f64()]);
+    cx.stat("conv_staged", "scan_evaluated", cscan.evaluated as f64, "trials");
+
+    let ev_cb = Evaluator::with_opts(
+        &conv,
+        &train_ds,
+        2,
+        EvalOpts { cache_bytes: 16 << 20, trial_batch: 4, verify_staged: true },
+    )?;
+    ensure!(ev_cb.slab_width() == 4, "conv model must accept slab width 4");
+    ensure!(ev_cb.num_batches() == 2, "conv count derivation assumes 2 eval batches");
+    ev_cb.begin_iteration(&cst.mask)?;
+    // Deep per-channel deltas (mask layer 9, past several block boundaries)
+    // route staged; layer-0 (stem) deltas force full forwards.
+    let deep = cinfo.mask_layers[9].offset;
+    let cstaged: Vec<MaskDelta> = (0..4).map(|j| MaskDelta::new(vec![deep + j])).collect();
+    let cfull: Vec<MaskDelta> = (0..4).map(|j| MaskDelta::new(vec![j])).collect();
+    let cmixed: Vec<MaskDelta> =
+        [deep + 4, deep + 5, 4, 5].map(|i| MaskDelta::new(vec![i])).into();
+    for slab in [&cstaged[..], &cfull[..], &cmixed[..]] {
+        let evals = ev_cb.eval_trial_slab(&cparams, &cst.mask, slab, 0.0, &mut scratch)?;
+        for (d, got) in slab.iter().zip(&evals) {
+            let single = ev_cb.eval_trial_delta(&cparams, &cst.mask, d, 0.0, &mut scratch)?;
+            ensure!(
+                *got == single,
+                "conv slab result diverged from single-trial path for delta {:?}",
+                d.indices()
+            );
+        }
+    }
+    let (cslabs, cstaged_n, cfull_n, cmulti, cwidth) = ev_cb.batch_counters();
+    cx.count("conv_staged", "slabs", cslabs as usize, "slabs");
+    cx.count("conv_staged", "staged_trials", cstaged_n as usize, "trials");
+    cx.count("conv_staged", "full_trials", cfull_n as usize, "trials");
+    cx.count("conv_staged", "multi_calls", cmulti as usize, "calls");
+    cx.count("conv_staged", "width_sum", cwidth as usize, "hyps");
+    ev_cb.flush_cache_stats();
+    println!(
+        "smoke conv: {} segments, base acc {cbase:.2}%, {cslabs} slabs \
+         ({cstaged_n} staged + {cfull_n} full)",
+        engine.segments(&conv.key)
     );
     Ok(())
 }

@@ -47,15 +47,22 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
     )?;
 
     // Shape criteria (ensure!, not assert!: a violation is a bench failure
-    // reported through the CLI, not a process abort).
-    let g = |k: &str| engine.manifest().models[k].mask_size as f64;
-    ensure!(g("wrn_16x16_c10") > g("resnet_16x16_c10"), "wider net must have more ReLUs");
-    let r_ratio = g("resnet_32x32_c20") / g("resnet_16x16_c20");
-    let w_ratio = g("wrn_32x32_c20") / g("wrn_16x16_c20");
-    ensure!((3.0..=4.1).contains(&r_ratio), "resnet image-size scaling {r_ratio}");
-    ensure!((3.0..=4.1).contains(&w_ratio), "wrn image-size scaling {w_ratio}");
+    // reported through the CLI, not a process abort). `engine.model` (not
+    // raw manifest indexing) so the deprecated `resnet_*`/`wrn_*` aliases
+    // keep resolving to the renamed MLP stand-ins.
+    let g = |k: &str| -> Result<f64> { Ok(engine.model(k)?.mask_size as f64) };
+    ensure!(g("wrn_16x16_c10")? > g("resnet_16x16_c10")?, "wider net must have more ReLUs");
+    let r_ratio = g("resnet_32x32_c20")? / g("resnet_16x16_c20")?;
+    let w_ratio = g("wrn_32x32_c20")? / g("wrn_16x16_c20")?;
+    ensure!((3.0..=4.1).contains(&r_ratio), "mlp image-size scaling {r_ratio}");
+    ensure!((3.0..=4.1).contains(&w_ratio), "mlpw image-size scaling {w_ratio}");
     cx.stat("scaling", "resnet_size_ratio", r_ratio, "x");
     cx.stat("scaling", "wrn_size_ratio", w_ratio, "x");
+    // The conv topologies mask per *channel* (DESIGN.md §12), so their ReLU
+    // pool is image-size invariant — the opposite shape from the pixel-pool
+    // stand-ins, pinned here so the distinction can't silently regress.
+    let c_ratio = g("resnet18_32x32_c20")? / g("resnet18_16x16_c20")?;
+    ensure!(c_ratio == 1.0, "per-channel conv pool must not scale with image size: {c_ratio}");
     println!("\nshape criteria OK: width ↑, image-size scaling {r_ratio:.2}x / {w_ratio:.2}x (paper: 3.4x-4.0x)");
     Ok(())
 }

@@ -20,9 +20,11 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
         ("synthtiny", &[59.1e3, 99.6e3, 150e3, 200e3], 0),
     ];
     for (dataset, paper_budgets, quick_n) in grids {
-        let key = setup::experiment(dataset, "wrn", false).model_key();
-        let total = engine.manifest().models[&key].mask_size;
-        let size = engine.manifest().models[&key].image_size;
+        // Alias-resolving lookup: "wrn" model keys are deprecated aliases
+        // of the renamed mlpw_* stand-ins (DESIGN.md §12).
+        let info = engine.model(&setup::experiment(dataset, "wrn", false).model_key())?;
+        let total = info.mask_size;
+        let size = info.image_size;
         let budgets: Vec<usize> = setup::grid(paper_budgets, *quick_n)
             .iter()
             .map(|&b| setup::scale_budget(b, total, "wrn", size).max(50))

@@ -19,9 +19,11 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
         ("synthtiny", &[200e3, 250e3, 488.8e3], 1),
     ];
     for (dataset, paper_budgets, quick_n) in grids {
-        let key = setup::experiment(dataset, "resnet", false).model_key();
-        let total = engine.manifest().models[&key].mask_size;
-        let size = engine.manifest().models[&key].image_size;
+        // Alias-resolving lookup: "resnet" model keys are deprecated
+        // aliases of the renamed mlp_* stand-ins (DESIGN.md §12).
+        let info = engine.model(&setup::experiment(dataset, "resnet", false).model_key())?;
+        let total = info.mask_size;
+        let size = info.image_size;
         let budgets: Vec<usize> = setup::grid(paper_budgets, *quick_n)
             .iter()
             .map(|&b| setup::scale_budget(b, total, "resnet", size))

@@ -279,6 +279,28 @@ impl Default for DeepReduceConfig {
     }
 }
 
+/// Sizing of the reference backend's conv/residual topologies
+/// (`resnet18_*` / `wrn22_*` — DESIGN.md §12). Semantic: every field
+/// changes model numerics, so all participate in the fingerprint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Stem width. ResNet stage widths are `conv_base * [1,2,4,8]`; WRN
+    /// group widths are `conv_base/2 * conv_widen * [1,2,4]`.
+    pub conv_base: usize,
+    /// WRN widening factor (ignored by the ResNet family).
+    pub conv_widen: usize,
+    /// Residual blocks per stage/group.
+    pub conv_blocks: usize,
+    /// Batchnorm running-stat EMA rate used by the training steps.
+    pub bn_momentum: f32,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig { conv_base: 8, conv_widen: 4, conv_blocks: 2, bn_momentum: 0.1 }
+    }
+}
+
 /// Baseline (full-ReLU) training schedule.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
@@ -304,6 +326,7 @@ pub struct Experiment {
     pub backbone: String,
     /// AutoReP-style polynomial replacement instead of identity.
     pub poly: bool,
+    pub model: ModelConfig,
     pub train: TrainConfig,
     pub bcd: BcdConfig,
     pub snl: SnlConfig,
@@ -321,6 +344,7 @@ impl Default for Experiment {
             dataset: "synth10".into(),
             backbone: "resnet".into(),
             poly: false,
+            model: ModelConfig::default(),
             train: TrainConfig::default(),
             bcd: BcdConfig::default(),
             snl: SnlConfig::default(),
@@ -356,6 +380,10 @@ impl Experiment {
             "poly" => self.poly = p!(value),
             "out_dir" => self.out_dir = value.to_string(),
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "model.conv_base" => self.model.conv_base = p!(value),
+            "model.conv_widen" => self.model.conv_widen = p!(value),
+            "model.conv_blocks" => self.model.conv_blocks = p!(value),
+            "model.bn_momentum" => self.model.bn_momentum = p!(value),
             "train.steps" => self.train.steps = p!(value),
             "train.lr" => self.train.lr = p!(value),
             "train.warmup_steps" => self.train.warmup_steps = p!(value),
@@ -438,6 +466,10 @@ impl Experiment {
         put("poly", self.poly.to_string());
         put("out_dir", self.out_dir.clone());
         put("artifacts_dir", self.artifacts_dir.clone());
+        put("model.conv_base", self.model.conv_base.to_string());
+        put("model.conv_widen", self.model.conv_widen.to_string());
+        put("model.conv_blocks", self.model.conv_blocks.to_string());
+        put("model.bn_momentum", self.model.bn_momentum.to_string());
         put("train.steps", self.train.steps.to_string());
         put("train.lr", self.train.lr.to_string());
         put("train.warmup_steps", self.train.warmup_steps.to_string());
@@ -592,6 +624,12 @@ mod tests {
         e.dataset = "synth100".into();
         e.poly = true;
         assert_eq!(e.model_key(), "wrn_16x16_c20_poly");
+        // Conv backbones compose the same way (DESIGN.md §12).
+        e.backbone = "resnet18".into();
+        assert_eq!(e.model_key(), "resnet18_16x16_c20_poly");
+        e.backbone = "wrn22".into();
+        e.dataset = "synthtiny".into();
+        assert_eq!(e.model_key(), "wrn22_32x32_c20_poly");
     }
 
     #[test]
@@ -720,6 +758,19 @@ mod tests {
             ("deepreduce.finetune_steps", "11"),
             ("deepreduce.finetune_lr", "0.001"),
             ("deepreduce.seed", "99"),
+        ]);
+    }
+
+    #[test]
+    fn model_config_fingerprint_coverage() {
+        let d = ModelConfig::default();
+        assert_eq!((d.conv_base, d.conv_widen, d.conv_blocks), (8, 4, 2));
+        assert!((d.bn_momentum - 0.1).abs() < 1e-9);
+        assert_fingerprint_sensitive(&[
+            ("model.conv_base", "16"),
+            ("model.conv_widen", "2"),
+            ("model.conv_blocks", "3"),
+            ("model.bn_momentum", "0.05"),
         ]);
     }
 

@@ -71,6 +71,11 @@ struct PrefixCache {
     segments: usize,
     /// Size in bytes of one cached entry per boundary.
     entry_bytes: Vec<usize>,
+    /// Deepest mask layer folded into each boundary's activation
+    /// (`Backend::segment_layer`): boundary `b` serves a hypothesis whose
+    /// first dirty layer is `> boundary_layers[b]`, and its mask suffix
+    /// starts at layer `boundary_layers[b] + 1`.
+    boundary_layers: Vec<usize>,
     inner: Mutex<PrefixInner>,
 }
 
@@ -107,19 +112,25 @@ impl PrefixCache {
         if budget_bytes == 0 {
             return None;
         }
-        // A boundary past the second-to-last mask layer can never be
-        // resumed from (no dirty layer lies beyond it), so clamp whatever
-        // the backend reports to the layer table.
+        // A boundary whose deepest folded layer is at or past the last
+        // mask layer can never be resumed from (no dirty layer lies
+        // beyond it), so clamp whatever the backend reports to the layer
+        // table. `Backend::segment_layer` is strictly increasing, so
+        // trimming from the back is enough.
         let info = sess.info();
-        let segments = sess
-            .segments()
-            .min(info.mask_layers.len().saturating_sub(1));
+        let boundary_layers: Vec<usize> = (0..sess.segments())
+            .map(|b| sess.backend.segment_layer(&sess.key, b))
+            .collect();
+        let mut segments = boundary_layers.len();
+        while segments > 0 && boundary_layers[segments - 1] >= info.mask_layers.len().saturating_sub(1) {
+            segments -= 1;
+        }
         if segments == 0 {
             return None;
         }
         // Entry sizes come from the backend — it owns the handle layout
         // (`Backend::prefix_entry_bytes`; one f32 per mask-layer unit for
-        // the reference backend).
+        // the reference MLP, a full feature map for conv boundaries).
         let entry_bytes: Vec<usize> = (0..segments)
             .map(|b| sess.backend.prefix_entry_bytes(&sess.key, b, batch))
             .collect();
@@ -130,6 +141,7 @@ impl PrefixCache {
             budget_bytes,
             segments,
             entry_bytes,
+            boundary_layers,
             inner: Mutex::new(PrefixInner::default()),
         })
     }
@@ -511,7 +523,7 @@ impl<'e, 's> Evaluator<'e, 's> {
             return self.eval_trial(params, scratch, min_acc);
         };
         let info = self.sess.info();
-        let suffix_off = info.mask_layers[boundary + 1].offset;
+        let suffix_off = info.mask_layers[pc.boundary_layers[boundary] + 1].offset;
         let suffix_buf = self
             .sess
             .upload_f32(&scratch[suffix_off..], &[scratch.len() - suffix_off])?;
@@ -550,16 +562,17 @@ impl<'e, 's> Evaluator<'e, 's> {
     }
 
     /// The staged route for a delta whose first dirty layer is `dirty`:
-    /// resume from the deepest boundary before the first dirty layer whose
-    /// entry actually FITS the cache budget (boundary b = output of mask
-    /// layer b) — an uncacheable boundary would recompute its prefix per
-    /// trial, costing more than a full forward. A layer-0 delta, a disarmed
-    /// cache, or no affordable boundary means full forwards (`None`).
+    /// resume from the deepest boundary strictly before the first dirty
+    /// layer (`boundary_layers[b] < dirty`) whose entry actually FITS the
+    /// cache budget — an uncacheable boundary would recompute its prefix
+    /// per trial, costing more than a full forward. A layer-0 delta, a
+    /// disarmed cache, or no affordable boundary means full forwards
+    /// (`None`).
     fn staged_boundary(&self, dirty: usize) -> Option<(&PrefixCache, usize)> {
         match &self.prefix {
-            Some(pc) if dirty >= 1 && pc.has_base() => (0..dirty.min(pc.segments))
+            Some(pc) if dirty >= 1 && pc.has_base() => (0..pc.segments)
                 .rev()
-                .find(|&b| pc.entry_bytes[b] <= pc.budget_bytes)
+                .find(|&b| pc.boundary_layers[b] < dirty && pc.entry_bytes[b] <= pc.budget_bytes)
                 .map(|b| (pc, b)),
             _ => None,
         }
@@ -646,7 +659,10 @@ impl<'e, 's> Evaluator<'e, 's> {
         let n = deltas.len();
         let info = self.sess.info();
         let row_off = match boundary {
-            Some(b) => info.mask_layers[b + 1].offset,
+            Some(b) => {
+                let pc = self.prefix.as_ref().expect("staged group without cache");
+                info.mask_layers[pc.boundary_layers[b] + 1].offset
+            }
             None => 0,
         };
         let verify = self.verify_staged || cfg!(debug_assertions);

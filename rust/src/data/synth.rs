@@ -8,6 +8,11 @@
 //! carried by spatially-localized nonlinear features — exactly the regime
 //! where removing ReLUs hurts and where their placement matters (the paper's
 //! Figure 7 layer-distribution phenomenon).
+//!
+//! Layout contract: images are channel-planar NCHW — pixel `(c, y, x)` of an
+//! example lives at `c*s*s + y*s + x`. The conv reference backend (DESIGN.md
+//! §12) indexes stem inputs with exactly this formula, so the contract is
+//! pinned by a test below rather than implied.
 
 use super::Dataset;
 use crate::util::prng::Rng;
@@ -272,6 +277,30 @@ mod tests {
             .sum::<f64>()
             .sqrt();
         assert!(dist > 1.0, "class means too close: {dist}");
+    }
+
+    #[test]
+    fn nchw_channel_planar_layout() {
+        // With no sprites and no noise, channel `c` of every pixel is the
+        // affine map `base*(1 + 0.5*color[c]) + 0.3*color[c]` of a shared
+        // per-pixel base. Choosing color = [0, 1, -1] makes channel 0 equal
+        // to the base, so the relation across *plane offsets* c*s*s pins the
+        // NCHW layout: under HWC indexing these equalities would fail.
+        let sig = ClassSig {
+            gabor_theta: 0.7,
+            gabor_freq: 2.0,
+            gabor_amp: 0.8,
+            color: [0.0, 1.0, -1.0],
+            sprites: vec![],
+        };
+        let s = 8;
+        let mut out = vec![0.0f32; 3 * s * s];
+        render(&sig, s, &mut Rng::new(42), 0.0, &mut out);
+        for p in 0..s * s {
+            let base = out[p];
+            assert!((out[s * s + p] - (base * 1.5 + 0.3)).abs() < 1e-5);
+            assert!((out[2 * s * s + p] - (base * 0.5 - 0.3)).abs() < 1e-5);
+        }
     }
 
     #[test]

@@ -21,9 +21,12 @@
 //!   Two implementations ship: the PJRT engine over AOT HLO artifacts
 //!   (`--features pjrt`; JAX lowers `python/compile/model.py` once via
 //!   `make artifacts`, Python never runs on the request path) and the
-//!   pure-Rust [`runtime::RefBackend`] reference backend (a masked-
-//!   activation MLP with hand-written autodiff) so the whole coordinator
-//!   runs — tests, CI, benches — with no artifacts or native deps.
+//!   pure-Rust [`runtime::RefBackend`] reference backend (masked-
+//!   activation MLPs plus ResNet18/WRN-22-style convolutional residual
+//!   topologies with per-channel masks, all hand-written autodiff pinned
+//!   by a finite-difference battery — DESIGN.md §12) so the whole
+//!   coordinator runs — tests, CI, benches — with no artifacts or native
+//!   deps.
 //! - **L1** — Pallas masked-activation kernels (`python/compile/kernels/`),
 //!   correctness-checked against a pure-jnp oracle (PJRT path only).
 //!
@@ -66,7 +69,7 @@ pub mod tensor;
 pub mod util;
 
 pub use config::Experiment;
-pub use runtime::{open_backend, Backend, RefBackend};
+pub use runtime::{open_backend, open_backend_with, Backend, RefBackend};
 
 #[cfg(feature = "pjrt")]
 pub use runtime::engine::Engine;

@@ -60,7 +60,7 @@ use cdnl::methods::registry::{self, BcdSummary, ChainSpec, Method, MethodOutcome
 use cdnl::model::ModelState;
 use cdnl::pipeline::Pipeline;
 use cdnl::runstore::{RunDir, RunResult, RunStore, COMPLETE, FAILED, RUNNING};
-use cdnl::runtime::{open_backend, Backend};
+use cdnl::runtime::{open_backend_with, Backend};
 use cdnl::util::cli::Args;
 use cdnl::util::{fmt_relu_count, logging};
 use std::path::{Path, PathBuf};
@@ -126,9 +126,10 @@ fn run() -> Result<()> {
         // Pure registry introspection; no backend needed.
         return cmd_methods(&args, &exp);
     }
-    let backend = open_backend(
+    let backend = open_backend_with(
         Path::new(&exp.artifacts_dir),
         args.get_or("backend", "auto"),
+        &exp.model,
     )?;
     let engine: &dyn Backend = backend.as_ref();
 
@@ -660,9 +661,10 @@ fn bench_run(args: &Args, exp: Experiment) -> Result<()> {
         } else {
             bail!("usage: cdnl bench run <name> | cdnl bench run --tier smoke|paper|perf");
         };
-    let backend = open_backend(
+    let backend = open_backend_with(
         Path::new(&exp.artifacts_dir),
         args.get_or("backend", "auto"),
+        &exp.model,
     )?;
     println!("backend: {}", backend.name());
     let report_dir = bench_report_dir(args);
@@ -990,7 +992,7 @@ fn runs_resume(store: &RunStore, id: &str, args: &Args) -> Result<()> {
         .get("backend")
         .unwrap_or(run.manifest.backend.as_str())
         .to_string();
-    let backend = open_backend(Path::new(&rexp.artifacts_dir), &backend_name)?;
+    let backend = open_backend_with(Path::new(&rexp.artifacts_dir), &backend_name, &rexp.model)?;
     let pl = Pipeline::new(backend.as_ref(), rexp)?;
 
     let t0 = std::time::Instant::now();

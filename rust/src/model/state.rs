@@ -174,6 +174,24 @@ mod tests {
     }
 
     #[test]
+    fn conv_model_roundtrip() {
+        // Checkpoints for the conv topologies (DESIGN.md §12) exercise the
+        // real manifest sizes (param vector includes BN running stats) and
+        // the per-channel mask layout.
+        use crate::runtime::{Backend, RefBackend};
+        let be = RefBackend::standard();
+        let info = be.model("resnet18_16x16_c10").unwrap().clone();
+        let mut st = ModelState::new(&info, Tensor::zeros(vec![info.param_size]));
+        st.mask.remove(487).unwrap(); // last per-channel mask slot
+        let path = std::env::temp_dir().join("cdnl_state_test/conv.cdnl");
+        st.save(&path).unwrap();
+        let back = ModelState::load(&path, &info).unwrap();
+        assert_eq!(back.params.len(), info.param_size);
+        assert_eq!(back.budget(), info.mask_size - 1);
+        assert!(!back.mask.is_present(487));
+    }
+
+    #[test]
     fn wrong_model_key_rejected() {
         let info = fake_info();
         let st = ModelState::new(&info, Tensor::zeros(vec![7]));

@@ -69,3 +69,39 @@ where
     let wall_secs = t0.elapsed().as_secs_f64();
     Ok((st, CacheInfo { path, hit: false, wall_secs }))
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Backend, RefBackend};
+
+    /// Deprecated model keys (`resnet_*`, `wrn_*`) alias to the renamed MLP
+    /// models (`mlp_*`, `mlpw_*`). The zoo keys checkpoints off `info.key`,
+    /// so a lookup through either name must land on the SAME cache file —
+    /// otherwise an alias-addressed run would retrain a model the canonical
+    /// name already cached.
+    #[test]
+    fn alias_and_canonical_keys_share_cache_path() {
+        let be = RefBackend::standard();
+        let via_alias = be.model("resnet_16x16_c10").unwrap().clone();
+        let canonical = be.model("mlp_16x16_c10").unwrap().clone();
+        assert_eq!(via_alias.key, "mlp_16x16_c10");
+        let dir = Path::new("/tmp/zoo");
+        assert_eq!(
+            cache_path(dir, &via_alias, "base"),
+            cache_path(dir, &canonical, "base"),
+        );
+        assert_eq!(
+            cache_path(dir, &canonical, "base"),
+            Path::new("/tmp/zoo/mlp_16x16_c10__base.cdnl")
+        );
+        // Distinct tags keep distinct checkpoints.
+        assert_ne!(cache_path(dir, &canonical, "base"), cache_path(dir, &canonical, "snl"));
+        // Conv models key the same way (no alias involved).
+        let conv = be.model("resnet18_16x16_c10").unwrap();
+        assert_eq!(
+            cache_path(dir, conv, "base"),
+            Path::new("/tmp/zoo/resnet18_16x16_c10__base.cdnl")
+        );
+    }
+}

@@ -130,10 +130,15 @@ pub trait Backend: Send + Sync {
     //
     // A backend that knows its model's layer structure can resume a forward
     // pass from a cached intermediate activation instead of re-running the
-    // whole network. Boundary `b` is the activation emitted by mask layer
-    // `b` (manifest `mask_layers` order); a hypothesis whose first dirty
-    // layer is `l >= 1` can resume from any boundary `<= l - 1`. The
-    // incremental results must be **bit-identical** to a full forward — the
+    // whole network. Boundary `b` caches an activation that has consumed
+    // mask layers `0..=segment_layer(b)` (manifest `mask_layers` order) and
+    // nothing after; a hypothesis whose first dirty layer is `l >= 1` can
+    // resume from any boundary with `segment_layer(b) < l`, feeding the
+    // mask suffix that starts at layer `segment_layer(b) + 1`. For the MLP
+    // reference `segment_layer(b) == b` (each boundary is mask layer `b`'s
+    // own output); conv topologies map boundaries to residual-block
+    // outputs, which fold in *two* mask layers per block. The incremental
+    // results must be **bit-identical** to a full forward — the
     // replay-merge determinism contract of the trial scan depends on it.
 
     /// Number of resumable segment boundaries for `model_key`. `0` (the
@@ -142,6 +147,15 @@ pub trait Backend: Send + Sync {
     /// engine takes, since an AOT HLO artifact is one opaque executable.
     fn segments(&self, _model_key: &str) -> usize {
         0
+    }
+
+    /// Deepest mask-layer index folded into boundary `segment`'s cached
+    /// activation (see the module section comment). Must be strictly
+    /// increasing in `segment`. The default — boundary `b` is mask layer
+    /// `b`'s output — matches the MLP reference layout; backends with
+    /// coarser resume points (conv residual blocks) override it.
+    fn segment_layer(&self, _model_key: &str, segment: usize) -> usize {
+        segment
     }
 
     /// Compute the boundary-`segment` activations of one batch under
@@ -294,13 +308,16 @@ pub trait Backend: Send + Sync {
     /// Size in bytes of one cached boundary-`segment` activation for a
     /// batch of `batch` examples — the evaluator's cache accounting for
     /// handles this backend returns from [`Backend::forward_prefix`]. The
-    /// default assumes one f32 per mask-layer unit (the reference layout);
-    /// a backend whose handles carry more (pre-activations, padding, wider
-    /// dtypes) must override so `bcd.cache_mb` keeps meaning bytes.
+    /// default assumes one f32 per unit of the boundary's mask layer
+    /// ([`Backend::segment_layer`]; the reference MLP layout); a backend
+    /// whose handles carry more (spatial feature maps, pre-activations,
+    /// padding, wider dtypes) must override so `bcd.cache_mb` keeps
+    /// meaning bytes.
     fn prefix_entry_bytes(&self, model_key: &str, segment: usize, batch: usize) -> usize {
+        let layer = self.segment_layer(model_key, segment);
         self.model(model_key)
             .ok()
-            .and_then(|m| m.mask_layers.get(segment))
+            .and_then(|m| m.mask_layers.get(layer))
             .map(|e| 4 * batch * e.size)
             .unwrap_or(0)
     }

@@ -1,0 +1,1046 @@
+//! Compiled conv/residual topologies for the reference backend
+//! (DESIGN.md §12).
+//!
+//! Ports the model specs in `python/compile/models/{resnet,wideresnet}.py`
+//! to the pure-Rust runtime: a [`ConvSpec`] names a family + shape knobs,
+//! [`ConvPlan::build`] compiles it into a flat parameter pack (conv weights
+//! OIHW, batchnorm as `[gamma, beta, running_mean, running_var]` rows, head
+//! GEMM), per-channel mask layers (one coordinate per feature-map channel —
+//! the paper's channel granularity), and the block-boundary resume points
+//! the staged trial path caches (§8).
+//!
+//! Two families:
+//!
+//! * [`Family::Resnet`] — post-activation ResNet-18-style: stem conv3x3 +
+//!   bn + act, four stages of residual blocks (`conv3x3 → bn → act →
+//!   conv3x3 → bn`, 1x1 conv + bn projection on shape change, act after
+//!   the add), GAP, linear head. With 2 blocks per stage this is the
+//!   paper's ResNet-18 layer count (17 masked activation layers).
+//! * [`Family::Wrn`] — pre-activation WideResNet-style: bare stem conv,
+//!   three groups of pre-act blocks (`bn → act → conv3x3 → bn → act →
+//!   conv3x3`, 1x1 projection of the *activated* input on shape change),
+//!   final bn + act, GAP, head (13 masked activation layers).
+//!
+//! Everything here routes through the deterministic kernels in
+//! [`super::kernels`]; scoring paths run batchnorm in eval mode (running
+//! stats — per-example independence is what makes staged resume and tail
+//! padding safe), training steps run it in train mode with hand-written
+//! backward and update the running stats after SGD.
+
+use super::kernels::{
+    add_into, bn_backward_train, bn_eval_into, bn_train_into, conv2d_same_dinput,
+    conv2d_same_dweight, conv2d_same_into, conv_out_dim, dact_channel, gap_back, gap_into,
+    gemm_bias_into, mask_act_channel_into, BnCache,
+};
+use super::manifest::PackEntry;
+use crate::util::prng::Rng;
+
+/// Init-stream namespace for conv params (distinct from every other seed
+/// stream in the repo; the MLP reference uses the same constant with its
+/// own draw order, so param vectors still differ).
+const INIT_SALT: u64 = 0x5EED_BACC_E17D_0001;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Resnet,
+    Wrn,
+}
+
+/// Shape recipe for one conv model variant.
+#[derive(Clone, Debug)]
+pub struct ConvSpec {
+    pub key: String,
+    pub family: Family,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub channels: usize,
+    pub poly: bool,
+    /// Stem width; ResNet stage widths are `base * [1,2,4,8]`, WRN group
+    /// widths are `base/2 * widen * [1,2,4]`.
+    pub base: usize,
+    /// WRN widening factor (ignored by ResNet).
+    pub widen: usize,
+    /// Residual blocks per stage/group.
+    pub blocks: usize,
+    /// Running-stat EMA rate used by the training steps.
+    pub bn_momentum: f32,
+}
+
+/// How one parameter-pack entry is initialized (aligned with
+/// `param_entries`; the RNG draws run in entry order, batchnorm and bias
+/// constants consume no draws).
+#[derive(Clone, Copy, Debug)]
+enum InitKind {
+    /// He-normal conv weight: `N(0, 2/fan_in)`.
+    He { fan_in: usize },
+    /// Batchnorm row `[gamma=1, beta=0, running_mean=0, running_var=1]`.
+    Bn,
+    /// Head weight: `N(0, 1/d_in)`.
+    Head { d_in: usize },
+    /// Zero (head bias).
+    Zero,
+}
+
+/// One compiled residual block: channel/spatial geometry plus offsets into
+/// the parameter pack and mask-layer indices.
+#[derive(Clone, Debug)]
+pub struct BlockPlan {
+    pub cin: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub side_in: usize,
+    pub side_out: usize,
+    /// Param offsets. ResNet order: conv1, bn1, conv2, bn2[, proj, bnp].
+    /// WRN order: bn1, conv1, bn2, conv2[, proj] (pre-act; proj has no bn).
+    pub conv1: usize,
+    pub bn1: usize,
+    pub conv2: usize,
+    pub bn2: usize,
+    pub proj: Option<usize>,
+    pub bnp: Option<usize>,
+    /// Mask-layer indices of the block's two activations.
+    pub act1_layer: usize,
+    pub act2_layer: usize,
+}
+
+/// A compiled conv topology: geometry, pack layout, boundaries.
+#[derive(Clone, Debug)]
+pub struct ConvPlan {
+    pub key: String,
+    pub family: Family,
+    pub num_classes: usize,
+    pub image_size: usize,
+    pub channels: usize,
+    pub poly: bool,
+    pub bn_momentum: f32,
+    pub stem_conv: usize,
+    pub stem_bn: Option<usize>,
+    pub stem_c: usize,
+    pub final_bn: Option<usize>,
+    pub head_w: usize,
+    pub head_b: usize,
+    /// Channels entering global average pooling.
+    pub feat_c: usize,
+    /// Spatial side at the pooling stage.
+    pub feat_side: usize,
+    pub blocks: Vec<BlockPlan>,
+    pub param_size: usize,
+    pub mask_size: usize,
+    pub mask_layers: Vec<PackEntry>,
+    pub param_entries: Vec<PackEntry>,
+    init_kinds: Vec<InitKind>,
+    /// `boundary_layers[b]` = deepest mask layer consumed by the cached
+    /// activation of resume boundary `b` (strictly increasing). A
+    /// hypothesis whose first dirty layer is `l` may resume from any
+    /// boundary with `boundary_layers[b] < l`.
+    pub boundary_layers: Vec<usize>,
+    /// Blocks already folded into boundary `b`'s cached activation
+    /// (resume runs `blocks[boundary_blocks[b]..]`).
+    pub boundary_blocks: Vec<usize>,
+    /// Floats per example in boundary `b`'s cached activation.
+    pub boundary_entry: Vec<usize>,
+}
+
+struct PackBuilder {
+    entries: Vec<PackEntry>,
+    kinds: Vec<InitKind>,
+    off: usize,
+}
+
+impl PackBuilder {
+    fn new() -> Self {
+        PackBuilder { entries: Vec::new(), kinds: Vec::new(), off: 0 }
+    }
+
+    fn push(&mut self, name: String, shape: Vec<usize>, kind: InitKind) -> usize {
+        let size: usize = shape.iter().product();
+        let off = self.off;
+        self.entries.push(PackEntry { name, shape, offset: off, size });
+        self.kinds.push(kind);
+        self.off += size;
+        off
+    }
+}
+
+fn bn4(params: &[f32], off: usize, c: usize) -> (&[f32], &[f32], &[f32], &[f32]) {
+    (
+        &params[off..off + c],
+        &params[off + c..off + 2 * c],
+        &params[off + 2 * c..off + 3 * c],
+        &params[off + 3 * c..off + 4 * c],
+    )
+}
+
+fn layer_slice<'a>(mask: &'a [f32], e: &PackEntry) -> &'a [f32] {
+    &mask[e.offset..e.offset + e.size]
+}
+
+impl ConvPlan {
+    pub fn build(spec: &ConvSpec) -> ConvPlan {
+        match spec.family {
+            Family::Resnet => {
+                assert!(spec.image_size % 8 == 0, "resnet downsamples 8x");
+            }
+            Family::Wrn => {
+                assert!(spec.image_size % 4 == 0, "wrn downsamples 4x");
+                assert!(spec.base % 2 == 0, "wrn widths are base/2 * widen * mult");
+            }
+        }
+        let mut pb = PackBuilder::new();
+        let mut mask_layers: Vec<PackEntry> = Vec::new();
+        let mut moff = 0usize;
+        let mut push_mask = |name: String, c: usize, moff: &mut usize| {
+            mask_layers.push(PackEntry { name, shape: vec![c], offset: *moff, size: c });
+            *moff += c;
+        };
+
+        let stem_c = spec.base;
+        let stem_conv = pb.push(
+            "stem.conv.w".into(),
+            vec![stem_c, spec.channels, 3, 3],
+            InitKind::He { fan_in: spec.channels * 9 },
+        );
+        let stem_bn = match spec.family {
+            Family::Resnet => {
+                let off = pb.push("stem.bn".into(), vec![4, stem_c], InitKind::Bn);
+                push_mask("stem.act".into(), stem_c, &mut moff);
+                Some(off)
+            }
+            Family::Wrn => None,
+        };
+
+        let (tag, mults): (&str, &[usize]) = match spec.family {
+            Family::Resnet => ("s", &[1, 2, 4, 8]),
+            Family::Wrn => ("g", &[1, 2, 4]),
+        };
+        let mut blocks = Vec::new();
+        let mut boundary_layers = Vec::new();
+        let mut boundary_blocks = Vec::new();
+        let mut boundary_entry = Vec::new();
+        if spec.family == Family::Resnet {
+            // Boundary 0: the stem activation (mask layer 0).
+            boundary_layers.push(0);
+            boundary_blocks.push(0);
+            boundary_entry.push(stem_c * spec.image_size * spec.image_size);
+        }
+        let mut cin = stem_c;
+        let mut side = spec.image_size;
+        let mut layer = usize::from(spec.family == Family::Resnet);
+        for (si, &mult) in mults.iter().enumerate() {
+            let cout = match spec.family {
+                Family::Resnet => spec.base * mult,
+                Family::Wrn => spec.base / 2 * spec.widen * mult,
+            };
+            for bi in 0..spec.blocks {
+                let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+                let side_in = side;
+                let side_out = conv_out_dim(side_in, stride);
+                let needs_proj = stride != 1 || cin != cout;
+                let n = |part: &str| format!("{tag}{si}.b{bi}.{part}");
+                let (conv1, bn1, conv2, bn2, proj, bnp) = match spec.family {
+                    Family::Resnet => {
+                        let conv1 = pb.push(n("conv1.w"), vec![cout, cin, 3, 3], InitKind::He { fan_in: cin * 9 });
+                        let bn1 = pb.push(n("bn1"), vec![4, cout], InitKind::Bn);
+                        let conv2 = pb.push(n("conv2.w"), vec![cout, cout, 3, 3], InitKind::He { fan_in: cout * 9 });
+                        let bn2 = pb.push(n("bn2"), vec![4, cout], InitKind::Bn);
+                        let (proj, bnp) = if needs_proj {
+                            (
+                                Some(pb.push(n("proj.w"), vec![cout, cin, 1, 1], InitKind::He { fan_in: cin })),
+                                Some(pb.push(n("bnp"), vec![4, cout], InitKind::Bn)),
+                            )
+                        } else {
+                            (None, None)
+                        };
+                        (conv1, bn1, conv2, bn2, proj, bnp)
+                    }
+                    Family::Wrn => {
+                        let bn1 = pb.push(n("bn1"), vec![4, cin], InitKind::Bn);
+                        let conv1 = pb.push(n("conv1.w"), vec![cout, cin, 3, 3], InitKind::He { fan_in: cin * 9 });
+                        let bn2 = pb.push(n("bn2"), vec![4, cout], InitKind::Bn);
+                        let conv2 = pb.push(n("conv2.w"), vec![cout, cout, 3, 3], InitKind::He { fan_in: cout * 9 });
+                        let proj = if needs_proj {
+                            Some(pb.push(n("proj.w"), vec![cout, cin, 1, 1], InitKind::He { fan_in: cin }))
+                        } else {
+                            None
+                        };
+                        (conv1, bn1, conv2, bn2, proj, None)
+                    }
+                };
+                let act1_c = match spec.family {
+                    Family::Resnet => cout,
+                    Family::Wrn => cin,
+                };
+                let act1_layer = layer;
+                push_mask(n("act1"), act1_c, &mut moff);
+                let act2_layer = layer + 1;
+                push_mask(n("act2"), cout, &mut moff);
+                layer += 2;
+                blocks.push(BlockPlan {
+                    cin,
+                    cout,
+                    stride,
+                    side_in,
+                    side_out,
+                    conv1,
+                    bn1,
+                    conv2,
+                    bn2,
+                    proj,
+                    bnp,
+                    act1_layer,
+                    act2_layer,
+                });
+                cin = cout;
+                side = side_out;
+            }
+        }
+        let feat_c = cin;
+        let feat_side = side;
+        // Block-output boundaries. ResNet: the block output *is* its act2
+        // layer, so the last block's output consumes the final mask layer
+        // and can never be resumed past — skip it. WRN: the final bn+act
+        // layer comes after the last block, so every block output is a
+        // usable boundary.
+        let usable = match spec.family {
+            Family::Resnet => blocks.len().saturating_sub(1),
+            Family::Wrn => blocks.len(),
+        };
+        for (i, bp) in blocks.iter().take(usable).enumerate() {
+            boundary_layers.push(bp.act2_layer);
+            boundary_blocks.push(i + 1);
+            boundary_entry.push(bp.cout * bp.side_out * bp.side_out);
+        }
+        let final_bn = match spec.family {
+            Family::Wrn => {
+                let off = pb.push("final.bn".into(), vec![4, feat_c], InitKind::Bn);
+                push_mask("final.act".into(), feat_c, &mut moff);
+                Some(off)
+            }
+            Family::Resnet => None,
+        };
+        let head_w = pb.push(
+            "head.w".into(),
+            vec![feat_c, spec.num_classes],
+            InitKind::Head { d_in: feat_c },
+        );
+        let head_b = pb.push("head.b".into(), vec![spec.num_classes], InitKind::Zero);
+
+        ConvPlan {
+            key: spec.key.clone(),
+            family: spec.family,
+            num_classes: spec.num_classes,
+            image_size: spec.image_size,
+            channels: spec.channels,
+            poly: spec.poly,
+            bn_momentum: spec.bn_momentum,
+            stem_conv,
+            stem_bn,
+            stem_c,
+            final_bn,
+            head_w,
+            head_b,
+            feat_c,
+            feat_side,
+            blocks,
+            param_size: pb.off,
+            mask_size: moff,
+            mask_layers,
+            param_entries: pb.entries,
+            init_kinds: pb.kinds,
+            boundary_layers,
+            boundary_blocks,
+            boundary_entry,
+        }
+    }
+
+    /// Number of staged resume boundaries (`Backend::segments`).
+    pub fn segment_count(&self) -> usize {
+        self.boundary_layers.len()
+    }
+
+    /// Deterministic parameter init: He-normal conv weights and a
+    /// `N(0, 1/d_in)` head drawn sequentially in pack order from a seed
+    /// stream salted with [`INIT_SALT`]; batchnorm rows and the head bias
+    /// are constants and consume no draws.
+    pub fn init_params(&self, seed: i32) -> Vec<f32> {
+        let mut rng = Rng::new((seed as u32 as u64) ^ INIT_SALT);
+        let mut p = Vec::with_capacity(self.param_size);
+        for (e, kind) in self.param_entries.iter().zip(&self.init_kinds) {
+            match *kind {
+                InitKind::He { fan_in } => {
+                    let std = (2.0 / fan_in as f32).sqrt();
+                    for _ in 0..e.size {
+                        p.push(rng.normal() * std);
+                    }
+                }
+                InitKind::Bn => {
+                    let c = e.size / 4;
+                    p.extend(std::iter::repeat(1.0).take(c)); // gamma
+                    p.extend(std::iter::repeat(0.0).take(c)); // beta
+                    p.extend(std::iter::repeat(0.0).take(c)); // running mean
+                    p.extend(std::iter::repeat(1.0).take(c)); // running var
+                }
+                InitKind::Head { d_in } => {
+                    let std = (1.0 / d_in as f32).sqrt();
+                    for _ in 0..e.size {
+                        p.push(rng.normal() * std);
+                    }
+                }
+                InitKind::Zero => p.extend(std::iter::repeat(0.0).take(e.size)),
+            }
+        }
+        debug_assert_eq!(p.len(), self.param_size);
+        p
+    }
+
+    // -- Eval-mode forward (every scoring path) -----------------------------
+    //
+    // Batchnorm uses running stats, so each example's output is independent
+    // of batch composition, and `forward_eval` / `forward_prefix` +
+    // `forward_from` call the exact same block functions in the same order —
+    // staged resume is bit-identical to the full forward by construction.
+
+    fn stem_eval(&self, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+        let s = self.image_size;
+        let hw = s * s;
+        let mut c0 = Vec::new();
+        let w = &params[self.stem_conv..self.stem_conv + self.stem_c * self.channels * 9];
+        conv2d_same_into(x, w, n, self.channels, s, s, self.stem_c, 3, 1, &mut c0);
+        match self.stem_bn {
+            Some(off) => {
+                let (g, b, rm, rv) = bn4(params, off, self.stem_c);
+                let mut z = Vec::new();
+                bn_eval_into(&c0, g, b, rm, rv, n, self.stem_c, hw, &mut z);
+                let m0 = layer_slice(mask, &self.mask_layers[0]);
+                let mut a = Vec::new();
+                mask_act_channel_into(&z, m0, n, self.stem_c, hw, self.poly, &mut a);
+                a
+            }
+            None => c0,
+        }
+    }
+
+    fn block_eval(&self, bp: &BlockPlan, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+        let (hw_in, hw_out) = (bp.side_in * bp.side_in, bp.side_out * bp.side_out);
+        let w1 = &params[bp.conv1..bp.conv1 + bp.cout * bp.cin * 9];
+        let w2 = &params[bp.conv2..bp.conv2 + bp.cout * bp.cout * 9];
+        let m1 = layer_slice(mask, &self.mask_layers[bp.act1_layer]);
+        let m2 = layer_slice(mask, &self.mask_layers[bp.act2_layer]);
+        match self.family {
+            Family::Resnet => {
+                let mut c1 = Vec::new();
+                conv2d_same_into(x, w1, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride, &mut c1);
+                let (g1, be1, rm1, rv1) = bn4(params, bp.bn1, bp.cout);
+                let mut z1 = Vec::new();
+                bn_eval_into(&c1, g1, be1, rm1, rv1, n, bp.cout, hw_out, &mut z1);
+                let mut a1 = Vec::new();
+                mask_act_channel_into(&z1, m1, n, bp.cout, hw_out, self.poly, &mut a1);
+                let mut c2 = Vec::new();
+                conv2d_same_into(&a1, w2, n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1, &mut c2);
+                let (g2, be2, rm2, rv2) = bn4(params, bp.bn2, bp.cout);
+                let mut sum = Vec::new();
+                bn_eval_into(&c2, g2, be2, rm2, rv2, n, bp.cout, hw_out, &mut sum);
+                let skip = match (bp.proj, bp.bnp) {
+                    (Some(pw), Some(pb)) => {
+                        let wp = &params[pw..pw + bp.cout * bp.cin];
+                        let mut cp = Vec::new();
+                        conv2d_same_into(x, wp, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride, &mut cp);
+                        let (gp, bep, rmp, rvp) = bn4(params, pb, bp.cout);
+                        let mut zp = Vec::new();
+                        bn_eval_into(&cp, gp, bep, rmp, rvp, n, bp.cout, hw_out, &mut zp);
+                        zp
+                    }
+                    _ => x.to_vec(),
+                };
+                add_into(&mut sum, &skip);
+                let mut out = Vec::new();
+                mask_act_channel_into(&sum, m2, n, bp.cout, hw_out, self.poly, &mut out);
+                out
+            }
+            Family::Wrn => {
+                let (g1, be1, rm1, rv1) = bn4(params, bp.bn1, bp.cin);
+                let mut z1 = Vec::new();
+                bn_eval_into(x, g1, be1, rm1, rv1, n, bp.cin, hw_in, &mut z1);
+                let mut y = Vec::new();
+                mask_act_channel_into(&z1, m1, n, bp.cin, hw_in, self.poly, &mut y);
+                let id = match bp.proj {
+                    Some(pw) => {
+                        let wp = &params[pw..pw + bp.cout * bp.cin];
+                        let mut cp = Vec::new();
+                        conv2d_same_into(&y, wp, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride, &mut cp);
+                        cp
+                    }
+                    None => x.to_vec(),
+                };
+                let mut c1 = Vec::new();
+                conv2d_same_into(&y, w1, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride, &mut c1);
+                let (g2, be2, rm2, rv2) = bn4(params, bp.bn2, bp.cout);
+                let mut z2 = Vec::new();
+                bn_eval_into(&c1, g2, be2, rm2, rv2, n, bp.cout, hw_out, &mut z2);
+                let mut h2 = Vec::new();
+                mask_act_channel_into(&z2, m2, n, bp.cout, hw_out, self.poly, &mut h2);
+                let mut out = Vec::new();
+                conv2d_same_into(&h2, w2, n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1, &mut out);
+                add_into(&mut out, &id);
+                out
+            }
+        }
+    }
+
+    /// Final bn/act (WRN), GAP, linear head -> logits `[n, k]`.
+    fn head_eval(&self, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+        let hw = self.feat_side * self.feat_side;
+        let pooled_in = match self.final_bn {
+            Some(off) => {
+                let (g, b, rm, rv) = bn4(params, off, self.feat_c);
+                let mut z = Vec::new();
+                bn_eval_into(x, g, b, rm, rv, n, self.feat_c, hw, &mut z);
+                let ml = layer_slice(mask, self.mask_layers.last().expect("wrn has layers"));
+                let mut a = Vec::new();
+                mask_act_channel_into(&z, ml, n, self.feat_c, hw, self.poly, &mut a);
+                a
+            }
+            None => x.to_vec(),
+        };
+        let mut feats = Vec::new();
+        gap_into(&pooled_in, n, self.feat_c, hw, &mut feats);
+        let wh = &params[self.head_w..self.head_w + self.feat_c * self.num_classes];
+        let bh = &params[self.head_b..self.head_b + self.num_classes];
+        let mut logits = Vec::new();
+        gemm_bias_into(&feats, wh, bh, n, self.feat_c, self.num_classes, &mut logits);
+        logits
+    }
+
+    /// Full eval-mode forward -> logits `[n, k]`.
+    pub fn forward_eval(&self, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+        let mut cur = self.stem_eval(params, mask, x, n);
+        for bp in &self.blocks {
+            cur = self.block_eval(bp, params, mask, &cur, n);
+        }
+        self.head_eval(params, mask, &cur, n)
+    }
+
+    /// Boundary-`segment` activations of the eval-mode forward (the tensor
+    /// the staged trial path caches).
+    pub fn forward_prefix(&self, segment: usize, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+        let mut cur = self.stem_eval(params, mask, x, n);
+        for bp in &self.blocks[..self.boundary_blocks[segment]] {
+            cur = self.block_eval(bp, params, mask, &cur, n);
+        }
+        cur
+    }
+
+    /// Mask offset where boundary `segment`'s suffix starts (the first
+    /// layer NOT folded into the cached activation).
+    pub fn suffix_offset(&self, segment: usize) -> usize {
+        self.mask_layers[self.boundary_layers[segment] + 1].offset
+    }
+
+    /// Resume from boundary `segment`: `mask_suffix` covers mask layers
+    /// after the boundary; the prefix positions of the reconstructed
+    /// full-size mask are zero-filled and never read, so this is
+    /// bit-identical to [`Self::forward_eval`] under the same full mask.
+    pub fn forward_from(&self, segment: usize, acts: &[f32], params: &[f32], mask_suffix: &[f32], n: usize) -> Vec<f32> {
+        let off = self.suffix_offset(segment);
+        let mut full = vec![0.0f32; self.mask_size];
+        full[off..].copy_from_slice(mask_suffix);
+        let mut cur = acts.to_vec();
+        for bp in &self.blocks[self.boundary_blocks[segment]..] {
+            cur = self.block_eval(bp, params, &full, &cur, n);
+        }
+        self.head_eval(params, &full, &cur, n)
+    }
+
+    // -- Train-mode forward/backward (train_step / snl_step / kd_step) ------
+
+    fn bn1_c(&self, bp: &BlockPlan) -> usize {
+        match self.family {
+            Family::Resnet => bp.cout,
+            Family::Wrn => bp.cin,
+        }
+    }
+
+    fn block_train(&self, bp: &BlockPlan, params: &[f32], mask: &[f32], x_in: Vec<f32>, n: usize) -> (Vec<f32>, BlockTape) {
+        let (hw_in, hw_out) = (bp.side_in * bp.side_in, bp.side_out * bp.side_out);
+        let w1 = &params[bp.conv1..bp.conv1 + bp.cout * bp.cin * 9];
+        let w2 = &params[bp.conv2..bp.conv2 + bp.cout * bp.cout * 9];
+        let m1 = layer_slice(mask, &self.mask_layers[bp.act1_layer]);
+        let m2 = layer_slice(mask, &self.mask_layers[bp.act2_layer]);
+        match self.family {
+            Family::Resnet => {
+                let mut c1 = Vec::new();
+                conv2d_same_into(&x_in, w1, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride, &mut c1);
+                let mut z1 = Vec::new();
+                let bn1 = bn_train_into(&c1, &params[bp.bn1..bp.bn1 + bp.cout], &params[bp.bn1 + bp.cout..bp.bn1 + 2 * bp.cout], n, bp.cout, hw_out, &mut z1);
+                let mut a1 = Vec::new();
+                mask_act_channel_into(&z1, m1, n, bp.cout, hw_out, self.poly, &mut a1);
+                let mut c2 = Vec::new();
+                conv2d_same_into(&a1, w2, n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1, &mut c2);
+                let mut z2 = Vec::new();
+                let bn2 = bn_train_into(&c2, &params[bp.bn2..bp.bn2 + bp.cout], &params[bp.bn2 + bp.cout..bp.bn2 + 2 * bp.cout], n, bp.cout, hw_out, &mut z2);
+                let (skip, bnp) = match (bp.proj, bp.bnp) {
+                    (Some(pw), Some(pb)) => {
+                        let wp = &params[pw..pw + bp.cout * bp.cin];
+                        let mut cp = Vec::new();
+                        conv2d_same_into(&x_in, wp, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride, &mut cp);
+                        let mut zp = Vec::new();
+                        let cache = bn_train_into(&cp, &params[pb..pb + bp.cout], &params[pb + bp.cout..pb + 2 * bp.cout], n, bp.cout, hw_out, &mut zp);
+                        (zp, Some(cache))
+                    }
+                    _ => (x_in.clone(), None),
+                };
+                add_into(&mut z2, &skip);
+                let mut out = Vec::new();
+                mask_act_channel_into(&z2, m2, n, bp.cout, hw_out, self.poly, &mut out);
+                (out, BlockTape { x_in, bn1, z1, a1, bn2, z2, a2: Vec::new(), bnp })
+            }
+            Family::Wrn => {
+                let mut z1 = Vec::new();
+                let bn1 = bn_train_into(&x_in, &params[bp.bn1..bp.bn1 + bp.cin], &params[bp.bn1 + bp.cin..bp.bn1 + 2 * bp.cin], n, bp.cin, hw_in, &mut z1);
+                let mut y = Vec::new();
+                mask_act_channel_into(&z1, m1, n, bp.cin, hw_in, self.poly, &mut y);
+                let id = match bp.proj {
+                    Some(pw) => {
+                        let wp = &params[pw..pw + bp.cout * bp.cin];
+                        let mut cp = Vec::new();
+                        conv2d_same_into(&y, wp, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride, &mut cp);
+                        cp
+                    }
+                    None => x_in.clone(),
+                };
+                let mut c1 = Vec::new();
+                conv2d_same_into(&y, w1, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride, &mut c1);
+                let mut z2 = Vec::new();
+                let bn2 = bn_train_into(&c1, &params[bp.bn2..bp.bn2 + bp.cout], &params[bp.bn2 + bp.cout..bp.bn2 + 2 * bp.cout], n, bp.cout, hw_out, &mut z2);
+                let mut h2 = Vec::new();
+                mask_act_channel_into(&z2, m2, n, bp.cout, hw_out, self.poly, &mut h2);
+                let mut out = Vec::new();
+                conv2d_same_into(&h2, w2, n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1, &mut out);
+                add_into(&mut out, &id);
+                (out, BlockTape { x_in, bn1, z1, a1: y, bn2, z2, a2: h2, bnp: None })
+            }
+        }
+    }
+
+    /// Train-mode forward (batch-stat batchnorm) -> (logits, tape).
+    pub fn forward_train(&self, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> (Vec<f32>, TrainTape) {
+        let s = self.image_size;
+        let hw = s * s;
+        let mut c0 = Vec::new();
+        let w = &params[self.stem_conv..self.stem_conv + self.stem_c * self.channels * 9];
+        conv2d_same_into(x, w, n, self.channels, s, s, self.stem_c, 3, 1, &mut c0);
+        let (stem_bn, stem_z, stem_out) = match self.stem_bn {
+            Some(off) => {
+                let mut z = Vec::new();
+                let cache = bn_train_into(&c0, &params[off..off + self.stem_c], &params[off + self.stem_c..off + 2 * self.stem_c], n, self.stem_c, hw, &mut z);
+                let m0 = layer_slice(mask, &self.mask_layers[0]);
+                let mut a = Vec::new();
+                mask_act_channel_into(&z, m0, n, self.stem_c, hw, self.poly, &mut a);
+                (Some(cache), Some(z), a)
+            }
+            None => (None, None, c0),
+        };
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        let mut cur = stem_out;
+        for bp in &self.blocks {
+            let (out, tape) = self.block_train(bp, params, mask, cur, n);
+            blocks.push(tape);
+            cur = out;
+        }
+        let fhw = self.feat_side * self.feat_side;
+        let (final_bn, final_z, gap_in) = match self.final_bn {
+            Some(off) => {
+                let mut z = Vec::new();
+                let cache = bn_train_into(&cur, &params[off..off + self.feat_c], &params[off + self.feat_c..off + 2 * self.feat_c], n, self.feat_c, fhw, &mut z);
+                let ml = layer_slice(mask, self.mask_layers.last().expect("wrn has layers"));
+                let mut a = Vec::new();
+                mask_act_channel_into(&z, ml, n, self.feat_c, fhw, self.poly, &mut a);
+                (Some(cache), Some(z), a)
+            }
+            None => (None, None, cur),
+        };
+        let mut feats = Vec::new();
+        gap_into(&gap_in, n, self.feat_c, fhw, &mut feats);
+        let wh = &params[self.head_w..self.head_w + self.feat_c * self.num_classes];
+        let bh = &params[self.head_b..self.head_b + self.num_classes];
+        let mut logits = Vec::new();
+        gemm_bias_into(&feats, wh, bh, n, self.feat_c, self.num_classes, &mut logits);
+        (logits, TrainTape { x: x.to_vec(), stem_bn, stem_z, blocks, final_bn, final_z, feats })
+    }
+
+    fn block_backward(
+        &self,
+        bp: &BlockPlan,
+        t: &BlockTape,
+        params: &[f32],
+        mask: &[f32],
+        dparams: &mut [f32],
+        dmask: &mut [f32],
+        dout: &[f32],
+        n: usize,
+    ) -> Vec<f32> {
+        let (hw_in, hw_out) = (bp.side_in * bp.side_in, bp.side_out * bp.side_out);
+        let w1 = &params[bp.conv1..bp.conv1 + bp.cout * bp.cin * 9];
+        let w2 = &params[bp.conv2..bp.conv2 + bp.cout * bp.cout * 9];
+        let m1 = layer_slice(mask, &self.mask_layers[bp.act1_layer]);
+        let m2 = layer_slice(mask, &self.mask_layers[bp.act2_layer]);
+        let l1 = &self.mask_layers[bp.act1_layer];
+        let l2 = &self.mask_layers[bp.act2_layer];
+        match self.family {
+            Family::Resnet => {
+                let (dm2, dsum) = dact_channel(&t.z2, m2, dout, n, bp.cout, hw_out, self.poly);
+                dmask[l2.offset..l2.offset + l2.size].copy_from_slice(&dm2);
+                let dc2 = {
+                    let (dg2, dbe2) = dparams[bp.bn2..bp.bn2 + 2 * bp.cout].split_at_mut(bp.cout);
+                    bn_backward_train(&t.bn2, &params[bp.bn2..bp.bn2 + bp.cout], &dsum, dg2, dbe2, n, bp.cout, hw_out)
+                };
+                conv2d_same_dweight(&t.a1, &dc2, &mut dparams[bp.conv2..bp.conv2 + bp.cout * bp.cout * 9], n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1);
+                let da1 = conv2d_same_dinput(&dc2, w2, n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1);
+                let (dm1, dz1) = dact_channel(&t.z1, m1, &da1, n, bp.cout, hw_out, self.poly);
+                dmask[l1.offset..l1.offset + l1.size].copy_from_slice(&dm1);
+                let dc1 = {
+                    let (dg1, dbe1) = dparams[bp.bn1..bp.bn1 + 2 * bp.cout].split_at_mut(bp.cout);
+                    bn_backward_train(&t.bn1, &params[bp.bn1..bp.bn1 + bp.cout], &dz1, dg1, dbe1, n, bp.cout, hw_out)
+                };
+                conv2d_same_dweight(&t.x_in, &dc1, &mut dparams[bp.conv1..bp.conv1 + bp.cout * bp.cin * 9], n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride);
+                let mut dx = conv2d_same_dinput(&dc1, w1, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride);
+                match (bp.proj, bp.bnp, &t.bnp) {
+                    (Some(pw), Some(pb), Some(cache)) => {
+                        let wp = &params[pw..pw + bp.cout * bp.cin];
+                        let dcp = {
+                            let (dgp, dbep) = dparams[pb..pb + 2 * bp.cout].split_at_mut(bp.cout);
+                            bn_backward_train(cache, &params[pb..pb + bp.cout], &dsum, dgp, dbep, n, bp.cout, hw_out)
+                        };
+                        conv2d_same_dweight(&t.x_in, &dcp, &mut dparams[pw..pw + bp.cout * bp.cin], n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride);
+                        add_into(&mut dx, &conv2d_same_dinput(&dcp, wp, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride));
+                    }
+                    _ => add_into(&mut dx, &dsum),
+                }
+                dx
+            }
+            Family::Wrn => {
+                conv2d_same_dweight(&t.a2, dout, &mut dparams[bp.conv2..bp.conv2 + bp.cout * bp.cout * 9], n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1);
+                let dh2 = conv2d_same_dinput(dout, w2, n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1);
+                let (dm2, dz2) = dact_channel(&t.z2, m2, &dh2, n, bp.cout, hw_out, self.poly);
+                dmask[l2.offset..l2.offset + l2.size].copy_from_slice(&dm2);
+                let dc1 = {
+                    let (dg2, dbe2) = dparams[bp.bn2..bp.bn2 + 2 * bp.cout].split_at_mut(bp.cout);
+                    bn_backward_train(&t.bn2, &params[bp.bn2..bp.bn2 + bp.cout], &dz2, dg2, dbe2, n, bp.cout, hw_out)
+                };
+                conv2d_same_dweight(&t.a1, &dc1, &mut dparams[bp.conv1..bp.conv1 + bp.cout * bp.cin * 9], n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride);
+                let mut dy = conv2d_same_dinput(&dc1, w1, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride);
+                if let Some(pw) = bp.proj {
+                    let wp = &params[pw..pw + bp.cout * bp.cin];
+                    conv2d_same_dweight(&t.a1, dout, &mut dparams[pw..pw + bp.cout * bp.cin], n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride);
+                    add_into(&mut dy, &conv2d_same_dinput(dout, wp, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride));
+                }
+                let (dm1, dz1) = dact_channel(&t.z1, m1, &dy, n, bp.cin, hw_in, self.poly);
+                dmask[l1.offset..l1.offset + l1.size].copy_from_slice(&dm1);
+                let mut dx = {
+                    let (dg1, dbe1) = dparams[bp.bn1..bp.bn1 + 2 * bp.cin].split_at_mut(bp.cin);
+                    bn_backward_train(&t.bn1, &params[bp.bn1..bp.bn1 + bp.cin], &dz1, dg1, dbe1, n, bp.cin, hw_in)
+                };
+                if bp.proj.is_none() {
+                    add_into(&mut dx, dout);
+                }
+                dx
+            }
+        }
+    }
+
+    /// Backprop `dlogits` through the taped train-mode forward ->
+    /// `(dparams, dmask)`. Running-stat pack positions receive zero grad
+    /// (they are not trained; [`Self::update_running_stats`] overwrites
+    /// them after the SGD step).
+    pub fn backward(&self, params: &[f32], mask: &[f32], tape: &TrainTape, dlogits: &[f32], n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut dparams = vec![0.0f32; self.param_size];
+        let mut dmask = vec![0.0f32; self.mask_size];
+        let k = self.num_classes;
+        let fhw = self.feat_side * self.feat_side;
+        {
+            let (dwh, dbh) = dparams[self.head_w..self.head_b + k].split_at_mut(self.feat_c * k);
+            super::kernels::matgrad(&tape.feats, dlogits, dwh, dbh, n, self.feat_c, k);
+        }
+        let wh = &params[self.head_w..self.head_w + self.feat_c * k];
+        let dfeats = super::kernels::dinput(dlogits, wh, n, self.feat_c, k);
+        let mut dcur = gap_back(&dfeats, n, self.feat_c, fhw);
+        if let (Some(off), Some(cache), Some(z)) = (self.final_bn, &tape.final_bn, &tape.final_z) {
+            let ml = self.mask_layers.last().expect("wrn has layers");
+            let (dmf, dzf) = dact_channel(z, layer_slice(mask, ml), &dcur, n, self.feat_c, fhw, self.poly);
+            dmask[ml.offset..ml.offset + ml.size].copy_from_slice(&dmf);
+            let (dg, dbe) = dparams[off..off + 2 * self.feat_c].split_at_mut(self.feat_c);
+            dcur = bn_backward_train(cache, &params[off..off + self.feat_c], &dzf, dg, dbe, n, self.feat_c, fhw);
+        }
+        for (bp, t) in self.blocks.iter().zip(&tape.blocks).rev() {
+            dcur = self.block_backward(bp, t, params, mask, &mut dparams, &mut dmask, &dcur, n);
+        }
+        let s = self.image_size;
+        let hw = s * s;
+        let dc0 = match (self.stem_bn, &tape.stem_bn, &tape.stem_z) {
+            (Some(off), Some(cache), Some(z)) => {
+                let l0 = &self.mask_layers[0];
+                let (dm0, dz0) = dact_channel(z, layer_slice(mask, l0), &dcur, n, self.stem_c, hw, self.poly);
+                dmask[l0.offset..l0.offset + l0.size].copy_from_slice(&dm0);
+                let (dg, dbe) = dparams[off..off + 2 * self.stem_c].split_at_mut(self.stem_c);
+                bn_backward_train(cache, &params[off..off + self.stem_c], &dz0, dg, dbe, n, self.stem_c, hw)
+            }
+            _ => dcur,
+        };
+        conv2d_same_dweight(&tape.x, &dc0, &mut dparams[self.stem_conv..self.stem_conv + self.stem_c * self.channels * 9], n, self.channels, s, s, self.stem_c, 3, 1);
+        (dparams, dmask)
+    }
+
+    /// EMA-update every batchnorm's running mean/var in the pack from the
+    /// batch statistics captured on `tape` (after the SGD step, mirroring
+    /// the Python training loop's ordering).
+    pub fn update_running_stats(&self, params: &mut [f32], tape: &TrainTape) {
+        fn upd(params: &mut [f32], off: usize, c: usize, cache: &BnCache, mom: f32) {
+            for ci in 0..c {
+                let rm = off + 2 * c + ci;
+                params[rm] = (1.0 - mom) * params[rm] + mom * cache.mean[ci];
+                let rv = off + 3 * c + ci;
+                params[rv] = (1.0 - mom) * params[rv] + mom * cache.var[ci];
+            }
+        }
+        let mom = self.bn_momentum;
+        if let (Some(off), Some(cache)) = (self.stem_bn, &tape.stem_bn) {
+            upd(params, off, self.stem_c, cache, mom);
+        }
+        for (bp, t) in self.blocks.iter().zip(&tape.blocks) {
+            upd(params, bp.bn1, self.bn1_c(bp), &t.bn1, mom);
+            upd(params, bp.bn2, bp.cout, &t.bn2, mom);
+            if let (Some(pb), Some(cache)) = (bp.bnp, &t.bnp) {
+                upd(params, pb, bp.cout, cache, mom);
+            }
+        }
+        if let (Some(off), Some(cache)) = (self.final_bn, &tape.final_bn) {
+            upd(params, off, self.feat_c, cache, mom);
+        }
+    }
+}
+
+/// Per-block intermediates of one train-mode forward.
+pub struct BlockTape {
+    /// Block input (conv1 / projection dweight).
+    x_in: Vec<f32>,
+    bn1: BnCache,
+    /// Pre-act1 (bn1 output).
+    z1: Vec<f32>,
+    /// Post-act1 (ResNet: conv2 input after conv1; WRN: `y`, the input of
+    /// conv1 *and* the projection).
+    a1: Vec<f32>,
+    bn2: BnCache,
+    /// Pre-act2 (ResNet: bn2 output *plus skip*; WRN: bn2 output).
+    z2: Vec<f32>,
+    /// WRN only: post-act2 (conv2 input). Empty for ResNet.
+    a2: Vec<f32>,
+    /// ResNet projection batchnorm cache.
+    bnp: Option<BnCache>,
+}
+
+/// All intermediates [`ConvPlan::backward`] needs, captured by
+/// [`ConvPlan::forward_train`].
+pub struct TrainTape {
+    x: Vec<f32>,
+    stem_bn: Option<BnCache>,
+    stem_z: Option<Vec<f32>>,
+    blocks: Vec<BlockTape>,
+    final_bn: Option<BnCache>,
+    final_z: Option<Vec<f32>>,
+    feats: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::kernels::softmax_ce;
+
+    fn spec(family: Family, k: usize, img: usize, poly: bool) -> ConvSpec {
+        ConvSpec {
+            key: "t".into(),
+            family,
+            num_classes: k,
+            image_size: img,
+            channels: 3,
+            poly,
+            base: 8,
+            widen: 4,
+            blocks: 2,
+            bn_momentum: 0.1,
+        }
+    }
+
+    fn assert_tiles(entries: &[PackEntry], total: usize) {
+        let mut off = 0;
+        for e in entries {
+            assert_eq!(e.offset, off, "{} not contiguous", e.name);
+            assert_eq!(e.shape.iter().product::<usize>(), e.size, "{} shape/size", e.name);
+            off += e.size;
+        }
+        assert_eq!(off, total);
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(lo, hi)).collect()
+    }
+
+    #[test]
+    fn resnet_plan_matches_hand_counted_layout() {
+        let p10 = ConvPlan::build(&spec(Family::Resnet, 10, 16, false));
+        let p20 = ConvPlan::build(&spec(Family::Resnet, 20, 16, false));
+        // Hand count: stem 216+32; s0 2x1216; s1 3776+4736; s2 14720+18688;
+        // s3 58112+74240; head 64k+k.
+        assert_eq!(p10.param_size, 177_602);
+        assert_eq!(p20.param_size, 178_252);
+        // Per-channel masks: 8 + 4*8 + 4*16 + 4*32 + 4*64.
+        assert_eq!(p10.mask_size, 488);
+        assert_eq!(p10.mask_layers.len(), 17);
+        assert_eq!(p10.boundary_layers, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+        assert_eq!(p10.boundary_blocks, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(
+            p10.boundary_entry,
+            vec![2048, 2048, 2048, 1024, 1024, 512, 512, 256]
+        );
+        assert_eq!(p10.feat_c, 64);
+        assert_eq!(p10.feat_side, 2);
+        assert_eq!(p10.blocks.len(), 8);
+        assert_tiles(&p10.mask_layers, p10.mask_size);
+        assert_tiles(&p10.param_entries, p10.param_size);
+        // 32px variant only stretches spatial dims, never the pack.
+        let p32 = ConvPlan::build(&spec(Family::Resnet, 20, 32, false));
+        assert_eq!(p32.param_size, 178_252);
+        assert_eq!(p32.mask_size, 488);
+        assert_eq!(p32.feat_side, 4);
+    }
+
+    #[test]
+    fn wrn_plan_matches_hand_counted_layout() {
+        let p10 = ConvPlan::build(&spec(Family::Wrn, 10, 16, false));
+        let p20 = ConvPlan::build(&spec(Family::Wrn, 20, 16, false));
+        assert_eq!(p10.param_size, 174_722);
+        assert_eq!(p20.param_size, 175_372);
+        assert_eq!(p10.mask_size, 456);
+        assert_eq!(p10.mask_layers.len(), 13);
+        assert_eq!(p10.boundary_layers, vec![1, 3, 5, 7, 9, 11]);
+        assert_eq!(p10.boundary_blocks, vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(p10.feat_c, 64);
+        assert_eq!(p10.feat_side, 4);
+        assert_eq!(p10.blocks.len(), 6);
+        // Pre-act: act1 of the first block sits on the stem width, act2 on
+        // the group width.
+        assert_eq!(p10.mask_layers[0].size, 8);
+        assert_eq!(p10.mask_layers[1].size, 16);
+        assert_tiles(&p10.mask_layers, p10.mask_size);
+        assert_tiles(&p10.param_entries, p10.param_size);
+    }
+
+    #[test]
+    fn init_is_deterministic_seed_sensitive_and_bn_exact() {
+        for fam in [Family::Resnet, Family::Wrn] {
+            let plan = ConvPlan::build(&spec(fam, 10, 16, false));
+            let a = plan.init_params(7);
+            let b = plan.init_params(7);
+            let c = plan.init_params(8);
+            assert_eq!(a, b);
+            assert_ne!(a, c);
+            assert_eq!(a.len(), plan.param_size);
+            // Every batchnorm row is exactly [1, 0, 0, 1] per channel and
+            // the head bias is zero.
+            for e in &plan.param_entries {
+                if e.shape.len() == 2 && e.shape[0] == 4 {
+                    let ch = e.shape[1];
+                    assert!(a[e.offset..e.offset + ch].iter().all(|&v| v == 1.0));
+                    assert!(a[e.offset + ch..e.offset + 3 * ch].iter().all(|&v| v == 0.0));
+                    assert!(a[e.offset + 3 * ch..e.offset + 4 * ch].iter().all(|&v| v == 1.0));
+                }
+            }
+            let hb = plan.head_b;
+            assert!(a[hb..hb + plan.num_classes].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn eval_forward_has_right_shape_and_per_channel_mask_sensitivity() {
+        for (fam, poly) in [(Family::Resnet, false), (Family::Wrn, true)] {
+            let plan = ConvPlan::build(&spec(fam, 10, 16, poly));
+            let params = plan.init_params(3);
+            let mut rng = Rng::new(11);
+            let n = 2;
+            let x = rand_vec(&mut rng, n * 3 * 16 * 16, -2.0, 2.0);
+            let full = vec![1.0f32; plan.mask_size];
+            let logits = plan.forward_eval(&params, &full, &x, n);
+            assert_eq!(logits.len(), n * 10);
+            assert!(logits.iter().all(|v| v.is_finite()));
+            // Zeroing a mid-network mask layer changes logits: per-channel
+            // masks are actually consumed layer by layer.
+            let mid = &plan.mask_layers[plan.mask_layers.len() / 2];
+            let mut flipped = full.clone();
+            flipped[mid.offset..mid.offset + mid.size].fill(0.0);
+            assert_ne!(logits, plan.forward_eval(&params, &flipped, &x, n));
+        }
+    }
+
+    #[test]
+    fn staged_resume_is_bitwise_identical_at_every_boundary() {
+        for fam in [Family::Resnet, Family::Wrn] {
+            let plan = ConvPlan::build(&spec(fam, 10, 16, false));
+            let params = plan.init_params(5);
+            let mut rng = Rng::new(23);
+            let n = 2;
+            let x = rand_vec(&mut rng, n * 3 * 16 * 16, -2.0, 2.0);
+            let mask = rand_vec(&mut rng, plan.mask_size, 0.0, 1.0);
+            let full = plan.forward_eval(&params, &mask, &x, n);
+            for seg in 0..plan.segment_count() {
+                let acts = plan.forward_prefix(seg, &params, &mask, &x, n);
+                assert_eq!(acts.len(), n * plan.boundary_entry[seg]);
+                let suffix = &mask[plan.suffix_offset(seg)..];
+                let resumed = plan.forward_from(seg, &acts, &params, suffix, n);
+                assert_eq!(full, resumed, "{fam:?} segment {seg} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn train_backward_and_running_stat_update_fit_the_pack() {
+        for fam in [Family::Resnet, Family::Wrn] {
+            let plan = ConvPlan::build(&spec(fam, 10, 16, false));
+            let mut params = plan.init_params(9);
+            let mut rng = Rng::new(31);
+            let n = 4;
+            let x = rand_vec(&mut rng, n * 3 * 16 * 16, -2.0, 2.0);
+            let mask = vec![1.0f32; plan.mask_size];
+            let y: Vec<i32> = (0..n as i32).collect();
+            let (logits, tape) = plan.forward_train(&params, &mask, &x, n);
+            let (loss, _, dlogits) = softmax_ce(&logits, &y, 10);
+            assert!(loss.is_finite());
+            let (dparams, dmask) = plan.backward(&params, &mask, &tape, &dlogits, n);
+            assert_eq!(dparams.len(), plan.param_size);
+            assert_eq!(dmask.len(), plan.mask_size);
+            // Running-stat positions carry zero grad; gamma/beta and at
+            // least one conv weight carry signal.
+            for e in &plan.param_entries {
+                if e.shape.len() == 2 && e.shape[0] == 4 {
+                    let ch = e.shape[1];
+                    assert!(dparams[e.offset + 2 * ch..e.offset + 4 * ch].iter().all(|&v| v == 0.0), "{}", e.name);
+                }
+            }
+            assert!(dparams[plan.stem_conv..plan.stem_conv + 10].iter().any(|&v| v != 0.0));
+            assert!(dmask.iter().any(|&v| v != 0.0));
+            // Running stats move off init after the EMA update.
+            let before = params.clone();
+            plan.update_running_stats(&mut params, &tape);
+            let bn = plan
+                .param_entries
+                .iter()
+                .find(|e| e.shape.len() == 2 && e.shape[0] == 4)
+                .unwrap();
+            let ch = bn.shape[1];
+            assert_ne!(
+                &params[bn.offset + 2 * ch..bn.offset + 4 * ch],
+                &before[bn.offset + 2 * ch..bn.offset + 4 * ch]
+            );
+            // ...and only running stats moved.
+            assert_eq!(&params[bn.offset..bn.offset + 2 * ch], &before[bn.offset..bn.offset + 2 * ch]);
+        }
+    }
+}

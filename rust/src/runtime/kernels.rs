@@ -26,6 +26,12 @@
 //!   `exps.iter().sum()` of the scalar implementation used — whether or
 //!   not the gradient is requested, so scoring-only calls (the trial hot
 //!   path) and training calls produce identical losses.
+//! - The conv/batchnorm family ([`conv2d_same_into`] and friends,
+//!   DESIGN.md §12) keeps the naive loop order too: each conv output
+//!   accumulates over `(ci, ky, kx)` ascending with out-of-bounds
+//!   padding taps *skipped* (never added as literal 0.0), and every
+//!   batchnorm / GAP / per-channel-mask reduction runs strictly
+//!   sequentially in `(n, y, x)` ascending order.
 
 // Index-heavy numeric kernels: explicit loops over computed flat offsets
 // read better than iterator chains here.
@@ -318,6 +324,478 @@ pub fn sgd_momentum(p: &[f32], mom: &[f32], grad: &[f32], lr: f32, mu: f32) -> (
     (new_p, new_mom)
 }
 
+// ---------------------------------------------------------------------------
+// Convolutional kernel family (DESIGN.md §12). NCHW activations, OIHW
+// weights, 'SAME' padding, no conv bias (a batchnorm always follows).
+// ---------------------------------------------------------------------------
+
+/// Numerical-stability epsilon added to the batchnorm variance before the
+/// square root (the usual 1e-5 of the framework defaults).
+pub const BN_EPS: f32 = 1e-5;
+
+/// Output spatial extent of a 'SAME'-padded convolution: `ceil(in/stride)`.
+pub fn conv_out_dim(in_dim: usize, stride: usize) -> usize {
+    in_dim.div_ceil(stride)
+}
+
+/// Leading (top/left) padding of a 'SAME' convolution. TensorFlow's
+/// convention: `total = max((out-1)*stride + k - in, 0)`, split with the
+/// odd extra row/column on the *trailing* edge — so a 3x3 stride-2 conv
+/// on an even input pads 0 on top and 1 on the bottom.
+pub fn same_pad_before(in_dim: usize, k: usize, stride: usize) -> usize {
+    let out = conv_out_dim(in_dim, stride);
+    ((out - 1) * stride + k).saturating_sub(in_dim) / 2
+}
+
+/// 2-D convolution: `x [n, cin, h, w]` (NCHW) with weights
+/// `w [cout, cin, k, k]` (OIHW), 'SAME' padding, square stride, no bias,
+/// written into a reusable buffer (the staged trial path calls this per
+/// hypothesis).
+///
+/// Accumulation order per output element: `(ci, ky, kx)` ascending, one
+/// add per *in-bounds* tap. Padding taps are skipped, not added as 0.0 —
+/// the in-bounds sum is the contract, and skipping keeps ±0.0 edge cases
+/// out of the bit-identity story (module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_into(
+    x: &[f32],
+    w: &[f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    out: &mut Vec<f32>,
+) {
+    let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+    let (py, px) = (same_pad_before(h, k, stride), same_pad_before(wd, k, stride));
+    debug_assert_eq!(x.len(), n * cin * h * wd);
+    debug_assert_eq!(w.len(), cout * cin * k * k);
+    out.clear();
+    out.reserve(n * cout * oh * ow);
+    for ni in 0..n {
+        for co in 0..cout {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ci in 0..cin {
+                        let xc = &x[(ni * cin + ci) * h * wd..(ni * cin + ci + 1) * h * wd];
+                        let wc = &w[(co * cin + ci) * k * k..(co * cin + ci + 1) * k * k];
+                        for ky in 0..k {
+                            let iy = oy * stride + ky;
+                            if iy < py || iy - py >= h {
+                                continue;
+                            }
+                            let xr = &xc[(iy - py) * wd..(iy - py + 1) * wd];
+                            for kx in 0..k {
+                                let ix = ox * stride + kx;
+                                if ix < px || ix - px >= wd {
+                                    continue;
+                                }
+                                acc += xr[ix - px] * wc[ky * k + kx];
+                            }
+                        }
+                    }
+                    out.push(acc);
+                }
+            }
+        }
+    }
+}
+
+/// `dL/dx` of [`conv2d_same_into`]. Each input element's gradient is a
+/// serial reduction over `(co, ky, kx)` ascending; taps whose output
+/// position falls off the grid or between strides are skipped, mirroring
+/// the forward tap-skip.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_dinput(
+    dy: &[f32],
+    w: &[f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+    let (py, px) = (same_pad_before(h, k, stride), same_pad_before(wd, k, stride));
+    debug_assert_eq!(dy.len(), n * cout * oh * ow);
+    debug_assert_eq!(w.len(), cout * cin * k * k);
+    let mut dx = vec![0.0f32; n * cin * h * wd];
+    for ni in 0..n {
+        for ci in 0..cin {
+            for iy in 0..h {
+                for ix in 0..wd {
+                    let mut acc = 0.0f32;
+                    for co in 0..cout {
+                        let dyc = &dy[(ni * cout + co) * oh * ow..(ni * cout + co + 1) * oh * ow];
+                        let wc = &w[(co * cin + ci) * k * k..(co * cin + ci + 1) * k * k];
+                        for ky in 0..k {
+                            // Invert iy = oy*stride + ky - py for oy.
+                            if iy + py < ky || (iy + py - ky) % stride != 0 {
+                                continue;
+                            }
+                            let oy = (iy + py - ky) / stride;
+                            if oy >= oh {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                if ix + px < kx || (ix + px - kx) % stride != 0 {
+                                    continue;
+                                }
+                                let ox = (ix + px - kx) / stride;
+                                if ox >= ow {
+                                    continue;
+                                }
+                                acc += dyc[oy * ow + ox] * wc[ky * k + kx];
+                            }
+                        }
+                    }
+                    dx[((ni * cin + ci) * h + iy) * wd + ix] = acc;
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Accumulate `dL/dw` of [`conv2d_same_into`] into `dw` (one add per
+/// weight element: the local reduction runs over `(n, oy, ox)` ascending,
+/// skipping padding taps, then lands in the caller's gradient buffer).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_dweight(
+    x: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+) {
+    let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+    let (py, px) = (same_pad_before(h, k, stride), same_pad_before(wd, k, stride));
+    debug_assert_eq!(x.len(), n * cin * h * wd);
+    debug_assert_eq!(dy.len(), n * cout * oh * ow);
+    debug_assert_eq!(dw.len(), cout * cin * k * k);
+    for co in 0..cout {
+        for ci in 0..cin {
+            for ky in 0..k {
+                for kx in 0..k {
+                    let mut acc = 0.0f32;
+                    for ni in 0..n {
+                        let xc = &x[(ni * cin + ci) * h * wd..(ni * cin + ci + 1) * h * wd];
+                        let dyc = &dy[(ni * cout + co) * oh * ow..(ni * cout + co + 1) * oh * ow];
+                        for oy in 0..oh {
+                            let iy = oy * stride + ky;
+                            if iy < py || iy - py >= h {
+                                continue;
+                            }
+                            for ox in 0..ow {
+                                let ix = ox * stride + kx;
+                                if ix < px || ix - px >= wd {
+                                    continue;
+                                }
+                                acc += xc[(iy - py) * wd + ix - px] * dyc[oy * ow + ox];
+                            }
+                        }
+                    }
+                    dw[(co * cin + ci) * k * k + ky * k + kx] += acc;
+                }
+            }
+        }
+    }
+}
+
+/// Per-channel statistics the batchnorm training forward captures for its
+/// backward pass.
+pub struct BnCache {
+    /// The batchnorm *input* (backward recomputes x̂ from it).
+    pub x: Vec<f32>,
+    /// Per-channel batch mean over `(n, h, w)`.
+    pub mean: Vec<f32>,
+    /// Per-channel *biased* batch variance.
+    pub var: Vec<f32>,
+}
+
+/// Batchnorm inference forward: normalize `x [n, c, hw]` with *running*
+/// statistics — a purely per-element map, so each example's output is
+/// independent of batch composition. That property is what makes the
+/// staged/batched scoring paths and tail padding safe on conv nets, and
+/// why every scoring path runs batchnorm in eval mode (DESIGN.md §12).
+#[allow(clippy::too_many_arguments)]
+pub fn bn_eval_into(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rmean: &[f32],
+    rvar: &[f32],
+    n: usize,
+    c: usize,
+    hw: usize,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(x.len(), n * c * hw);
+    out.clear();
+    out.reserve(x.len());
+    for ni in 0..n {
+        for ci in 0..c {
+            let inv = 1.0 / (rvar[ci] + BN_EPS).sqrt();
+            let (g, b, m) = (gamma[ci], beta[ci], rmean[ci]);
+            let xc = &x[(ni * c + ci) * hw..(ni * c + ci + 1) * hw];
+            for &xv in xc {
+                out.push(g * ((xv - m) * inv) + b);
+            }
+        }
+    }
+}
+
+/// Batchnorm training forward: per-channel batch mean and biased variance
+/// over `(n, h, w)` — both reductions strictly sequential in `(ni, i)`
+/// ascending order — then the same normalize map as eval mode, using the
+/// batch statistics.
+pub fn bn_train_into(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    n: usize,
+    c: usize,
+    hw: usize,
+    out: &mut Vec<f32>,
+) -> BnCache {
+    debug_assert_eq!(x.len(), n * c * hw);
+    let m = (n * hw) as f32;
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    for ci in 0..c {
+        let mut acc = 0.0f32;
+        for ni in 0..n {
+            let xc = &x[(ni * c + ci) * hw..(ni * c + ci + 1) * hw];
+            for &xv in xc {
+                acc += xv;
+            }
+        }
+        mean[ci] = acc / m;
+        let mut vacc = 0.0f32;
+        for ni in 0..n {
+            let xc = &x[(ni * c + ci) * hw..(ni * c + ci + 1) * hw];
+            for &xv in xc {
+                let d = xv - mean[ci];
+                vacc += d * d;
+            }
+        }
+        var[ci] = vacc / m;
+    }
+    out.clear();
+    out.reserve(x.len());
+    for ni in 0..n {
+        for ci in 0..c {
+            let inv = 1.0 / (var[ci] + BN_EPS).sqrt();
+            let (g, b, mu) = (gamma[ci], beta[ci], mean[ci]);
+            let xc = &x[(ni * c + ci) * hw..(ni * c + ci + 1) * hw];
+            for &xv in xc {
+                out.push(g * ((xv - mu) * inv) + b);
+            }
+        }
+    }
+    BnCache { x: x.to_vec(), mean, var }
+}
+
+/// Batchnorm training backward. Per channel, the two reductions (`Σdy`
+/// and `Σdy·x̂`) run sequentially in `(ni, i)` order; `dgamma`/`dbeta`
+/// receive one add per channel into the caller's gradient buffers, and
+/// the returned `dx` carries the full dependence through the batch mean
+/// and variance:
+/// `dx = γ/σ · (dy − Σdy/m − x̂·(Σdy·x̂)/m)`.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_backward_train(
+    cache: &BnCache,
+    gamma: &[f32],
+    dy: &[f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+    n: usize,
+    c: usize,
+    hw: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), n * c * hw);
+    let m = (n * hw) as f32;
+    let mut dx = vec![0.0f32; dy.len()];
+    for ci in 0..c {
+        let inv = 1.0 / (cache.var[ci] + BN_EPS).sqrt();
+        let mu = cache.mean[ci];
+        let mut s_dy = 0.0f32;
+        let mut s_dyxh = 0.0f32;
+        for ni in 0..n {
+            let off = (ni * c + ci) * hw;
+            for i in 0..hw {
+                let d = dy[off + i];
+                s_dy += d;
+                s_dyxh += d * ((cache.x[off + i] - mu) * inv);
+            }
+        }
+        dbeta[ci] += s_dy;
+        dgamma[ci] += s_dyxh;
+        let g = gamma[ci];
+        for ni in 0..n {
+            let off = (ni * c + ci) * hw;
+            for i in 0..hw {
+                let xhat = (cache.x[off + i] - mu) * inv;
+                dx[off + i] = g * inv * (dy[off + i] - s_dy / m - xhat * (s_dyxh / m));
+            }
+        }
+    }
+    dx
+}
+
+/// Batchnorm inference-mode backward: the running statistics are
+/// constants, so `dx = dy·γ/σ` elementwise, while `dγ = Σdy·x̂` and
+/// `dβ = Σdy` reduce sequentially in `(ni, i)` order per channel.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_backward_eval(
+    x: &[f32],
+    gamma: &[f32],
+    rmean: &[f32],
+    rvar: &[f32],
+    dy: &[f32],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+    n: usize,
+    c: usize,
+    hw: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * c * hw);
+    debug_assert_eq!(dy.len(), n * c * hw);
+    let mut dx = vec![0.0f32; dy.len()];
+    for ci in 0..c {
+        let inv = 1.0 / (rvar[ci] + BN_EPS).sqrt();
+        let mu = rmean[ci];
+        let g = gamma[ci];
+        let mut s_dy = 0.0f32;
+        let mut s_dyxh = 0.0f32;
+        for ni in 0..n {
+            let off = (ni * c + ci) * hw;
+            for i in 0..hw {
+                let d = dy[off + i];
+                s_dy += d;
+                s_dyxh += d * ((x[off + i] - mu) * inv);
+                dx[off + i] = d * g * inv;
+            }
+        }
+        dbeta[ci] += s_dy;
+        dgamma[ci] += s_dyxh;
+    }
+    dx
+}
+
+/// [`mask_act_into`] with a *per-channel* mask broadcast over the batch
+/// and spatial dims — the conv topologies' masked activation. One mask
+/// coordinate gates a whole channel (DESIGN.md §12).
+pub fn mask_act_channel_into(
+    z: &[f32],
+    mask: &[f32],
+    n: usize,
+    c: usize,
+    hw: usize,
+    poly: bool,
+    a: &mut Vec<f32>,
+) {
+    debug_assert_eq!(z.len(), n * c * hw);
+    debug_assert_eq!(mask.len(), c);
+    a.clear();
+    a.reserve(z.len());
+    for ni in 0..n {
+        for ci in 0..c {
+            let m = mask[ci];
+            let zc = &z[(ni * c + ci) * hw..(ni * c + ci + 1) * hw];
+            for &zv in zc {
+                a.push(m * zv.max(0.0) + (1.0 - m) * g(zv, poly));
+            }
+        }
+    }
+}
+
+/// Backprop through the per-channel masked activation: returns
+/// (`dL/dmask` per *channel*, `dL/dz`). Each channel's `dmask` reduction
+/// runs sequentially in `(ni, i)` ascending order.
+#[allow(clippy::too_many_arguments)]
+pub fn dact_channel(
+    z: &[f32],
+    mask: &[f32],
+    da: &[f32],
+    n: usize,
+    c: usize,
+    hw: usize,
+    poly: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(z.len(), n * c * hw);
+    debug_assert_eq!(mask.len(), c);
+    let mut dmask = vec![0.0f32; c];
+    let mut dz = vec![0.0f32; z.len()];
+    for ni in 0..n {
+        for ci in 0..c {
+            let m = mask[ci];
+            let off = (ni * c + ci) * hw;
+            for i in 0..hw {
+                let zv = z[off + i];
+                let relu_grad = if zv > 0.0 { 1.0 } else { 0.0 };
+                dz[off + i] = da[off + i] * (m * relu_grad + (1.0 - m) * g_prime(zv, poly));
+                dmask[ci] += da[off + i] * (zv.max(0.0) - g(zv, poly));
+            }
+        }
+    }
+    (dmask, dz)
+}
+
+/// Global average pooling `[n, c, hw] -> [n, c]`: per output a serial sum
+/// over the spatial extent in ascending order, then one divide.
+pub fn gap_into(x: &[f32], n: usize, c: usize, hw: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(x.len(), n * c * hw);
+    out.clear();
+    out.reserve(n * c);
+    for ni in 0..n {
+        for ci in 0..c {
+            let xc = &x[(ni * c + ci) * hw..(ni * c + ci + 1) * hw];
+            let mut acc = 0.0f32;
+            for &v in xc {
+                acc += v;
+            }
+            out.push(acc / hw as f32);
+        }
+    }
+}
+
+/// GAP backward: spreads `dy/hw` uniformly over each pooled window.
+pub fn gap_back(dy: &[f32], n: usize, c: usize, hw: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), n * c);
+    let mut dx = vec![0.0f32; n * c * hw];
+    for ni in 0..n {
+        for ci in 0..c {
+            let d = dy[ni * c + ci] / hw as f32;
+            for v in &mut dx[(ni * c + ci) * hw..(ni * c + ci + 1) * hw] {
+                *v = d;
+            }
+        }
+    }
+    dx
+}
+
+/// Elementwise residual add `a += b` — one add per element, so both the
+/// forward skip connection and its (pass-through) backward keep every
+/// element's accumulation order trivial.
+pub fn add_into(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (av, &bv) in a.iter_mut().zip(b) {
+        *av += bv;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -475,5 +953,311 @@ mod tests {
                 assert_eq!(dx[bi * d_in + i], acc, "bi={bi} i={i}");
             }
         }
+    }
+
+    #[test]
+    fn same_padding_dims_match_the_tf_convention() {
+        // (in, k, stride) -> (out, pad_before); the odd extra row pads
+        // the trailing edge, so even-input stride-2 pads 0 on top.
+        for &(i, k, s, out, pad) in &[
+            (16usize, 3usize, 1usize, 16usize, 1usize),
+            (16, 3, 2, 8, 0),
+            (15, 3, 2, 8, 1),
+            (5, 3, 2, 3, 1),
+            (16, 1, 1, 16, 0),
+            (16, 1, 2, 8, 0),
+            (1, 3, 1, 1, 1),
+        ] {
+            assert_eq!(conv_out_dim(i, s), out, "in={i} k={k} s={s}");
+            assert_eq!(same_pad_before(i, k, s), pad, "in={i} k={k} s={s}");
+        }
+    }
+
+    /// Conv oracle that materializes the zero-padded image and sums every
+    /// tap. Padding taps contribute exact ±0.0, so its values equal the
+    /// tap-skipping kernel's (`==` treats -0.0 == 0.0).
+    #[allow(clippy::too_many_arguments)]
+    fn naive_conv_same(
+        x: &[f32],
+        w: &[f32],
+        n: usize,
+        cin: usize,
+        h: usize,
+        wd: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+    ) -> Vec<f32> {
+        let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+        let (py, px) = (same_pad_before(h, k, stride), same_pad_before(wd, k, stride));
+        let (ph, pw) = (h + k, wd + k);
+        let mut padded = vec![0.0f32; n * cin * ph * pw];
+        for ni in 0..n {
+            for ci in 0..cin {
+                for y in 0..h {
+                    for xx in 0..wd {
+                        padded[((ni * cin + ci) * ph + y + py) * pw + xx + px] =
+                            x[((ni * cin + ci) * h + y) * wd + xx];
+                    }
+                }
+            }
+        }
+        let mut out = vec![0.0f32; n * cout * oh * ow];
+        for ni in 0..n {
+            for co in 0..cout {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0f32;
+                        for ci in 0..cin {
+                            for ky in 0..k {
+                                for kx in 0..k {
+                                    acc += padded
+                                        [((ni * cin + ci) * ph + oy * stride + ky) * pw + ox * stride + kx]
+                                        * w[((co * cin + ci) * k + ky) * k + kx];
+                                }
+                            }
+                        }
+                        out[((ni * cout + co) * oh + oy) * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv2d_same_matches_padded_oracle_on_ragged_shapes() {
+        let mut rng = Rng::new(0xC0A1);
+        // Ragged spatial dims, both kernel sizes the topologies use (1, 3)
+        // and both strides (1, 2), including the degenerate 1x1 image.
+        for &(n, cin, h, wd, cout, k, stride) in &[
+            (1usize, 1usize, 1usize, 1usize, 1usize, 1usize, 1usize),
+            (2, 3, 5, 7, 4, 3, 1),
+            (1, 2, 4, 4, 3, 3, 2),
+            (2, 1, 5, 7, 2, 3, 2),
+            (1, 3, 16, 16, 4, 1, 2),
+            (1, 2, 7, 5, 3, 1, 1),
+            (1, 1, 1, 1, 2, 3, 2),
+        ] {
+            let x = pseudo(&mut rng, n * cin * h * wd, 5);
+            let w = pseudo(&mut rng, cout * cin * k * k, 0);
+            let want = naive_conv_same(&x, &w, n, cin, h, wd, cout, k, stride);
+            let mut got = vec![9.0f32; 3];
+            conv2d_same_into(&x, &w, n, cin, h, wd, cout, k, stride, &mut got);
+            assert_eq!(got, want, "n={n} cin={cin} h={h} wd={wd} cout={cout} k={k} s={stride}");
+        }
+    }
+
+    #[test]
+    fn conv_backward_kernels_satisfy_the_adjoint_identity() {
+        // ⟨dy, conv(x, w)⟩ = ⟨dinput(dy, w), x⟩ = ⟨dweight(x, dy), w⟩ —
+        // exact in ℝ by linearity in x resp. w, so any padding/stride
+        // index-mapping mismatch between forward and backward breaks it.
+        // The three sides sum in different orders, hence a (tight, f64)
+        // tolerance compare; the semantics pin for training is the
+        // finite-difference battery in tests/grad_check.rs.
+        let mut rng = Rng::new(0xC0B2);
+        for &(n, cin, h, wd, cout, k, stride) in &[
+            (2usize, 2usize, 5usize, 7usize, 3usize, 3usize, 1usize),
+            (1, 3, 4, 4, 2, 3, 2),
+            (2, 2, 5, 5, 4, 1, 2),
+        ] {
+            let x = pseudo(&mut rng, n * cin * h * wd, 5);
+            let w = pseudo(&mut rng, cout * cin * k * k, 0);
+            let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+            let dy = pseudo(&mut rng, n * cout * oh * ow, 0);
+            let mut y = Vec::new();
+            conv2d_same_into(&x, &w, n, cin, h, wd, cout, k, stride, &mut y);
+            let dx = conv2d_same_dinput(&dy, &w, n, cin, h, wd, cout, k, stride);
+            let mut dw = vec![0.0f32; w.len()];
+            conv2d_same_dweight(&x, &dy, &mut dw, n, cin, h, wd, cout, k, stride);
+            let dot = |a: &[f32], b: &[f32]| -> f64 {
+                a.iter().zip(b).map(|(&p, &q)| p as f64 * q as f64).sum()
+            };
+            let lhs = dot(&dy, &y);
+            let scale = lhs.abs().max(1.0);
+            assert!(
+                (lhs - dot(&dx, &x)).abs() / scale < 1e-4,
+                "dinput adjoint: k={k} s={stride}"
+            );
+            assert!(
+                (lhs - dot(&dw, &w)).abs() / scale < 1e-4,
+                "dweight adjoint: k={k} s={stride}"
+            );
+        }
+    }
+
+    #[test]
+    fn bn_eval_matches_scalar_formula_and_is_per_example() {
+        let mut rng = Rng::new(0xB9E1);
+        let (n, c, hw) = (3usize, 4usize, 6usize);
+        let x = pseudo(&mut rng, n * c * hw, 4);
+        let gamma = pseudo(&mut rng, c, 0);
+        let beta = pseudo(&mut rng, c, 0);
+        let rmean = pseudo(&mut rng, c, 0);
+        let rvar: Vec<f32> = (0..c).map(|_| rng.f32() + 0.5).collect();
+        let mut y = Vec::new();
+        bn_eval_into(&x, &gamma, &beta, &rmean, &rvar, n, c, hw, &mut y);
+        for ni in 0..n {
+            for ci in 0..c {
+                let inv = 1.0 / (rvar[ci] + BN_EPS).sqrt();
+                for i in 0..hw {
+                    let idx = (ni * c + ci) * hw + i;
+                    let want = gamma[ci] * ((x[idx] - rmean[ci]) * inv) + beta[ci];
+                    assert_eq!(y[idx], want, "ni={ni} ci={ci} i={i}");
+                }
+            }
+        }
+        // Eval mode is a per-element map: running just the first example
+        // reproduces its outputs bit for bit regardless of the rest of
+        // the batch — the property tail padding relies on.
+        let mut y1 = Vec::new();
+        bn_eval_into(&x[..c * hw], &gamma, &beta, &rmean, &rvar, 1, c, hw, &mut y1);
+        assert_eq!(y1, y[..c * hw]);
+    }
+
+    #[test]
+    fn bn_train_forward_backward_match_statistics_oracle() {
+        let mut rng = Rng::new(0xB9E2);
+        let (n, c, hw) = (4usize, 3usize, 5usize);
+        let x = pseudo(&mut rng, n * c * hw, 4);
+        let gamma: Vec<f32> = (0..c).map(|_| rng.f32() + 0.5).collect();
+        let beta = pseudo(&mut rng, c, 0);
+        let mut y = Vec::new();
+        let cache = bn_train_into(&x, &gamma, &beta, n, c, hw, &mut y);
+        let m = (n * hw) as f32;
+        for ci in 0..c {
+            // Same-order sequential oracle for the channel statistics.
+            let mut s = 0.0f32;
+            for ni in 0..n {
+                for i in 0..hw {
+                    s += x[(ni * c + ci) * hw + i];
+                }
+            }
+            let mean = s / m;
+            assert_eq!(cache.mean[ci], mean);
+            let mut v = 0.0f32;
+            for ni in 0..n {
+                for i in 0..hw {
+                    let d = x[(ni * c + ci) * hw + i] - mean;
+                    v += d * d;
+                }
+            }
+            assert_eq!(cache.var[ci], v / m);
+            // The normalized channel has mean β (up to fp roundoff).
+            let mut ys = 0.0f32;
+            for ni in 0..n {
+                for i in 0..hw {
+                    ys += y[(ni * c + ci) * hw + i];
+                }
+            }
+            assert!((ys / m - beta[ci]).abs() < 1e-5, "channel {ci} mean");
+        }
+        // Backward: dβ/dγ are the two sequential reductions, and dx is
+        // orthogonal to both 1 and x̂ per channel (the projection the
+        // mean/variance terms implement).
+        let dy = pseudo(&mut rng, x.len(), 0);
+        let mut dgamma = vec![0.0f32; c];
+        let mut dbeta = vec![0.0f32; c];
+        let dx = bn_backward_train(&cache, &gamma, &dy, &mut dgamma, &mut dbeta, n, c, hw);
+        for ci in 0..c {
+            let inv = 1.0 / (cache.var[ci] + BN_EPS).sqrt();
+            let (mut s_dy, mut s_dyxh) = (0.0f32, 0.0f32);
+            let (mut o_one, mut o_xhat) = (0.0f64, 0.0f64);
+            for ni in 0..n {
+                for i in 0..hw {
+                    let idx = (ni * c + ci) * hw + i;
+                    let xhat = (x[idx] - cache.mean[ci]) * inv;
+                    s_dy += dy[idx];
+                    s_dyxh += dy[idx] * xhat;
+                    o_one += dx[idx] as f64;
+                    o_xhat += dx[idx] as f64 * xhat as f64;
+                }
+            }
+            assert_eq!(dbeta[ci], s_dy);
+            assert_eq!(dgamma[ci], s_dyxh);
+            assert!(o_one.abs() < 1e-3, "channel {ci}: ⟨dx, 1⟩ = {o_one}");
+            assert!(o_xhat.abs() < 1e-3, "channel {ci}: ⟨dx, x̂⟩ = {o_xhat}");
+        }
+        // Eval-mode backward: dx is the plain chain rule through the
+        // constant running stats.
+        let rvar: Vec<f32> = (0..c).map(|_| rng.f32() + 0.5).collect();
+        let rmean = pseudo(&mut rng, c, 0);
+        let mut dg2 = vec![0.0f32; c];
+        let mut db2 = vec![0.0f32; c];
+        let dx_eval = bn_backward_eval(&x, &gamma, &rmean, &rvar, &dy, &mut dg2, &mut db2, n, c, hw);
+        for ci in 0..c {
+            let inv = 1.0 / (rvar[ci] + BN_EPS).sqrt();
+            for ni in 0..n {
+                for i in 0..hw {
+                    let idx = (ni * c + ci) * hw + i;
+                    assert_eq!(dx_eval[idx], dy[idx] * gamma[ci] * inv);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_channel_mask_kernels_match_per_unit_kernels_on_expanded_masks() {
+        // A per-channel mask is the per-unit kernel applied to the mask
+        // expanded across the spatial extent: a (the activations) and dz
+        // run element-identical arithmetic, so they match bitwise; dmask
+        // reduces in a different order (per unit vs per channel), so the
+        // channel sums compare at tolerance.
+        let mut rng = Rng::new(0xCA4E);
+        let (n, c, hw) = (2usize, 3usize, 5usize);
+        let z = pseudo(&mut rng, n * c * hw, 4);
+        let da = pseudo(&mut rng, n * c * hw, 0);
+        let mask: Vec<f32> = (0..c).map(|j| [0.0, 1.0, 0.5][j % 3]).collect();
+        let expanded: Vec<f32> = (0..c * hw).map(|u| mask[u / hw]).collect();
+        for poly in [false, true] {
+            let mut a_ch = Vec::new();
+            mask_act_channel_into(&z, &mask, n, c, hw, poly, &mut a_ch);
+            let a_unit = mask_act(&z, &expanded, n, c * hw, poly);
+            assert_eq!(a_ch, a_unit, "poly={poly}");
+            let (dmask_ch, dz_ch) = dact_channel(&z, &mask, &da, n, c, hw, poly);
+            let (dmask_unit, dz_unit) = dact(&z, &expanded, &da, n, c * hw, poly);
+            assert_eq!(dz_ch, dz_unit, "poly={poly}");
+            for ci in 0..c {
+                let want: f32 = dmask_unit[ci * hw..(ci + 1) * hw].iter().sum();
+                assert!(
+                    (dmask_ch[ci] - want).abs() < 1e-4,
+                    "poly={poly} ci={ci}: {} vs {want}",
+                    dmask_ch[ci]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gap_and_residual_add_match_oracles() {
+        let mut rng = Rng::new(0x6A9);
+        let (n, c, hw) = (2usize, 3usize, 7usize);
+        let x = pseudo(&mut rng, n * c * hw, 0);
+        let mut p = Vec::new();
+        gap_into(&x, n, c, hw, &mut p);
+        for ni in 0..n {
+            for ci in 0..c {
+                let mut acc = 0.0f32;
+                for i in 0..hw {
+                    acc += x[(ni * c + ci) * hw + i];
+                }
+                assert_eq!(p[ni * c + ci], acc / hw as f32);
+            }
+        }
+        let dy = pseudo(&mut rng, n * c, 0);
+        let dx = gap_back(&dy, n, c, hw);
+        for ni in 0..n {
+            for ci in 0..c {
+                for i in 0..hw {
+                    assert_eq!(dx[(ni * c + ci) * hw + i], dy[ni * c + ci] / hw as f32);
+                }
+            }
+        }
+        let mut a = pseudo(&mut rng, 9, 0);
+        let b = pseudo(&mut rng, 9, 0);
+        let want: Vec<f32> = a.iter().zip(&b).map(|(&p, &q)| p + q).collect();
+        add_into(&mut a, &b);
+        assert_eq!(a, want);
     }
 }

@@ -8,10 +8,12 @@
 //!   HLO-text artifacts (`artifacts/*.hlo.txt`), flow adapted from
 //!   /opt/xla-example/load_hlo. [`manifest`] parses the interchange contract
 //!   written by `python/compile/aot.py`.
-//! - [`reference::RefBackend`] — a pure-Rust masked-activation MLP with
-//!   hand-written autodiff; runs the full coordinator (BCD + baselines)
-//!   with no artifacts or native deps, for tests/CI and as a template for
-//!   future backends.
+//! - [`reference::RefBackend`] — a pure-Rust backend with hand-written
+//!   autodiff; runs the full coordinator (BCD + baselines) with no
+//!   artifacts or native deps, for tests/CI and as a template for future
+//!   backends. It serves masked-activation MLP stand-ins (`mlp_*`) and the
+//!   paper's conv/residual topologies ([`convnet`]: `resnet18_*`, `wrn22_*`
+//!   — DESIGN.md §12).
 //!
 //! [`session::Session`] adds the typed entry-point API both share. All
 //! backends are `Send + Sync` so the BCD trial scan can fan out across
@@ -21,6 +23,7 @@
 //! contract of DESIGN.md §8/§11 holds by construction.
 
 pub mod backend;
+pub mod convnet;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod kernels;
@@ -55,15 +58,26 @@ fn open_pjrt(_artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
     )
 }
 
-/// Open an execution backend by name.
+/// Open an execution backend by name at the default conv-model sizing.
 ///
 /// - `"pjrt"` — the PJRT engine over `artifacts_dir` (needs the feature).
 /// - `"reference"` — the pure-Rust reference backend (always available).
 /// - `"auto"` — PJRT when compiled in *and* artifacts exist, else reference.
 pub fn open_backend(artifacts_dir: &Path, kind: &str) -> Result<Box<dyn Backend>> {
+    open_backend_with(artifacts_dir, kind, &crate::config::ModelConfig::default())
+}
+
+/// [`open_backend`] with explicit conv-model sizing (the `model.*` config
+/// keys). Only the reference backend consumes the sizing — PJRT artifacts
+/// carry their own compiled shapes.
+pub fn open_backend_with(
+    artifacts_dir: &Path,
+    kind: &str,
+    model: &crate::config::ModelConfig,
+) -> Result<Box<dyn Backend>> {
     match kind {
         "pjrt" => open_pjrt(artifacts_dir),
-        "reference" => Ok(Box::new(RefBackend::standard())),
+        "reference" => Ok(Box::new(RefBackend::standard_with(model))),
         "auto" => {
             if HAVE_PJRT && artifacts_dir.join("manifest.json").exists() {
                 open_pjrt(artifacts_dir)
@@ -72,7 +86,7 @@ pub fn open_backend(artifacts_dir: &Path, kind: &str) -> Result<Box<dyn Backend>
                     "runtime: using reference backend ({})",
                     if HAVE_PJRT { "no artifacts found" } else { "built without pjrt" }
                 );
-                Ok(Box::new(RefBackend::standard()))
+                Ok(Box::new(RefBackend::standard_with(model)))
             }
         }
         other => anyhow::bail!("unknown backend {other:?} (expected auto|pjrt|reference)"),

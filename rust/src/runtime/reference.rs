@@ -1,7 +1,18 @@
-//! Pure-Rust reference backend: a masked-activation MLP with hand-written
-//! forward/backward passes, implementing the full artifact entry-point
-//! contract (`init`, `forward`, `eval_batch`, `train_step`, `snl_step`,
-//! `kd_step`) without HLO artifacts, XLA, or any native dependency.
+//! Pure-Rust reference backend: masked-activation networks with
+//! hand-written forward/backward passes, implementing the full artifact
+//! entry-point contract (`init`, `forward`, `eval_batch`, `train_step`,
+//! `snl_step`, `kd_step`) without HLO artifacts, XLA, or any native
+//! dependency.
+//!
+//! Two model families are served (DESIGN.md §12):
+//!
+//! - `mlp_*` / `mlpw_*` — two-hidden-layer MLP stand-ins, cheap enough for
+//!   every CI tier. The deprecated `resnet_*` / `wrn_*` keys they were
+//!   originally registered under still resolve to them as aliases.
+//! - `resnet18_*` / `wrn22_*` — the paper's conv/residual topologies
+//!   (post-act ResNet and pre-act WideResNet), compiled to flat-pack
+//!   layouts by [`crate::runtime::convnet`] with per-channel mask layers
+//!   and residual-block resume boundaries.
 //!
 //! Purpose (DESIGN note): coordinator logic — BCD, the baselines, the
 //! parallel trial scan — is backbone-agnostic; it only needs *some*
@@ -26,7 +37,9 @@
 //! single-trial path uses, making per-hypothesis results bit-identical to
 //! single-hypothesis calls by construction.
 
+use crate::config::ModelConfig;
 use crate::runtime::backend::{Backend, CallStats, DeviceBuf, HostArg, MaskSlab, StatsRecorder};
+use crate::runtime::convnet::{ConvPlan, ConvSpec, Family};
 use crate::runtime::kernels;
 use crate::runtime::manifest::{Manifest, ModelInfo, PackEntry};
 use crate::tensor::Tensor;
@@ -92,6 +105,12 @@ struct RefModel {
     poly: bool,
 }
 
+/// A registered model: an MLP stand-in or a compiled conv/residual plan.
+enum ModelImpl {
+    Mlp(RefModel),
+    Conv(ConvPlan),
+}
+
 /// Device-buffer payload of the reference backend (host-resident copies —
 /// the "device" is the CPU, but the caching contract is identical to PJRT:
 /// upload once, reuse across calls).
@@ -110,7 +129,7 @@ enum ArgView<'a> {
 /// The pure-Rust execution backend.
 pub struct RefBackend {
     manifest: Manifest,
-    models: BTreeMap<String, RefModel>,
+    models: BTreeMap<String, ModelImpl>,
     stats: StatsRecorder,
 }
 
@@ -183,7 +202,10 @@ impl RefBackend {
                 artifacts: BTreeMap::new(),
             };
             infos.insert(spec.key.clone(), info);
-            models.insert(spec.key.clone(), RefModel { layout, poly: spec.poly });
+            models.insert(
+                spec.key.clone(),
+                ModelImpl::Mlp(RefModel { layout, poly: spec.poly }),
+            );
         }
         RefBackend {
             manifest: Manifest {
@@ -197,13 +219,21 @@ impl RefBackend {
         }
     }
 
+    /// The standard model table at the default [`ModelConfig`] sizing.
+    pub fn standard() -> RefBackend {
+        RefBackend::standard_with(&ModelConfig::default())
+    }
+
     /// The standard model table, mirroring the artifact manifest's key
     /// naming (`Experiment::model_key`) so pipelines, benches and the CLI
-    /// run unchanged on this backend.
-    pub fn standard() -> RefBackend {
+    /// run unchanged on this backend: MLP stand-ins under `mlp_*`/`mlpw_*`
+    /// (the deprecated `resnet_*`/`wrn_*` keys still resolve as aliases)
+    /// plus the paper's conv topologies `resnet18_*`/`wrn22_*` sized by
+    /// `cfg` (DESIGN.md §12).
+    pub fn standard_with(cfg: &ModelConfig) -> RefBackend {
         let mut specs = Vec::new();
-        for backbone in ["resnet", "wrn"] {
-            let hidden = if backbone == "resnet" { (256, 128) } else { (320, 160) };
+        for backbone in ["mlp", "mlpw"] {
+            let hidden = if backbone == "mlp" { (256, 128) } else { (320, 160) };
             for (size, classes) in [(16usize, 10usize), (16, 20), (32, 20)] {
                 for poly in [false, true] {
                     let suffix = if poly { "_poly" } else { "" };
@@ -219,17 +249,95 @@ impl RefBackend {
                 }
             }
         }
-        RefBackend::new(&specs, 16)
+        let mut be = RefBackend::new(&specs, 16);
+        for (backbone, family) in [("resnet18", Family::Resnet), ("wrn22", Family::Wrn)] {
+            for (size, classes) in [(16usize, 10usize), (16, 20), (32, 20)] {
+                for poly in [false, true] {
+                    let suffix = if poly { "_poly" } else { "" };
+                    be.add_conv(&ConvSpec {
+                        key: format!("{backbone}_{size}x{size}_c{classes}{suffix}"),
+                        family,
+                        num_classes: classes,
+                        image_size: size,
+                        channels: 3,
+                        poly,
+                        base: cfg.conv_base,
+                        widen: cfg.conv_widen,
+                        blocks: cfg.conv_blocks,
+                        bn_momentum: cfg.bn_momentum,
+                    });
+                }
+            }
+        }
+        be
     }
 
-    fn model_impl(&self, key: &str) -> Result<&RefModel> {
+    /// Register one conv/residual model: compile the plan and publish its
+    /// flat-pack layout through the manifest.
+    pub fn add_conv(&mut self, spec: &ConvSpec) {
+        let plan = ConvPlan::build(spec);
+        let info = ModelInfo {
+            key: spec.key.clone(),
+            backbone: match spec.family {
+                Family::Resnet => "resnet18".into(),
+                Family::Wrn => "wrn22".into(),
+            },
+            num_classes: spec.num_classes,
+            image_size: spec.image_size,
+            channels: spec.channels,
+            poly: spec.poly,
+            param_size: plan.param_size,
+            mask_size: plan.mask_size,
+            mask_layers: plan.mask_layers.clone(),
+            param_entries: plan.param_entries.clone(),
+            artifacts: BTreeMap::new(),
+        };
+        self.manifest.models.insert(spec.key.clone(), info);
+        self.models.insert(spec.key.clone(), ModelImpl::Conv(plan));
+    }
+
+    /// Resolve a model key, honouring the deprecated `resnet_*`/`wrn_*`
+    /// aliases of the MLP stand-ins (renamed `mlp_*`/`mlpw_*` when the
+    /// real conv backbones took the `resnet18_*`/`wrn22_*` names). The
+    /// returned key is canonical: it indexes both `models` and the
+    /// manifest.
+    fn canon<'a>(&'a self, key: &'a str) -> &'a str {
+        if self.models.contains_key(key) {
+            return key;
+        }
+        let renamed = if let Some(rest) = key.strip_prefix("resnet_") {
+            format!("mlp_{rest}")
+        } else if let Some(rest) = key.strip_prefix("wrn_") {
+            format!("mlpw_{rest}")
+        } else {
+            return key;
+        };
+        match self.models.get_key_value(renamed.as_str()) {
+            Some((canonical, _)) => canonical.as_str(),
+            None => key,
+        }
+    }
+
+    fn model_impl(&self, key: &str) -> Result<&ModelImpl> {
         self.models
-            .get(key)
+            .get(self.canon(key))
             .ok_or_else(|| anyhow!("reference backend has no model {key:?}"))
     }
 
     fn execute(&self, key: &str, fn_name: &str, args: &[ArgView]) -> Result<Vec<Tensor>> {
-        let model = self.model_impl(key)?;
+        match self.model_impl(key)? {
+            ModelImpl::Mlp(model) => self.execute_mlp(key, model, fn_name, args),
+            ModelImpl::Conv(plan) => self.execute_conv(key, plan, fn_name, args),
+        }
+    }
+
+    fn execute_mlp(
+        &self,
+        key: &str,
+        model: &RefModel,
+        fn_name: &str,
+        args: &[ArgView],
+    ) -> Result<Vec<Tensor>> {
         match fn_name {
             "init" => {
                 check_arity(key, fn_name, args, 1)?;
@@ -325,21 +433,7 @@ impl RefBackend {
                 check_len(key, fn_name, "t_logits", t_logits.len(), bsz * k)?;
                 let f = forward(&model.layout, model.poly, p, m, x, bsz);
                 let (ce, _, mut dlogits) = kernels::softmax_ce(&f.logits, y, model.layout.k);
-                // Distillation: 0.5*CE(y) + 0.5*T^2*CE(softmax(t/T), softmax(s/T)).
-                let mut kd_loss = 0.0f32;
-                for bi in 0..bsz {
-                    let s = &f.logits[bi * k..(bi + 1) * k];
-                    let t = &t_logits[bi * k..(bi + 1) * k];
-                    let ps = kernels::softmax_t(s, temp);
-                    let pt = kernels::softmax_t(t, temp);
-                    for j in 0..k {
-                        kd_loss -= pt[j] * ps[j].max(1e-12).ln();
-                        // d(T^2 * soft-CE)/ds = T * (softmax(s/T) - softmax(t/T)).
-                        dlogits[bi * k + j] = 0.5 * dlogits[bi * k + j]
-                            + 0.5 * temp * (ps[j] - pt[j]) / bsz as f32;
-                    }
-                }
-                kd_loss = temp * temp * kd_loss / bsz as f32;
+                let kd_loss = kd_blend(&f.logits, t_logits, &mut dlogits, bsz, k, temp);
                 let loss = 0.5 * ce + 0.5 * kd_loss;
                 let (grad, _) = backward(&model.layout, model.poly, p, m, x, &f, &dlogits, bsz);
                 let (new_p, new_mom) = kernels::sgd_momentum(p, mom, &grad, lr, MOMENTUM);
@@ -349,19 +443,141 @@ impl RefBackend {
         }
     }
 
+    /// Conv/residual entry points. Scoring, SGD, the SNL alpha update and
+    /// the KD blend are the very same code the MLP path runs; only the
+    /// network forward/backward differs (routed through [`ConvPlan`]).
+    /// Training steps use batch statistics and then fold them into the
+    /// running-stat parameters; every scoring path is eval-mode BN, so
+    /// per-example independence (and with it padding-safety and the
+    /// staged-execution contract) holds on conv models too.
+    fn execute_conv(
+        &self,
+        key: &str,
+        plan: &ConvPlan,
+        fn_name: &str,
+        args: &[ArgView],
+    ) -> Result<Vec<Tensor>> {
+        let k = plan.num_classes;
+        match fn_name {
+            "init" => {
+                check_arity(key, fn_name, args, 1)?;
+                let seed = i32_scalar(args, 0, "seed")?;
+                Ok(vec![vec1(plan.init_params(seed))])
+            }
+            "forward" => {
+                check_arity(key, fn_name, args, 3)?;
+                let (p, m, x, bsz) = conv_pm_x(plan, args, key, fn_name)?;
+                let logits = plan.forward_eval(p, m, x, bsz);
+                Ok(vec![Tensor::new(vec![bsz, k], logits)])
+            }
+            "eval_batch" => {
+                check_arity(key, fn_name, args, 4)?;
+                let (p, m, x, bsz) = conv_pm_x(plan, args, key, fn_name)?;
+                let y = i32_arg(args, 3, "y")?;
+                check_len(key, fn_name, "y", y.len(), bsz)?;
+                let logits = plan.forward_eval(p, m, x, bsz);
+                let (loss, correct) = kernels::softmax_ce_batch(&logits, y, k, None);
+                Ok(vec![Tensor::scalar(loss), Tensor::scalar(correct as f32)])
+            }
+            "train_step" => {
+                check_arity(key, fn_name, args, 6)?;
+                let p = f32_arg(args, 0, "params")?;
+                let mom = f32_arg(args, 1, "mom")?;
+                let m = f32_arg(args, 2, "mask")?;
+                let x = f32_arg(args, 3, "x")?;
+                let y = i32_arg(args, 4, "y")?;
+                let lr = f32_scalar(args, 5, "lr")?;
+                let bsz = conv_batch_of(plan, key, fn_name, x.len())?;
+                check_len(key, fn_name, "params", p.len(), plan.param_size)?;
+                check_len(key, fn_name, "mask", m.len(), plan.mask_size)?;
+                check_len(key, fn_name, "y", y.len(), bsz)?;
+                let (logits, tape) = plan.forward_train(p, m, x, bsz);
+                let (loss, correct, dlogits) = kernels::softmax_ce(&logits, y, k);
+                let (grad, _) = plan.backward(p, m, &tape, &dlogits, bsz);
+                let (mut new_p, new_mom) = kernels::sgd_momentum(p, mom, &grad, lr, MOMENTUM);
+                plan.update_running_stats(&mut new_p, &tape);
+                Ok(vec![
+                    vec1(new_p),
+                    vec1(new_mom),
+                    Tensor::scalar(loss),
+                    Tensor::scalar(correct as f32),
+                ])
+            }
+            "snl_step" => {
+                check_arity(key, fn_name, args, 8)?;
+                let p = f32_arg(args, 0, "params")?;
+                let mom = f32_arg(args, 1, "mom")?;
+                let alphas = f32_arg(args, 2, "alphas")?;
+                let x = f32_arg(args, 3, "x")?;
+                let y = i32_arg(args, 4, "y")?;
+                let lr = f32_scalar(args, 5, "lr")?;
+                let alpha_lr = f32_scalar(args, 6, "alpha_lr")?;
+                let lam = f32_scalar(args, 7, "lam")?;
+                let bsz = conv_batch_of(plan, key, fn_name, x.len())?;
+                check_len(key, fn_name, "params", p.len(), plan.param_size)?;
+                check_len(key, fn_name, "alphas", alphas.len(), plan.mask_size)?;
+                check_len(key, fn_name, "y", y.len(), bsz)?;
+                let (logits, tape) = plan.forward_train(p, alphas, x, bsz);
+                let (ce, _, dlogits) = kernels::softmax_ce(&logits, y, k);
+                let (grad, dalpha) = plan.backward(p, alphas, &tape, &dlogits, bsz);
+                let (mut new_p, new_mom) = kernels::sgd_momentum(p, mom, &grad, lr, MOMENTUM);
+                plan.update_running_stats(&mut new_p, &tape);
+                // Same projected SGD under CE + lam * ||alpha||_1 as the
+                // MLP path; alphas here gate whole channels.
+                let new_alphas: Vec<f32> = alphas
+                    .iter()
+                    .zip(&dalpha)
+                    .map(|(&a, &da)| (a - alpha_lr * (da + lam)).clamp(0.0, 1.0))
+                    .collect();
+                let l1: f32 = alphas.iter().sum();
+                Ok(vec![
+                    vec1(new_p),
+                    vec1(new_mom),
+                    vec1(new_alphas),
+                    Tensor::scalar(ce + lam * l1),
+                ])
+            }
+            "kd_step" => {
+                check_arity(key, fn_name, args, 8)?;
+                let p = f32_arg(args, 0, "params")?;
+                let mom = f32_arg(args, 1, "mom")?;
+                let m = f32_arg(args, 2, "mask")?;
+                let x = f32_arg(args, 3, "x")?;
+                let y = i32_arg(args, 4, "y")?;
+                let t_logits = f32_arg(args, 5, "t_logits")?;
+                let lr = f32_scalar(args, 6, "lr")?;
+                let temp = f32_scalar(args, 7, "temp")?.max(1e-3);
+                let bsz = conv_batch_of(plan, key, fn_name, x.len())?;
+                check_len(key, fn_name, "params", p.len(), plan.param_size)?;
+                check_len(key, fn_name, "mask", m.len(), plan.mask_size)?;
+                check_len(key, fn_name, "y", y.len(), bsz)?;
+                check_len(key, fn_name, "t_logits", t_logits.len(), bsz * k)?;
+                let (logits, tape) = plan.forward_train(p, m, x, bsz);
+                let (ce, _, mut dlogits) = kernels::softmax_ce(&logits, y, k);
+                let kd_loss = kd_blend(&logits, t_logits, &mut dlogits, bsz, k, temp);
+                let loss = 0.5 * ce + 0.5 * kd_loss;
+                let (grad, _) = plan.backward(p, m, &tape, &dlogits, bsz);
+                let (mut new_p, new_mom) = kernels::sgd_momentum(p, mom, &grad, lr, MOMENTUM);
+                plan.update_running_stats(&mut new_p, &tape);
+                Ok(vec![vec1(new_p), vec1(new_mom), Tensor::scalar(loss)])
+            }
+            other => bail!("reference backend: model {key}: no entry point {other:?}"),
+        }
+    }
+
     /// Validate the boundary-0 resume arguments shared by
-    /// [`Backend::forward_from`] and [`Backend::eval_from`]: returns
-    /// `(model, params, layer-1 mask, boundary-0 activations, batch)`.
+    /// [`Backend::forward_from`] and [`Backend::eval_from`] on MLP models:
+    /// returns `(params, layer-1 mask, boundary-0 activations, batch)`.
     fn staged_args<'a>(
         &self,
+        model: &RefModel,
         model_key: &str,
         fn_name: &str,
         segment: usize,
         acts: &'a DeviceBuf,
         params: &'a DeviceBuf,
         mask_suffix: &'a DeviceBuf,
-    ) -> Result<(&RefModel, &'a [f32], &'a [f32], &'a [f32], usize)> {
-        let model = self.model_impl(model_key)?;
+    ) -> Result<(&'a [f32], &'a [f32], &'a [f32], usize)> {
         if segment != 0 {
             bail!("{model_key}:{fn_name}: no segment boundary {segment} (this model has 1)");
         }
@@ -377,7 +593,40 @@ impl RefBackend {
                 a1.len()
             );
         }
-        Ok((model, p, m2, a1, a1.len() / h1))
+        Ok((p, m2, a1, a1.len() / h1))
+    }
+
+    /// Conv counterpart of [`RefBackend::staged_args`]: validates a resume
+    /// at any of the plan's block boundaries and returns
+    /// `(params, mask suffix, boundary activations, batch)`.
+    fn conv_staged_args<'a>(
+        &self,
+        plan: &ConvPlan,
+        model_key: &str,
+        fn_name: &str,
+        segment: usize,
+        acts: &'a DeviceBuf,
+        params: &'a DeviceBuf,
+        mask_suffix: &'a DeviceBuf,
+    ) -> Result<(&'a [f32], &'a [f32], &'a [f32], usize)> {
+        let segs = plan.segment_count();
+        if segment >= segs {
+            bail!("{model_key}:{fn_name}: no segment boundary {segment} (this model has {segs})");
+        }
+        let p = ref_f32(params, "params")?;
+        let m = ref_f32(mask_suffix, "mask_suffix")?;
+        let a = ref_f32(acts, "acts")?;
+        check_len(model_key, fn_name, "params", p.len(), plan.param_size)?;
+        let want = plan.mask_size - plan.suffix_offset(segment);
+        check_len(model_key, fn_name, "mask_suffix", m.len(), want)?;
+        let entry = plan.boundary_entry[segment];
+        if a.is_empty() || a.len() % entry != 0 {
+            bail!(
+                "{model_key}:{fn_name}: input \"acts\" has {} elements, expects a multiple of {entry}",
+                a.len()
+            );
+        }
+        Ok((p, m, a, a.len() / entry))
     }
 
     /// Validate a hypothesis slab: `n` rows of `want_width` f32s, one
@@ -412,11 +661,12 @@ impl RefBackend {
     }
 
     /// Validate the boundary-0 batched-resume arguments shared by
-    /// [`Backend::forward_from_multi`] and [`Backend::eval_from_multi`]:
-    /// returns `(model, params, suffix rows, boundary-0 acts, batch)`.
+    /// [`Backend::forward_from_multi`] and [`Backend::eval_from_multi`] on
+    /// MLP models: returns `(params, suffix rows, boundary-0 acts, batch)`.
     #[allow(clippy::too_many_arguments)]
     fn staged_multi_args<'a>(
         &self,
+        model: &RefModel,
         model_key: &str,
         fn_name: &str,
         segment: usize,
@@ -424,8 +674,7 @@ impl RefBackend {
         params: &'a DeviceBuf,
         slab: &'a MaskSlab,
         live: &[bool],
-    ) -> Result<(&RefModel, &'a [f32], &'a [f32], &'a [f32], usize)> {
-        let model = self.model_impl(model_key)?;
+    ) -> Result<(&'a [f32], &'a [f32], &'a [f32], usize)> {
         if segment != 0 {
             bail!("{model_key}:{fn_name}: no segment boundary {segment} (this model has 1)");
         }
@@ -440,28 +689,80 @@ impl RefBackend {
                 a1.len()
             );
         }
-        Ok((model, p, rows, a1, a1.len() / h1))
+        Ok((p, rows, a1, a1.len() / h1))
+    }
+
+    /// Conv counterpart of [`RefBackend::staged_multi_args`]: suffix rows
+    /// all resume from the same cached block-boundary activation.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_staged_multi_args<'a>(
+        &self,
+        plan: &ConvPlan,
+        model_key: &str,
+        fn_name: &str,
+        segment: usize,
+        acts: &'a DeviceBuf,
+        params: &'a DeviceBuf,
+        slab: &'a MaskSlab,
+        live: &[bool],
+    ) -> Result<(&'a [f32], &'a [f32], &'a [f32], usize)> {
+        let segs = plan.segment_count();
+        if segment >= segs {
+            bail!("{model_key}:{fn_name}: no segment boundary {segment} (this model has {segs})");
+        }
+        let p = ref_f32(params, "params")?;
+        check_len(model_key, fn_name, "params", p.len(), plan.param_size)?;
+        let width = plan.mask_size - plan.suffix_offset(segment);
+        let rows = self.slab_rows(model_key, fn_name, slab, width, live)?;
+        let a = ref_f32(acts, "acts")?;
+        let entry = plan.boundary_entry[segment];
+        if a.is_empty() || a.len() % entry != 0 {
+            bail!(
+                "{model_key}:{fn_name}: input \"acts\" has {} elements, expects a multiple of {entry}",
+                a.len()
+            );
+        }
+        Ok((p, rows, a, a.len() / entry))
     }
 
     /// Validate the batched-full arguments shared by
-    /// [`Backend::forward_multi`] and [`Backend::eval_batch_multi`]:
-    /// returns `(model, params, full-mask rows, x, batch)`.
+    /// [`Backend::forward_multi`] and [`Backend::eval_batch_multi`] on MLP
+    /// models: returns `(params, full-mask rows, x, batch)`.
     fn full_multi_args<'a>(
         &self,
+        model: &RefModel,
         model_key: &str,
         fn_name: &str,
         params: &'a DeviceBuf,
         slab: &'a MaskSlab,
         x: &'a DeviceBuf,
         live: &[bool],
-    ) -> Result<(&RefModel, &'a [f32], &'a [f32], &'a [f32], usize)> {
-        let model = self.model_impl(model_key)?;
+    ) -> Result<(&'a [f32], &'a [f32], &'a [f32], usize)> {
         let p = ref_f32(params, "params")?;
         check_len(model_key, fn_name, "params", p.len(), model.layout.param_size())?;
         let rows = self.slab_rows(model_key, fn_name, slab, model.layout.mask_size(), live)?;
         let xv = ref_f32(x, "x")?;
         let bsz = batch_of(model, model_key, fn_name, xv.len())?;
-        Ok((model, p, rows, xv, bsz))
+        Ok((p, rows, xv, bsz))
+    }
+
+    /// Conv counterpart of [`RefBackend::full_multi_args`].
+    fn conv_full_multi_args<'a>(
+        &self,
+        plan: &ConvPlan,
+        model_key: &str,
+        fn_name: &str,
+        params: &'a DeviceBuf,
+        slab: &'a MaskSlab,
+        x: &'a DeviceBuf,
+        live: &[bool],
+    ) -> Result<(&'a [f32], &'a [f32], &'a [f32], usize)> {
+        let p = ref_f32(params, "params")?;
+        check_len(model_key, fn_name, "params", p.len(), plan.param_size)?;
+        let rows = self.slab_rows(model_key, fn_name, slab, plan.mask_size, live)?;
+        let xv = ref_f32(x, "x")?;
+        let bsz = conv_batch_of(plan, model_key, fn_name, xv.len())?;
+        Ok((p, rows, xv, bsz))
     }
 }
 
@@ -472,6 +773,13 @@ impl Backend for RefBackend {
 
     fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Alias-aware lookup: deprecated `resnet_*`/`wrn_*` keys resolve to
+    /// the renamed `mlp_*`/`mlpw_*` entries; `info.key` is always the
+    /// canonical name.
+    fn model(&self, key: &str) -> Result<&ModelInfo> {
+        self.manifest.model(self.canon(key))
     }
 
     fn upload_f32(&self, data: &[f32], _dims: &[usize]) -> Result<DeviceBuf> {
@@ -511,12 +819,49 @@ impl Backend for RefBackend {
             .timed(&format!("{model_key}:{fn_name}"), || self.execute(model_key, fn_name, &args))
     }
 
-    /// One resumable boundary per model: `a1`, the activation of mask
-    /// layer 0. (Mask layer 1 feeds the output head directly, so no
+    /// MLP models expose one resumable boundary: `a1`, the activation of
+    /// mask layer 0. (Mask layer 1 feeds the output head directly, so no
     /// hypothesis has a first dirty layer past 1 — a second boundary would
-    /// never be consulted.)
+    /// never be consulted.) Conv models expose one boundary per residual
+    /// block whose resume could ever be consulted (the plan drops the
+    /// final block's for the same reason).
     fn segments(&self, model_key: &str) -> usize {
-        usize::from(self.models.contains_key(model_key))
+        match self.models.get(self.canon(model_key)) {
+            Some(ModelImpl::Mlp(_)) => 1,
+            Some(ModelImpl::Conv(plan)) => plan.segment_count(),
+            None => 0,
+        }
+    }
+
+    /// MLP boundaries coincide with mask layers (the trait default); a
+    /// conv boundary folds both activations of its residual block, so the
+    /// mapping comes from the plan's `boundary_layers`.
+    fn segment_layer(&self, model_key: &str, segment: usize) -> usize {
+        match self.models.get(self.canon(model_key)) {
+            Some(ModelImpl::Conv(plan)) => {
+                plan.boundary_layers.get(segment).copied().unwrap_or(segment)
+            }
+            _ => segment,
+        }
+    }
+
+    /// Conv boundary activations are image-shaped (`N*C*H*W` floats), not
+    /// mask-layer-sized, so the trait default (mask-layer size) would
+    /// undercount them badly and wreck the prefix-cache budget accounting.
+    fn prefix_entry_bytes(&self, model_key: &str, segment: usize, batch: usize) -> usize {
+        match self.models.get(self.canon(model_key)) {
+            Some(ModelImpl::Conv(plan)) => {
+                plan.boundary_entry.get(segment).map_or(0, |&e| 4 * batch * e)
+            }
+            Some(ModelImpl::Mlp(model)) => {
+                if segment == 0 {
+                    4 * batch * model.layout.h1
+                } else {
+                    0
+                }
+            }
+            None => 0,
+        }
     }
 
     fn forward_prefix(
@@ -527,21 +872,40 @@ impl Backend for RefBackend {
         mask: &DeviceBuf,
         x: &DeviceBuf,
     ) -> Result<DeviceBuf> {
-        let model = self.model_impl(model_key)?;
-        if segment != 0 {
-            bail!("{model_key}:forward_prefix: no segment boundary {segment} (this model has 1)");
-        }
         let p = ref_f32(params, "params")?;
         let m = ref_f32(mask, "mask")?;
         let xv = ref_f32(x, "x")?;
-        check_len(model_key, "forward_prefix", "params", p.len(), model.layout.param_size())?;
-        check_len(model_key, "forward_prefix", "mask", m.len(), model.layout.mask_size())?;
-        let bsz = batch_of(model, model_key, "forward_prefix", xv.len())?;
-        self.stats.timed(&format!("{model_key}:forward_prefix"), || {
-            let head =
-                forward_head(&model.layout, model.poly, p, &m[..model.layout.h1], xv, bsz);
-            Ok(DeviceBuf::new(RefBuf::F32(head.a1)))
-        })
+        match self.model_impl(model_key)? {
+            ModelImpl::Mlp(model) => {
+                if segment != 0 {
+                    bail!(
+                        "{model_key}:forward_prefix: no segment boundary {segment} (this model has 1)"
+                    );
+                }
+                check_len(model_key, "forward_prefix", "params", p.len(), model.layout.param_size())?;
+                check_len(model_key, "forward_prefix", "mask", m.len(), model.layout.mask_size())?;
+                let bsz = batch_of(model, model_key, "forward_prefix", xv.len())?;
+                self.stats.timed(&format!("{model_key}:forward_prefix"), || {
+                    let head =
+                        forward_head(&model.layout, model.poly, p, &m[..model.layout.h1], xv, bsz);
+                    Ok(DeviceBuf::new(RefBuf::F32(head.a1)))
+                })
+            }
+            ModelImpl::Conv(plan) => {
+                let segs = plan.segment_count();
+                if segment >= segs {
+                    bail!(
+                        "{model_key}:forward_prefix: no segment boundary {segment} (this model has {segs})"
+                    );
+                }
+                check_len(model_key, "forward_prefix", "params", p.len(), plan.param_size)?;
+                check_len(model_key, "forward_prefix", "mask", m.len(), plan.mask_size)?;
+                let bsz = conv_batch_of(plan, model_key, "forward_prefix", xv.len())?;
+                self.stats.timed(&format!("{model_key}:forward_prefix"), || {
+                    Ok(DeviceBuf::new(RefBuf::F32(plan.forward_prefix(segment, p, m, xv, bsz))))
+                })
+            }
+        }
     }
 
     fn forward_from(
@@ -552,12 +916,31 @@ impl Backend for RefBackend {
         params: &DeviceBuf,
         mask_suffix: &DeviceBuf,
     ) -> Result<Tensor> {
-        let (model, p, m2, a1, bsz) =
-            self.staged_args(model_key, "forward_from", segment, acts, params, mask_suffix)?;
-        self.stats.timed(&format!("{model_key}:forward_from"), || {
-            let tail = forward_tail(&model.layout, model.poly, p, m2, a1, bsz);
-            Ok(Tensor::new(vec![bsz, model.layout.k], tail.logits))
-        })
+        match self.model_impl(model_key)? {
+            ModelImpl::Mlp(model) => {
+                let (p, m2, a1, bsz) = self
+                    .staged_args(model, model_key, "forward_from", segment, acts, params, mask_suffix)?;
+                self.stats.timed(&format!("{model_key}:forward_from"), || {
+                    let tail = forward_tail(&model.layout, model.poly, p, m2, a1, bsz);
+                    Ok(Tensor::new(vec![bsz, model.layout.k], tail.logits))
+                })
+            }
+            ModelImpl::Conv(plan) => {
+                let (p, m, a, bsz) = self.conv_staged_args(
+                    plan,
+                    model_key,
+                    "forward_from",
+                    segment,
+                    acts,
+                    params,
+                    mask_suffix,
+                )?;
+                self.stats.timed(&format!("{model_key}:forward_from"), || {
+                    let logits = plan.forward_from(segment, a, p, m, bsz);
+                    Ok(Tensor::new(vec![bsz, plan.num_classes], logits))
+                })
+            }
+        }
     }
 
     fn eval_from(
@@ -569,19 +952,43 @@ impl Backend for RefBackend {
         mask_suffix: &DeviceBuf,
         y: &DeviceBuf,
     ) -> Result<Vec<Tensor>> {
-        let (model, p, m2, a1, bsz) =
-            self.staged_args(model_key, "eval_from", segment, acts, params, mask_suffix)?;
-        let yv = ref_i32(y, "y")?;
-        check_len(model_key, "eval_from", "y", yv.len(), bsz)?;
-        self.stats.timed(&format!("{model_key}:eval_from"), || {
-            let tail = forward_tail(&model.layout, model.poly, p, m2, a1, bsz);
-            let (loss, correct) = kernels::softmax_ce_batch(&tail.logits, yv, model.layout.k, None);
-            Ok(vec![Tensor::scalar(loss), Tensor::scalar(correct as f32)])
-        })
+        match self.model_impl(model_key)? {
+            ModelImpl::Mlp(model) => {
+                let (p, m2, a1, bsz) = self
+                    .staged_args(model, model_key, "eval_from", segment, acts, params, mask_suffix)?;
+                let yv = ref_i32(y, "y")?;
+                check_len(model_key, "eval_from", "y", yv.len(), bsz)?;
+                self.stats.timed(&format!("{model_key}:eval_from"), || {
+                    let tail = forward_tail(&model.layout, model.poly, p, m2, a1, bsz);
+                    let (loss, correct) =
+                        kernels::softmax_ce_batch(&tail.logits, yv, model.layout.k, None);
+                    Ok(vec![Tensor::scalar(loss), Tensor::scalar(correct as f32)])
+                })
+            }
+            ModelImpl::Conv(plan) => {
+                let (p, m, a, bsz) = self.conv_staged_args(
+                    plan,
+                    model_key,
+                    "eval_from",
+                    segment,
+                    acts,
+                    params,
+                    mask_suffix,
+                )?;
+                let yv = ref_i32(y, "y")?;
+                check_len(model_key, "eval_from", "y", yv.len(), bsz)?;
+                self.stats.timed(&format!("{model_key}:eval_from"), || {
+                    let logits = plan.forward_from(segment, a, p, m, bsz);
+                    let (loss, correct) =
+                        kernels::softmax_ce_batch(&logits, yv, plan.num_classes, None);
+                    Ok(vec![Tensor::scalar(loss), Tensor::scalar(correct as f32)])
+                })
+            }
+        }
     }
 
     fn multi_width(&self, model_key: &str) -> usize {
-        if self.models.contains_key(model_key) {
+        if self.models.contains_key(self.canon(model_key)) {
             MULTI_WIDTH
         } else {
             1
@@ -597,14 +1004,29 @@ impl Backend for RefBackend {
         y: &DeviceBuf,
         live: &[bool],
     ) -> Result<Vec<Option<(f32, f32)>>> {
-        let (model, p, rows, xv, bsz) =
-            self.full_multi_args(model_key, "eval_batch_multi", params, masks, x, live)?;
-        let yv = ref_i32(y, "y")?;
-        check_len(model_key, "eval_batch_multi", "y", yv.len(), bsz)?;
-        self.stats.timed(&format!("{model_key}:eval_batch_multi"), || {
-            let logits = forward_full_multi(&model.layout, model.poly, p, rows, xv, bsz, live);
-            Ok(score_multi(&logits, yv, model.layout.k))
-        })
+        match self.model_impl(model_key)? {
+            ModelImpl::Mlp(model) => {
+                let (p, rows, xv, bsz) =
+                    self.full_multi_args(model, model_key, "eval_batch_multi", params, masks, x, live)?;
+                let yv = ref_i32(y, "y")?;
+                check_len(model_key, "eval_batch_multi", "y", yv.len(), bsz)?;
+                self.stats.timed(&format!("{model_key}:eval_batch_multi"), || {
+                    let logits =
+                        forward_full_multi(&model.layout, model.poly, p, rows, xv, bsz, live);
+                    Ok(score_multi(&logits, yv, model.layout.k))
+                })
+            }
+            ModelImpl::Conv(plan) => {
+                let (p, rows, xv, bsz) = self
+                    .conv_full_multi_args(plan, model_key, "eval_batch_multi", params, masks, x, live)?;
+                let yv = ref_i32(y, "y")?;
+                check_len(model_key, "eval_batch_multi", "y", yv.len(), bsz)?;
+                self.stats.timed(&format!("{model_key}:eval_batch_multi"), || {
+                    let logits = conv_full_multi(plan, p, rows, xv, bsz, live);
+                    Ok(score_multi(&logits, yv, plan.num_classes))
+                })
+            }
+        }
     }
 
     fn forward_multi(
@@ -615,15 +1037,31 @@ impl Backend for RefBackend {
         x: &DeviceBuf,
         live: &[bool],
     ) -> Result<Vec<Option<Tensor>>> {
-        let (model, p, rows, xv, bsz) =
-            self.full_multi_args(model_key, "forward_multi", params, masks, x, live)?;
-        self.stats.timed(&format!("{model_key}:forward_multi"), || {
-            let logits = forward_full_multi(&model.layout, model.poly, p, rows, xv, bsz, live);
-            Ok(logits
-                .into_iter()
-                .map(|l| l.map(|v| Tensor::new(vec![bsz, model.layout.k], v)))
-                .collect())
-        })
+        match self.model_impl(model_key)? {
+            ModelImpl::Mlp(model) => {
+                let (p, rows, xv, bsz) =
+                    self.full_multi_args(model, model_key, "forward_multi", params, masks, x, live)?;
+                self.stats.timed(&format!("{model_key}:forward_multi"), || {
+                    let logits =
+                        forward_full_multi(&model.layout, model.poly, p, rows, xv, bsz, live);
+                    Ok(logits
+                        .into_iter()
+                        .map(|l| l.map(|v| Tensor::new(vec![bsz, model.layout.k], v)))
+                        .collect())
+                })
+            }
+            ModelImpl::Conv(plan) => {
+                let (p, rows, xv, bsz) =
+                    self.conv_full_multi_args(plan, model_key, "forward_multi", params, masks, x, live)?;
+                self.stats.timed(&format!("{model_key}:forward_multi"), || {
+                    let logits = conv_full_multi(plan, p, rows, xv, bsz, live);
+                    Ok(logits
+                        .into_iter()
+                        .map(|l| l.map(|v| Tensor::new(vec![bsz, plan.num_classes], v)))
+                        .collect())
+                })
+            }
+        }
     }
 
     fn forward_from_multi(
@@ -635,22 +1073,47 @@ impl Backend for RefBackend {
         mask_suffixes: &MaskSlab,
         live: &[bool],
     ) -> Result<Vec<Option<Tensor>>> {
-        let (model, p, rows, a1, bsz) = self.staged_multi_args(
-            model_key,
-            "forward_from_multi",
-            segment,
-            acts,
-            params,
-            mask_suffixes,
-            live,
-        )?;
-        self.stats.timed(&format!("{model_key}:forward_from_multi"), || {
-            let logits = forward_tail_multi(&model.layout, model.poly, p, rows, a1, bsz, live);
-            Ok(logits
-                .into_iter()
-                .map(|l| l.map(|v| Tensor::new(vec![bsz, model.layout.k], v)))
-                .collect())
-        })
+        match self.model_impl(model_key)? {
+            ModelImpl::Mlp(model) => {
+                let (p, rows, a1, bsz) = self.staged_multi_args(
+                    model,
+                    model_key,
+                    "forward_from_multi",
+                    segment,
+                    acts,
+                    params,
+                    mask_suffixes,
+                    live,
+                )?;
+                self.stats.timed(&format!("{model_key}:forward_from_multi"), || {
+                    let logits =
+                        forward_tail_multi(&model.layout, model.poly, p, rows, a1, bsz, live);
+                    Ok(logits
+                        .into_iter()
+                        .map(|l| l.map(|v| Tensor::new(vec![bsz, model.layout.k], v)))
+                        .collect())
+                })
+            }
+            ModelImpl::Conv(plan) => {
+                let (p, rows, a, bsz) = self.conv_staged_multi_args(
+                    plan,
+                    model_key,
+                    "forward_from_multi",
+                    segment,
+                    acts,
+                    params,
+                    mask_suffixes,
+                    live,
+                )?;
+                self.stats.timed(&format!("{model_key}:forward_from_multi"), || {
+                    let logits = conv_tail_multi(plan, segment, p, rows, a, bsz, live);
+                    Ok(logits
+                        .into_iter()
+                        .map(|l| l.map(|v| Tensor::new(vec![bsz, plan.num_classes], v)))
+                        .collect())
+                })
+            }
+        }
     }
 
     fn eval_from_multi(
@@ -663,21 +1126,45 @@ impl Backend for RefBackend {
         y: &DeviceBuf,
         live: &[bool],
     ) -> Result<Vec<Option<(f32, f32)>>> {
-        let (model, p, rows, a1, bsz) = self.staged_multi_args(
-            model_key,
-            "eval_from_multi",
-            segment,
-            acts,
-            params,
-            mask_suffixes,
-            live,
-        )?;
-        let yv = ref_i32(y, "y")?;
-        check_len(model_key, "eval_from_multi", "y", yv.len(), bsz)?;
-        self.stats.timed(&format!("{model_key}:eval_from_multi"), || {
-            let logits = forward_tail_multi(&model.layout, model.poly, p, rows, a1, bsz, live);
-            Ok(score_multi(&logits, yv, model.layout.k))
-        })
+        match self.model_impl(model_key)? {
+            ModelImpl::Mlp(model) => {
+                let (p, rows, a1, bsz) = self.staged_multi_args(
+                    model,
+                    model_key,
+                    "eval_from_multi",
+                    segment,
+                    acts,
+                    params,
+                    mask_suffixes,
+                    live,
+                )?;
+                let yv = ref_i32(y, "y")?;
+                check_len(model_key, "eval_from_multi", "y", yv.len(), bsz)?;
+                self.stats.timed(&format!("{model_key}:eval_from_multi"), || {
+                    let logits =
+                        forward_tail_multi(&model.layout, model.poly, p, rows, a1, bsz, live);
+                    Ok(score_multi(&logits, yv, model.layout.k))
+                })
+            }
+            ModelImpl::Conv(plan) => {
+                let (p, rows, a, bsz) = self.conv_staged_multi_args(
+                    plan,
+                    model_key,
+                    "eval_from_multi",
+                    segment,
+                    acts,
+                    params,
+                    mask_suffixes,
+                    live,
+                )?;
+                let yv = ref_i32(y, "y")?;
+                check_len(model_key, "eval_from_multi", "y", yv.len(), bsz)?;
+                self.stats.timed(&format!("{model_key}:eval_from_multi"), || {
+                    let logits = conv_tail_multi(plan, segment, p, rows, a, bsz, live);
+                    Ok(score_multi(&logits, yv, plan.num_classes))
+                })
+            }
+        }
     }
 
     fn bump_stat(&self, key: &str, n: u64) {
@@ -774,6 +1261,102 @@ fn batch_of(model: &RefModel, key: &str, fn_name: &str, x_len: usize) -> Result<
         bail!("{key}:{fn_name}: input \"x\" has {x_len} elements, expects a multiple of {d}");
     }
     Ok(x_len / d)
+}
+
+/// Shared (params, mask, x) prefix of the conv forward/eval entry points.
+fn conv_pm_x<'a>(
+    plan: &ConvPlan,
+    args: &[ArgView<'a>],
+    key: &str,
+    fn_name: &str,
+) -> Result<(&'a [f32], &'a [f32], &'a [f32], usize)> {
+    let p = f32_arg(args, 0, "params")?;
+    let m = f32_arg(args, 1, "mask")?;
+    let x = f32_arg(args, 2, "x")?;
+    check_len(key, fn_name, "params", p.len(), plan.param_size)?;
+    check_len(key, fn_name, "mask", m.len(), plan.mask_size)?;
+    let bsz = conv_batch_of(plan, key, fn_name, x.len())?;
+    Ok((p, m, x, bsz))
+}
+
+fn conv_batch_of(plan: &ConvPlan, key: &str, fn_name: &str, x_len: usize) -> Result<usize> {
+    let d = plan.channels * plan.image_size * plan.image_size;
+    if x_len == 0 || x_len % d != 0 {
+        bail!("{key}:{fn_name}: input \"x\" has {x_len} elements, expects a multiple of {d}");
+    }
+    Ok(x_len / d)
+}
+
+/// Blend the hard-label CE gradient with the distillation term in place:
+/// loss is `0.5*CE(y) + 0.5*T^2*CE(softmax(t/T), softmax(s/T))`; the
+/// returned value is the KD component (`T^2 * soft-CE` batch-averaged).
+/// `d(T^2 * soft-CE)/ds = T * (softmax(s/T) - softmax(t/T))`.
+fn kd_blend(
+    logits: &[f32],
+    t_logits: &[f32],
+    dlogits: &mut [f32],
+    bsz: usize,
+    k: usize,
+    temp: f32,
+) -> f32 {
+    let mut kd_loss = 0.0f32;
+    for bi in 0..bsz {
+        let s = &logits[bi * k..(bi + 1) * k];
+        let t = &t_logits[bi * k..(bi + 1) * k];
+        let ps = kernels::softmax_t(s, temp);
+        let pt = kernels::softmax_t(t, temp);
+        for j in 0..k {
+            kd_loss -= pt[j] * ps[j].max(1e-12).ln();
+            dlogits[bi * k + j] =
+                0.5 * dlogits[bi * k + j] + 0.5 * temp * (ps[j] - pt[j]) / bsz as f32;
+        }
+    }
+    temp * temp * kd_loss / bsz as f32
+}
+
+/// Conv slab forward, full route: each live hypothesis runs the exact
+/// single-hypothesis eval forward on its mask row — bit-identity to
+/// single calls is trivial. Unlike the MLP slab path no cross-hypothesis
+/// affine is factored out: conv slabs spend their time inside the
+/// convolutions, which depend on masked activations from layer 1 on.
+fn conv_full_multi(
+    plan: &ConvPlan,
+    p: &[f32],
+    rows: &[f32],
+    x: &[f32],
+    bsz: usize,
+    live: &[bool],
+) -> Vec<Option<Vec<f32>>> {
+    let width = plan.mask_size;
+    live.iter()
+        .enumerate()
+        .map(|(h, &alive)| {
+            alive.then(|| plan.forward_eval(p, &rows[h * width..(h + 1) * width], x, bsz))
+        })
+        .collect()
+}
+
+/// Conv slab forward, staged route: each live suffix row resumes from the
+/// shared cached boundary activation via the single-hypothesis
+/// [`ConvPlan::forward_from`].
+fn conv_tail_multi(
+    plan: &ConvPlan,
+    segment: usize,
+    p: &[f32],
+    rows: &[f32],
+    acts: &[f32],
+    bsz: usize,
+    live: &[bool],
+) -> Vec<Option<Vec<f32>>> {
+    let width = plan.mask_size - plan.suffix_offset(segment);
+    live.iter()
+        .enumerate()
+        .map(|(h, &alive)| {
+            alive.then(|| {
+                plan.forward_from(segment, acts, p, &rows[h * width..(h + 1) * width], bsz)
+            })
+        })
+        .collect()
 }
 
 fn vec1(data: Vec<f32>) -> Tensor {
@@ -1402,17 +1985,250 @@ mod tests {
     #[test]
     fn standard_models_cover_experiment_keys() {
         let be = RefBackend::standard();
+        // Deprecated MLP aliases, canonical MLP names, and the conv
+        // topologies all resolve.
         for key in [
             "resnet_16x16_c10",
             "resnet_16x16_c20",
             "resnet_32x32_c20",
             "wrn_16x16_c20_poly",
             "wrn_32x32_c20",
+            "mlp_16x16_c10",
+            "mlpw_32x32_c20_poly",
+            "resnet18_16x16_c10",
+            "resnet18_32x32_c20_poly",
+            "wrn22_16x16_c20",
+            "wrn22_32x32_c20_poly",
         ] {
             let info = be.model(key).unwrap();
             assert!(info.mask_size > 0 && info.param_size > 0, "{key}");
         }
         assert!(be.model("nope").is_err());
         assert_eq!(be.batch(), 16);
+        assert_eq!(be.manifest().models.len(), 24, "12 MLP + 12 conv variants");
+    }
+
+    #[test]
+    fn deprecated_keys_alias_to_renamed_mlp_models() {
+        let be = RefBackend::standard();
+        // The alias resolves to the canonical entry: `info.key` names the
+        // canonical model, not the alias.
+        let direct = be.model("mlp_16x16_c10").unwrap().clone();
+        let via_alias = be.model("resnet_16x16_c10").unwrap();
+        assert_eq!(via_alias.key, "mlp_16x16_c10");
+        assert_eq!(via_alias.backbone, "mlp");
+        assert_eq!(via_alias.param_size, direct.param_size);
+        assert_eq!(be.model("wrn_32x32_c20_poly").unwrap().key, "mlpw_32x32_c20_poly");
+        // The conv backbones own the `resnet18_*`/`wrn22_*` namespace;
+        // the alias prefixes must not capture them.
+        assert_eq!(be.model("resnet18_16x16_c10").unwrap().backbone, "resnet18");
+        assert_eq!(be.model("wrn22_16x16_c10").unwrap().backbone, "wrn22");
+        // Entry points and staged plumbing accept aliases too.
+        let seed = TensorI32::scalar(1);
+        let p = be.call("resnet_16x16_c10", "init", &[HostArg::I32(&seed)]).unwrap();
+        assert_eq!(p[0].len(), direct.param_size);
+        assert_eq!(be.segments("resnet_16x16_c10"), 1);
+        assert_eq!(be.multi_width("wrn_16x16_c20"), MULTI_WIDTH);
+        // Unknown keys with an alias prefix still fail readably.
+        assert!(be.model("resnet_99x99_c7").is_err());
+    }
+
+    #[test]
+    fn conv_models_register_with_conv_layouts() {
+        let be = RefBackend::standard();
+        let r = be.model("resnet18_16x16_c10").unwrap();
+        assert_eq!((r.param_size, r.mask_size, r.mask_layers.len()), (177602, 488, 17));
+        assert_eq!(be.model("resnet18_32x32_c20").unwrap().param_size, 178252);
+        let w = be.model("wrn22_16x16_c10").unwrap();
+        assert_eq!((w.param_size, w.mask_size, w.mask_layers.len()), (174722, 456, 13));
+        // Residual-block resume boundaries: strictly increasing mask-layer
+        // mapping, image-shaped cached activations.
+        assert_eq!(be.segments("resnet18_16x16_c10"), 8);
+        assert_eq!(be.segments("wrn22_16x16_c10"), 6);
+        for b in 1..be.segments("resnet18_16x16_c10") {
+            assert!(
+                be.segment_layer("resnet18_16x16_c10", b)
+                    > be.segment_layer("resnet18_16x16_c10", b - 1)
+            );
+        }
+        // Boundary 0 caches the 8-channel 16x16 stem activation.
+        assert_eq!(be.prefix_entry_bytes("resnet18_16x16_c10", 0, 4), 4 * 4 * 8 * 16 * 16);
+        assert_eq!(be.multi_width("resnet18_16x16_c10"), MULTI_WIDTH);
+    }
+
+    #[test]
+    fn conv_staged_and_multi_match_full_bitwise() {
+        let be = RefBackend::standard();
+        let key = "wrn22_16x16_c10";
+        let info = be.model(key).unwrap().clone();
+        let seed = TensorI32::scalar(5);
+        let p = be.call(key, "init", &[HostArg::I32(&seed)]).unwrap().remove(0);
+        let mut x = Tensor::zeros(vec![2, 3, 16, 16]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i * 7 % 23) as f32 - 11.0) / 11.0;
+        }
+        let y = TensorI32::new(vec![2], vec![3, 8]);
+        // A hypothesis dirty only past the deepest boundary, so it is
+        // resumable from there.
+        let deep = be.segments(key) - 1;
+        let suffix_off = info.mask_layers[be.segment_layer(key, deep) + 1].offset;
+        let mut hyp = vec![1.0f32; info.mask_size];
+        hyp[suffix_off] = 0.0;
+        hyp[info.mask_size - 1] = 0.0;
+        let hyp_t = Tensor::new(vec![hyp.len()], hyp.clone());
+        let full = be
+            .call(key, "forward", &[HostArg::F32(&p), HostArg::F32(&hyp_t), HostArg::F32(&x)])
+            .unwrap()
+            .remove(0);
+
+        let pb = be.upload_f32(&p.data, &p.shape).unwrap();
+        let base = vec![1.0f32; info.mask_size];
+        let mb = be.upload_f32(&base, &[base.len()]).unwrap();
+        let xb = be.upload_f32(&x.data, &x.shape).unwrap();
+        let yb = be.upload_i32(&y.data, &y.shape).unwrap();
+        let acts = be.forward_prefix(key, deep, &pb, &mb, &xb).unwrap();
+        let sb = be.upload_f32(&hyp[suffix_off..], &[info.mask_size - suffix_off]).unwrap();
+        let inc = be.forward_from(key, deep, &acts, &pb, &sb).unwrap();
+        assert_eq!(inc.shape, full.shape);
+        assert_eq!(inc.data, full.data, "staged conv logits must be bit-identical");
+
+        let hb = be.upload_f32(&hyp, &[hyp.len()]).unwrap();
+        let full_eval = be.call_b(key, "eval_batch", &[&pb, &hb, &xb, &yb]).unwrap();
+        let inc_eval = be.eval_from(key, deep, &acts, &pb, &sb, &yb).unwrap();
+        assert_eq!(inc_eval[0].item(), full_eval[0].item());
+        assert_eq!(inc_eval[1].item(), full_eval[1].item());
+
+        // Batched full-route slab vs single calls.
+        let mut masks: Vec<Vec<f32>> = vec![vec![1.0; info.mask_size]; 2];
+        masks[0][0] = 0.0;
+        masks[1][info.mask_size / 2] = 0.0;
+        let flat: Vec<f32> = masks.iter().flatten().copied().collect();
+        let slab = MaskSlab {
+            buf: be.upload_f32(&flat, &[2, info.mask_size]).unwrap(),
+            n: 2,
+            width: info.mask_size,
+        };
+        let multi = be.eval_batch_multi(key, &pb, &slab, &xb, &yb, &[true, true]).unwrap();
+        for h in 0..2 {
+            let mh = be.upload_f32(&masks[h], &[info.mask_size]).unwrap();
+            let single = be.call_b(key, "eval_batch", &[&pb, &mh, &xb, &yb]).unwrap();
+            let (loss, correct) = multi[h].unwrap();
+            assert_eq!(loss, single[0].item(), "conv hyp {h} loss");
+            assert_eq!(correct, single[1].item(), "conv hyp {h} correct");
+        }
+
+        // Batched staged slab vs single resumes; dead rows skipped.
+        let sw = info.mask_size - suffix_off;
+        let mut sufs: Vec<Vec<f32>> = vec![vec![1.0; sw]; 3];
+        sufs[0][0] = 0.0;
+        sufs[2][sw - 1] = 0.0;
+        let sflat: Vec<f32> = sufs.iter().flatten().copied().collect();
+        let sslab = MaskSlab {
+            buf: be.upload_f32(&sflat, &[3, sw]).unwrap(),
+            n: 3,
+            width: sw,
+        };
+        let live = [true, false, true];
+        let inc_multi = be.eval_from_multi(key, deep, &acts, &pb, &sslab, &yb, &live).unwrap();
+        assert!(inc_multi[1].is_none());
+        for h in [0usize, 2] {
+            let sh = be.upload_f32(&sufs[h], &[sw]).unwrap();
+            let single = be.eval_from(key, deep, &acts, &pb, &sh, &yb).unwrap();
+            let (loss, correct) = inc_multi[h].unwrap();
+            assert_eq!(loss, single[0].item(), "conv suffix hyp {h} loss");
+            assert_eq!(correct, single[1].item(), "conv suffix hyp {h} correct");
+        }
+
+        // Shape misuse fails readably: full mask where a suffix belongs,
+        // out-of-range boundary.
+        assert!(be.forward_from(key, deep, &acts, &pb, &mb).is_err());
+        assert!(be.forward_prefix(key, be.segments(key), &pb, &mb, &xb).is_err());
+    }
+
+    #[test]
+    fn conv_train_steps_update_params_and_running_stats() {
+        let be = RefBackend::standard();
+        let key = "resnet18_16x16_c10";
+        let info = be.model(key).unwrap().clone();
+        let seed = TensorI32::scalar(2);
+        let p = be.call(key, "init", &[HostArg::I32(&seed)]).unwrap().remove(0);
+        let mom = Tensor::zeros(vec![info.param_size]);
+        let mask = Tensor::ones(vec![info.mask_size]);
+        let mut x = Tensor::zeros(vec![2, 3, 16, 16]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = (i as f32 % 5.0 - 2.0) / 2.0;
+        }
+        let y = TensorI32::new(vec![2], vec![1, 7]);
+        let lr = Tensor::scalar(0.01);
+        let args = [
+            HostArg::F32(&p),
+            HostArg::F32(&mom),
+            HostArg::F32(&mask),
+            HostArg::F32(&x),
+            HostArg::I32(&y),
+            HostArg::F32(&lr),
+        ];
+        let out = be.call(key, "train_step", &args).unwrap();
+        assert_ne!(out[0].data, p.data);
+        assert!(out[2].item().is_finite() && out[2].item() > 0.0);
+        // The stem's running mean moved off its zero init: batch stats
+        // were folded in by the EMA after the SGD step.
+        let bn = info.param_entries.iter().find(|e| e.name == "stem.bn").unwrap();
+        let c = bn.size / 4;
+        let rm_new = &out[0].data[bn.offset + 2 * c..bn.offset + 3 * c];
+        assert!(rm_new.iter().any(|&v| v != 0.0), "running mean must move");
+        // Replays bit-exactly.
+        let out2 = be.call(key, "train_step", &args).unwrap();
+        assert_eq!(out[0].data, out2[0].data);
+
+        // SNL: large lambda with zero weight lr shrinks channel alphas;
+        // only the running-stat rows of the params may move.
+        let alphas = Tensor::ones(vec![info.mask_size]);
+        let snl = be
+            .call(
+                key,
+                "snl_step",
+                &[
+                    HostArg::F32(&p),
+                    HostArg::F32(&mom),
+                    HostArg::F32(&alphas),
+                    HostArg::F32(&x),
+                    HostArg::I32(&y),
+                    HostArg::F32(&Tensor::scalar(0.0)),
+                    HostArg::F32(&Tensor::scalar(0.1)),
+                    HostArg::F32(&Tensor::scalar(1.0)),
+                ],
+            )
+            .unwrap();
+        let after: f32 = snl[2].data.iter().sum();
+        assert!(after < info.mask_size as f32, "l1 pressure must shrink alphas");
+        assert!(snl[2].data.iter().all(|&a| (0.0..=1.0).contains(&a)));
+        let w1 = info.param_entries.iter().find(|e| e.name == "stem.conv.w").unwrap();
+        assert_eq!(
+            snl[0].data[w1.offset..w1.offset + w1.size],
+            p.data[w1.offset..w1.offset + w1.size],
+            "lr=0 leaves conv weights untouched (running stats may still move)"
+        );
+
+        // KD runs and yields a finite blended loss.
+        let t_logits = Tensor::new(vec![2, 10], (0..20).map(|i| (i % 7) as f32 / 7.0).collect());
+        let kd = be
+            .call(
+                key,
+                "kd_step",
+                &[
+                    HostArg::F32(&p),
+                    HostArg::F32(&mom),
+                    HostArg::F32(&mask),
+                    HostArg::F32(&x),
+                    HostArg::I32(&y),
+                    HostArg::F32(&t_logits),
+                    HostArg::F32(&lr),
+                    HostArg::F32(&Tensor::scalar(4.0)),
+                ],
+            )
+            .unwrap();
+        assert!(kd[2].item().is_finite());
+        assert_ne!(kd[0].data, p.data);
     }
 }

@@ -155,4 +155,13 @@ mod tests {
     fn mean_of_empty_is_zero() {
         assert_eq!(Tensor::new(vec![0], vec![]).mean(), 0.0);
     }
+
+    #[test]
+    fn rank4_nchw_batches() {
+        // Conv batches cross the backend boundary as [N, C, H, W] tensors
+        // (flat row-major data — the layout DESIGN.md §12 assumes).
+        let t = Tensor::zeros(vec![2, 3, 4, 4]);
+        assert_eq!(t.len(), 96);
+        assert!(Tensor::new(vec![2, 3, 4, 4], vec![0.0; 96]).argmax_rows().is_err());
+    }
 }

@@ -1,0 +1,342 @@
+//! Finite-difference gradient checks for the conv reference backend
+//! (DESIGN.md §12): every hand-written backward pass in
+//! `runtime::kernels` is validated against a central difference of its
+//! forward, plus an end-to-end spot check through `ConvPlan::backward`.
+//!
+//! Method: probe loss `L = Σ_i probe_i · out_i` with a fixed random probe
+//! vector, accumulated in f64. The analytic gradient is the op's backward
+//! applied to `dy = probe`; the numeric gradient is the central difference
+//! `(L(θ+ε) − L(θ−ε)) / 2ε` per coordinate.
+//!
+//! Tolerance rationale (per-op rationale inline at each check):
+//! - All forwards run in f32, so each loss evaluation carries ≈1e-7·|out|
+//!   rounding noise; dividing by 2ε turns that into ≈1e-7/ε absolute error
+//!   on the numeric gradient. ε = 5e-3 keeps it near 2e-5.
+//! - Truncation error is O(ε²·f‴). Conv / residual-add / GAP / eval-mode BN
+//!   are *linear* in every checked argument, so truncation is exactly zero
+//!   and only rounding remains. Train-mode BN and the masked activation are
+//!   smooth nonlinearities with O(1) third derivatives at our operating
+//!   points, giving ≈2.5e-5 truncation.
+//! - Both error sources sit two orders below the 1e-3 relative tolerance;
+//!   a 1e-2 denominator floor keeps near-zero gradients from inflating the
+//!   relative error into noise.
+
+use cdnl::runtime::convnet::{ConvPlan, ConvSpec, Family};
+use cdnl::runtime::kernels::{
+    add_into, bn_backward_eval, bn_backward_train, bn_eval_into, bn_train_into, conv2d_same_dinput,
+    conv2d_same_dweight, conv2d_same_into, dact_channel, gap_back, gap_into, mask_act_channel_into,
+    softmax_ce_batch,
+};
+use cdnl::util::prng::Rng;
+
+const EPS: f32 = 5e-3;
+const TOL: f64 = 1e-3;
+
+/// Relative error with a denominator floor (tiny gradients compare in
+/// absolute terms at scale 1e-2).
+fn rel_err(ad: f64, fd: f64) -> f64 {
+    (ad - fd).abs() / ad.abs().max(fd.abs()).max(1e-2)
+}
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Probe loss `Σ probe_i · out_i` in f64.
+fn probe_loss(out: &[f32], probe: &[f32]) -> f64 {
+    out.iter().zip(probe).map(|(&o, &p)| o as f64 * p as f64).sum()
+}
+
+/// Central difference of `f` w.r.t. coordinate `i` of `theta`.
+fn central_diff<F: FnMut(&[f32]) -> f64>(theta: &mut Vec<f32>, i: usize, mut f: F) -> f64 {
+    let orig = theta[i];
+    theta[i] = orig + EPS;
+    let lp = f(theta);
+    theta[i] = orig - EPS;
+    let lm = f(theta);
+    theta[i] = orig;
+    (lp - lm) / (2.0 * EPS as f64)
+}
+
+fn assert_grads_match(analytic: &[f32], label: &str, mut numeric: impl FnMut(usize) -> f64) {
+    for i in 0..analytic.len() {
+        let ad = analytic[i] as f64;
+        let fd = numeric(i);
+        let e = rel_err(ad, fd);
+        assert!(e <= TOL, "{label}[{i}]: analytic {ad} vs numeric {fd} (rel err {e:.2e})");
+    }
+}
+
+/// conv2d: linear in both input and weights ⇒ zero truncation error; only
+/// f32 rounding (≈2e-5 absolute) remains, far inside 1e-3. Checked at
+/// stride 1 and stride 2 on an odd (ragged) spatial dim so the asymmetric
+/// 'SAME' padding path is differentiated too.
+#[test]
+fn conv2d_input_and_weight_grads() {
+    let (n, cin, h, wd, cout, k) = (2, 3, 5, 5, 4, 3);
+    for stride in [1usize, 2] {
+        let mut rng = Rng::new(0xC0DE + stride as u64);
+        let mut x = randn(&mut rng, n * cin * h * wd);
+        let mut w = randn(&mut rng, cout * cin * k * k);
+        let oh = h.div_ceil(stride);
+        let probe = randn(&mut rng, n * cout * oh * oh);
+
+        // Analytic: backward with dy = probe.
+        let dx = conv2d_same_dinput(&probe, &w, n, cin, h, wd, cout, k, stride);
+        let mut dw = vec![0.0f32; w.len()];
+        conv2d_same_dweight(&x, &probe, &mut dw, n, cin, h, wd, cout, k, stride);
+
+        let mut out = Vec::new();
+        let w_fixed = w.clone();
+        assert_grads_match(&dx, &format!("conv s{stride} dx"), |i| {
+            central_diff(&mut x, i, |xs| {
+                conv2d_same_into(xs, &w_fixed, n, cin, h, wd, cout, k, stride, &mut out);
+                probe_loss(&out, &probe)
+            })
+        });
+        let x_fixed = x.clone();
+        assert_grads_match(&dw, &format!("conv s{stride} dw"), |i| {
+            central_diff(&mut w, i, |ws| {
+                conv2d_same_into(&x_fixed, ws, n, cin, h, wd, cout, k, stride, &mut out);
+                probe_loss(&out, &probe)
+            })
+        });
+    }
+}
+
+/// Train-mode BN: the batch mean/var couple every element of a channel, and
+/// 1/√(var+ε) is smooth with O(1) derivatives for var ≈ 1, so truncation is
+/// ≈ ε²·f‴/6 ≈ 2.5e-5 — well inside 1e-3. Gradients w.r.t. x, γ, β all
+/// flow through the same cache.
+#[test]
+fn batchnorm_train_grads() {
+    let (n, c, hw) = (3, 4, 6);
+    let mut rng = Rng::new(0xB41);
+    let mut x = randn(&mut rng, n * c * hw);
+    let mut gamma: Vec<f32> = (0..c).map(|_| 1.0 + 0.3 * rng.normal()).collect();
+    let mut beta = randn(&mut rng, c);
+    let probe = randn(&mut rng, n * c * hw);
+
+    let mut out = Vec::new();
+    let cache = bn_train_into(&x, &gamma, &beta, n, c, hw, &mut out);
+    let mut dgamma = vec![0.0f32; c];
+    let mut dbeta = vec![0.0f32; c];
+    let dx = bn_backward_train(&cache, &gamma, &probe, &mut dgamma, &mut dbeta, n, c, hw);
+
+    let (g0, b0) = (gamma.clone(), beta.clone());
+    assert_grads_match(&dx, "bn-train dx", |i| {
+        central_diff(&mut x, i, |xs| {
+            bn_train_into(xs, &g0, &b0, n, c, hw, &mut out);
+            probe_loss(&out, &probe)
+        })
+    });
+    let x0 = x.clone();
+    assert_grads_match(&dgamma, "bn-train dgamma", |i| {
+        central_diff(&mut gamma, i, |gs| {
+            bn_train_into(&x0, gs, &b0, n, c, hw, &mut out);
+            probe_loss(&out, &probe)
+        })
+    });
+    assert_grads_match(&dbeta, "bn-train dbeta", |i| {
+        central_diff(&mut beta, i, |bs| {
+            bn_train_into(&x0, &g0, bs, n, c, hw, &mut out);
+            probe_loss(&out, &probe)
+        })
+    });
+}
+
+/// Eval-mode BN: with running stats frozen the op is an affine per-element
+/// map — linear in x, γ, β ⇒ zero truncation; rounding only. This is the
+/// mode every scoring path uses (DESIGN.md §12 determinism contract).
+#[test]
+fn batchnorm_eval_grads() {
+    let (n, c, hw) = (2, 3, 5);
+    let mut rng = Rng::new(0xB42);
+    let mut x = randn(&mut rng, n * c * hw);
+    let mut gamma: Vec<f32> = (0..c).map(|_| 1.0 + 0.3 * rng.normal()).collect();
+    let mut beta = randn(&mut rng, c);
+    let rmean = randn(&mut rng, c);
+    let rvar: Vec<f32> = (0..c).map(|_| 0.5 + rng.f32()).collect();
+    let probe = randn(&mut rng, n * c * hw);
+
+    let mut dgamma = vec![0.0f32; c];
+    let mut dbeta = vec![0.0f32; c];
+    let dx =
+        bn_backward_eval(&x, &gamma, &rmean, &rvar, &probe, &mut dgamma, &mut dbeta, n, c, hw);
+
+    let mut out = Vec::new();
+    let (g0, b0) = (gamma.clone(), beta.clone());
+    assert_grads_match(&dx, "bn-eval dx", |i| {
+        central_diff(&mut x, i, |xs| {
+            bn_eval_into(xs, &g0, &b0, &rmean, &rvar, n, c, hw, &mut out);
+            probe_loss(&out, &probe)
+        })
+    });
+    let x0 = x.clone();
+    assert_grads_match(&dgamma, "bn-eval dgamma", |i| {
+        central_diff(&mut gamma, i, |gs| {
+            bn_eval_into(&x0, gs, &b0, &rmean, &rvar, n, c, hw, &mut out);
+            probe_loss(&out, &probe)
+        })
+    });
+    assert_grads_match(&dbeta, "bn-eval dbeta", |i| {
+        central_diff(&mut beta, i, |bs| {
+            bn_eval_into(&x0, &g0, bs, &rmean, &rvar, n, c, hw, &mut out);
+            probe_loss(&out, &probe)
+        })
+    });
+}
+
+/// Residual add `a += b`: the identity-gradient op. Linear ⇒ exact; both
+/// summands receive dy unchanged, which the check confirms per coordinate.
+#[test]
+fn residual_add_grads() {
+    let m = 24;
+    let mut rng = Rng::new(0xADD);
+    let mut a = randn(&mut rng, m);
+    let mut b = randn(&mut rng, m);
+    let probe = randn(&mut rng, m);
+
+    // add_into's backward is pass-through: da = db = dy.
+    let run = |av: &[f32], bv: &[f32]| {
+        let mut s = av.to_vec();
+        add_into(&mut s, bv);
+        probe_loss(&s, &probe)
+    };
+    let b0 = b.clone();
+    assert_grads_match(&probe, "add da", |i| central_diff(&mut a, i, |av| run(av, &b0)));
+    let a0 = a.clone();
+    assert_grads_match(&probe, "add db", |i| central_diff(&mut b, i, |bv| run(&a0, bv)));
+}
+
+/// Global average pooling: linear (each input contributes 1/hw to one
+/// output) ⇒ exact up to rounding. `gap_back` must spread dy/hw uniformly.
+#[test]
+fn gap_grads() {
+    let (n, c, hw) = (2, 3, 16);
+    let mut rng = Rng::new(0x6A9);
+    let mut x = randn(&mut rng, n * c * hw);
+    let probe = randn(&mut rng, n * c);
+
+    let dx = gap_back(&probe, n, c, hw);
+    let mut out = Vec::new();
+    assert_grads_match(&dx, "gap dx", |i| {
+        central_diff(&mut x, i, |xs| {
+            gap_into(xs, n, c, hw, &mut out);
+            probe_loss(&out, &probe)
+        })
+    });
+}
+
+/// Per-channel masked activation `a = m·relu(z) + (1−m)·g(z)`: linear in m
+/// (exact), piecewise-smooth in z. The relu kink at z = 0 breaks central
+/// differences, so test inputs are pushed ≥ 0.1 away from zero — ε = 5e-3
+/// cannot cross the kink and both branches stay smooth. Checked for
+/// g(z) = z and the AutoReP quadratic, at fractional mask values so both
+/// activation terms contribute.
+#[test]
+fn masked_activation_channel_grads() {
+    let (n, c, hw) = (2, 4, 9);
+    for poly in [false, true] {
+        let mut rng = Rng::new(0xAC7 + poly as u64);
+        let mut z: Vec<f32> = (0..n * c * hw)
+            .map(|_| {
+                let v = rng.normal();
+                v + 0.1f32.copysign(v) // keep |z| ≥ 0.1: off the relu kink
+            })
+            .collect();
+        let mut mask: Vec<f32> = (0..c).map(|_| rng.f32()).collect();
+        let probe = randn(&mut rng, n * c * hw);
+
+        let (dmask, dz) = dact_channel(&z, &mask, &probe, n, c, hw, poly);
+
+        let mut a = Vec::new();
+        let m0 = mask.clone();
+        assert_grads_match(&dz, &format!("act(poly={poly}) dz"), |i| {
+            central_diff(&mut z, i, |zs| {
+                mask_act_channel_into(zs, &m0, n, c, hw, poly, &mut a);
+                probe_loss(&a, &probe)
+            })
+        });
+        let z0 = z.clone();
+        assert_grads_match(&dmask, &format!("act(poly={poly}) dmask"), |i| {
+            central_diff(&mut mask, i, |ms| {
+                mask_act_channel_into(&z0, ms, n, c, hw, poly, &mut a);
+                probe_loss(&a, &probe)
+            })
+        });
+    }
+}
+
+/// End-to-end spot check: `ConvPlan::backward` against a central difference
+/// of the full train-mode forward + softmax CE on a tiny ResNet.
+///
+/// To make finite differences trustworthy through a deep composition the
+/// network is configured fully smooth: poly = true and mask = 0, so every
+/// activation is the quadratic g(z) (no relu kinks anywhere — the relu
+/// branch is already covered per-op above). Tolerance is relaxed to 2e-2
+/// with a 0.05 floor: ε-noise compounds across ~10 f32 layers and the CE
+/// log-sum-exp, and sampled coordinates with |grad| ≈ 1e-2 sit close to
+/// the noise floor of the difference quotient.
+#[test]
+fn convplan_end_to_end_grads() {
+    let spec = ConvSpec {
+        key: "gradcheck_tiny".into(),
+        family: Family::Resnet,
+        num_classes: 3,
+        image_size: 8,
+        channels: 3,
+        poly: true,
+        base: 4,
+        widen: 2,
+        blocks: 1,
+        bn_momentum: 0.1,
+    };
+    let plan = ConvPlan::build(&spec);
+    let n = 2;
+    let mut rng = Rng::new(0xE2E);
+    let x: Vec<f32> = (0..n * 3 * 64).map(|_| 0.5 * rng.normal()).collect();
+    let y: Vec<i32> = vec![0, 2];
+    let mut params = plan.init_params(7);
+    let mut mask = vec![0.0f32; plan.mask_size]; // all-linear: smooth everywhere
+
+    let loss_of = |p: &[f32], m: &[f32]| -> f64 {
+        let (logits, _) = plan.forward_train(p, m, &x, n);
+        softmax_ce_batch(&logits, &y, 3, None).0 as f64
+    };
+
+    let (logits, tape) = plan.forward_train(&params, &mask, &x, n);
+    let mut dlogits = vec![0.0f32; n * 3];
+    let loss0 = softmax_ce_batch(&logits, &y, 3, Some(&mut dlogits)).0;
+    assert!(loss0.is_finite());
+    let (dparams, dmask) = plan.backward(&params, &mask, &tape, &dlogits, n);
+
+    // Sample coordinates across entry kinds: conv weights, BN affine rows,
+    // head weights/bias. Running-stat rows are skipped — they don't enter
+    // the train-mode forward, so both gradients are identically zero.
+    let mut coords: Vec<usize> = Vec::new();
+    for e in &plan.param_entries {
+        if e.name.ends_with(".w") || e.name == "head.b" {
+            coords.extend((0..e.size).step_by((e.size / 4).max(1)).map(|i| e.offset + i));
+        } else {
+            // BN entry [4, C]: rows 0/1 are γ/β (differentiated).
+            let c = e.shape[1];
+            coords.push(e.offset); // γ[0]
+            coords.push(e.offset + c); // β[0]
+        }
+    }
+    let m0 = mask.clone();
+    for &i in &coords {
+        let ad = dparams[i] as f64;
+        let fd = central_diff(&mut params, i, |p| loss_of(p, &m0));
+        let e = (ad - fd).abs() / ad.abs().max(fd.abs()).max(0.05);
+        assert!(e <= 2e-2, "e2e dparams[{i}]: analytic {ad} vs numeric {fd} (rel err {e:.2e})");
+    }
+    let p0 = params.clone();
+    for i in (0..plan.mask_size).step_by((plan.mask_size / 8).max(1)) {
+        let ad = dmask[i] as f64;
+        let fd = central_diff(&mut mask, i, |m| loss_of(&p0, m));
+        let e = (ad - fd).abs() / ad.abs().max(fd.abs()).max(0.05);
+        assert!(e <= 2e-2, "e2e dmask[{i}]: analytic {ad} vs numeric {fd} (rel err {e:.2e})");
+    }
+}

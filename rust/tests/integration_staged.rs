@@ -114,6 +114,96 @@ fn scan_outcome_identical_across_trial_batch_widths() {
     }
 }
 
+/// One scan on a conv topology (DESIGN.md §12): multi-segment boundary
+/// table, image-shaped prefix entries, per-channel deltas. Returns the
+/// outcome plus the staged-trial counter so callers can assert the staged
+/// route actually ran (an all-full-forward pass would vacuously "agree").
+fn conv_scan(model: &str, cache_mb: usize, workers: usize, trial_batch: usize) -> (ScanOutcome, usize) {
+    let be = backend();
+    let sess = Session::new(&be, model).unwrap();
+    let ds = small_synth10();
+    let st = sess.init_state(11).unwrap();
+    let ev = Evaluator::with_opts(
+        &sess,
+        &ds,
+        2,
+        EvalOpts { cache_bytes: cache_mb * (1 << 20), trial_batch, verify_staged: true },
+    )
+    .unwrap();
+    let params = ev.upload_params(&st.params).unwrap();
+    let base = ev.accuracy(&params, st.mask.dense()).unwrap();
+    let sampler = BlockSampler::new(Granularity::Pixel, sess.info());
+    let mut rng = Rng::new(0xC0FE);
+    // DRC 1: single-channel deltas land in deep layers most of the time, so
+    // the enabled-cache runs exercise resume-from-boundary on real residual
+    // blocks (verify_staged cross-checks every such batch internally).
+    let out =
+        scan_trials(&ev, &params, &st.mask, &sampler, 1, 8, 0.3, base, &mut rng, workers).unwrap();
+    let (_, staged_trials, _, _, _) = ev.batch_counters();
+    (out, staged_trials)
+}
+
+#[test]
+fn conv_scan_outcome_identical_across_cache_workers_and_batch() {
+    // Satellite of the conv-backend tentpole: ScanOutcome identity on a
+    // residual topology across trial_batch {1,32} x cache {0,16MB} x
+    // workers {1,4}, against the cache-off sequential width-1 reference.
+    let (reference, ref_staged) = conv_scan("resnet18_16x16_c10", 0, 1, 1);
+    assert_eq!(ref_staged, 0, "cache-off reference must not stage");
+    let mut staged_total = 0usize;
+    for &tb in &[1usize, 32] {
+        for &cache in &[0usize, 16] {
+            for &w in &[1usize, 4] {
+                let (out, staged) = conv_scan("resnet18_16x16_c10", cache, w, tb);
+                assert_eq!(
+                    reference, out,
+                    "conv scan diverged at trial_batch={tb} cache={cache} workers={w}"
+                );
+                if cache > 0 {
+                    staged_total += staged;
+                }
+            }
+        }
+    }
+    assert!(staged_total > 0, "no trial took the staged route on the conv model");
+
+    // WRN residual topology: same contract, spot-checked at the widest
+    // slab / most parallel corner.
+    let (wrn_ref, _) = conv_scan("wrn22_16x16_c10", 0, 1, 1);
+    let (wrn_out, wrn_staged) = conv_scan("wrn22_16x16_c10", 16, 4, 32);
+    assert_eq!(wrn_ref, wrn_out, "wrn scan diverged at cache=16 workers=4 trial_batch=32");
+    assert!(wrn_staged > 0, "wrn run with cache on must stage some trials");
+}
+
+#[test]
+fn conv_run_manifest_fingerprint_semantics() {
+    // Conv experiments keep the same fingerprint discipline: throughput
+    // knobs are identity-free, while the backbone and the model.* sizing
+    // keys are semantic.
+    let mut a = Experiment::default();
+    a.apply("backbone", "resnet18").unwrap();
+    a.apply("bcd.cache_mb", "0").unwrap();
+    a.apply("bcd.trial_batch", "1").unwrap();
+    a.apply("bcd.workers", "1").unwrap();
+    let mut b = Experiment::default();
+    b.apply("backbone", "resnet18").unwrap();
+    b.apply("bcd.cache_mb", "16").unwrap();
+    b.apply("bcd.trial_batch", "32").unwrap();
+    b.apply("bcd.workers", "4").unwrap();
+    let ma = RunManifest::new("bcd", &a, "reference", 200, 100);
+    let mb = RunManifest::new("bcd", &b, "reference", 200, 100);
+    assert_eq!(ma.config_fingerprint, mb.config_fingerprint);
+    let mut c = Experiment::default();
+    c.apply("backbone", "wrn22").unwrap();
+    let mc = RunManifest::new("bcd", &c, "reference", 200, 100);
+    assert_ne!(ma.config_fingerprint, mc.config_fingerprint, "backbone is semantic");
+    let mut d = Experiment::default();
+    d.apply("backbone", "resnet18").unwrap();
+    d.apply("model.conv_base", "16").unwrap();
+    let md = RunManifest::new("bcd", &d, "reference", 200, 100);
+    assert_ne!(ma.config_fingerprint, md.config_fingerprint, "model sizing is semantic");
+}
+
 #[test]
 fn bcd_bit_identical_across_cache_and_workers() {
     let be = backend();

@@ -381,6 +381,189 @@ fn prop_config_numeric_fields_roundtrip() {
     );
 }
 
+/// Per-channel MaskDelta round trip on the real conv topologies
+/// (DESIGN.md §12): apply + revert restores the mask exactly over the
+/// [C]-shaped mask layers of `resnet18_*` / `wrn22_*`, and
+/// first_dirty_layer agrees with a brute-force scan of the conv layer
+/// table — including deltas that straddle residual-block boundaries.
+#[test]
+fn prop_conv_mask_delta_roundtrip_and_dirty_layer() {
+    use cdnl::runtime::{Backend, RefBackend};
+    let be = RefBackend::standard();
+    let keys = ["resnet18_16x16_c10", "wrn22_16x16_c10"];
+    let infos: Vec<_> = keys.iter().map(|k| be.model(k).unwrap().clone()).collect();
+    check(
+        0xC04D,
+        60,
+        |r| {
+            let which = r.usize_below(2);
+            let pre = r.usize_below(60);
+            let k = r.usize_below(24) + 1;
+            (which, (pre, k))
+        },
+        |&(which, (pre, k))| {
+            let info = &infos[which];
+            let mut rng = Rng::new(pre as u64 * 131 + k as u64);
+            let mut base = Mask::full(info.mask_size);
+            for _ in 0..pre {
+                let pick = base.sample_present(&mut rng, 1)[0];
+                base.remove(pick).map_err(|e| e.to_string())?;
+            }
+            let delta = MaskDelta::new(base.sample_present(&mut rng, k));
+            // Brute-force dirty layer over the conv per-channel layer table.
+            let brute = delta
+                .indices()
+                .iter()
+                .map(|&i| info.layer_of(i))
+                .min()
+                .unwrap_or(info.mask_layers.len());
+            if delta.first_dirty_layer(info) != brute {
+                return Err(format!(
+                    "first_dirty_layer {} != brute {brute}",
+                    delta.first_dirty_layer(info)
+                ));
+            }
+            let dense0 = base.dense().to_vec();
+            let mut m = base.clone();
+            let undo = m.apply_delta(&delta).map_err(|e| e.to_string())?;
+            m.check_invariants().map_err(|e| e.to_string())?;
+            m.revert_delta(&delta, undo).map_err(|e| e.to_string())?;
+            m.check_invariants().map_err(|e| e.to_string())?;
+            if m.dense() != dense0.as_slice() {
+                return Err("dense differs after conv delta revert".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Dirty-layer classification against residual-block boundaries: a delta
+/// whose indices all lie in layers *after* boundary `b`'s layer must be
+/// resumable from `b` (first_dirty_layer > segment_layer(b)), and a delta
+/// touching the boundary layer itself must not (staged-execution routing,
+/// DESIGN.md §8/§12).
+#[test]
+fn prop_conv_dirty_layer_vs_block_boundaries() {
+    use cdnl::runtime::{Backend, RefBackend};
+    let be = RefBackend::standard();
+    let keys = ["resnet18_16x16_c10", "wrn22_16x16_c10_poly"];
+    check(
+        0xB0D1,
+        60,
+        |r| {
+            let which = r.usize_below(2);
+            let seg = r.usize_below(6);
+            (which, seg)
+        },
+        |&(which, seg)| {
+            let key = keys[which];
+            let info = be.model(key).map_err(|e| e.to_string())?.clone();
+            let segs = be.segments(key);
+            if segs == 0 {
+                return Err("conv model reports no segments".into());
+            }
+            let seg = seg % segs;
+            let bl = be.segment_layer(key, seg);
+            if bl + 1 >= info.mask_layers.len() {
+                return Err(format!("boundary layer {bl} leaves no suffix"));
+            }
+            // Delta entirely past the boundary: first index of layer bl+1.
+            let past = MaskDelta::new(vec![info.mask_layers[bl + 1].offset]);
+            if past.first_dirty_layer(&info) <= bl {
+                return Err("suffix delta classified dirty at/before boundary".into());
+            }
+            // Delta touching the boundary layer itself: last index of bl.
+            let e = &info.mask_layers[bl];
+            let on = MaskDelta::new(vec![e.offset + e.size - 1, info.mask_layers[bl + 1].offset]);
+            if on.first_dirty_layer(&info) != bl {
+                return Err(format!(
+                    "boundary-touching delta dirty at {} != {bl}",
+                    on.first_dirty_layer(&info)
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Conv kernel padding/stride shape invariants on ragged spatial dims:
+/// output dims are `ceil(in/stride)`, and convolving all-ones input with
+/// all-ones weights makes every output element equal `cin` times its
+/// in-bounds tap count — which pins the 'SAME' pad split (odd extra on the
+/// trailing edge) exactly. dinput is input-shaped and dweight accumulates.
+#[test]
+fn prop_conv_same_padding_shapes() {
+    use cdnl::runtime::kernels::{
+        conv2d_same_dinput, conv2d_same_dweight, conv2d_same_into, conv_out_dim, same_pad_before,
+    };
+    check(
+        0x5A4E,
+        60,
+        |r| {
+            let h = r.usize_below(9) + 3; // 3..=11, odd and even
+            let w = r.usize_below(9) + 3;
+            let stride = r.usize_below(2) + 1;
+            let k = 1 + 2 * r.usize_below(2); // 1 or 3
+            (h, (w, (stride, k)))
+        },
+        |&(h, (w, (stride, k)))| {
+            let (n, cin, cout) = (2usize, 3usize, 2usize);
+            let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(w, stride));
+            if oh != h.div_ceil(stride) || ow != w.div_ceil(stride) {
+                return Err(format!("out dims ({oh},{ow}) != ceil division"));
+            }
+            let (py, px) = (same_pad_before(h, k, stride), same_pad_before(w, k, stride));
+            if py >= k.max(1) || px >= k.max(1) {
+                return Err(format!("pad ({py},{px}) >= kernel {k}"));
+            }
+            let x = vec![1.0f32; n * cin * h * w];
+            let wts = vec![1.0f32; cout * cin * k * k];
+            let mut out = Vec::new();
+            conv2d_same_into(&x, &wts, n, cin, h, w, cout, k, stride, &mut out);
+            if out.len() != n * cout * oh * ow {
+                return Err(format!("conv out len {} != {}", out.len(), n * cout * oh * ow));
+            }
+            // Ones-in/ones-weights oracle: output = cin * (in-bounds taps).
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let taps_y = (0..k)
+                        .filter(|ky| {
+                            let iy = (oy * stride + ky) as isize - py as isize;
+                            iy >= 0 && (iy as usize) < h
+                        })
+                        .count();
+                    let taps_x = (0..k)
+                        .filter(|kx| {
+                            let ix = (ox * stride + kx) as isize - px as isize;
+                            ix >= 0 && (ix as usize) < w
+                        })
+                        .count();
+                    let want = (cin * taps_y * taps_x) as f32;
+                    let got = out[oy * ow + ox]; // n=0, cout=0 plane
+                    if got != want {
+                        return Err(format!("taps at ({oy},{ox}): {got} != {want}"));
+                    }
+                }
+            }
+            let dx = conv2d_same_dinput(&out, &wts, n, cin, h, w, cout, k, stride);
+            if dx.len() != x.len() {
+                return Err(format!("dinput len {} != input {}", dx.len(), x.len()));
+            }
+            // dweight accumulates: a second call exactly doubles the buffer.
+            let mut dw = vec![0.0f32; wts.len()];
+            conv2d_same_dweight(&x, &out, &mut dw, n, cin, h, w, cout, k, stride);
+            let once = dw.clone();
+            conv2d_same_dweight(&x, &out, &mut dw, n, cin, h, w, cout, k, stride);
+            for (a, b) in dw.iter().zip(&once) {
+                if *a != 2.0 * *b {
+                    return Err("dweight does not accumulate additively".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Removing a whole layer then checking histogram slots zero out.
 #[test]
 fn prop_layer_histogram_consistent() {
