@@ -1,0 +1,8 @@
+//! Thin wrapper: `cargo bench --bench bench_perf_conv_lowered` runs the
+//! registered `perf_conv_lowered` benchmark (see
+//! `rust/src/bench/suite/perf_conv_lowered.rs`) and writes its report to
+//! `results/bench/BENCH_perf_conv_lowered.json`.
+
+fn main() -> anyhow::Result<()> {
+    cdnl::bench::bench_main("perf_conv_lowered")
+}

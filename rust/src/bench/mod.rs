@@ -157,7 +157,7 @@ pub fn registry() -> &'static [BenchDef] {
     &REGISTRY
 }
 
-static REGISTRY: [BenchDef; 16] = [
+static REGISTRY: [BenchDef; 17] = [
     BenchDef {
         name: "smoke",
         tier: Tier::Smoke,
@@ -270,6 +270,13 @@ static REGISTRY: [BenchDef; 16] = [
         paper: "§Perf",
         run: suite::perf::run,
     },
+    BenchDef {
+        name: "perf_conv_lowered",
+        tier: Tier::Perf,
+        title: "GEMM-lowered conv: direct vs lowered vs slab-reused scans",
+        paper: "§Perf",
+        run: suite::perf_conv_lowered::run,
+    },
 ];
 
 /// Look up one benchmark by registry name.
@@ -365,7 +372,7 @@ mod tests {
             assert!(!d.title.is_empty() && !d.paper.is_empty());
         }
         assert!(find("nope").is_err());
-        assert_eq!(registry().len(), 16);
+        assert_eq!(registry().len(), 17);
     }
 
     #[test]
@@ -375,9 +382,9 @@ mod tests {
         }
         assert_eq!(Tier::parse("bogus"), None);
         assert_eq!(by_tier(Tier::Smoke).len(), 1);
-        assert_eq!(by_tier(Tier::Perf).len(), 1);
+        assert_eq!(by_tier(Tier::Perf).len(), 2);
         assert_eq!(
-            by_tier(Tier::Paper).len() + 2,
+            by_tier(Tier::Paper).len() + 3,
             registry().len(),
             "every bench belongs to exactly one tier"
         );

@@ -20,6 +20,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod perf;
+pub mod perf_conv_lowered;
 pub mod smoke;
 pub mod table1;
 pub mod table2;

@@ -224,7 +224,12 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
         &sess,
         &train_ds,
         2,
-        EvalOpts { cache_bytes: 64 << 20, trial_batch: 16, verify_staged: false },
+        EvalOpts {
+            cache_bytes: 64 << 20,
+            trial_batch: 16,
+            verify_staged: false,
+            verify_lowering: false,
+        },
     )?;
     let mut batched_rows = Vec::new();
     for &d in &[1usize, 8, 64] {

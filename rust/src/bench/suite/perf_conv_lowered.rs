@@ -1,0 +1,229 @@
+//! §Perf: GEMM-lowered convolution vs the retained direct loops
+//! (DESIGN.md §13).
+//!
+//! Measures (and records in the `perf_conv_lowered` report):
+//!   - the raw forward conv kernel, direct 7-deep loop vs im2col+GEMM
+//!     lowering (the ≥5x claim in README's Perf table rides here);
+//!   - full trial scans at DRC ∈ {1, 8, 64} on both conv families
+//!     (`resnet18_16x16_c10`, `wrn22_16x16_c10`) under three routes:
+//!     direct kernels, lowered kernels, and lowered + slab-wide patch
+//!     reuse (`bcd.trial_batch` + prefix cache);
+//!   - a bit-identity grid: lowered-kernel scans across
+//!     `trial_batch ∈ {1, 32}` x `workers ∈ {1, 4}` against the
+//!     direct-kernel reference outcome.
+//!
+//! Every scan outcome is `ensure!`d bit-identical across routes — the
+//! lowering is a pure reordering-free replay of the direct loops, so only
+//! wall-clock may differ. Timings and speedups are advisory (`time_ms` /
+//! `rate` metrics plus `results/perf_conv_lowered*.csv`); the gate never
+//! fails on them across hosts.
+
+use crate::bench::{setup, BenchCtx};
+use crate::coordinator::eval::{EvalOpts, Evaluator};
+use crate::coordinator::trials::{scan_trials, BlockSampler};
+use crate::data::synth;
+use crate::metrics::write_csv;
+use crate::runtime::kernels::conv2d_same_into;
+use crate::runtime::lowering;
+use crate::runtime::session::Session;
+use crate::runtime::Backend;
+use crate::util::bench::{print_results, summarize, time};
+use crate::util::prng::Rng;
+use anyhow::{ensure, Result};
+
+const MODELS: [&str; 2] = ["resnet18_16x16_c10", "wrn22_16x16_c10"];
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+    let (train_ds, _) = synth::generate(synth::by_name("synth10").unwrap());
+    let (iters, warmup) = if cx.full { (20, 4) } else { (6, 1) };
+    let rt = if cx.full { 24 } else { 8 };
+    let mut results = Vec::new();
+
+    // --- raw forward kernel: direct loop vs im2col+GEMM ----------------------
+    // One representative mid-network shape (16ch 16x16, k=3, model batch);
+    // the scan sections below cover the full per-model layer mix.
+    let bsz = engine.manifest().batch;
+    let (cin, h, wd, cout, k) = (16usize, 16usize, 16usize, 16usize, 3usize);
+    let mut rng = Rng::new(0x70E5);
+    let kx: Vec<f32> = (0..bsz * cin * h * wd).map(|_| rng.normal()).collect();
+    let kw: Vec<f32> = (0..cout * cin * k * k).map(|_| rng.normal()).collect();
+    let mut kout = Vec::new();
+    lowering::set_conv_direct(true);
+    let r = time(
+        &format!("conv fwd [{bsz}x{cin}x{h}x{wd} k{k}] direct"),
+        warmup,
+        iters,
+        || conv2d_same_into(&kx, &kw, bsz, cin, h, wd, cout, k, 1, &mut kout),
+    );
+    let direct_kernel_ms = r.p50_ms;
+    cx.time_ms("kernel", "fwd_direct", &r.samples_ms);
+    results.push(r);
+    lowering::set_conv_direct(false);
+    let mut kref = Vec::new();
+    conv2d_same_into(&kx, &kw, bsz, cin, h, wd, cout, k, 1, &mut kref);
+    lowering::set_conv_direct(true);
+    let mut kdir = Vec::new();
+    conv2d_same_into(&kx, &kw, bsz, cin, h, wd, cout, k, 1, &mut kdir);
+    lowering::set_conv_direct(false);
+    ensure!(kref == kdir, "lowered forward kernel diverged bitwise from direct");
+    let r = time(
+        &format!("conv fwd [{bsz}x{cin}x{h}x{wd} k{k}] lowered"),
+        warmup,
+        iters,
+        || conv2d_same_into(&kx, &kw, bsz, cin, h, wd, cout, k, 1, &mut kout),
+    );
+    let lowered_kernel_ms = r.p50_ms;
+    cx.time_ms("kernel", "fwd_lowered", &r.samples_ms);
+    results.push(r);
+    let kernel_speedup = direct_kernel_ms / lowered_kernel_ms.max(1e-9);
+    cx.rate("kernel", "fwd_speedup", kernel_speedup, "x");
+    println!(
+        "conv forward kernel: direct {direct_kernel_ms:.2} ms, lowered \
+         {lowered_kernel_ms:.2} ms => {kernel_speedup:.2}x"
+    );
+    write_csv(
+        &setup::results_csv("perf_conv_lowered_kernel"),
+        &["n", "cin", "h", "w", "cout", "k", "direct_ms", "lowered_ms", "speedup"],
+        &[vec![
+            bsz.to_string(),
+            cin.to_string(),
+            h.to_string(),
+            wd.to_string(),
+            cout.to_string(),
+            k.to_string(),
+            format!("{direct_kernel_ms:.3}"),
+            format!("{lowered_kernel_ms:.3}"),
+            format!("{kernel_speedup:.2}"),
+        ]],
+    )?;
+
+    // --- trial scans: direct vs lowered vs slab-reused, DRC sweep ------------
+    let mut scan_rows = Vec::new();
+    for model in MODELS {
+        let sess = Session::new(engine, model)?;
+        let st = sess.init_state(1)?;
+        let info = sess.info().clone();
+        let sampler = BlockSampler::new(crate::config::Granularity::Pixel, sess.info());
+        let ev = Evaluator::new(&sess, &train_ds, 2)?;
+        let params = ev.upload_params(&st.params)?;
+        let base = ev.accuracy(&params, st.mask.dense())?;
+        let ev_slab = Evaluator::with_opts(
+            &sess,
+            &train_ds,
+            2,
+            EvalOpts {
+                cache_bytes: 64 << 20,
+                trial_batch: 16,
+                verify_staged: false,
+                verify_lowering: false,
+            },
+        )?;
+        for &d in &[1usize, 8, 64] {
+            let d = d.min(info.mask_size / 4); // tiny models: keep pools sane
+            lowering::set_conv_direct(true);
+            let mut rng = Rng::new(33);
+            let t0 = std::time::Instant::now();
+            let direct_out =
+                scan_trials(&ev, &params, &st.mask, &sampler, d, rt, -1e9, base, &mut rng, 1)?;
+            let direct_ms = 1000.0 * t0.elapsed().as_secs_f64();
+            lowering::set_conv_direct(false);
+            let mut rng = Rng::new(33);
+            let t0 = std::time::Instant::now();
+            let lowered_out =
+                scan_trials(&ev, &params, &st.mask, &sampler, d, rt, -1e9, base, &mut rng, 1)?;
+            let lowered_ms = 1000.0 * t0.elapsed().as_secs_f64();
+            let mut rng = Rng::new(33);
+            let t0 = std::time::Instant::now();
+            let slab_out = scan_trials(
+                &ev_slab, &params, &st.mask, &sampler, d, rt, -1e9, base, &mut rng, 1,
+            )?;
+            let slab_ms = 1000.0 * t0.elapsed().as_secs_f64();
+            ensure!(
+                direct_out == lowered_out && direct_out == slab_out,
+                "conv scan outcome diverged across kernel routes ({model}, DRC={d})"
+            );
+            let x_lowered = direct_ms / lowered_ms.max(1e-9);
+            let x_slab = direct_ms / slab_ms.max(1e-9);
+            println!(
+                "{model} DRC={d}: direct {direct_ms:.1} ms, lowered {lowered_ms:.1} ms \
+                 ({x_lowered:.2}x), slab-reused {slab_ms:.1} ms ({x_slab:.2}x)"
+            );
+            results.push(summarize(
+                &format!("{model} scan x{rt} DRC={d}, direct"),
+                vec![direct_ms],
+            ));
+            results.push(summarize(
+                &format!("{model} scan x{rt} DRC={d}, lowered"),
+                vec![lowered_ms],
+            ));
+            results.push(summarize(
+                &format!("{model} scan x{rt} DRC={d}, slab-reused"),
+                vec![slab_ms],
+            ));
+            cx.time_ms(model, &format!("scan_direct_drc{d}"), &[direct_ms]);
+            cx.time_ms(model, &format!("scan_lowered_drc{d}"), &[lowered_ms]);
+            cx.time_ms(model, &format!("scan_slab_drc{d}"), &[slab_ms]);
+            cx.rate(model, &format!("speedup_lowered_drc{d}"), x_lowered, "x");
+            cx.rate(model, &format!("speedup_slab_drc{d}"), x_slab, "x");
+            scan_rows.push(vec![
+                model.to_string(),
+                d.to_string(),
+                format!("{direct_ms:.2}"),
+                format!("{lowered_ms:.2}"),
+                format!("{slab_ms:.2}"),
+                format!("{x_lowered:.2}"),
+                format!("{x_slab:.2}"),
+            ]);
+        }
+
+        // --- bit-identity grid: trial_batch x workers vs direct kernels ------
+        // One reference outcome from the direct loops, then every
+        // (trial_batch, workers) combination of the lowered route must
+        // reproduce it bit for bit (DESIGN.md §8 replay merge + §13).
+        let grid_drc = 8.min(info.mask_size / 4);
+        lowering::set_conv_direct(true);
+        let mut rng = Rng::new(55);
+        let reference = scan_trials(
+            &ev, &params, &st.mask, &sampler, grid_drc, rt, -1e9, base, &mut rng, 1,
+        )?;
+        lowering::set_conv_direct(false);
+        let mut checked = 0usize;
+        for &tb in &[1usize, 32] {
+            let ev_g = Evaluator::with_opts(
+                &sess,
+                &train_ds,
+                2,
+                EvalOpts {
+                    cache_bytes: 64 << 20,
+                    trial_batch: tb,
+                    verify_staged: false,
+                    verify_lowering: false,
+                },
+            )?;
+            for &w in &[1usize, 4] {
+                let mut rng = Rng::new(55);
+                let out = scan_trials(
+                    &ev_g, &params, &st.mask, &sampler, grid_drc, rt, -1e9, base, &mut rng, w,
+                )?;
+                ensure!(
+                    out == reference,
+                    "lowered scan (trial_batch={tb}, workers={w}) diverged from the \
+                     direct-kernel reference on {model}"
+                );
+                checked += 1;
+            }
+        }
+        cx.count(model, "grid_outcomes_checked", checked, "scans");
+        println!("{model}: {checked} lowered trial_batch x workers scans == direct reference");
+    }
+    write_csv(
+        &setup::results_csv("perf_conv_lowered"),
+        &["model", "drc", "direct_ms", "lowered_ms", "slab_ms", "x_lowered", "x_slab"],
+        &scan_rows,
+    )?;
+
+    print_results("§Perf — GEMM-lowered convolution", &results);
+    println!("\n{}", engine.stats_table());
+    Ok(())
+}

@@ -1,6 +1,6 @@
 //! Smoke tier: the CI gate benchmark (seconds, reference backend).
 //!
-//! Five case groups:
+//! Six case groups:
 //!
 //! 1. **Structural manifest contract** — per-model ReLU pool sizes,
 //!    parameter-vector lengths and mask-layer counts, plus the model count
@@ -32,6 +32,13 @@
 //!    iteration (timing + evaluated stat), and the same slab grouping
 //!    arithmetic as group 4 driven across residual-block boundaries, so
 //!    the multi-segment staged route has its own exact `count` gate.
+//! 6. **Conv-lowering contract** (DESIGN.md §13) — the GEMM-lowered conv
+//!    kernels' float-independent tallies. Kernel-level calls (one bitwise
+//!    ensure against the retained direct loop) pin the im2col call/byte
+//!    arithmetic and the scratch-arena hit count; a staged and a full conv
+//!    slab re-driven through group 5's evaluator pin the slab-wide
+//!    patch-reuse counter, read back as a delta of the backend's
+//!    `conv_lowering:slab_patch_reuse` stat.
 
 use crate::bench::BenchCtx;
 use crate::coordinator::eval::{EvalOpts, Evaluator};
@@ -39,6 +46,8 @@ use crate::coordinator::trials::{scan_trials, BlockSampler};
 use crate::data::synth;
 use crate::model::MaskDelta;
 use crate::methods::registry::{self, ChainSpec, Method, MethodCtx, RecordSink};
+use crate::runtime::kernels::conv2d_same_direct_into;
+use crate::runtime::lowering;
 use crate::runtime::session::Session;
 use crate::runtime::Backend;
 use crate::util::bench::time;
@@ -171,7 +180,12 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
         &sess,
         &train_ds,
         2,
-        EvalOpts { cache_bytes: 16 << 20, trial_batch: 4, verify_staged: true },
+        EvalOpts {
+            cache_bytes: 16 << 20,
+            trial_batch: 4,
+            verify_staged: true,
+            verify_lowering: true,
+        },
     )?;
     ensure!(ev_b.slab_width() == 4, "reference backend must accept slab width 4");
     ensure!(ev_b.num_batches() == 2, "count derivation assumes 2 eval batches");
@@ -242,7 +256,12 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
         &conv,
         &train_ds,
         2,
-        EvalOpts { cache_bytes: 16 << 20, trial_batch: 4, verify_staged: true },
+        EvalOpts {
+            cache_bytes: 16 << 20,
+            trial_batch: 4,
+            verify_staged: true,
+            verify_lowering: true,
+        },
     )?;
     ensure!(ev_cb.slab_width() == 4, "conv model must accept slab width 4");
     ensure!(ev_cb.num_batches() == 2, "conv count derivation assumes 2 eval batches");
@@ -276,6 +295,56 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
         "smoke conv: {} segments, base acc {cbase:.2}%, {cslabs} slabs \
          ({cstaged_n} staged + {cfull_n} full)",
         engine.segments(&conv.key)
+    );
+
+    // --- 6: conv-lowering contract (DESIGN.md §13) ---------------------------
+    // Kernel-level tally arithmetic. The lowering is called directly (not
+    // through the verify dispatch), so the debug-build oracle cross-check
+    // cannot move the counts — they are exact in every build. Shapes
+    // (n=2, cin=3, 8x8, cout=4, k=3, s=1), so oh*ow = 64 and the patch
+    // matrices are 27x64 (forward, 1728 floats) and 36x64 (dinput, 2304):
+    //   im2col_calls  = (2 fwd + 1 dinput + 1 dweight) x 2 images   = 8
+    //   im2col_bytes  = 4 x (1728*2*3 + 2304*2)                     = 59904
+    //   scratch_hits  = fwd2 pt + dinput wflip + dweight acc & pt   = 4
+    let _ = lowering::drain_tallies(); // isolate this case's counters
+    let mut lsc = lowering::Scratch::new();
+    let (ln, lcin, lh, lwd, lcout, lk) = (2usize, 3usize, 8usize, 8usize, 4usize, 3usize);
+    let mut lrng = Rng::new(0xC0DE);
+    let lx: Vec<f32> = (0..ln * lcin * lh * lwd).map(|_| lrng.normal()).collect();
+    let lwt: Vec<f32> = (0..lcout * lcin * lk * lk).map(|_| lrng.normal()).collect();
+    let mut ly = Vec::new();
+    lowering::conv2d_lowered_into(&lx, &lwt, ln, lcin, lh, lwd, lcout, lk, 1, &mut ly, &mut lsc);
+    let mut lwant = Vec::new();
+    conv2d_same_direct_into(&lx, &lwt, ln, lcin, lh, lwd, lcout, lk, 1, &mut lwant);
+    ensure!(ly == lwant, "lowered conv forward diverged bitwise from the direct loop");
+    lowering::conv2d_lowered_into(&lx, &lwt, ln, lcin, lh, lwd, lcout, lk, 1, &mut ly, &mut lsc);
+    let ldy = ly.clone();
+    let _ldx = lowering::conv2d_lowered_dinput(&ldy, &lwt, ln, lcin, lh, lwd, lcout, lk, 1, &mut lsc);
+    let mut ldw = vec![0.0f32; lwt.len()];
+    lowering::conv2d_lowered_dweight(&lx, &ldy, &mut ldw, ln, lcin, lh, lwd, lcout, lk, 1, &mut lsc);
+    let lt = lowering::drain_tallies();
+    cx.count("conv_lowered", "im2col_calls", lt.im2col_calls as usize, "calls");
+    cx.count("conv_lowered", "im2col_bytes", lt.im2col_bytes as usize, "bytes");
+    cx.count("conv_lowered", "scratch_hits", lt.scratch_hits as usize, "takes");
+
+    // Backend-level: re-drive one staged and one full width-4 slab from
+    // group 5 and read the slab-wide patch-reuse counter back as a stats
+    // delta. Each slab shares its prologue (stem conv / resumed block)
+    // across every live hypothesis but the first:
+    //   staged slab of 4: 2 batches x (4 - 1) = 6
+    //   full   slab of 4: 2 batches x (4 - 1) = 6     => 12
+    let reuse0 =
+        engine.stats().get("conv_lowering:slab_patch_reuse").map_or(0, |s| s.calls);
+    for slab in [&cstaged[..], &cfull[..]] {
+        let _ = ev_cb.eval_trial_slab(&cparams, &cst.mask, slab, 0.0, &mut scratch)?;
+    }
+    let reuse =
+        engine.stats().get("conv_lowering:slab_patch_reuse").map_or(0, |s| s.calls) - reuse0;
+    cx.count("conv_lowered", "slab_patch_reuse", reuse as usize, "hyps");
+    println!(
+        "smoke conv lowering: {} im2col calls ({} bytes), {} scratch hits, \
+         {reuse} slab-reused hyps",
+        lt.im2col_calls, lt.im2col_bytes, lt.scratch_hits
     );
     Ok(())
 }

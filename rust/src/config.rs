@@ -132,6 +132,11 @@ pub struct BcdConfig {
     /// forward, in release builds too (debug builds always check). A CI
     /// knob: scoring runs roughly double, mismatches abort the run.
     pub verify_staged: bool,
+    /// Verify every lowered conv kernel call against the retained direct
+    /// loop, in release builds too (debug builds always check). Same CI
+    /// idiom as `verify_staged`, one level down: conv kernels run roughly
+    /// double, mismatches abort the run (DESIGN.md §13).
+    pub verify_lowering: bool,
 }
 
 impl Default for BcdConfig {
@@ -151,6 +156,7 @@ impl Default for BcdConfig {
             cache_mb: 64,
             trial_batch: 16,
             verify_staged: false,
+            verify_lowering: false,
         }
     }
 }
@@ -408,6 +414,7 @@ impl Experiment {
             "bcd.cache_mb" => self.bcd.cache_mb = p!(value),
             "bcd.trial_batch" => self.bcd.trial_batch = p!(value),
             "bcd.verify_staged" => self.bcd.verify_staged = p!(value),
+            "bcd.verify_lowering" => self.bcd.verify_lowering = p!(value),
             "snl.lambda0" => self.snl.lambda0 = p!(value),
             "snl.kappa" => self.snl.kappa = p!(value),
             "snl.stall_patience" => self.snl.stall_patience = p!(value),
@@ -488,6 +495,7 @@ impl Experiment {
         put("bcd.cache_mb", self.bcd.cache_mb.to_string());
         put("bcd.trial_batch", self.bcd.trial_batch.to_string());
         put("bcd.verify_staged", self.bcd.verify_staged.to_string());
+        put("bcd.verify_lowering", self.bcd.verify_lowering.to_string());
         put("snl.lambda0", self.snl.lambda0.to_string());
         put("snl.kappa", self.snl.kappa.to_string());
         put("snl.stall_patience", self.snl.stall_patience.to_string());
@@ -518,17 +526,19 @@ impl Experiment {
     /// that cannot change numerics (paths, `bcd.workers` — the scan is
     /// worker-count invariant — `bcd.cache_mb` and `bcd.trial_batch` —
     /// staged and batched scoring are bit-identical to full scoring — and
-    /// `bcd.verify_staged`, a pure cross-check) are excluded, so moving an
-    /// output directory, rescaling the thread pool, or resizing the prefix
-    /// cache or trial slab does not orphan a resumable run.
+    /// `bcd.verify_staged` and `bcd.verify_lowering`, pure cross-checks)
+    /// are excluded, so moving an output directory, rescaling the thread
+    /// pool, or resizing the prefix cache or trial slab does not orphan a
+    /// resumable run.
     pub fn fingerprint(&self) -> String {
-        const NON_SEMANTIC: [&str; 6] = [
+        const NON_SEMANTIC: [&str; 7] = [
             "out_dir",
             "artifacts_dir",
             "bcd.workers",
             "bcd.cache_mb",
             "bcd.trial_batch",
             "bcd.verify_staged",
+            "bcd.verify_lowering",
         ];
         let mut dump = self.dump();
         dump.retain(|k, _| !NON_SEMANTIC.contains(&k.as_str()));
@@ -665,10 +675,11 @@ mod tests {
         e.bcd.cache_mb = 0;
         e.bcd.trial_batch = 1;
         e.bcd.verify_staged = true;
+        e.bcd.verify_lowering = true;
         assert_eq!(
             e.fingerprint(),
             fp,
-            "workers/out_dir/cache_mb/trial_batch/verify_staged must not shift identity"
+            "workers/out_dir/cache_mb/trial_batch/verify knobs must not shift identity"
         );
         e.bcd.rt = 99;
         assert_ne!(e.fingerprint(), fp, "rt change must shift identity");
@@ -689,14 +700,19 @@ mod tests {
         let mut e = Experiment::default();
         assert_eq!(e.bcd.trial_batch, 16, "batched scoring on by default");
         assert!(!e.bcd.verify_staged, "verification is opt-in");
+        assert!(!e.bcd.verify_lowering, "lowering verification is opt-in");
         e.apply("bcd.trial_batch", "32").unwrap();
         assert_eq!(e.bcd.trial_batch, 32);
         e.apply("bcd.verify_staged", "true").unwrap();
         assert!(e.bcd.verify_staged);
+        e.apply("bcd.verify_lowering", "true").unwrap();
+        assert!(e.bcd.verify_lowering);
         assert!(e.apply("bcd.trial_batch", "wide").is_err());
         assert!(e.apply("bcd.verify_staged", "maybe").is_err());
+        assert!(e.apply("bcd.verify_lowering", "maybe").is_err());
         assert_eq!(e.dump().get("bcd.trial_batch").unwrap(), "32");
         assert_eq!(e.dump().get("bcd.verify_staged").unwrap(), "true");
+        assert_eq!(e.dump().get("bcd.verify_lowering").unwrap(), "true");
     }
 
     #[test]

@@ -187,10 +187,10 @@ pub fn run_bcd_resumable(
     let wall0 = std::time::Instant::now();
     // The hot-path evaluator carries the prefix-activation cache
     // (`bcd.cache_mb`, 0 = full forwards only), the hypothesis-slab width
-    // (`bcd.trial_batch`) and the release-mode verification knob
-    // (`bcd.verify_staged`); staged, batched and full scoring are all
-    // bit-identical, so none of these knobs ever move results
-    // (DESIGN.md §8, §11).
+    // (`bcd.trial_batch`) and the release-mode verification knobs
+    // (`bcd.verify_staged`, `bcd.verify_lowering`); staged, batched,
+    // lowered and full scoring are all bit-identical, so none of these
+    // knobs ever move results (DESIGN.md §8, §11, §13).
     let ev = Evaluator::with_opts(
         sess,
         train_ds,
@@ -199,6 +199,7 @@ pub fn run_bcd_resumable(
             cache_bytes: cfg.cache_mb.saturating_mul(1 << 20),
             trial_batch: cfg.trial_batch,
             verify_staged: cfg.verify_staged,
+            verify_lowering: cfg.verify_lowering,
         },
     )?;
     let sampler = BlockSampler::new(cfg.granularity, sess.info());

@@ -178,7 +178,7 @@ struct BatchTallies {
 
 /// Throughput/verification knobs of an [`Evaluator`] — all NON-semantic:
 /// none of them may change any score bit (`bcd.cache_mb`,
-/// `bcd.trial_batch`, `bcd.verify_staged`).
+/// `bcd.trial_batch`, `bcd.verify_staged`, `bcd.verify_lowering`).
 #[derive(Clone, Copy, Debug)]
 pub struct EvalOpts {
     /// Prefix-activation cache budget in bytes (0 disables staging).
@@ -189,11 +189,20 @@ pub struct EvalOpts {
     /// Check every staged/batched score against its own full forward in
     /// release builds too (debug builds always check).
     pub verify_staged: bool,
+    /// Cross-check every lowered conv kernel call against the retained
+    /// direct loop in release builds too (debug builds always check) —
+    /// the DESIGN.md §13 analogue of `verify_staged`.
+    pub verify_lowering: bool,
 }
 
 impl Default for EvalOpts {
     fn default() -> Self {
-        EvalOpts { cache_bytes: 64 << 20, trial_batch: 1, verify_staged: false }
+        EvalOpts {
+            cache_bytes: 64 << 20,
+            trial_batch: 1,
+            verify_staged: false,
+            verify_lowering: false,
+        }
     }
 }
 
@@ -272,6 +281,10 @@ impl<'e, 's> Evaluator<'e, 's> {
         max_batches: usize,
         opts: EvalOpts,
     ) -> Result<Evaluator<'e, 's>> {
+        // The lowering cross-check is a process-wide kernel knob, not
+        // per-evaluator state: arm it here so every conv call made on
+        // behalf of this evaluator (any thread) is checked.
+        crate::runtime::lowering::set_verify_lowering(opts.verify_lowering);
         let batch = sess.batch;
         let avail = ds.len().div_ceil(batch);
         let n = max_batches.min(avail).max(1);

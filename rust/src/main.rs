@@ -351,8 +351,8 @@ fn cmd_run_single(
 }
 
 /// Shared terminal fields of every sealed run manifest: status, typed
-/// outcomes, result, and the backend stats snapshot (incl. prefix_cache
-/// and trial_batch counters) so `runs show` can replay them after this
+/// outcomes, result, and the backend stats snapshot (incl. prefix_cache,
+/// trial_batch and conv_lowering counters) so `runs show` can replay them after this
 /// process is gone.
 fn seal_complete(
     m: &mut cdnl::runstore::RunManifest,
@@ -954,8 +954,8 @@ fn runs_show(store: &RunStore, id: &str) -> Result<()> {
                 })
                 .collect();
             println!(
-                "\nBackend stats at seal time (incl. prefix-cache and \
-                 trial-batch counters):"
+                "\nBackend stats at seal time (incl. prefix-cache, \
+                 trial-batch and conv-lowering counters):"
             );
             print!("{}", cdnl::runtime::backend::format_stats_table(&rows));
         }

@@ -29,9 +29,10 @@
 
 use super::kernels::{
     add_into, bn_backward_train, bn_eval_into, bn_train_into, conv2d_same_dinput,
-    conv2d_same_dweight, conv2d_same_into, conv_out_dim, dact_channel, gap_back, gap_into,
-    gemm_bias_into, mask_act_channel_into, BnCache,
+    conv2d_same_dweight, conv2d_same_into, conv2d_same_into_s, conv_out_dim, dact_channel,
+    gap_back, gap_into, gemm_bias_into, mask_act_channel_into, BnCache,
 };
+use super::lowering::{with_scratch, Scratch};
 use super::manifest::PackEntry;
 use crate::util::prng::Rng;
 
@@ -399,134 +400,237 @@ impl ConvPlan {
     // of batch composition, and `forward_eval` / `forward_prefix` +
     // `forward_from` call the exact same block functions in the same order —
     // staged resume is bit-identical to the full forward by construction.
+    //
+    // Every path is scratch-threaded (`_s` suffix, DESIGN.md §13): all
+    // intermediates come from the [`Scratch`] arena and go back as soon as
+    // the next op has consumed them, so a trial scan stops allocating after
+    // the first forward. Each block additionally splits into a
+    // mask-independent prologue ([`Self::block_pre_s`] -> [`BlockShared`])
+    // and a mask-dependent remainder ([`Self::block_post_s`]); the slab
+    // paths in `reference.rs` compute the prologue once per `trial_batch`
+    // hypotheses. `block_eval_s` is defined as pre + post, so the shared
+    // and unshared routes are the same float program by construction.
 
-    fn stem_eval(&self, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> Vec<f32> {
-        let s = self.image_size;
-        let hw = s * s;
-        let mut c0 = Vec::new();
+    /// Mask-independent stem: conv (+ bn for post-act families). The
+    /// result depends only on params and input, so one call feeds every
+    /// hypothesis of a full-forward slab.
+    pub fn stem_pre_s(&self, params: &[f32], x: &[f32], n: usize, s: &mut Scratch) -> Vec<f32> {
+        let side = self.image_size;
+        let hw = side * side;
         let w = &params[self.stem_conv..self.stem_conv + self.stem_c * self.channels * 9];
-        conv2d_same_into(x, w, n, self.channels, s, s, self.stem_c, 3, 1, &mut c0);
+        let mut c0 = s.take();
+        conv2d_same_into_s(x, w, n, self.channels, side, side, self.stem_c, 3, 1, &mut c0, s);
         match self.stem_bn {
             Some(off) => {
                 let (g, b, rm, rv) = bn4(params, off, self.stem_c);
-                let mut z = Vec::new();
+                let mut z = s.take();
                 bn_eval_into(&c0, g, b, rm, rv, n, self.stem_c, hw, &mut z);
-                let m0 = layer_slice(mask, &self.mask_layers[0]);
-                let mut a = Vec::new();
-                mask_act_channel_into(&z, m0, n, self.stem_c, hw, self.poly, &mut a);
-                a
+                s.put(c0);
+                z
             }
             None => c0,
         }
     }
 
-    fn block_eval(&self, bp: &BlockPlan, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+    /// Mask-independent block prologue: everything up to (and excluding)
+    /// the first mask application. ResNet: conv1 + bn1 and, when present,
+    /// the projection branch. WRN (pre-act): bn1 only — the projection
+    /// consumes the *activated* input and stays in the postlude.
+    fn block_pre_s(&self, bp: &BlockPlan, params: &[f32], x: &[f32], n: usize, s: &mut Scratch) -> BlockShared {
         let (hw_in, hw_out) = (bp.side_in * bp.side_in, bp.side_out * bp.side_out);
-        let w1 = &params[bp.conv1..bp.conv1 + bp.cout * bp.cin * 9];
+        match self.family {
+            Family::Resnet => {
+                let w1 = &params[bp.conv1..bp.conv1 + bp.cout * bp.cin * 9];
+                let mut c1 = s.take();
+                conv2d_same_into_s(x, w1, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride, &mut c1, s);
+                let (g1, be1, rm1, rv1) = bn4(params, bp.bn1, bp.cout);
+                let mut z1 = s.take();
+                bn_eval_into(&c1, g1, be1, rm1, rv1, n, bp.cout, hw_out, &mut z1);
+                let skip = match (bp.proj, bp.bnp) {
+                    (Some(pw), Some(pb)) => {
+                        let wp = &params[pw..pw + bp.cout * bp.cin];
+                        conv2d_same_into_s(x, wp, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride, &mut c1, s);
+                        let (gp, bep, rmp, rvp) = bn4(params, pb, bp.cout);
+                        let mut zp = s.take();
+                        bn_eval_into(&c1, gp, bep, rmp, rvp, n, bp.cout, hw_out, &mut zp);
+                        Some(zp)
+                    }
+                    _ => None,
+                };
+                s.put(c1);
+                BlockShared { z1, skip }
+            }
+            Family::Wrn => {
+                let (g1, be1, rm1, rv1) = bn4(params, bp.bn1, bp.cin);
+                let mut z1 = s.take();
+                bn_eval_into(x, g1, be1, rm1, rv1, n, bp.cin, hw_in, &mut z1);
+                BlockShared { z1, skip: None }
+            }
+        }
+    }
+
+    /// Mask-dependent block remainder, from a [`BlockShared`] prologue and
+    /// the block input `x` (needed by identity skips and WRN projections).
+    fn block_post_s(
+        &self,
+        bp: &BlockPlan,
+        params: &[f32],
+        mask: &[f32],
+        x: &[f32],
+        shared: &BlockShared,
+        n: usize,
+        s: &mut Scratch,
+    ) -> Vec<f32> {
+        let (hw_in, hw_out) = (bp.side_in * bp.side_in, bp.side_out * bp.side_out);
         let w2 = &params[bp.conv2..bp.conv2 + bp.cout * bp.cout * 9];
         let m1 = layer_slice(mask, &self.mask_layers[bp.act1_layer]);
         let m2 = layer_slice(mask, &self.mask_layers[bp.act2_layer]);
         match self.family {
             Family::Resnet => {
-                let mut c1 = Vec::new();
-                conv2d_same_into(x, w1, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride, &mut c1);
-                let (g1, be1, rm1, rv1) = bn4(params, bp.bn1, bp.cout);
-                let mut z1 = Vec::new();
-                bn_eval_into(&c1, g1, be1, rm1, rv1, n, bp.cout, hw_out, &mut z1);
-                let mut a1 = Vec::new();
-                mask_act_channel_into(&z1, m1, n, bp.cout, hw_out, self.poly, &mut a1);
-                let mut c2 = Vec::new();
-                conv2d_same_into(&a1, w2, n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1, &mut c2);
+                let mut a1 = s.take();
+                mask_act_channel_into(&shared.z1, m1, n, bp.cout, hw_out, self.poly, &mut a1);
+                let mut c2 = s.take();
+                conv2d_same_into_s(&a1, w2, n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1, &mut c2, s);
+                s.put(a1);
                 let (g2, be2, rm2, rv2) = bn4(params, bp.bn2, bp.cout);
-                let mut sum = Vec::new();
+                let mut sum = s.take();
                 bn_eval_into(&c2, g2, be2, rm2, rv2, n, bp.cout, hw_out, &mut sum);
-                let skip = match (bp.proj, bp.bnp) {
-                    (Some(pw), Some(pb)) => {
-                        let wp = &params[pw..pw + bp.cout * bp.cin];
-                        let mut cp = Vec::new();
-                        conv2d_same_into(x, wp, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride, &mut cp);
-                        let (gp, bep, rmp, rvp) = bn4(params, pb, bp.cout);
-                        let mut zp = Vec::new();
-                        bn_eval_into(&cp, gp, bep, rmp, rvp, n, bp.cout, hw_out, &mut zp);
-                        zp
-                    }
-                    _ => x.to_vec(),
-                };
-                add_into(&mut sum, &skip);
-                let mut out = Vec::new();
+                s.put(c2);
+                match &shared.skip {
+                    Some(zp) => add_into(&mut sum, zp),
+                    None => add_into(&mut sum, x),
+                }
+                let mut out = s.take();
                 mask_act_channel_into(&sum, m2, n, bp.cout, hw_out, self.poly, &mut out);
+                s.put(sum);
                 out
             }
             Family::Wrn => {
-                let (g1, be1, rm1, rv1) = bn4(params, bp.bn1, bp.cin);
-                let mut z1 = Vec::new();
-                bn_eval_into(x, g1, be1, rm1, rv1, n, bp.cin, hw_in, &mut z1);
-                let mut y = Vec::new();
-                mask_act_channel_into(&z1, m1, n, bp.cin, hw_in, self.poly, &mut y);
-                let id = match bp.proj {
+                let w1 = &params[bp.conv1..bp.conv1 + bp.cout * bp.cin * 9];
+                let mut y = s.take();
+                mask_act_channel_into(&shared.z1, m1, n, bp.cin, hw_in, self.poly, &mut y);
+                let mut c1 = s.take();
+                conv2d_same_into_s(&y, w1, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride, &mut c1, s);
+                let (g2, be2, rm2, rv2) = bn4(params, bp.bn2, bp.cout);
+                let mut z2 = s.take();
+                bn_eval_into(&c1, g2, be2, rm2, rv2, n, bp.cout, hw_out, &mut z2);
+                let mut h2 = s.take();
+                mask_act_channel_into(&z2, m2, n, bp.cout, hw_out, self.poly, &mut h2);
+                s.put(z2);
+                let mut out = s.take();
+                conv2d_same_into_s(&h2, w2, n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1, &mut out, s);
+                s.put(h2);
+                match bp.proj {
                     Some(pw) => {
                         let wp = &params[pw..pw + bp.cout * bp.cin];
-                        let mut cp = Vec::new();
-                        conv2d_same_into(&y, wp, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride, &mut cp);
-                        cp
+                        // The projection reads the activated input; reuse
+                        // c1's capacity for it.
+                        conv2d_same_into_s(&y, wp, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 1, bp.stride, &mut c1, s);
+                        add_into(&mut out, &c1);
                     }
-                    None => x.to_vec(),
-                };
-                let mut c1 = Vec::new();
-                conv2d_same_into(&y, w1, n, bp.cin, bp.side_in, bp.side_in, bp.cout, 3, bp.stride, &mut c1);
-                let (g2, be2, rm2, rv2) = bn4(params, bp.bn2, bp.cout);
-                let mut z2 = Vec::new();
-                bn_eval_into(&c1, g2, be2, rm2, rv2, n, bp.cout, hw_out, &mut z2);
-                let mut h2 = Vec::new();
-                mask_act_channel_into(&z2, m2, n, bp.cout, hw_out, self.poly, &mut h2);
-                let mut out = Vec::new();
-                conv2d_same_into(&h2, w2, n, bp.cout, bp.side_out, bp.side_out, bp.cout, 3, 1, &mut out);
-                add_into(&mut out, &id);
+                    None => add_into(&mut out, x),
+                }
+                s.put(c1);
+                s.put(y);
                 out
             }
         }
     }
 
+    /// One full block under one mask: prologue + remainder.
+    fn block_eval_s(&self, bp: &BlockPlan, params: &[f32], mask: &[f32], x: &[f32], n: usize, s: &mut Scratch) -> Vec<f32> {
+        let shared = self.block_pre_s(bp, params, x, n, s);
+        let out = self.block_post_s(bp, params, mask, x, &shared, n, s);
+        shared.release(s);
+        out
+    }
+
     /// Final bn/act (WRN), GAP, linear head -> logits `[n, k]`.
-    fn head_eval(&self, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+    fn head_eval_s(&self, params: &[f32], mask: &[f32], x: &[f32], n: usize, s: &mut Scratch) -> Vec<f32> {
         let hw = self.feat_side * self.feat_side;
-        let pooled_in = match self.final_bn {
+        let mut feats = s.take();
+        match self.final_bn {
             Some(off) => {
                 let (g, b, rm, rv) = bn4(params, off, self.feat_c);
-                let mut z = Vec::new();
+                let mut z = s.take();
                 bn_eval_into(x, g, b, rm, rv, n, self.feat_c, hw, &mut z);
                 let ml = layer_slice(mask, self.mask_layers.last().expect("wrn has layers"));
-                let mut a = Vec::new();
+                let mut a = s.take();
                 mask_act_channel_into(&z, ml, n, self.feat_c, hw, self.poly, &mut a);
-                a
+                s.put(z);
+                gap_into(&a, n, self.feat_c, hw, &mut feats);
+                s.put(a);
             }
-            None => x.to_vec(),
-        };
-        let mut feats = Vec::new();
-        gap_into(&pooled_in, n, self.feat_c, hw, &mut feats);
+            None => gap_into(x, n, self.feat_c, hw, &mut feats),
+        }
         let wh = &params[self.head_w..self.head_w + self.feat_c * self.num_classes];
         let bh = &params[self.head_b..self.head_b + self.num_classes];
-        let mut logits = Vec::new();
+        let mut logits = s.take();
         gemm_bias_into(&feats, wh, bh, n, self.feat_c, self.num_classes, &mut logits);
+        s.put(feats);
         logits
+    }
+
+    /// Stem mask/act (post-act families) then `blocks[..upto]`, off an
+    /// already-computed [`Self::stem_pre_s`] tensor.
+    fn run_blocks_from_stem_s(&self, upto: usize, params: &[f32], mask: &[f32], stem_pre: &[f32], n: usize, s: &mut Scratch) -> Vec<f32> {
+        let (mut cur, start) = match self.stem_bn {
+            Some(_) => {
+                let hw = self.image_size * self.image_size;
+                let m0 = layer_slice(mask, &self.mask_layers[0]);
+                let mut a = s.take();
+                mask_act_channel_into(stem_pre, m0, n, self.stem_c, hw, self.poly, &mut a);
+                (a, 0)
+            }
+            None => {
+                // A bare stem has no mask layer, so block 0 reads the
+                // (possibly slab-shared) stem tensor in place. Bare-stem
+                // families never place a boundary before block 1.
+                debug_assert!(upto >= 1);
+                (self.block_eval_s(&self.blocks[0], params, mask, stem_pre, n, s), 1)
+            }
+        };
+        for bp in &self.blocks[start..upto] {
+            let next = self.block_eval_s(bp, params, mask, &cur, n, s);
+            s.put(std::mem::replace(&mut cur, next));
+        }
+        cur
     }
 
     /// Full eval-mode forward -> logits `[n, k]`.
     pub fn forward_eval(&self, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> Vec<f32> {
-        let mut cur = self.stem_eval(params, mask, x, n);
-        for bp in &self.blocks {
-            cur = self.block_eval(bp, params, mask, &cur, n);
-        }
-        self.head_eval(params, mask, &cur, n)
+        with_scratch(|s| self.forward_eval_s(params, mask, x, n, s))
+    }
+
+    /// [`Self::forward_eval`] with an explicit scratch arena.
+    pub fn forward_eval_s(&self, params: &[f32], mask: &[f32], x: &[f32], n: usize, s: &mut Scratch) -> Vec<f32> {
+        let pre = self.stem_pre_s(params, x, n, s);
+        let logits = self.forward_eval_with_stem_s(&pre, params, mask, n, s);
+        s.put(pre);
+        logits
+    }
+
+    /// Full forward off a shared [`Self::stem_pre_s`] tensor — the
+    /// full-slab fast path: one stem conv (and one im2col of the input
+    /// images) feeds the whole hypothesis batch.
+    pub fn forward_eval_with_stem_s(&self, stem_pre: &[f32], params: &[f32], mask: &[f32], n: usize, s: &mut Scratch) -> Vec<f32> {
+        let cur = self.run_blocks_from_stem_s(self.blocks.len(), params, mask, stem_pre, n, s);
+        let logits = self.head_eval_s(params, mask, &cur, n, s);
+        s.put(cur);
+        logits
     }
 
     /// Boundary-`segment` activations of the eval-mode forward (the tensor
     /// the staged trial path caches).
     pub fn forward_prefix(&self, segment: usize, params: &[f32], mask: &[f32], x: &[f32], n: usize) -> Vec<f32> {
-        let mut cur = self.stem_eval(params, mask, x, n);
-        for bp in &self.blocks[..self.boundary_blocks[segment]] {
-            cur = self.block_eval(bp, params, mask, &cur, n);
-        }
+        with_scratch(|s| self.forward_prefix_s(segment, params, mask, x, n, s))
+    }
+
+    /// [`Self::forward_prefix`] with an explicit scratch arena.
+    pub fn forward_prefix_s(&self, segment: usize, params: &[f32], mask: &[f32], x: &[f32], n: usize, s: &mut Scratch) -> Vec<f32> {
+        let pre = self.stem_pre_s(params, x, n, s);
+        let cur = self.run_blocks_from_stem_s(self.boundary_blocks[segment], params, mask, &pre, n, s);
+        s.put(pre);
         cur
     }
 
@@ -536,19 +640,71 @@ impl ConvPlan {
         self.mask_layers[self.boundary_layers[segment] + 1].offset
     }
 
+    /// Mask-independent prologue of the first block after boundary
+    /// `segment`, shared across a resume slab's hypotheses. `None` when
+    /// every block is already folded into the boundary (WRN's last
+    /// boundary) and resume is head-only.
+    pub fn resume_shared_s(&self, segment: usize, acts: &[f32], params: &[f32], n: usize, s: &mut Scratch) -> Option<BlockShared> {
+        let bi = self.boundary_blocks[segment];
+        self.blocks.get(bi).map(|bp| self.block_pre_s(bp, params, acts, n, s))
+    }
+
     /// Resume from boundary `segment`: `mask_suffix` covers mask layers
     /// after the boundary; the prefix positions of the reconstructed
     /// full-size mask are zero-filled and never read, so this is
     /// bit-identical to [`Self::forward_eval`] under the same full mask.
     pub fn forward_from(&self, segment: usize, acts: &[f32], params: &[f32], mask_suffix: &[f32], n: usize) -> Vec<f32> {
-        let off = self.suffix_offset(segment);
-        let mut full = vec![0.0f32; self.mask_size];
-        full[off..].copy_from_slice(mask_suffix);
-        let mut cur = acts.to_vec();
-        for bp in &self.blocks[self.boundary_blocks[segment]..] {
-            cur = self.block_eval(bp, params, &full, &cur, n);
+        with_scratch(|s| self.forward_from_s(segment, acts, params, mask_suffix, n, s))
+    }
+
+    /// [`Self::forward_from`] with an explicit scratch arena. Defined as
+    /// prologue + [`Self::forward_from_with_shared_s`], so the slab-shared
+    /// route is the same float program as the single-trial one.
+    pub fn forward_from_s(&self, segment: usize, acts: &[f32], params: &[f32], mask_suffix: &[f32], n: usize, s: &mut Scratch) -> Vec<f32> {
+        let shared = self.resume_shared_s(segment, acts, params, n, s);
+        let logits = self.forward_from_with_shared_s(segment, acts, shared.as_ref(), params, mask_suffix, n, s);
+        if let Some(sh) = shared {
+            sh.release(s);
         }
-        self.head_eval(params, &full, &cur, n)
+        logits
+    }
+
+    /// Resume off a shared first-block prologue — the resume-slab fast
+    /// path: the prologue (and the im2col of the cached boundary
+    /// activation inside it) is computed once per slab.
+    pub fn forward_from_with_shared_s(
+        &self,
+        segment: usize,
+        acts: &[f32],
+        shared: Option<&BlockShared>,
+        params: &[f32],
+        mask_suffix: &[f32],
+        n: usize,
+        s: &mut Scratch,
+    ) -> Vec<f32> {
+        let off = self.suffix_offset(segment);
+        let mut full = s.take();
+        full.resize(self.mask_size, 0.0);
+        full[off..].copy_from_slice(mask_suffix);
+        let bi = self.boundary_blocks[segment];
+        let logits = match shared {
+            Some(sh) => {
+                let mut cur = self.block_post_s(&self.blocks[bi], params, &full, acts, sh, n, s);
+                for bp in &self.blocks[bi + 1..] {
+                    let next = self.block_eval_s(bp, params, &full, &cur, n, s);
+                    s.put(std::mem::replace(&mut cur, next));
+                }
+                let logits = self.head_eval_s(params, &full, &cur, n, s);
+                s.put(cur);
+                logits
+            }
+            None => {
+                debug_assert_eq!(bi, self.blocks.len());
+                self.head_eval_s(params, &full, acts, n, s)
+            }
+        };
+        s.put(full);
+        logits
     }
 
     // -- Train-mode forward/backward (train_step / snl_step / kd_step) ------
@@ -819,6 +975,26 @@ impl ConvPlan {
     }
 }
 
+/// Mask-independent prologue of one block ([`ConvPlan::block_pre_s`]),
+/// computed once per trial slab and shared across its hypotheses.
+pub struct BlockShared {
+    /// Pre-act1 tensor: bn1 output (ResNet) / pre-act bn output (WRN).
+    z1: Vec<f32>,
+    /// ResNet projection branch (proj conv + bn). `None` means the
+    /// identity skip: the block input itself is added.
+    skip: Option<Vec<f32>>,
+}
+
+impl BlockShared {
+    /// Return the prologue's buffers to the arena.
+    pub fn release(self, s: &mut Scratch) {
+        s.put(self.z1);
+        if let Some(v) = self.skip {
+            s.put(v);
+        }
+    }
+}
+
 /// Per-block intermediates of one train-mode forward.
 pub struct BlockTape {
     /// Block input (conv1 / projection dweight).
@@ -996,6 +1172,45 @@ mod tests {
                 let suffix = &mask[plan.suffix_offset(seg)..];
                 let resumed = plan.forward_from(seg, &acts, &params, suffix, n);
                 assert_eq!(full, resumed, "{fam:?} segment {seg} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn slab_shared_paths_are_bitwise_identical_to_single_trial() {
+        use crate::runtime::lowering::Scratch;
+        for fam in [Family::Resnet, Family::Wrn] {
+            let plan = ConvPlan::build(&spec(fam, 10, 16, false));
+            let params = plan.init_params(13);
+            let mut rng = Rng::new(41);
+            let n = 2;
+            let x = rand_vec(&mut rng, n * 3 * 16 * 16, -2.0, 2.0);
+            let masks: Vec<Vec<f32>> =
+                (0..3).map(|_| rand_vec(&mut rng, plan.mask_size, 0.0, 1.0)).collect();
+            // Full-forward slab: one stem_pre feeds every hypothesis.
+            let mut s = Scratch::new();
+            let pre = plan.stem_pre_s(&params, &x, n, &mut s);
+            for m in &masks {
+                let shared = plan.forward_eval_with_stem_s(&pre, &params, m, n, &mut s);
+                assert_eq!(shared, plan.forward_eval(&params, m, &x, n), "{fam:?} full slab");
+            }
+            s.put(pre);
+            // Resume slab: one first-block prologue feeds every hypothesis,
+            // at every boundary (incl. WRN's head-only last boundary).
+            for seg in 0..plan.segment_count() {
+                let acts = plan.forward_prefix(seg, &params, &masks[0], &x, n);
+                let off = plan.suffix_offset(seg);
+                let resume = plan.resume_shared_s(seg, &acts, &params, n, &mut s);
+                for m in &masks {
+                    let got = plan.forward_from_with_shared_s(
+                        seg, &acts, resume.as_ref(), &params, &m[off..], n, &mut s,
+                    );
+                    let want = plan.forward_from(seg, &acts, &params, &m[off..], n);
+                    assert_eq!(got, want, "{fam:?} segment {seg} resume slab");
+                }
+                if let Some(sh) = resume {
+                    sh.release(&mut s);
+                }
             }
         }
     }

@@ -28,14 +28,22 @@
 //!   path) and training calls produce identical losses.
 //! - The conv/batchnorm family ([`conv2d_same_into`] and friends,
 //!   DESIGN.md §12) keeps the naive loop order too: each conv output
-//!   accumulates over `(ci, ky, kx)` ascending with out-of-bounds
-//!   padding taps *skipped* (never added as literal 0.0), and every
-//!   batchnorm / GAP / per-channel-mask reduction runs strictly
-//!   sequentially in `(n, y, x)` ascending order.
+//!   accumulates over `(ci, ky, kx)` ascending. The conv entry points
+//!   route through the GEMM lowering in [`crate::runtime::lowering`]
+//!   (DESIGN.md §13), which replays that exact order per element; the
+//!   direct 7-deep loops are retained here as `conv2d_same_*direct*`
+//!   oracles, cross-checked bitwise in debug builds and under the
+//!   non-semantic `bcd.verify_lowering` knob. The direct loops *skip*
+//!   out-of-bounds padding taps while the lowering materializes them as
+//!   exact 0.0 — both conventions produce identical bits (§13's ±0.0
+//!   argument). Every batchnorm / GAP / per-channel-mask reduction runs
+//!   strictly sequentially in `(n, y, x)` ascending order.
 
 // Index-heavy numeric kernels: explicit loops over computed flat offsets
 // read better than iterator chains here.
 #![allow(clippy::needless_range_loop)]
+
+use super::lowering::{self, Scratch};
 
 /// Inner-loop unroll width of [`gemm_bias_into`] / [`matgrad`] (the
 /// `axpy` over independent output elements).
@@ -113,6 +121,35 @@ pub fn gemm_bias(x: &[f32], w: &[f32], bias: &[f32], bsz: usize, d_in: usize, d_
     let mut z = Vec::new();
     gemm_bias_into(x, w, bias, bsz, d_in, d_out, &mut z);
     z
+}
+
+/// `z += x @ w`, accumulating into the caller's pre-initialized `z` —
+/// each output element's left fold simply *continues* from the value
+/// already there. Same tiling, unroll and `x[i] != 0` skip as
+/// [`gemm_bias_into`], so per output element the adds run over `i`
+/// ascending, one per nonzero `x[i]`. The conv lowering (DESIGN.md §13)
+/// builds on this: seeding `z` with zeros reproduces `gemm_bias_into`
+/// with a zero bias bit for bit, and chaining calls over images replays
+/// a flat batch-major reduction.
+pub fn gemm_acc_into(x: &[f32], w: &[f32], bsz: usize, d_in: usize, d_out: usize, z: &mut [f32]) {
+    debug_assert_eq!(x.len(), bsz * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(z.len(), bsz * d_out);
+    for bi in 0..bsz {
+        let xr = &x[bi * d_in..(bi + 1) * d_in];
+        let zr = &mut z[bi * d_out..(bi + 1) * d_out];
+        let mut j0 = 0;
+        while j0 < d_out {
+            let j1 = (j0 + GEMM_TILE_J).min(d_out);
+            let zt = &mut zr[j0..j1];
+            for (i, &xv) in xr.iter().enumerate() {
+                if xv != 0.0 {
+                    axpy(xv, &w[i * d_out + j0..i * d_out + j1], zt);
+                }
+            }
+            j0 = j1;
+        }
+    }
 }
 
 /// The non-ReLU branch `g` taken where the mask is 0: identity in the
@@ -350,14 +387,68 @@ pub fn same_pad_before(in_dim: usize, k: usize, stride: usize) -> usize {
 /// 2-D convolution: `x [n, cin, h, w]` (NCHW) with weights
 /// `w [cout, cin, k, k]` (OIHW), 'SAME' padding, square stride, no bias,
 /// written into a reusable buffer (the staged trial path calls this per
-/// hypothesis).
-///
-/// Accumulation order per output element: `(ci, ky, kx)` ascending, one
-/// add per *in-bounds* tap. Padding taps are skipped, not added as 0.0 —
-/// the in-bounds sum is the contract, and skipping keeps ±0.0 edge cases
-/// out of the bit-identity story (module docs).
+/// hypothesis). Runs the GEMM lowering (DESIGN.md §13), which is
+/// bit-identical to [`conv2d_same_direct_into`]; this wrapper borrows
+/// the thread's scratch arena — scratched eval paths call
+/// [`conv2d_same_into_s`] with their own arena instead.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_same_into(
+    x: &[f32],
+    w: &[f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    out: &mut Vec<f32>,
+) {
+    lowering::with_scratch(|s| conv2d_same_into_s(x, w, n, cin, h, wd, cout, k, stride, out, s));
+}
+
+/// [`conv2d_same_into`] with an explicit scratch arena. Dispatches to the
+/// lowered kernel (or the direct loop when the bench's direct-mode
+/// switch is set) and, in debug builds or under `bcd.verify_lowering`,
+/// re-runs the direct loop and hard-asserts bitwise equality.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_into_s(
+    x: &[f32],
+    w: &[f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    out: &mut Vec<f32>,
+    s: &mut Scratch,
+) {
+    if lowering::conv_direct_enabled() {
+        return conv2d_same_direct_into(x, w, n, cin, h, wd, cout, k, stride, out);
+    }
+    lowering::conv2d_lowered_into(x, w, n, cin, h, wd, cout, k, stride, out, s);
+    if lowering::verify_lowering_enabled() {
+        let mut want = Vec::new();
+        conv2d_same_direct_into(x, w, n, cin, h, wd, cout, k, stride, &mut want);
+        assert!(
+            out[..] == want[..],
+            "conv2d_same lowering diverged from the direct kernel \
+             (n={n} cin={cin} h={h} wd={wd} cout={cout} k={k} stride={stride})"
+        );
+    }
+}
+
+/// The retained direct 7-deep conv loop — the pre-lowering kernel, kept
+/// verbatim as the `bcd.verify_lowering` oracle and the perf bench
+/// baseline.
+///
+/// Accumulation order per output element: `(ci, ky, kx)` ascending, one
+/// add per *in-bounds* tap; padding taps are skipped. The lowering adds
+/// them as exact 0.0 instead — identical bits either way (DESIGN.md §13).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_direct_into(
     x: &[f32],
     w: &[f32],
     n: usize,
@@ -405,12 +496,58 @@ pub fn conv2d_same_into(
     }
 }
 
-/// `dL/dx` of [`conv2d_same_into`]. Each input element's gradient is a
-/// serial reduction over `(co, ky, kx)` ascending; taps whose output
-/// position falls off the grid or between strides are skipped, mirroring
-/// the forward tap-skip.
+/// `dL/dx` of [`conv2d_same_into`], via the GEMM lowering (bit-identical
+/// to [`conv2d_same_dinput_direct`]; cross-checked like the forward).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_same_dinput(
+    dy: &[f32],
+    w: &[f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+) -> Vec<f32> {
+    lowering::with_scratch(|s| conv2d_same_dinput_s(dy, w, n, cin, h, wd, cout, k, stride, s))
+}
+
+/// [`conv2d_same_dinput`] with an explicit scratch arena.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_dinput_s(
+    dy: &[f32],
+    w: &[f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    s: &mut Scratch,
+) -> Vec<f32> {
+    if lowering::conv_direct_enabled() {
+        return conv2d_same_dinput_direct(dy, w, n, cin, h, wd, cout, k, stride);
+    }
+    let dx = lowering::conv2d_lowered_dinput(dy, w, n, cin, h, wd, cout, k, stride, s);
+    if lowering::verify_lowering_enabled() {
+        let want = conv2d_same_dinput_direct(dy, w, n, cin, h, wd, cout, k, stride);
+        assert!(
+            dx == want,
+            "conv2d_same dinput lowering diverged from the direct kernel \
+             (n={n} cin={cin} h={h} wd={wd} cout={cout} k={k} stride={stride})"
+        );
+    }
+    dx
+}
+
+/// The retained direct `dinput` loop (oracle / bench baseline). Each
+/// input element's gradient is a serial reduction over `(co, ky, kx)`
+/// ascending; taps whose output position falls off the grid or between
+/// strides are skipped, mirroring the forward tap-skip.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_dinput_direct(
     dy: &[f32],
     w: &[f32],
     n: usize,
@@ -463,11 +600,63 @@ pub fn conv2d_same_dinput(
     dx
 }
 
-/// Accumulate `dL/dw` of [`conv2d_same_into`] into `dw` (one add per
-/// weight element: the local reduction runs over `(n, oy, ox)` ascending,
-/// skipping padding taps, then lands in the caller's gradient buffer).
+/// Accumulate `dL/dw` of [`conv2d_same_into`] into `dw`, via the GEMM
+/// lowering (bit-identical to [`conv2d_same_dweight_direct`];
+/// cross-checked like the forward).
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_same_dweight(
+    x: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+) {
+    lowering::with_scratch(|s| conv2d_same_dweight_s(x, dy, dw, n, cin, h, wd, cout, k, stride, s));
+}
+
+/// [`conv2d_same_dweight`] with an explicit scratch arena.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_dweight_s(
+    x: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    s: &mut Scratch,
+) {
+    if lowering::conv_direct_enabled() {
+        return conv2d_same_dweight_direct(x, dy, dw, n, cin, h, wd, cout, k, stride);
+    }
+    // Both paths *accumulate* into dw, so the oracle starts from the
+    // same pre-call contents.
+    let pre = lowering::verify_lowering_enabled().then(|| dw.to_vec());
+    lowering::conv2d_lowered_dweight(x, dy, dw, n, cin, h, wd, cout, k, stride, s);
+    if let Some(mut want) = pre {
+        conv2d_same_dweight_direct(x, dy, &mut want, n, cin, h, wd, cout, k, stride);
+        assert!(
+            dw[..] == want[..],
+            "conv2d_same dweight lowering diverged from the direct kernel \
+             (n={n} cin={cin} h={h} wd={wd} cout={cout} k={k} stride={stride})"
+        );
+    }
+}
+
+/// The retained direct `dweight` loop (oracle / bench baseline): one add
+/// per weight element — the local reduction runs over `(n, oy, ox)`
+/// ascending, skipping padding taps, then lands in the caller's gradient
+/// buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_same_dweight_direct(
     x: &[f32],
     dy: &[f32],
     dw: &mut [f32],

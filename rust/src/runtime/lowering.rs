@@ -1,0 +1,594 @@
+//! GEMM lowering of the convolution kernels (DESIGN.md §13).
+//!
+//! The direct conv loops in [`super::kernels`] are 7-deep nests; every
+//! BCD trial scan on a conv family spends nearly all of its time there.
+//! This module lowers all three conv kernels onto the blocked GEMM that
+//! already makes the MLP scan fast: an [`im2col_t`] patch matrix per
+//! image, multiplied by the weight pack via [`super::kernels::gemm_acc_into`]
+//! (same tile/unroll structure as `gemm_bias_into`).
+//!
+//! # Bit-identity with the direct loops
+//!
+//! The lowering preserves the direct kernels' accumulation order *bit for
+//! bit*, so the DESIGN.md §8 replay-merge contract is untouched:
+//!
+//! * **Order.** The patch matrix rows are laid out in `(ci, ky, kx)`
+//!   ascending order — the GEMM's sequential accumulation over `d_in`
+//!   then replays the direct forward's exact `ci→ky→kx` float order per
+//!   output element. The backward patch matrices use `(co, ky, kx)` rows
+//!   (`dinput`) and a per-image left fold chained through the accumulator
+//!   (`dweight`), replaying those kernels' orders the same way.
+//! * **±0.0 terms.** The direct kernels *skip* padding taps while the
+//!   patch matrix materializes them as exact `0.0`; conversely the GEMM
+//!   skips exact-zero multiplier entries the direct loops add. Both
+//!   differences only add or drop `±0.0` terms, and an f32 accumulator
+//!   that starts at `+0.0` can never become `-0.0` under round-to-nearest
+//!   (zero-sum cancellation yields `+0.0`, and `+0.0 + ±0.0 = +0.0`), so
+//!   `acc + ±0.0 == acc` bitwise at every step. Dropping or inserting
+//!   such terms therefore never changes any output bit.
+//!
+//! The direct loops are retained in [`super::kernels`] as oracles behind
+//! the non-semantic `bcd.verify_lowering` cross-check knob (same idiom as
+//! `bcd.verify_staged`), plus a direct-mode switch the perf bench uses to
+//! time the two paths against each other.
+//!
+//! # Scratch arena
+//!
+//! [`Scratch`] is a free-list of `Vec<f32>` buffers so patch matrices,
+//! GEMM outputs and BN temporaries reuse capacity across layers and
+//! trials instead of allocating per call. One arena lives per thread
+//! ([`with_scratch`]); the eval paths of `convnet.rs` / `reference.rs`
+//! thread `&mut Scratch` explicitly so a whole forward shares one pool.
+//!
+//! Float-independent counters (`conv_lowering:{im2col_calls, im2col_bytes,
+//! scratch_hits, slab_patch_reuse}`) ride [`drain_tallies`] into the
+//! backend's `StatsRecorder` and from there into `run.json`.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+
+use super::kernels::{conv_out_dim, gemm_acc_into, same_pad_before};
+
+// ---------------------------------------------------------------------------
+// Knobs (non-semantic: both paths are bit-identical by construction).
+// ---------------------------------------------------------------------------
+
+/// `bcd.verify_lowering`: when set, every lowered conv kernel re-runs the
+/// retained direct loop and hard-asserts bitwise equality.
+static VERIFY_LOWERING: AtomicBool = AtomicBool::new(false);
+
+/// Route the conv wrappers to the retained direct loops instead of the
+/// lowering — the perf bench's baseline switch.
+static CONV_DIRECT: AtomicBool = AtomicBool::new(false);
+
+pub fn set_verify_lowering(on: bool) {
+    VERIFY_LOWERING.store(on, Relaxed);
+}
+
+/// Cross-check in release under `bcd.verify_lowering`, and always in
+/// debug builds (the `verify_staged` idiom).
+pub fn verify_lowering_enabled() -> bool {
+    VERIFY_LOWERING.load(Relaxed) || cfg!(debug_assertions)
+}
+
+pub fn set_conv_direct(on: bool) {
+    CONV_DIRECT.store(on, Relaxed);
+}
+
+pub fn conv_direct_enabled() -> bool {
+    CONV_DIRECT.load(Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Float-independent tallies. Per-thread (the conv work of one backend
+// call never leaves the calling thread): each worker drains its own
+// tallies at the end of the call and flushes the deltas into the shared
+// StatsRecorder, matching the `trial_batch:*` counter idiom — and exact
+// counts stay deterministic under parallel tests and benches.
+// ---------------------------------------------------------------------------
+
+/// Snapshot of the lowering counters since the last drain.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoweringTallies {
+    /// Patch-matrix builds (forward and backward).
+    pub im2col_calls: u64,
+    /// Bytes written into patch matrices.
+    pub im2col_bytes: u64,
+    /// [`Scratch::take`] calls served from pooled capacity.
+    pub scratch_hits: u64,
+    /// Hypotheses that reused a slab-shared prefix (stem conv / resumed
+    /// block) instead of recomputing it.
+    pub slab_patch_reuse: u64,
+}
+
+thread_local! {
+    static TALLIES: Cell<LoweringTallies> = const { Cell::new(LoweringTallies {
+        im2col_calls: 0,
+        im2col_bytes: 0,
+        scratch_hits: 0,
+        slab_patch_reuse: 0,
+    }) };
+}
+
+fn bump_tallies(f: impl FnOnce(&mut LoweringTallies)) {
+    TALLIES.with(|c| {
+        let mut t = c.get();
+        f(&mut t);
+        c.set(t);
+    });
+}
+
+fn note_im2col(floats: usize) {
+    bump_tallies(|t| {
+        t.im2col_calls += 1;
+        t.im2col_bytes += 4 * floats as u64;
+    });
+}
+
+/// Record `n` hypotheses served by one slab-shared prefix computation.
+pub fn note_slab_reuse(n: u64) {
+    bump_tallies(|t| t.slab_patch_reuse += n);
+}
+
+/// Read-and-reset this thread's lowering counters.
+pub fn drain_tallies() -> LoweringTallies {
+    TALLIES.with(|c| c.replace(LoweringTallies::default()))
+}
+
+// ---------------------------------------------------------------------------
+// Scratch arena.
+// ---------------------------------------------------------------------------
+
+/// A free-list of `f32` buffers. [`Scratch::take`] pops a cleared buffer
+/// (or creates one), [`Scratch::put`] returns it; capacity survives the
+/// round trip, so steady-state eval loops stop allocating entirely.
+#[derive(Default)]
+pub struct Scratch {
+    pool: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Pop a cleared buffer from the pool (a reuse "hit" when it carries
+    /// capacity from a previous round) or create an empty one.
+    pub fn take(&mut self) -> Vec<f32> {
+        match self.pool.pop() {
+            Some(v) => {
+                debug_assert!(v.is_empty());
+                if v.capacity() > 0 {
+                    bump_tallies(|t| t.scratch_hits += 1);
+                }
+                v
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return a buffer to the pool (contents cleared, capacity kept).
+    pub fn put(&mut self, mut v: Vec<f32>) {
+        v.clear();
+        self.pool.push(v);
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Run `f` with this thread's scratch arena. Re-entrant calls (a public
+/// kernel wrapper invoked from inside an already-scratched eval path)
+/// fall back to a fresh arena instead of panicking on the borrow — they
+/// only lose reuse, never correctness.
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut s) => f(&mut s),
+        Err(_) => f(&mut Scratch::new()),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Patch matrices.
+// ---------------------------------------------------------------------------
+
+/// Transposed im2col of one NCHW image: `pt [cin*k*k, oh*ow]` with row
+/// `(ci*k + ky)*k + kx` — `(ci, ky, kx)` ascending, the direct forward's
+/// reduction order — and column `(oy, ox)`. Out-of-bounds padding taps
+/// are exact `0.0` entries (see the module docs for why that is
+/// bit-neutral).
+pub fn im2col_t(x_img: &[f32], cin: usize, h: usize, wd: usize, k: usize, stride: usize, pt: &mut Vec<f32>) {
+    let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+    let (py, px) = (same_pad_before(h, k, stride), same_pad_before(wd, k, stride));
+    let ohw = oh * ow;
+    debug_assert_eq!(x_img.len(), cin * h * wd);
+    pt.clear();
+    pt.resize(cin * k * k * ohw, 0.0);
+    for ci in 0..cin {
+        let xc = &x_img[ci * h * wd..(ci + 1) * h * wd];
+        for ky in 0..k {
+            for kx in 0..k {
+                let row = ((ci * k + ky) * k + kx) * ohw;
+                for oy in 0..oh {
+                    let iy = oy * stride + ky;
+                    if iy < py || iy - py >= h {
+                        continue; // padding row: stays 0.0
+                    }
+                    let xr = &xc[(iy - py) * wd..(iy - py + 1) * wd];
+                    let pr = &mut pt[row + oy * ow..row + (oy + 1) * ow];
+                    for (ox, pv) in pr.iter_mut().enumerate() {
+                        let ix = ox * stride + kx;
+                        if ix < px || ix - px >= wd {
+                            continue; // padding column: stays 0.0
+                        }
+                        *pv = xr[ix - px];
+                    }
+                }
+            }
+        }
+    }
+    note_im2col(pt.len());
+}
+
+/// Adjoint of [`im2col_t`]: scatter-add `pt [cin*k*k, oh*ow]` back onto
+/// the image, `x_acc[ci, iy, ix] += pt[(ci,ky,kx), (oy,ox)]` over every
+/// in-bounds tap. Property tests pin `⟨im2col(x), p⟩ = ⟨x, col2im(p)⟩`
+/// and the tap-count roundtrip; the production `dinput` route instead
+/// uses [`im2col_back_t`], whose flat per-element fold replays the direct
+/// kernel's `(co, ky, kx)` order exactly (a col2im scatter would sum the
+/// same taps in a different tree).
+pub fn col2im(pt: &[f32], cin: usize, h: usize, wd: usize, k: usize, stride: usize, x_acc: &mut [f32]) {
+    let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+    let (py, px) = (same_pad_before(h, k, stride), same_pad_before(wd, k, stride));
+    let ohw = oh * ow;
+    debug_assert_eq!(pt.len(), cin * k * k * ohw);
+    debug_assert_eq!(x_acc.len(), cin * h * wd);
+    for ci in 0..cin {
+        for ky in 0..k {
+            for kx in 0..k {
+                let row = ((ci * k + ky) * k + kx) * ohw;
+                for oy in 0..oh {
+                    let iy = oy * stride + ky;
+                    if iy < py || iy - py >= h {
+                        continue;
+                    }
+                    for ox in 0..ow {
+                        let ix = ox * stride + kx;
+                        if ix < px || ix - px >= wd {
+                            continue;
+                        }
+                        x_acc[(ci * h + iy - py) * wd + ix - px] += pt[row + oy * ow + ox];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Transposed patch matrix of one *output-gradient* image for the
+/// `dinput` lowering: `pt [cout*k*k, h*wd]` with row `(co*k + ky)*k + kx`
+/// — the direct `dinput` kernel's `(co, ky, kx)` reduction order — and
+/// column `(iy, ix)`. Entry = `dy[co, oy, ox]` where
+/// `oy = (iy + py - ky)/stride` (and likewise for `ox`) lands on the
+/// output grid; taps that fall off the grid or between strides stay
+/// exact `0.0`, mirroring the direct kernel's skips.
+pub fn im2col_back_t(
+    dy_img: &[f32],
+    cout: usize,
+    h: usize,
+    wd: usize,
+    k: usize,
+    stride: usize,
+    pt: &mut Vec<f32>,
+) {
+    let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+    let (py, px) = (same_pad_before(h, k, stride), same_pad_before(wd, k, stride));
+    let hw = h * wd;
+    debug_assert_eq!(dy_img.len(), cout * oh * ow);
+    pt.clear();
+    pt.resize(cout * k * k * hw, 0.0);
+    for co in 0..cout {
+        let dyc = &dy_img[co * oh * ow..(co + 1) * oh * ow];
+        for ky in 0..k {
+            for kx in 0..k {
+                let row = ((co * k + ky) * k + kx) * hw;
+                for iy in 0..h {
+                    if iy + py < ky || (iy + py - ky) % stride != 0 {
+                        continue;
+                    }
+                    let oy = (iy + py - ky) / stride;
+                    if oy >= oh {
+                        continue;
+                    }
+                    for ix in 0..wd {
+                        if ix + px < kx || (ix + px - kx) % stride != 0 {
+                            continue;
+                        }
+                        let ox = (ix + px - kx) / stride;
+                        if ox >= ow {
+                            continue;
+                        }
+                        pt[row + iy * wd + ix] = dyc[oy * ow + ox];
+                    }
+                }
+            }
+        }
+    }
+    note_im2col(pt.len());
+}
+
+fn transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut Vec<f32>) {
+    debug_assert_eq!(src.len(), rows * cols);
+    dst.clear();
+    dst.resize(rows * cols, 0.0);
+    for r in 0..rows {
+        for (c, &v) in src[r * cols..(r + 1) * cols].iter().enumerate() {
+            dst[c * rows + r] = v;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowered kernels. All three are bit-identical to the direct loops in
+// `kernels.rs` (module docs); the public entry points there cross-check
+// that claim under `bcd.verify_lowering` / debug builds.
+// ---------------------------------------------------------------------------
+
+/// GEMM-lowered [`super::kernels::conv2d_same_into`]: per image, one
+/// [`im2col_t`] patch matrix multiplied by the OIHW weight pack
+/// (`[cout, cin*k*k]` as GEMM rows). The GEMM's `d_in` sweep replays the
+/// direct `ci→ky→kx` accumulation order, and the output lands directly
+/// in NCHW order — no epilogue transpose.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_lowered_into(
+    x: &[f32],
+    w: &[f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    out: &mut Vec<f32>,
+    s: &mut Scratch,
+) {
+    let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+    let ohw = oh * ow;
+    let ckk = cin * k * k;
+    debug_assert_eq!(x.len(), n * cin * h * wd);
+    debug_assert_eq!(w.len(), cout * ckk);
+    out.clear();
+    out.resize(n * cout * ohw, 0.0);
+    let mut pt = s.take();
+    for ni in 0..n {
+        im2col_t(&x[ni * cin * h * wd..(ni + 1) * cin * h * wd], cin, h, wd, k, stride, &mut pt);
+        gemm_acc_into(w, &pt, cout, ckk, ohw, &mut out[ni * cout * ohw..(ni + 1) * cout * ohw]);
+    }
+    s.put(pt);
+}
+
+/// GEMM-lowered [`super::kernels::conv2d_same_dinput`]: the transposed
+/// convolution as a GEMM — a flipped weight matrix
+/// `wflip [cin, cout*k*k]` (a pure permutation of the OIHW pack) times
+/// the [`im2col_back_t`] patch matrix of each gradient image. Each input
+/// element's fold runs over `(co, ky, kx)` ascending, exactly the direct
+/// kernel's order.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_lowered_dinput(
+    dy: &[f32],
+    w: &[f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    s: &mut Scratch,
+) -> Vec<f32> {
+    let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+    let hw = h * wd;
+    let ckk_b = cout * k * k;
+    debug_assert_eq!(dy.len(), n * cout * oh * ow);
+    debug_assert_eq!(w.len(), cout * cin * k * k);
+    let mut wflip = s.take();
+    wflip.resize(cin * ckk_b, 0.0);
+    for ci in 0..cin {
+        for co in 0..cout {
+            for ky in 0..k {
+                for kx in 0..k {
+                    wflip[ci * ckk_b + (co * k + ky) * k + kx] = w[((co * cin + ci) * k + ky) * k + kx];
+                }
+            }
+        }
+    }
+    let mut dx = vec![0.0f32; n * cin * hw];
+    let mut pt = s.take();
+    for ni in 0..n {
+        im2col_back_t(&dy[ni * cout * oh * ow..(ni + 1) * cout * oh * ow], cout, h, wd, k, stride, &mut pt);
+        gemm_acc_into(&wflip, &pt, cin, ckk_b, hw, &mut dx[ni * cin * hw..(ni + 1) * cin * hw]);
+    }
+    s.put(pt);
+    s.put(wflip);
+    dx
+}
+
+/// GEMM-lowered [`super::kernels::conv2d_same_dweight`]: the
+/// patch-matrix-transpose route — per image, `dy_img [cout, oh*ow]` times
+/// the *transposed* forward patch matrix `[oh*ow, cin*k*k]`, accumulating
+/// image after image into one running buffer. Because
+/// [`super::kernels::gemm_acc_into`] continues each output element's left
+/// fold from its current value, chaining the images replays the direct
+/// kernel's flat `(n, oy, ox)` reduction exactly; the result lands in
+/// `dw` with one add per element, as before.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_lowered_dweight(
+    x: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    n: usize,
+    cin: usize,
+    h: usize,
+    wd: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    s: &mut Scratch,
+) {
+    let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+    let ohw = oh * ow;
+    let ckk = cin * k * k;
+    debug_assert_eq!(x.len(), n * cin * h * wd);
+    debug_assert_eq!(dy.len(), n * cout * ohw);
+    debug_assert_eq!(dw.len(), cout * ckk);
+    let mut acc = s.take();
+    acc.resize(cout * ckk, 0.0);
+    let mut pt = s.take();
+    let mut p = s.take();
+    for ni in 0..n {
+        im2col_t(&x[ni * cin * h * wd..(ni + 1) * cin * h * wd], cin, h, wd, k, stride, &mut pt);
+        transpose_into(&pt, ckk, ohw, &mut p);
+        gemm_acc_into(&dy[ni * cout * ohw..(ni + 1) * cout * ohw], &p, cout, ohw, ckk, &mut acc);
+    }
+    for (d, &a) in dw.iter_mut().zip(acc.iter()) {
+        *d += a;
+    }
+    s.put(p);
+    s.put(pt);
+    s.put(acc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn scratch_pool_reuses_capacity_and_counts_hits() {
+        drain_tallies();
+        let mut s = Scratch::new();
+        let mut a = s.take(); // fresh: no capacity, no hit
+        a.resize(128, 1.0);
+        s.put(a);
+        let b = s.take(); // pooled: cleared but capacitied
+        assert!(b.is_empty());
+        assert!(b.capacity() >= 128);
+        let t = drain_tallies();
+        assert_eq!(t.scratch_hits, 1);
+    }
+
+    #[test]
+    fn im2col_rows_follow_ci_ky_kx_order_with_zero_padding() {
+        // 1 channel, 2x2 image, k=3 s=1 => oh=ow=2, pad 1: row (ky,kx)
+        // holds the input shifted by the tap offset, zeros off the edge.
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let mut pt = Vec::new();
+        im2col_t(&x, 1, 2, 2, 3, 1, &mut pt);
+        assert_eq!(pt.len(), 9 * 4);
+        // Center tap (ky=1, kx=1) is the identity row.
+        assert_eq!(&pt[4 * 4..5 * 4], &x);
+        // Top-left tap (ky=0, kx=0) sees the input shifted down-right:
+        // only output (1,1) has an in-bounds tap, namely x[0,0].
+        assert_eq!(&pt[0..4], &[0.0, 0.0, 0.0, 1.0]);
+        // Bottom-right tap (ky=2, kx=2): only output (0,0) in-bounds.
+        assert_eq!(&pt[8 * 4..9 * 4], &[4.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn col2im_roundtrip_counts_taps() {
+        // col2im(im2col(x)) multiplies each input element by the number
+        // of output taps that read it; with integer inputs the repeated
+        // adds are exact, so the quotient recovers the tap count.
+        let (cin, h, wd, k, stride) = (2usize, 3usize, 4usize, 3usize, 1usize);
+        let x: Vec<f32> = (0..cin * h * wd).map(|i| (i % 5 + 1) as f32).collect();
+        let mut pt = Vec::new();
+        im2col_t(&x, cin, h, wd, k, stride, &mut pt);
+        let mut back = vec![0.0f32; x.len()];
+        col2im(&pt, cin, h, wd, k, stride, &mut back);
+        let ones = vec![1.0f32; x.len()];
+        let mut ptc = Vec::new();
+        im2col_t(&ones, cin, h, wd, k, stride, &mut ptc);
+        let mut counts = vec![0.0f32; x.len()];
+        col2im(&ptc, cin, h, wd, k, stride, &mut counts);
+        for i in 0..x.len() {
+            assert!(counts[i] >= 1.0, "every element is read at least once");
+            assert_eq!(back[i], counts[i] * x[i], "i={i}");
+        }
+    }
+
+    #[test]
+    fn lowering_tallies_count_im2col_calls_and_bytes() {
+        drain_tallies();
+        let x = vec![1.0f32; 2 * 4 * 4];
+        let mut pt = Vec::new();
+        im2col_t(&x, 2, 4, 4, 3, 1, &mut pt);
+        im2col_t(&x, 2, 4, 4, 3, 2, &mut pt);
+        let t = drain_tallies();
+        assert_eq!(t.im2col_calls, 2);
+        // s=1: [2*9, 16]; s=2: [2*9, 4] — 4 bytes per float.
+        assert_eq!(t.im2col_bytes, 4 * (18 * 16 + 18 * 4) as u64);
+        assert_eq!(drain_tallies(), LoweringTallies::default(), "drain resets");
+    }
+
+    #[test]
+    fn lowered_forward_matches_direct_bitwise_on_ragged_shapes() {
+        use crate::runtime::kernels::conv2d_same_direct_into;
+        let mut rng = Rng::new(0x10E1);
+        let mut s = Scratch::new();
+        for &(n, cin, h, wd, cout, k, stride) in &[
+            (1usize, 1usize, 1usize, 1usize, 1usize, 1usize, 1usize),
+            (2, 3, 5, 7, 4, 3, 1),
+            (1, 2, 4, 4, 3, 3, 2),
+            (2, 1, 5, 7, 2, 3, 2),
+            (1, 3, 16, 16, 4, 1, 2),
+            (1, 2, 7, 5, 3, 1, 1),
+            (1, 1, 1, 1, 2, 3, 2),
+        ] {
+            let x: Vec<f32> = (0..n * cin * h * wd)
+                .map(|i| if i % 5 == 0 { 0.0 } else { rng.normal() })
+                .collect();
+            let w: Vec<f32> = (0..cout * cin * k * k)
+                .map(|i| if i % 7 == 0 { 0.0 } else { rng.normal() })
+                .collect();
+            let mut want = Vec::new();
+            conv2d_same_direct_into(&x, &w, n, cin, h, wd, cout, k, stride, &mut want);
+            let mut got = vec![9.0f32; 3];
+            conv2d_lowered_into(&x, &w, n, cin, h, wd, cout, k, stride, &mut got, &mut s);
+            assert_eq!(got, want, "n={n} cin={cin} h={h} wd={wd} cout={cout} k={k} s={stride}");
+        }
+    }
+
+    #[test]
+    fn lowered_backward_kernels_match_direct_bitwise() {
+        use crate::runtime::kernels::{conv2d_same_dinput_direct, conv2d_same_dweight_direct, conv_out_dim};
+        let mut rng = Rng::new(0x10E2);
+        let mut s = Scratch::new();
+        for &(n, cin, h, wd, cout, k, stride) in &[
+            (2usize, 2usize, 5usize, 7usize, 3usize, 3usize, 1usize),
+            (1, 3, 4, 4, 2, 3, 2),
+            (2, 2, 5, 5, 4, 1, 2),
+            (1, 1, 3, 3, 1, 3, 1),
+        ] {
+            let x: Vec<f32> = (0..n * cin * h * wd)
+                .map(|i| if i % 4 == 0 { 0.0 } else { rng.normal() })
+                .collect();
+            let w: Vec<f32> = (0..cout * cin * k * k).map(|_| rng.normal()).collect();
+            let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(wd, stride));
+            let dy: Vec<f32> = (0..n * cout * oh * ow)
+                .map(|i| if i % 6 == 0 { 0.0 } else { rng.normal() })
+                .collect();
+            let want_dx = conv2d_same_dinput_direct(&dy, &w, n, cin, h, wd, cout, k, stride);
+            let got_dx = conv2d_lowered_dinput(&dy, &w, n, cin, h, wd, cout, k, stride, &mut s);
+            assert_eq!(got_dx, want_dx, "dinput k={k} s={stride}");
+            // dweight accumulates: seed both with the same nonzero prior.
+            let prior: Vec<f32> = (0..w.len()).map(|_| rng.normal()).collect();
+            let mut want_dw = prior.clone();
+            conv2d_same_dweight_direct(&x, &dy, &mut want_dw, n, cin, h, wd, cout, k, stride);
+            let mut got_dw = prior;
+            conv2d_lowered_dweight(&x, &dy, &mut got_dw, n, cin, h, wd, cout, k, stride, &mut s);
+            assert_eq!(got_dw, want_dw, "dweight k={k} s={stride}");
+        }
+    }
+}

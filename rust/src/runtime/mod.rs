@@ -20,13 +20,16 @@
 //! threads. [`kernels`] holds the shared dense-math kernels (blocked GEMM,
 //! fused mask-apply, scoring epilogue) that both the single-trial and the
 //! batched multi-hypothesis reference paths run, so the bit-identity
-//! contract of DESIGN.md §8/§11 holds by construction.
+//! contract of DESIGN.md §8/§11 holds by construction. [`lowering`]
+//! rides the conv kernels on that same GEMM via im2col (DESIGN.md §13)
+//! and owns the zero-alloc [`lowering::Scratch`] arena.
 
 pub mod backend;
 pub mod convnet;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod kernels;
+pub mod lowering;
 pub mod manifest;
 pub mod reference;
 pub mod session;

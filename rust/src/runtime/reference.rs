@@ -35,12 +35,16 @@
 //! route) and `z2` (staged route) are computed once per slab — then run
 //! the per-hypothesis steps through the very same kernel functions the
 //! single-trial path uses, making per-hypothesis results bit-identical to
-//! single-hypothesis calls by construction.
+//! single-hypothesis calls by construction. Conv slabs share the
+//! analogous mask-independent prologues — the stem (full route) and the
+//! first resumed block (staged route), each containing an im2col the
+//! whole slab reuses — through the scratch-arena paths of DESIGN.md §13.
 
 use crate::config::ModelConfig;
 use crate::runtime::backend::{Backend, CallStats, DeviceBuf, HostArg, MaskSlab, StatsRecorder};
 use crate::runtime::convnet::{ConvPlan, ConvSpec, Family};
 use crate::runtime::kernels;
+use crate::runtime::lowering::{self, with_scratch};
 use crate::runtime::manifest::{Manifest, ModelInfo, PackEntry};
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
@@ -327,7 +331,30 @@ impl RefBackend {
     fn execute(&self, key: &str, fn_name: &str, args: &[ArgView]) -> Result<Vec<Tensor>> {
         match self.model_impl(key)? {
             ModelImpl::Mlp(model) => self.execute_mlp(key, model, fn_name, args),
-            ModelImpl::Conv(plan) => self.execute_conv(key, plan, fn_name, args),
+            ModelImpl::Conv(plan) => {
+                let r = self.execute_conv(key, plan, fn_name, args);
+                self.flush_lowering_tallies();
+                r
+            }
+        }
+    }
+
+    /// Drain the calling thread's conv-lowering tallies (DESIGN.md §13)
+    /// into the recorder under `conv_lowering:*` keys. Conv work never
+    /// leaves the thread that entered the backend, so draining at the end
+    /// of each conv entry point attributes every count exactly once; zero
+    /// deltas are skipped so MLP-only runs record no conv keys.
+    fn flush_lowering_tallies(&self) {
+        let t = lowering::drain_tallies();
+        for (key, n) in [
+            ("conv_lowering:im2col_calls", t.im2col_calls),
+            ("conv_lowering:im2col_bytes", t.im2col_bytes),
+            ("conv_lowering:scratch_hits", t.scratch_hits),
+            ("conv_lowering:slab_patch_reuse", t.slab_patch_reuse),
+        ] {
+            if n > 0 {
+                self.stats.bump(key, n);
+            }
         }
     }
 
@@ -901,9 +928,11 @@ impl Backend for RefBackend {
                 check_len(model_key, "forward_prefix", "params", p.len(), plan.param_size)?;
                 check_len(model_key, "forward_prefix", "mask", m.len(), plan.mask_size)?;
                 let bsz = conv_batch_of(plan, model_key, "forward_prefix", xv.len())?;
-                self.stats.timed(&format!("{model_key}:forward_prefix"), || {
+                let r = self.stats.timed(&format!("{model_key}:forward_prefix"), || {
                     Ok(DeviceBuf::new(RefBuf::F32(plan.forward_prefix(segment, p, m, xv, bsz))))
-                })
+                });
+                self.flush_lowering_tallies();
+                r
             }
         }
     }
@@ -935,10 +964,12 @@ impl Backend for RefBackend {
                     params,
                     mask_suffix,
                 )?;
-                self.stats.timed(&format!("{model_key}:forward_from"), || {
+                let r = self.stats.timed(&format!("{model_key}:forward_from"), || {
                     let logits = plan.forward_from(segment, a, p, m, bsz);
                     Ok(Tensor::new(vec![bsz, plan.num_classes], logits))
-                })
+                });
+                self.flush_lowering_tallies();
+                r
             }
         }
     }
@@ -977,12 +1008,14 @@ impl Backend for RefBackend {
                 )?;
                 let yv = ref_i32(y, "y")?;
                 check_len(model_key, "eval_from", "y", yv.len(), bsz)?;
-                self.stats.timed(&format!("{model_key}:eval_from"), || {
+                let r = self.stats.timed(&format!("{model_key}:eval_from"), || {
                     let logits = plan.forward_from(segment, a, p, m, bsz);
                     let (loss, correct) =
                         kernels::softmax_ce_batch(&logits, yv, plan.num_classes, None);
                     Ok(vec![Tensor::scalar(loss), Tensor::scalar(correct as f32)])
-                })
+                });
+                self.flush_lowering_tallies();
+                r
             }
         }
     }
@@ -1021,10 +1054,12 @@ impl Backend for RefBackend {
                     .conv_full_multi_args(plan, model_key, "eval_batch_multi", params, masks, x, live)?;
                 let yv = ref_i32(y, "y")?;
                 check_len(model_key, "eval_batch_multi", "y", yv.len(), bsz)?;
-                self.stats.timed(&format!("{model_key}:eval_batch_multi"), || {
+                let r = self.stats.timed(&format!("{model_key}:eval_batch_multi"), || {
                     let logits = conv_full_multi(plan, p, rows, xv, bsz, live);
                     Ok(score_multi(&logits, yv, plan.num_classes))
-                })
+                });
+                self.flush_lowering_tallies();
+                r
             }
         }
     }
@@ -1053,13 +1088,15 @@ impl Backend for RefBackend {
             ModelImpl::Conv(plan) => {
                 let (p, rows, xv, bsz) =
                     self.conv_full_multi_args(plan, model_key, "forward_multi", params, masks, x, live)?;
-                self.stats.timed(&format!("{model_key}:forward_multi"), || {
+                let r = self.stats.timed(&format!("{model_key}:forward_multi"), || {
                     let logits = conv_full_multi(plan, p, rows, xv, bsz, live);
                     Ok(logits
                         .into_iter()
                         .map(|l| l.map(|v| Tensor::new(vec![bsz, plan.num_classes], v)))
                         .collect())
-                })
+                });
+                self.flush_lowering_tallies();
+                r
             }
         }
     }
@@ -1105,13 +1142,15 @@ impl Backend for RefBackend {
                     mask_suffixes,
                     live,
                 )?;
-                self.stats.timed(&format!("{model_key}:forward_from_multi"), || {
+                let r = self.stats.timed(&format!("{model_key}:forward_from_multi"), || {
                     let logits = conv_tail_multi(plan, segment, p, rows, a, bsz, live);
                     Ok(logits
                         .into_iter()
                         .map(|l| l.map(|v| Tensor::new(vec![bsz, plan.num_classes], v)))
                         .collect())
-                })
+                });
+                self.flush_lowering_tallies();
+                r
             }
         }
     }
@@ -1159,10 +1198,12 @@ impl Backend for RefBackend {
                 )?;
                 let yv = ref_i32(y, "y")?;
                 check_len(model_key, "eval_from_multi", "y", yv.len(), bsz)?;
-                self.stats.timed(&format!("{model_key}:eval_from_multi"), || {
+                let r = self.stats.timed(&format!("{model_key}:eval_from_multi"), || {
                     let logits = conv_tail_multi(plan, segment, p, rows, a, bsz, live);
                     Ok(score_multi(&logits, yv, plan.num_classes))
-                })
+                });
+                self.flush_lowering_tallies();
+                r
             }
         }
     }
@@ -1314,11 +1355,14 @@ fn kd_blend(
     temp * temp * kd_loss / bsz as f32
 }
 
-/// Conv slab forward, full route: each live hypothesis runs the exact
-/// single-hypothesis eval forward on its mask row — bit-identity to
-/// single calls is trivial. Unlike the MLP slab path no cross-hypothesis
-/// affine is factored out: conv slabs spend their time inside the
-/// convolutions, which depend on masked activations from layer 1 on.
+/// Conv slab forward, full route. The stem prologue ([`ConvPlan::
+/// stem_pre_s`] — the stem conv, its im2col of the input images, and the
+/// stem batchnorm) is mask-independent, so it is computed once and feeds
+/// every live hypothesis; each hypothesis then runs
+/// [`ConvPlan::forward_eval_with_stem_s`], which is the exact float
+/// program of the single-hypothesis forward (DESIGN.md §13), so
+/// bit-identity to single calls holds by construction. All intermediates
+/// come from one scratch arena shared across the slab.
 fn conv_full_multi(
     plan: &ConvPlan,
     p: &[f32],
@@ -1328,17 +1372,31 @@ fn conv_full_multi(
     live: &[bool],
 ) -> Vec<Option<Vec<f32>>> {
     let width = plan.mask_size;
-    live.iter()
-        .enumerate()
-        .map(|(h, &alive)| {
-            alive.then(|| plan.forward_eval(p, &rows[h * width..(h + 1) * width], x, bsz))
-        })
-        .collect()
+    let live_count = live.iter().filter(|&&a| a).count();
+    with_scratch(|s| {
+        let pre = plan.stem_pre_s(p, x, bsz, s);
+        lowering::note_slab_reuse(live_count.saturating_sub(1) as u64);
+        let out = live
+            .iter()
+            .enumerate()
+            .map(|(h, &alive)| {
+                alive.then(|| {
+                    plan.forward_eval_with_stem_s(&pre, p, &rows[h * width..(h + 1) * width], bsz, s)
+                })
+            })
+            .collect();
+        s.put(pre);
+        out
+    })
 }
 
-/// Conv slab forward, staged route: each live suffix row resumes from the
-/// shared cached boundary activation via the single-hypothesis
-/// [`ConvPlan::forward_from`].
+/// Conv slab forward, staged route: every live suffix row resumes from
+/// the same cached boundary activation, so the first resumed block's
+/// mask-independent prologue ([`ConvPlan::resume_shared_s`] — including
+/// the im2col of the boundary activation inside it) is computed once per
+/// slab; each hypothesis then runs
+/// [`ConvPlan::forward_from_with_shared_s`], the exact float program of
+/// the single-hypothesis [`ConvPlan::forward_from`].
 fn conv_tail_multi(
     plan: &ConvPlan,
     segment: usize,
@@ -1349,14 +1407,34 @@ fn conv_tail_multi(
     live: &[bool],
 ) -> Vec<Option<Vec<f32>>> {
     let width = plan.mask_size - plan.suffix_offset(segment);
-    live.iter()
-        .enumerate()
-        .map(|(h, &alive)| {
-            alive.then(|| {
-                plan.forward_from(segment, acts, p, &rows[h * width..(h + 1) * width], bsz)
+    let live_count = live.iter().filter(|&&a| a).count();
+    with_scratch(|s| {
+        let shared = plan.resume_shared_s(segment, acts, p, bsz, s);
+        if shared.is_some() {
+            lowering::note_slab_reuse(live_count.saturating_sub(1) as u64);
+        }
+        let out = live
+            .iter()
+            .enumerate()
+            .map(|(h, &alive)| {
+                alive.then(|| {
+                    plan.forward_from_with_shared_s(
+                        segment,
+                        acts,
+                        shared.as_ref(),
+                        p,
+                        &rows[h * width..(h + 1) * width],
+                        bsz,
+                        s,
+                    )
+                })
             })
-        })
-        .collect()
+            .collect();
+        if let Some(sh) = shared {
+            sh.release(s);
+        }
+        out
+    })
 }
 
 fn vec1(data: Vec<f32>) -> Tensor {

@@ -1,7 +1,8 @@
 //! Finite-difference gradient checks for the conv reference backend
 //! (DESIGN.md §12): every hand-written backward pass in
-//! `runtime::kernels` is validated against a central difference of its
-//! forward, plus an end-to-end spot check through `ConvPlan::backward`.
+//! `runtime::kernels` — and its GEMM lowering in `runtime::lowering`
+//! (§13) — is validated against a central difference of its forward,
+//! plus an end-to-end spot check through `ConvPlan::backward`.
 //!
 //! Method: probe loss `L = Σ_i probe_i · out_i` with a fixed random probe
 //! vector, accumulated in f64. The analytic gradient is the op's backward
@@ -98,6 +99,51 @@ fn conv2d_input_and_weight_grads() {
         assert_grads_match(&dw, &format!("conv s{stride} dw"), |i| {
             central_diff(&mut w, i, |ws| {
                 conv2d_same_into(&x_fixed, ws, n, cin, h, wd, cout, k, stride, &mut out);
+                probe_loss(&out, &probe)
+            })
+        });
+    }
+}
+
+/// The GEMM-lowered conv backward kernels (DESIGN.md §13) differentiated
+/// directly: `lowering::conv2d_lowered_dinput`/`_dweight` against central
+/// differences of the lowered forward. The check above already covers
+/// these routes implicitly (the public `conv2d_same_*` wrappers lower by
+/// default), but this pins them without the dispatch in the loop — it
+/// would catch a drift even if the lowered and direct routes drifted
+/// together — and adds 1x1 kernels and stride-2 shapes the battery above
+/// does not differentiate. Same linearity argument: zero truncation,
+/// rounding only, far inside 1e-3.
+#[test]
+fn conv2d_lowered_backward_grads() {
+    use cdnl::runtime::lowering::{
+        conv2d_lowered_dinput, conv2d_lowered_dweight, conv2d_lowered_into, Scratch,
+    };
+    for (k, stride) in [(1usize, 1usize), (1, 2), (3, 2)] {
+        let (n, cin, h, wd, cout) = (2, 2, 5, 4, 3);
+        let mut rng = Rng::new(0x10E4 + (k * 10 + stride) as u64);
+        let mut s = Scratch::new();
+        let mut x = randn(&mut rng, n * cin * h * wd);
+        let mut w = randn(&mut rng, cout * cin * k * k);
+        let (oh, ow) = (h.div_ceil(stride), wd.div_ceil(stride));
+        let probe = randn(&mut rng, n * cout * oh * ow);
+
+        let dx = conv2d_lowered_dinput(&probe, &w, n, cin, h, wd, cout, k, stride, &mut s);
+        let mut dw = vec![0.0f32; w.len()];
+        conv2d_lowered_dweight(&x, &probe, &mut dw, n, cin, h, wd, cout, k, stride, &mut s);
+
+        let mut out = Vec::new();
+        let w_fixed = w.clone();
+        assert_grads_match(&dx, &format!("lowered conv k{k} s{stride} dx"), |i| {
+            central_diff(&mut x, i, |xs| {
+                conv2d_lowered_into(xs, &w_fixed, n, cin, h, wd, cout, k, stride, &mut out, &mut s);
+                probe_loss(&out, &probe)
+            })
+        });
+        let x_fixed = x.clone();
+        assert_grads_match(&dw, &format!("lowered conv k{k} s{stride} dw"), |i| {
+            central_diff(&mut w, i, |ws| {
+                conv2d_lowered_into(&x_fixed, ws, n, cin, h, wd, cout, k, stride, &mut out, &mut s);
                 probe_loss(&out, &probe)
             })
         });

@@ -60,6 +60,7 @@ fn scan_with_batch(
             cache_bytes: cache_mb * (1 << 20),
             trial_batch,
             verify_staged: false,
+            verify_lowering: false,
         },
     )
     .unwrap();
@@ -127,7 +128,12 @@ fn conv_scan(model: &str, cache_mb: usize, workers: usize, trial_batch: usize) -
         &sess,
         &ds,
         2,
-        EvalOpts { cache_bytes: cache_mb * (1 << 20), trial_batch, verify_staged: true },
+        EvalOpts {
+            cache_bytes: cache_mb * (1 << 20),
+            trial_batch,
+            verify_staged: true,
+            verify_lowering: true,
+        },
     )
     .unwrap();
     let params = ev.upload_params(&st.params).unwrap();
@@ -344,7 +350,12 @@ fn staged_partial_batch_and_direct_delta_scoring() {
         &sess,
         &ds,
         usize::MAX,
-        EvalOpts { cache_bytes: 16 << 20, trial_batch: 4, verify_staged: true },
+        EvalOpts {
+            cache_bytes: 16 << 20,
+            trial_batch: 4,
+            verify_staged: true,
+            verify_lowering: true,
+        },
     )
     .unwrap();
     let params_b = ev_b.upload_params(&st.params).unwrap();

@@ -564,6 +564,132 @@ fn prop_conv_same_padding_shapes() {
     );
 }
 
+/// im2col/col2im are adjoint linear maps (DESIGN.md §13): for random
+/// shapes (including stride 2 and 1x1 kernels), `⟨im2col(x), p⟩ ==
+/// ⟨x, col2im(p)⟩` up to f64 summation error, and on integer-valued
+/// inputs the roundtrip `col2im(im2col(x))` exactly multiplies each
+/// element by its in-bounds tap count (repeated integer adds are exact
+/// in f32 at these sizes).
+#[test]
+fn prop_im2col_col2im_adjoint_and_roundtrip() {
+    use cdnl::runtime::lowering::{col2im, im2col_t};
+    check(
+        0x1A2C,
+        60,
+        |r| {
+            let cin = r.usize_below(3) + 1;
+            let h = r.usize_below(9) + 1; // 1..=9: degenerate dims included
+            let w = r.usize_below(9) + 1;
+            let stride = r.usize_below(2) + 1;
+            let k = 1 + 2 * r.usize_below(2); // 1 or 3
+            (cin, (h, (w, (stride, k))))
+        },
+        |&(cin, (h, (w, (stride, k))))| {
+            let mut rng = Rng::new((cin * h * w * stride * k) as u64 ^ 0xADA0);
+            let x: Vec<f32> = (0..cin * h * w).map(|_| rng.normal()).collect();
+            let mut pt = Vec::new();
+            im2col_t(&x, cin, h, w, k, stride, &mut pt);
+            let p: Vec<f32> = (0..pt.len()).map(|_| rng.normal()).collect();
+            let lhs: f64 = pt.iter().zip(&p).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let mut back = vec![0.0f32; x.len()];
+            col2im(&p, cin, h, w, k, stride, &mut back);
+            let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let scale = 1.0f64.max(lhs.abs()).max(rhs.abs());
+            if (lhs - rhs).abs() > 1e-4 * scale {
+                return Err(format!("adjoint broken: ⟨Px,p⟩={lhs} vs ⟨x,P*p⟩={rhs}"));
+            }
+            // Integer roundtrip: each element times its tap count, exactly.
+            let xi: Vec<f32> = (0..cin * h * w).map(|i| (i % 7 + 1) as f32).collect();
+            let mut pti = Vec::new();
+            im2col_t(&xi, cin, h, w, k, stride, &mut pti);
+            let mut got = vec![0.0f32; xi.len()];
+            col2im(&pti, cin, h, w, k, stride, &mut got);
+            let ones = vec![1.0f32; xi.len()];
+            let mut pt1 = Vec::new();
+            im2col_t(&ones, cin, h, w, k, stride, &mut pt1);
+            let mut taps = vec![0.0f32; xi.len()];
+            col2im(&pt1, cin, h, w, k, stride, &mut taps);
+            for i in 0..xi.len() {
+                if got[i] != taps[i] * xi[i] {
+                    return Err(format!(
+                        "roundtrip at {i}: {} != {} taps x {}",
+                        got[i], taps[i], xi[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The GEMM-lowered conv kernels are bit-identical to the retained direct
+/// loops on random shapes — forward, dinput, and dweight (which must also
+/// continue an existing accumulation, not overwrite it). This is the §13
+/// replay contract as a property, beyond the fixed shape battery in the
+/// kernel unit tests.
+#[test]
+fn prop_conv_lowering_bitwise_equals_direct() {
+    use cdnl::runtime::kernels::{
+        conv2d_same_dinput_direct, conv2d_same_dweight_direct, conv2d_same_direct_into,
+        conv_out_dim,
+    };
+    use cdnl::runtime::lowering::{
+        conv2d_lowered_dinput, conv2d_lowered_dweight, conv2d_lowered_into, Scratch,
+    };
+    check(
+        0xB17E,
+        40,
+        |r| {
+            let n = r.usize_below(2) + 1;
+            let cin = r.usize_below(3) + 1;
+            let h = r.usize_below(7) + 1;
+            let w = r.usize_below(7) + 1;
+            let cout = r.usize_below(3) + 1;
+            let stride = r.usize_below(2) + 1;
+            let k = 1 + 2 * r.usize_below(2); // 1 or 3
+            (n, (cin, (h, (w, (cout, (stride, k))))))
+        },
+        |&(n, (cin, (h, (w, (cout, (stride, k))))))| {
+            let mut rng = Rng::new((n * cin * h * w * cout * stride * k) as u64 ^ 0x10E3);
+            let mut s = Scratch::new();
+            // Exact zeros sprinkled in: they exercise the GEMM's zero-skip
+            // and the padding-tap ±0.0 argument, the two places the term
+            // sets differ between routes.
+            let x: Vec<f32> = (0..n * cin * h * w)
+                .map(|i| if i % 5 == 0 { 0.0 } else { rng.normal() })
+                .collect();
+            let wt: Vec<f32> = (0..cout * cin * k * k)
+                .map(|i| if i % 7 == 0 { 0.0 } else { rng.normal() })
+                .collect();
+            let mut want = Vec::new();
+            conv2d_same_direct_into(&x, &wt, n, cin, h, w, cout, k, stride, &mut want);
+            let mut got = Vec::new();
+            conv2d_lowered_into(&x, &wt, n, cin, h, w, cout, k, stride, &mut got, &mut s);
+            if got != want {
+                return Err("lowered forward != direct bitwise".into());
+            }
+            let (oh, ow) = (conv_out_dim(h, stride), conv_out_dim(w, stride));
+            let dy: Vec<f32> = (0..n * cout * oh * ow)
+                .map(|i| if i % 6 == 0 { 0.0 } else { rng.normal() })
+                .collect();
+            let want_dx = conv2d_same_dinput_direct(&dy, &wt, n, cin, h, w, cout, k, stride);
+            let got_dx = conv2d_lowered_dinput(&dy, &wt, n, cin, h, w, cout, k, stride, &mut s);
+            if got_dx != want_dx {
+                return Err("lowered dinput != direct bitwise".into());
+            }
+            let prior: Vec<f32> = (0..wt.len()).map(|_| rng.normal()).collect();
+            let mut want_dw = prior.clone();
+            conv2d_same_dweight_direct(&x, &dy, &mut want_dw, n, cin, h, w, cout, k, stride);
+            let mut got_dw = prior;
+            conv2d_lowered_dweight(&x, &dy, &mut got_dw, n, cin, h, w, cout, k, stride, &mut s);
+            if got_dw != want_dw {
+                return Err("lowered dweight != direct bitwise".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Removing a whole layer then checking histogram slots zero out.
 #[test]
 fn prop_layer_histogram_consistent() {
