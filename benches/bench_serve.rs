@@ -1,0 +1,7 @@
+//! Thin wrapper: `cargo bench --bench bench_serve` runs the registered
+//! `serve` benchmark (see `rust/src/bench/suite/serve.rs`) and writes its
+//! report to `results/bench/BENCH_serve.json`.
+
+fn main() -> anyhow::Result<()> {
+    cdnl::bench::bench_main("serve")
+}

@@ -89,13 +89,13 @@ fn main() -> anyhow::Result<()> {
     // --- 5. PI cost at every stage ---------------------------------------------
     println!("\n== stage 5: estimated PI online latency (WAN) ==");
     let info = pl.sess.info();
-    let proto = cdnl::picost::wan();
+    let proto = &cdnl::pi::WAN;
     for (name, mask) in [
         ("full ReLUs", cdnl::model::Mask::full(total)),
         ("SNL reference", st.mask.clone()),
         ("ours (BCD)", ours.mask.clone()),
     ] {
-        let r = cdnl::picost::estimate_state(info, &mask, &proto);
+        let r = cdnl::pi::estimate_state(info, &mask, proto);
         println!(
             "  {name:<14} {:>7} ReLUs  {:>8.1} ms  {:>6.2} MB",
             r.relus,

@@ -54,9 +54,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 3. What this buys in a private-inference deployment.
-    for proto in [cdnl::picost::lan(), cdnl::picost::wan()] {
-        let before = cdnl::picost::estimate_state(info, &baseline.mask, &proto);
-        let after = cdnl::picost::estimate_state(info, &reduced.mask, &proto);
+    for proto in cdnl::pi::registry() {
+        let before = cdnl::pi::estimate_state(info, &baseline.mask, proto);
+        let after = cdnl::pi::estimate_state(info, &reduced.mask, proto);
         println!(
             "PI online latency ({}): {:.1} ms -> {:.1} ms  ({:.1} MB -> {:.1} MB comms)",
             proto.name,

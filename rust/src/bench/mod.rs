@@ -14,7 +14,9 @@
 //!   CI on every push and gates against the committed baseline;
 //! - `paper` — the table/figure grid (minutes in quick mode, hours under
 //!   `CDNL_BENCH_FULL=1`);
-//! - `perf`  — the §Perf microbenchmark suite.
+//! - `perf`  — the §Perf microbenchmark suite;
+//! - `serve` — the fleet-scale PI serving simulation ([`crate::pi::serve`]):
+//!   percentile latency + throughput vs ReLU budget, count metrics gated.
 //!
 //! Reports land in `results/bench/BENCH_<name>.json`; committed baselines
 //! live at the repository root (`BENCH_<name>.json`), and
@@ -38,6 +40,7 @@ pub enum Tier {
     Smoke,
     Paper,
     Perf,
+    Serve,
 }
 
 impl Tier {
@@ -46,6 +49,7 @@ impl Tier {
             "smoke" => Some(Tier::Smoke),
             "paper" => Some(Tier::Paper),
             "perf" => Some(Tier::Perf),
+            "serve" => Some(Tier::Serve),
             _ => None,
         }
     }
@@ -56,6 +60,7 @@ impl Tier {
             Tier::Smoke => "smoke",
             Tier::Paper => "paper",
             Tier::Perf => "perf",
+            Tier::Serve => "serve",
         }
     }
 }
@@ -157,7 +162,7 @@ pub fn registry() -> &'static [BenchDef] {
     &REGISTRY
 }
 
-static REGISTRY: [BenchDef; 17] = [
+static REGISTRY: [BenchDef; 18] = [
     BenchDef {
         name: "smoke",
         tier: Tier::Smoke,
@@ -277,6 +282,13 @@ static REGISTRY: [BenchDef; 17] = [
         paper: "§Perf",
         run: suite::perf_conv_lowered::run,
     },
+    BenchDef {
+        name: "serve",
+        tier: Tier::Serve,
+        title: "fleet-scale PI serving: percentiles + throughput vs budget",
+        paper: "-",
+        run: suite::serve::run,
+    },
 ];
 
 /// Look up one benchmark by registry name.
@@ -372,19 +384,20 @@ mod tests {
             assert!(!d.title.is_empty() && !d.paper.is_empty());
         }
         assert!(find("nope").is_err());
-        assert_eq!(registry().len(), 17);
+        assert_eq!(registry().len(), 18);
     }
 
     #[test]
     fn tiers_parse_and_partition() {
-        for t in [Tier::Smoke, Tier::Paper, Tier::Perf] {
+        for t in [Tier::Smoke, Tier::Paper, Tier::Perf, Tier::Serve] {
             assert_eq!(Tier::parse(t.name()), Some(t));
         }
         assert_eq!(Tier::parse("bogus"), None);
         assert_eq!(by_tier(Tier::Smoke).len(), 1);
         assert_eq!(by_tier(Tier::Perf).len(), 2);
+        assert_eq!(by_tier(Tier::Serve).len(), 1);
         assert_eq!(
-            by_tier(Tier::Paper).len() + 3,
+            by_tier(Tier::Paper).len() + 4,
             registry().len(),
             "every bench belongs to exactly one tier"
         );

@@ -285,6 +285,45 @@ impl Default for DeepReduceConfig {
     }
 }
 
+/// Private-Inference serving knobs (DESIGN.md §14): the deployment
+/// protocol every `cdnl picost`/`cdnl serve` table defaults to, plus the
+/// fleet shape fed to [`crate::pi::serve`]. Semantic: every field changes
+/// the serving workload (and hence every serve-tier report), so all
+/// participate in the fingerprint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PiConfig {
+    /// Named deployment protocol from the [`crate::pi::protocol`]
+    /// registry: lan | wan | mobile.
+    pub protocol: String,
+    /// Concurrent clients in the simulated fleet.
+    pub clients: usize,
+    /// Mean arrivals per second per client (Poisson process).
+    pub arrival_rate: f64,
+    /// Inferences each client requests.
+    pub requests: usize,
+    /// Max GEMM jobs the server aggregates into one batched linear pass.
+    pub batch_window: usize,
+    /// Preprocessing lookahead: garbling may run at most this many
+    /// requests ahead of arrivals.
+    pub prep_ahead: usize,
+    /// Seed for the arrival process.
+    pub seed: u64,
+}
+
+impl Default for PiConfig {
+    fn default() -> Self {
+        PiConfig {
+            protocol: "lan".into(),
+            clients: 64,
+            arrival_rate: 1.0,
+            requests: 8,
+            batch_window: 8,
+            prep_ahead: 4,
+            seed: 0x5EED,
+        }
+    }
+}
+
 /// Sizing of the reference backend's conv/residual topologies
 /// (`resnet18_*` / `wrn22_*` — DESIGN.md §12). Semantic: every field
 /// changes model numerics, so all participate in the fingerprint.
@@ -339,6 +378,7 @@ pub struct Experiment {
     pub autorep: AutorepConfig,
     pub senet: SenetConfig,
     pub deepreduce: DeepReduceConfig,
+    pub pi: PiConfig,
     /// Where checkpoints/results are written.
     pub out_dir: String,
     pub artifacts_dir: String,
@@ -357,6 +397,7 @@ impl Default for Experiment {
             autorep: AutorepConfig::default(),
             senet: SenetConfig::default(),
             deepreduce: DeepReduceConfig::default(),
+            pi: PiConfig::default(),
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
         }
@@ -437,6 +478,27 @@ impl Experiment {
             "deepreduce.finetune_steps" => self.deepreduce.finetune_steps = p!(value),
             "deepreduce.finetune_lr" => self.deepreduce.finetune_lr = p!(value),
             "deepreduce.seed" => self.deepreduce.seed = p!(value),
+            "pi.protocol" => {
+                crate::pi::protocol::find(value).ok_or_else(|| {
+                    format!(
+                        "config: unknown protocol {value:?} for pi.protocol (known: {})",
+                        crate::pi::protocol::names().join("|")
+                    )
+                })?;
+                self.pi.protocol = value.to_ascii_lowercase();
+            }
+            "pi.clients" => self.pi.clients = p!(value),
+            "pi.arrival_rate" => {
+                let r: f64 = p!(value);
+                if !(r.is_finite() && r > 0.0) {
+                    return Err(bad(key, value));
+                }
+                self.pi.arrival_rate = r;
+            }
+            "pi.requests" => self.pi.requests = p!(value),
+            "pi.batch_window" => self.pi.batch_window = p!(value),
+            "pi.prep_ahead" => self.pi.prep_ahead = p!(value),
+            "pi.seed" => self.pi.seed = p!(value),
             _ => return Err(format!("config: unknown key {key:?}")),
         }
         Ok(())
@@ -518,6 +580,13 @@ impl Experiment {
         put("deepreduce.finetune_steps", self.deepreduce.finetune_steps.to_string());
         put("deepreduce.finetune_lr", self.deepreduce.finetune_lr.to_string());
         put("deepreduce.seed", self.deepreduce.seed.to_string());
+        put("pi.protocol", self.pi.protocol.clone());
+        put("pi.clients", self.pi.clients.to_string());
+        put("pi.arrival_rate", self.pi.arrival_rate.to_string());
+        put("pi.requests", self.pi.requests.to_string());
+        put("pi.batch_window", self.pi.batch_window.to_string());
+        put("pi.prep_ahead", self.pi.prep_ahead.to_string());
+        put("pi.seed", self.pi.seed.to_string());
         m
     }
 
@@ -775,6 +844,35 @@ mod tests {
             ("deepreduce.finetune_lr", "0.001"),
             ("deepreduce.seed", "99"),
         ]);
+    }
+
+    #[test]
+    fn pi_config_fingerprint_coverage() {
+        let d = PiConfig::default();
+        assert_eq!(d.protocol, "lan");
+        assert_eq!(
+            (d.clients, d.requests, d.batch_window, d.prep_ahead, d.seed),
+            (64, 8, 8, 4, 0x5EED)
+        );
+        assert!((d.arrival_rate - 1.0).abs() < 1e-12);
+        assert_fingerprint_sensitive(&[
+            ("pi.protocol", "wan"),
+            ("pi.clients", "128"),
+            ("pi.arrival_rate", "2.5"),
+            ("pi.requests", "4"),
+            ("pi.batch_window", "16"),
+            ("pi.prep_ahead", "2"),
+            ("pi.seed", "7"),
+        ]);
+        // The protocol key is validated against the pi::protocol registry
+        // and canonicalized, and arrival rates must be positive and finite.
+        let mut e = Experiment::default();
+        assert!(e.apply("pi.protocol", "dialup").is_err());
+        e.apply("pi.protocol", "MOBILE").unwrap();
+        assert_eq!(e.pi.protocol, "mobile");
+        assert!(e.apply("pi.arrival_rate", "0").is_err());
+        assert!(e.apply("pi.arrival_rate", "-1").is_err());
+        assert!(e.apply("pi.arrival_rate", "inf").is_err());
     }
 
     #[test]

@@ -48,10 +48,18 @@
 //! else reference).
 //!
 //! Benchmarks are first-class: the [`bench`] registry unifies the paper's
-//! table/figure grid, the §Perf microbenchmarks and a CI smoke tier behind
-//! `cdnl bench list|run|compare`, each run emitting a typed
-//! `BENCH_<name>.json` report that a comparator gates against committed
-//! baselines (DESIGN.md §9).
+//! table/figure grid, the §Perf microbenchmarks, a CI smoke tier and the
+//! PI serving tier behind `cdnl bench list|run|compare`, each run
+//! emitting a typed `BENCH_<name>.json` report that a comparator gates
+//! against committed baselines (DESIGN.md §9).
+//!
+//! The Private-Inference cost surface is unified under [`pi`]
+//! (DESIGN.md §14): a named [`pi::Protocol`] registry (LAN/WAN/MOBILE),
+//! the [`pi::CostModel`] trait over the closed-form and message-walk
+//! per-inference models, and the deterministic fleet-scale serving
+//! simulator [`pi::serve`] behind `cdnl serve` and the `serve` bench
+//! tier. The pre-PR-9 [`picost`]/[`protosim`] paths remain as deprecated
+//! shims.
 
 pub mod bench;
 pub mod config;
@@ -60,6 +68,7 @@ pub mod data;
 pub mod metrics;
 pub mod methods;
 pub mod model;
+pub mod pi;
 pub mod picost;
 pub mod pipeline;
 pub mod protosim;

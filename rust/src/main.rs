@@ -19,12 +19,19 @@
 //!   snl | bcd | autorep | senet | deepreduce
 //!                deprecated aliases for `cdnl run <method>`
 //!   eval         evaluate a checkpoint on its dataset's test split
-//!   picost       PI online-cost estimate of a checkpoint (LAN + WAN)
+//!   picost       per-inference PI online-cost estimate of a checkpoint,
+//!                under every registered protocol (or one via --proto)
+//!   serve        fleet-scale PI serving simulation (DESIGN.md §14):
+//!                price a finished run's final mask (`cdnl serve
+//!                <run-id>`) or a checkpoint (`--ckpt`) under the
+//!                experiment's `pi.*` fleet shape; --record seals the
+//!                report into the run manifest
 //!   bench        the benchmark registry (DESIGN.md §9):
 //!                  bench list           every registered benchmark + tier
 //!                  bench run <name>     run one benchmark, write
 //!                                       results/bench/BENCH_<name>.json
-//!                  bench run --tier t   run a whole tier (smoke|paper|perf)
+//!                  bench run --tier t   run a whole tier
+//!                                       (smoke|paper|perf|serve)
 //!                  bench compare [<report> <baseline>] [--gate] [--md FILE]
 //!                                       diff reports against committed
 //!                                       baselines; --gate exits nonzero on
@@ -44,7 +51,8 @@
 //! Shared flags: --dataset synth10|synth100|synthtiny  --backbone resnet|wrn
 //! --poly  --preset quick|full  --set k=v[,k=v...]  --artifacts DIR
 //! --backend auto|pjrt|reference  --out DIR  --ckpt FILE  --ref-budget N
-//! --budget N  --budgets b1,b2,...  --verbose  --no-record
+//! --budget N  --budgets b1,b2,...  --proto lan|wan|mobile  --verbose
+//! --no-record
 //!
 //! Examples:
 //!   cdnl train --dataset synth10
@@ -52,6 +60,7 @@
 //!   cdnl run snl+bcd --budgets 2000,1000
 //!   cdnl runs resume bcd-resnet_16x16_c10-5fa3c1d2-1
 //!   cdnl picost --ckpt results/resnet_16x16_c10__synth10_bcd_b1000.cdnl
+//!   cdnl serve bcd-resnet_16x16_c10-5fa3c1d2-1 --proto wan --record
 
 use anyhow::{anyhow, bail, Context, Result};
 use cdnl::config::{preset, reference_budget, Experiment};
@@ -65,7 +74,7 @@ use cdnl::util::cli::Args;
 use cdnl::util::{fmt_relu_count, logging};
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: cdnl <info|train|run|methods|eval|picost|bench|runs> [flags]
+const USAGE: &str = "usage: cdnl <info|train|run|methods|eval|picost|serve|bench|runs> [flags]
   (cdnl <method> is a deprecated alias for cdnl run <method>)
   see rust/src/main.rs header or README.md for flag documentation";
 
@@ -125,6 +134,11 @@ fn run() -> Result<()> {
     if sub == "methods" {
         // Pure registry introspection; no backend needed.
         return cmd_methods(&args, &exp);
+    }
+    if sub == "serve" {
+        // A run-id serve rebuilds the run's own recorded experiment and
+        // backend (like `runs resume`), so it opens its backend itself.
+        return cmd_serve(&args, exp);
     }
     let backend = open_backend_with(
         Path::new(&exp.artifacts_dir),
@@ -550,14 +564,30 @@ fn cmd_eval(engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `cdnl picost`: PI online-cost estimate under LAN and WAN protocols.
+/// Resolve `--proto`: one named [`cdnl::pi::Protocol`], or (default) the
+/// whole registry, for side-by-side tables.
+fn protocols(args: &Args) -> Result<Vec<&'static cdnl::pi::Protocol>> {
+    match args.get("proto") {
+        Some(name) => Ok(vec![cdnl::pi::find(name).ok_or_else(|| {
+            anyhow!(
+                "--proto: unknown protocol {name:?} (known: {})",
+                cdnl::pi::names().join("|")
+            )
+        })?]),
+        None => Ok(cdnl::pi::registry().to_vec()),
+    }
+}
+
+/// `cdnl picost`: per-inference PI online-cost estimate under every
+/// registered protocol (or one, via --proto).
 fn cmd_picost(engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> {
+    let protos = protocols(args)?;
     let pl = Pipeline::new(engine, exp)?;
     let st = starting_state(&pl, args)?;
     let info = pl.sess.info();
     let mut rows = Vec::new();
-    for proto in [cdnl::picost::lan(), cdnl::picost::wan()] {
-        let r = cdnl::picost::estimate_state(info, &st.mask, &proto);
+    for proto in &protos {
+        let r = cdnl::pi::estimate_state(info, &st.mask, proto);
         rows.push(vec![
             r.protocol.to_string(),
             fmt_relu_count(r.relus),
@@ -581,9 +611,9 @@ fn cmd_picost(engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> 
     if args.has("simulate") {
         // Protocol-level walk: per-message trace + analytic cross-check.
         let mut rows = Vec::new();
-        for proto in [cdnl::picost::lan(), cdnl::picost::wan()] {
-            let tr = cdnl::protosim::simulate(info, &st.mask, &proto);
-            let (analytic, simulated) = cdnl::protosim::compare(info, &st.mask, &proto);
+        for proto in &protos {
+            let tr = cdnl::pi::simulate(info, &st.mask, proto);
+            let (analytic, simulated) = cdnl::pi::compare(info, &st.mask, proto);
             rows.push(vec![
                 proto.name.to_string(),
                 tr.messages.len().to_string(),
@@ -595,11 +625,161 @@ fn cmd_picost(engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> 
             ]);
         }
         cdnl::metrics::print_table(
-            "Simulated DELPHI-style online phase (protosim) vs analytic model",
+            "Simulated DELPHI-style online phase (pi::trace) vs analytic model",
             &["protocol", "msgs", "rounds", "gc[MB]", "shares[MB]", "sim[ms]", "analytic[ms]"],
             &rows,
         );
     }
+    Ok(())
+}
+
+/// `cdnl serve <run-id> | --ckpt FILE`: fleet-scale serving simulation of
+/// a finished run's (or checkpoint's) mask under the experiment's `pi.*`
+/// fleet shape (DESIGN.md §14).
+fn cmd_serve(args: &Args, exp: Experiment) -> Result<()> {
+    let protos = protocols(args)?;
+    if let Some(id) = args.positional.first().cloned() {
+        return serve_run(args, &exp, &id, &protos);
+    }
+    let Some(ck) = args.get("ckpt").map(str::to_string) else {
+        bail!(
+            "usage: cdnl serve <run-id> [--proto p] [--record]\n       \
+             cdnl serve --ckpt FILE [--proto p]"
+        );
+    };
+    let backend = open_backend_with(
+        Path::new(&exp.artifacts_dir),
+        args.get_or("backend", "auto"),
+        &exp.model,
+    )?;
+    let pl = Pipeline::new(backend.as_ref(), exp)?;
+    let st = ModelState::load(Path::new(&ck), pl.sess.info())?;
+    let cfg = cdnl::pi::ServeConfig::from_experiment(&pl.exp);
+    serve_tables(pl.sess.info(), &st, &cfg, &protos, &pl.sess.key)
+}
+
+/// Serve a recorded run: rebuild its experiment (like `runs resume`), load
+/// its final state, and price the mask under the serving simulator.
+/// `--record` seals the report — priced under the experiment's
+/// `pi.protocol` — into the run manifest.
+fn serve_run(
+    args: &Args,
+    exp: &Experiment,
+    id: &str,
+    protos: &[&'static cdnl::pi::Protocol],
+) -> Result<()> {
+    let store = RunStore::for_experiment(exp);
+    let mut run = store.get(id)?;
+    let mut rexp = run.manifest.experiment()?;
+    // Paths may legitimately differ from record time; CLI overrides win,
+    // matching the fingerprint's path-independence.
+    if let Some(a) = args.get("artifacts") {
+        rexp.artifacts_dir = a.to_string();
+    }
+    if let Some(o) = args.get("out") {
+        rexp.out_dir = o.to_string();
+    }
+    let backend_name = args
+        .get("backend")
+        .unwrap_or(run.manifest.backend.as_str())
+        .to_string();
+    let backend = open_backend_with(Path::new(&rexp.artifacts_dir), &backend_name, &rexp.model)?;
+    let info = backend.model(&run.manifest.model_key)?;
+    // BCD runs checkpoint inside the run directory (the resume state IS
+    // the final state once complete); other methods leave their final
+    // checkpoint at the shared default path.
+    let st = if run.manifest.bcd.is_some() {
+        run.load_resume_state(info)?
+    } else {
+        let p = default_ckpt_path(
+            &rexp,
+            &run.manifest.model_key,
+            &run.manifest.method,
+            run.manifest.b_target,
+        );
+        ModelState::load(&p, info)?
+    };
+    let cfg = cdnl::pi::ServeConfig::from_experiment(&rexp);
+    println!(
+        "serving run {} ({} at {} ReLUs)",
+        run.manifest.run_id,
+        run.manifest.model_key,
+        fmt_relu_count(st.budget())
+    );
+    serve_tables(info, &st, &cfg, protos, &run.manifest.model_key)?;
+    if args.has("record") {
+        let proto = cdnl::pi::find(&rexp.pi.protocol)
+            .ok_or_else(|| anyhow!("run {}: unknown pi.protocol {:?}", id, rexp.pi.protocol))?;
+        run.manifest.serve = Some(cdnl::pi::serve::serve(info, &st.mask, proto, &cfg)?);
+        run.save()?;
+        println!("serve report ({}) recorded in {}", proto.name, run.manifest.run_id);
+    }
+    Ok(())
+}
+
+/// Shared `cdnl serve` output: the fleet table under each protocol plus
+/// the per-inference [`cdnl::pi::CostModel`] cross-check.
+fn serve_tables(
+    info: &cdnl::runtime::manifest::ModelInfo,
+    st: &ModelState,
+    cfg: &cdnl::pi::ServeConfig,
+    protos: &[&'static cdnl::pi::Protocol],
+    key: &str,
+) -> Result<()> {
+    let mut rows = Vec::new();
+    for proto in protos {
+        let r = cdnl::pi::serve::serve(info, &st.mask, proto, cfg)?;
+        rows.push(vec![
+            r.protocol.clone(),
+            r.completed.to_string(),
+            r.online_rounds.to_string(),
+            format!("{:.2}", (r.up_bytes + r.down_bytes) as f64 / 1e6),
+            format!("{}/{}", r.gemm_batches, r.gemm_jobs),
+            format!("{:.1}", r.p50_ms),
+            format!("{:.1}", r.p95_ms),
+            format!("{:.1}", r.p99_ms),
+            format!("{:.2}", r.throughput_rps),
+        ]);
+    }
+    cdnl::metrics::print_table(
+        &format!(
+            "Simulated PI serving for {key} at {} ReLUs: {} clients x {} requests \
+             (window {}, prep-ahead {}, seed {})",
+            fmt_relu_count(st.budget()),
+            cfg.clients,
+            cfg.requests,
+            cfg.batch_window,
+            cfg.prep_ahead,
+            cfg.seed
+        ),
+        &[
+            "protocol", "done", "rounds", "comm[MB]", "batch/jobs", "p50[ms]", "p95[ms]",
+            "p99[ms]", "rps",
+        ],
+        &rows,
+    );
+    // Per-inference cross-check: every registered cost model, side by
+    // side. Counts agree by construction; latency is each model's own.
+    let mut rows = Vec::new();
+    for proto in protos {
+        for model in cdnl::pi::cost_models() {
+            let c = model.price(info, &st.mask, proto);
+            rows.push(vec![
+                c.protocol.to_string(),
+                c.model.to_string(),
+                fmt_relu_count(c.relus),
+                c.active_layers.to_string(),
+                c.rounds.to_string(),
+                format!("{:.3}", (c.up_bytes + c.down_bytes) as f64 / 1e6),
+                format!("{:.1}", 1e3 * c.latency_secs),
+            ]);
+        }
+    }
+    cdnl::metrics::print_table(
+        "Per-inference cost models (pi::CostModel)",
+        &["protocol", "model", "ReLUs", "layers", "rounds", "comm[MB]", "latency[ms]"],
+        &rows,
+    );
     Ok(())
 }
 
@@ -656,10 +836,10 @@ fn bench_run(args: &Args, exp: Experiment) -> Result<()> {
             vec![cdnl::bench::find(name)?]
         } else if let Some(t) = args.get("tier") {
             let tier = cdnl::bench::Tier::parse(t)
-                .ok_or_else(|| anyhow!("--tier: expected smoke|paper|perf, got {t:?}"))?;
+                .ok_or_else(|| anyhow!("--tier: expected smoke|paper|perf|serve, got {t:?}"))?;
             cdnl::bench::by_tier(tier)
         } else {
-            bail!("usage: cdnl bench run <name> | cdnl bench run --tier smoke|paper|perf");
+            bail!("usage: cdnl bench run <name> | cdnl bench run --tier smoke|paper|perf|serve");
         };
     let backend = open_backend_with(
         Path::new(&exp.artifacts_dir),
@@ -891,6 +1071,14 @@ fn runs_show(store: &RunStore, id: &str) -> Result<()> {
             b.num_metrics(),
             b.wall_secs,
             b.host.fingerprint()
+        );
+    }
+    if let Some(s) = &m.serve {
+        println!(
+            "serve     {} on {} clients x {} requests: {} inferences, \
+             p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms, {:.2} inf/s",
+            s.protocol, s.clients, s.requests, s.completed, s.p50_ms, s.p95_ms, s.p99_ms,
+            s.throughput_rps
         );
     }
     if !m.stages.is_empty() {

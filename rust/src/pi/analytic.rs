@@ -1,0 +1,244 @@
+//! Closed-form Private-Inference cost model — why ReLU budgets matter.
+//!
+//! The paper's motivation (after DELPHI, GAZELLE): in hybrid HE/MPC
+//! protocols, *linear* layers run under additively-homomorphic encryption
+//! or pre-shared Beaver triples, while each *ReLU* needs a garbled-circuit
+//! (GC) evaluation costing kilobytes of online communication. ReLU count
+//! therefore dominates online latency. This module turns a (model, mask)
+//! pair into estimated online bytes/latency so experiments can report the
+//! PI-latency implication of every budget. Constants live in the
+//! [`Protocol`] registry ([`crate::pi::protocol`]); they follow DELPHI's
+//! reported costs and are estimates, clearly labelled as such in reports.
+//!
+//! Each masked layer costs one HE↔GC share-translation round trip, which
+//! is why `round_secs` scales with *active* layer count, not ReLU count.
+//! The message-level dual of this model is [`crate::pi::trace`]; the
+//! [`CostModel`] trait gives both one typed entry point.
+
+use super::protocol::Protocol;
+use super::{CostModel, InferenceCost};
+use crate::model::Mask;
+use crate::runtime::manifest::ModelInfo;
+
+/// Estimated online cost of one private inference.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    pub protocol: &'static str,
+    pub relus: usize,
+    pub macs: f64,
+    pub online_bytes: f64,
+    /// Communication + GC compute for the non-linear layers [s].
+    pub relu_secs: f64,
+    /// HE evaluation of the linear layers [s].
+    pub linear_secs: f64,
+    /// Round-trip latency across active masked layers [s].
+    pub round_secs: f64,
+    pub total_secs: f64,
+}
+
+/// Streaming per-layer MAC estimate over a manifest's mask-layer table.
+///
+/// Full-shape entries `[C, H, W]` (the MLP family's spatially-packed
+/// layers and the unit-test fixtures) are priced exactly as written: a
+/// 3x3 conv from the previous channel count into `C x H x W`. Per-channel
+/// entries `[C]` (both conv families and MLP hidden layers pack one mask
+/// slot per channel/unit) carry no spatial extent, so the walk tracks an
+/// approximate side length: it starts at the input image size and halves
+/// whenever the channel count strictly grows — the standard
+/// stage-transition stride pattern of the ResNet/WRN backbones. An
+/// analytic estimate — good to a small constant factor, which is enough
+/// for the relative PI-latency comparisons it feeds (MACs never gate).
+pub(crate) struct MacWalk {
+    prev_c: f64,
+    side: f64,
+}
+
+impl MacWalk {
+    pub(crate) fn new(info: &ModelInfo) -> MacWalk {
+        MacWalk { prev_c: info.channels as f64, side: info.image_size as f64 }
+    }
+
+    /// MACs of the linear layer feeding a mask entry of `shape`.
+    pub(crate) fn layer(&mut self, shape: &[usize]) -> f64 {
+        let (c, hw) = match shape {
+            [c, h, w] => (*c as f64, (h * w) as f64),
+            [c] => {
+                if *c as f64 > self.prev_c {
+                    self.side = (self.side / 2.0).max(1.0);
+                }
+                (*c as f64, self.side * self.side)
+            }
+            other => (other.first().copied().unwrap_or(1) as f64, 1.0),
+        };
+        let macs = c * hw * self.prev_c * 9.0;
+        self.prev_c = c;
+        macs
+    }
+
+    /// MACs of the final dense head.
+    pub(crate) fn head(&self, num_classes: usize) -> f64 {
+        self.prev_c * num_classes as f64
+    }
+}
+
+/// Estimate multiply-accumulate count of the network from the manifest's
+/// mask-layer table (see [`MacWalk`] for the per-shape rules).
+pub fn estimate_macs(info: &ModelInfo) -> f64 {
+    let mut walk = MacWalk::new(info);
+    let mut macs = 0.0f64;
+    for e in &info.mask_layers {
+        macs += walk.layer(&e.shape);
+    }
+    macs + walk.head(info.num_classes)
+}
+
+/// Online-phase cost for a network with `relus` active ReLUs. Each mask
+/// layer that still holds a ReLU costs one GC exchange = two direction
+/// flips (tables down, re-shares up); the input/logit share transfers add
+/// two endpoint rounds. This matches [`crate::pi::trace`]'s message walk.
+pub fn estimate(
+    info: &ModelInfo,
+    relus: usize,
+    active_layers: usize,
+    proto: &Protocol,
+) -> CostReport {
+    let macs = estimate_macs(info);
+    let online_bytes = relus as f64 * proto.gc_bytes_per_relu;
+    let relu_secs = online_bytes / proto.bandwidth + relus as f64 * proto.gc_secs_per_relu;
+    let linear_secs = macs / proto.he_macs_per_sec;
+    let round_secs = (2 * active_layers + 2) as f64 * proto.rtt;
+    CostReport {
+        protocol: proto.name,
+        relus,
+        macs,
+        online_bytes,
+        relu_secs,
+        linear_secs,
+        round_secs,
+        total_secs: relu_secs + linear_secs + round_secs,
+    }
+}
+
+/// Convenience over a model state: counts active layers from the mask.
+pub fn estimate_state(info: &ModelInfo, mask: &Mask, proto: &Protocol) -> CostReport {
+    let hist = mask.layer_histogram(info);
+    let active = hist.iter().filter(|&&h| h > 0).count();
+    estimate(info, mask.count(), active, proto)
+}
+
+/// The closed-form model as a [`CostModel`]: per-direction bytes use the
+/// same closed forms the trace walk realizes message by message, so the
+/// two models agree exactly on bytes and rounds and differ only in how
+/// they compose latency.
+pub struct Analytic;
+
+impl CostModel for Analytic {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn price(&self, info: &ModelInfo, mask: &Mask, proto: &Protocol) -> InferenceCost {
+        let r = estimate_state(info, mask, proto);
+        let input_elems = info.channels * info.image_size * info.image_size;
+        let hist = mask.layer_histogram(info);
+        let active = hist.iter().filter(|&&h| h > 0).count();
+        InferenceCost {
+            model: self.name(),
+            protocol: proto.name,
+            relus: r.relus,
+            active_layers: active,
+            rounds: 2 * active + 2,
+            up_bytes: (input_elems + r.relus) as u64 * super::trace::SHARE_BYTES,
+            down_bytes: r.relus as u64 * proto.gc_bytes_per_relu as u64
+                + info.num_classes as u64 * super::trace::SHARE_BYTES,
+            latency_secs: r.total_secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::protocol::{LAN, WAN};
+    use super::*;
+    use crate::runtime::manifest::PackEntry;
+
+    fn fake_info() -> ModelInfo {
+        ModelInfo {
+            key: "m".into(),
+            backbone: "resnet".into(),
+            num_classes: 10,
+            image_size: 8,
+            channels: 3,
+            poly: false,
+            param_size: 1,
+            mask_size: 128 + 64,
+            mask_layers: vec![
+                PackEntry { name: "a".into(), shape: vec![2, 8, 8], offset: 0, size: 128 },
+                PackEntry { name: "b".into(), shape: vec![4, 4, 4], offset: 128, size: 64 },
+            ],
+            param_entries: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn macs_analytic() {
+        // conv1: 2*8*8*3*9 = 3456 ; conv2: 4*4*4*2*9 = 1152 ; head 4*10=40.
+        assert_eq!(estimate_macs(&fake_info()), 3456.0 + 1152.0 + 40.0);
+    }
+
+    #[test]
+    fn per_channel_shapes_estimate_without_panicking() {
+        // Conv-family manifests pack one mask slot per channel (`[C]`); the
+        // pre-PR-9 estimator indexed shape[1] and panicked on them. The walk
+        // halves its side at each channel increase: 16x16 @8ch, 8x8 @16ch.
+        let mut info = fake_info();
+        info.image_size = 16;
+        info.mask_size = 24;
+        info.mask_layers = vec![
+            PackEntry { name: "s".into(), shape: vec![8], offset: 0, size: 8 },
+            PackEntry { name: "b".into(), shape: vec![16], offset: 8, size: 16 },
+        ];
+        let want = 8.0 * 256.0 * 3.0 * 9.0 + 16.0 * 64.0 * 8.0 * 9.0 + 16.0 * 10.0;
+        assert_eq!(estimate_macs(&info), want);
+    }
+
+    #[test]
+    fn fewer_relus_cheaper() {
+        let info = fake_info();
+        let full = estimate(&info, 192, 2, &LAN);
+        let half = estimate(&info, 96, 2, &LAN);
+        assert!(half.total_secs < full.total_secs);
+        assert_eq!(half.linear_secs, full.linear_secs, "linear part unaffected");
+    }
+
+    #[test]
+    fn wan_dominated_by_comms() {
+        let info = fake_info();
+        let r = estimate(&info, 10_000, 2, &WAN);
+        assert!(r.relu_secs > r.linear_secs);
+    }
+
+    #[test]
+    fn empty_layers_drop_rounds() {
+        let info = fake_info();
+        let mut m = Mask::full(192);
+        m.remove_layer(&info, 1);
+        let r = estimate_state(&info, &m, &LAN);
+        assert_eq!(r.relus, 128);
+        let full = estimate_state(&info, &Mask::full(192), &LAN);
+        assert!(r.round_secs < full.round_secs);
+    }
+
+    #[test]
+    fn analytic_cost_model_counts_match_closed_forms() {
+        let info = fake_info();
+        let m = Mask::full(192);
+        let c = Analytic.price(&info, &m, &LAN);
+        assert_eq!((c.model, c.protocol), ("analytic", "LAN"));
+        assert_eq!((c.relus, c.active_layers, c.rounds), (192, 2, 6));
+        assert_eq!(c.up_bytes, (3 * 8 * 8 + 192) * 4);
+        assert_eq!(c.down_bytes, 192 * 2048 + 10 * 4);
+        assert!(c.latency_secs > 0.0);
+    }
+}

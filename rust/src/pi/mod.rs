@@ -1,0 +1,82 @@
+//! `pi::` — the unified Private-Inference cost/protocol API (DESIGN.md §14).
+//!
+//! PR 9 consolidated the two overlapping PI surfaces that grew up
+//! separately — the closed-form estimator (`picost`) and the
+//! message-level protocol walk (`protosim`) — into one module tree and
+//! added the fleet-scale serving simulator on top:
+//!
+//! | Path | What it prices | Entry points |
+//! |------|----------------|--------------|
+//! | [`protocol`] | deployment scenarios | [`Protocol`], [`find`], [`registry`] |
+//! | [`analytic`] | one inference, closed form | [`estimate_state`], [`Analytic`] |
+//! | [`trace`]    | one inference, message walk | [`simulate`], [`compare`], [`TraceSim`] |
+//! | [`serve`]    | a fleet of inferences | [`serve::serve`], [`ServeConfig`], [`ServeReport`] |
+//!
+//! The per-inference models share one typed entry point, the
+//! [`CostModel`] trait: `price(info, mask, protocol)` returns an
+//! [`InferenceCost`] whose count-valued fields (ReLUs, active layers,
+//! rounds, per-direction bytes) are **identical across models by
+//! construction** — both reduce to [`trace::script`]'s closed forms —
+//! while the latency composition is each model's own. The serving
+//! simulator replays the same script per concurrent request, which is
+//! what the `prop_invariants` byte-conservation property pins down.
+//!
+//! The old `crate::picost` / `crate::protosim` paths still compile as
+//! deprecated shims re-exporting from here; new code should use `pi::`.
+
+pub mod analytic;
+pub mod protocol;
+pub mod serve;
+pub mod trace;
+
+pub use analytic::{estimate, estimate_macs, estimate_state, Analytic, CostReport};
+pub use protocol::{find, names, registry, Protocol, LAN, MOBILE, WAN};
+pub use serve::{ServeConfig, ServeReport};
+pub use trace::{compare, simulate, Dir, Message, Trace, TraceSim, SHARE_BYTES};
+
+use crate::model::Mask;
+use crate::runtime::manifest::ModelInfo;
+
+/// One priced private inference — the common currency of every
+/// [`CostModel`]. Count-valued fields agree exactly across models;
+/// `latency_secs` is each model's own composition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferenceCost {
+    /// Which model priced it ("analytic", "trace").
+    pub model: &'static str,
+    pub protocol: &'static str,
+    pub relus: usize,
+    pub active_layers: usize,
+    /// Online communication rounds (`2 * active_layers + 2`).
+    pub rounds: usize,
+    /// Client→server payload [bytes].
+    pub up_bytes: u64,
+    /// Server→client payload [bytes].
+    pub down_bytes: u64,
+    pub latency_secs: f64,
+}
+
+/// A per-inference PI cost model: price one (model, mask) pair under one
+/// [`Protocol`]. Implemented by [`Analytic`] (closed form) and
+/// [`TraceSim`] (message walk); the CLI's `picost`/`serve` tables print
+/// both side by side to keep them honest.
+pub trait CostModel {
+    fn name(&self) -> &'static str;
+    fn price(&self, info: &ModelInfo, mask: &Mask, proto: &Protocol) -> InferenceCost;
+}
+
+/// Every registered per-inference cost model, for side-by-side tables.
+pub fn cost_models() -> [&'static dyn CostModel; 2] {
+    [&Analytic, &TraceSim]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_model_registry_names() {
+        let names: Vec<&str> = cost_models().iter().map(|m| m.name()).collect();
+        assert_eq!(names, ["analytic", "trace"]);
+    }
+}

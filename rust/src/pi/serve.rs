@@ -1,0 +1,687 @@
+//! Production-scale PI serving simulator (DESIGN.md §14).
+//!
+//! The per-inference models ([`crate::pi::analytic`], [`crate::pi::trace`])
+//! price ONE private inference. This module answers the question users
+//! actually ask of a linearized network — *what does a BCD mask buy at
+//! fleet scale?* — with a deterministic discrete-event simulation that
+//! multiplexes many concurrent private inferences over one simulated
+//! server + link pair:
+//!
+//! - **Seeded arrival process** — per-client exponential inter-arrival
+//!   times (Poisson traffic) drawn from a forked [`Rng`] stream per
+//!   client, so traces are reproducible and clients are decorrelated.
+//! - **Per-request round pipelining** — every request independently
+//!   replays the [`crate::pi::trace::script`] step sequence; requests
+//!   interleave freely on the shared uplink/downlink/GEMM resources.
+//! - **Preprocessing-phase scheduling** — a single server-side garbler
+//!   prepares each request's GC tables (DELPHI's offline phase) in
+//!   arrival order, running at most `prep_ahead` requests ahead of the
+//!   arrivals seen so far; a request's online phase starts only when it
+//!   has both arrived and been prepped.
+//! - **Batch aggregation on linear layers** — one server GEMM unit
+//!   serves same-layer jobs from up to `batch_window` requests in one
+//!   batched evaluation; co-batched followers cost
+//!   [`BATCH_FOLLOWER_SHIFT`] (base >> 2 = 25%) of the leader, the
+//!   amortization the window knob trades against latency.
+//!
+//! # Determinism contract
+//!
+//! The event loop is **bit-deterministic given the seed**, across hosts
+//! and repeated runs: all simulated time is integer nanoseconds, ties
+//! break on a monotone event sequence number, every queue is FIFO, and
+//! the only transcendental on the hot path (the exponential sampler's
+//! log) is [`det_ln`] — basic IEEE arithmetic only, no platform `libm`.
+//! The serve bench tier asserts `run == rerun` by full report equality,
+//! and every gated metric is an integer count.
+//!
+//! # Percentile rule
+//!
+//! Latency percentiles use the **nearest-rank** method on the sorted
+//! per-request latencies: `p`-th percentile = the element at 1-based rank
+//! `ceil(p * n / 100)` (computed in integer arithmetic as
+//! `(p * n + 99) / 100`). No interpolation — the reported value is always
+//! an observed latency, and the rule is exact in integers.
+
+use super::protocol::Protocol;
+use super::trace::{script, Step};
+use crate::derive_serde;
+use crate::model::Mask;
+use crate::runtime::manifest::ModelInfo;
+use crate::util::prng::Rng;
+use anyhow::{ensure, Result};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Offline garbling costs this multiple of the online GC evaluation time
+/// per ReLU (DELPHI reports garbling ~2x evaluation).
+pub const PREP_GARBLE_FACTOR: f64 = 2.0;
+
+/// Each co-batched GEMM follower costs `base >> BATCH_FOLLOWER_SHIFT`
+/// (25% of the leader) — integer arithmetic, so batched service times
+/// stay exact.
+pub const BATCH_FOLLOWER_SHIFT: u32 = 2;
+
+/// Serving-simulation knobs; the config surface behind the `pi.*` keys.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Concurrent clients, each with its own arrival stream.
+    pub clients: usize,
+    /// Inferences per client.
+    pub requests: usize,
+    /// Per-client Poisson arrival rate [requests/s].
+    pub arrival_rate: f64,
+    /// Max same-layer GEMM jobs batched into one server evaluation.
+    pub batch_window: usize,
+    /// How many requests the garbler may run ahead of observed arrivals.
+    pub prep_ahead: usize,
+    /// Arrival-process seed; same seed → bit-identical report.
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    /// The `pi.*` slice of an experiment (protocol selection stays by
+    /// name — see [`crate::pi::protocol::find`]).
+    pub fn from_experiment(exp: &crate::config::Experiment) -> ServeConfig {
+        ServeConfig {
+            clients: exp.pi.clients,
+            requests: exp.pi.requests,
+            arrival_rate: exp.pi.arrival_rate,
+            batch_window: exp.pi.batch_window,
+            prep_ahead: exp.pi.prep_ahead,
+            seed: exp.pi.seed,
+        }
+    }
+}
+
+/// One serving simulation's results. Count-valued fields are exact and
+/// arrival-timing-independent (they gate in `BENCH_serve.json`); the
+/// float-valued latency/throughput fields are bit-deterministic for a
+/// seed but host-advisory in the bench gate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeReport {
+    pub protocol: String,
+    pub clients: usize,
+    pub requests: usize,
+    /// Inferences that ran to completion (always `clients * requests`).
+    pub completed: usize,
+    /// Surviving ReLUs of the served mask.
+    pub relus: usize,
+    /// Mask layers still holding at least one ReLU.
+    pub active_layers: usize,
+    /// Online rounds of one inference (`2 * active_layers + 2`).
+    pub rounds_per_inference: usize,
+    /// Total online rounds across all completed inferences.
+    pub online_rounds: usize,
+    /// Total client→server payload [bytes].
+    pub up_bytes: usize,
+    /// Total server→client payload [bytes].
+    pub down_bytes: usize,
+    /// Linear-layer jobs entering the GEMM unit (completed x layers).
+    pub gemm_jobs: usize,
+    /// Batched evaluations the GEMM unit actually ran (≤ `gemm_jobs`;
+    /// the batching win — timing-dependent, so not baseline-gated).
+    pub gemm_batches: usize,
+    /// Requests whose GC tables were garbled (always `completed`).
+    pub prep_completed: usize,
+    /// Discrete events processed (timing-dependent; not baseline-gated).
+    pub events: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    /// Simulated time until the last completion [s].
+    pub makespan_secs: f64,
+    /// `completed / makespan_secs`.
+    pub throughput_rps: f64,
+}
+derive_serde!(ServeReport {
+    protocol,
+    clients,
+    requests,
+    completed,
+    relus,
+    active_layers,
+    rounds_per_inference,
+    online_rounds,
+    up_bytes,
+    down_bytes,
+    gemm_jobs,
+    gemm_batches,
+    prep_completed,
+    events,
+    p50_ms,
+    p95_ms,
+    p99_ms,
+    mean_ms,
+    makespan_secs,
+    throughput_rps,
+});
+
+/// Deterministic natural logarithm over basic IEEE arithmetic (no libm):
+/// frexp-style decomposition `x = m * 2^e` with `m` centered on
+/// `[1/sqrt2, sqrt2)`, then `ln(m) = 2 atanh((m-1)/(m+1))` by its odd
+/// power series (|z| ≤ 0.172, 13 terms ≪ 1 ulp). Guarantees the arrival
+/// sampler produces bit-identical streams on every platform.
+fn det_ln(x: f64) -> f64 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    let mut e = ((bits >> 52) & 0x7ff) as i64 - 1023;
+    let mut m = f64::from_bits((bits & 0x000f_ffff_ffff_ffff) | 0x3ff0_0000_0000_0000);
+    if m > std::f64::consts::SQRT_2 {
+        m /= 2.0;
+        e += 1;
+    }
+    let z = (m - 1.0) / (m + 1.0);
+    let z2 = z * z;
+    let mut term = z;
+    let mut atanh = 0.0f64;
+    for k in 0..13u32 {
+        atanh += term / (2 * k + 1) as f64;
+        term *= z2;
+    }
+    e as f64 * std::f64::consts::LN_2 + 2.0 * atanh
+}
+
+/// Nearest-rank percentile over sorted samples (see module docs for the
+/// exact rule). `samples` must be non-empty and sorted ascending.
+fn percentile_ns(sorted: &[u64], p: usize) -> u64 {
+    debug_assert!(!sorted.is_empty() && (1..=100).contains(&p));
+    let rank = (p * sorted.len() + 99) / 100; // ceil, 1-based
+    sorted[rank.max(1) - 1]
+}
+
+/// Discrete event kinds. `Ord` is derived only so events can ride the
+/// heap tuple; ties never reach it (the sequence number is unique).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    Arrive(usize),
+    PrepDone(usize),
+    UpXmitEnd(usize),
+    DownXmitEnd(usize),
+    UpDelivered(usize),
+    DownDelivered(usize),
+    GcDone(usize),
+    LinearDone(Vec<usize>),
+}
+
+struct Sim<'a> {
+    steps: &'a [Step],
+    /// Base GEMM service time per mask layer [ns], from the script.
+    lin_ns: Vec<u64>,
+    prop_ns: u64,
+    bandwidth: f64,
+    gc_ns_per_relu: f64,
+    cfg: &'a ServeConfig,
+    heap: BinaryHeap<Reverse<(u64, u64, Ev)>>,
+    seq: u64,
+    // Per-request state.
+    arrive_ns: Vec<u64>,
+    step_idx: Vec<usize>,
+    arrived: Vec<bool>,
+    prepped: Vec<bool>,
+    started: Vec<bool>,
+    latencies_ns: Vec<u64>,
+    // Shared resources: two half-duplex links, one GEMM unit, one garbler.
+    up_q: VecDeque<(usize, u64)>,
+    up_busy: bool,
+    down_q: VecDeque<(usize, u64)>,
+    down_busy: bool,
+    lin_q: VecDeque<(usize, usize)>,
+    lin_busy: bool,
+    next_prep: usize,
+    prep_busy: bool,
+    prep_ns: u64,
+    arrived_count: usize,
+    // Tallies.
+    events: usize,
+    up_bytes: u64,
+    down_bytes: u64,
+    gemm_jobs: usize,
+    gemm_batches: usize,
+    prep_completed: usize,
+    last_ns: u64,
+}
+
+impl Sim<'_> {
+    fn push_ev(&mut self, t: u64, ev: Ev) {
+        self.seq += 1;
+        self.heap.push(Reverse((t, self.seq, ev)));
+    }
+
+    fn xmit_ns(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.bandwidth * 1e9).round() as u64
+    }
+
+    /// Dispatch the current script step of `req` at time `now`.
+    fn advance(&mut self, req: usize, now: u64) {
+        let Some(step) = self.steps.get(self.step_idx[req]) else {
+            self.latencies_ns.push(now - self.arrive_ns[req]);
+            self.last_ns = self.last_ns.max(now);
+            return;
+        };
+        match *step {
+            Step::Up { bytes, .. } => {
+                self.up_bytes += bytes;
+                self.up_q.push_back((req, bytes));
+                self.try_up(now);
+            }
+            Step::Down { bytes, .. } => {
+                self.down_bytes += bytes;
+                self.down_q.push_back((req, bytes));
+                self.try_down(now);
+            }
+            Step::Linear { layer, .. } => {
+                self.gemm_jobs += 1;
+                self.lin_q.push_back((req, layer));
+                self.try_linear(now);
+            }
+            Step::GcEval { relus, .. } => {
+                let dt = (relus as f64 * self.gc_ns_per_relu).round() as u64;
+                self.push_ev(now + dt, Ev::GcDone(req));
+            }
+        }
+    }
+
+    /// Completion of the current step: move the cursor and dispatch the
+    /// next one.
+    fn step_done(&mut self, req: usize, now: u64) {
+        self.step_idx[req] += 1;
+        self.advance(req, now);
+    }
+
+    fn try_up(&mut self, now: u64) {
+        if self.up_busy {
+            return;
+        }
+        if let Some(&(req, bytes)) = self.up_q.front() {
+            self.up_q.pop_front();
+            self.up_busy = true;
+            self.push_ev(now + self.xmit_ns(bytes), Ev::UpXmitEnd(req));
+        }
+    }
+
+    fn try_down(&mut self, now: u64) {
+        if self.down_busy {
+            return;
+        }
+        if let Some(&(req, bytes)) = self.down_q.front() {
+            self.down_q.pop_front();
+            self.down_busy = true;
+            self.push_ev(now + self.xmit_ns(bytes), Ev::DownXmitEnd(req));
+        }
+    }
+
+    /// When the GEMM unit is free, pull the head job plus up to
+    /// `batch_window - 1` queued jobs *of the same layer* (from anywhere
+    /// in the queue — cross-client aggregation) into one batched
+    /// evaluation.
+    fn try_linear(&mut self, now: u64) {
+        if self.lin_busy || self.lin_q.is_empty() {
+            return;
+        }
+        let layer = self.lin_q[0].1;
+        let mut jobs = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.lin_q.len());
+        while let Some((r, l)) = self.lin_q.pop_front() {
+            if l == layer && jobs.len() < self.cfg.batch_window {
+                jobs.push(r);
+            } else {
+                rest.push_back((r, l));
+            }
+        }
+        self.lin_q = rest;
+        let base = self.lin_ns[layer];
+        let service = base + (jobs.len() as u64 - 1) * (base >> BATCH_FOLLOWER_SHIFT);
+        self.lin_busy = true;
+        self.gemm_batches += 1;
+        self.push_ev(now + service, Ev::LinearDone(jobs));
+    }
+
+    /// The garbler preps requests in arrival order, at most
+    /// `prep_ahead` ahead of the arrivals observed so far.
+    fn try_prep(&mut self, now: u64) {
+        if self.prep_busy
+            || self.next_prep >= self.arrive_ns.len()
+            || self.next_prep >= self.arrived_count + self.cfg.prep_ahead
+        {
+            return;
+        }
+        let req = self.next_prep;
+        self.next_prep += 1;
+        self.prep_busy = true;
+        self.push_ev(now + self.prep_ns, Ev::PrepDone(req));
+    }
+
+    fn maybe_start(&mut self, req: usize, now: u64) {
+        if self.arrived[req] && self.prepped[req] && !self.started[req] {
+            self.started[req] = true;
+            self.advance(req, now);
+        }
+    }
+}
+
+/// Run the serving simulation: `cfg.clients * cfg.requests` private
+/// inferences of `mask` over `info`, multiplexed on one `proto` link
+/// pair. Bit-deterministic for a given `cfg.seed` (see module docs).
+///
+/// Latency composition differs from
+/// [`Trace::latency_secs`](crate::pi::trace::Trace::latency_secs) by
+/// design: the trace folds one full RTT per round,
+/// while the event loop charges serialized transmission plus one-way
+/// propagation (`rtt / 2`) per message and makes queueing delays — the
+/// point of the exercise — emerge from resource contention.
+pub fn serve(
+    info: &ModelInfo,
+    mask: &Mask,
+    proto: &Protocol,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    ensure!(cfg.clients >= 1, "pi.clients must be >= 1");
+    ensure!(cfg.requests >= 1, "pi.requests must be >= 1");
+    ensure!(cfg.batch_window >= 1, "pi.batch_window must be >= 1");
+    ensure!(cfg.prep_ahead >= 1, "pi.prep_ahead must be >= 1");
+    ensure!(
+        cfg.arrival_rate > 0.0 && cfg.arrival_rate.is_finite(),
+        "pi.arrival_rate must be positive"
+    );
+
+    let steps = script(info, mask, proto);
+    let n_layers = info.mask_layers.len();
+    let mut lin_ns = vec![0u64; n_layers];
+    let mut rounds_per_inference = 0usize;
+    let mut last_dir_up: Option<bool> = None;
+    for s in &steps {
+        match *s {
+            Step::Linear { layer, macs } => {
+                lin_ns[layer] = (macs / proto.he_macs_per_sec * 1e9).round() as u64;
+            }
+            Step::Up { .. } => {
+                if last_dir_up != Some(true) {
+                    rounds_per_inference += 1;
+                }
+                last_dir_up = Some(true);
+            }
+            Step::Down { .. } => {
+                if last_dir_up != Some(false) {
+                    rounds_per_inference += 1;
+                }
+                last_dir_up = Some(false);
+            }
+            Step::GcEval { .. } => {}
+        }
+    }
+
+    // Seeded Poisson arrivals: one forked stream per client, sorted into
+    // one global order on (time, client, request) — the request index
+    // space of the whole simulation.
+    let total = cfg.clients * cfg.requests;
+    let mut root = Rng::new(cfg.seed);
+    let mut arrivals: Vec<(u64, usize, usize)> = Vec::with_capacity(total);
+    for c in 0..cfg.clients {
+        let mut r = root.fork(c as u64);
+        let mut t = 0.0f64;
+        for k in 0..cfg.requests {
+            let u = r.f64();
+            t += -det_ln(1.0 - u) / cfg.arrival_rate;
+            arrivals.push(((t * 1e9).round() as u64, c, k));
+        }
+    }
+    arrivals.sort_unstable();
+
+    let hist = mask.layer_histogram(info);
+    let relus = mask.count();
+    let prep_ns =
+        (relus as f64 * proto.gc_secs_per_relu * PREP_GARBLE_FACTOR * 1e9).round() as u64;
+
+    let mut sim = Sim {
+        steps: &steps,
+        lin_ns,
+        prop_ns: (proto.rtt / 2.0 * 1e9).round() as u64,
+        bandwidth: proto.bandwidth,
+        gc_ns_per_relu: proto.gc_secs_per_relu * 1e9,
+        cfg,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        arrive_ns: arrivals.iter().map(|&(t, _, _)| t).collect(),
+        step_idx: vec![0; total],
+        arrived: vec![false; total],
+        prepped: vec![false; total],
+        started: vec![false; total],
+        latencies_ns: Vec::with_capacity(total),
+        up_q: VecDeque::new(),
+        up_busy: false,
+        down_q: VecDeque::new(),
+        down_busy: false,
+        lin_q: VecDeque::new(),
+        lin_busy: false,
+        next_prep: 0,
+        prep_busy: false,
+        prep_ns,
+        arrived_count: 0,
+        events: 0,
+        up_bytes: 0,
+        down_bytes: 0,
+        gemm_jobs: 0,
+        gemm_batches: 0,
+        prep_completed: 0,
+        last_ns: 0,
+    };
+
+    for req in 0..total {
+        let t = sim.arrive_ns[req];
+        sim.push_ev(t, Ev::Arrive(req));
+    }
+    sim.try_prep(0);
+
+    while let Some(Reverse((now, _, ev))) = sim.heap.pop() {
+        sim.events += 1;
+        match ev {
+            Ev::Arrive(req) => {
+                sim.arrived[req] = true;
+                sim.arrived_count += 1;
+                sim.maybe_start(req, now);
+                sim.try_prep(now);
+            }
+            Ev::PrepDone(req) => {
+                sim.prep_busy = false;
+                sim.prep_completed += 1;
+                sim.prepped[req] = true;
+                sim.maybe_start(req, now);
+                sim.try_prep(now);
+            }
+            Ev::UpXmitEnd(req) => {
+                sim.up_busy = false;
+                let t = now + sim.prop_ns;
+                sim.push_ev(t, Ev::UpDelivered(req));
+                sim.try_up(now);
+            }
+            Ev::DownXmitEnd(req) => {
+                sim.down_busy = false;
+                let t = now + sim.prop_ns;
+                sim.push_ev(t, Ev::DownDelivered(req));
+                sim.try_down(now);
+            }
+            Ev::UpDelivered(req) | Ev::DownDelivered(req) | Ev::GcDone(req) => {
+                sim.step_done(req, now);
+            }
+            Ev::LinearDone(jobs) => {
+                sim.lin_busy = false;
+                for req in jobs {
+                    sim.step_done(req, now);
+                }
+                sim.try_linear(now);
+            }
+        }
+    }
+
+    ensure!(
+        sim.latencies_ns.len() == total,
+        "serve event loop stalled: {}/{} inferences completed",
+        sim.latencies_ns.len(),
+        total
+    );
+    let mut sorted = sim.latencies_ns.clone();
+    sorted.sort_unstable();
+    let sum_ns: u64 = sorted.iter().sum();
+    let makespan_secs = sim.last_ns as f64 / 1e9;
+    Ok(ServeReport {
+        protocol: proto.name.to_string(),
+        clients: cfg.clients,
+        requests: cfg.requests,
+        completed: total,
+        relus,
+        active_layers: hist.iter().filter(|&&h| h > 0).count(),
+        rounds_per_inference,
+        online_rounds: rounds_per_inference * total,
+        up_bytes: sim.up_bytes as usize,
+        down_bytes: sim.down_bytes as usize,
+        gemm_jobs: sim.gemm_jobs,
+        gemm_batches: sim.gemm_batches,
+        prep_completed: sim.prep_completed,
+        events: sim.events,
+        p50_ms: percentile_ns(&sorted, 50) as f64 / 1e6,
+        p95_ms: percentile_ns(&sorted, 95) as f64 / 1e6,
+        p99_ms: percentile_ns(&sorted, 99) as f64 / 1e6,
+        mean_ms: sum_ns as f64 / sorted.len() as f64 / 1e6,
+        makespan_secs,
+        throughput_rps: total as f64 / makespan_secs.max(1e-12),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::protocol::{LAN, WAN};
+    use super::super::trace::simulate;
+    use super::*;
+    use crate::runtime::manifest::PackEntry;
+
+    fn fake_info() -> ModelInfo {
+        ModelInfo {
+            key: "m".into(),
+            backbone: "resnet".into(),
+            num_classes: 10,
+            image_size: 8,
+            channels: 3,
+            poly: false,
+            param_size: 1,
+            mask_size: 192,
+            mask_layers: vec![
+                PackEntry { name: "a".into(), shape: vec![2, 8, 8], offset: 0, size: 128 },
+                PackEntry { name: "b".into(), shape: vec![4, 4, 4], offset: 128, size: 64 },
+            ],
+            param_entries: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            clients: 5,
+            requests: 4,
+            arrival_rate: 50.0,
+            batch_window: 4,
+            prep_ahead: 3,
+            seed: 0x5EED,
+        }
+    }
+
+    #[test]
+    fn det_ln_matches_std_ln() {
+        for x in [1e-9, 0.001, 0.3, 0.5, 0.9999, 1.0, 1.5, 2.0, 7.0, 1e6] {
+            let (a, b) = (det_ln(x), f64::ln(x));
+            assert!((a - b).abs() <= 1e-12 * b.abs().max(1.0), "ln({x}): {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let v: Vec<u64> = (1..=10).collect();
+        assert_eq!(percentile_ns(&v, 50), 5);
+        assert_eq!(percentile_ns(&v, 95), 10);
+        assert_eq!(percentile_ns(&v, 99), 10);
+        assert_eq!(percentile_ns(&[42], 50), 42);
+        assert_eq!(percentile_ns(&[42], 99), 42);
+    }
+
+    #[test]
+    fn serve_is_bit_deterministic() {
+        let info = fake_info();
+        let m = Mask::full(192);
+        let a = serve(&info, &m, &WAN, &cfg()).unwrap();
+        let b = serve(&info, &m, &WAN, &cfg()).unwrap();
+        assert_eq!(a, b);
+        let mut other = cfg();
+        other.seed ^= 1;
+        let c = serve(&info, &m, &WAN, &other).unwrap();
+        assert_ne!(a.makespan_secs, c.makespan_secs, "different seeds must shuffle arrivals");
+        assert_eq!(a.completed, c.completed);
+        assert_eq!((a.up_bytes, a.down_bytes), (c.up_bytes, c.down_bytes));
+    }
+
+    #[test]
+    fn serve_conserves_trace_bytes_and_rounds() {
+        let info = fake_info();
+        let mut m = Mask::full(192);
+        m.apply_removal(&(0..100).collect::<Vec<_>>()).unwrap();
+        let tr = simulate(&info, &m, &LAN);
+        let r = serve(&info, &m, &LAN, &cfg()).unwrap();
+        assert_eq!(r.completed, 20);
+        assert_eq!(r.up_bytes, r.completed * tr.up_bytes() as usize);
+        assert_eq!(r.down_bytes, r.completed * tr.down_bytes() as usize);
+        assert_eq!(r.rounds_per_inference, tr.rounds);
+        assert_eq!(r.online_rounds, tr.rounds * r.completed);
+        assert_eq!(r.prep_completed, r.completed);
+    }
+
+    #[test]
+    fn batching_amortizes_gemm_rounds() {
+        let info = fake_info();
+        let m = Mask::full(192);
+        let mut c1 = cfg();
+        c1.batch_window = 1;
+        let unbatched = serve(&info, &m, &LAN, &c1).unwrap();
+        assert_eq!(unbatched.gemm_batches, unbatched.gemm_jobs, "window 1 cannot batch");
+        let batched = serve(&info, &m, &LAN, &cfg()).unwrap();
+        assert_eq!(batched.gemm_jobs, unbatched.gemm_jobs);
+        assert!(batched.gemm_batches <= batched.gemm_jobs);
+    }
+
+    #[test]
+    fn fully_linearized_network_serves_in_two_rounds() {
+        let info = fake_info();
+        let mut m = Mask::full(192);
+        m.apply_removal(&(0..192).collect::<Vec<_>>()).unwrap();
+        let r = serve(&info, &m, &LAN, &cfg()).unwrap();
+        assert_eq!(r.relus, 0);
+        assert_eq!(r.active_layers, 0);
+        assert_eq!(r.rounds_per_inference, 2, "only input up + logits down remain");
+        assert!(r.p99_ms > 0.0);
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_knobs() {
+        let info = fake_info();
+        let m = Mask::full(192);
+        let patches: [fn(&mut ServeConfig); 5] = [
+            |c| c.clients = 0,
+            |c| c.requests = 0,
+            |c| c.batch_window = 0,
+            |c| c.prep_ahead = 0,
+            |c| c.arrival_rate = 0.0,
+        ];
+        for patch in patches {
+            let mut c = cfg();
+            patch(&mut c);
+            assert!(serve(&info, &m, &LAN, &c).is_err());
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_through_serde() {
+        let info = fake_info();
+        let r = serve(&info, &Mask::full(192), &WAN, &cfg()).unwrap();
+        let text = crate::util::serde::to_string_pretty(&r);
+        let back: ServeReport = crate::util::serde::from_str(&text).unwrap();
+        assert_eq!(back, r);
+    }
+}

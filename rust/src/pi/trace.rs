@@ -1,0 +1,343 @@
+//! Protocol-level Private-Inference trace (DELPHI-style hybrid).
+//!
+//! The analytic model in [`crate::pi::analytic`] prices a whole inference
+//! with closed-form constants. This module instead *walks the protocol*:
+//! it simulates the online phase of a DELPHI-like two-party hybrid (client
+//! holds the input, server holds the weights) layer by layer over a real
+//! (model, mask) pair, emitting the actual message sequence — sizes,
+//! directions, rounds — so that schedule-level effects are visible:
+//! a fully-linearized layer drops its GC round entirely, masked layers
+//! shrink their GC payload proportionally, and the round count depends on
+//! which layers still hold ReLUs (exactly what BCD changes).
+//!
+//! The walk itself is factored out as [`script`]: the ordered [`Step`]
+//! sequence of one inference. [`simulate`] folds the script into a
+//! [`Trace`] (this module's historical output), and the serving simulator
+//! ([`crate::pi::serve`]) replays the *same* script per concurrent
+//! request — which is what makes the per-direction byte totals of the two
+//! conserved by construction (the `prop_invariants` contract).
+//!
+//! This is a *communication/cost* simulation, not a cryptographic
+//! implementation: payload sizes follow the published DELPHI/GAZELLE
+//! constants, and no secret data is involved.
+
+use super::protocol::Protocol;
+use super::{CostModel, InferenceCost};
+use crate::model::Mask;
+use crate::runtime::manifest::ModelInfo;
+
+/// Direction of one simulated message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    ClientToServer,
+    ServerToClient,
+}
+
+/// One online-phase message.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub layer: usize,
+    pub dir: Dir,
+    pub bytes: u64,
+    pub what: &'static str,
+}
+
+/// Full online-phase trace of one private inference.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub messages: Vec<Message>,
+    /// Communication rounds (direction changes / layer barriers).
+    pub rounds: usize,
+    /// Total garbled-circuit payload [bytes].
+    pub gc_bytes: u64,
+    /// Total share-transfer payload [bytes].
+    pub share_bytes: u64,
+    /// Local compute charged to GC evaluation [s].
+    pub gc_compute_secs: f64,
+    /// Local compute charged to linear layers under shares [s].
+    pub linear_compute_secs: f64,
+}
+
+impl Trace {
+    pub fn total_bytes(&self) -> u64 {
+        self.gc_bytes + self.share_bytes
+    }
+
+    /// Client→server payload total [bytes].
+    pub fn up_bytes(&self) -> u64 {
+        self.dir_bytes(Dir::ClientToServer)
+    }
+
+    /// Server→client payload total [bytes].
+    pub fn down_bytes(&self) -> u64 {
+        self.dir_bytes(Dir::ServerToClient)
+    }
+
+    fn dir_bytes(&self, dir: Dir) -> u64 {
+        self.messages.iter().filter(|m| m.dir == dir).map(|m| m.bytes).sum()
+    }
+
+    /// Rounds attributable to GC exchanges: total rounds minus the two
+    /// endpoint transfers (input share up, logit share down). A fully
+    /// linearized network therefore reports zero ReLU-phase rounds.
+    pub fn relu_rounds(&self) -> usize {
+        self.rounds.saturating_sub(2)
+    }
+
+    /// End-to-end online latency under a network model: serialized
+    /// transfers + per-round RTTs + local compute.
+    pub fn latency_secs(&self, proto: &Protocol) -> f64 {
+        self.total_bytes() as f64 / proto.bandwidth
+            + self.rounds as f64 * proto.rtt
+            + self.gc_compute_secs
+            + self.linear_compute_secs
+    }
+
+    fn push(&mut self, m: Message) {
+        match m.what {
+            "garbled ReLU tables" => self.gc_bytes += m.bytes,
+            _ => self.share_bytes += m.bytes,
+        }
+        // A round per direction flip (the first message opens round 1).
+        if self.messages.last().map(|prev| prev.dir != m.dir).unwrap_or(true) {
+            self.rounds += 1;
+        }
+        self.messages.push(m);
+    }
+}
+
+/// Per-element share width (DELPHI uses a 32-bit prime field).
+pub const SHARE_BYTES: u64 = 4;
+
+/// One step of the online phase, in protocol order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Step {
+    /// Client→server transfer.
+    Up { layer: usize, bytes: u64, what: &'static str },
+    /// Server→client transfer.
+    Down { layer: usize, bytes: u64, what: &'static str },
+    /// Server-side linear layer under shares — local compute, and the
+    /// unit the serving simulator batches across clients.
+    Linear { layer: usize, macs: f64 },
+    /// Client-side GC evaluation of `relus` surviving ReLUs.
+    GcEval { layer: usize, relus: u64 },
+}
+
+/// The ordered step sequence of one private inference (DELPHI online):
+///
+///   1. client sends its masked input share (once),
+///   2. per linear layer: server evaluates under additive shares — local
+///      compute only (preprocessing already exchanged the Beaver/HE state),
+///   3. per activation layer with k > 0 ReLUs: one GC exchange —
+///      server→client garbled tables for k ReLUs, client-side GC
+///      evaluation, client→server the re-shared result (k field
+///      elements). Linearized slots (identity or polynomial) stay inside
+///      the share arithmetic: zero communication.
+///   4. server sends the logit share back (once).
+///
+/// Both [`simulate`] and [`crate::pi::serve::serve`] replay this exact
+/// sequence, so their byte/round accounting cannot drift apart.
+pub fn script(info: &ModelInfo, mask: &Mask, proto: &Protocol) -> Vec<Step> {
+    let hist = mask.layer_histogram(info);
+    let mut steps = Vec::with_capacity(2 + 4 * info.mask_layers.len());
+
+    let input_elems = (info.channels * info.image_size * info.image_size) as u64;
+    steps.push(Step::Up { layer: 0, bytes: input_elems * SHARE_BYTES, what: "input share" });
+
+    let mut walk = super::analytic::MacWalk::new(info);
+    for (l, entry) in info.mask_layers.iter().enumerate() {
+        steps.push(Step::Linear { layer: l, macs: walk.layer(&entry.shape) });
+        let k = hist[l] as u64;
+        if k > 0 {
+            steps.push(Step::Down {
+                layer: l,
+                bytes: k * proto.gc_bytes_per_relu as u64,
+                what: "garbled ReLU tables",
+            });
+            steps.push(Step::GcEval { layer: l, relus: k });
+            steps.push(Step::Up {
+                layer: l,
+                bytes: k * SHARE_BYTES,
+                what: "re-shared activations",
+            });
+        }
+    }
+
+    steps.push(Step::Down {
+        layer: info.mask_layers.len(),
+        bytes: info.num_classes as u64 * SHARE_BYTES,
+        what: "logit share",
+    });
+    steps
+}
+
+/// Simulate the online phase for `mask` over `info`'s layer sequence by
+/// folding [`script`] into a [`Trace`].
+pub fn simulate(info: &ModelInfo, mask: &Mask, proto: &Protocol) -> Trace {
+    let mut tr = Trace::default();
+    for step in script(info, mask, proto) {
+        match step {
+            Step::Up { layer, bytes, what } => {
+                tr.push(Message { layer, dir: Dir::ClientToServer, bytes, what })
+            }
+            Step::Down { layer, bytes, what } => {
+                tr.push(Message { layer, dir: Dir::ServerToClient, bytes, what })
+            }
+            Step::Linear { macs, .. } => tr.linear_compute_secs += macs / proto.he_macs_per_sec,
+            Step::GcEval { relus, .. } => {
+                tr.gc_compute_secs += relus as f64 * proto.gc_secs_per_relu
+            }
+        }
+    }
+    tr
+}
+
+/// Side-by-side of the analytic estimate and the simulated trace — used by
+/// tests and the `picost --simulate` CLI to keep the two models honest.
+pub fn compare(info: &ModelInfo, mask: &Mask, proto: &Protocol) -> (f64, f64) {
+    let analytic = super::analytic::estimate_state(info, mask, proto).total_secs;
+    let simulated = simulate(info, mask, proto).latency_secs(proto);
+    (analytic, simulated)
+}
+
+/// The message-walk model as a [`CostModel`].
+pub struct TraceSim;
+
+impl CostModel for TraceSim {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn price(&self, info: &ModelInfo, mask: &Mask, proto: &Protocol) -> InferenceCost {
+        let tr = simulate(info, mask, proto);
+        let hist = mask.layer_histogram(info);
+        InferenceCost {
+            model: self.name(),
+            protocol: proto.name,
+            relus: mask.count(),
+            active_layers: hist.iter().filter(|&&h| h > 0).count(),
+            rounds: tr.rounds,
+            up_bytes: tr.up_bytes(),
+            down_bytes: tr.down_bytes(),
+            latency_secs: tr.latency_secs(proto),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::protocol::{LAN, WAN};
+    use super::super::Analytic;
+    use super::*;
+    use crate::runtime::manifest::PackEntry;
+
+    fn fake_info() -> ModelInfo {
+        ModelInfo {
+            key: "m".into(),
+            backbone: "resnet".into(),
+            num_classes: 10,
+            image_size: 8,
+            channels: 3,
+            poly: false,
+            param_size: 1,
+            mask_size: 192,
+            mask_layers: vec![
+                PackEntry { name: "a".into(), shape: vec![2, 8, 8], offset: 0, size: 128 },
+                PackEntry { name: "b".into(), shape: vec![4, 4, 4], offset: 128, size: 64 },
+            ],
+            param_entries: vec![],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn full_mask_trace_structure() {
+        let info = fake_info();
+        let tr = simulate(&info, &Mask::full(192), &LAN);
+        // input + 2 x (tables + reshare) + logits = 6 messages.
+        assert_eq!(tr.messages.len(), 6);
+        assert_eq!(tr.gc_bytes, 192 * 2048);
+        assert!(tr.rounds >= 4);
+        assert_eq!(tr.relu_rounds(), tr.rounds - 2);
+        assert!(tr.latency_secs(&LAN) > 0.0);
+    }
+
+    #[test]
+    fn linearized_layer_drops_its_round() {
+        let info = fake_info();
+        let full = simulate(&info, &Mask::full(192), &LAN);
+        let mut m = Mask::full(192);
+        m.remove_layer(&info, 1);
+        let cut = simulate(&info, &m, &LAN);
+        assert_eq!(cut.messages.len(), full.messages.len() - 2);
+        assert!(cut.rounds < full.rounds);
+        assert_eq!(cut.gc_bytes, 128 * 2048);
+        // Linear compute unchanged: convs still run under shares.
+        assert!((cut.linear_compute_secs - full.linear_compute_secs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gc_bytes_proportional_to_budget() {
+        let info = fake_info();
+        let mut m = Mask::full(192);
+        let drop: Vec<usize> = (0..96).collect();
+        m.apply_removal(&drop).unwrap();
+        let tr = simulate(&info, &m, &WAN);
+        assert_eq!(tr.gc_bytes, 96 * 2048);
+    }
+
+    #[test]
+    fn simulation_agrees_with_analytic_model() {
+        // Round accounting is aligned between the two models (2 flips per
+        // GC layer + 2 endpoint transfers); residual differences are the
+        // share-transfer bytes the analytic model folds into constants.
+        let info = fake_info();
+        for proto in [&LAN, &WAN] {
+            for keep in [192usize, 100, 10] {
+                let mut m = Mask::full(192);
+                if keep < 192 {
+                    let drop: Vec<usize> = (0..192 - keep).collect();
+                    m.apply_removal(&drop).unwrap();
+                }
+                let (a, s) = compare(&info, &m, proto);
+                let ratio = s / a;
+                assert!(
+                    (0.3..=3.0).contains(&ratio),
+                    "{}@{keep}: analytic {a:.6}s vs sim {s:.6}s",
+                    proto.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wan_latency_dominated_by_gc_traffic() {
+        let info = fake_info();
+        let tr = simulate(&info, &Mask::full(192), &WAN);
+        let gc_time = tr.gc_bytes as f64 / WAN.bandwidth;
+        assert!(gc_time > tr.share_bytes as f64 / WAN.bandwidth);
+    }
+
+    #[test]
+    fn cost_models_agree_on_bytes_and_rounds() {
+        // The CostModel contract: analytic and trace agree exactly on the
+        // count-valued fields; only latency composition differs.
+        let info = fake_info();
+        for keep in [192usize, 128, 64, 1] {
+            let mut m = Mask::full(192);
+            if keep < 192 {
+                let drop: Vec<usize> = (0..192 - keep).collect();
+                m.apply_removal(&drop).unwrap();
+            }
+            for proto in [&LAN, &WAN] {
+                let a = Analytic.price(&info, &m, proto);
+                let t = TraceSim.price(&info, &m, proto);
+                assert_eq!(a.relus, t.relus);
+                assert_eq!(a.active_layers, t.active_layers);
+                assert_eq!(a.rounds, t.rounds);
+                assert_eq!(a.up_bytes, t.up_bytes);
+                assert_eq!(a.down_bytes, t.down_bytes);
+            }
+        }
+    }
+}

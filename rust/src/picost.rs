@@ -1,203 +1,58 @@
-//! Private-Inference cost model — why ReLU budgets matter at all.
+//! Deprecated shim over [`crate::pi`] (kept so pre-PR-9 callers compile).
 //!
-//! The paper's motivation (after DELPHI, GAZELLE): in hybrid HE/MPC
-//! protocols, *linear* layers run under additively-homomorphic encryption
-//! or pre-shared Beaver triples, while each *ReLU* needs a garbled-circuit
-//! (GC) evaluation costing kilobytes of online communication. ReLU count
-//! therefore dominates online latency. This module turns a (model, mask)
-//! pair into estimated online bytes/latency so experiments can report the
-//! PI-latency implication of every budget.
-//!
-//! Constants follow the DELPHI paper's reported costs (~2 KB and ~88 us
-//! of compute per ReLU online with garbled circuits); they are estimates
-//! and clearly labelled as such in reports.
-//!
-//! # Where the constants come from
-//!
-//! - `gc_bytes_per_relu = 2048`: DELPHI (Mishra et al., USENIX Security
-//!   2020) reports ~2 KB of online garbled-circuit communication per ReLU;
-//!   the PI baselines reproduced here budget against the same figure —
-//!   see DeepReDuce (Jha et al. 2021, <https://arxiv.org/pdf/2103.01396>)
-//!   and SNL (Cho et al. 2022, <https://arxiv.org/pdf/2202.02340>), both
-//!   abstracted in PAPERS.md, which motivate ReLU count as *the* PI cost
-//!   driver.
-//! - `gc_secs_per_relu = 88e-6`: DELPHI's reported per-ReLU online GC
-//!   compute on commodity CPUs.
-//! - `bandwidth` / `rtt`: 1 Gbit/s + 0.5 ms ([`lan`]) and 100 Mbit/s +
-//!   40 ms ([`wan`]) — the two deployment points the PI literature
-//!   conventionally reports (e.g. SENet, Kundu et al. 2023,
-//!   <https://arxiv.org/pdf/2301.09254>).
-//! - `he_macs_per_sec = 5e8`: order-of-magnitude additively-homomorphic
-//!   MAC throughput for the linear layers; linear cost is reported for
-//!   context only and never dominates at the budgets studied.
-//!
-//! Each masked layer costs one HE↔GC share-translation round trip, which
-//! is why `round_secs` scales with *active* layer count, not ReLU count.
+//! The closed-form PI cost model lives in [`crate::pi::analytic`] now,
+//! and the bare `lan()`/`wan()` constructors became the named
+//! [`crate::pi::protocol`] registry (`pi::find("lan")`, `--proto lan`,
+//! the `pi.protocol` config key). This module re-exports the types at
+//! their old paths and wraps the old free functions with deprecation
+//! notes; new code should import from `crate::pi`.
 
+pub use crate::pi::{CostReport, Protocol};
+
+use crate::model::Mask;
 use crate::runtime::manifest::ModelInfo;
 
-/// Network + crypto cost constants for one deployment scenario.
-#[derive(Clone, Debug)]
-pub struct Protocol {
-    pub name: &'static str,
-    /// Online GC bytes exchanged per ReLU evaluation.
-    pub gc_bytes_per_relu: f64,
-    /// Local GC compute time per ReLU [s].
-    pub gc_secs_per_relu: f64,
-    /// Link bandwidth [bytes/s].
-    pub bandwidth: f64,
-    /// Round-trip time [s]; each masked layer costs one round of
-    /// share-translation between the HE and GC domains.
-    pub rtt: f64,
-    /// Homomorphic MAC throughput for linear layers [MACs/s].
-    pub he_macs_per_sec: f64,
-}
-
-/// 1 Gbit/s, 0.5 ms RTT — same-datacenter deployment.
+#[deprecated(note = "use crate::pi::LAN or crate::pi::find(\"lan\")")]
 pub fn lan() -> Protocol {
-    Protocol {
-        name: "LAN",
-        gc_bytes_per_relu: 2048.0,
-        gc_secs_per_relu: 88e-6,
-        bandwidth: 125e6,
-        rtt: 0.5e-3,
-        he_macs_per_sec: 5e8,
-    }
+    crate::pi::LAN.clone()
 }
 
-/// 100 Mbit/s, 40 ms RTT — client-to-cloud deployment.
+#[deprecated(note = "use crate::pi::WAN or crate::pi::find(\"wan\")")]
 pub fn wan() -> Protocol {
-    Protocol {
-        name: "WAN",
-        gc_bytes_per_relu: 2048.0,
-        gc_secs_per_relu: 88e-6,
-        bandwidth: 12.5e6,
-        rtt: 40e-3,
-        he_macs_per_sec: 5e8,
-    }
+    crate::pi::WAN.clone()
 }
 
-/// Estimated online cost of one private inference.
-#[derive(Clone, Debug)]
-pub struct CostReport {
-    pub protocol: &'static str,
-    pub relus: usize,
-    pub macs: f64,
-    pub online_bytes: f64,
-    /// Communication + GC compute for the non-linear layers [s].
-    pub relu_secs: f64,
-    /// HE evaluation of the linear layers [s].
-    pub linear_secs: f64,
-    /// Round-trip latency across active masked layers [s].
-    pub round_secs: f64,
-    pub total_secs: f64,
-}
-
-/// Estimate multiply-accumulate count of the network from the manifest's
-/// mask-layer table: each activation layer `[C, H, W]` is preceded by a
-/// 3x3 conv from the previous layer's channel count (stem: input channels),
-/// plus a final dense head. An analytic estimate — good to ~2x, which is
-/// enough for relative PI-latency comparisons.
+#[deprecated(note = "use crate::pi::estimate_macs")]
 pub fn estimate_macs(info: &ModelInfo) -> f64 {
-    let mut macs = 0.0f64;
-    let mut prev_c = info.channels as f64;
-    for e in &info.mask_layers {
-        let (c, h, w) = (e.shape[0] as f64, e.shape[1] as f64, e.shape[2] as f64);
-        macs += c * h * w * prev_c * 9.0;
-        prev_c = c;
-    }
-    macs += prev_c * info.num_classes as f64; // head
-    macs
+    crate::pi::estimate_macs(info)
 }
 
-/// Online-phase cost for a network with `relus` active ReLUs. Each mask
-/// layer that still holds a ReLU costs one GC exchange = two direction
-/// flips (tables down, re-shares up); the input/logit share transfers add
-/// two endpoint rounds. This matches [`crate::protosim`]'s message walk.
-pub fn estimate(info: &ModelInfo, relus: usize, active_layers: usize, proto: &Protocol) -> CostReport {
-    let macs = estimate_macs(info);
-    let online_bytes = relus as f64 * proto.gc_bytes_per_relu;
-    let relu_secs = online_bytes / proto.bandwidth + relus as f64 * proto.gc_secs_per_relu;
-    let linear_secs = macs / proto.he_macs_per_sec;
-    let round_secs = (2 * active_layers + 2) as f64 * proto.rtt;
-    CostReport {
-        protocol: proto.name,
-        relus,
-        macs,
-        online_bytes,
-        relu_secs,
-        linear_secs,
-        round_secs,
-        total_secs: relu_secs + linear_secs + round_secs,
-    }
-}
-
-/// Convenience over a model state: counts active layers from the mask.
-pub fn estimate_state(
+#[deprecated(note = "use crate::pi::estimate")]
+pub fn estimate(
     info: &ModelInfo,
-    mask: &crate::model::Mask,
+    relus: usize,
+    active_layers: usize,
     proto: &Protocol,
 ) -> CostReport {
-    let hist = mask.layer_histogram(info);
-    let active = hist.iter().filter(|&&h| h > 0).count();
-    estimate(info, mask.count(), active, proto)
+    crate::pi::estimate(info, relus, active_layers, proto)
+}
+
+#[deprecated(note = "use crate::pi::estimate_state (or the pi::CostModel trait)")]
+pub fn estimate_state(info: &ModelInfo, mask: &Mask, proto: &Protocol) -> CostReport {
+    crate::pi::estimate_state(info, mask, proto)
 }
 
 #[cfg(test)]
 mod tests {
+    // The PR 9 compatibility contract: every pre-PR-9 call shape still
+    // compiles and routes to the same numbers as the pi:: registry.
+    #![allow(deprecated)]
     use super::*;
-    use crate::runtime::manifest::PackEntry;
-
-    fn fake_info() -> ModelInfo {
-        ModelInfo {
-            key: "m".into(),
-            backbone: "resnet".into(),
-            num_classes: 10,
-            image_size: 8,
-            channels: 3,
-            poly: false,
-            param_size: 1,
-            mask_size: 128 + 64,
-            mask_layers: vec![
-                PackEntry { name: "a".into(), shape: vec![2, 8, 8], offset: 0, size: 128 },
-                PackEntry { name: "b".into(), shape: vec![4, 4, 4], offset: 128, size: 64 },
-            ],
-            param_entries: vec![],
-            artifacts: Default::default(),
-        }
-    }
 
     #[test]
-    fn macs_analytic() {
-        // conv1: 2*8*8*3*9 = 3456 ; conv2: 4*4*4*2*9 = 1152 ; head 4*10=40.
-        assert_eq!(estimate_macs(&fake_info()), 3456.0 + 1152.0 + 40.0);
-    }
-
-    #[test]
-    fn fewer_relus_cheaper() {
-        let info = fake_info();
-        let p = lan();
-        let full = estimate(&info, 192, 2, &p);
-        let half = estimate(&info, 96, 2, &p);
-        assert!(half.total_secs < full.total_secs);
-        assert_eq!(half.linear_secs, full.linear_secs, "linear part unaffected");
-    }
-
-    #[test]
-    fn wan_dominated_by_comms() {
-        let info = fake_info();
-        let r = estimate(&info, 10_000, 2, &wan());
-        assert!(r.relu_secs > r.linear_secs);
-    }
-
-    #[test]
-    fn empty_layers_drop_rounds() {
-        let info = fake_info();
-        let mut m = crate::model::Mask::full(192);
-        m.remove_layer(&info, 1);
-        let r = estimate_state(&info, &m, &lan());
-        assert_eq!(r.relus, 128);
-        let full = estimate_state(&info, &crate::model::Mask::full(192), &lan());
-        assert!(r.round_secs < full.round_secs);
+    fn old_paths_still_compile_and_agree() {
+        assert_eq!(lan(), crate::pi::LAN);
+        assert_eq!(wan(), crate::pi::WAN);
+        let _: Protocol = lan();
     }
 }

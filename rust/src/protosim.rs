@@ -1,173 +1,40 @@
-//! Protocol-level Private-Inference simulator (DELPHI-style hybrid).
+//! Deprecated shim over [`crate::pi::trace`] (kept so pre-PR-9 callers
+//! compile).
 //!
-//! The analytic model in [`crate::picost`] prices a whole inference with
-//! closed-form constants. This module instead *walks the protocol*: it
-//! simulates the online phase of a DELPHI-like two-party hybrid (client
-//! holds the input, server holds the weights) layer by layer over a real
-//! (model, mask) pair, emitting the actual message sequence — sizes,
-//! directions, rounds — so that schedule-level effects are visible:
-//! a fully-linearized layer drops its GC round entirely, masked layers
-//! shrink their GC payload proportionally, and the round count depends on
-//! which layers still hold ReLUs (exactly what BCD changes).
-//!
-//! This is a *communication/cost* simulation, not a cryptographic
-//! implementation: payload sizes follow the published DELPHI/GAZELLE
-//! constants, and no secret data is involved.
+//! The DELPHI-style protocol walk lives in [`crate::pi::trace`] now,
+//! where it shares its step [`script`](crate::pi::trace::script) with
+//! the fleet-scale serving simulator ([`crate::pi::serve`]). This module
+//! re-exports the types at their old paths and wraps the old free
+//! functions with deprecation notes; new code should import from
+//! `crate::pi`.
+
+pub use crate::pi::trace::{Dir, Message, Trace};
 
 use crate::model::Mask;
-use crate::picost::Protocol;
+use crate::pi::Protocol;
 use crate::runtime::manifest::ModelInfo;
 
-/// Direction of one simulated message.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Dir {
-    ClientToServer,
-    ServerToClient,
-}
-
-/// One online-phase message.
-#[derive(Clone, Debug)]
-pub struct Message {
-    pub layer: usize,
-    pub dir: Dir,
-    pub bytes: u64,
-    pub what: &'static str,
-}
-
-/// Full online-phase trace of one private inference.
-#[derive(Clone, Debug, Default)]
-pub struct Trace {
-    pub messages: Vec<Message>,
-    /// Communication rounds (direction changes / layer barriers).
-    pub rounds: usize,
-    /// Total garbled-circuit payload [bytes].
-    pub gc_bytes: u64,
-    /// Total share-transfer payload [bytes].
-    pub share_bytes: u64,
-    /// Local compute charged to GC evaluation [s].
-    pub gc_compute_secs: f64,
-    /// Local compute charged to linear layers under shares [s].
-    pub linear_compute_secs: f64,
-}
-
-impl Trace {
-    pub fn total_bytes(&self) -> u64 {
-        self.gc_bytes + self.share_bytes
-    }
-
-    /// End-to-end online latency under a network model: serialized
-    /// transfers + per-round RTTs + local compute.
-    pub fn latency_secs(&self, proto: &Protocol) -> f64 {
-        self.total_bytes() as f64 / proto.bandwidth
-            + self.rounds as f64 * proto.rtt
-            + self.gc_compute_secs
-            + self.linear_compute_secs
-    }
-}
-
-/// Per-element share width (DELPHI uses a 32-bit prime field).
-const SHARE_BYTES: u64 = 4;
-
-/// Simulate the online phase for `mask` over `info`'s layer sequence.
-///
-/// Layer walk (DELPHI online):
-///   1. client sends its masked input share (once),
-///   2. per linear layer: server evaluates under additive shares — local
-///      compute only (preprocessing already exchanged the Beaver/HE state),
-///   3. per activation layer with k > 0 ReLUs: one GC exchange —
-///      server→client garbled tables for k ReLUs, client→server the
-///      re-shared result (k field elements). Linearized slots (identity or
-///      polynomial) stay inside the share arithmetic: zero communication.
-///   4. server sends the logit share back (once).
+#[deprecated(note = "use crate::pi::simulate")]
 pub fn simulate(info: &ModelInfo, mask: &Mask, proto: &Protocol) -> Trace {
-    let mut tr = Trace::default();
-    let hist = mask.layer_histogram(info);
-
-    // 1. input share upload.
-    let input_elems = (info.channels * info.image_size * info.image_size) as u64;
-    tr.push(Message {
-        layer: 0,
-        dir: Dir::ClientToServer,
-        bytes: input_elems * SHARE_BYTES,
-        what: "input share",
-    });
-
-    let mut prev_c = info.channels as f64;
-    for (l, entry) in info.mask_layers.iter().enumerate() {
-        // 2. the conv feeding this activation, under shares (local).
-        let (c, h, w) = (
-            entry.shape[0] as f64,
-            entry.shape[1] as f64,
-            entry.shape[2] as f64,
-        );
-        let macs = c * h * w * prev_c * 9.0;
-        tr.linear_compute_secs += macs / proto.he_macs_per_sec;
-        prev_c = c;
-
-        // 3. GC exchange for the surviving ReLUs of this layer.
-        let k = hist[l] as u64;
-        if k > 0 {
-            tr.push(Message {
-                layer: l,
-                dir: Dir::ServerToClient,
-                bytes: k * proto.gc_bytes_per_relu as u64,
-                what: "garbled ReLU tables",
-            });
-            tr.push(Message {
-                layer: l,
-                dir: Dir::ClientToServer,
-                bytes: k * SHARE_BYTES,
-                what: "re-shared activations",
-            });
-            tr.gc_compute_secs += k as f64 * proto.gc_secs_per_relu;
-        }
-    }
-
-    // 4. logit share download.
-    tr.push(Message {
-        layer: info.mask_layers.len(),
-        dir: Dir::ServerToClient,
-        bytes: info.num_classes as u64 * SHARE_BYTES,
-        what: "logit share",
-    });
-    tr
+    crate::pi::simulate(info, mask, proto)
 }
 
-impl Trace {
-    fn push(&mut self, m: Message) {
-        match m.what {
-            "garbled ReLU tables" => self.gc_bytes += m.bytes,
-            _ => self.share_bytes += m.bytes,
-        }
-        // A round per direction flip (the first message opens round 1).
-        if self
-            .messages
-            .last()
-            .map(|prev| prev.dir != m.dir)
-            .unwrap_or(true)
-        {
-            self.rounds += 1;
-        }
-        self.messages.push(m);
-    }
-}
-
-/// Side-by-side of the analytic estimate and the simulated trace — used by
-/// tests and the `picost --simulate` CLI to keep the two models honest.
+#[deprecated(note = "use crate::pi::compare (or the pi::CostModel trait)")]
 pub fn compare(info: &ModelInfo, mask: &Mask, proto: &Protocol) -> (f64, f64) {
-    let analytic = crate::picost::estimate_state(info, mask, proto).total_secs;
-    let simulated = simulate(info, mask, proto).latency_secs(proto);
-    (analytic, simulated)
+    crate::pi::compare(info, mask, proto)
 }
 
 #[cfg(test)]
 mod tests {
+    // The PR 9 compatibility contract: every pre-PR-9 call shape still
+    // compiles and routes to the pi::trace implementation.
+    #![allow(deprecated)]
     use super::*;
-    use crate::picost::{lan, wan};
     use crate::runtime::manifest::PackEntry;
 
-    fn fake_info() -> ModelInfo {
-        ModelInfo {
+    #[test]
+    fn old_paths_still_compile_and_agree() {
+        let info = ModelInfo {
             key: "m".into(),
             backbone: "resnet".into(),
             num_classes: 10,
@@ -175,80 +42,20 @@ mod tests {
             channels: 3,
             poly: false,
             param_size: 1,
-            mask_size: 192,
-            mask_layers: vec![
-                PackEntry { name: "a".into(), shape: vec![2, 8, 8], offset: 0, size: 128 },
-                PackEntry { name: "b".into(), shape: vec![4, 4, 4], offset: 128, size: 64 },
-            ],
+            mask_size: 128,
+            mask_layers: vec![PackEntry {
+                name: "a".into(),
+                shape: vec![2, 8, 8],
+                offset: 0,
+                size: 128,
+            }],
             param_entries: vec![],
             artifacts: Default::default(),
-        }
-    }
-
-    #[test]
-    fn full_mask_trace_structure() {
-        let info = fake_info();
-        let tr = simulate(&info, &Mask::full(192), &lan());
-        // input + 2 x (tables + reshare) + logits = 6 messages.
-        assert_eq!(tr.messages.len(), 6);
-        assert_eq!(tr.gc_bytes, 192 * 2048);
-        assert!(tr.rounds >= 4);
-        assert!(tr.latency_secs(&lan()) > 0.0);
-    }
-
-    #[test]
-    fn linearized_layer_drops_its_round() {
-        let info = fake_info();
-        let full = simulate(&info, &Mask::full(192), &lan());
-        let mut m = Mask::full(192);
-        m.remove_layer(&info, 1);
-        let cut = simulate(&info, &m, &lan());
-        assert_eq!(cut.messages.len(), full.messages.len() - 2);
-        assert!(cut.rounds < full.rounds);
-        assert_eq!(cut.gc_bytes, 128 * 2048);
-        // Linear compute unchanged: convs still run under shares.
-        assert!((cut.linear_compute_secs - full.linear_compute_secs).abs() < 1e-12);
-    }
-
-    #[test]
-    fn gc_bytes_proportional_to_budget() {
-        let info = fake_info();
-        let mut m = Mask::full(192);
-        let drop: Vec<usize> = (0..96).collect();
-        m.apply_removal(&drop).unwrap();
-        let tr = simulate(&info, &m, &wan());
-        assert_eq!(tr.gc_bytes, 96 * 2048);
-    }
-
-    #[test]
-    fn simulation_agrees_with_analytic_model() {
-        // Round accounting is aligned between the two models (2 flips per
-        // GC layer + 2 endpoint transfers); residual differences are the
-        // share-transfer bytes the analytic model folds into constants.
-        let info = fake_info();
-        for proto in [lan(), wan()] {
-            for keep in [192usize, 100, 10] {
-                let mut m = Mask::full(192);
-                if keep < 192 {
-                    let drop: Vec<usize> = (0..192 - keep).collect();
-                    m.apply_removal(&drop).unwrap();
-                }
-                let (a, s) = compare(&info, &m, &proto);
-                let ratio = s / a;
-                assert!(
-                    (0.3..=3.0).contains(&ratio),
-                    "{}@{keep}: analytic {a:.6}s vs sim {s:.6}s",
-                    proto.name
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn wan_latency_dominated_by_gc_traffic() {
-        let info = fake_info();
-        let tr = simulate(&info, &Mask::full(192), &wan());
-        let gc_time = tr.gc_bytes as f64 / wan().bandwidth;
-        assert!(gc_time > tr.share_bytes as f64 / wan().bandwidth);
+        };
+        let m = Mask::full(128);
+        let tr: Trace = simulate(&info, &m, &crate::pi::LAN);
+        assert_eq!(tr.gc_bytes, 128 * 2048);
+        let (a, s) = compare(&info, &m, &crate::pi::LAN);
+        assert!(a > 0.0 && s > 0.0);
     }
 }

@@ -246,6 +246,12 @@ pub struct RunManifest {
     /// run-store next to the experiments it describes. `None` everywhere
     /// else (and on pre-bench manifests — format 1 stays readable).
     pub bench: Option<BenchReport>,
+    /// Sealed by `cdnl serve <run-id> --record`: the fleet-scale serving
+    /// report ([`crate::pi::serve`]) priced under the run's `pi.protocol`,
+    /// so a linearized model's deployment cost lives next to the run that
+    /// produced it. `None` everywhere else (and on pre-serve manifests —
+    /// format 1 stays readable).
+    pub serve: Option<crate::pi::ServeReport>,
 }
 derive_serde!(RunManifest {
     format,
@@ -267,6 +273,7 @@ derive_serde!(RunManifest {
     result,
     stats,
     bench,
+    serve,
 });
 
 impl RunManifest {
@@ -300,6 +307,7 @@ impl RunManifest {
             result: None,
             stats: None,
             bench: None,
+            serve: None,
         }
     }
 
@@ -445,6 +453,41 @@ mod tests {
         let stripped = text.replace("\"outcomes\"", "\"outcomes_from_the_future\"");
         let old: RunManifest = sd::from_str(&stripped).unwrap();
         assert_eq!(old.outcomes, None);
+    }
+
+    #[test]
+    fn serve_report_rides_the_manifest() {
+        // `cdnl serve --record` seals a ServeReport; it must round-trip,
+        // and pre-serve format-1 documents (no key) must parse as None.
+        let mut m = sample();
+        m.serve = Some(crate::pi::ServeReport {
+            protocol: "lan".into(),
+            clients: 2,
+            requests: 3,
+            completed: 6,
+            relus: 488,
+            active_layers: 17,
+            rounds_per_inference: 36,
+            online_rounds: 216,
+            up_bytes: 30144,
+            down_bytes: 5996784,
+            gemm_jobs: 102,
+            gemm_batches: 60,
+            prep_completed: 6,
+            events: 1000,
+            p50_ms: 1.5,
+            p95_ms: 2.5,
+            p99_ms: 3.0,
+            mean_ms: 1.75,
+            makespan_secs: 0.5,
+            throughput_rps: 12.0,
+        });
+        let text = sd::to_string_pretty(&m);
+        let back: RunManifest = sd::from_str(&text).unwrap();
+        assert_eq!(back.serve, m.serve);
+        let stripped = text.replace("\"serve\"", "\"serve_from_the_future\"");
+        let old: RunManifest = sd::from_str(&stripped).unwrap();
+        assert_eq!(old.serve, None);
     }
 
     #[test]

@@ -118,6 +118,37 @@ fn committed_smoke_baseline_gates_green() {
 }
 
 #[test]
+fn committed_serve_baseline_gates_green() {
+    // Same contract for the serve tier: a fresh `bench run --tier serve`
+    // must compare clean against the committed BENCH_serve.json. The
+    // baseline carries only the float-independent structural counts
+    // (completions, rounds, bytes, jobs); percentiles and throughput show
+    // up report-side only, which the comparator treats as informational.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_serve.json");
+    let baseline = BenchReport::load(&path)
+        .expect("committed BENCH_serve.json must parse (regenerate via `cdnl bench run serve`)");
+    assert_eq!(baseline.bench, "serve");
+    assert_eq!(baseline.tier, "serve");
+    assert_eq!(baseline.backend, "reference");
+    let be = RefBackend::standard();
+    let def = bench::find("serve").expect("serve is registered");
+    let live = bench::run_bench(def, &be).expect("serve bench runs on the reference backend");
+    let out = compare_reports(&live, &baseline, &Thresholds::default(), false);
+    assert!(
+        out.passed(),
+        "live serve run regressed against the committed baseline:\n{}",
+        out.table()
+    );
+    // 12 cases (2 families x 3 budgets x 2 protocols) x 9 gated counts.
+    assert!(
+        out.diffs.iter().filter(|d| d.kind == kind::COUNT && d.status == Status::Pass).count()
+            >= 108,
+        "expected the full serve count contract to be compared:\n{}",
+        out.table()
+    );
+}
+
+#[test]
 fn markdown_and_table_render_for_ci_summary() {
     let report = run_smoke();
     let out = compare_reports(&report, &report.clone(), &Thresholds::default(), false);

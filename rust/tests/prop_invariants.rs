@@ -750,3 +750,149 @@ fn prop_layer_histogram_consistent() {
         },
     );
 }
+
+/// PI online-round count is monotone non-increasing as the mask gets
+/// sparser (DESIGN.md §14): removing ReLUs can only empty layers, never
+/// activate one, so `trace::simulate`'s round count — `2·active + 2` —
+/// never goes up along any removal trajectory.
+#[test]
+fn prop_pi_rounds_monotone_under_sparsity() {
+    use cdnl::pi::{simulate, LAN};
+    use cdnl::runtime::{Backend, RefBackend};
+    let be = RefBackend::standard();
+    let keys = ["resnet18_16x16_c10", "wrn22_16x16_c10"];
+    let infos: Vec<_> = keys.iter().map(|k| be.model(k).unwrap().clone()).collect();
+    check(
+        0x5E21E,
+        40,
+        |r| {
+            let which = r.usize_below(2);
+            let steps = r.usize_below(12) + 2;
+            let chunk = r.usize_below(40) + 1;
+            (which, (steps, chunk))
+        },
+        |&(which, (steps, chunk))| {
+            let info = &infos[which];
+            let mut rng = Rng::new(steps as u64 * 8191 + chunk as u64);
+            let mut mask = Mask::full(info.mask_size);
+            let mut prev = simulate(info, &mask, &LAN);
+            for _ in 0..steps {
+                let k = chunk.min(mask.count());
+                if k == 0 {
+                    break;
+                }
+                let doomed = mask.sample_present(&mut rng, k);
+                mask.apply_removal(&doomed).map_err(|e| e.to_string())?;
+                let tr = simulate(info, &mask, &LAN);
+                if tr.rounds > prev.rounds {
+                    return Err(format!(
+                        "rounds grew under sparsity: {} -> {} at count {}",
+                        prev.rounds,
+                        tr.rounds,
+                        mask.count()
+                    ));
+                }
+                if tr.relu_rounds() > prev.relu_rounds() {
+                    return Err("relu_rounds grew under sparsity".into());
+                }
+                prev = tr;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A fully linearized network (every ReLU removed) has ZERO ReLU-phase
+/// rounds under every protocol: the online phase collapses to the input
+/// upload + result download pair, and no garbled-circuit bytes move.
+#[test]
+fn prop_pi_fully_linearized_zero_relu_rounds() {
+    use cdnl::pi::{simulate, LAN, MOBILE, WAN};
+    use cdnl::runtime::{Backend, RefBackend};
+    let be = RefBackend::standard();
+    let keys = ["resnet18_16x16_c10", "wrn22_16x16_c10"];
+    let infos: Vec<_> = keys.iter().map(|k| be.model(k).unwrap().clone()).collect();
+    check(
+        0x0F00D,
+        30,
+        |r| (r.usize_below(2), r.usize_below(3)),
+        |&(which, p)| {
+            let info = &infos[which];
+            let proto = [&LAN, &WAN, &MOBILE][p];
+            let mut mask = Mask::full(info.mask_size);
+            let all: Vec<usize> = (0..info.mask_size).collect();
+            mask.apply_removal(&all).map_err(|e| e.to_string())?;
+            let tr = simulate(info, &mask, proto);
+            if tr.relu_rounds() != 0 {
+                return Err(format!("{} relu rounds on a linear network", tr.relu_rounds()));
+            }
+            if tr.rounds != 2 {
+                return Err(format!("linear network took {} rounds, want 2", tr.rounds));
+            }
+            if tr.gc_bytes != 0 {
+                return Err(format!("{} GC bytes moved with zero ReLUs", tr.gc_bytes));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// At 1 client x 1 request the serving simulator degenerates to a single
+/// replay of the `pi::trace` message script: per-direction byte totals
+/// and the online-round count match `simulate` exactly, for any protocol,
+/// arrival rate, seed, and mask sparsity.
+#[test]
+fn prop_pi_serve_single_client_conserves_trace() {
+    use cdnl::pi::serve::{serve, ServeConfig};
+    use cdnl::pi::{simulate, LAN, MOBILE, WAN};
+    use cdnl::runtime::{Backend, RefBackend};
+    let be = RefBackend::standard();
+    let keys = ["resnet18_16x16_c10", "wrn22_16x16_c10"];
+    let infos: Vec<_> = keys.iter().map(|k| be.model(k).unwrap().clone()).collect();
+    check(
+        0x1C0DE,
+        30,
+        |r| {
+            let which = r.usize_below(2);
+            let p = r.usize_below(3);
+            let removed = r.usize_below(400);
+            let rate_x10 = r.usize_below(500) + 1; // 0.1 .. 50.0 req/s
+            let seed = r.usize_below(1 << 16) as u64;
+            (which, (p, (removed, (rate_x10, seed))))
+        },
+        |&(which, (p, (removed, (rate_x10, seed))))| {
+            let info = &infos[which];
+            let proto = [&LAN, &WAN, &MOBILE][p];
+            let mut rng = Rng::new(seed ^ 0x5EED);
+            let mut mask = Mask::full(info.mask_size);
+            let k = removed.min(info.mask_size);
+            if k > 0 {
+                let doomed = mask.sample_present(&mut rng, k);
+                mask.apply_removal(&doomed).map_err(|e| e.to_string())?;
+            }
+            let cfg = ServeConfig {
+                clients: 1,
+                requests: 1,
+                arrival_rate: rate_x10 as f64 / 10.0,
+                batch_window: 1,
+                prep_ahead: 1,
+                seed,
+            };
+            let r = serve(info, &mask, proto, &cfg).map_err(|e| e.to_string())?;
+            let tr = simulate(info, &mask, proto);
+            if r.completed != 1 {
+                return Err(format!("{} completions, want 1", r.completed));
+            }
+            if r.up_bytes != tr.up_bytes() as usize {
+                return Err(format!("up {} != trace {}", r.up_bytes, tr.up_bytes()));
+            }
+            if r.down_bytes != tr.down_bytes() as usize {
+                return Err(format!("down {} != trace {}", r.down_bytes, tr.down_bytes()));
+            }
+            if r.online_rounds != tr.rounds {
+                return Err(format!("rounds {} != trace {}", r.online_rounds, tr.rounds));
+            }
+            Ok(())
+        },
+    );
+}
