@@ -1,0 +1,7 @@
+//! Thin wrapper: `cargo bench --bench bench_perf_dist` runs the registered
+//! `perf_dist` benchmark (see `rust/src/bench/suite/perf_dist.rs`) and
+//! writes its report to `results/bench/BENCH_perf_dist.json`.
+
+fn main() -> anyhow::Result<()> {
+    cdnl::bench::bench_main("perf_dist")
+}

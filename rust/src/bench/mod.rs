@@ -162,7 +162,7 @@ pub fn registry() -> &'static [BenchDef] {
     &REGISTRY
 }
 
-static REGISTRY: [BenchDef; 18] = [
+static REGISTRY: [BenchDef; 19] = [
     BenchDef {
         name: "smoke",
         tier: Tier::Smoke,
@@ -283,6 +283,13 @@ static REGISTRY: [BenchDef; 18] = [
         run: suite::perf_conv_lowered::run,
     },
     BenchDef {
+        name: "perf_dist",
+        tier: Tier::Perf,
+        title: "distributed scan: 1 vs N loopback workers, outcome-checked",
+        paper: "§Perf",
+        run: suite::perf_dist::run,
+    },
+    BenchDef {
         name: "serve",
         tier: Tier::Serve,
         title: "fleet-scale PI serving: percentiles + throughput vs budget",
@@ -384,7 +391,7 @@ mod tests {
             assert!(!d.title.is_empty() && !d.paper.is_empty());
         }
         assert!(find("nope").is_err());
-        assert_eq!(registry().len(), 18);
+        assert_eq!(registry().len(), 19);
     }
 
     #[test]
@@ -394,10 +401,10 @@ mod tests {
         }
         assert_eq!(Tier::parse("bogus"), None);
         assert_eq!(by_tier(Tier::Smoke).len(), 1);
-        assert_eq!(by_tier(Tier::Perf).len(), 2);
+        assert_eq!(by_tier(Tier::Perf).len(), 3);
         assert_eq!(by_tier(Tier::Serve).len(), 1);
         assert_eq!(
-            by_tier(Tier::Paper).len() + 4,
+            by_tier(Tier::Paper).len() + 5,
             registry().len(),
             "every bench belongs to exactly one tier"
         );

@@ -21,6 +21,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod perf;
 pub mod perf_conv_lowered;
+pub mod perf_dist;
 pub mod serve;
 pub mod smoke;
 pub mod table1;

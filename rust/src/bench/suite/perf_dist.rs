@@ -1,0 +1,142 @@
+//! §Perf: the distributed trial scan over loopback HTTP (DESIGN.md §15).
+//!
+//! One scan, four substrates: the local in-process path ([`scan_trials`])
+//! and the [`crate::dist`] coordinator with 1, 2 and 4 loopback workers.
+//! Every distributed outcome is `ensure!`d bit-identical to the local
+//! reference — membership only moves wall-clock, never the result — and
+//! timings/rates land in `results/perf_dist.csv` plus advisory `time_ms` /
+//! `rate` metrics (lease counters are timing-dependent, so they are never
+//! gated here; the `smoke` bench pins them on a deterministic schedule).
+
+use crate::bench::{setup, BenchCtx};
+use crate::cas::CasStore;
+use crate::coordinator::bcd::ScanArgs;
+use crate::coordinator::eval::{EvalOpts, Evaluator};
+use crate::coordinator::trials::{scan_trials, BlockSampler};
+use crate::data::synth;
+use crate::dist::{dist_scanner, run_worker, HelloDoc, ScanServer, WorkerOpts};
+use crate::metrics::write_csv;
+use crate::runtime::session::Session;
+use crate::util::prng::Rng;
+use anyhow::{ensure, Result};
+
+pub fn run(cx: &mut BenchCtx) -> Result<()> {
+    let engine = cx.engine;
+    let mut exp = setup::experiment("synth10", "resnet", false);
+    let rt = if cx.full { 24 } else { 8 };
+    exp.apply("bcd.rt", &rt.to_string()).map_err(anyhow::Error::msg)?;
+    let drc = if cx.full { 24usize } else { 8 };
+    let (train_ds, _) = synth::generate(synth::by_name(&exp.dataset).unwrap());
+    let sess = Session::new(engine, &exp.model_key())?;
+    let st = sess.init_state(1)?;
+    let sampler = BlockSampler::new(exp.bcd.granularity, sess.info());
+    // Built exactly as a remote worker builds its evaluator from the hello
+    // config (`run_worker`), so worker-produced scores are comparable.
+    let ev = Evaluator::with_opts(
+        &sess,
+        &train_ds,
+        exp.bcd.proxy_batches,
+        EvalOpts {
+            cache_bytes: exp.bcd.cache_mb.saturating_mul(1 << 20),
+            trial_batch: exp.bcd.trial_batch,
+            verify_staged: exp.bcd.verify_staged,
+            verify_lowering: exp.bcd.verify_lowering,
+        },
+    )?;
+    let params = ev.upload_params(&st.params)?;
+    let base = ev.accuracy(&params, st.mask.dense())?;
+
+    // Local reference: same seed, same knobs, in-process threads.
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let local = scan_trials(
+        &ev, &params, &st.mask, &sampler, drc, exp.bcd.rt, exp.bcd.adt, base, &mut rng, 1,
+    )?;
+    let local_ms = 1e3 * t0.elapsed().as_secs_f64();
+    cx.time_ms("local", "scan_local", &[local_ms]);
+    println!(
+        "local scan: {} evaluated / {} bounded in {local_ms:.1} ms",
+        local.evaluated, local.bounded
+    );
+
+    let mut rows = Vec::new();
+    let mut checked = 0usize;
+    for &w in &[1usize, 2, 4] {
+        let cas_dir = std::env::temp_dir()
+            .join(format!("cdnl_perf_dist_{}_{w}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&cas_dir);
+        let srv = ScanServer::start(
+            "127.0.0.1:0",
+            &HelloDoc::for_experiment(&exp, engine.name()),
+            CasStore::open(&cas_dir),
+        )?;
+        let addr = srv.addr().to_string();
+        let (out, dist_ms) = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..w)
+                .map(|i| {
+                    let addr = addr.clone();
+                    s.spawn(move || {
+                        run_worker(
+                            &addr,
+                            engine,
+                            &WorkerOpts {
+                                id: format!("bench-w{i}"),
+                                poll_ms: 5,
+                                ..WorkerOpts::default()
+                            },
+                        )
+                    })
+                })
+                .collect();
+            let mut scan = dist_scanner(&srv, &exp.bcd, 10_000);
+            let args = ScanArgs {
+                ev: &ev,
+                params: &params,
+                params_host: &st.params,
+                mask: &st.mask,
+                sampler: &sampler,
+                drc,
+                base_acc: base,
+                sweep: 1,
+            };
+            let mut rng = Rng::new(7);
+            let t0 = std::time::Instant::now();
+            let out = scan(&args, &mut rng);
+            let dist_ms = 1e3 * t0.elapsed().as_secs_f64();
+            srv.shutdown();
+            for h in handles {
+                if let Err(e) = h.join().expect("worker thread panicked") {
+                    eprintln!("perf_dist: worker exited with error: {e:#}");
+                }
+            }
+            (out, dist_ms)
+        });
+        let out = out?;
+        ensure!(
+            out == local,
+            "distributed scan with {w} worker(s) diverged from the local outcome"
+        );
+        checked += 1;
+        let x = local_ms / dist_ms.max(1e-9);
+        cx.time_ms("dist", &format!("scan_{w}w"), &[dist_ms]);
+        cx.rate("dist", &format!("vs_local_{w}w"), x, "x");
+        println!("dist scan, {w} worker(s): {dist_ms:.1} ms ({x:.2}x of local)");
+        rows.push(vec![
+            w.to_string(),
+            format!("{local_ms:.2}"),
+            format!("{dist_ms:.2}"),
+            format!("{x:.2}"),
+            out.evaluated.to_string(),
+            out.bounded.to_string(),
+        ]);
+        let _ = std::fs::remove_dir_all(&cas_dir);
+    }
+    cx.count("dist", "outcomes_identical", checked, "scans");
+    write_csv(
+        &setup::results_csv("perf_dist"),
+        &["workers", "local_ms", "dist_ms", "x_vs_local", "evaluated", "bounded"],
+        &rows,
+    )?;
+    println!("\n{}", engine.stats_table());
+    Ok(())
+}

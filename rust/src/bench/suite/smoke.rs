@@ -1,6 +1,6 @@
 //! Smoke tier: the CI gate benchmark (seconds, reference backend).
 //!
-//! Six case groups:
+//! Seven case groups:
 //!
 //! 1. **Structural manifest contract** — per-model ReLU pool sizes,
 //!    parameter-vector lengths and mask-layer counts, plus the model count
@@ -39,10 +39,19 @@
 //!    slab re-driven through group 5's evaluator pin the slab-wide
 //!    patch-reuse counter, read back as a delta of the backend's
 //!    `conv_lowering:slab_patch_reuse` stat.
+//! 7. **Distributed lease/merge + CAS contract** (DESIGN.md §15) — the
+//!    dist coordinator's lease protocol driven on a pinned clock (a full
+//!    claim / kill / re-issue / duplicate-completion schedule with no
+//!    sockets, threads or wall time), the sequential replay merge over the
+//!    recorded results, and the content-addressed store's put / duplicate /
+//!    tamper / gc arithmetic. Every metric is an exact `count`: a protocol
+//!    or digest regression fails the gate until deliberately re-blessed.
 
 use crate::bench::BenchCtx;
-use crate::coordinator::eval::{EvalOpts, Evaluator};
-use crate::coordinator::trials::{scan_trials, BlockSampler};
+use crate::cas::{digest_hex, CasStore};
+use crate::coordinator::eval::{EvalOpts, Evaluator, TrialEval};
+use crate::coordinator::trials::{replay_merge, scan_trials, BlockSampler};
+use crate::dist::LeasedScan;
 use crate::data::synth;
 use crate::model::MaskDelta;
 use crate::methods::registry::{self, ChainSpec, Method, MethodCtx, RecordSink};
@@ -345,6 +354,94 @@ pub fn run(cx: &mut BenchCtx) -> Result<()> {
         "smoke conv lowering: {} im2col calls ({} bytes), {} scratch hits, \
          {reuse} slab-reused hyps",
         lt.im2col_calls, lt.im2col_bytes, lt.scratch_hits
+    );
+
+    // --- 7: distributed lease/merge + CAS contract (DESIGN.md §15) -----------
+    // The dist protocol on a pinned clock: no sockets, no threads, no wall
+    // time, so every counter is exact by construction. 10 trials, slabs of
+    // 4, 100 ms leases, base 80.0 / adt 0.5:
+    //   a, b, c claim (0,4) (4,4) (8,2) at t=0; b completes 4..8; at t=200
+    //   the surviving leases (0 and 8) are both expired and b's re-claim
+    //   re-issues the lowest start (0,4); c posts 8..10 with an accept at
+    //   index 9 (dacc 0.2 < adt); b posts 0..4 (one runtime bound); the
+    //   presumed-dead a posts 0..4 late — ignored, first write wins.
+    //   claims_issued = 3 fresh + 1 re-issue          = 4
+    //   leases_reissued                               = 1
+    //   duplicate_completions                         = 1
+    //   completed_slabs                               = 3
+    // The replay merge then walks all 10 recorded trials (the Bounded one
+    // included) and early-accepts at index 9: evaluated 10, bounded 1.
+    let sc = |acc: f64| TrialEval::Scored { acc, batch_corrects: vec![acc] };
+    let mut ls = LeasedScan::new(10, 80.0, 0.5, 100);
+    let ga = ls.claim("a", 4, 0).expect("slab 0..4");
+    let gb = ls.claim("b", 4, 0).expect("slab 4..8");
+    let gtail = ls.claim("c", 4, 0).expect("slab 8..10");
+    ensure!(
+        [(ga.start, ga.len), (gb.start, gb.len), (gtail.start, gtail.len)]
+            == [(0, 4), (4, 4), (8, 2)],
+        "in-order slab grants moved"
+    );
+    ensure!(!ls.complete(4, vec![sc(70.0), sc(71.0), sc(72.0), sc(73.0)]));
+    let rg = ls.claim("b", 4, 200).expect("re-issue of expired 0..4");
+    ensure!((rg.start, rg.len) == (0, 4), "expired re-issue must be lowest start first");
+    ensure!(!ls.complete(8, vec![sc(74.0), sc(79.8)]));
+    ensure!(!ls.complete(0, vec![sc(75.0), TrialEval::Bounded, sc(76.0), sc(77.0)]));
+    ensure!(
+        ls.complete(0, vec![sc(1.0), sc(2.0), sc(3.0), sc(4.0)]),
+        "zombie completion must be flagged duplicate"
+    );
+    ensure!(ls.done(), "all slabs completed, no lease outstanding");
+    let lstats = ls.stats().clone();
+    cx.count("dist", "claims_issued", lstats.claims_issued, "claims");
+    cx.count("dist", "leases_reissued", lstats.leases_reissued, "leases");
+    cx.count("dist", "duplicate_completions", lstats.duplicate_completions, "posts");
+    cx.count("dist", "completed_slabs", lstats.completed_slabs, "slabs");
+    let (results, _) = ls.into_results();
+    let hyps: Vec<MaskDelta> = (0..10).map(|i| MaskDelta::new(vec![i])).collect();
+    let merged = replay_merge(&hyps, results, 80.0, 0.5, |_, _| false);
+    cx.count("dist", "merge_evaluated", merged.evaluated, "trials");
+    cx.count("dist", "merge_bounded", merged.bounded, "trials");
+    cx.count("dist", "merge_early_accept", merged.early_accept as usize, "accepts");
+    cx.count("dist", "merge_chosen_idx", merged.chosen.removed[0], "index");
+
+    // CAS arithmetic: two distinct blobs plus one duplicate put, a
+    // tamper-then-read rejection, and a gc pass with one live digest.
+    let cas_dir =
+        std::env::temp_dir().join(format!("cdnl_smoke_cas_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cas_dir);
+    let cas = CasStore::open(&cas_dir);
+    let p1 = cas.put_bytes(b"smoke blob one")?;
+    let p2 = cas.put_bytes(b"smoke blob two")?;
+    let dup = cas.put_bytes(b"smoke blob one")?;
+    ensure!(p1.digest == digest_hex(b"smoke blob one"), "put digest != one-shot hash");
+    cx.count("dist", "cas_objects", cas.list()?.len(), "blobs");
+    cx.count(
+        "dist",
+        "cas_dup_puts",
+        (dup.existed && !p1.existed && !p2.existed) as usize,
+        "puts",
+    );
+    // Flip one byte behind the store's back: the read-side digest check
+    // must reject the object (layout: objects/<digest[..2]>/<digest>).
+    let obj = cas_dir.join("objects").join(&p2.digest[..2]).join(&p2.digest);
+    let mut corrupt = std::fs::read(&obj)?;
+    corrupt[0] ^= 0x01;
+    std::fs::write(&obj, &corrupt)?;
+    cx.count("dist", "cas_tamper_rejects", cas.get(&p2.digest).is_err() as usize, "reads");
+    let live: std::collections::BTreeSet<String> =
+        [p1.digest.clone()].into_iter().collect();
+    cx.count("dist", "cas_gc_removed", cas.gc(&live, false)?.len(), "blobs");
+    ensure!(cas.contains(&p1.digest), "live blob must survive gc");
+    let _ = std::fs::remove_dir_all(&cas_dir);
+    println!(
+        "smoke dist: {} claims ({} re-issued, {} duplicate), merge {} evaluated / \
+         {} bounded, accept idx {}",
+        lstats.claims_issued,
+        lstats.leases_reissued,
+        lstats.duplicate_completions,
+        merged.evaluated,
+        merged.bounded,
+        merged.chosen.removed[0]
     );
     Ok(())
 }

@@ -1,0 +1,379 @@
+//! Content-addressed artifact store (DESIGN.md §15).
+//!
+//! A digest-keyed blob store backing distributed runs: checkpoints, zoo
+//! stages and per-sweep model parameters are stored once under their
+//! FNV-1a-256 digest, so remote workers cold-start by digest instead of
+//! shipping state in-band, and identical content is never stored twice.
+//!
+//! Layout under the store root:
+//!
+//! ```text
+//! <root>/objects/<digest[..2]>/<digest>     # one file per blob
+//! ```
+//!
+//! The digest is streamed over content on **write and read**: [`CasStore::put`]
+//! hashes while copying into a temp file and renames into place only when the
+//! digest is known (atomic, idempotent), and [`CasStore::get`] re-hashes the
+//! object while reading and rejects any content whose digest no longer
+//! matches its name — a tampered or bit-rotted blob can never be served.
+//! Run manifests carry `BlobRef` provenance ([`crate::runstore`]), and
+//! `cdnl runs gc` treats every blob referenced by a surviving manifest as
+//! live (never collected).
+//!
+//! The hash is FNV-1a with 256-bit parameters (prime `2^168 + 2^8 + 0x63`),
+//! implemented over four u64 limbs with basic integer arithmetic — the same
+//! dependency-free idiom as the crate's 64-bit config fingerprint
+//! ([`crate::config::fingerprint_pairs`]), scaled up so accidental
+//! collisions are out of the question at fleet scale. Digests print as 64
+//! lowercase hex characters, most-significant limb first.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Streaming FNV-1a-256 hasher (four little-endian u64 limbs).
+#[derive(Clone, Debug)]
+pub struct Fnv256 {
+    h: [u64; 4],
+}
+
+/// FNV-1a-256 offset basis (big-endian hex
+/// `dd268dbcaac550362d98c384c4e576ccc8b1536847b6bbb31023b4c8caee0535`),
+/// as little-endian limbs.
+const OFFSET_BASIS: [u64; 4] =
+    [0x1023b4c8caee0535, 0xc8b1536847b6bbb3, 0x2d98c384c4e576cc, 0xdd268dbcaac55036];
+
+/// Low 64 bits of the 256-bit FNV prime `2^168 + 2^8 + 0x63`; the only
+/// other set bit is bit 168, handled as a limb shift in [`Fnv256::mul_prime`].
+const PRIME_LOW: u64 = 0x163;
+
+impl Default for Fnv256 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv256 {
+    pub fn new() -> Fnv256 {
+        Fnv256 { h: OFFSET_BASIS }
+    }
+
+    /// `h <- h * (2^168 + 0x163) mod 2^256`: a 168-bit limb shift plus a
+    /// small-constant multiply, combined with carrying adds.
+    fn mul_prime(&mut self) {
+        let h = self.h;
+        // h * 0x163 (mod 2^256), carried through the limbs.
+        let mut lo = [0u64; 4];
+        let mut carry: u128 = 0;
+        for i in 0..4 {
+            let t = h[i] as u128 * PRIME_LOW as u128 + carry;
+            lo[i] = t as u64;
+            carry = t >> 64;
+        }
+        // h << 168 (mod 2^256): 168 = 2 limbs + 40 bits.
+        let sh = [0u64, 0, h[0] << 40, (h[1] << 40) | (h[0] >> 24)];
+        // Sum the partial products.
+        let mut out = [0u64; 4];
+        let mut c: u128 = 0;
+        for i in 0..4 {
+            let t = lo[i] as u128 + sh[i] as u128 + c;
+            out[i] = t as u64;
+            c = t >> 64;
+        }
+        self.h = out;
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h[0] ^= b as u64;
+            self.mul_prime();
+        }
+    }
+
+    /// 64-hex-char digest, most-significant limb first.
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}{:016x}{:016x}", self.h[3], self.h[2], self.h[1], self.h[0])
+    }
+}
+
+/// One-shot digest of a byte slice.
+pub fn digest_hex(bytes: &[u8]) -> String {
+    let mut h = Fnv256::new();
+    h.update(bytes);
+    h.hex()
+}
+
+/// True iff `s` is a well-formed digest: exactly 64 lowercase hex chars.
+/// Everything that touches the filesystem or the HTTP `/cas/<digest>`
+/// endpoint validates with this first (no path traversal by construction).
+pub fn valid_digest(s: &str) -> bool {
+    s.len() == 64 && s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+}
+
+/// Outcome of a [`CasStore::put`]: the content digest, the blob size, and
+/// whether the store already held identical content (idempotent puts).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PutOutcome {
+    pub digest: String,
+    pub bytes: u64,
+    pub existed: bool,
+}
+
+/// Monotonic counter distinguishing concurrent temp files within a process.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A digest-keyed blob store rooted at one directory.
+pub struct CasStore {
+    root: PathBuf,
+}
+
+impl CasStore {
+    /// Open (or lazily create) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> CasStore {
+        CasStore { root: root.into() }
+    }
+
+    /// The conventional per-experiment store: `<out_dir>/cas`, sibling of
+    /// the run-store's `<out_dir>/runs`.
+    pub fn for_experiment(exp: &crate::config::Experiment) -> CasStore {
+        CasStore::open(PathBuf::from(&exp.out_dir).join("cas"))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn object_path(&self, digest: &str) -> PathBuf {
+        self.root.join("objects").join(&digest[..2]).join(digest)
+    }
+
+    /// Store the contents of `reader`, hashing while copying. The blob is
+    /// written to a temp file and renamed under its digest only once the
+    /// digest is known, so readers never observe partial objects and
+    /// re-putting identical content is a no-op.
+    pub fn put(&self, reader: &mut dyn Read) -> Result<PutOutcome> {
+        let tmp_dir = self.root.join("objects");
+        std::fs::create_dir_all(&tmp_dir)
+            .with_context(|| format!("cas: create {tmp_dir:?}"))?;
+        let tmp = tmp_dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TEMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut hasher = Fnv256::new();
+        let mut total = 0u64;
+        let write = (|| -> Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            let mut buf = [0u8; 64 * 1024];
+            loop {
+                let n = reader.read(&mut buf)?;
+                if n == 0 {
+                    break;
+                }
+                hasher.update(&buf[..n]);
+                f.write_all(&buf[..n])?;
+                total += n as u64;
+            }
+            f.sync_all()?;
+            Ok(())
+        })();
+        if let Err(e) = write {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.context("cas: staging blob"));
+        }
+        let digest = hasher.hex();
+        let dest = self.object_path(&digest);
+        if dest.exists() {
+            let _ = std::fs::remove_file(&tmp);
+            return Ok(PutOutcome { digest, bytes: total, existed: true });
+        }
+        std::fs::create_dir_all(dest.parent().expect("object path has a parent"))?;
+        std::fs::rename(&tmp, &dest).with_context(|| format!("cas: commit {dest:?}"))?;
+        Ok(PutOutcome { digest, bytes: total, existed: false })
+    }
+
+    /// [`Self::put`] over an in-memory blob.
+    pub fn put_bytes(&self, bytes: &[u8]) -> Result<PutOutcome> {
+        self.put(&mut std::io::Cursor::new(bytes))
+    }
+
+    /// [`Self::put`] over a file's contents (streamed, never fully buffered).
+    pub fn put_file(&self, path: &Path) -> Result<PutOutcome> {
+        let mut f =
+            std::fs::File::open(path).with_context(|| format!("cas: put {path:?}"))?;
+        self.put(&mut f)
+    }
+
+    pub fn contains(&self, digest: &str) -> bool {
+        valid_digest(digest) && self.object_path(digest).exists()
+    }
+
+    /// Read a blob back, re-hashing while reading; content whose digest no
+    /// longer matches its name is rejected, never returned.
+    pub fn get(&self, digest: &str) -> Result<Vec<u8>> {
+        if !valid_digest(digest) {
+            bail!("cas: malformed digest {digest:?} (want 64 lowercase hex chars)");
+        }
+        let path = self.object_path(digest);
+        let mut f = std::fs::File::open(&path)
+            .map_err(|e| anyhow!("cas: no object {digest}: {e}"))?;
+        let mut hasher = Fnv256::new();
+        let mut out = Vec::new();
+        let mut buf = [0u8; 64 * 1024];
+        loop {
+            let n = f.read(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            hasher.update(&buf[..n]);
+            out.extend_from_slice(&buf[..n]);
+        }
+        let got = hasher.hex();
+        if got != digest {
+            bail!("cas: object {digest} failed verification (content hashes to {got}) — tampered or corrupt");
+        }
+        Ok(out)
+    }
+
+    /// Verify one object without materializing it for a caller: Ok(true) if
+    /// present and intact, Ok(false) if absent, Err on digest mismatch.
+    pub fn verify(&self, digest: &str) -> Result<bool> {
+        if !self.contains(digest) {
+            return Ok(false);
+        }
+        self.get(digest).map(|_| true)
+    }
+
+    /// Every digest currently stored, sorted.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let objects = self.root.join("objects");
+        let mut out = Vec::new();
+        let Ok(shards) = std::fs::read_dir(&objects) else {
+            return Ok(out); // empty/unborn store
+        };
+        for shard in shards {
+            let shard = shard?;
+            if !shard.file_type()?.is_dir() {
+                continue; // stray temp file at the objects root
+            }
+            for obj in std::fs::read_dir(shard.path())? {
+                let name = obj?.file_name().to_string_lossy().into_owned();
+                if valid_digest(&name) {
+                    out.push(name);
+                }
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Collect every blob not in `live`. Returns the doomed digests; with
+    /// `dry_run` nothing is deleted (the `gc --dry-run` preview contract —
+    /// the returned set is exactly what a real pass would remove).
+    pub fn gc(&self, live: &BTreeSet<String>, dry_run: bool) -> Result<Vec<String>> {
+        let doomed: Vec<String> =
+            self.list()?.into_iter().filter(|d| !live.contains(d)).collect();
+        if !dry_run {
+            for d in &doomed {
+                let p = self.object_path(d);
+                std::fs::remove_file(&p).with_context(|| format!("cas: gc {p:?}"))?;
+            }
+        }
+        Ok(doomed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("cdnl_cas_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn digest_shape_and_sensitivity() {
+        let a = digest_hex(b"hello");
+        let b = digest_hex(b"hellp");
+        assert!(valid_digest(&a), "digest must be 64 lowercase hex: {a}");
+        assert_ne!(a, b, "one-bit input change must move the digest");
+        assert_eq!(a, digest_hex(b"hello"), "digest is deterministic");
+        // Streaming == one-shot.
+        let mut h = Fnv256::new();
+        h.update(b"he");
+        h.update(b"llo");
+        assert_eq!(h.hex(), a);
+        // Empty input hashes to the offset basis.
+        assert_eq!(
+            digest_hex(b""),
+            "dd268dbcaac550362d98c384c4e576ccc8b1536847b6bbb31023b4c8caee0535"
+        );
+    }
+
+    #[test]
+    fn digest_validation() {
+        assert!(valid_digest(&"a".repeat(64)));
+        assert!(!valid_digest(&"a".repeat(63)));
+        assert!(!valid_digest(&"A".repeat(64)), "uppercase rejected");
+        assert!(!valid_digest(&"g".repeat(64)), "non-hex rejected");
+        assert!(!valid_digest("../escape"), "traversal rejected");
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_idempotent_puts() {
+        let store = CasStore::open(scratch("roundtrip"));
+        let blob = b"the quick brown fox".to_vec();
+        let put = store.put_bytes(&blob).unwrap();
+        assert!(!put.existed);
+        assert_eq!(put.bytes, blob.len() as u64);
+        assert_eq!(put.digest, digest_hex(&blob));
+        // Idempotent re-put.
+        let again = store.put_bytes(&blob).unwrap();
+        assert!(again.existed);
+        assert_eq!(again.digest, put.digest);
+        // Round trip, verified on read.
+        assert!(store.contains(&put.digest));
+        assert_eq!(store.get(&put.digest).unwrap(), blob);
+        assert_eq!(store.verify(&put.digest).unwrap(), true);
+        assert_eq!(store.verify(&digest_hex(b"absent")).unwrap(), false);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn tampered_object_is_rejected_on_read() {
+        let store = CasStore::open(scratch("tamper"));
+        let put = store.put_bytes(b"payload to corrupt").unwrap();
+        let path = store.object_path(&put.digest);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = store.get(&put.digest).unwrap_err().to_string();
+        assert!(err.contains("failed verification"), "got: {err}");
+        assert!(store.verify(&put.digest).is_err());
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+
+    #[test]
+    fn gc_spares_live_and_previews_exactly() {
+        let store = CasStore::open(scratch("gc"));
+        let a = store.put_bytes(b"live blob").unwrap().digest;
+        let b = store.put_bytes(b"dead blob").unwrap().digest;
+        let live: BTreeSet<String> = [a.clone()].into_iter().collect();
+        // Dry run previews without deleting.
+        let preview = store.gc(&live, true).unwrap();
+        assert_eq!(preview, vec![b.clone()]);
+        assert!(store.contains(&b), "dry run must not delete");
+        // Real pass removes exactly the preview.
+        let removed = store.gc(&live, false).unwrap();
+        assert_eq!(removed, preview);
+        assert!(!store.contains(&b));
+        assert!(store.contains(&a), "live blob survives");
+        assert_eq!(store.list().unwrap(), vec![a]);
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+}

@@ -30,6 +30,8 @@ use crate::coordinator::finetune::{finetune, FinetuneStats};
 use crate::coordinator::trials::{scan_trials, BlockSampler, ScanOutcome};
 use crate::data::Dataset;
 use crate::model::{Mask, ModelState};
+use crate::runtime::backend::DeviceBuf;
+use crate::tensor::Tensor;
 use crate::runtime::session::Session;
 use crate::util::prng::Rng;
 use anyhow::{bail, Result};
@@ -102,6 +104,54 @@ pub struct SweepEvent<'a> {
 /// (the checkpoint written for this sweep remains valid for resume).
 pub type SweepHook<'h> = dyn FnMut(&SweepEvent) -> Result<()> + 'h;
 
+/// Everything one iteration's trial scan needs, bundled so the scan itself
+/// is pluggable: the local thread pool ([`local_scanner`]) and the
+/// distributed coordinator ([`crate::dist`]) implement the same contract
+/// and must produce bit-identical [`ScanOutcome`]s (DESIGN.md §15).
+pub struct ScanArgs<'a, 'e, 's> {
+    pub ev: &'a Evaluator<'e, 's>,
+    /// Current params, already uploaded to the local backend.
+    pub params: &'a DeviceBuf,
+    /// The same params host-side (distributed scans publish these to CAS).
+    pub params_host: &'a Tensor,
+    pub mask: &'a Mask,
+    pub sampler: &'a BlockSampler<'a>,
+    /// Removals per hypothesis this iteration (schedule-driven).
+    pub drc: usize,
+    /// The iteration's pre-removal proxy accuracy.
+    pub base_acc: f64,
+    /// 1-based sweep number (a fresh scan generation id per iteration).
+    pub sweep: usize,
+}
+
+/// A pluggable trial scan: given the iteration bundle and the trial RNG
+/// (positioned exactly as Algorithm 2 requires), produce the iteration's
+/// [`ScanOutcome`]. Implementations MUST consume RNG state identically to
+/// [`scan_trials`] — all `rt` forks, nothing else — or resume breaks.
+pub type TrialScanner<'h> = dyn FnMut(&ScanArgs, &mut Rng) -> Result<ScanOutcome> + 'h;
+
+/// Identity helper pinning the closure to the higher-ranked `TrialScanner`
+/// signature (so `&mut local_scanner(cfg)` coerces to `&mut TrialScanner`).
+pub fn as_scanner<F>(f: F) -> F
+where
+    F: FnMut(&ScanArgs, &mut Rng) -> Result<ScanOutcome>,
+{
+    f
+}
+
+/// The default scan substrate: [`scan_trials`] across `cfg.effective_workers()`
+/// local threads.
+pub fn local_scanner(
+    cfg: &BcdConfig,
+) -> impl FnMut(&ScanArgs, &mut Rng) -> Result<ScanOutcome> + '_ {
+    let workers = cfg.effective_workers();
+    as_scanner(move |a: &ScanArgs, rng: &mut Rng| {
+        scan_trials(
+            a.ev, a.params, a.mask, a.sampler, a.drc, cfg.rt, cfg.adt, a.base_acc, rng, workers,
+        )
+    })
+}
+
 /// Run Algorithm 2 on `st` until `||m||_0 == b_target`, mutating it.
 ///
 /// `train_ds` provides both the trial proxy batches and finetune batches.
@@ -137,6 +187,29 @@ pub fn run_bcd_resumable(
     snapshot_every: usize,
     resume: Option<&BcdCursor>,
     on_sweep: &mut SweepHook,
+) -> Result<BcdOutcome> {
+    let mut scan = local_scanner(cfg);
+    run_bcd_resumable_with(
+        sess, st, train_ds, b_target, cfg, snapshot_every, resume, on_sweep, &mut scan,
+    )
+}
+
+/// [`run_bcd_resumable`] with a pluggable per-iteration scan substrate
+/// (local thread pool or the distributed coordinator — the outer loop,
+/// checkpointing, and resume semantics are identical either way, which is
+/// what makes a distributed run resumable from the same `run.json` cursors
+/// as a local one).
+#[allow(clippy::too_many_arguments)]
+pub fn run_bcd_resumable_with(
+    sess: &Session,
+    st: &mut ModelState,
+    train_ds: &Dataset,
+    b_target: usize,
+    cfg: &BcdConfig,
+    snapshot_every: usize,
+    resume: Option<&BcdCursor>,
+    on_sweep: &mut SweepHook,
+    scan: &mut TrialScanner,
 ) -> Result<BcdOutcome> {
     let (b_ref, mut t, mut rng, mut ft_rng) = match resume {
         Some(c) => (
@@ -224,9 +297,17 @@ pub fn run_bcd_resumable(
         let params = ev.upload_params(&st.params)?;
         let base_acc = ev.accuracy(&params, st.mask.dense())?;
 
-        let ScanOutcome { chosen, evaluated, bounded, early_accept } = scan_trials(
-            &ev, &params, &st.mask, &sampler, drc, cfg.rt, cfg.adt, base_acc, &mut rng, workers,
-        )?;
+        let args = ScanArgs {
+            ev: &ev,
+            params: &params,
+            params_host: &st.params,
+            mask: &st.mask,
+            sampler: &sampler,
+            drc,
+            base_acc,
+            sweep: t,
+        };
+        let ScanOutcome { chosen, evaluated, bounded, early_accept } = scan(&args, &mut rng)?;
         st.mask.apply_removal(&chosen.removed)?;
 
         let ft = finetune(

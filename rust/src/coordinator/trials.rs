@@ -121,13 +121,21 @@ pub struct ScanOutcome {
 /// Worker-shared scan state: in-order claim counter, per-trial results, and
 /// the lowest accept index observed so far (the shared stop signal; the
 /// completed lower-index accuracies double as the shared early-exit floor).
-struct ScanState {
-    next: usize,
-    stop_at: Option<usize>,
-    results: Vec<Option<TrialEval>>,
+///
+/// `pub(crate)` so the distributed coordinator ([`crate::dist`]) can wrap the
+/// exact same claim semantics in a lease layer — remote slabs are granted by
+/// this struct, so local and distributed scans claim identically.
+pub(crate) struct ScanState {
+    pub(crate) next: usize,
+    pub(crate) stop_at: Option<usize>,
+    pub(crate) results: Vec<Option<TrialEval>>,
 }
 
 impl ScanState {
+    pub(crate) fn new(n: usize) -> ScanState {
+        ScanState { next: 0, stop_at: None, results: vec![None; n] }
+    }
+
     /// Claim the next contiguous slab of up to `max` trial indices, plus the
     /// bound floor valid for it: the best accuracy among completed trials
     /// with an index *below the slab start*. Restricting the floor to
@@ -136,7 +144,7 @@ impl ScanState {
     /// with the index), so the replay merge's determinism argument is
     /// unchanged at any slab width — `claim_slab(1)` is exactly the old
     /// single-index claim. Claims never extend past the accept index.
-    fn claim_slab(&mut self, max: usize) -> Option<(usize, usize, f64)> {
+    pub(crate) fn claim_slab(&mut self, max: usize) -> Option<(usize, usize, f64)> {
         debug_assert!(max >= 1);
         if self.next >= self.results.len() {
             return None;
@@ -162,6 +170,88 @@ impl ScanState {
     }
 }
 
+/// Phase 1 of a trial scan, shared verbatim by the local pool and the
+/// distributed coordinator ([`crate::dist`]): draw all `rt` hypotheses up
+/// front, each from a trial-index fork of the iteration RNG, deduplicating
+/// in draw order (a duplicate draw never burns an evaluation, exactly as in
+/// the sequential Algorithm 2 loop). Consumes identical RNG state wherever
+/// it runs — the determinism anchor for any execution substrate.
+pub fn draw_hypotheses(
+    mask: &Mask,
+    sampler: &BlockSampler,
+    drc: usize,
+    rt: usize,
+    rng: &mut Rng,
+) -> Vec<MaskDelta> {
+    let mut seen: HashSet<Vec<usize>> = HashSet::new();
+    let mut hyps: Vec<MaskDelta> = Vec::new();
+    for t in 0..rt {
+        let mut trial_rng = rng.fork(t as u64);
+        let mut removed = sampler.sample(mask, &mut trial_rng, drc);
+        removed.sort_unstable();
+        if seen.insert(removed.clone()) {
+            hyps.push(MaskDelta::new(removed));
+        }
+    }
+    hyps
+}
+
+/// Phase 3 of a trial scan: the sequential replay merge — Algorithm 2's
+/// exact decision sequence (incumbent floor, bound, early-accept, argmin
+/// with ties to the lowest index) over recorded per-trial results.
+/// Speculative results past the accept index are discarded, and bound
+/// decisions are re-derived from the recorded per-batch corrects against
+/// the sequential incumbent floor, so the outcome matches a 1-worker scan
+/// bit for bit *regardless of which worker — local thread or remote machine
+/// — produced each result, and regardless of duplicate or re-issued slabs*
+/// (DESIGN.md §15 carries the full argument).
+///
+/// `would_bound(batch_corrects, floor)` must be the evaluator's bound
+/// predicate ([`Evaluator::would_bound`]); it is a parameter so the merge is
+/// testable (and usable by the dist coordinator) without a live backend.
+pub fn replay_merge(
+    hyps: &[MaskDelta],
+    results: Vec<Option<TrialEval>>,
+    base_acc: f64,
+    adt: f64,
+    would_bound: impl Fn(&[f64], f64) -> bool,
+) -> ScanOutcome {
+    let mut best: Option<Trial> = None;
+    let mut evaluated = 0usize;
+    let mut bounded = 0usize;
+    let mut early_accept = false;
+    for (i, r) in results.into_iter().enumerate() {
+        let Some(r) = r else { break }; // unclaimed tail beyond the stop index
+        evaluated += 1;
+        match r {
+            TrialEval::Bounded => {
+                // The runtime floor is never above the sequential floor, so
+                // a runtime cut implies a sequential cut.
+                bounded += 1;
+            }
+            TrialEval::Scored { acc, batch_corrects } => {
+                let floor = best.as_ref().map(|b| b.acc).unwrap_or(0.0);
+                if would_bound(&batch_corrects, floor) {
+                    bounded += 1;
+                    continue;
+                }
+                let dacc = base_acc - acc;
+                let better = best.as_ref().map(|b| acc > b.acc).unwrap_or(true);
+                if better {
+                    best = Some(Trial { removed: hyps[i].indices().to_vec(), acc, dacc });
+                }
+                if dacc < adt {
+                    // Algorithm 2 line 11: accept under the tolerance.
+                    early_accept = true;
+                    break;
+                }
+            }
+        }
+    }
+    let chosen = best.expect("rt >= 1 and the first trial is never bounded");
+    ScanOutcome { chosen, evaluated, bounded, early_accept }
+}
+
 /// Scan up to `rt` random DRC-sized hypotheses of `mask` (never mutates it),
 /// scoring across `workers` threads (1 = sequential; the outcome is
 /// identical either way).
@@ -185,21 +275,8 @@ pub fn scan_trials(
     assert!(drc <= mask.count(), "DRC {drc} > present ReLUs {}", mask.count());
     assert!(rt >= 1, "scan_trials needs rt >= 1");
 
-    // Phase 1: draw all hypotheses up front, each from a trial-index fork of
-    // the iteration RNG, deduplicating in draw order (a duplicate draw never
-    // burns an evaluation, exactly as in the sequential Algorithm 2 loop).
-    // Each hypothesis becomes a sparse MaskDelta against the base mask, so
-    // the evaluator can route it through staged execution (DESIGN.md §8).
-    let mut seen: HashSet<Vec<usize>> = HashSet::new();
-    let mut hyps: Vec<MaskDelta> = Vec::new();
-    for t in 0..rt {
-        let mut trial_rng = rng.fork(t as u64);
-        let mut removed = sampler.sample(mask, &mut trial_rng, drc);
-        removed.sort_unstable();
-        if seen.insert(removed.clone()) {
-            hyps.push(MaskDelta::new(removed));
-        }
-    }
+    // Phase 1 (see `draw_hypotheses`): all RT draws happen here, up front.
+    let hyps = draw_hypotheses(mask, sampler, drc, rt, rng);
 
     // Arm the per-iteration prefix-activation cache (no-op when disabled).
     ev.begin_iteration(mask)?;
@@ -212,7 +289,7 @@ pub fn scan_trials(
     let n = hyps.len();
     let workers = workers.max(1).min(n);
     let slab_max = ev.slab_width();
-    let state = Mutex::new(ScanState { next: 0, stop_at: None, results: vec![None; n] });
+    let state = Mutex::new(ScanState::new(n));
     std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
@@ -252,46 +329,12 @@ pub fn scan_trials(
     // off the per-batch hot path.
     ev.flush_cache_stats();
 
-    // Phase 3: sequential replay merge — Algorithm 2's exact decision
-    // sequence over the recorded results. Speculative results past the
-    // accept index are discarded, and bound decisions are re-derived from
-    // the recorded per-batch corrects against the sequential incumbent
-    // floor, so the outcome matches a 1-worker scan bit for bit.
+    // Phase 3 (see `replay_merge`): the sequential replay over the recorded
+    // results, with the evaluator's bound predicate.
     let results = state.into_inner().unwrap().results;
-    let mut best: Option<Trial> = None;
-    let mut evaluated = 0usize;
-    let mut bounded = 0usize;
-    let mut early_accept = false;
-    for (i, r) in results.into_iter().enumerate() {
-        let Some(r) = r else { break }; // unclaimed tail beyond the stop index
-        evaluated += 1;
-        match r {
-            TrialEval::Bounded => {
-                // The runtime floor is never above the sequential floor, so
-                // a runtime cut implies a sequential cut.
-                bounded += 1;
-            }
-            TrialEval::Scored { acc, batch_corrects } => {
-                let floor = best.as_ref().map(|b| b.acc).unwrap_or(0.0);
-                if ev.would_bound(&batch_corrects, floor) {
-                    bounded += 1;
-                    continue;
-                }
-                let dacc = base_acc - acc;
-                let better = best.as_ref().map(|b| acc > b.acc).unwrap_or(true);
-                if better {
-                    best = Some(Trial { removed: hyps[i].indices().to_vec(), acc, dacc });
-                }
-                if dacc < adt {
-                    // Algorithm 2 line 11: accept under the tolerance.
-                    early_accept = true;
-                    break;
-                }
-            }
-        }
-    }
-    let chosen = best.expect("rt >= 1 and the first trial is never bounded");
-    Ok(ScanOutcome { chosen, evaluated, bounded, early_accept })
+    Ok(replay_merge(&hyps, results, base_acc, adt, |corrects, floor| {
+        ev.would_bound(corrects, floor)
+    }))
 }
 
 #[cfg(test)]
@@ -383,6 +426,26 @@ mod tests {
         assert_eq!(st.claim_slab(1), Some((2, 1, 60.0)));
         st.stop_at = Some(2);
         assert_eq!(st.claim_slab(1), None, "no claims beyond the accept index");
+    }
+
+    #[test]
+    fn replay_merge_matches_algorithm_2() {
+        let hyps: Vec<MaskDelta> = (0..5).map(|i| MaskDelta::new(vec![i])).collect();
+        let scored = |acc: f64| Some(TrialEval::Scored { acc, batch_corrects: vec![] });
+        // base 80, adt 0.5: trial 3 accepts (dacc 0.2); trial 4 (unclaimed)
+        // is never consulted; trial 1 is a runtime bound.
+        let results = vec![scored(70.0), Some(TrialEval::Bounded), scored(75.0), scored(79.8), None];
+        let out = replay_merge(&hyps, results, 80.0, 0.5, |_, _| false);
+        assert_eq!(out.chosen, Trial { removed: vec![3], acc: 79.8, dacc: 80.0 - 79.8 });
+        assert_eq!((out.evaluated, out.bounded), (4, 1));
+        assert!(out.early_accept);
+        // Merge-side bound: a predicate that cuts below the incumbent floor
+        // turns lower-acc trials into bounds; the argmax is unchanged.
+        let sc = |acc: f64| Some(TrialEval::Scored { acc, batch_corrects: vec![acc] });
+        let results = vec![sc(70.0), sc(60.0), sc(75.0), None, None];
+        let out = replay_merge(&hyps, results, 80.0, 0.5, |c, floor| c[0] < floor);
+        assert_eq!(out.chosen.removed, vec![2]);
+        assert_eq!((out.evaluated, out.bounded, out.early_accept), (3, 1, false));
     }
 
     #[test]

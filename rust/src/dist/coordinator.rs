@@ -1,0 +1,530 @@
+//! Coordinator side of the distributed trial scan (DESIGN.md §15).
+//!
+//! The coordinator runs the BCD outer loop exactly as a local run does —
+//! same RNG streams, same checkpoint cadence, same `run.json` cursors — but
+//! each iteration's hypothesis scoring is served to remote workers over
+//! HTTP instead of a local thread pool:
+//!
+//! 1. [`crate::coordinator::trials::draw_hypotheses`] draws the sweep's
+//!    hypotheses (consuming identical RNG state to a local scan), the
+//!    current params are published to the CAS by digest, and a
+//!    [`ScanDoc`] is installed as the active job.
+//! 2. Workers poll `/scan`, cold-start from the params digest, and claim
+//!    contiguous slabs via `/claim` — granted by the *same*
+//!    [`ScanState::claim_slab`] the local pool uses, wrapped in a lease
+//!    layer ([`LeasedScan`]): a claim not completed within the lease
+//!    timeout is re-issued to the next asking worker, and duplicate
+//!    completions (a presumed-dead worker posting late) are idempotently
+//!    ignored, first write wins.
+//! 3. When every slab is completed the coordinator runs the sequential
+//!    replay merge ([`crate::coordinator::trials::replay_merge`]) over the
+//!    recorded results. The merge re-derives every bound/accept decision
+//!    from recorded per-batch corrects, which is why the outcome is
+//!    bit-identical for ANY worker membership, join/leave timing, or
+//!    duplicate completion — the full argument lives in DESIGN.md §15.
+
+use crate::cas::CasStore;
+use crate::config::BcdConfig;
+use crate::coordinator::bcd::{as_scanner, ScanArgs};
+use crate::coordinator::eval::TrialEval;
+use crate::coordinator::trials::{draw_hypotheses, replay_merge, ScanOutcome, ScanState};
+use crate::dist::http::{Request, Response, Server};
+use crate::dist::wire::{
+    ClaimReply, ClaimRequest, CompleteReply, CompleteRequest, HelloDoc, ScanDoc, SlabGrant,
+    WireEval,
+};
+use crate::runstore::BlobRef;
+use crate::util::prng::Rng;
+use crate::util::serde::{from_str, to_string};
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::net::ToSocketAddrs;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Default lease timeout: a slab not completed within this window is
+/// assumed lost and re-issued on the next claim.
+pub const DEFAULT_LEASE_MS: u64 = 10_000;
+
+/// Suggested worker back-off when a claim returns no slab but the scan is
+/// not done (outstanding leases may still expire).
+const RETRY_MS: usize = 50;
+
+/// Counters over the lease protocol — exact by construction, so the smoke
+/// bench gates on them (`BENCH_smoke.json`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LeaseStats {
+    /// Slab grants handed out (fresh + re-issued).
+    pub claims_issued: usize,
+    /// Grants that re-issued an expired lease.
+    pub leases_reissued: usize,
+    /// Completions for already-completed slabs (idempotently ignored).
+    pub duplicate_completions: usize,
+    /// Slabs merged (each slab exactly once, first write wins).
+    pub completed_slabs: usize,
+}
+
+impl LeaseStats {
+    pub fn add(&mut self, other: &LeaseStats) {
+        self.claims_issued += other.claims_issued;
+        self.leases_reissued += other.leases_reissued;
+        self.duplicate_completions += other.duplicate_completions;
+        self.completed_slabs += other.completed_slabs;
+    }
+}
+
+/// One outstanding slab grant.
+#[derive(Clone, Debug)]
+struct Lease {
+    len: usize,
+    worker: String,
+    issued_ms: u64,
+}
+
+/// [`ScanState`]'s in-order claim semantics wrapped in a lease layer for
+/// remote workers: grants are leased, idempotent, and re-issuable on worker
+/// death. Time is an explicit `now_ms` parameter so the protocol is exactly
+/// unit-testable (the smoke bench drives a full kill/re-issue/duplicate
+/// schedule with pinned clocks).
+pub struct LeasedScan {
+    state: ScanState,
+    base_acc: f64,
+    adt: f64,
+    lease_timeout_ms: u64,
+    /// Outstanding leases keyed by slab start (sorted — expired leases are
+    /// re-issued lowest-start first, matching in-order claiming).
+    leases: BTreeMap<usize, Lease>,
+    stats: LeaseStats,
+}
+
+impl LeasedScan {
+    pub fn new(n: usize, base_acc: f64, adt: f64, lease_timeout_ms: u64) -> LeasedScan {
+        LeasedScan {
+            state: ScanState::new(n),
+            base_acc,
+            adt,
+            lease_timeout_ms,
+            leases: BTreeMap::new(),
+            stats: LeaseStats::default(),
+        }
+    }
+
+    /// Best completed accuracy strictly below `start` — the bound floor a
+    /// re-issued slab is scored against. Recomputing at re-issue time is
+    /// safe: any floor derived from completed lower-index results is ≤ the
+    /// merge-time incumbent floor, so runtime cuts stay a subset of merge
+    /// cuts (DESIGN.md §15).
+    fn floor_below(&self, start: usize) -> f64 {
+        let mut floor = 0.0f64;
+        for r in &self.state.results[..start] {
+            if let Some(TrialEval::Scored { acc, .. }) = r {
+                floor = floor.max(*acc);
+            }
+        }
+        floor
+    }
+
+    /// Grant a slab to `worker`: the lowest-start expired lease if any,
+    /// otherwise the next in-order slab of up to `slab_max` trials.
+    pub fn claim(&mut self, worker: &str, slab_max: usize, now_ms: u64) -> Option<SlabGrant> {
+        let expired = self
+            .leases
+            .iter()
+            .find(|(_, l)| now_ms.saturating_sub(l.issued_ms) >= self.lease_timeout_ms)
+            .map(|(&start, l)| (start, l.len));
+        if let Some((start, len)) = expired {
+            let floor = self.floor_below(start);
+            self.leases
+                .insert(start, Lease { len, worker: worker.to_string(), issued_ms: now_ms });
+            self.stats.leases_reissued += 1;
+            self.stats.claims_issued += 1;
+            return Some(SlabGrant { start, len, floor });
+        }
+        let (start, len, floor) = self.state.claim_slab(slab_max.max(1))?;
+        self.leases
+            .insert(start, Lease { len, worker: worker.to_string(), issued_ms: now_ms });
+        self.stats.claims_issued += 1;
+        Some(SlabGrant { start, len, floor })
+    }
+
+    /// Record a completed slab. First write wins: a completion for a slab
+    /// that already holds results (a zombie worker posting after its lease
+    /// was re-issued and completed by someone else) is counted and ignored.
+    /// Returns `true` when the completion was a duplicate.
+    pub fn complete(&mut self, start: usize, evals: Vec<TrialEval>) -> bool {
+        let n = self.state.results.len();
+        if start >= n || start + evals.len() > n || evals.is_empty() {
+            self.stats.duplicate_completions += 1; // malformed ≙ ignored
+            return true;
+        }
+        if self.state.results[start].is_some() {
+            self.stats.duplicate_completions += 1;
+            return true;
+        }
+        for (off, ev) in evals.into_iter().enumerate() {
+            let i = start + off;
+            if let TrialEval::Scored { acc, .. } = &ev {
+                if self.base_acc - acc < self.adt {
+                    // Same accept propagation as the local scan's Phase 2.
+                    self.state.stop_at = Some(self.state.stop_at.map_or(i, |s| s.min(i)));
+                }
+            }
+            self.state.results[i] = Some(ev);
+        }
+        self.leases.remove(&start);
+        self.stats.completed_slabs += 1;
+        false
+    }
+
+    /// True when nothing is claimable and no lease is outstanding — the
+    /// exact analog of the local pool's "claim loop exhausted and every
+    /// worker joined".
+    pub fn done(&self) -> bool {
+        if !self.leases.is_empty() {
+            return false;
+        }
+        let n = self.state.results.len();
+        self.state.next >= n || self.state.stop_at.is_some_and(|stop| self.state.next > stop)
+    }
+
+    pub fn stats(&self) -> &LeaseStats {
+        &self.stats
+    }
+
+    pub fn into_results(self) -> (Vec<Option<TrialEval>>, LeaseStats) {
+        (self.state.results, self.stats)
+    }
+}
+
+/// The active scan job behind the HTTP handler.
+struct Job {
+    scan_id: usize,
+    doc_json: String,
+    slab_max: usize,
+    scan: LeasedScan,
+}
+
+/// Handler-shared coordinator state.
+struct Inner {
+    job: Option<Job>,
+    shutdown: bool,
+    total: LeaseStats,
+    blobs: Vec<BlobRef>,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    hello_json: String,
+    cas: CasStore,
+    epoch: Instant,
+}
+
+impl Shared {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+}
+
+/// The coordinator's HTTP face: serves `/config`, `/scan`, `/claim`,
+/// `/complete`, `/cas/<digest>` and `/health` to workers, and hands
+/// completed scans back to [`dist_scanner`].
+pub struct ScanServer {
+    http: Server,
+    shared: Arc<Shared>,
+}
+
+impl ScanServer {
+    pub fn start(bind: impl ToSocketAddrs, hello: &HelloDoc, cas: CasStore) -> Result<ScanServer> {
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                job: None,
+                shutdown: false,
+                total: LeaseStats::default(),
+                blobs: Vec::new(),
+            }),
+            cv: Condvar::new(),
+            hello_json: to_string(hello),
+            cas,
+            epoch: Instant::now(),
+        });
+        let s2 = Arc::clone(&shared);
+        let http = Server::start(bind, Arc::new(move |req: &Request| route(&s2, req)))?;
+        Ok(ScanServer { http, shared })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.http.addr()
+    }
+
+    /// Publish a named blob to the CAS, recording digest provenance for the
+    /// run manifest (see [`Self::take_blobs`]).
+    pub fn put_blob(&self, name: &str, bytes: &[u8]) -> Result<BlobRef> {
+        let put = self.shared.cas.put_bytes(bytes)?;
+        let blob = BlobRef {
+            name: name.to_string(),
+            digest: put.digest,
+            bytes: put.bytes as usize,
+        };
+        let mut g = self.shared.inner.lock().unwrap();
+        if !g.blobs.iter().any(|b| b.digest == blob.digest) {
+            g.blobs.push(blob.clone());
+        }
+        Ok(blob)
+    }
+
+    /// Drain the blob provenance recorded so far (stored into
+    /// `run.json` so `runs gc` can keep referenced blobs alive).
+    pub fn take_blobs(&self) -> Vec<BlobRef> {
+        std::mem::take(&mut self.shared.inner.lock().unwrap().blobs)
+    }
+
+    /// Lease/merge counters accumulated over all completed scans.
+    pub fn stats(&self) -> LeaseStats {
+        self.shared.inner.lock().unwrap().total.clone()
+    }
+
+    /// Flip `/scan` to the shutdown document so polling workers exit. The
+    /// server keeps answering until the `ScanServer` is dropped, giving
+    /// workers a window to observe the state.
+    pub fn shutdown(&self) {
+        self.shared.inner.lock().unwrap().shutdown = true;
+    }
+
+    /// Install `doc` (whose `hyps` has `n` entries) as the active job and
+    /// block until every slab is completed; returns the per-trial results
+    /// in index order plus this scan's lease stats.
+    pub fn run_scan(
+        &self,
+        doc: &ScanDoc,
+        lease_timeout_ms: u64,
+    ) -> Result<(Vec<Option<TrialEval>>, LeaseStats)> {
+        let n = doc.hyps.len();
+        let mut g = self.shared.inner.lock().unwrap();
+        ensure!(g.job.is_none(), "dist: a scan job is already active");
+        ensure!(!g.shutdown, "dist: coordinator is shutting down");
+        g.job = Some(Job {
+            scan_id: doc.scan,
+            doc_json: to_string(doc),
+            slab_max: doc.slab_max,
+            scan: LeasedScan::new(n, doc.base_acc, doc.adt, lease_timeout_ms),
+        });
+        while !g.job.as_ref().expect("installed above").scan.done() {
+            // The timeout is a liveness backstop only — completions notify.
+            let (g2, _) = self
+                .shared
+                .cv
+                .wait_timeout(g, Duration::from_millis(50))
+                .unwrap();
+            g = g2;
+        }
+        let job = g.job.take().expect("checked in loop");
+        let (results, stats) = job.scan.into_results();
+        g.total.add(&stats);
+        Ok((results, stats))
+    }
+}
+
+/// Dispatch one worker request against the shared coordinator state.
+fn route(sh: &Shared, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => Response::json(b"{\"ok\": true}".to_vec()),
+        ("GET", "/config") => Response::json(sh.hello_json.as_bytes().to_vec()),
+        ("GET", "/scan") => {
+            let g = sh.inner.lock().unwrap();
+            if g.shutdown {
+                Response::json(to_string(&ScanDoc::idle("shutdown")).into_bytes())
+            } else if let Some(job) = &g.job {
+                Response::json(job.doc_json.clone().into_bytes())
+            } else {
+                Response::json(to_string(&ScanDoc::idle("idle")).into_bytes())
+            }
+        }
+        ("POST", "/claim") => match from_str::<ClaimRequest>(
+            &String::from_utf8_lossy(&req.body),
+        ) {
+            Ok(creq) => {
+                let now = sh.now_ms();
+                let mut g = sh.inner.lock().unwrap();
+                let reply = match &mut g.job {
+                    Some(job) if job.scan_id == creq.scan => {
+                        let slab_max = job.slab_max;
+                        match job.scan.claim(&creq.worker, slab_max, now) {
+                            Some(grant) => ClaimReply {
+                                scan: creq.scan,
+                                slab: Some(grant),
+                                done: false,
+                                retry_ms: RETRY_MS,
+                            },
+                            None => ClaimReply {
+                                scan: creq.scan,
+                                slab: None,
+                                done: job.scan.done(),
+                                retry_ms: RETRY_MS,
+                            },
+                        }
+                    }
+                    // Stale or unknown scan generation: that scan is over.
+                    _ => ClaimReply { scan: creq.scan, slab: None, done: true, retry_ms: RETRY_MS },
+                };
+                Response::json(to_string(&reply).into_bytes())
+            }
+            Err(e) => Response::error(400, &format!("bad claim: {e}")),
+        },
+        ("POST", "/complete") => match from_str::<CompleteRequest>(
+            &String::from_utf8_lossy(&req.body),
+        ) {
+            Ok(creq) => {
+                let mut g = sh.inner.lock().unwrap();
+                let reply = match &mut g.job {
+                    Some(job) if job.scan_id == creq.scan => {
+                        let evals: Vec<TrialEval> =
+                            creq.evals.into_iter().map(WireEval::into_eval).collect();
+                        let duplicate = job.scan.complete(creq.start, evals);
+                        if job.scan.done() {
+                            sh.cv.notify_all();
+                        }
+                        CompleteReply { accepted: !duplicate, duplicate }
+                    }
+                    _ => CompleteReply { accepted: false, duplicate: true },
+                };
+                Response::json(to_string(&reply).into_bytes())
+            }
+            Err(e) => Response::error(400, &format!("bad complete: {e}")),
+        },
+        ("GET", path) if path.starts_with("/cas/") => {
+            let digest = &path["/cas/".len()..];
+            if !crate::cas::valid_digest(digest) {
+                return Response::error(400, "malformed digest");
+            }
+            if !sh.cas.contains(digest) {
+                return Response::error(404, &format!("no blob {digest}"));
+            }
+            match sh.cas.get(digest) {
+                Ok(bytes) => Response::binary(bytes),
+                Err(e) => Response::error(500, &format!("{e:#}")),
+            }
+        }
+        (m, p) => Response::error(404, &format!("no route {m} {p}")),
+    }
+}
+
+/// A [`crate::coordinator::bcd::TrialScanner`] that serves each iteration's
+/// scan to remote workers via `srv`: draw hypotheses (identical RNG
+/// consumption to the local scan), publish params to the CAS by digest,
+/// install the scan job, wait for workers, replay-merge. Plugged into
+/// [`crate::coordinator::bcd::run_bcd_resumable_with`], the surrounding BCD
+/// run checkpoints and resumes exactly like a local one.
+pub fn dist_scanner<'a>(
+    srv: &'a ScanServer,
+    cfg: &'a BcdConfig,
+    lease_timeout_ms: u64,
+) -> impl FnMut(&ScanArgs, &mut Rng) -> Result<ScanOutcome> + 'a {
+    as_scanner(move |a: &ScanArgs, rng: &mut Rng| {
+        let hyps = draw_hypotheses(a.mask, a.sampler, a.drc, cfg.rt, rng);
+        let mut bytes = Vec::with_capacity(a.params_host.data.len() * 4);
+        for f in &a.params_host.data {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        let blob = srv
+            .put_blob(&format!("params_sweep{}", a.sweep), &bytes)
+            .context("dist: publish params")?;
+        let dense = a.mask.dense();
+        let mask_removed: Vec<usize> =
+            (0..dense.len()).filter(|&i| dense[i] == 0.0).collect();
+        let doc = ScanDoc {
+            state: "scan".to_string(),
+            scan: a.sweep,
+            mask_size: a.mask.size(),
+            mask_removed,
+            params_digest: blob.digest,
+            params_len: a.params_host.data.len(),
+            base_acc: a.base_acc,
+            adt: cfg.adt,
+            slab_max: a.ev.slab_width(),
+            hyps: hyps.iter().map(|d| d.indices().to_vec()).collect(),
+        };
+        let (results, stats) = srv.run_scan(&doc, lease_timeout_ms)?;
+        crate::info!(
+            "dist: sweep {} scored by workers ({} slabs, {} claims, {} reissued, {} dup)",
+            a.sweep,
+            stats.completed_slabs,
+            stats.claims_issued,
+            stats.leases_reissued,
+            stats.duplicate_completions
+        );
+        Ok(replay_merge(&hyps, results, a.base_acc, cfg.adt, |corrects, floor| {
+            a.ev.would_bound(corrects, floor)
+        }))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scored(acc: f64) -> TrialEval {
+        TrialEval::Scored { acc, batch_corrects: vec![acc] }
+    }
+
+    #[test]
+    fn lease_reissue_after_timeout_lowest_start_first() {
+        // 10 trials, slabs of 4, 100 ms leases.
+        let mut ls = LeasedScan::new(10, 80.0, 0.5, 100);
+        let a = ls.claim("a", 4, 0).unwrap();
+        let b = ls.claim("b", 4, 0).unwrap();
+        assert_eq!((a.start, a.len), (0, 4));
+        assert_eq!((b.start, b.len), (4, 4));
+        // Nothing expired yet: next claim gets the in-order tail.
+        let c = ls.claim("c", 4, 50).unwrap();
+        assert_eq!((c.start, c.len), (8, 2));
+        assert!(ls.claim("d", 4, 50).is_none(), "all slabs leased");
+        // Workers a and b die; at t=200 both leases are expired — re-issue
+        // lowest start first, original length preserved.
+        let r1 = ls.claim("d", 4, 200).unwrap();
+        assert_eq!((r1.start, r1.len), (0, 4));
+        let r2 = ls.claim("e", 4, 200).unwrap();
+        assert_eq!((r2.start, r2.len), (4, 4));
+        assert_eq!(ls.stats().leases_reissued, 2);
+        assert_eq!(ls.stats().claims_issued, 5);
+    }
+
+    #[test]
+    fn reissued_floor_uses_completed_lower_results() {
+        let mut ls = LeasedScan::new(6, 80.0, 0.5, 100);
+        let a = ls.claim("a", 2, 0).unwrap(); // 0..2
+        let _b = ls.claim("b", 2, 0).unwrap(); // 2..4
+        assert_eq!(a.floor, 0.0);
+        assert!(!ls.complete(0, vec![scored(70.0), scored(72.0)]));
+        // b dies; the re-issue at t=200 sees the completed floor below 2.
+        let r = ls.claim("c", 2, 200).unwrap();
+        assert_eq!((r.start, r.floor), (2, 72.0));
+    }
+
+    #[test]
+    fn duplicate_completion_is_ignored_first_write_wins() {
+        let mut ls = LeasedScan::new(4, 80.0, 0.5, 100);
+        let _a = ls.claim("a", 4, 0).unwrap();
+        assert!(!ls.complete(0, vec![scored(70.0), scored(71.0), scored(72.0), scored(73.0)]));
+        // Zombie posts different numbers: ignored, counted, results frozen.
+        assert!(ls.complete(0, vec![scored(1.0), scored(2.0), scored(3.0), scored(4.0)]));
+        let (results, stats) = ls.into_results();
+        assert_eq!(results[0], Some(scored(70.0)));
+        assert_eq!(stats.duplicate_completions, 1);
+        assert_eq!(stats.completed_slabs, 1);
+    }
+
+    #[test]
+    fn accept_sets_stop_and_done_requires_empty_leases() {
+        let mut ls = LeasedScan::new(10, 80.0, 0.5, 100);
+        let _a = ls.claim("a", 4, 0).unwrap(); // 0..4
+        let _b = ls.claim("b", 4, 0).unwrap(); // 4..8
+        // b completes with an accept at index 5 (dacc 0.2 < adt 0.5).
+        assert!(!ls.complete(4, vec![scored(70.0), scored(79.8), scored(71.0), scored(72.0)]));
+        // No slab beyond the accept is claimable, but a's lease is live.
+        assert!(ls.claim("c", 4, 10).is_none());
+        assert!(!ls.done(), "outstanding lease blocks done");
+        assert!(!ls.complete(0, vec![scored(60.0), scored(61.0), scored(62.0), scored(63.0)]));
+        assert!(ls.done());
+    }
+}

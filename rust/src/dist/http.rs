@@ -1,0 +1,317 @@
+//! Dependency-free HTTP/1.1 framing for the dist protocol.
+//!
+//! Just enough of the protocol for coordinator/worker exchange on a trusted
+//! network: one request per connection (`Connection: close` semantics),
+//! bodies framed by an exact `Content-Length`, and a serial accept loop.
+//! Parsing is strict by design — anything malformed (missing or non-numeric
+//! content-length, truncated body, oversized body) is a typed error rather
+//! than a best-effort read, because wire corruption must never masquerade
+//! as an empty result.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Hard cap on request/response bodies (params blobs dominate; 64 MiB is
+/// ~16M f32 parameters, far above any model in the zoo).
+pub const MAX_BODY: usize = 64 << 20;
+
+/// Per-stream read/write timeout; a stalled peer cannot wedge the accept loop.
+const IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(body: impl Into<Vec<u8>>) -> Response {
+        Response { status: 200, content_type: "application/json", body: body.into() }
+    }
+
+    pub fn binary(body: Vec<u8>) -> Response {
+        Response { status: 200, content_type: "application/octet-stream", body }
+    }
+
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response { status, content_type: "text/plain", body: msg.as_bytes().to_vec() }
+    }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Read header lines up to the blank separator, returning the start line and
+/// the parsed `Content-Length` (0 when absent).
+fn read_head(r: &mut impl BufRead) -> Result<(String, usize)> {
+    let mut start = String::new();
+    if r.read_line(&mut start)? == 0 {
+        bail!("connection closed before request line");
+    }
+    let start = start.trim_end().to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            bail!("connection closed inside headers");
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("bad content-length {:?}", value.trim()))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("content-length {content_length} exceeds limit {MAX_BODY}");
+    }
+    Ok((start, content_length))
+}
+
+/// Read exactly `len` body bytes; a short read is a hard error ("truncated
+/// body"), never silently padded or trimmed.
+fn read_body(r: &mut impl BufRead, len: usize) -> Result<Vec<u8>> {
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .map_err(|e| anyhow::anyhow!("truncated body (wanted {len} bytes): {e}"))?;
+    Ok(body)
+}
+
+/// Parse one HTTP/1.1 request from a buffered stream.
+pub fn read_request(r: &mut impl BufRead) -> Result<Request> {
+    let (start, len) = read_head(r)?;
+    let mut parts = start.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        bail!("malformed request line {start:?}");
+    }
+    let body = read_body(r, len)?;
+    Ok(Request { method, path, body })
+}
+
+/// Parse one HTTP/1.1 response from a buffered stream.
+pub fn read_response(r: &mut impl BufRead) -> Result<Response> {
+    let (start, len) = read_head(r)?;
+    let status = start
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .with_context(|| format!("malformed status line {start:?}"))?;
+    let body = read_body(r, len)?;
+    Ok(Response { status, content_type: "application/octet-stream", body })
+}
+
+pub fn write_request(w: &mut impl Write, method: &str, path: &str, body: &[u8]) -> Result<()> {
+    write!(
+        w,
+        "{method} {path} HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn write_response(w: &mut impl Write, resp: &Response) -> Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len()
+    )?;
+    w.write_all(&resp.body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// One round trip against `addr`: connect, send, read the reply. Non-2xx
+/// replies become errors carrying the server's message body.
+pub fn http_call(addr: &str, method: &str, path: &str, body: &[u8]) -> Result<Vec<u8>> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let mut w = stream.try_clone()?;
+    write_request(&mut w, method, path, body)?;
+    let resp = read_response(&mut BufReader::new(stream))
+        .with_context(|| format!("{method} {path} on {addr}"))?;
+    if resp.status != 200 {
+        bail!(
+            "{method} {path} on {addr}: HTTP {} — {}",
+            resp.status,
+            String::from_utf8_lossy(&resp.body)
+        );
+    }
+    Ok(resp.body)
+}
+
+pub fn http_get(addr: &str, path: &str) -> Result<Vec<u8>> {
+    http_call(addr, "GET", path, &[])
+}
+
+pub fn http_post(addr: &str, path: &str, body: &[u8]) -> Result<Vec<u8>> {
+    http_call(addr, "POST", path, body)
+}
+
+/// A minimal single-threaded HTTP server: a background accept loop that
+/// hands each request to `handler`. Requests are served serially — the
+/// handler owns all shared state behind its own locks, and the claim/
+/// complete endpoints are cheap (the expensive work happens on workers).
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(
+        bind: impl ToSocketAddrs,
+        handler: Arc<dyn Fn(&Request) -> Response + Send + Sync>,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(bind).context("dist: bind listener")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let _ = serve_one(stream, handler.as_ref());
+            }
+        });
+        Ok(Server { addr, stop, thread: Some(thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop. A self-connection wakes the blocking `accept`
+    /// so the thread observes the flag promptly.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_one(stream: TcpStream, handler: &(dyn Fn(&Request) -> Response)) -> Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let mut w = stream.try_clone()?;
+    let resp = match read_request(&mut BufReader::new(stream)) {
+        Ok(req) => handler(&req),
+        Err(e) => Response::error(400, &format!("bad request: {e:#}")),
+    };
+    write_response(&mut w, &resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn raw_request(head: &str, body: &[u8]) -> Vec<u8> {
+        let mut v = head.as_bytes().to_vec();
+        v.extend_from_slice(body);
+        v
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, "POST", "/claim", b"{\"worker\":\"w0\"}").unwrap();
+        let req = read_request(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/claim");
+        assert_eq!(req.body, b"{\"worker\":\"w0\"}");
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, &Response::json(b"{}".to_vec())).unwrap();
+        let resp = read_response(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"{}");
+    }
+
+    #[test]
+    fn truncated_body_is_rejected() {
+        // Content-Length promises 10 bytes, the stream carries 4.
+        let raw = raw_request("POST /claim HTTP/1.1\r\nContent-Length: 10\r\n\r\n", b"{\"a\"");
+        let err = read_request(&mut Cursor::new(raw)).unwrap_err().to_string();
+        assert!(err.contains("truncated body"), "got: {err}");
+    }
+
+    #[test]
+    fn bad_content_length_is_rejected() {
+        let raw = raw_request("POST /claim HTTP/1.1\r\nContent-Length: banana\r\n\r\n", b"");
+        let err = format!("{:#}", read_request(&mut Cursor::new(raw)).unwrap_err());
+        assert!(err.contains("bad content-length"), "got: {err}");
+    }
+
+    #[test]
+    fn oversized_content_length_is_rejected() {
+        let head = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        let err = read_request(&mut Cursor::new(head.into_bytes())).unwrap_err().to_string();
+        assert!(err.contains("exceeds limit"), "got: {err}");
+    }
+
+    #[test]
+    fn server_serves_and_stops() {
+        let mut srv = Server::start(
+            "127.0.0.1:0",
+            Arc::new(|req: &Request| {
+                if req.path == "/echo" {
+                    Response::json(req.body.clone())
+                } else {
+                    Response::error(404, "no such route")
+                }
+            }),
+        )
+        .unwrap();
+        let addr = srv.addr().to_string();
+        assert_eq!(http_post(&addr, "/echo", b"ping").unwrap(), b"ping");
+        let err = http_get(&addr, "/missing").unwrap_err().to_string();
+        assert!(err.contains("404"), "got: {err}");
+        srv.stop();
+    }
+}

@@ -1,0 +1,36 @@
+//! Distributed trial scan over HTTP (DESIGN.md §15).
+//!
+//! Scales the BCD hypothesis scan past one machine with a dependency-free
+//! coordinator/worker protocol over `std::net`:
+//!
+//! - [`http`] — minimal HTTP/1.1 framing: one request per connection,
+//!   exact `Content-Length` bodies, strict parse errors.
+//! - [`wire`] — the typed JSON messages (`/config`, `/scan`, `/claim`,
+//!   `/complete`), bit-exact across the float round trip.
+//! - [`coordinator`] — the lease layer over the local scan's
+//!   claim-slab semantics plus the [`ScanServer`]; [`dist_scanner`] plugs
+//!   into [`crate::coordinator::bcd::run_bcd_resumable_with`], so a
+//!   distributed run checkpoints and resumes from the same `run.json`
+//!   cursors as a local one.
+//! - [`worker`] — the stateless scoring loop: cold-start by config
+//!   fingerprint and CAS params digest, claim, score, post.
+//!
+//! The contract: the merged [`crate::coordinator::trials::ScanOutcome`] is
+//! **bit-identical** to a single-machine scan for any worker membership,
+//! join/leave timing, or duplicate completion. Workers may die holding
+//! leases (re-issued after a timeout), rejoin mid-scan, or double-post
+//! (first write wins) — `rust/tests/integration_dist.rs` injects all three
+//! and asserts bit-identity of the full BCD run.
+//!
+//! Exercised from the CLI as `cdnl coordinate --listen <addr>` plus one or
+//! more `cdnl worker --connect <addr>` processes (see the README
+//! "Distributed" quickstart).
+
+pub mod coordinator;
+pub mod http;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{dist_scanner, LeaseStats, LeasedScan, ScanServer, DEFAULT_LEASE_MS};
+pub use wire::{HelloDoc, ScanDoc, WIRE_FORMAT};
+pub use worker::{run_worker, WorkerOpts, WorkerSummary};

@@ -1,0 +1,270 @@
+//! Typed wire messages for the coordinator/worker protocol.
+//!
+//! All messages are JSON over the [`super::http`] framing, (de)serialized
+//! through the crate's hand-rolled serde layer ([`crate::util::serde`]).
+//! Floats survive the wire bit-exactly: Rust's `f64` Display emits the
+//! shortest round-trippable decimal and `parse::<f64>()` is correctly
+//! rounded, so accuracies and per-batch correct counts deserialize to the
+//! same bits the worker computed — a precondition for the bit-identical
+//! replay merge (DESIGN.md §15).
+//!
+//! The JSON parser rejects trailing garbage, so a stream that concatenates
+//! two documents (e.g. duplicate claim replies smashed into one body) fails
+//! loudly instead of silently taking the first.
+
+use crate::coordinator::eval::TrialEval;
+use crate::derive_serde;
+use std::collections::BTreeMap;
+
+/// `GET /config` — everything a cold worker needs to reconstruct the
+/// coordinator's experiment: backend name, model key, dataset, the full
+/// semantic config dump, and its fingerprint (the worker recomputes and
+/// cross-checks before scoring anything).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HelloDoc {
+    pub format: usize,
+    pub backend: String,
+    pub model_key: String,
+    pub dataset: String,
+    pub fingerprint: String,
+    pub config: BTreeMap<String, String>,
+}
+derive_serde!(HelloDoc { format, backend, model_key, dataset, fingerprint, config });
+
+/// Wire format version for [`HelloDoc::format`].
+pub const WIRE_FORMAT: usize = 1;
+
+impl HelloDoc {
+    /// The hello document for one experiment served by `backend`.
+    pub fn for_experiment(exp: &crate::config::Experiment, backend: &str) -> HelloDoc {
+        HelloDoc {
+            format: WIRE_FORMAT,
+            backend: backend.to_string(),
+            model_key: exp.model_key(),
+            dataset: exp.dataset.clone(),
+            fingerprint: exp.fingerprint(),
+            config: exp.dump(),
+        }
+    }
+}
+
+/// `GET /scan` — the current scan job, or an idle/shutdown marker.
+/// `state` is `"scan"` (fields below are live), `"idle"` (between sweeps),
+/// or `"shutdown"` (workers should exit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScanDoc {
+    pub state: String,
+    pub scan: usize,
+    pub mask_size: usize,
+    pub mask_removed: Vec<usize>,
+    pub params_digest: String,
+    pub params_len: usize,
+    pub base_acc: f64,
+    pub adt: f64,
+    pub slab_max: usize,
+    pub hyps: Vec<Vec<usize>>,
+}
+derive_serde!(ScanDoc {
+    state,
+    scan,
+    mask_size,
+    mask_removed,
+    params_digest,
+    params_len,
+    base_acc,
+    adt,
+    slab_max,
+    hyps,
+});
+
+impl ScanDoc {
+    pub fn idle(state: &str) -> ScanDoc {
+        ScanDoc {
+            state: state.to_string(),
+            scan: 0,
+            mask_size: 0,
+            mask_removed: Vec::new(),
+            params_digest: String::new(),
+            params_len: 0,
+            base_acc: 0.0,
+            adt: 0.0,
+            slab_max: 0,
+            hyps: Vec::new(),
+        }
+    }
+}
+
+/// `POST /claim` request: which worker asks, for which scan generation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClaimRequest {
+    pub worker: String,
+    pub scan: usize,
+}
+derive_serde!(ClaimRequest { worker, scan });
+
+/// One granted slab: trials `start..start+len`, scored against `floor`
+/// (the branch-and-bound accuracy floor at grant time).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlabGrant {
+    pub start: usize,
+    pub len: usize,
+    pub floor: f64,
+}
+derive_serde!(SlabGrant { start, len, floor });
+
+/// `POST /claim` reply. `slab: None` with `done: false` means nothing is
+/// claimable *right now* (outstanding leases may still expire) — retry
+/// after `retry_ms`. `done: true` means the scan generation is finished.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClaimReply {
+    pub scan: usize,
+    pub slab: Option<SlabGrant>,
+    pub done: bool,
+    pub retry_ms: usize,
+}
+derive_serde!(ClaimReply { scan, slab, done, retry_ms });
+
+/// One trial result on the wire. `bounded: true` means branch-and-bound cut
+/// the trial (no score); otherwise `acc`/`corrects` carry the full
+/// [`TrialEval::Scored`] payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireEval {
+    pub bounded: bool,
+    pub acc: f64,
+    pub corrects: Vec<f64>,
+}
+derive_serde!(WireEval { bounded, acc, corrects });
+
+impl WireEval {
+    pub fn from_eval(ev: &TrialEval) -> WireEval {
+        match ev {
+            TrialEval::Bounded => {
+                WireEval { bounded: true, acc: 0.0, corrects: Vec::new() }
+            }
+            TrialEval::Scored { acc, batch_corrects } => WireEval {
+                bounded: false,
+                acc: *acc,
+                corrects: batch_corrects.clone(),
+            },
+        }
+    }
+
+    pub fn into_eval(self) -> TrialEval {
+        if self.bounded {
+            TrialEval::Bounded
+        } else {
+            TrialEval::Scored { acc: self.acc, batch_corrects: self.corrects }
+        }
+    }
+}
+
+/// `POST /complete` request: the scored slab starting at `start`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompleteRequest {
+    pub worker: String,
+    pub scan: usize,
+    pub start: usize,
+    pub evals: Vec<WireEval>,
+}
+derive_serde!(CompleteRequest { worker, scan, start, evals });
+
+/// `POST /complete` reply. A duplicate completion (slab already merged,
+/// e.g. from a zombie worker whose lease was re-issued) is acknowledged
+/// with `accepted: false, duplicate: true` — idempotent, never an error.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompleteReply {
+    pub accepted: bool,
+    pub duplicate: bool,
+}
+derive_serde!(CompleteReply { accepted, duplicate });
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::serde::{from_str, to_string};
+
+    fn sample_reply() -> ClaimReply {
+        ClaimReply {
+            scan: 3,
+            slab: Some(SlabGrant { start: 8, len: 4, floor: 71.25 }),
+            done: false,
+            retry_ms: 50,
+        }
+    }
+
+    #[test]
+    fn claim_roundtrip() {
+        let r = sample_reply();
+        let back: ClaimReply = from_str(&to_string(&r)).unwrap();
+        assert_eq!(back, r);
+        // No-grant reply keeps slab as None.
+        let none = ClaimReply { scan: 3, slab: None, done: true, retry_ms: 0 };
+        let back: ClaimReply = from_str(&to_string(&none)).unwrap();
+        assert_eq!(back, none);
+    }
+
+    #[test]
+    fn eval_roundtrip_is_bit_exact() {
+        // Adversarial floats: values with no short decimal representation.
+        let ev = TrialEval::Scored {
+            acc: 0.1 + 0.2, // 0.30000000000000004
+            batch_corrects: vec![1.0 / 3.0, f64::MIN_POSITIVE, 123456789.000000123],
+        };
+        let req = CompleteRequest {
+            worker: "w1".into(),
+            scan: 1,
+            start: 0,
+            evals: vec![WireEval::from_eval(&ev), WireEval::from_eval(&TrialEval::Bounded)],
+        };
+        let back: CompleteRequest = from_str(&to_string(&req)).unwrap();
+        assert_eq!(back.evals[0].clone().into_eval(), ev, "floats must round-trip bit-exactly");
+        assert_eq!(back.evals[1].clone().into_eval(), TrialEval::Bounded);
+    }
+
+    #[test]
+    fn scan_doc_roundtrip() {
+        let doc = ScanDoc {
+            state: "scan".into(),
+            scan: 2,
+            mask_size: 100,
+            mask_removed: vec![3, 17],
+            params_digest: "ab".repeat(32),
+            params_len: 1234,
+            base_acc: 81.5,
+            adt: 0.5,
+            slab_max: 8,
+            hyps: vec![vec![1, 2], vec![3]],
+        };
+        let back: ScanDoc = from_str(&to_string(&doc)).unwrap();
+        assert_eq!(back, doc);
+        assert_eq!(ScanDoc::idle("idle").state, "idle");
+    }
+
+    #[test]
+    fn truncated_json_is_rejected() {
+        let full = to_string(&sample_reply());
+        let cut = &full[..full.len() - 5];
+        assert!(from_str::<ClaimReply>(cut).is_err(), "truncated doc must not parse");
+    }
+
+    #[test]
+    fn concatenated_replies_are_rejected() {
+        // Two claim replies smashed into one body (e.g. a duplicated reply on
+        // a confused stream): the parser rejects trailing garbage rather than
+        // silently taking the first document.
+        let one = to_string(&sample_reply());
+        let doubled = format!("{one}{one}");
+        let err = from_str::<ClaimReply>(&doubled).unwrap_err();
+        assert!(err.contains("trailing garbage"), "got: {err}");
+    }
+
+    #[test]
+    fn wrong_typed_fields_are_rejected() {
+        let err = from_str::<ClaimRequest>(r#"{"worker": 7, "scan": 0}"#).unwrap_err();
+        assert!(err.contains("worker"), "error should name the field: {err}");
+        let err =
+            from_str::<CompleteRequest>(r#"{"worker": "w", "scan": 1, "start": -3, "evals": []}"#)
+                .unwrap_err();
+        assert!(err.contains("start"), "error should name the field: {err}");
+    }
+}

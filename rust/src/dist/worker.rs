@@ -1,0 +1,252 @@
+//! Worker side of the distributed trial scan.
+//!
+//! A worker is stateless between scans: it cold-starts from the
+//! coordinator's `/config` document (rebuilding the experiment from the
+//! config dump and cross-checking the fingerprint), scores with its local
+//! [`Backend`], and fetches model params by digest from the coordinator's
+//! CAS — verifying the streaming checksum after download, so a corrupted
+//! transfer can never be scored. Trial slabs are claimed over `/claim` and
+//! posted back over `/complete`; the lease layer on the coordinator makes
+//! every step idempotent, so a worker may die, rejoin, or double-post at
+//! any point without affecting the merged outcome (DESIGN.md §15).
+//!
+//! [`WorkerOpts`] carries fault-injection knobs (`max_slabs`,
+//! `die_after_claim`, `duplicate_completions`) used by the loopback
+//! integration test to prove exactly that.
+
+use crate::cas::digest_hex;
+use crate::config::Experiment;
+use crate::coordinator::eval::{EvalOpts, Evaluator};
+use crate::data::synth;
+use crate::dist::http::{http_get, http_post};
+use crate::dist::wire::{
+    ClaimReply, ClaimRequest, CompleteReply, CompleteRequest, HelloDoc, ScanDoc, WireEval,
+    WIRE_FORMAT,
+};
+use crate::model::{Mask, MaskDelta};
+use crate::runtime::backend::Backend;
+use crate::runtime::session::Session;
+use crate::tensor::Tensor;
+use crate::util::serde::{from_str, to_string, Deserialize, Serialize};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::time::Duration;
+
+/// Worker identity, pacing, and fault-injection knobs.
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    /// Worker name echoed in claims (diagnostics only — the protocol is
+    /// membership-agnostic).
+    pub id: String,
+    /// `/scan` poll interval while idle.
+    pub poll_ms: u64,
+    /// Fault injection: exit cleanly after completing this many slabs
+    /// (simulates a worker leaving mid-scan).
+    pub max_slabs: Option<usize>,
+    /// Fault injection: claim the N-th slab and exit WITHOUT completing it
+    /// (simulates a worker dying with a lease held — the coordinator must
+    /// re-issue it after the lease timeout).
+    pub die_after_claim: Option<usize>,
+    /// Fault injection: post every completion twice (simulates a zombie's
+    /// duplicate; the coordinator must ignore the second, first write wins).
+    pub duplicate_completions: bool,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> Self {
+        WorkerOpts {
+            id: format!("worker-{}", std::process::id()),
+            poll_ms: 50,
+            max_slabs: None,
+            die_after_claim: None,
+            duplicate_completions: false,
+        }
+    }
+}
+
+/// What a worker did before exiting (for logs and test assertions).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerSummary {
+    /// Slabs completed (posted back).
+    pub slabs: usize,
+    /// Trials scored across those slabs.
+    pub trials: usize,
+    /// Distinct scan generations this worker contributed to.
+    pub scans: usize,
+}
+
+fn get_json<T: Deserialize>(addr: &str, path: &str) -> Result<T> {
+    let body = http_get(addr, path)?;
+    let text = std::str::from_utf8(&body).context("non-UTF8 reply")?;
+    from_str(text).map_err(|e| anyhow!("GET {path}: bad reply: {e}"))
+}
+
+fn post_json<Q: Serialize, R: Deserialize>(addr: &str, path: &str, req: &Q) -> Result<R> {
+    let body = http_post(addr, path, to_string(req).as_bytes())?;
+    let text = std::str::from_utf8(&body).context("non-UTF8 reply")?;
+    from_str(text).map_err(|e| anyhow!("POST {path}: bad reply: {e}"))
+}
+
+/// Join the coordinator at `connect` and score scans until it announces
+/// shutdown (or a fault-injection knob fires). The worker's backend must
+/// match the coordinator's — numerics from different backends must never
+/// mix inside one scan.
+pub fn run_worker(connect: &str, backend: &dyn Backend, opts: &WorkerOpts) -> Result<WorkerSummary> {
+    let hello: HelloDoc = get_json(connect, "/config")?;
+    ensure!(
+        hello.format == WIRE_FORMAT,
+        "dist: coordinator speaks wire format {}, this worker {}",
+        hello.format,
+        WIRE_FORMAT
+    );
+    ensure!(
+        hello.backend == backend.name(),
+        "dist: coordinator runs backend {:?}, this worker {:?} — refusing to mix numerics",
+        hello.backend,
+        backend.name()
+    );
+    // Rebuild the experiment from the coordinator's config dump and prove
+    // we understood every semantic key by recomputing the fingerprint.
+    let mut exp = Experiment::default();
+    for (k, v) in &hello.config {
+        exp.apply(k, v).map_err(|e| anyhow!("dist: coordinator config: {e}"))?;
+    }
+    ensure!(
+        exp.fingerprint() == hello.fingerprint,
+        "dist: config fingerprint mismatch (coordinator {}, rebuilt {}) — version skew?",
+        hello.fingerprint,
+        exp.fingerprint()
+    );
+    ensure!(
+        exp.model_key() == hello.model_key,
+        "dist: model key mismatch (coordinator {:?}, rebuilt {:?})",
+        hello.model_key,
+        exp.model_key()
+    );
+    let sess = Session::new(backend, &hello.model_key)?;
+    let spec = synth::by_name(&exp.dataset)
+        .ok_or_else(|| anyhow!("dist: unknown dataset {:?}", exp.dataset))?;
+    let (train_ds, _test_ds) = synth::generate(spec);
+    let ev = Evaluator::with_opts(
+        &sess,
+        &train_ds,
+        exp.bcd.proxy_batches,
+        EvalOpts {
+            cache_bytes: exp.bcd.cache_mb.saturating_mul(1 << 20),
+            trial_batch: exp.bcd.trial_batch,
+            verify_staged: exp.bcd.verify_staged,
+            verify_lowering: exp.bcd.verify_lowering,
+        },
+    )?;
+    crate::info!(
+        "dist: {} joined {connect} (backend {}, model {}, fingerprint {})",
+        opts.id,
+        hello.backend,
+        hello.model_key,
+        hello.fingerprint
+    );
+
+    let mut summary = WorkerSummary::default();
+    let mut last_scan = 0usize;
+    let mut claims_granted = 0usize;
+    // Params cache: consecutive polls of one sweep reuse the download.
+    let mut cached_params: Option<(String, crate::runtime::backend::DeviceBuf)> = None;
+    loop {
+        let doc: ScanDoc = get_json(connect, "/scan")?;
+        match doc.state.as_str() {
+            "shutdown" => break,
+            "scan" if doc.scan != last_scan => {}
+            _ => {
+                std::thread::sleep(Duration::from_millis(opts.poll_ms));
+                continue;
+            }
+        }
+
+        // Cold-start this sweep: params by digest (verified), mask, hyps.
+        let stale =
+            cached_params.as_ref().map(|(d, _)| *d != doc.params_digest).unwrap_or(true);
+        if stale {
+            let bytes = http_get(connect, &format!("/cas/{}", doc.params_digest))?;
+            ensure!(
+                digest_hex(&bytes) == doc.params_digest,
+                "dist: params blob failed checksum after download"
+            );
+            ensure!(
+                bytes.len() == doc.params_len * 4,
+                "dist: params blob is {} bytes, expected {}",
+                bytes.len(),
+                doc.params_len * 4
+            );
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let buf = ev.upload_params(&Tensor::new(vec![doc.params_len], data))?;
+            cached_params = Some((doc.params_digest.clone(), buf));
+        }
+        let params = &cached_params.as_ref().expect("cached above").1;
+        let mut mask = Mask::full(doc.mask_size);
+        mask.apply_removal(&doc.mask_removed)?;
+        let hyps: Vec<MaskDelta> =
+            doc.hyps.iter().map(|ix| MaskDelta::new(ix.clone())).collect();
+        ev.begin_iteration(&mask)?;
+
+        let mut scratch: Vec<f32> = Vec::with_capacity(mask.size());
+        loop {
+            let reply: ClaimReply = post_json(
+                connect,
+                "/claim",
+                &ClaimRequest { worker: opts.id.clone(), scan: doc.scan },
+            )?;
+            let Some(grant) = reply.slab else {
+                if reply.done {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(reply.retry_ms as u64));
+                continue;
+            };
+            claims_granted += 1;
+            if opts.die_after_claim == Some(claims_granted) {
+                // Simulated death: the lease dangles until it expires.
+                crate::info!("dist: {} dying with lease {}..{} held", opts.id, grant.start, grant.start + grant.len);
+                return Ok(summary);
+            }
+            let evals = ev.eval_trial_slab(
+                params,
+                &mask,
+                &hyps[grant.start..grant.start + grant.len],
+                grant.floor,
+                &mut scratch,
+            )?;
+            let creq = CompleteRequest {
+                worker: opts.id.clone(),
+                scan: doc.scan,
+                start: grant.start,
+                evals: evals.iter().map(WireEval::from_eval).collect(),
+            };
+            let posted: CompleteReply = post_json(connect, "/complete", &creq)?;
+            if opts.duplicate_completions {
+                let dup: CompleteReply = post_json(connect, "/complete", &creq)?;
+                if posted.accepted && !dup.duplicate {
+                    bail!("dist: coordinator accepted a duplicate completion");
+                }
+            }
+            summary.slabs += 1;
+            summary.trials += grant.len;
+            if opts.max_slabs == Some(summary.slabs) {
+                crate::info!("dist: {} leaving after {} slabs", opts.id, summary.slabs);
+                return Ok(summary);
+            }
+        }
+        ev.flush_cache_stats();
+        last_scan = doc.scan;
+        summary.scans += 1;
+    }
+    crate::info!(
+        "dist: {} exiting after {} scans / {} slabs / {} trials",
+        opts.id,
+        summary.scans,
+        summary.slabs,
+        summary.trials
+    );
+    Ok(summary)
+}

@@ -60,11 +60,23 @@
 //! simulator [`pi::serve`] behind `cdnl serve` and the `serve` bench
 //! tier. The pre-PR-9 [`picost`]/[`protosim`] paths remain as deprecated
 //! shims.
+//!
+//! The scan also scales past one machine (DESIGN.md §15): [`dist`] is a
+//! dependency-free HTTP coordinator/worker protocol (leased slab claims,
+//! idempotent completions, the same sequential replay merge — so the
+//! outcome stays bit-identical for any worker membership), and [`cas`] is
+//! the content-addressed blob store workers cold-start from (digest-keyed
+//! params/checkpoints, streaming FNV-256 verification on write and read).
+//! `cdnl coordinate --listen` / `cdnl worker --connect` drive them; run
+//! manifests carry blob-digest provenance so `cdnl runs gc` never collects
+//! a referenced blob.
 
 pub mod bench;
+pub mod cas;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod metrics;
 pub mod methods;
 pub mod model;

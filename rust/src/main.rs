@@ -26,6 +26,23 @@
 //!                <run-id>`) or a checkpoint (`--ckpt`) under the
 //!                experiment's `pi.*` fleet shape; --record seals the
 //!                report into the run manifest
+//!   coordinate   a BCD run whose trial scan is served to HTTP workers
+//!                (DESIGN.md §15): `coordinate --listen HOST:PORT
+//!                --budget N` records a resumable run exactly like `cdnl
+//!                run bcd` (`--resume RUN_ID` continues one); workers may
+//!                join, die and rejoin freely — the outcome is
+//!                bit-identical to a local run
+//!   worker       join a coordinator: `worker --connect HOST:PORT [--id
+//!                NAME] [--poll-ms N]`; cold-starts from the
+//!                coordinator's /config and CAS params digest, scores
+//!                leased trial slabs until the coordinator shuts down
+//!   cas          the content-addressed blob store under <out>/cas
+//!                (DESIGN.md §15; digests verified on write AND read):
+//!                  cas put <file>              store, print digest
+//!                  cas get <digest> --save F   fetch + verify
+//!                  cas verify [<digest>]       re-hash all (or one)
+//!                  cas gc [--dry-run]          remove blobs no run
+//!                                              manifest references
 //!   bench        the benchmark registry (DESIGN.md §9):
 //!                  bench list           every registered benchmark + tier
 //!                  bench run <name>     run one benchmark, write
@@ -45,20 +62,27 @@
 //!                                       sweep trace, recorded stats
 //!                  runs resume <id>     continue an interrupted BCD run
 //!                  runs gc [--keep N] [--all] [--dry-run]
-//!                                       delete old run directories
-//!                                       (--dry-run previews, deletes nothing)
+//!                                       delete old run directories and the
+//!                                       CAS blobs only they referenced
+//!                                       (--dry-run previews both, deletes
+//!                                       nothing; blobs referenced by any
+//!                                       surviving manifest are never
+//!                                       collected)
 //!
 //! Shared flags: --dataset synth10|synth100|synthtiny  --backbone resnet|wrn
 //! --poly  --preset quick|full  --set k=v[,k=v...]  --artifacts DIR
 //! --backend auto|pjrt|reference  --out DIR  --ckpt FILE  --ref-budget N
 //! --budget N  --budgets b1,b2,...  --proto lan|wan|mobile  --verbose
-//! --no-record
+//! --no-record  --listen HOST:PORT  --connect HOST:PORT  --lease-ms N
+//! --poll-ms N  --id NAME
 //!
 //! Examples:
 //!   cdnl train --dataset synth10
 //!   cdnl run bcd --dataset synth10 --budget 1000 --ref-budget 2000
 //!   cdnl run snl+bcd --budgets 2000,1000
 //!   cdnl runs resume bcd-resnet_16x16_c10-5fa3c1d2-1
+//!   cdnl coordinate --listen 127.0.0.1:7070 --budget 1000
+//!   cdnl worker --connect 127.0.0.1:7070
 //!   cdnl picost --ckpt results/resnet_16x16_c10__synth10_bcd_b1000.cdnl
 //!   cdnl serve bcd-resnet_16x16_c10-5fa3c1d2-1 --proto wan --record
 
@@ -68,13 +92,13 @@ use cdnl::coordinator::eval::test_accuracy;
 use cdnl::methods::registry::{self, BcdSummary, ChainSpec, Method, MethodOutcome};
 use cdnl::model::ModelState;
 use cdnl::pipeline::Pipeline;
-use cdnl::runstore::{RunDir, RunResult, RunStore, COMPLETE, FAILED, RUNNING};
+use cdnl::runstore::{RunDir, RunResult, RunStateError, RunStore, COMPLETE, FAILED, RUNNING};
 use cdnl::runtime::{open_backend_with, Backend};
 use cdnl::util::cli::Args;
 use cdnl::util::{fmt_relu_count, logging};
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: cdnl <info|train|run|methods|eval|picost|serve|bench|runs> [flags]
+const USAGE: &str = "usage: cdnl <info|train|run|methods|eval|picost|serve|coordinate|worker|cas|bench|runs> [flags]
   (cdnl <method> is a deprecated alias for cdnl run <method>)
   see rust/src/main.rs header or README.md for flag documentation";
 
@@ -135,6 +159,10 @@ fn run() -> Result<()> {
         // Pure registry introspection; no backend needed.
         return cmd_methods(&args, &exp);
     }
+    if sub == "cas" {
+        // Pure blob-store file operations; no backend needed.
+        return cmd_cas(&args, &exp);
+    }
     if sub == "serve" {
         // A run-id serve rebuilds the run's own recorded experiment and
         // backend (like `runs resume`), so it opens its backend itself.
@@ -152,6 +180,8 @@ fn run() -> Result<()> {
         "train" => cmd_train(engine, exp),
         "eval" => cmd_eval(engine, exp, &args),
         "picost" => cmd_picost(engine, exp, &args),
+        "coordinate" => cmd_coordinate(engine, exp, &args),
+        "worker" => cmd_worker(engine, &args),
         "run" => {
             let spec = args.positional.first().cloned().ok_or_else(|| {
                 anyhow!(
@@ -670,6 +700,24 @@ fn serve_run(
 ) -> Result<()> {
     let store = RunStore::for_experiment(exp);
     let mut run = store.get(id)?;
+    // Typed state checks before any backend open: serving prices the sealed
+    // final mask, which only a complete run with a recorded result carries.
+    if run.manifest.status != COMPLETE {
+        return Err(RunStateError::NotComplete {
+            run_id: run.manifest.run_id.clone(),
+            status: run.manifest.status.clone(),
+            needed_by: "`cdnl serve`".into(),
+        }
+        .into());
+    }
+    if run.manifest.bcd.is_none() && run.manifest.result.is_none() {
+        return Err(RunStateError::MissingResult {
+            run_id: run.manifest.run_id.clone(),
+            status: run.manifest.status.clone(),
+            needed_by: "`cdnl serve`".into(),
+        }
+        .into());
+    }
     let mut rexp = run.manifest.experiment()?;
     // Paths may legitimately differ from record time; CLI overrides win,
     // matching the fingerprint's path-independence.
@@ -781,6 +829,191 @@ fn serve_tables(
         &rows,
     );
     Ok(())
+}
+
+// ---- the distributed-scan surface ------------------------------------------
+
+/// `cdnl coordinate --listen <addr>`: a BCD run whose hypothesis scan is
+/// served to HTTP workers (DESIGN.md §15). Recording, resume cursors and
+/// the final outcome are identical to `cdnl run bcd` — the scan substrate
+/// is the only difference.
+fn cmd_coordinate(engine: &dyn Backend, exp: Experiment, args: &Args) -> Result<()> {
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| {
+            anyhow!(
+                "usage: cdnl coordinate --listen HOST:PORT --budget N \
+                 [--resume RUN_ID] [--lease-ms N]"
+            )
+        })?
+        .to_string();
+    let lease_ms = args.get_usize("lease-ms", cdnl::dist::DEFAULT_LEASE_MS as usize) as u64;
+    let pl = Pipeline::new(engine, exp)?;
+    let store = RunStore::for_experiment(&pl.exp);
+    let hello = cdnl::dist::HelloDoc::for_experiment(&pl.exp, engine.name());
+    let cas = cdnl::cas::CasStore::for_experiment(&pl.exp);
+    let srv = cdnl::dist::ScanServer::start(listen.as_str(), &hello, cas)?;
+    println!(
+        "coordinating on {} (model {}, config {}) — join with `cdnl worker --connect {}`",
+        srv.addr(),
+        pl.sess.key,
+        hello.fingerprint,
+        srv.addr()
+    );
+
+    let mut scan = cdnl::dist::dist_scanner(&srv, &pl.exp.bcd, lease_ms);
+    let (st, out, mut run) = if let Some(id) = args.get("resume") {
+        pl.bcd_resume_with(store.get(id)?, &mut scan)?
+    } else {
+        let budget: usize = args
+            .get("budget")
+            .ok_or_else(|| anyhow!("--budget N (or --resume RUN_ID) is required"))?
+            .parse()
+            .map_err(|_| anyhow!("--budget: bad value"))?;
+        // Paper protocol: BCD starts from an SNL/AutoReP reference unless
+        // --ckpt / --ref-budget say otherwise (same rule as `cdnl run bcd`).
+        let mut st = if args.get("ckpt").is_none() && args.get("ref-budget").is_none() {
+            let bref = reference_budget(pl.sess.info().total_relus(), budget);
+            if pl.sess.info().poly {
+                pl.autorep_ref(bref)?
+            } else {
+                pl.snl_ref(bref)?
+            }
+        } else {
+            starting_state(&pl, args)?
+        };
+        let (out, run) = pl.bcd_record_with(&store, &mut st, budget, &mut scan)?;
+        (st, out, run)
+    };
+
+    // Blob provenance: every params blob published this session joins the
+    // manifest, so `cdnl runs gc` keeps the CAS objects it references.
+    let mut blobs = run.manifest.blobs.take().unwrap_or_default();
+    blobs.extend(srv.take_blobs());
+    run.manifest.blobs = Some(blobs);
+    run.save()?;
+    srv.shutdown();
+    // Give polling workers a beat to observe the shutdown document before
+    // the listener drops.
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let stats = srv.stats();
+    let after_acc = pl.test_acc(&st)?;
+    println!(
+        "bcd (distributed) {}: {} iterations, {} -> {} ReLUs  test_acc {after_acc:.2}%",
+        run.manifest.run_id,
+        out.iterations.len(),
+        fmt_relu_count(run.manifest.b_start),
+        fmt_relu_count(st.budget()),
+    );
+    println!(
+        "scan totals: {} slab(s) claimed, {} lease(s) re-issued, {} duplicate completion(s), \
+         {} slab(s) merged",
+        stats.claims_issued,
+        stats.leases_reissued,
+        stats.duplicate_completions,
+        stats.completed_slabs
+    );
+    let out_path = default_ckpt_path(&pl.exp, &pl.sess.key, "bcd", run.manifest.b_target);
+    st.save(&out_path)?;
+    println!("saved {}", out_path.display());
+    Ok(())
+}
+
+/// `cdnl worker --connect <addr>`: score leased trial slabs for a
+/// coordinator until it shuts the scan down. All experiment config comes
+/// from the coordinator's `/config` (cross-checked by fingerprint); only
+/// backend/artifact flags apply locally.
+fn cmd_worker(engine: &dyn Backend, args: &Args) -> Result<()> {
+    let connect = args.get("connect").ok_or_else(|| {
+        anyhow!("usage: cdnl worker --connect HOST:PORT [--id NAME] [--poll-ms N]")
+    })?;
+    let mut opts = cdnl::dist::WorkerOpts::default();
+    if let Some(id) = args.get("id") {
+        opts.id = id.to_string();
+    }
+    opts.poll_ms = args.get_usize("poll-ms", opts.poll_ms as usize) as u64;
+    let summary = cdnl::dist::run_worker(connect, engine, &opts)?;
+    println!(
+        "worker {} done: {} slab(s), {} trial(s) across {} scan(s)",
+        opts.id, summary.slabs, summary.trials, summary.scans
+    );
+    Ok(())
+}
+
+/// `cdnl cas <put|get|verify|gc>`: the content-addressed blob store that
+/// backs distributed cold-starts (`<out>/cas`, DESIGN.md §15).
+fn cmd_cas(args: &Args, exp: &Experiment) -> Result<()> {
+    let cas = cdnl::cas::CasStore::for_experiment(exp);
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match action {
+        "put" => {
+            let file = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: cdnl cas put <file>"))?;
+            let put = cas.put_file(Path::new(file.as_str()))?;
+            println!(
+                "{}  {} bytes{}",
+                put.digest,
+                put.bytes,
+                if put.existed { "  (already stored)" } else { "" }
+            );
+            Ok(())
+        }
+        "get" => {
+            let digest = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: cdnl cas get <digest> --save FILE"))?;
+            let save = args
+                .get("save")
+                .ok_or_else(|| anyhow!("cas get: --save FILE is required"))?;
+            let bytes = cas.get(digest)?; // re-hashes the stream on read
+            std::fs::write(save, &bytes).with_context(|| format!("writing {save}"))?;
+            println!("{digest}  {} bytes -> {save}", bytes.len());
+            Ok(())
+        }
+        "verify" => {
+            let digests = match args.positional.get(1) {
+                Some(d) => vec![d.clone()],
+                None => cas.list()?,
+            };
+            let mut bad = 0usize;
+            for d in &digests {
+                // verify: Ok(true) intact, Ok(false) absent, Err corrupt.
+                let status = match cas.verify(d) {
+                    Ok(true) => "ok     ",
+                    Ok(false) => "MISSING",
+                    Err(_) => "CORRUPT",
+                };
+                println!("{status}  {d}");
+                bad += usize::from(status != "ok     ");
+            }
+            println!("{} object(s) checked, {bad} corrupt/missing", digests.len());
+            if bad > 0 {
+                bail!("{bad} object(s) failed verification");
+            }
+            Ok(())
+        }
+        "gc" => {
+            // A blob is live iff some run manifest's provenance references
+            // it — the run store is the source of truth.
+            let live = RunStore::for_experiment(exp).live_blob_digests(&[])?;
+            let dry = args.has("dry-run");
+            let removed = cas.gc(&live, dry)?;
+            for d in &removed {
+                println!("{} {d}", if dry { "would remove" } else { "removed" });
+            }
+            println!(
+                "{} blob(s) {}, {} live",
+                removed.len(),
+                if dry { "reclaimable (dry run — nothing deleted)" } else { "removed" },
+                live.len()
+            );
+            Ok(())
+        }
+        other => bail!("unknown cas action {other:?}\nusage: cdnl cas <put|get|verify|gc>"),
+    }
 }
 
 // ---- the benchmark surface -------------------------------------------------
@@ -943,7 +1176,7 @@ fn cmd_runs(args: &Args, exp: Experiment) -> Result<()> {
         "list" => runs_list(&store, args),
         "show" => runs_show(&store, runs_id_arg(args)?),
         "resume" => runs_resume(&store, runs_id_arg(args)?, args),
-        "gc" => runs_gc(&store, args),
+        "gc" => runs_gc(&store, &exp, args),
         other => bail!("unknown runs action {other:?}\nusage: cdnl runs <list|show|resume|gc>"),
     }
 }
@@ -1162,7 +1395,7 @@ fn runs_resume(store: &RunStore, id: &str, args: &Args) -> Result<()> {
         );
     }
     if run.manifest.status == COMPLETE {
-        bail!("run {} is already complete", run.manifest.run_id);
+        return Err(RunStateError::AlreadyComplete { run_id: run.manifest.run_id.clone() }.into());
     }
     let mut rexp = run.manifest.experiment()?;
     // Paths may legitimately differ from when the run was recorded (moved
@@ -1214,30 +1447,52 @@ fn runs_resume(store: &RunStore, id: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn runs_gc(store: &RunStore, args: &Args) -> Result<()> {
+fn runs_gc(store: &RunStore, exp: &Experiment, args: &Args) -> Result<()> {
     let keep = args.get_usize("keep", 3);
-    if args.has("dry-run") {
+    let dry = args.has("dry-run");
+    let doomed = store.gc_candidates(keep, args.has("all"))?;
+    // Blob liveness is decided by the manifests that SURVIVE this gc,
+    // computed before anything is deleted: a blob referenced by any
+    // surviving run — even one shared with a doomed run — is never
+    // collected.
+    let live = store.live_blob_digests(&doomed)?;
+    let cas = cdnl::cas::CasStore::for_experiment(exp);
+    if dry {
         // Preview mode for the only destructive CLI verb: list what gc
-        // would reclaim, touch nothing.
-        let doomed = store.gc_candidates(keep, args.has("all"))?;
-        if doomed.is_empty() {
+        // would reclaim (run directories AND blobs), touch nothing.
+        for id in &doomed {
+            println!("would remove {id}");
+        }
+        let blobs = cas.gc(&live, true)?;
+        for d in &blobs {
+            println!("would remove blob {d}");
+        }
+        if doomed.is_empty() && blobs.is_empty() {
             println!("nothing to remove (kept the {keep} most recent terminal runs)");
         } else {
-            for id in &doomed {
-                println!("would remove {id}");
-            }
-            println!("{} run(s) reclaimable (dry run — nothing deleted)", doomed.len());
+            println!(
+                "{} run(s) and {} blob(s) reclaimable (dry run — nothing deleted)",
+                doomed.len(),
+                blobs.len()
+            );
         }
         return Ok(());
     }
+    // Run directories first, blobs second: a crash between the two leaves
+    // unreferenced blobs (reclaimed by the next gc), never a manifest
+    // pointing at a deleted blob.
     let removed = store.gc(keep, args.has("all"))?;
-    if removed.is_empty() {
+    for id in &removed {
+        println!("removed {id}");
+    }
+    let blobs = cas.gc(&live, false)?;
+    for d in &blobs {
+        println!("removed blob {d}");
+    }
+    if removed.is_empty() && blobs.is_empty() {
         println!("nothing to remove (kept the {keep} most recent terminal runs)");
     } else {
-        for id in &removed {
-            println!("removed {id}");
-        }
-        println!("{} run(s) removed", removed.len());
+        println!("{} run(s) and {} blob(s) removed", removed.len(), blobs.len());
     }
     Ok(())
 }

@@ -19,14 +19,17 @@
 //! bit-identically (see [`crate::runstore`]).
 
 use crate::config::Experiment;
-use crate::coordinator::bcd::{run_bcd, run_bcd_resumable, BcdOutcome, IterRecord};
+use crate::coordinator::bcd::{
+    local_scanner, run_bcd, run_bcd_resumable_with, BcdOutcome, IterRecord, TrialScanner,
+};
 use crate::coordinator::eval::test_accuracy;
 use crate::coordinator::train::train;
 use crate::data::{synth, Dataset};
 use crate::methods::registry::{self, ChainSpec, Method, MethodCtx, MethodOutcome, RecordSink};
 use crate::model::{zoo, ModelState};
 use crate::runstore::{
-    BcdRecorder, RunDir, RunManifest, RunStore, StageRecord, COMPLETE, FAILED, RUNNING,
+    BcdRecorder, RunDir, RunManifest, RunStateError, RunStore, StageRecord, COMPLETE, FAILED,
+    RUNNING,
 };
 use crate::runtime::backend::Backend;
 use crate::runtime::session::Session;
@@ -221,6 +224,21 @@ impl<'e> Pipeline<'e> {
         st: &mut ModelState,
         b_target: usize,
     ) -> Result<(BcdOutcome, RunDir)> {
+        let mut scan = local_scanner(&self.exp.bcd);
+        self.bcd_record_with(store, st, b_target, &mut scan)
+    }
+
+    /// [`Self::bcd_record`] with a caller-supplied trial scanner — how the
+    /// distributed scan ([`crate::dist::dist_scanner`]) gets the same
+    /// sweep-by-sweep durability, `run.json` cursors and resume semantics
+    /// as a local run.
+    pub fn bcd_record_with(
+        &self,
+        store: &RunStore,
+        st: &mut ModelState,
+        b_target: usize,
+        scan: &mut TrialScanner,
+    ) -> Result<(BcdOutcome, RunDir)> {
         let backend = self.sess.backend.name();
         let mut m = RunManifest::new("bcd", &self.exp, backend, st.budget(), b_target);
         m.stages = self.take_stages();
@@ -230,7 +248,7 @@ impl<'e> Pipeline<'e> {
 
         let result = {
             let mut rec = BcdRecorder::new(&mut run);
-            run_bcd_resumable(
+            run_bcd_resumable_with(
                 &self.sess,
                 st,
                 &self.train_ds,
@@ -239,6 +257,7 @@ impl<'e> Pipeline<'e> {
                 0,
                 None,
                 &mut |ev| rec.observe(ev),
+                scan,
             )
         };
         self.seal(run, result)
@@ -248,10 +267,23 @@ impl<'e> Pipeline<'e> {
     /// final state plus the *stitched* outcome: recorded sweeps from before
     /// the interruption followed by the sweeps executed now — field-for-
     /// field what the uninterrupted run would have produced (timings aside).
-    pub fn bcd_resume(&self, mut run: RunDir) -> Result<(ModelState, BcdOutcome, RunDir)> {
+    pub fn bcd_resume(&self, run: RunDir) -> Result<(ModelState, BcdOutcome, RunDir)> {
+        let mut scan = local_scanner(&self.exp.bcd);
+        self.bcd_resume_with(run, &mut scan)
+    }
+
+    /// [`Self::bcd_resume`] with a caller-supplied trial scanner (the
+    /// distributed-scan entry point): a `cdnl coordinate` run interrupted
+    /// mid-descent resumes from its `run.json` cursor exactly like a local
+    /// one, whatever scanner finishes it.
+    pub fn bcd_resume_with(
+        &self,
+        mut run: RunDir,
+        scan: &mut TrialScanner,
+    ) -> Result<(ModelState, BcdOutcome, RunDir)> {
         let m = &run.manifest;
         if m.status == COMPLETE {
-            bail!("run {} is already complete", m.run_id);
+            return Err(RunStateError::AlreadyComplete { run_id: m.run_id.clone() }.into());
         }
         if m.method != "bcd" {
             bail!("run {} is a {:?} run; only bcd runs resume", m.run_id, m.method);
@@ -287,7 +319,7 @@ impl<'e> Pipeline<'e> {
 
         let result = {
             let mut rec = BcdRecorder::new(&mut run);
-            run_bcd_resumable(
+            run_bcd_resumable_with(
                 &self.sess,
                 &mut st,
                 &self.train_ds,
@@ -296,6 +328,7 @@ impl<'e> Pipeline<'e> {
                 0,
                 cursor.as_ref(),
                 &mut |ev| rec.observe(ev),
+                scan,
             )
         };
         let (mut out, run) = self.seal(run, result)?;

@@ -194,6 +194,20 @@ pub fn stats_snapshot(stats: &BTreeMap<String, CallStats>) -> BTreeMap<String, C
         .collect()
 }
 
+/// Digest provenance of one CAS blob a run depends on (published params,
+/// checkpoints, zoo stages — see [`crate::cas`]). `cdnl runs gc` treats
+/// every blob referenced by a surviving manifest as live.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlobRef {
+    /// Human-readable role, e.g. `params_sweep3`.
+    pub name: String,
+    /// FNV-256 content digest (64 hex chars) — the CAS key.
+    pub digest: String,
+    /// Blob size in bytes.
+    pub bytes: usize,
+}
+derive_serde!(BlobRef { name, digest, bytes });
+
 /// Final result summary, filled when a run completes.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunResult {
@@ -252,6 +266,11 @@ pub struct RunManifest {
     /// produced it. `None` everywhere else (and on pre-serve manifests —
     /// format 1 stays readable).
     pub serve: Option<crate::pi::ServeReport>,
+    /// CAS blob-digest provenance for distributed runs (see
+    /// [`crate::dist`]): every blob this run published or depends on.
+    /// `runs gc` keeps referenced blobs alive. `None` on local runs and on
+    /// pre-dist manifests — format 1 stays readable.
+    pub blobs: Option<Vec<BlobRef>>,
 }
 derive_serde!(RunManifest {
     format,
@@ -274,6 +293,7 @@ derive_serde!(RunManifest {
     stats,
     bench,
     serve,
+    blobs,
 });
 
 impl RunManifest {
@@ -308,6 +328,7 @@ impl RunManifest {
             stats: None,
             bench: None,
             serve: None,
+            blobs: None,
         }
     }
 
@@ -488,6 +509,24 @@ mod tests {
         let stripped = text.replace("\"serve\"", "\"serve_from_the_future\"");
         let old: RunManifest = sd::from_str(&stripped).unwrap();
         assert_eq!(old.serve, None);
+    }
+
+    #[test]
+    fn blob_provenance_rides_the_manifest() {
+        // Distributed runs record CAS digests; old manifests (no key) parse
+        // as None — format 1 stays readable.
+        let mut m = sample();
+        m.blobs = Some(vec![BlobRef {
+            name: "params_sweep1".into(),
+            digest: "ab".repeat(32),
+            bytes: 4096,
+        }]);
+        let text = sd::to_string_pretty(&m);
+        let back: RunManifest = sd::from_str(&text).unwrap();
+        assert_eq!(back.blobs, m.blobs);
+        let stripped = text.replace("\"blobs\"", "\"blobs_from_the_future\"");
+        let old: RunManifest = sd::from_str(&stripped).unwrap();
+        assert_eq!(old.blobs, None);
     }
 
     #[test]

@@ -27,8 +27,8 @@
 pub mod manifest;
 
 pub use manifest::{
-    stats_snapshot, BcdProgress, CallStatsDoc, IterTrace, RunManifest, RunResult, StageRecord,
-    COMPLETE, FAILED, RUNNING, RUN_FORMAT,
+    stats_snapshot, BcdProgress, BlobRef, CallStatsDoc, IterTrace, RunManifest, RunResult,
+    StageRecord, COMPLETE, FAILED, RUNNING, RUN_FORMAT,
 };
 
 use crate::coordinator::bcd::SweepEvent;
@@ -36,7 +36,49 @@ use crate::model::ModelState;
 use crate::runtime::manifest::ModelInfo;
 use crate::util::serde as sd;
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
+
+/// Typed, actionable errors for operations that need a run in a particular
+/// state (`cdnl serve <run-id>`, `cdnl runs resume <id>`). Each message
+/// names the run's actual status and the command that would move it along —
+/// callers (and tests) can also `downcast_ref::<RunStateError>()` instead
+/// of string-matching.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RunStateError {
+    /// `runs resume` on a run that already finished.
+    AlreadyComplete { run_id: String },
+    /// An operation needing a sealed (`complete`) run found another status.
+    NotComplete { run_id: String, status: String, needed_by: String },
+    /// A run whose manifest lacks the sealed payload (final mask trace /
+    /// result summary) the operation needs.
+    MissingResult { run_id: String, status: String, needed_by: String },
+}
+
+impl std::fmt::Display for RunStateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunStateError::AlreadyComplete { run_id } => write!(
+                f,
+                "run {run_id} is already complete — nothing to resume \
+                 (inspect it with `cdnl runs show {run_id}`)"
+            ),
+            RunStateError::NotComplete { run_id, status, needed_by } => write!(
+                f,
+                "run {run_id} has status {status:?}, but {needed_by} needs a complete run — \
+                 finish it with `cdnl runs resume {run_id}`"
+            ),
+            RunStateError::MissingResult { run_id, status, needed_by } => write!(
+                f,
+                "run {run_id} (status {status:?}) has no sealed result/final mask in its \
+                 manifest, which {needed_by} needs — re-record it (or resume with \
+                 `cdnl runs resume {run_id}` if it is a bcd run)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RunStateError {}
 
 /// Write `bytes` to `path` atomically: temp file in the same directory,
 /// then rename (rename is atomic on POSIX within a filesystem).
@@ -263,6 +305,24 @@ impl RunStore {
         }
         Ok(removed)
     }
+
+    /// Every CAS digest referenced by a manifest that would *survive*
+    /// removal of the `doomed` run ids — the live set [`crate::cas::CasStore::gc`]
+    /// must spare. Unioning over surviving manifests (rather than
+    /// subtracting doomed ones) means a blob shared between a doomed and a
+    /// live run is always kept.
+    pub fn live_blob_digests(&self, doomed: &[String]) -> Result<BTreeSet<String>> {
+        let mut live = BTreeSet::new();
+        for m in self.list()? {
+            if doomed.contains(&m.run_id) {
+                continue;
+            }
+            for b in m.blobs.iter().flatten() {
+                live.insert(b.digest.clone());
+            }
+        }
+        Ok(live)
+    }
 }
 
 /// Sweep-by-sweep persister: wire [`BcdRecorder::observe`] into
@@ -390,5 +450,63 @@ mod tests {
         let removed = store.gc(0, true).unwrap();
         assert!(removed.contains(&ids[3]));
         assert_eq!(store.list().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn live_blob_digests_spare_surviving_manifests() {
+        let store = tmp_store("liveblobs");
+        let exp = Experiment::default();
+        let blob = |name: &str, digest: &str| BlobRef {
+            name: name.to_string(),
+            digest: digest.to_string(),
+            bytes: 4,
+        };
+        let mut a = store.create(bcd_manifest(&exp)).unwrap();
+        a.manifest.blobs = Some(vec![blob("params_sweep1", "aa"), blob("params_sweep2", "bb")]);
+        a.save().unwrap();
+        let mut b = store.create(bcd_manifest(&exp)).unwrap();
+        // "bb" is shared between the doomed run (a) and the survivor (b):
+        // it must stay live.
+        b.manifest.blobs = Some(vec![blob("params_sweep1", "bb"), blob("params_sweep2", "cc")]);
+        b.save().unwrap();
+        let c = store.create(bcd_manifest(&exp)).unwrap(); // no blobs field at all
+        let live = store.live_blob_digests(&[a.manifest.run_id.clone()]).unwrap();
+        assert_eq!(
+            live.iter().cloned().collect::<Vec<_>>(),
+            vec!["bb".to_string(), "cc".to_string()]
+        );
+        // Nothing doomed: everything referenced anywhere is live.
+        let live = store.live_blob_digests(&[]).unwrap();
+        assert_eq!(live.len(), 3);
+        // Everything doomed: nothing is live.
+        let doomed = vec![a.manifest.run_id, b.manifest.run_id, c.manifest.run_id];
+        assert!(store.live_blob_digests(&doomed).unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_state_errors_are_typed_and_actionable() {
+        let err: anyhow::Error = RunStateError::NotComplete {
+            run_id: "bcd-x-1".into(),
+            status: RUNNING.into(),
+            needed_by: "`cdnl serve`".into(),
+        }
+        .into();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bcd-x-1") && msg.contains("running"), "bad message: {msg}");
+        assert!(msg.contains("cdnl runs resume bcd-x-1"), "must name the fix: {msg}");
+        // Callers can match on the type instead of the message.
+        match err.downcast_ref::<RunStateError>() {
+            Some(RunStateError::NotComplete { status, .. }) => assert_eq!(status, RUNNING),
+            other => panic!("wrong downcast: {other:?}"),
+        }
+        let msg = RunStateError::AlreadyComplete { run_id: "r7".into() }.to_string();
+        assert!(msg.contains("already complete") && msg.contains("runs show r7"), "{msg}");
+        let msg = RunStateError::MissingResult {
+            run_id: "r8".into(),
+            status: COMPLETE.into(),
+            needed_by: "`cdnl serve`".into(),
+        }
+        .to_string();
+        assert!(msg.contains("no sealed result"), "{msg}");
     }
 }

@@ -353,4 +353,33 @@ mod tests {
         assert!(usize::deserialize(&Json::Num(-2.0)).is_err());
         assert_eq!(usize::deserialize(&Json::Num(7.0)).unwrap(), 7);
     }
+
+    #[test]
+    fn hex_u64_round_trips_across_the_2_53_boundary() {
+        // 2^53 is where f64 loses integer exactness — exactly why u64s ride
+        // the wire as hex strings instead of JSON numbers. Every boundary
+        // neighbor must round-trip to the same bits.
+        const P53: u64 = 1 << 53;
+        for v in [P53 - 1, P53, P53 + 1, P53 + 2, u64::MAX - 1, u64::MAX, 0, 1] {
+            let json = HexU64(v).serialize();
+            let back = HexU64::deserialize(&json).unwrap();
+            assert_eq!(back.0, v, "HexU64 must be exact at {v}");
+        }
+        // The f64 path genuinely cannot represent 2^53 + 1 (it rounds to
+        // 2^53) — demonstrating the failure HexU64 exists to avoid.
+        assert_eq!((P53 + 1) as f64 as u64, P53);
+    }
+
+    #[test]
+    fn hex_u64_rejects_malformed_strings() {
+        // Empty, non-hex, overflowing (2^64) and negative spellings all fail;
+        // numbers are not accepted in place of hex strings.
+        for bad in ["", "xyz", "g000000000000000", "10000000000000000", "-1"] {
+            assert!(
+                HexU64::deserialize(&Json::Str(bad.to_string())).is_err(),
+                "must reject {bad:?}"
+            );
+        }
+        assert!(HexU64::deserialize(&Json::Num(12.0)).is_err(), "numbers are not hex words");
+    }
 }

@@ -1,0 +1,373 @@
+//! Distributed-scan integration on the pure-Rust reference backend
+//! (DESIGN.md §15).
+//!
+//! The acceptance criterion of the dist subsystem: a full BCD run whose
+//! trial scans are served to loopback HTTP workers produces a final mask,
+//! parameter vector and iteration trace **bit-identical** to the same run
+//! executed single-machine — for any worker membership ({1, 2, 4}), with a
+//! worker killed while holding a lease, a late rejoiner, and duplicate
+//! completions injected. The CAS backing the params distribution round-trips
+//! with streaming verification and rejects tampered content.
+
+use anyhow::bail;
+use cdnl::cas::{digest_hex, CasStore};
+use cdnl::config::{BcdConfig, Experiment};
+use cdnl::coordinator::bcd::run_bcd_resumable;
+use cdnl::dist::{dist_scanner, run_worker, HelloDoc, ScanServer, WorkerOpts, DEFAULT_LEASE_MS};
+use cdnl::pipeline::Pipeline;
+use cdnl::runstore::{save_state_atomic, BcdRecorder, RunManifest, RunStore, COMPLETE};
+use cdnl::runtime::{Backend, RefBackend};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+/// Fresh scratch directory per test (process id + tag keeps parallel test
+/// binaries and repeated runs apart).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cdnl_it_dist_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn quick_exp(out_dir: &std::path::Path, rt: usize) -> Experiment {
+    let mut exp = Experiment::default();
+    exp.out_dir = out_dir.display().to_string();
+    exp.bcd = BcdConfig {
+        drc: 24,
+        rt,
+        adt: 0.3,
+        finetune_steps: 2,
+        finetune_lr: 1e-3,
+        proxy_batches: 2,
+        seed: 7,
+        workers: 2,
+        ..Default::default()
+    };
+    exp
+}
+
+fn assert_same_trace(
+    a: &[cdnl::coordinator::bcd::IterRecord],
+    b: &[cdnl::coordinator::bcd::IterRecord],
+) {
+    assert_eq!(a.len(), b.len(), "iteration counts differ");
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.t, rb.t);
+        assert_eq!(ra.budget_after, rb.budget_after, "t={}", ra.t);
+        assert_eq!(ra.base_acc, rb.base_acc, "t={}", ra.t);
+        assert_eq!(ra.chosen_dacc, rb.chosen_dacc, "t={}", ra.t);
+        assert_eq!(ra.trials_evaluated, rb.trials_evaluated, "t={}", ra.t);
+        assert_eq!(ra.trials_bounded, rb.trials_bounded, "t={}", ra.t);
+        assert_eq!(ra.early_accept, rb.early_accept, "t={}", ra.t);
+        assert_eq!(ra.finetune.last_loss, rb.finetune.last_loss, "t={}", ra.t);
+    }
+}
+
+#[test]
+fn cas_round_trips_with_streaming_verification() {
+    let tmp = scratch("cas");
+    let cas = CasStore::open(tmp.join("cas"));
+
+    // Round trip: the put digest is the content digest, reads verify.
+    let blob: Vec<u8> = (0..100_000u32).flat_map(|i| i.to_le_bytes()).collect();
+    let put = cas.put_bytes(&blob).unwrap();
+    assert_eq!(put.digest, digest_hex(&blob));
+    assert_eq!(put.bytes, blob.len() as u64);
+    assert!(!put.existed);
+    assert_eq!(cas.get(&put.digest).unwrap(), blob);
+    assert!(cas.put_bytes(&blob).unwrap().existed, "identical content stored once");
+
+    // Tamper with the object behind the store's back: the read-side
+    // streaming checksum must reject it — corrupted content is never served.
+    let other = cas.put_bytes(b"second object").unwrap();
+    let obj = tmp
+        .join("cas")
+        .join("objects")
+        .join(&other.digest[..2])
+        .join(&other.digest);
+    let mut bytes = std::fs::read(&obj).unwrap();
+    bytes[5] ^= 0x40;
+    std::fs::write(&obj, &bytes).unwrap();
+    let err = format!("{:#}", cas.get(&other.digest).unwrap_err());
+    assert!(err.contains("failed verification"), "wrong error: {err}");
+    assert!(cas.verify(&other.digest).is_err());
+    assert!(cas.verify(&put.digest).unwrap(), "intact object still verifies");
+
+    // gc spares live digests, previews exactly, then removes the rest.
+    let live: BTreeSet<String> = [put.digest.clone()].into_iter().collect();
+    let preview = cas.gc(&live, true).unwrap();
+    assert_eq!(preview, vec![other.digest.clone()]);
+    assert!(cas.contains(&other.digest), "dry run must not delete");
+    assert_eq!(cas.gc(&live, false).unwrap(), preview);
+    assert!(!cas.contains(&other.digest));
+    assert!(cas.contains(&put.digest), "live blob survives");
+}
+
+#[test]
+fn loopback_scan_is_bit_identical_for_any_membership() {
+    let tmp = scratch("members");
+    let be = RefBackend::standard();
+    let pl = Pipeline::new(&be, quick_exp(&tmp, 3)).unwrap();
+    let st0 = pl.sess.init_state(42).unwrap();
+    let total = st0.budget();
+    let target = total - 2 * 24; // two sweeps
+
+    // The single-machine reference.
+    let store = RunStore::open(tmp.join("runs"));
+    let mut st_local = st0.clone();
+    let (out_local, run_local) = pl.bcd_record(&store, &mut st_local, target).unwrap();
+    assert_eq!(run_local.manifest.status, COMPLETE);
+
+    for &w in &[1usize, 2, 4] {
+        let srv = ScanServer::start(
+            "127.0.0.1:0",
+            &HelloDoc::for_experiment(&pl.exp, be.name()),
+            CasStore::open(tmp.join(format!("cas_{w}"))),
+        )
+        .unwrap();
+        let addr = srv.addr().to_string();
+        let mut st = st0.clone();
+        let (out, mut run) = std::thread::scope(|s| {
+            let workers: Vec<_> = (0..w)
+                .map(|i| {
+                    let addr = addr.clone();
+                    let be = &be;
+                    s.spawn(move || {
+                        run_worker(
+                            &addr,
+                            be,
+                            &WorkerOpts {
+                                id: format!("w{i}"),
+                                poll_ms: 5,
+                                ..WorkerOpts::default()
+                            },
+                        )
+                    })
+                })
+                .collect();
+            let mut scan = dist_scanner(&srv, &pl.exp.bcd, DEFAULT_LEASE_MS);
+            let got = pl.bcd_record_with(&store, &mut st, target, &mut scan);
+            srv.shutdown();
+            for h in workers {
+                h.join().expect("worker thread panicked").unwrap();
+            }
+            got
+        })
+        .unwrap();
+
+        // Bit-identical outcome, wherever each trial was scored.
+        assert_eq!(st.mask.dense(), st_local.mask.dense(), "{w} workers: masks diverged");
+        assert_eq!(st.params.data, st_local.params.data, "{w} workers: params diverged");
+        assert_eq!(out.final_budget, out_local.final_budget);
+        assert_same_trace(&out_local.iterations, &out.iterations);
+
+        // The recorded run rebuilds to the same config fingerprint.
+        let exp2 = run.manifest.experiment().unwrap();
+        assert_eq!(exp2.fingerprint(), pl.exp.fingerprint());
+
+        // Blob provenance rides the manifest (one params blob per sweep)
+        // and every referenced digest is intact in the CAS.
+        let blobs = srv.take_blobs();
+        assert_eq!(blobs.len(), 2, "{w} workers: expected one params blob per sweep");
+        run.manifest.blobs = Some(blobs.clone());
+        run.save().unwrap();
+        let cas = CasStore::open(tmp.join(format!("cas_{w}")));
+        for b in &blobs {
+            assert_eq!(cas.get(&b.digest).unwrap().len(), b.bytes, "blob {}", b.name);
+        }
+        let live = store.live_blob_digests(&[]).unwrap();
+        for b in &blobs {
+            assert!(live.contains(&b.digest), "manifest blob {} must be gc-live", b.name);
+        }
+    }
+}
+
+#[test]
+fn worker_death_rejoin_and_duplicates_do_not_move_the_outcome() {
+    let tmp = scratch("kill");
+    let be = RefBackend::standard();
+    // rt 8 with slab width 4 gives two slabs per sweep, so one worker can
+    // die holding a lease while another still has work to claim.
+    let pl = Pipeline::new(&be, quick_exp(&tmp, 8)).unwrap();
+    let st0 = pl.sess.init_state(42).unwrap();
+    let total = st0.budget();
+    let target = total - 2 * 24;
+
+    let store = RunStore::open(tmp.join("runs"));
+    let mut st_local = st0.clone();
+    let (out_local, _) = pl.bcd_record(&store, &mut st_local, target).unwrap();
+
+    let srv = ScanServer::start(
+        "127.0.0.1:0",
+        &HelloDoc::for_experiment(&pl.exp, be.name()),
+        CasStore::open(tmp.join("cas")),
+    )
+    .unwrap();
+    let addr = srv.addr().to_string();
+    let mut st = st0.clone();
+    let lease_ms = 300u64;
+    let out = std::thread::scope(|s| {
+        // The doomed worker joins first, claims sweep 1's first slab and
+        // dies without completing it — its lease must be re-issued.
+        let a = {
+            let addr = addr.clone();
+            let be = &be;
+            s.spawn(move || {
+                run_worker(
+                    &addr,
+                    be,
+                    &WorkerOpts {
+                        id: "doomed".into(),
+                        poll_ms: 5,
+                        die_after_claim: Some(1),
+                        ..WorkerOpts::default()
+                    },
+                )
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // The survivor double-posts every completion (zombie injection).
+        let b = {
+            let addr = addr.clone();
+            let be = &be;
+            s.spawn(move || {
+                run_worker(
+                    &addr,
+                    be,
+                    &WorkerOpts {
+                        id: "survivor".into(),
+                        poll_ms: 5,
+                        duplicate_completions: true,
+                        ..WorkerOpts::default()
+                    },
+                )
+            })
+        };
+        // A fresh worker rejoins mid-run and picks up whatever remains.
+        let c = {
+            let addr = addr.clone();
+            let be = &be;
+            s.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(250));
+                run_worker(
+                    &addr,
+                    be,
+                    &WorkerOpts { id: "rejoin".into(), poll_ms: 5, ..WorkerOpts::default() },
+                )
+            })
+        };
+        let mut scan = dist_scanner(&srv, &pl.exp.bcd, lease_ms);
+        let got = pl.bcd_record_with(&store, &mut st, target, &mut scan);
+        srv.shutdown();
+        let a = a.join().expect("doomed thread panicked").unwrap();
+        assert_eq!(a.slabs, 0, "the doomed worker must die before completing anything");
+        b.join().expect("survivor thread panicked").unwrap();
+        c.join().expect("rejoin thread panicked").unwrap();
+        got
+    })
+    .unwrap()
+    .0;
+
+    // The injected failures really happened...
+    let stats = srv.stats();
+    assert!(stats.leases_reissued >= 1, "the dangling lease was never re-issued: {stats:?}");
+    assert!(stats.duplicate_completions >= 1, "no duplicate was posted: {stats:?}");
+
+    // ...and the outcome never noticed.
+    assert_eq!(st.mask.dense(), st_local.mask.dense(), "final masks diverged");
+    assert_eq!(st.params.data, st_local.params.data, "final params diverged");
+    assert_same_trace(&out_local.iterations, &out.iterations);
+}
+
+#[test]
+fn killed_local_run_resumes_distributed_bit_identical() {
+    let tmp = scratch("resume");
+    let be = RefBackend::standard();
+    let pl = Pipeline::new(&be, quick_exp(&tmp, 3)).unwrap();
+    let st0 = pl.sess.init_state(42).unwrap();
+    let total = st0.budget();
+    let target = total - 2 * 24;
+
+    // The uninterrupted single-machine reference.
+    let mut st_a = st0.clone();
+    let out_a = run_bcd_resumable(
+        &pl.sess,
+        &mut st_a,
+        &pl.train_ds,
+        target,
+        &pl.exp.bcd,
+        0,
+        None,
+        &mut |_| Ok(()),
+    )
+    .unwrap();
+
+    // A local run killed after sweep 1's checkpoint lands.
+    let store = RunStore::open(tmp.join("runs"));
+    let m = RunManifest::new("bcd", &pl.exp, "reference", total, target);
+    let mut run = store.create(m).unwrap();
+    save_state_atomic(&st0, &run.ref_state_path()).unwrap();
+    let run_id = run.manifest.run_id.clone();
+    let mut st_b = st0.clone();
+    let res = {
+        let mut rec = BcdRecorder::new(&mut run);
+        run_bcd_resumable(
+            &pl.sess,
+            &mut st_b,
+            &pl.train_ds,
+            target,
+            &pl.exp.bcd,
+            0,
+            None,
+            &mut |ev| {
+                rec.observe(ev)?;
+                if ev.cursor.sweeps_done == 1 {
+                    bail!("simulated kill");
+                }
+                Ok(())
+            },
+        )
+    };
+    assert!(res.is_err(), "the kill must abort the run");
+    drop(run);
+
+    // Finish it with the DISTRIBUTED scanner — `cdnl coordinate --resume`:
+    // the run.json cursor is substrate-agnostic, so a run started locally
+    // resumes onto workers and still lands bit-identical.
+    let rd = store.get(&run_id).unwrap();
+    let srv = ScanServer::start(
+        "127.0.0.1:0",
+        &HelloDoc::for_experiment(&pl.exp, be.name()),
+        CasStore::open(tmp.join("cas")),
+    )
+    .unwrap();
+    let addr = srv.addr().to_string();
+    let (st_r, out_r, run2) = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..2)
+            .map(|i| {
+                let addr = addr.clone();
+                let be = &be;
+                s.spawn(move || {
+                    run_worker(
+                        &addr,
+                        be,
+                        &WorkerOpts { id: format!("r{i}"), poll_ms: 5, ..WorkerOpts::default() },
+                    )
+                })
+            })
+            .collect();
+        let mut scan = dist_scanner(&srv, &pl.exp.bcd, DEFAULT_LEASE_MS);
+        let got = pl.bcd_resume_with(rd, &mut scan);
+        srv.shutdown();
+        for h in workers {
+            h.join().expect("worker thread panicked").unwrap();
+        }
+        got
+    })
+    .unwrap();
+    assert_eq!(run2.manifest.status, COMPLETE);
+    assert_eq!(st_r.mask.dense(), st_a.mask.dense(), "final masks diverged");
+    assert_eq!(st_r.params.data, st_a.params.data, "final params diverged");
+    assert_eq!(st_r.budget(), target);
+    assert_same_trace(&out_a.iterations, &out_r.iterations);
+}
